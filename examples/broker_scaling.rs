@@ -1,0 +1,51 @@
+//! Broker scaling demo (the Fig. 6 experiment, interactive).
+//!
+//! Steps the offered load and shows the 1:1 relation between generator
+//! output and broker throughput plus the broker-latency trend.
+//!
+//! ```bash
+//! cargo run --release --example broker_scaling
+//! ```
+
+use sprobench::bench::scenarios;
+use sprobench::coordinator::run_wall;
+use sprobench::metrics::MeasurementPoint;
+use sprobench::postprocess::ascii_table;
+use sprobench::util::stats::linear_fit;
+use sprobench::util::units::{fmt_count, fmt_micros};
+
+fn main() {
+    let rates = [50_000u64, 100_000, 200_000, 400_000];
+    let mut rows = Vec::new();
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &rate in &rates {
+        let mut cfg = scenarios::fig6(rate);
+        cfg.bench.duration_micros = 1_500_000;
+        let (summary, _) = run_wall(&cfg, None).expect("run");
+        let lat = summary
+            .latency_at(MeasurementPoint::BrokerIn)
+            .expect("broker latency");
+        xs.push(summary.offered_rate);
+        ys.push(summary.processed_rate);
+        rows.push(vec![
+            format!("{} ev/s", fmt_count(rate as f64)),
+            format!("{} ev/s", fmt_count(summary.offered_rate)),
+            format!("{} ev/s", fmt_count(summary.processed_rate)),
+            fmt_micros(lat.p50),
+            fmt_micros(lat.p99),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["requested", "offered", "broker out", "broker p50", "broker p99"],
+            &rows
+        )
+    );
+    let fit = linear_fit(&xs, &ys);
+    println!(
+        "linear fit: out = {:.4} x offered + {:.0}  (R^2 = {:.5}) — the paper's 1:1 line",
+        fit.slope, fit.intercept, fit.r2
+    );
+}

@@ -1,0 +1,79 @@
+//! Cluster-scale simulation: the paper's headline numbers on the Barnard
+//! model in virtual time.
+//!
+//! Reproduces (sim mode, calibrated model — DESIGN.md §1):
+//!   * Table 1's 40 M events/s aggregate generator throughput,
+//!   * the ≈0.5 GB/s single-node generation claim,
+//!   * Fig. 7's paper-scale parallelism grid (0.5–8 M ev/s).
+//!
+//! ```bash
+//! cargo run --release --example cluster_scale
+//! ```
+
+use sprobench::bench::scenarios;
+use sprobench::config::PipelineKind;
+use sprobench::coordinator::simrun::{run_sim, SimModel};
+use sprobench::metrics::MeasurementPoint;
+use sprobench::postprocess::ascii_table;
+use sprobench::util::units::{fmt_count, fmt_micros, fmt_rate_bytes};
+
+fn main() {
+    let model = SimModel::default();
+
+    // --- Headline: 40M ev/s aggregate across a 16-node allocation --------
+    let mut cfg = scenarios::fig7_sim(64, 45_000_000);
+    cfg.bench.name = "cluster-headline".into();
+    cfg.engine.pipeline = PipelineKind::PassThrough;
+    cfg.broker.partitions = 32;
+    cfg.slurm.nodes = 16;
+    let (headline, _) = run_sim(&cfg, &model);
+    println!(
+        "headline: offered {} ev/s, processed {} ev/s across {} generator instances",
+        fmt_count(headline.offered_rate),
+        fmt_count(headline.processed_rate),
+        cfg.generator_instances(),
+    );
+    assert!(headline.offered_rate >= 40e6, "40M ev/s headline not reached");
+
+    // --- Single node: 0.5 GB/s generation --------------------------------
+    let mut node = scenarios::fig7_sim(16, 20_000_000);
+    node.bench.name = "single-node".into();
+    node.engine.pipeline = PipelineKind::PassThrough;
+    node.broker.partitions = 16;
+    node.slurm.nodes = 1;
+    let (single, _) = run_sim(&node, &model);
+    println!(
+        "single node: {} at 27 B/event ({} ev/s)",
+        fmt_rate_bytes(single.offered_bytes_rate),
+        fmt_count(single.offered_rate),
+    );
+    assert!(
+        single.offered_bytes_rate >= 0.5e9,
+        "0.5 GB/s single-node claim not reached"
+    );
+
+    // --- Paper-scale Fig. 7 grid ------------------------------------------
+    let mut rows = Vec::new();
+    for &p in &scenarios::PARALLELISM_GRID {
+        for &rate in &scenarios::PAPER_RATE_GRID {
+            let (s, _) = run_sim(&scenarios::fig7_sim(p, rate), &model);
+            let e2e = s.latency_at(MeasurementPoint::EndToEnd).expect("e2e");
+            rows.push(vec![
+                p.to_string(),
+                fmt_count(rate as f64),
+                format!("{} ev/s", fmt_count(s.processed_rate)),
+                fmt_micros(e2e.p50),
+                s.gc_young_count.to_string(),
+                format!("{:.0} J", s.energy_joules),
+            ]);
+        }
+    }
+    println!(
+        "\npaper-scale Fig. 7 grid (sim):\n{}",
+        ascii_table(
+            &["P", "offered", "processed", "e2e p50", "GC young", "energy"],
+            &rows
+        )
+    );
+    println!("cluster_scale OK");
+}

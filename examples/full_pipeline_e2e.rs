@@ -1,0 +1,138 @@
+//! END-TO-END DRIVER: the full SProBench stack on a real workload.
+//!
+//! Exercises every layer in one run (recorded in EXPERIMENTS.md §E2E):
+//!
+//! 1. One master config expands into a three-experiment matrix — the
+//!    paper's three pipelines (pass-through / CPU-intensive /
+//!    memory-intensive) on the same workload;
+//! 2. the workflow manager gives each a run directory with the resolved
+//!    config, generated sbatch script, metric exports and trace log;
+//! 3. each experiment runs wall-mode: generator fleet → broker (4
+//!    partitions) → engine (4 task slots, Flink personality, compute via
+//!    the AOT HLO artifacts through PJRT) → broker → drainer;
+//! 4. results are validated, summarized, and the Fig. 8-style timeline is
+//!    plotted.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example full_pipeline_e2e
+//! ```
+
+use sprobench::config::{expand_experiments, yaml};
+use sprobench::coordinator::run_wall;
+use sprobench::postprocess::{ascii_plot, ascii_table, validate_results};
+use sprobench::runtime::RuntimeFactory;
+use sprobench::util::units::{fmt_count, fmt_micros, fmt_rate_bytes};
+use sprobench::workflow::WorkflowManager;
+
+const MASTER_CONFIG: &str = "
+benchmark:
+  name: e2e
+  seed: 42
+  duration: 4s
+  warmup: 500ms
+workload:
+  pattern: constant
+  rate: 150K
+  event_bytes: 27
+  sensors: 1024
+broker:
+  partitions: 4
+engine:
+  framework: flink
+  parallelism: 4
+  batch_size: 1024
+  window: 1s
+  slide: 500ms
+  threshold_f: 80.0
+metrics:
+  sample_interval: 250ms
+experiments:
+  - name: e2e-passthrough
+    engine.pipeline: passthrough
+  - name: e2e-cpu
+    engine.pipeline: cpu
+  - name: e2e-mem
+    engine.pipeline: mem
+";
+
+fn main() {
+    let rtf = RuntimeFactory::default_dir();
+    let use_hlo = rtf.available();
+    if !use_hlo {
+        eprintln!("artifacts/ missing — running native compute (run `make artifacts` for the full stack)");
+    }
+
+    let mut doc = yaml::parse(MASTER_CONFIG).expect("master config parses");
+    sprobench::config::overlay(&mut doc, "engine.use_hlo", sprobench::util::json::Json::Bool(use_hlo));
+    let experiments = expand_experiments(&doc).expect("config expands");
+    println!(
+        "master config expanded into {} experiments; executing via workflow manager…\n",
+        experiments.len()
+    );
+
+    let wm = WorkflowManager::new("runs");
+    let mut rows = Vec::new();
+    let outcomes = wm
+        .run_all(&experiments, |exp, dir| {
+            dir.step(&format!("pipeline={}", exp.config.engine.pipeline.name()));
+            let (summary, store) = run_wall(
+                &exp.config,
+                exp.config.engine.use_hlo.then(|| rtf.clone()),
+            )?;
+            std::fs::write(
+                dir.metrics_dir().join("series.json"),
+                store.to_json().to_pretty(),
+            )
+            .map_err(|e| e.to_string())?;
+            let results = summary.to_json();
+            let violations = validate_results(&results);
+            if !violations.is_empty() {
+                return Err(format!("validation failed: {violations:?}"));
+            }
+            dir.step("validated");
+
+            let e2e = summary
+                .latency_at(sprobench::metrics::MeasurementPoint::EndToEnd)
+                .cloned();
+            rows.push(vec![
+                summary.pipeline.to_string(),
+                summary.generated.to_string(),
+                summary.emitted.to_string(),
+                format!("{} ev/s", fmt_count(summary.processed_rate)),
+                fmt_rate_bytes(summary.offered_bytes_rate),
+                e2e.map(|h| format!("{} / {}", fmt_micros(h.p50), fmt_micros(h.p99)))
+                    .unwrap_or_else(|| "-".into()),
+                summary.gc_young_count.to_string(),
+            ]);
+
+            // Fig. 8-style timeline for the CPU pipeline.
+            if summary.pipeline == "cpu" {
+                if let Some(series) = store.get("throughput.proc_out.eps") {
+                    println!(
+                        "{}",
+                        ascii_plot(&series.normalized(), 60, 10, "cpu pipeline: throughput over normalized runtime")
+                    );
+                }
+                if let Some(series) = store.get("latency.end_to_end.p50_us") {
+                    println!(
+                        "{}",
+                        ascii_plot(&series.normalized(), 60, 8, "cpu pipeline: e2e p50 latency over normalized runtime")
+                    );
+                }
+            }
+            Ok(results)
+        })
+        .expect("workflow run");
+
+    println!(
+        "{}",
+        ascii_table(
+            &["pipeline", "generated", "emitted", "throughput", "bytes", "e2e p50/p99", "GC"],
+            &rows
+        )
+    );
+    for o in &outcomes {
+        println!("run dir: {}", o.dir.display());
+    }
+    println!("\nE2E OK — {} pipelines executed, validated, and archived", outcomes.len());
+}

@@ -1,0 +1,83 @@
+//! Parallelism sweep (the Fig. 7 experiment, interactive).
+//!
+//! One master config with an `experiments:` matrix sweeps the engine
+//! parallelism {1, 2, 4, 8, 16} over the CPU-intensive pipeline — the
+//! paper's "maintaining a consistent parallelism … test multiple
+//! workloads without creating multiple configuration files" feature in
+//! reverse.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example parallelism_sweep
+//! ```
+
+use sprobench::config::{expand_experiments, yaml};
+use sprobench::coordinator::run_wall;
+use sprobench::metrics::MeasurementPoint;
+use sprobench::postprocess::ascii_table;
+use sprobench::runtime::RuntimeFactory;
+use sprobench::util::units::{fmt_count, fmt_micros};
+
+const SWEEP: &str = "
+benchmark:
+  name: fig7-sweep
+  duration: 1500ms
+  warmup: 300ms
+workload:
+  rate: 400K
+  event_bytes: 27
+engine:
+  pipeline: cpu
+  batch_size: 1024
+broker:
+  partitions: 16
+metrics:
+  sample_interval: 250ms
+experiments:
+  - name: p1
+    engine.parallelism: 1
+  - name: p2
+    engine.parallelism: 2
+  - name: p4
+    engine.parallelism: 4
+  - name: p8
+    engine.parallelism: 8
+  - name: p16
+    engine.parallelism: 16
+";
+
+fn main() {
+    let rtf = RuntimeFactory::default_dir();
+    let use_hlo = rtf.available();
+    let mut doc = yaml::parse(SWEEP).expect("sweep config");
+    sprobench::config::overlay(
+        &mut doc,
+        "engine.use_hlo",
+        sprobench::util::json::Json::Bool(use_hlo),
+    );
+    let exps = expand_experiments(&doc).expect("expand");
+    let mut rows = Vec::new();
+    let mut baseline_rate = 0.0;
+    for exp in &exps {
+        let (summary, _) = run_wall(&exp.config, use_hlo.then(|| rtf.clone())).expect("run");
+        if baseline_rate == 0.0 {
+            baseline_rate = summary.processed_rate;
+        }
+        let e2e = summary.latency_at(MeasurementPoint::EndToEnd).expect("e2e");
+        rows.push(vec![
+            summary.parallelism.to_string(),
+            format!("{} ev/s", fmt_count(summary.processed_rate)),
+            format!("{:.2}x", summary.processed_rate / baseline_rate),
+            fmt_micros(e2e.p50),
+            fmt_micros(e2e.p99),
+            summary.gc_young_count.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["parallelism", "throughput", "speedup", "e2e p50", "e2e p99", "GC young"],
+            &rows
+        )
+    );
+    println!("expected shape (paper Fig. 7): near-linear speedup flattening at high P; latency rising with P");
+}

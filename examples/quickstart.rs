@@ -1,0 +1,50 @@
+//! Quickstart: run one small SProBench experiment end to end on this
+//! machine and print the standard report.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-compile the pipeline kernels
+//! cargo run --release --example quickstart
+//! ```
+
+use sprobench::bench::scenarios;
+use sprobench::coordinator::run_wall;
+use sprobench::postprocess::{ascii_table, validate_results};
+use sprobench::runtime::RuntimeFactory;
+use sprobench::util::units::{fmt_count, fmt_micros};
+
+fn main() {
+    // A 2-second CPU-intensive run at 100K events/s, parallelism 4.
+    let mut cfg = scenarios::wall_base("quickstart");
+    let rtf = RuntimeFactory::default_dir();
+    cfg.engine.use_hlo = rtf.available();
+    if !cfg.engine.use_hlo {
+        eprintln!("artifacts/ not built — falling back to native compute (run `make artifacts`)");
+    }
+
+    let (summary, _store) =
+        run_wall(&cfg, cfg.engine.use_hlo.then(|| rtf)).expect("benchmark run failed");
+
+    let e2e = summary
+        .latency_at(sprobench::metrics::MeasurementPoint::EndToEnd)
+        .expect("latency recorded");
+    let rows = vec![
+        vec!["events generated".into(), summary.generated.to_string()],
+        vec!["events processed".into(), summary.processed.to_string()],
+        vec!["events emitted".into(), summary.emitted.to_string()],
+        vec![
+            "throughput".into(),
+            format!("{} ev/s", fmt_count(summary.processed_rate)),
+        ],
+        vec![
+            "e2e latency p50/p99".into(),
+            format!("{} / {}", fmt_micros(e2e.p50), fmt_micros(e2e.p99)),
+        ],
+        vec!["GC young".into(), summary.gc_young_count.to_string()],
+        vec!["energy".into(), format!("{:.1} J", summary.energy_joules)],
+    ];
+    println!("{}", ascii_table(&["metric", "value"], &rows));
+
+    let violations = validate_results(&summary.to_json());
+    assert!(violations.is_empty(), "validation failed: {violations:?}");
+    println!("quickstart OK — results validated");
+}

@@ -1,0 +1,98 @@
+//! SLURM batch workflow demo: automatic resource calculation, sbatch
+//! script generation, and a simulated schedule of concurrent experiments
+//! with dependencies — the paper's Sec. 3.1 workflow on the Barnard-scale
+//! cluster model.
+//!
+//! ```bash
+//! cargo run --release --example slurm_batch
+//! ```
+
+use sprobench::config::{expand_experiments, yaml};
+use sprobench::postprocess::ascii_table;
+use sprobench::slurm::{resource_request, sbatch_script, ClusterSpec, Scheduler};
+use sprobench::util::units::fmt_micros;
+use sprobench::workflow::WorkflowManager;
+
+const CONFIG: &str = "
+benchmark:
+  name: barnard-campaign
+  duration: 10m
+workload:
+  rate: 8M
+generators:
+  max_instances: 64
+broker:
+  io_threads: 20
+  network_threads: 10
+slurm:
+  enabled: true
+  cpus_per_task: 26
+  mem: 200GB
+experiments:
+  - name: w1M
+    workload.rate: 1M
+  - name: w2M
+    workload.rate: 2M
+  - name: w4M
+    workload.rate: 4M
+  - name: w8M
+    workload.rate: 8M
+";
+
+fn main() {
+    let doc = yaml::parse(CONFIG).expect("config");
+    let exps = expand_experiments(&doc).expect("expand");
+
+    // 1. Automatic resource calculation per experiment.
+    let rows: Vec<Vec<String>> = exps
+        .iter()
+        .map(|e| {
+            let r = resource_request(&e.config);
+            vec![
+                e.name.clone(),
+                r.nodes.to_string(),
+                r.cpus_per_task.to_string(),
+                format!("{} GB", r.mem_per_node_bytes >> 30),
+                fmt_micros(r.time_limit_micros),
+            ]
+        })
+        .collect();
+    println!("automatic resource calculation (from the single master config):");
+    println!(
+        "{}",
+        ascii_table(&["experiment", "nodes", "cpus/task", "mem/node", "time limit"], &rows)
+    );
+
+    // 2. One generated sbatch script.
+    println!("generated sbatch script for '{}':\n", exps[0].name);
+    println!("{}", sbatch_script(&exps[0].config, "campaign.yaml"));
+
+    // 3. Simulated schedule: concurrent submission on Barnard.
+    let mut sched = Scheduler::new(ClusterSpec::default());
+    let wm = WorkflowManager::new("runs");
+    let ids = wm.submit_batch(&exps, &mut sched, false, |e| {
+        e.config.bench.duration_micros + e.config.bench.warmup_micros
+    });
+    let makespan = sched.run_to_completion();
+    let rows: Vec<Vec<String>> = ids
+        .iter()
+        .map(|&id| {
+            let j = sched.job(id).expect("job");
+            vec![
+                j.request.name.clone(),
+                format!("{:?}", j.state),
+                fmt_micros(j.wait_micros().unwrap_or(0)),
+                j.allocated_nodes.len().to_string(),
+            ]
+        })
+        .collect();
+    println!("simulated concurrent schedule (makespan {}):", fmt_micros(makespan));
+    println!("{}", ascii_table(&["job", "state", "wait", "nodes"], &rows));
+    let st = sched.stats();
+    println!(
+        "scheduler: {} completed, {} backfilled, utilization {:.1}%",
+        st.completed,
+        st.backfilled,
+        st.utilization * 100.0
+    );
+}

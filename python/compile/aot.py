@@ -1,0 +1,167 @@
+"""AOT compiler: lower every L2 program variant to HLO text + manifest.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust ``xla``
+crate's bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <=
+INT_MAX``).  The HLO text parser reassigns ids, so text round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+
+Outputs one ``<name>.hlo.txt`` per (program × batch size) variant plus a
+``manifest.json`` describing each artifact's I/O signature — the Rust
+runtime (``rust/src/runtime``) keys its executable cache off this manifest
+and `make artifacts` uses its source hash for staleness.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Batch-size variants the Rust batcher can pick from.  Must be multiples of
+# the kernels' block sizes (sensor_transform BLOCK=512 divides 1024/4096 but
+# not 256 — the kernel's pallas_call grid requires block | B, so 256 uses the
+# elementwise kernel with block=256 via static arg).
+BATCH_SIZES = (256, 1024, 4096)
+# Keyed-state width (number of distinct sensor ids the window tracks).
+KEY_SIZES = (1024,)
+DEFAULT_THRESH_SHAPE = (1,)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _io_sig(args, lowered):
+    """Manifest I/O signature: dtypes + shapes for inputs and outputs."""
+    ins = [{"dtype": str(a.dtype), "shape": list(a.shape)} for a in args]
+    out_avals = lowered.out_info
+    outs = [
+        {"dtype": str(o.dtype), "shape": list(o.shape)}
+        for o in jax.tree_util.tree_leaves(out_avals)
+    ]
+    return ins, outs
+
+
+def variants():
+    """Yield (name, fn, example_args, meta) for every artifact to build."""
+    for b in BATCH_SIZES:
+        # sensor_transform's default BLOCK=512 must divide B; for B=256 pass
+        # block=256 through a wrapper so the grid stays exact.
+        blk = min(512, b)
+
+        def cpu_fn(temps, thresh, _blk=blk):
+            from compile.kernels.sensor_transform import sensor_transform
+
+            return sensor_transform(temps, thresh, block=_blk)
+
+        yield (
+            f"cpu_b{b}",
+            cpu_fn,
+            (_spec((b,), jnp.float32), _spec(DEFAULT_THRESH_SHAPE, jnp.float32)),
+            {"program": "cpu_pipeline_step", "batch": b, "keys": 0},
+        )
+    for b in BATCH_SIZES:
+        for k in KEY_SIZES:
+            yield (
+                f"mem_b{b}_k{k}",
+                model.mem_pipeline_step,
+                (
+                    _spec((b,), jnp.int32),
+                    _spec((b,), jnp.float32),
+                    _spec((k,), jnp.float32),
+                    _spec((k,), jnp.float32),
+                ),
+                {"program": "mem_pipeline_step", "batch": b, "keys": k},
+            )
+    for b in BATCH_SIZES:
+        for k in KEY_SIZES:
+            blk = min(512, b)
+
+            def fused_fn(ids, temps, thresh, s, c, _blk=blk):
+                from compile.kernels.keyed_window import keyed_window_update
+                from compile.kernels.sensor_transform import sensor_transform
+
+                fahr, alerts = sensor_transform(temps, thresh, block=_blk)
+                ns, nc, avg = keyed_window_update(ids, fahr, s, c)
+                return fahr, alerts, ns, nc, avg
+
+            yield (
+                f"fused_b{b}_k{k}",
+                fused_fn,
+                (
+                    _spec((b,), jnp.int32),
+                    _spec((b,), jnp.float32),
+                    _spec(DEFAULT_THRESH_SHAPE, jnp.float32),
+                    _spec((k,), jnp.float32),
+                    _spec((k,), jnp.float32),
+                ),
+                {"program": "fused_pipeline_step", "batch": b, "keys": k},
+            )
+
+
+def source_hash() -> str:
+    """sha256 over the compile-path sources, for `make artifacts` staleness."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    entries = []
+    for name, fn, example_args, meta in variants():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        ins, outs = _io_sig(example_args, lowered)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                **meta,
+                "inputs": ins,
+                "outputs": outs,
+            }
+        )
+        print(f"  lowered {name:18s} -> {fname} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "source_sha256": source_hash(),
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

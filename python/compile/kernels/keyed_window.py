@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: the memory-intensive pipeline's keyed window update.
+
+The paper's memory-intensive pipeline (Sec. 3.3) keys the sensor stream by
+sensor ID and maintains a sliding-window mean temperature per key as
+operator state.  The Rust engine batches events and carries ``(sum, cnt)``
+state tensors across batches (one pane of the sliding window; pane merging
+is L3's job).  This kernel performs one batch's state update:
+
+    sum'[k] = sum[k] + Σ_b  temps[b] · [ids[b] == k]
+    cnt'[k] = cnt[k] + Σ_b  [ids[b] == k]
+    avg [k] = sum'[k] / max(cnt'[k], 1)
+
+TPU mapping (DESIGN.md §6): the scatter-add is re-expressed as a masked
+matmul — ``one_hot(ids)ᵀ @ temps`` — which runs on the MXU for the K sizes
+the benchmark uses (K ≤ 4096 sensors).  The kernel tiles over the batch
+dimension; the ``f32[K]`` accumulators stay VMEM-resident across all grid
+steps (the Pallas accumulator pattern), mirroring Flink keeping keyed state
+in managed memory.  Grid iterates sequentially on TPU, so accumulating into
+the output ref across steps is well-defined.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile per grid step.  Each step materialises a (BLOCK_B, K) one-hot
+# mask in VMEM: 256×1024 f32 = 1 MiB — comfortably VMEM-resident alongside
+# the K-sized accumulators, and a (256,K)×(256,) reduction feeds the MXU
+# with full 128-lane tiles when K is a multiple of 128.
+BLOCK_B = 256
+
+
+def _window_kernel(ids_ref, temp_ref, sum_ref, cnt_ref, osum_ref, ocnt_ref):
+    """One grid step: accumulate a batch tile into the keyed state."""
+    step = pl.program_id(0)
+
+    # Initialise the VMEM accumulators from the carried-in state on the
+    # first step only; later steps accumulate in place.
+    @pl.when(step == 0)
+    def _init():
+        osum_ref[...] = sum_ref[...]
+        ocnt_ref[...] = cnt_ref[...]
+
+    ids = ids_ref[...]
+    temps = temp_ref[...]
+    k = osum_ref.shape[0]
+    # Masked-matmul scatter: mask[b, k] = (ids[b] == k).  dot(mask^T-style
+    # reduction) maps onto the MXU; interpret mode computes it with numpy.
+    keys = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], k), 1)
+    mask = (ids[:, None] == keys).astype(jnp.float32)
+    osum_ref[...] += jnp.dot(temps, mask)
+    ocnt_ref[...] += jnp.sum(mask, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def keyed_window_update(ids, temps, state_sum, state_cnt, block_b=BLOCK_B):
+    """One batched update of the keyed sliding-window pane state.
+
+    Args:
+      ids:       i32[B] sensor ids in ``[0, K)``.  Padded slots must carry
+                 an id >= K so they fall outside every one-hot column.
+      temps:     f32[B] temperatures (padded slots: value irrelevant).
+      state_sum: f32[K] carried pane sums.
+      state_cnt: f32[K] carried pane counts.
+
+    Returns:
+      (sum' f32[K], cnt' f32[K], avg f32[K]).
+    """
+    (b,) = ids.shape
+    (k,) = state_sum.shape
+    grid = (b // block_b,)
+    new_sum, new_cnt = pl.pallas_call(
+        _window_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        # Accumulators: every grid step maps to the same (whole-array) block,
+        # so they live in VMEM across the sequential grid.
+        out_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(ids, temps, state_sum, state_cnt)
+    avg = new_sum / jnp.maximum(new_cnt, 1.0)
+    return new_sum, new_cnt, avg

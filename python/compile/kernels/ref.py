@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: every kernel must match its oracle
+to float32 tolerance across the hypothesis sweep in
+``python/tests/test_kernels.py`` before an artifact is considered valid.
+"""
+
+import jax.numpy as jnp
+
+
+def sensor_transform_ref(temps, thresh):
+    """Oracle for kernels.sensor_transform: °C→°F + threshold mask."""
+    fahr = temps * (9.0 / 5.0) + 32.0
+    alerts = (fahr > thresh[0]).astype(jnp.float32)
+    return fahr, alerts
+
+
+def keyed_window_update_ref(ids, temps, state_sum, state_cnt):
+    """Oracle for kernels.keyed_window_update: segment-sum state update.
+
+    Padded slots carry ids >= K and must not contribute — jnp ``.at[].add``
+    with out-of-bounds indices drops them (mode='drop'), matching the
+    kernel's one-hot mask which has no column for id >= K.
+    """
+    new_sum = state_sum.at[ids].add(temps, mode="drop")
+    new_cnt = state_cnt.at[ids].add(1.0, mode="drop")
+    avg = new_sum / jnp.maximum(new_cnt, 1.0)
+    return new_sum, new_cnt, avg

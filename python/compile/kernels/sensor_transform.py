@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: the CPU-intensive pipeline's per-event transform.
+
+The paper's CPU-intensive pipeline (Sec. 3.3) parses each sensor event,
+converts the Celsius temperature to Fahrenheit, and checks it against an
+alert threshold.  On the Rust side events are batched into ``f32[B]``
+temperature tensors; this kernel is the batched tensor re-expression of
+that per-event scalar loop (see DESIGN.md §6 Hardware-Adaptation).
+
+TPU mapping: a pure VPU elementwise kernel.  Each grid step streams one
+``(BLK,)`` block HBM→VMEM, applies the affine conversion plus compare, and
+writes two output blocks.  The op is bandwidth-bound: the BlockSpec is
+chosen so two blocks (in + out) stay far below VMEM while leaving room for
+double buffering.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same program runs
+on the Rust PJRT CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size for the elementwise grid.  512 f32 = 2 KiB per block; with
+# in/out/alert blocks live simultaneously this is ~6 KiB of VMEM per grid
+# step — far under the ~16 MiB VMEM budget, leaving the compiler free to
+# double-buffer the HBM→VMEM stream.
+BLOCK = 512
+
+
+def _transform_kernel(temp_ref, thresh_ref, fahr_ref, alert_ref):
+    """One grid step: convert a block of temperatures, emit alert mask."""
+    t = temp_ref[...]
+    f = t * (9.0 / 5.0) + 32.0
+    fahr_ref[...] = f
+    # Alert mask as f32 (0.0 / 1.0) so the whole artifact stays single-dtype
+    # on the output side; the Rust engine thresholds on > 0.5.
+    alert_ref[...] = jnp.where(f > thresh_ref[...], 1.0, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sensor_transform(temps, thresh, block=BLOCK):
+    """Batched CPU-pipeline transform.
+
+    Args:
+      temps:  f32[B]  Celsius temperatures (B must be a multiple of `block`;
+              the Rust batcher pads partial batches).
+      thresh: f32[1]  alert threshold in Fahrenheit.
+      block:  grid block size.
+
+    Returns:
+      (fahr f32[B], alerts f32[B]) — converted temperatures and 0/1 mask.
+    """
+    (b,) = temps.shape
+    grid = (b // block,)
+    return pl.pallas_call(
+        _transform_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # Threshold is broadcast: every grid step sees the same block.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(temps, thresh)

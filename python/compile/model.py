@@ -1,0 +1,66 @@
+"""L2: the paper's processing-pipeline compute graphs, written in JAX.
+
+Each function is the batched tensor program for one SProBench pipeline
+(Sec. 3.3 of the paper); each calls the L1 Pallas kernels and is AOT-lowered
+by ``aot.py`` to HLO text, which the Rust engine executes via PJRT on its
+hot path.  Python never runs at request time.
+
+Programs
+--------
+* ``cpu_pipeline_step``   — CPU-intensive pipeline: °C→°F + threshold.
+* ``mem_pipeline_step``   — memory-intensive pipeline: keyed window pane
+                            update (sum/cnt state carried by the caller).
+* ``fused_pipeline_step`` — both in one program: the transform feeds the
+                            window (ablation: one PJRT dispatch instead of
+                            two when a custom pipeline wants both).
+
+All programs take/return flat tuples of f32/i32 tensors so Rust-side
+marshalling stays trivial.
+"""
+
+from compile.kernels.keyed_window import keyed_window_update
+from compile.kernels.sensor_transform import sensor_transform
+
+
+def cpu_pipeline_step(temps, thresh):
+    """CPU-intensive pipeline body.
+
+    Args:
+      temps:  f32[B] Celsius temperatures for one engine batch.
+      thresh: f32[1] alert threshold (°F).
+
+    Returns:
+      (fahr f32[B], alerts f32[B]).
+    """
+    fahr, alerts = sensor_transform(temps, thresh)
+    return fahr, alerts
+
+
+def mem_pipeline_step(ids, temps, state_sum, state_cnt):
+    """Memory-intensive pipeline body: one window-pane state update.
+
+    Args:
+      ids:       i32[B] sensor ids; padded slots carry id >= K.
+      temps:     f32[B] Celsius temperatures.
+      state_sum: f32[K] pane sums (carried across batches by the engine).
+      state_cnt: f32[K] pane counts.
+
+    Returns:
+      (sum' f32[K], cnt' f32[K], avg f32[K]).
+    """
+    return keyed_window_update(ids, temps, state_sum, state_cnt)
+
+
+def fused_pipeline_step(ids, temps, thresh, state_sum, state_cnt):
+    """CPU + memory pipelines fused into a single dispatch.
+
+    The window aggregates the *Fahrenheit* stream so the transform's output
+    feeds the stateful stage (one HLO module, XLA fuses the elementwise
+    stage into the scatter's operand producer).
+
+    Returns:
+      (fahr f32[B], alerts f32[B], sum' f32[K], cnt' f32[K], avg f32[K]).
+    """
+    fahr, alerts = sensor_transform(temps, thresh)
+    new_sum, new_cnt, avg = keyed_window_update(ids, fahr, state_sum, state_cnt)
+    return fahr, alerts, new_sum, new_cnt, avg

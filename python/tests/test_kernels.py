@@ -1,0 +1,153 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes, key counts, value ranges, and id
+distributions; every case asserts allclose against ``kernels.ref``.  These
+tests gate artifact validity — if they fail, the HLO the Rust engine runs
+is wrong.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.keyed_window import keyed_window_update
+from compile.kernels.sensor_transform import sensor_transform
+
+F32 = np.float32
+
+
+def _temps(rng, b, scale=50.0):
+    return jnp.asarray(rng.standard_normal(b).astype(F32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# sensor_transform (CPU-intensive pipeline kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestSensorTransform:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        blocks=st.integers(1, 16),
+        block=st.sampled_from([128, 256, 512]),
+        thresh=st.floats(-100, 200, allow_nan=False, width=32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, blocks, block, thresh, seed):
+        rng = np.random.default_rng(seed)
+        b = blocks * block
+        temps = _temps(rng, b)
+        th = jnp.array([thresh], dtype=jnp.float32)
+        fahr, alerts = sensor_transform(temps, th, block=block)
+        rfahr, ralerts = ref.sensor_transform_ref(temps, th)
+        np.testing.assert_allclose(fahr, rfahr, rtol=1e-5, atol=1e-5)
+        # Mask may legitimately differ where fahr is within float eps of the
+        # threshold; exclude the knife-edge.
+        edge = np.abs(np.asarray(rfahr) - thresh) < 1e-3
+        np.testing.assert_array_equal(
+            np.asarray(alerts)[~edge], np.asarray(ralerts)[~edge]
+        )
+
+    def test_known_values(self):
+        # 0°C=32°F, 100°C=212°F, -40 is the fixed point.
+        temps = jnp.array([0.0, 100.0, -40.0, 37.0] * 128, dtype=jnp.float32)
+        th = jnp.array([100.0], dtype=jnp.float32)
+        fahr, alerts = sensor_transform(temps, th)
+        np.testing.assert_allclose(
+            np.asarray(fahr)[:4], [32.0, 212.0, -40.0, 98.6], rtol=1e-6
+        )
+        np.testing.assert_array_equal(np.asarray(alerts)[:4], [0.0, 1.0, 0.0, 0.0])
+
+    def test_alerts_are_binary(self):
+        rng = np.random.default_rng(7)
+        temps = _temps(rng, 1024)
+        th = jnp.array([50.0], dtype=jnp.float32)
+        _, alerts = sensor_transform(temps, th)
+        assert set(np.unique(np.asarray(alerts))) <= {0.0, 1.0}
+
+    def test_batch_equal_to_block(self):
+        # Degenerate single-step grid (B == block) must still be exact.
+        temps = jnp.linspace(-50, 50, 256, dtype=jnp.float32)
+        th = jnp.array([0.0], dtype=jnp.float32)
+        fahr, _ = sensor_transform(temps, th, block=256)
+        rfahr, _ = ref.sensor_transform_ref(temps, th)
+        np.testing.assert_allclose(fahr, rfahr, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# keyed_window_update (memory-intensive pipeline kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestKeyedWindow:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tiles=st.integers(1, 8),
+        k=st.sampled_from([128, 512, 1024]),
+        pad_frac=st.floats(0.0, 0.5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, tiles, k, pad_frac, seed):
+        rng = np.random.default_rng(seed)
+        b = tiles * 256
+        ids = rng.integers(0, k, b).astype(np.int32)
+        # Padded slots carry id == K (out of range) and must be dropped.
+        ids[rng.random(b) < pad_frac] = k
+        ids = jnp.asarray(ids)
+        temps = _temps(rng, b)
+        s0 = jnp.asarray(rng.standard_normal(k).astype(F32))
+        c0 = jnp.asarray(rng.integers(0, 100, k).astype(F32))
+        ns, nc, avg = keyed_window_update(ids, temps, s0, c0)
+        rs, rc, ravg = ref.keyed_window_update_ref(ids, temps, s0, c0)
+        np.testing.assert_allclose(ns, rs, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(nc, rc)
+        np.testing.assert_allclose(avg, ravg, rtol=1e-4, atol=1e-4)
+
+    def test_state_carry_across_batches(self):
+        # Two sequential updates == one update over the concatenated batch.
+        rng = np.random.default_rng(3)
+        k = 256
+        ids1 = jnp.asarray(rng.integers(0, k, 256).astype(np.int32))
+        ids2 = jnp.asarray(rng.integers(0, k, 256).astype(np.int32))
+        t1, t2 = _temps(rng, 256), _temps(rng, 256)
+        z = jnp.zeros(k, jnp.float32)
+        s1, c1, _ = keyed_window_update(ids1, t1, z, z)
+        s2, c2, _ = keyed_window_update(ids2, t2, s1, c1)
+        sall, call, _ = keyed_window_update(
+            jnp.concatenate([ids1, ids2]), jnp.concatenate([t1, t2]), z, z
+        )
+        np.testing.assert_allclose(s2, sall, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(c2, call)
+
+    def test_all_padding_is_noop(self):
+        k = 128
+        ids = jnp.full(256, k, dtype=jnp.int32)  # every slot out of range
+        temps = jnp.ones(256, jnp.float32) * 99.0
+        s0 = jnp.arange(k, dtype=jnp.float32)
+        c0 = jnp.ones(k, jnp.float32)
+        ns, nc, avg = keyed_window_update(ids, temps, s0, c0)
+        np.testing.assert_allclose(ns, s0)
+        np.testing.assert_allclose(nc, c0)
+        np.testing.assert_allclose(avg, s0 / jnp.maximum(c0, 1.0))
+
+    def test_single_hot_key(self):
+        k = 128
+        ids = jnp.zeros(512, dtype=jnp.int32)  # all events hit key 0
+        temps = jnp.full(512, 2.0, jnp.float32)
+        z = jnp.zeros(k, jnp.float32)
+        ns, nc, avg = keyed_window_update(ids, temps, z, z)
+        assert float(ns[0]) == pytest.approx(1024.0)
+        assert float(nc[0]) == 512.0
+        assert float(avg[0]) == pytest.approx(2.0)
+        np.testing.assert_allclose(np.asarray(ns)[1:], 0.0)
+
+    def test_zero_count_avg_is_zero_not_nan(self):
+        k = 64
+        ids = jnp.full(256, k, dtype=jnp.int32)
+        temps = jnp.zeros(256, jnp.float32)
+        z = jnp.zeros(k, jnp.float32)
+        _, _, avg = keyed_window_update(ids, temps, z, z)
+        assert not np.any(np.isnan(np.asarray(avg)))

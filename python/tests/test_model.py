@@ -1,0 +1,62 @@
+"""L2 model tests: pipeline-step composition, shapes, and semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestCpuPipelineStep:
+    def test_shapes(self):
+        temps = jnp.zeros(1024, jnp.float32)
+        th = jnp.array([80.0], dtype=jnp.float32)
+        fahr, alerts = model.cpu_pipeline_step(temps, th)
+        assert fahr.shape == (1024,) and alerts.shape == (1024,)
+        assert fahr.dtype == jnp.float32 and alerts.dtype == jnp.float32
+
+
+class TestMemPipelineStep:
+    def test_shapes_and_state(self):
+        rng = np.random.default_rng(0)
+        ids = jnp.asarray(rng.integers(0, 1024, 1024).astype(np.int32))
+        temps = jnp.asarray(rng.standard_normal(1024).astype(np.float32))
+        z = jnp.zeros(1024, jnp.float32)
+        ns, nc, avg = model.mem_pipeline_step(ids, temps, z, z)
+        assert ns.shape == nc.shape == avg.shape == (1024,)
+        assert float(jnp.sum(nc)) == 1024.0  # every event landed on a key
+
+
+class TestFusedPipelineStep:
+    def test_window_aggregates_fahrenheit(self):
+        """The fused step's window state must accumulate °F, not °C."""
+        rng = np.random.default_rng(1)
+        b, k = 512, 128
+        ids = jnp.asarray(rng.integers(0, k, b).astype(np.int32))
+        temps = jnp.asarray(rng.standard_normal(b).astype(np.float32) * 30)
+        th = jnp.array([80.0], dtype=jnp.float32)
+        z = jnp.zeros(k, jnp.float32)
+        fahr, alerts, ns, nc, avg = model.fused_pipeline_step(ids, temps, th, z, z)
+        rfahr, ralerts = ref.sensor_transform_ref(temps, th)
+        rs, rc, ravg = ref.keyed_window_update_ref(ids, rfahr, z, z)
+        np.testing.assert_allclose(fahr, rfahr, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(ns, rs, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(nc, rc)
+        np.testing.assert_allclose(avg, ravg, rtol=1e-4, atol=1e-4)
+
+    def test_consistent_with_unfused(self):
+        rng = np.random.default_rng(2)
+        b, k = 256, 128
+        ids = jnp.asarray(rng.integers(0, k, b).astype(np.int32))
+        temps = jnp.asarray(rng.standard_normal(b).astype(np.float32) * 30)
+        th = jnp.array([70.0], dtype=jnp.float32)
+        z = jnp.zeros(k, jnp.float32)
+        fahr_u, alerts_u = model.cpu_pipeline_step(temps, th)
+        ns_u, nc_u, avg_u = model.mem_pipeline_step(ids, fahr_u, z, z)
+        fahr_f, alerts_f, ns_f, nc_f, avg_f = model.fused_pipeline_step(
+            ids, temps, th, z, z
+        )
+        np.testing.assert_allclose(fahr_f, fahr_u, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(alerts_f, alerts_u)
+        np.testing.assert_allclose(ns_f, ns_u, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(avg_f, avg_u, rtol=1e-4, atol=1e-4)

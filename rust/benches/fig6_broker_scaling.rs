@@ -1,0 +1,77 @@
+//! Fig. 6: scaling of the Workload-generator → Message-broker setup.
+//!
+//! The paper's first experiment: generator(s) + Kafka (4 partitions),
+//! loads stepped upward; the result is a 1:1 linear relationship between
+//! offered load and broker throughput, with broker latency scaling
+//! linearly as load intensifies.
+//!
+//! Here: the pass-through scenario at increasing offered rates.  The
+//! harness fits broker-out vs offered throughput (slope ≈ 1, R² ≈ 1)
+//! and reports broker ingest latency per load step.
+
+use sprobench::bench::{scenarios, Bencher, Measurement};
+use sprobench::coordinator::run_wall;
+use sprobench::metrics::MeasurementPoint;
+use sprobench::util::stats::linear_fit;
+
+fn main() {
+    let mut b = Bencher::new("fig6_broker_scaling");
+    let rates = [50_000u64, 100_000, 200_000, 400_000, 800_000];
+    let mut offered = Vec::new();
+    let mut through = Vec::new();
+    let mut latencies = Vec::new();
+
+    for &rate in &rates {
+        let cfg = scenarios::fig6(rate);
+        let (summary, _) = run_wall(&cfg, None).expect("fig6 run");
+        let broker_lat = summary
+            .latency_at(MeasurementPoint::BrokerIn)
+            .expect("broker latency recorded");
+        offered.push(summary.offered_rate);
+        through.push(summary.processed_rate);
+        latencies.push(broker_lat.mean);
+        b.record(Measurement {
+            name: format!("offered {}K ev/s", rate / 1000),
+            times: vec![summary.elapsed_micros as f64 / 1e6],
+            units_per_iter: summary.processed as f64,
+            extras: vec![
+                ("offered_eps".into(), summary.offered_rate),
+                ("broker_out_eps".into(), summary.processed_rate),
+                ("broker_lat_mean_us".into(), broker_lat.mean),
+                ("broker_lat_p99_us".into(), broker_lat.p99 as f64),
+            ],
+        });
+    }
+    b.finish();
+
+    // The paper's claims: 1:1 linear throughput, linear-ish latency trend.
+    let fit = linear_fit(&offered, &through);
+    println!(
+        "fig6 fit: broker_out = {:.4} * offered + {:.0}   (R^2 = {:.5})",
+        fit.slope, fit.intercept, fit.r2
+    );
+    assert!(
+        (fit.slope - 1.0).abs() < 0.05,
+        "Fig 6 claim violated: slope {:.4} deviates from 1:1",
+        fit.slope
+    );
+    assert!(fit.r2 > 0.99, "Fig 6 claim violated: R^2 {:.4} not linear", fit.r2);
+    let lat_fit = linear_fit(&offered, &latencies);
+    println!(
+        "fig6 latency trend: {:.4} us per K ev/s (R^2 = {:.3})",
+        lat_fit.slope * 1000.0,
+        lat_fit.r2
+    );
+    println!("fig6 mean broker latency by load step: {latencies:?}");
+    assert!(
+        lat_fit.slope > 0.0,
+        "broker latency must grow with load: slope {}",
+        lat_fit.slope
+    );
+    let (first, last) = (latencies[0], latencies[latencies.len() - 1]);
+    assert!(
+        last > first,
+        "broker latency at top load ({last:.0}us) must exceed bottom load ({first:.0}us)"
+    );
+    println!("CLAIMS OK: 1:1 broker scaling with load-increasing broker latency");
+}

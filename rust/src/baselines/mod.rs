@@ -1,0 +1,312 @@
+//! Baseline benchmark-suite generator models (Table 1).
+//!
+//! The paper's Table 1 compares the *maximum documented throughput* of
+//! seven existing DSP benchmark suites against SProBench's generator
+//! (0.1–1 M ev/s vs 40 M ev/s).  The original suites are JVM/C++ code
+//! bases we cannot run here, so each is modelled by (a) its **documented
+//! peak rate** — reproduced from Table 1 and each suite's paper — applied
+//! as a hard rate cap, and (b) the **mechanistic inefficiency** its design
+//! carries (global synchronization, per-event allocation churn,
+//! heavyweight record formats, per-item pipeline stages), which the model
+//! actually executes per event.  The Table 1 bench then *measures* every
+//! model under the same harness: baselines saturate at their caps (or
+//! earlier, if the mechanistic cost binds), while the SProBench generator
+//! runs uncapped — reproducing the ordering and the ≥10× gap.
+//!
+//! DESIGN.md §1 documents this substitution.
+
+use std::sync::Mutex;
+
+use crate::util::clock::ClockRef;
+use crate::util::rng::Pcg32;
+use crate::wgen::{EventFormat, SensorEvent, TokenBucket};
+
+/// Mechanistic per-event inefficiencies a suite's generator design carries.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostModel {
+    /// Acquire a global lock per event (single shared emitter queue).
+    pub global_lock: bool,
+    /// Fresh heap allocations per event (boxed tuples, maps, strings).
+    pub allocs_per_event: u32,
+    /// String fields formatted per event (format! machinery).
+    pub fmt_fields: u32,
+    /// Fixed extra CPU per event, nanoseconds (validation, DB hooks, …).
+    pub busywork_nanos: u64,
+}
+
+/// One modelled suite.
+#[derive(Clone, Debug)]
+pub struct BaselineSpec {
+    pub name: &'static str,
+    /// Max documented throughput, events/second (Table 1 column).
+    pub doc_rate: f64,
+    /// Whether the suite documents multi-instance scaling of its generator.
+    pub scales_out: bool,
+    pub cost: CostModel,
+}
+
+/// The seven suites of Table 1 (SProBench itself is measured, not modelled).
+pub fn all_baselines() -> Vec<BaselineSpec> {
+    vec![
+        BaselineSpec {
+            // Single driver emitting simulated toll-road tuples through one
+            // historical-data validator.
+            name: "LinearRoad",
+            doc_rate: 0.1e6,
+            scales_out: false,
+            cost: CostModel {
+                global_lock: true,
+                allocs_per_event: 4,
+                fmt_fields: 6,
+                busywork_nanos: 4_000,
+            },
+        },
+        BaselineSpec {
+            // Ad-campaign JSON events, Redis lookups on the path.
+            name: "YSB",
+            doc_rate: 0.2e6,
+            scales_out: false,
+            cost: CostModel {
+                global_lock: false,
+                allocs_per_event: 6,
+                fmt_fields: 7,
+                busywork_nanos: 2_500,
+            },
+        },
+        BaselineSpec {
+            name: "DSPBench",
+            doc_rate: 0.8e6,
+            scales_out: false,
+            cost: CostModel {
+                global_lock: false,
+                allocs_per_event: 3,
+                fmt_fields: 4,
+                busywork_nanos: 600,
+            },
+        },
+        BaselineSpec {
+            // Kubernetes-native; generator pods scale but per-pod rate is
+            // the documented 1 M/s bound.
+            name: "Theodolite",
+            doc_rate: 1.0e6,
+            scales_out: true,
+            cost: CostModel {
+                global_lock: false,
+                allocs_per_event: 2,
+                fmt_fields: 3,
+                busywork_nanos: 400,
+            },
+        },
+        BaselineSpec {
+            // Enterprise pipeline with result validation against a DBMS.
+            name: "ESPBench",
+            doc_rate: 0.1e6,
+            scales_out: false,
+            cost: CostModel {
+                global_lock: true,
+                allocs_per_event: 5,
+                fmt_fields: 8,
+                busywork_nanos: 5_000,
+            },
+        },
+        BaselineSpec {
+            // C++/FastFlow; items are video frames / compression blocks —
+            // per-item cost is enormous, rates are in K/s.
+            name: "SPBench",
+            doc_rate: 0.5e3,
+            scales_out: false,
+            cost: CostModel {
+                global_lock: false,
+                allocs_per_event: 2,
+                fmt_fields: 1,
+                busywork_nanos: 1_900_000,
+            },
+        },
+        BaselineSpec {
+            name: "OSPBench",
+            doc_rate: 0.8e6,
+            scales_out: false,
+            cost: CostModel {
+                global_lock: false,
+                allocs_per_event: 3,
+                fmt_fields: 5,
+                busywork_nanos: 700,
+            },
+        },
+    ]
+}
+
+/// Result of driving one generator model.
+#[derive(Clone, Copy, Debug)]
+pub struct GenResult {
+    pub events: u64,
+    pub bytes: u64,
+    pub elapsed_micros: u64,
+    pub rate: f64,
+}
+
+/// Drive a baseline generator model for `events` events (or until
+/// `deadline_micros` elapses), sinking serialized payloads.
+pub fn run_baseline(
+    spec: &BaselineSpec,
+    events: u64,
+    deadline_micros: u64,
+    clock: &ClockRef,
+) -> GenResult {
+    let start = clock.now_micros();
+    let mut bucket = TokenBucket::new(clock.clone(), spec.doc_rate as u64, (spec.doc_rate / 20.0) as u64 + 64);
+    let lock = Mutex::new(());
+    let mut rng = Pcg32::new(7, 7);
+    let mut emitted = 0u64;
+    let mut bytes = 0u64;
+    let mut sink = 0u64;
+
+    while emitted < events {
+        if clock.now_micros().saturating_sub(start) > deadline_micros {
+            break;
+        }
+        // Rate cap: the documented peak.
+        bucket.acquire(1);
+        // Mechanistic per-event cost.
+        if spec.cost.global_lock {
+            let _g = lock.lock().expect("baseline lock");
+            sink = sink.wrapping_add(1);
+        }
+        let mut payload = String::new();
+        for f in 0..spec.cost.fmt_fields {
+            payload.push_str(&format!("\"f{}\":{},", f, rng.next_u32()));
+        }
+        for _ in 0..spec.cost.allocs_per_event {
+            // Boxed per-event garbage a JVM generator would churn.
+            let garbage: Box<Vec<u8>> = Box::new(vec![0u8; 32]);
+            sink = sink.wrapping_add(garbage.len() as u64);
+        }
+        busywork(spec.cost.busywork_nanos, clock);
+        bytes += payload.len() as u64;
+        emitted += 1;
+        std::hint::black_box(&payload);
+    }
+    std::hint::black_box(sink);
+    let elapsed = clock.now_micros().saturating_sub(start).max(1);
+    GenResult {
+        events: emitted,
+        bytes,
+        elapsed_micros: elapsed,
+        rate: emitted as f64 * 1e6 / elapsed as f64,
+    }
+}
+
+/// The SProBench generator inner loop, measured under the same harness
+/// (serializer + key draw, no caps, no per-event allocation).
+pub fn run_sprobench_generator(
+    events: u64,
+    event_bytes: usize,
+    clock: &ClockRef,
+) -> GenResult {
+    let start = clock.now_micros();
+    let mut rng = Pcg32::new(42, 1);
+    let mut wire = Vec::with_capacity(event_bytes + 16);
+    let mut bytes = 0u64;
+    let format = if event_bytes < 40 {
+        EventFormat::Csv
+    } else {
+        EventFormat::Json
+    };
+    let mut serializer = crate::wgen::EventSerializer::new(format, event_bytes);
+    for _ in 0..events {
+        let ev = SensorEvent {
+            ts_micros: start,
+            sensor_id: rng.below(1024),
+            temp_c: 20.0 + rng.f32() * 30.0,
+        };
+        bytes += serializer.serialize(&ev, &mut wire) as u64;
+        std::hint::black_box(&wire);
+    }
+    let elapsed = clock.now_micros().saturating_sub(start).max(1);
+    GenResult {
+        events,
+        bytes,
+        elapsed_micros: elapsed,
+        rate: events as f64 * 1e6 / elapsed as f64,
+    }
+}
+
+fn busywork(nanos: u64, clock: &ClockRef) {
+    if nanos == 0 {
+        return;
+    }
+    if clock.is_virtual() {
+        clock.sleep_micros(nanos / 1_000);
+        return;
+    }
+    let start = std::time::Instant::now();
+    while (start.elapsed().as_nanos() as u64) < nanos {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock;
+
+    #[test]
+    fn table1_ordering_is_encoded() {
+        let b = all_baselines();
+        let get = |n: &str| b.iter().find(|s| s.name == n).unwrap().doc_rate;
+        assert!(get("Theodolite") >= get("DSPBench"));
+        assert!(get("DSPBench") > get("YSB"));
+        assert!(get("YSB") > get("LinearRoad"));
+        assert!(get("LinearRoad") > get("SPBench"));
+        // SProBench's documented 40 M/s dwarfs the best baseline ×10+.
+        assert!(40e6 / get("Theodolite") >= 10.0);
+    }
+
+    #[test]
+    fn baselines_respect_their_caps() {
+        let clk = clock::wall();
+        for spec in all_baselines().iter().filter(|s| s.doc_rate >= 1e5) {
+            let r = run_baseline(spec, 20_000, 2_000_000, &clk);
+            assert!(
+                r.rate <= spec.doc_rate * 1.15,
+                "{}: measured {:.0} > cap {:.0}",
+                spec.name,
+                r.rate,
+                spec.doc_rate
+            );
+        }
+    }
+
+    #[test]
+    fn spbench_is_orders_of_magnitude_slower() {
+        let clk = clock::wall();
+        let b = all_baselines();
+        let sp = b.iter().find(|s| s.name == "SPBench").unwrap();
+        let r = run_baseline(sp, 50, 1_000_000, &clk);
+        assert!(r.rate < 2_000.0, "SPBench rate {:.0}", r.rate);
+    }
+
+    #[test]
+    fn sprobench_generator_beats_every_baseline_cap() {
+        let clk = clock::wall();
+        let r = run_sprobench_generator(200_000, 27, &clk);
+        // Must beat the fastest baseline's documented 1 M/s on any box.
+        assert!(
+            r.rate > 1.0e6,
+            "generator too slow for the Table 1 claim: {:.0}/s",
+            r.rate
+        );
+        assert_eq!(r.bytes, 200_000 * 27);
+    }
+
+    #[test]
+    fn deadline_bounds_runtime() {
+        let clk = clock::wall();
+        let b = all_baselines();
+        let lr = b.iter().find(|s| s.name == "LinearRoad").unwrap();
+        let t0 = std::time::Instant::now();
+        let r = run_baseline(lr, u64::MAX, 200_000, &clk);
+        assert!(t0.elapsed().as_secs() < 5);
+        assert!(r.events > 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Custom benchmark harness (criterion is not vendored offline).
+//!
+//! Drives the `rust/benches/*.rs` targets (`harness = false`): warmup +
+//! measured iterations, mean/p50/p99 wall time, derived throughput when
+//! the benched closure reports work units, aligned-table output and CSV
+//! export into `bench_results/`.
+
+pub mod scenarios;
+
+use std::time::Instant;
+
+use crate::postprocess::{ascii_table, csv_from_rows};
+use crate::util::stats::percentile;
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall times, seconds.
+    pub times: Vec<f64>,
+    /// Work units (events) per iteration, for throughput derivation.
+    pub units_per_iter: f64,
+    /// Free-form labelled values to carry alongside (latency p50, …).
+    pub extras: Vec<(String, f64)>,
+}
+
+impl Measurement {
+    pub fn mean_time(&self) -> f64 {
+        if self.times.is_empty() {
+            return 0.0;
+        }
+        self.times.iter().sum::<f64>() / self.times.len() as f64
+    }
+
+    pub fn p50_time(&self) -> f64 {
+        percentile(&self.times, 0.5)
+    }
+
+    pub fn p99_time(&self) -> f64 {
+        percentile(&self.times, 0.99)
+    }
+
+    /// Work units per second at the mean time.
+    pub fn throughput(&self) -> f64 {
+        let m = self.mean_time();
+        if m <= 0.0 {
+            0.0
+        } else {
+            self.units_per_iter / m
+        }
+    }
+}
+
+/// Bench collection for one target.
+pub struct Bencher {
+    target: String,
+    measurements: Vec<Measurement>,
+}
+
+impl Bencher {
+    pub fn new(target: &str) -> Self {
+        println!("== bench target: {target} ==");
+        Self {
+            target: target.to_string(),
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Measure `f` (returns work units done) for `iters` iterations after
+    /// `warmup` unmeasured ones.
+    pub fn measure<F: FnMut() -> f64>(&mut self, name: &str, warmup: usize, iters: usize, mut f: F) {
+        for _ in 0..warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(iters);
+        let mut units = 0.0;
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            units = std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            times,
+            units_per_iter: units,
+            extras: Vec::new(),
+        };
+        println!(
+            "  {name}: mean {:.3}s p50 {:.3}s  {:.0} units/s",
+            m.mean_time(),
+            m.p50_time(),
+            m.throughput()
+        );
+        self.measurements.push(m);
+    }
+
+    /// Record an externally-produced measurement (scenario benches that
+    /// compute their own rates/latencies).
+    pub fn record(&mut self, m: Measurement) {
+        println!(
+            "  {}: mean {:.3}s  {:.0} units/s  {}",
+            m.name,
+            m.mean_time(),
+            m.throughput(),
+            m.extras
+                .iter()
+                .map(|(k, v)| format!("{k}={v:.1}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        self.measurements.push(m);
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+
+    /// Render the results table; also writes
+    /// `bench_results/<target>.csv` for offline analysis.
+    pub fn finish(self) -> String {
+        let mut extra_keys: Vec<String> = Vec::new();
+        for m in &self.measurements {
+            for (k, _) in &m.extras {
+                if !extra_keys.contains(k) {
+                    extra_keys.push(k.clone());
+                }
+            }
+        }
+        let mut headers: Vec<&str> = vec!["case", "mean_s", "p50_s", "p99_s", "units/s"];
+        let extra_refs: Vec<&str> = extra_keys.iter().map(|s| s.as_str()).collect();
+        headers.extend(extra_refs.iter());
+        let rows: Vec<Vec<String>> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                let mut row = vec![
+                    m.name.clone(),
+                    format!("{:.4}", m.mean_time()),
+                    format!("{:.4}", m.p50_time()),
+                    format!("{:.4}", m.p99_time()),
+                    format!("{:.0}", m.throughput()),
+                ];
+                for k in &extra_keys {
+                    let v = m
+                        .extras
+                        .iter()
+                        .find(|(ek, _)| ek == k)
+                        .map(|(_, v)| format!("{v:.2}"))
+                        .unwrap_or_default();
+                    row.push(v);
+                }
+                row
+            })
+            .collect();
+        let table = ascii_table(&headers, &rows);
+        println!("{table}");
+        let csv = csv_from_rows(&headers, &rows);
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{}.csv", self.target)), csv);
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations_and_units() {
+        let mut b = Bencher::new("test-target");
+        let mut calls = 0;
+        b.measure("noop", 2, 5, || {
+            calls += 1;
+            1000.0
+        });
+        assert_eq!(calls, 7); // 2 warmup + 5 measured
+        let m = &b.measurements()[0];
+        assert_eq!(m.times.len(), 5);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn finish_renders_all_cases_and_extras() {
+        let mut b = Bencher::new("test-target2");
+        b.record(Measurement {
+            name: "case-a".into(),
+            times: vec![0.5],
+            units_per_iter: 500.0,
+            extras: vec![("p50_ms".into(), 12.0)],
+        });
+        let table = b.finish();
+        assert!(table.contains("case-a"));
+        assert!(table.contains("p50_ms"));
+        assert!(table.contains("1000")); // 500 units / 0.5s
+        let _ = std::fs::remove_file("bench_results/test-target2.csv");
+    }
+}

@@ -1,0 +1,287 @@
+//! Consumer groups: per-partition offsets, static member assignment,
+//! commit-driven log pruning.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::partition::PartitionClosed;
+use super::record::Record;
+use super::topic::Topic;
+
+/// Committed offsets of one group over one topic.
+pub struct GroupOffsets {
+    committed: Vec<AtomicU64>,
+}
+
+impl GroupOffsets {
+    fn new(partitions: u32) -> Self {
+        Self {
+            committed: (0..partitions).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn committed(&self, partition: u32) -> u64 {
+        self.committed[partition as usize].load(Ordering::SeqCst)
+    }
+}
+
+/// Coordinates pruning across all groups consuming a topic: a partition's
+/// records are reclaimable once *every* registered group committed past
+/// them (Kafka analog: retention by consumer progress — the variant that
+/// produces backpressure instead of data loss).
+pub struct PruneCoordinator {
+    topic: Arc<Topic>,
+    groups: Mutex<Vec<Arc<GroupOffsets>>>,
+}
+
+impl PruneCoordinator {
+    pub fn new(topic: Arc<Topic>) -> Self {
+        Self {
+            topic,
+            groups: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn register(&self, offsets: Arc<GroupOffsets>) {
+        self.groups.lock().expect("prune groups").push(offsets);
+    }
+
+    /// Prune `partition` up to the min committed offset across groups.
+    pub fn prune(&self, partition: u32) {
+        let groups = self.groups.lock().expect("prune groups");
+        if groups.is_empty() {
+            return;
+        }
+        let min = groups
+            .iter()
+            .map(|g| g.committed(partition))
+            .min()
+            .unwrap_or(0);
+        drop(groups);
+        self.topic.partition(partition).prune(min);
+    }
+}
+
+/// A batch returned by [`ConsumerGroup::poll`].
+pub struct PolledBatch {
+    pub partition: u32,
+    pub records: Vec<Record>,
+    /// Offset to commit after processing this batch.
+    pub next_offset: u64,
+}
+
+/// One consumer group over one topic.
+///
+/// Members are assigned partitions statically round-robin (member `m`
+/// owns partitions `p` with `p % members == m`) — the rebalancing model
+/// Kafka uses for a stable group.
+pub struct ConsumerGroup {
+    pub name: String,
+    topic: Arc<Topic>,
+    coordinator: Arc<PruneCoordinator>,
+    offsets: Arc<GroupOffsets>,
+    /// Next fetch position per partition (may run ahead of committed).
+    positions: Vec<AtomicU64>,
+    members: u32,
+}
+
+impl ConsumerGroup {
+    pub fn new(
+        name: &str,
+        topic: Arc<Topic>,
+        coordinator: Arc<PruneCoordinator>,
+        members: u32,
+    ) -> Arc<Self> {
+        assert!(members > 0);
+        let offsets = Arc::new(GroupOffsets::new(topic.partition_count()));
+        coordinator.register(offsets.clone());
+        let positions = (0..topic.partition_count())
+            .map(|_| AtomicU64::new(0))
+            .collect();
+        Arc::new(Self {
+            name: name.to_string(),
+            topic,
+            coordinator,
+            offsets,
+            positions,
+            members,
+        })
+    }
+
+    /// Partitions owned by `member`.
+    pub fn assignment(&self, member: u32) -> Vec<u32> {
+        (0..self.topic.partition_count())
+            .filter(|p| p % self.members == member % self.members)
+            .collect()
+    }
+
+    /// Poll up to `max` records for `member`, round-robin over its
+    /// partitions. Non-blocking: returns `None` when nothing is available
+    /// everywhere. Returns `Err` only when every owned partition is closed
+    /// and drained.
+    pub fn poll(&self, member: u32, max: usize) -> Result<Option<PolledBatch>, PartitionClosed> {
+        let owned = self.assignment(member);
+        if owned.is_empty() {
+            return Ok(None);
+        }
+        let mut all_closed = true;
+        // Start from a rotating index so one hot partition cannot starve
+        // the others.
+        let start = (self.positions[owned[0] as usize].load(Ordering::Relaxed) as usize)
+            % owned.len();
+        for i in 0..owned.len() {
+            let p = owned[(start + i) % owned.len()];
+            let pos = self.positions[p as usize].load(Ordering::SeqCst);
+            let mut buf = Vec::new();
+            match self.topic.partition(p).fetch(pos, max, &mut buf, false) {
+                Ok(next) => {
+                    all_closed = false;
+                    if !buf.is_empty() {
+                        self.positions[p as usize].store(next, Ordering::SeqCst);
+                        return Ok(Some(PolledBatch {
+                            partition: p,
+                            records: buf,
+                            next_offset: next,
+                        }));
+                    }
+                }
+                Err(PartitionClosed) => {}
+            }
+        }
+        if all_closed {
+            Err(PartitionClosed)
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Commit `offset` for `partition` and let the coordinator reclaim.
+    pub fn commit(&self, partition: u32, offset: u64) {
+        self.offsets.committed[partition as usize].fetch_max(offset, Ordering::SeqCst);
+        self.coordinator.prune(partition);
+    }
+
+    /// Total committed records across partitions.
+    pub fn total_committed(&self) -> u64 {
+        (0..self.topic.partition_count())
+            .map(|p| self.offsets.committed(p))
+            .sum()
+    }
+
+    /// Lag: records appended but not yet committed by this group.
+    pub fn total_lag(&self) -> u64 {
+        (0..self.topic.partition_count())
+            .map(|p| {
+                self.topic
+                    .partition(p)
+                    .high_watermark()
+                    .saturating_sub(self.offsets.committed(p))
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(partitions: u32, members: u32) -> (Arc<Topic>, Arc<ConsumerGroup>) {
+        let topic = Arc::new(Topic::new("t", partitions, 4096));
+        let coord = Arc::new(PruneCoordinator::new(topic.clone()));
+        let group = ConsumerGroup::new("g", topic.clone(), coord, members);
+        (topic, group)
+    }
+
+    fn rec(key: u32) -> Record {
+        Record::new(key, vec![0u8; 27], 0)
+    }
+
+    #[test]
+    fn assignment_covers_all_partitions_exactly_once() {
+        let (_, g) = setup(8, 3);
+        let mut seen = vec![0u32; 8];
+        for m in 0..3 {
+            for p in g.assignment(m) {
+                seen[p as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn poll_returns_appended_records() {
+        let (t, g) = setup(2, 1);
+        for k in 0..100 {
+            t.produce(rec(k), 0).unwrap();
+        }
+        let mut total = 0;
+        while let Ok(Some(batch)) = g.poll(0, 32) {
+            total += batch.records.len();
+            g.commit(batch.partition, batch.next_offset);
+            if total >= 100 {
+                break;
+            }
+        }
+        assert_eq!(total, 100);
+        assert_eq!(g.total_committed(), 100);
+        assert_eq!(g.total_lag(), 0);
+    }
+
+    #[test]
+    fn commit_prunes_when_sole_group() {
+        let (t, g) = setup(1, 1);
+        for k in 0..10 {
+            t.produce(rec(k), 0).unwrap();
+        }
+        let batch = g.poll(0, 10).unwrap().unwrap();
+        g.commit(batch.partition, batch.next_offset);
+        assert_eq!(t.partition(0).low_watermark(), 10);
+        assert_eq!(t.total_lag(), 0);
+    }
+
+    #[test]
+    fn second_group_blocks_pruning_until_it_commits() {
+        let topic = Arc::new(Topic::new("t", 1, 4096));
+        let coord = Arc::new(PruneCoordinator::new(topic.clone()));
+        let g1 = ConsumerGroup::new("g1", topic.clone(), coord.clone(), 1);
+        let g2 = ConsumerGroup::new("g2", topic.clone(), coord, 1);
+        for k in 0..5 {
+            topic.produce(rec(k), 0).unwrap();
+        }
+        let b = g1.poll(0, 10).unwrap().unwrap();
+        g1.commit(b.partition, b.next_offset);
+        assert_eq!(topic.partition(0).low_watermark(), 0, "g2 has not committed");
+        let b = g2.poll(0, 10).unwrap().unwrap();
+        g2.commit(b.partition, b.next_offset);
+        assert_eq!(topic.partition(0).low_watermark(), 5);
+    }
+
+    #[test]
+    fn poll_after_close_and_drain_errors() {
+        let (t, g) = setup(1, 1);
+        t.produce(rec(1), 0).unwrap();
+        t.close();
+        // First poll drains the remaining record…
+        let b = g.poll(0, 10).unwrap();
+        assert!(b.is_none() || b.unwrap().records.len() == 1);
+        // …after which the group reports closure.
+        assert_eq!(g.poll(0, 10).err(), Some(PartitionClosed));
+    }
+
+    #[test]
+    fn members_see_disjoint_records() {
+        let (t, g) = setup(4, 2);
+        for k in 0..1000 {
+            t.produce(rec(k), 0).unwrap();
+        }
+        let mut got = [0usize; 2];
+        for m in 0..2 {
+            while let Ok(Some(batch)) = g.poll(m, 64) {
+                got[m as usize] += batch.records.len();
+                g.commit(batch.partition, batch.next_offset);
+            }
+        }
+        assert_eq!(got[0] + got[1], 1000);
+        assert!(got[0] > 0 && got[1] > 0);
+    }
+}

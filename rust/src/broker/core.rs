@@ -1,0 +1,351 @@
+//! Broker facade: topic registry, producer API, thread pools, stats.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::consumer::{ConsumerGroup, PruneCoordinator};
+use super::partition::PartitionClosed;
+use super::record::Record;
+use super::topic::Topic;
+use crate::util::clock::ClockRef;
+use crate::util::pool::ThreadPool;
+
+/// Broker tuning (paper Sec. 4: "5 GB for Kafka, with 20 threads for I/O
+/// and 10 threads for network operations", 4 topic partitions).
+#[derive(Clone, Debug)]
+pub struct BrokerConfig {
+    pub partitions: u32,
+    pub queue_depth: usize,
+    pub io_threads: u32,
+    pub network_threads: u32,
+    /// Simulated per-record handling cost in nanoseconds (0 = free).
+    /// Models broker CPU work so sim-mode capacity is finite.
+    pub record_overhead_nanos: u64,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        Self {
+            partitions: 4,
+            queue_depth: 65_536,
+            io_threads: 4,
+            network_threads: 2,
+            record_overhead_nanos: 0,
+        }
+    }
+}
+
+impl BrokerConfig {
+    pub fn from_section(s: &crate::config::schema::BrokerSection) -> Self {
+        Self {
+            partitions: s.partitions,
+            queue_depth: s.queue_depth,
+            io_threads: s.io_threads,
+            network_threads: s.network_threads,
+            record_overhead_nanos: s.record_overhead_nanos,
+        }
+    }
+}
+
+/// Aggregate broker statistics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BrokerStats {
+    pub topics: usize,
+    pub records_appended: u64,
+    pub bytes_appended: u64,
+    pub backlog: u64,
+}
+
+/// The in-process broker.
+pub struct Broker {
+    config: BrokerConfig,
+    clock: ClockRef,
+    topics: Mutex<BTreeMap<String, (Arc<Topic>, Arc<PruneCoordinator>)>>,
+    /// "Network" pool: carries async produce traffic.
+    network_pool: ThreadPool,
+    /// "I/O" pool: carries background housekeeping (pruning sweeps).
+    io_pool: ThreadPool,
+}
+
+impl Broker {
+    pub fn new(config: BrokerConfig, clock: ClockRef) -> Arc<Self> {
+        let network_pool = ThreadPool::new(
+            "broker-net",
+            config.network_threads.max(1) as usize,
+            4096,
+        );
+        let io_pool = ThreadPool::new("broker-io", config.io_threads.max(1) as usize, 4096);
+        Arc::new(Self {
+            config,
+            clock,
+            topics: Mutex::new(BTreeMap::new()),
+            network_pool,
+            io_pool,
+        })
+    }
+
+    pub fn config(&self) -> &BrokerConfig {
+        &self.config
+    }
+
+    /// Create (or get) a topic with the broker-default partition count.
+    pub fn create_topic(&self, name: &str) -> Arc<Topic> {
+        self.create_topic_with(name, self.config.partitions)
+    }
+
+    /// Create (or get) a topic with an explicit partition count.
+    pub fn create_topic_with(&self, name: &str, partitions: u32) -> Arc<Topic> {
+        let mut topics = self.topics.lock().expect("broker topics");
+        topics
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                let t = Arc::new(Topic::new(name, partitions, self.config.queue_depth));
+                let c = Arc::new(PruneCoordinator::new(t.clone()));
+                (t, c)
+            })
+            .0
+            .clone()
+    }
+
+    pub fn topic(&self, name: &str) -> Option<Arc<Topic>> {
+        self.topics
+            .lock()
+            .expect("broker topics")
+            .get(name)
+            .map(|(t, _)| t.clone())
+    }
+
+    /// Subscribe a consumer group to a topic.
+    pub fn subscribe(&self, topic: &str, group: &str, members: u32) -> Arc<ConsumerGroup> {
+        let (t, c) = self
+            .topics
+            .lock()
+            .expect("broker topics")
+            .get(topic)
+            .cloned()
+            .unwrap_or_else(|| panic!("subscribe to unknown topic '{topic}'"));
+        ConsumerGroup::new(group, t, c, members)
+    }
+
+    /// Synchronous produce (generator thread = network client thread).
+    pub fn produce(&self, topic: &Topic, record: Record) -> Result<u64, PartitionClosed> {
+        self.burn_overhead(1);
+        topic.produce(record, self.clock.now_micros())
+    }
+
+    /// Synchronous batched produce: groups records by partition and appends
+    /// each group under one lock acquisition. Returns records appended.
+    pub fn produce_batch(
+        &self,
+        topic: &Topic,
+        records: Vec<Record>,
+    ) -> Result<usize, PartitionClosed> {
+        let n = records.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        self.burn_overhead(n as u64);
+        let now = self.clock.now_micros();
+        let parts = topic.partition_count();
+        let mut by_partition: Vec<Vec<Record>> = (0..parts).map(|_| Vec::new()).collect();
+        for r in records {
+            by_partition[topic.partition_for_key(r.key) as usize].push(r);
+        }
+        for (p, mut group) in by_partition.into_iter().enumerate() {
+            if !group.is_empty() {
+                topic.partition(p as u32).append_batch(&mut group, now)?;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Fire-and-forget produce through the network pool (ack-less client).
+    pub fn produce_async(self: &Arc<Self>, topic: Arc<Topic>, record: Record) {
+        let this = self.clone();
+        self.network_pool.submit(move || {
+            let _ = this.produce(&topic, record);
+        });
+    }
+
+    /// Acked produce: the batch is handled by a broker **network thread**
+    /// (serialization point) and the caller blocks until the append is
+    /// acknowledged — the Kafka `acks=1` client model.  Under load the
+    /// network pool becomes the queueing server, which is what makes
+    /// broker latency grow with offered load (the paper's Fig. 6 latency
+    /// curve).
+    pub fn produce_batch_acked(
+        self: &Arc<Self>,
+        topic: &Arc<Topic>,
+        records: Vec<Record>,
+    ) -> Result<usize, PartitionClosed> {
+        let (ack_tx, ack_rx) = crate::util::chan::bounded::<Result<usize, PartitionClosed>>(1);
+        let this = self.clone();
+        let topic = topic.clone();
+        self.network_pool.submit(move || {
+            let result = this.produce_batch(&topic, records);
+            let _ = ack_tx.send(result);
+        });
+        ack_rx.recv().unwrap_or(Err(PartitionClosed))
+    }
+
+    /// Run a background housekeeping sweep on the I/O pool (prune all
+    /// topics to their groups' committed offsets).
+    pub fn housekeep(self: &Arc<Self>) {
+        let topics: Vec<(Arc<Topic>, Arc<PruneCoordinator>)> = self
+            .topics
+            .lock()
+            .expect("broker topics")
+            .values()
+            .cloned()
+            .collect();
+        for (t, c) in topics {
+            self.io_pool.submit(move || {
+                for p in 0..t.partition_count() {
+                    c.prune(p);
+                }
+            });
+        }
+    }
+
+    /// Wait for queued async work to finish (tests + shutdown).
+    pub fn quiesce(&self) {
+        self.network_pool.wait_idle();
+        self.io_pool.wait_idle();
+    }
+
+    /// Model per-record broker CPU cost. In wall mode this busy-burns (it
+    /// is a *cost*, not a pause); in sim mode it advances virtual time.
+    #[inline]
+    fn burn_overhead(&self, records: u64) {
+        let nanos = self.config.record_overhead_nanos * records;
+        if nanos == 0 {
+            return;
+        }
+        if self.clock.is_virtual() {
+            self.clock.sleep_micros(nanos / 1_000);
+        } else {
+            let start = std::time::Instant::now();
+            while (std::time::Instant::now() - start).as_nanos() < nanos as u128 {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    pub fn stats(&self) -> BrokerStats {
+        let topics = self.topics.lock().expect("broker topics");
+        let mut s = BrokerStats {
+            topics: topics.len(),
+            ..Default::default()
+        };
+        for (t, _) in topics.values() {
+            s.records_appended += t.total_appended();
+            s.bytes_appended += t.total_bytes();
+            s.backlog += t.total_lag();
+        }
+        s
+    }
+
+    /// Close every topic (producers error, consumers drain).
+    pub fn shutdown(&self) {
+        for (t, _) in self.topics.lock().expect("broker topics").values() {
+            t.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock;
+
+    fn broker() -> Arc<Broker> {
+        Broker::new(BrokerConfig::default(), clock::wall())
+    }
+
+    fn rec(key: u32) -> Record {
+        Record::new(key, vec![0u8; 27], 0)
+    }
+
+    #[test]
+    fn create_topic_is_idempotent() {
+        let b = broker();
+        let t1 = b.create_topic("in");
+        let t2 = b.create_topic("in");
+        assert!(Arc::ptr_eq(&t1, &t2));
+        assert_eq!(t1.partition_count(), 4);
+    }
+
+    #[test]
+    fn produce_and_consume_roundtrip() {
+        let b = broker();
+        let t = b.create_topic("in");
+        let g = b.subscribe("in", "engine", 1);
+        for k in 0..50 {
+            b.produce(&t, rec(k)).unwrap();
+        }
+        let mut n = 0;
+        while let Ok(Some(batch)) = g.poll(0, 16) {
+            n += batch.records.len();
+            g.commit(batch.partition, batch.next_offset);
+        }
+        assert_eq!(n, 50);
+        let s = b.stats();
+        assert_eq!(s.records_appended, 50);
+        assert_eq!(s.bytes_appended, 50 * 27);
+        assert_eq!(s.backlog, 0);
+    }
+
+    #[test]
+    fn produce_batch_appends_everything() {
+        let b = broker();
+        let t = b.create_topic("in");
+        let records: Vec<Record> = (0..500).map(rec).collect();
+        assert_eq!(b.produce_batch(&t, records).unwrap(), 500);
+        assert_eq!(t.total_appended(), 500);
+    }
+
+    #[test]
+    fn async_produce_lands_after_quiesce() {
+        let b = broker();
+        let t = b.create_topic("in");
+        for k in 0..20 {
+            b.produce_async(t.clone(), rec(k));
+        }
+        b.quiesce();
+        assert_eq!(t.total_appended(), 20);
+    }
+
+    #[test]
+    fn append_ts_is_stamped_by_broker_clock() {
+        let b = broker();
+        let t = b.create_topic("in");
+        b.produce(&t, rec(1)).unwrap();
+        let g = b.subscribe("in", "g", 1);
+        let batch = g.poll(0, 1).unwrap().unwrap();
+        assert!(batch.records[0].append_ts_micros > 0);
+    }
+
+    #[test]
+    fn record_overhead_advances_sim_clock() {
+        let c = clock::sim();
+        let b = Broker::new(
+            BrokerConfig {
+                record_overhead_nanos: 2_000, // 2us per record
+                ..Default::default()
+            },
+            c.clone(),
+        );
+        let t = b.create_topic("in");
+        let records: Vec<Record> = (0..1000).map(rec).collect();
+        b.produce_batch(&t, records).unwrap();
+        assert_eq!(c.now_micros(), 2_000);
+    }
+
+    #[test]
+    fn shutdown_propagates_to_producers() {
+        let b = broker();
+        let t = b.create_topic("in");
+        b.shutdown();
+        assert!(b.produce(&t, rec(0)).is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! In-process message broker substrate (the paper's Apache Kafka role).
+//!
+//! The benchmark uses Kafka purely as a decoupling queue: the workload
+//! generator produces to an *ingestion* topic, the engine consumes it and
+//! produces results to an *egestion* topic (paper Fig. 4).  This substrate
+//! reproduces the mechanisms that matter for the measurements:
+//!
+//! * topics split into **partitions** (the parallelism unit, Sec. 4 uses 4),
+//! * partitions are bounded segmented logs — a full partition **blocks the
+//!   producer**, which is the backpressure signal that shapes Fig. 6's
+//!   latency curve,
+//! * **consumer groups** with per-partition offsets and rebalancing,
+//! * configurable **I/O and network thread pools** mirroring the paper's
+//!   Kafka tuning ("20 threads for I/O and 10 threads for network"),
+//! * per-record timestamps so broker latency (append → poll) is measurable.
+//!
+//! Modules: [`record`], [`partition`], [`topic`], [`core`] (the broker
+//! facade), [`consumer`].
+
+pub mod consumer;
+pub mod core;
+pub mod partition;
+pub mod record;
+pub mod topic;
+
+pub use consumer::{ConsumerGroup, PolledBatch};
+pub use core::{Broker, BrokerConfig, BrokerStats};
+pub use record::Record;
+pub use topic::Topic;

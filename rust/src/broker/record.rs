@@ -1,0 +1,103 @@
+//! Broker record: key + payload view + timestamps.
+//!
+//! Payload storage is a shared `Arc<[u8]>` plus an `(offset, len)` view:
+//! producers serialize a whole chunk into one arena allocation and carve
+//! per-record views out of it (one allocation per *chunk*, not per
+//! event — EXPERIMENTS.md §Perf), while fan-out to multiple consumer
+//! groups still only clones pointers.
+
+use std::sync::Arc;
+
+/// One record in a partition log.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// Partitioning key (sensor id for the default workload).
+    pub key: u32,
+    data: Arc<[u8]>,
+    off: u32,
+    len: u32,
+    /// Time the event was *generated* (drives end-to-end latency).
+    pub gen_ts_micros: u64,
+    /// Time the broker appended it (drives broker latency); set on append.
+    pub append_ts_micros: u64,
+}
+
+impl Record {
+    /// Standalone record owning its own allocation.
+    pub fn new(key: u32, payload: impl Into<Arc<[u8]>>, gen_ts_micros: u64) -> Self {
+        let data: Arc<[u8]> = payload.into();
+        let len = data.len() as u32;
+        Self {
+            key,
+            data,
+            off: 0,
+            len,
+            gen_ts_micros,
+            append_ts_micros: 0,
+        }
+    }
+
+    /// A view into a shared arena (chunked producer path).
+    pub fn from_arena(
+        key: u32,
+        arena: Arc<[u8]>,
+        off: usize,
+        len: usize,
+        gen_ts_micros: u64,
+    ) -> Self {
+        debug_assert!(off + len <= arena.len());
+        Self {
+            key,
+            data: arena,
+            off: off as u32,
+            len: len as u32,
+            gen_ts_micros,
+            append_ts_micros: 0,
+        }
+    }
+
+    #[inline]
+    pub fn payload(&self) -> &[u8] {
+        &self.data[self.off as usize..(self.off + self.len) as usize]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when two records share the same backing allocation.
+    pub fn shares_storage_with(&self, other: &Record) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fanout_shares_payload() {
+        let r = Record::new(7, vec![1u8, 2, 3], 100);
+        let r2 = r.clone();
+        assert!(r.shares_storage_with(&r2));
+        assert_eq!(r2.len(), 3);
+        assert_eq!(r2.key, 7);
+        assert_eq!(r2.payload(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn arena_views_are_disjoint_but_shared() {
+        let arena: Arc<[u8]> = vec![9u8, 8, 7, 6, 5, 4].into();
+        let a = Record::from_arena(1, arena.clone(), 0, 3, 10);
+        let b = Record::from_arena(2, arena, 3, 3, 11);
+        assert_eq!(a.payload(), &[9, 8, 7]);
+        assert_eq!(b.payload(), &[6, 5, 4]);
+        assert!(a.shares_storage_with(&b));
+        assert_eq!(a.len(), 3);
+    }
+}

@@ -1,0 +1,117 @@
+//! Topic: a named set of partitions plus the partitioning function.
+
+use std::sync::Arc;
+
+use super::partition::{Partition, PartitionClosed};
+use super::record::Record;
+
+/// A named topic with `n` partitions.
+pub struct Topic {
+    pub name: String,
+    partitions: Vec<Arc<Partition>>,
+}
+
+impl Topic {
+    pub fn new(name: &str, partitions: u32, capacity_per_partition: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            partitions: (0..partitions)
+                .map(|_| Arc::new(Partition::new(capacity_per_partition)))
+                .collect(),
+        }
+    }
+
+    pub fn partition_count(&self) -> u32 {
+        self.partitions.len() as u32
+    }
+
+    pub fn partition(&self, idx: u32) -> &Arc<Partition> {
+        &self.partitions[idx as usize]
+    }
+
+    /// Key → partition routing (Kafka's default: hash of key mod n).
+    /// Fibonacci hashing spreads dense sensor-id keyspaces evenly.
+    #[inline]
+    pub fn partition_for_key(&self, key: u32) -> u32 {
+        let h = (key as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h >> 33) as u32 % self.partition_count()
+    }
+
+    /// Append via key routing.
+    pub fn produce(&self, record: Record, now_micros: u64) -> Result<u64, PartitionClosed> {
+        let p = self.partition_for_key(record.key);
+        self.partitions[p as usize].append(record, now_micros)
+    }
+
+    /// Total records appended across partitions (high watermark sum).
+    pub fn total_appended(&self) -> u64 {
+        self.partitions.iter().map(|p| p.high_watermark()).sum()
+    }
+
+    /// Total bytes appended across partitions.
+    pub fn total_bytes(&self) -> u64 {
+        self.partitions.iter().map(|p| p.appended_bytes()).sum()
+    }
+
+    /// Total retained records (backlog) across partitions.
+    pub fn total_lag(&self) -> u64 {
+        self.partitions.iter().map(|p| p.lag()).sum()
+    }
+
+    pub fn close(&self) {
+        for p in &self.partitions {
+            p.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        let t = Topic::new("in", 4, 1024);
+        for key in 0..1000u32 {
+            let p1 = t.partition_for_key(key);
+            let p2 = t.partition_for_key(key);
+            assert_eq!(p1, p2);
+            assert!(p1 < 4);
+        }
+    }
+
+    #[test]
+    fn routing_spreads_dense_keys() {
+        let t = Topic::new("in", 4, 1024);
+        let mut counts = [0usize; 4];
+        for key in 0..4096u32 {
+            counts[t.partition_for_key(key) as usize] += 1;
+        }
+        for &c in &counts {
+            // Each partition should get 25% ± 10% of a dense keyspace.
+            assert!((c as f64 - 1024.0).abs() < 410.0, "skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn produce_routes_same_key_to_same_partition() {
+        let t = Topic::new("in", 4, 1024);
+        for i in 0..10 {
+            t.produce(Record::new(77, vec![0u8; 27], i), i).unwrap();
+        }
+        let p = t.partition_for_key(77);
+        assert_eq!(t.partition(p).high_watermark(), 10);
+        assert_eq!(t.total_appended(), 10);
+    }
+
+    #[test]
+    fn totals_aggregate_partitions() {
+        let t = Topic::new("in", 2, 1024);
+        for key in 0..100u32 {
+            t.produce(Record::new(key, vec![0u8; 27], 0), 0).unwrap();
+        }
+        assert_eq!(t.total_appended(), 100);
+        assert_eq!(t.total_bytes(), 2700);
+        assert_eq!(t.total_lag(), 100);
+    }
+}

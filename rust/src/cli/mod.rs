@@ -1,0 +1,399 @@
+//! Command-line interface (hand-rolled; clap is not vendored offline).
+//!
+//! The paper's CLI orchestrates "all components, setting up frameworks,
+//! compiling the resources and performing the benchmarks", on local
+//! machines and SLURM clusters, interactive and batch (Sec. 3).
+//!
+//! ```text
+//! sprobench run      --config <file> [--experiment <name>] [--out <dir>]
+//! sprobench sbatch   --config <file> [--simulate] [--chain]
+//! sprobench report   --run <dir>
+//! sprobench baselines [--events <n>]
+//! sprobench list     --config <file>
+//! sprobench version | help
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{self, ExecMode, Experiment};
+use crate::coordinator::{run_wall, simrun};
+use crate::postprocess::{ascii_table, validate_results};
+use crate::runtime::RuntimeFactory;
+use crate::slurm::{ClusterSpec, Scheduler};
+use crate::util::json::{self, Json};
+use crate::util::units::{fmt_count, fmt_micros, fmt_rate_bytes};
+use crate::workflow::WorkflowManager;
+
+/// Entry point; returns the process exit code.
+pub fn main() -> i32 {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// Parsed flag set: `--key value` pairs + bare flags.
+struct Flags {
+    pairs: Vec<(String, String)>,
+    bare: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut pairs = Vec::new();
+        let mut bare = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    pairs.push((key.to_string(), args[i + 1].clone()));
+                    i += 2;
+                } else {
+                    bare.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bare.push(a.clone());
+                i += 1;
+            }
+        }
+        Flags { pairs, bare }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.bare.iter().any(|b| b == key)
+    }
+}
+
+pub fn dispatch(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..]);
+    match cmd {
+        "run" => cmd_run(&flags),
+        "sbatch" => cmd_sbatch(&flags),
+        "report" => cmd_report(&flags),
+        "baselines" => cmd_baselines(&flags),
+        "list" => cmd_list(&flags),
+        "version" => {
+            println!("sprobench {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", usage())),
+    }
+}
+
+fn usage() -> &'static str {
+    "SProBench — stream processing benchmark for HPC infrastructure
+
+USAGE:
+  sprobench run       --config <file> [--experiment <name>] [--out <dir>]
+  sprobench sbatch    --config <file> [--simulate] [--chain]
+  sprobench report    --run <dir>
+  sprobench baselines [--events <n>]
+  sprobench list      --config <file>
+  sprobench version | help
+
+The config file is the single master control point (YAML); its
+`experiments:` list expands into one run per entry."
+}
+
+fn load_experiments(flags: &Flags) -> Result<Vec<Experiment>, String> {
+    let path = flags.get("config").ok_or("--config <file> is required")?;
+    let mut exps = config::load_file(Path::new(path))?;
+    if let Some(name) = flags.get("experiment") {
+        exps.retain(|e| e.name == name);
+        if exps.is_empty() {
+            return Err(format!("no experiment named '{name}' in {path}"));
+        }
+    }
+    Ok(exps)
+}
+
+fn cmd_run(flags: &Flags) -> Result<(), String> {
+    let exps = load_experiments(flags)?;
+    let out_dir = PathBuf::from(flags.get("out").unwrap_or("runs"));
+    let wm = WorkflowManager::new(&out_dir);
+    let rtf = RuntimeFactory::default_dir();
+    let outcomes = wm.run_all(&exps, |exp, dir| {
+        dir.step(&format!(
+            "mode={:?} pipeline={} parallelism={}",
+            exp.config.bench.mode,
+            exp.config.engine.pipeline.name(),
+            exp.config.engine.parallelism
+        ));
+        let (summary, store) = match exp.config.bench.mode {
+            ExecMode::Wall => run_wall(
+                &exp.config,
+                if exp.config.engine.use_hlo {
+                    Some(rtf.clone())
+                } else {
+                    None
+                },
+            )?,
+            ExecMode::Sim => simrun::run_sim(&exp.config, &simrun::SimModel::default()),
+        };
+        dir.step("exporting metrics");
+        std::fs::write(dir.metrics_dir().join("series.json"), store.to_json().to_pretty())
+            .map_err(|e| format!("write metrics: {e}"))?;
+        let results = summary.to_json();
+        let violations = validate_results(&results);
+        if !violations.is_empty() {
+            dir.step(&format!("VALIDATION FAILED: {violations:?}"));
+            return Err(format!("{}: validation failed: {violations:?}", exp.name));
+        }
+        dir.step("validation passed");
+        print_summary(&summary);
+        Ok(results)
+    })?;
+    println!("\n{} run(s) complete; results under {}", outcomes.len(), out_dir.display());
+    Ok(())
+}
+
+fn print_summary(s: &crate::coordinator::RunSummary) {
+    use crate::metrics::MeasurementPoint as P;
+    let lat = |p: P| {
+        s.latency_at(p)
+            .filter(|h| h.count > 0)
+            .map(|h| format!("p50 {} p99 {}", fmt_micros(h.p50), fmt_micros(h.p99)))
+            .unwrap_or_else(|| "-".into())
+    };
+    let rows = vec![
+        vec!["experiment".into(), s.name.clone()],
+        vec![
+            "pipeline / framework".into(),
+            format!("{} / {} (P={})", s.pipeline, s.framework, s.parallelism),
+        ],
+        vec![
+            "events gen/proc/emit".into(),
+            format!("{} / {} / {}", s.generated, s.processed, s.emitted),
+        ],
+        vec![
+            "offered throughput".into(),
+            format!(
+                "{} ev/s ({})",
+                fmt_count(s.offered_rate),
+                fmt_rate_bytes(s.offered_bytes_rate)
+            ),
+        ],
+        vec![
+            "processed throughput".into(),
+            format!("{} ev/s", fmt_count(s.processed_rate)),
+        ],
+        vec!["e2e latency".into(), lat(P::EndToEnd)],
+        vec!["processing latency".into(), lat(P::ProcOut)],
+        vec![
+            "GC young (count/time)".into(),
+            format!("{} / {:.1}ms", s.gc_young_count, s.gc_young_time_micros as f64 / 1e3),
+        ],
+        vec!["energy".into(), format!("{:.1} J", s.energy_joules)],
+    ];
+    println!("{}", ascii_table(&["metric", "value"], &rows));
+}
+
+fn cmd_sbatch(flags: &Flags) -> Result<(), String> {
+    let exps = load_experiments(flags)?;
+    let config_path = flags.get("config").expect("checked in load_experiments");
+    for exp in &exps {
+        println!("# ---- {} ----", exp.name);
+        println!("{}", crate::slurm::sbatch_script(&exp.config, config_path));
+    }
+    if flags.has("simulate") {
+        let mut sched = Scheduler::new(ClusterSpec::default());
+        let wm = WorkflowManager::new("runs");
+        let ids = wm.submit_batch(&exps, &mut sched, flags.has("chain"), |e| {
+            e.config.bench.duration_micros + e.config.bench.warmup_micros
+        });
+        let makespan = sched.run_to_completion();
+        let rows: Vec<Vec<String>> = ids
+            .iter()
+            .map(|&id| {
+                let j = sched.job(id).expect("job exists");
+                vec![
+                    j.request.name.clone(),
+                    format!("{:?}", j.state),
+                    fmt_micros(j.wait_micros().unwrap_or(0)),
+                    fmt_micros(j.end_micros.unwrap_or(0).saturating_sub(j.start_micros.unwrap_or(0))),
+                    format!("{}", j.allocated_nodes.len()),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            ascii_table(&["job", "state", "wait", "runtime", "nodes"], &rows)
+        );
+        println!("simulated makespan: {}", fmt_micros(makespan));
+        let st = sched.stats();
+        println!(
+            "scheduler: {} submitted, {} completed, {} backfilled, utilization {:.1}%",
+            st.submitted,
+            st.completed,
+            st.backfilled,
+            st.utilization * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(flags: &Flags) -> Result<(), String> {
+    let run_dir = PathBuf::from(flags.get("run").ok_or("--run <dir> is required")?);
+    let results_path = run_dir.join("results.json");
+    let text = std::fs::read_to_string(&results_path)
+        .map_err(|e| format!("cannot read {}: {e}", results_path.display()))?;
+    let results = json::parse(&text).map_err(|e| e.to_string())?;
+    let violations = validate_results(&results);
+    let mut rows = Vec::new();
+    flatten_json("", &results, &mut rows);
+    println!("{}", ascii_table(&["field", "value"], &rows));
+    if violations.is_empty() {
+        println!("validation: OK");
+        Ok(())
+    } else {
+        for v in &violations {
+            println!("validation FAILED [{}]: {}", v.check, v.detail);
+        }
+        Err("validation failed".into())
+    }
+}
+
+fn flatten_json(prefix: &str, j: &Json, rows: &mut Vec<Vec<String>>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let key = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten_json(&key, v, rows);
+            }
+        }
+        other => rows.push(vec![prefix.to_string(), other.to_string()]),
+    }
+}
+
+fn cmd_baselines(flags: &Flags) -> Result<(), String> {
+    let events: u64 = flags
+        .get("events")
+        .map(|v| crate::util::units::parse_count(v))
+        .transpose()?
+        .unwrap_or(50_000);
+    let clk = crate::util::clock::wall();
+    let mut rows = Vec::new();
+    for spec in crate::baselines::all_baselines() {
+        let r = crate::baselines::run_baseline(&spec, events, 3_000_000, &clk);
+        rows.push(vec![
+            spec.name.to_string(),
+            fmt_count(spec.doc_rate),
+            fmt_count(r.rate),
+        ]);
+    }
+    let sp = crate::baselines::run_sprobench_generator(events.max(200_000), 27, &clk);
+    rows.push(vec![
+        "SProBench (1 inst)".into(),
+        fmt_count(500_000.0),
+        fmt_count(sp.rate),
+    ]);
+    println!(
+        "{}",
+        ascii_table(&["suite", "documented max", "measured here"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_list(flags: &Flags) -> Result<(), String> {
+    let exps = load_experiments(flags)?;
+    let rows: Vec<Vec<String>> = exps
+        .iter()
+        .map(|e| {
+            vec![
+                e.name.clone(),
+                format!("{:?}", e.config.bench.mode),
+                e.config.engine.pipeline.name().to_string(),
+                e.config.engine.parallelism.to_string(),
+                fmt_count(e.config.workload.rate as f64),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        ascii_table(&["experiment", "mode", "pipeline", "par", "rate"], &rows)
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parse_pairs_and_bare() {
+        let args: Vec<String> = ["--config", "x.yaml", "--simulate", "--out", "dir"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = Flags::parse(&args);
+        assert_eq!(f.get("config"), Some("x.yaml"));
+        assert_eq!(f.get("out"), Some("dir"));
+        assert!(f.has("simulate"));
+        assert!(!f.has("chain"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let err = dispatch(&["frobnicate".to_string()]).unwrap_err();
+        assert!(err.contains("unknown command"));
+    }
+
+    #[test]
+    fn version_and_help_work() {
+        dispatch(&["version".to_string()]).unwrap();
+        dispatch(&["help".to_string()]).unwrap();
+        dispatch(&[]).unwrap();
+    }
+
+    #[test]
+    fn run_requires_config() {
+        let err = dispatch(&["run".to_string()]).unwrap_err();
+        assert!(err.contains("--config"));
+    }
+
+    #[test]
+    fn list_and_sbatch_from_a_real_config() {
+        let dir = std::env::temp_dir().join(format!("sprobench-cli-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("bench.yaml");
+        std::fs::write(
+            &cfg,
+            "benchmark:\n  name: clitest\nworkload:\n  rate: 100K\nexperiments:\n  - name: a\n    engine.parallelism: 2\n  - name: b\n    engine.parallelism: 4\n",
+        )
+        .unwrap();
+        dispatch(&["list".into(), "--config".into(), cfg.display().to_string()]).unwrap();
+        dispatch(&[
+            "sbatch".into(),
+            "--config".into(),
+            cfg.display().to_string(),
+            "--simulate".into(),
+        ])
+        .unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

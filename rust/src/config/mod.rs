@@ -1,0 +1,187 @@
+//! Configuration system: one master file controls every component.
+//!
+//! * [`yaml`] — indentation-based YAML-subset parser (offline substrate).
+//! * [`schema`] — typed [`BenchConfig`] with defaults + validation.
+//! * [`overlay`]/[`expand_experiments`] — the paper's multi-experiment
+//!   feature: the `experiments:` list applies dotted-key overrides to the
+//!   base document, yielding one resolved config per experiment from a
+//!   single file (paper Sec. 3.1: "multiple experiments ... from a single
+//!   configuration file").
+
+pub mod schema;
+pub mod yaml;
+
+pub use schema::{BenchConfig, ConfigError, ExecMode, Framework, Pattern, PipelineKind};
+
+use crate::util::json::Json;
+
+/// Apply a dotted-key override (`"engine.parallelism" = 8`) onto a tree.
+pub fn overlay(base: &mut Json, dotted_key: &str, value: Json) {
+    let parts: Vec<&str> = dotted_key.split('.').collect();
+    let mut cur = base;
+    for (i, part) in parts.iter().enumerate() {
+        if i + 1 == parts.len() {
+            if let Json::Obj(m) = cur {
+                m.insert(part.to_string(), value);
+            }
+            return;
+        }
+        if let Json::Obj(m) = cur {
+            cur = m.entry(part.to_string()).or_insert_with(Json::obj);
+            if !matches!(cur, Json::Obj(_)) {
+                *cur = Json::obj();
+            }
+        } else {
+            return;
+        }
+    }
+}
+
+/// One named, fully-resolved experiment.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub name: String,
+    pub config: BenchConfig,
+    /// The resolved document (for traceability logging in the run dir).
+    pub resolved: Json,
+}
+
+/// Expand the `experiments:` list of a master document into resolved
+/// configs.  Without an `experiments:` list the document itself is the
+/// single experiment.
+pub fn expand_experiments(doc: &Json) -> Result<Vec<Experiment>, ConfigError> {
+    let base_name = doc
+        .path(&["benchmark", "name"])
+        .and_then(|v| v.as_str())
+        .unwrap_or("bench")
+        .to_string();
+
+    let Some(list) = doc.get("experiments").and_then(|e| e.as_arr()) else {
+        let config = BenchConfig::from_json(doc)?;
+        return Ok(vec![Experiment {
+            name: base_name,
+            config,
+            resolved: doc.clone(),
+        }]);
+    };
+
+    let mut out = Vec::with_capacity(list.len());
+    for (i, exp) in list.iter().enumerate() {
+        let mut resolved = doc.clone();
+        if let Json::Obj(m) = &mut resolved {
+            m.remove("experiments");
+        }
+        let mut name = format!("{base_name}-{i}");
+        if let Json::Obj(pairs) = exp {
+            for (k, v) in pairs {
+                if k == "name" {
+                    if let Some(n) = v.as_str() {
+                        name = n.to_string();
+                    }
+                    continue;
+                }
+                overlay(&mut resolved, k, v.clone());
+            }
+        } else {
+            return Err(ConfigError(format!(
+                "experiments[{i}]: expected a mapping of overrides"
+            )));
+        }
+        overlay(&mut resolved, "benchmark.name", Json::Str(name.clone()));
+        let config = BenchConfig::from_json(&resolved)?;
+        out.push(Experiment {
+            name,
+            config,
+            resolved,
+        });
+    }
+    Ok(out)
+}
+
+/// Load a config file (YAML subset) and expand its experiments.
+pub fn load_file(path: &std::path::Path) -> Result<Vec<Experiment>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    let doc = yaml::parse(&text).map_err(|e| e.to_string())?;
+    expand_experiments(&doc).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config as PtConfig};
+
+    #[test]
+    fn overlay_nested_creates_path() {
+        let mut j = Json::obj();
+        overlay(&mut j, "a.b.c", Json::Int(5));
+        assert_eq!(j.path(&["a", "b", "c"]).unwrap().as_i64(), Some(5));
+    }
+
+    #[test]
+    fn overlay_replaces_existing() {
+        let mut j = yaml::parse("engine:\n  parallelism: 4\n").unwrap();
+        overlay(&mut j, "engine.parallelism", Json::Int(16));
+        assert_eq!(j.path(&["engine", "parallelism"]).unwrap().as_i64(), Some(16));
+    }
+
+    #[test]
+    fn single_experiment_without_list() {
+        let doc = yaml::parse("benchmark:\n  name: solo\n").unwrap();
+        let exps = expand_experiments(&doc).unwrap();
+        assert_eq!(exps.len(), 1);
+        assert_eq!(exps[0].name, "solo");
+    }
+
+    #[test]
+    fn matrix_expansion_applies_overrides() {
+        let doc = yaml::parse(
+            "
+benchmark:
+  name: sweep
+engine:
+  parallelism: 1
+experiments:
+  - name: p2
+    engine.parallelism: 2
+  - name: p8
+    engine.parallelism: 8
+    workload.rate: 1M
+",
+        )
+        .unwrap();
+        let exps = expand_experiments(&doc).unwrap();
+        assert_eq!(exps.len(), 2);
+        assert_eq!(exps[0].name, "p2");
+        assert_eq!(exps[0].config.engine.parallelism, 2);
+        assert_eq!(exps[1].config.engine.parallelism, 8);
+        assert_eq!(exps[1].config.workload.rate, 1_000_000);
+        // Base doc untouched between expansions.
+        assert_eq!(exps[0].config.workload.rate, 100_000);
+    }
+
+    #[test]
+    fn invalid_override_is_reported() {
+        let doc = yaml::parse("experiments:\n  - name: bad\n    workload.event_bytes: 5\n").unwrap();
+        assert!(expand_experiments(&doc).is_err());
+    }
+
+    #[test]
+    fn prop_overlay_then_read_roundtrips() {
+        check(PtConfig::default().cases(100), "overlay-roundtrip", |g| {
+            let depth = g.usize(1..4);
+            let segs: Vec<String> = (0..depth)
+                .map(|i| format!("k{}_{}", i, g.u64(0..5)))
+                .collect();
+            let key = segs.join(".");
+            let val = g.i64(-1000..1000);
+            let mut doc = Json::obj();
+            overlay(&mut doc, &key, Json::Int(val));
+            let path: Vec<&str> = segs.iter().map(|s| s.as_str()).collect();
+            match doc.path(&path).and_then(|v| v.as_i64()) {
+                Some(got) if got == val => Ok(()),
+                other => Err(format!("key {key}: wrote {val}, read {other:?}")),
+            }
+        });
+    }
+}

@@ -1,0 +1,587 @@
+//! Typed configuration schema with defaults and validation.
+//!
+//! One `BenchConfig` drives every component (paper Sec. 3: the master
+//! config is the only manual step).  All quantities accept human units
+//! ("500K", "27B", "30s") via [`crate::util::units`].
+
+use crate::util::json::Json;
+use crate::util::units::{parse_bytes, parse_count, parse_duration_micros};
+
+/// Execution mode: real threads + real time, or discrete-event virtual time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Wall,
+    Sim,
+}
+
+/// Workload generation pattern (paper Sec. 3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    Constant,
+    Random,
+    Burst,
+}
+
+/// Stream-processing framework personality (paper Sec. 3: Flink, Spark
+/// Streaming and Kafka Streams are fully integrated).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Framework {
+    Flink,
+    Spark,
+    KStreams,
+}
+
+/// Processing pipeline class (paper Sec. 3.3) plus the fused extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineKind {
+    PassThrough,
+    CpuIntensive,
+    MemIntensive,
+    Fused,
+}
+
+impl PipelineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineKind::PassThrough => "passthrough",
+            PipelineKind::CpuIntensive => "cpu",
+            PipelineKind::MemIntensive => "mem",
+            PipelineKind::Fused => "fused",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchSection {
+    pub name: String,
+    pub seed: u64,
+    pub mode: ExecMode,
+    pub duration_micros: u64,
+    pub warmup_micros: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RandomPattern {
+    pub min_rate: u64,
+    pub max_rate: u64,
+    pub min_pause_micros: u64,
+    pub max_pause_micros: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct BurstPattern {
+    pub interval_micros: u64,
+    pub burst_rate: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadSection {
+    pub pattern: Pattern,
+    /// Total offered load, events/second, across all generator instances.
+    pub rate: u64,
+    /// Serialized event size; paper minimum is 27 bytes.
+    pub event_bytes: usize,
+    /// Number of distinct sensor ids (keyed-state width K).
+    pub sensors: u32,
+    /// Zipf exponent for key skew; 0 = uniform.
+    pub key_skew: f64,
+    pub random: RandomPattern,
+    pub burst: BurstPattern,
+}
+
+#[derive(Clone, Debug)]
+pub struct GeneratorSection {
+    /// Rated capacity of one generator instance (events/s); the paper's
+    /// generator does ~500K ev/s per instance and auto-scales instances.
+    pub instance_capacity: u64,
+    pub max_instances: u32,
+    pub heap_bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct BrokerSection {
+    pub partitions: u32,
+    pub io_threads: u32,
+    pub network_threads: u32,
+    /// Per-partition bounded queue depth (records) — the backpressure knob.
+    pub queue_depth: usize,
+    pub heap_bytes: u64,
+    /// Simulated per-record broker overhead (wall mode), microseconds.
+    pub record_overhead_nanos: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineSection {
+    pub framework: Framework,
+    pub pipeline: PipelineKind,
+    pub parallelism: u32,
+    pub batch_size: usize,
+    pub window_micros: u64,
+    pub slide_micros: u64,
+    pub threshold_f: f32,
+    /// Execute pipeline compute through the AOT HLO artifacts (default) or
+    /// through the native Rust reference ops (ablation baseline).
+    pub use_hlo: bool,
+    /// Micro-batch interval for the Spark personality.
+    pub microbatch_micros: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSection {
+    pub sample_interval_micros: u64,
+    pub out_dir: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct SlurmSection {
+    pub enabled: bool,
+    pub nodes: u32,
+    pub cpus_per_task: u32,
+    pub mem_bytes: u64,
+    pub time_limit_micros: u64,
+    pub partition: String,
+}
+
+/// The master configuration: one file controls every component.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub bench: BenchSection,
+    pub workload: WorkloadSection,
+    pub generators: GeneratorSection,
+    pub broker: BrokerSection,
+    pub engine: EngineSection,
+    pub metrics: MetricsSection,
+    pub slurm: SlurmSection,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            bench: BenchSection {
+                name: "bench".into(),
+                seed: 42,
+                mode: ExecMode::Wall,
+                duration_micros: 10_000_000,
+                warmup_micros: 1_000_000,
+            },
+            workload: WorkloadSection {
+                pattern: Pattern::Constant,
+                rate: 100_000,
+                event_bytes: 27,
+                sensors: 1024,
+                key_skew: 0.0,
+                random: RandomPattern {
+                    min_rate: 50_000,
+                    max_rate: 200_000,
+                    min_pause_micros: 1_000,
+                    max_pause_micros: 10_000,
+                },
+                burst: BurstPattern {
+                    interval_micros: 1_000_000,
+                    burst_rate: 1_000_000,
+                },
+            },
+            generators: GeneratorSection {
+                instance_capacity: 500_000,
+                max_instances: 64,
+                heap_bytes: 2_000_000_000,
+            },
+            broker: BrokerSection {
+                partitions: 4,
+                io_threads: 4,
+                network_threads: 2,
+                queue_depth: 65_536,
+                heap_bytes: 5_000_000_000,
+                record_overhead_nanos: 0,
+            },
+            engine: EngineSection {
+                framework: Framework::Flink,
+                pipeline: PipelineKind::CpuIntensive,
+                parallelism: 4,
+                batch_size: 1024,
+                window_micros: 10_000_000,
+                slide_micros: 2_000_000,
+                threshold_f: 80.0,
+                use_hlo: true,
+                microbatch_micros: 100_000,
+            },
+            metrics: MetricsSection {
+                sample_interval_micros: 1_000_000,
+                out_dir: "runs".into(),
+            },
+            slurm: SlurmSection {
+                enabled: false,
+                nodes: 1,
+                cpus_per_task: 16,
+                mem_bytes: 200_000_000_000,
+                time_limit_micros: 1_800_000_000,
+                partition: "barnard".into(),
+            },
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError(msg.into()))
+}
+
+// --- helpers to read Json fields with unit parsing --------------------------
+
+fn get_str(j: &Json, key: &str, default: &str) -> String {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .unwrap_or(default)
+        .to_string()
+}
+
+fn get_u64(j: &Json, key: &str, default: u64) -> Result<u64, ConfigError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Int(i)) if *i >= 0 => Ok(*i as u64),
+        Some(Json::Num(f)) if *f >= 0.0 => Ok(*f as u64),
+        Some(Json::Str(s)) => parse_count(s).map_err(ConfigError),
+        Some(other) => err(format!("field '{key}': expected count, got {other:?}")),
+    }
+}
+
+fn get_bytes(j: &Json, key: &str, default: u64) -> Result<u64, ConfigError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Int(i)) if *i >= 0 => Ok(*i as u64),
+        Some(Json::Str(s)) => parse_bytes(s).map_err(ConfigError),
+        Some(other) => err(format!("field '{key}': expected size, got {other:?}")),
+    }
+}
+
+fn get_duration(j: &Json, key: &str, default: u64) -> Result<u64, ConfigError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Int(i)) if *i >= 0 => Ok(*i as u64 * 1_000_000),
+        Some(Json::Num(f)) if *f >= 0.0 => Ok((*f * 1e6) as u64),
+        Some(Json::Str(s)) => parse_duration_micros(s).map_err(ConfigError),
+        Some(other) => err(format!("field '{key}': expected duration, got {other:?}")),
+    }
+}
+
+fn get_f64(j: &Json, key: &str, default: f64) -> Result<f64, ConfigError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| ConfigError(format!("field '{key}': expected number"))),
+    }
+}
+
+fn get_bool(j: &Json, key: &str, default: bool) -> Result<bool, ConfigError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| ConfigError(format!("field '{key}': expected bool"))),
+    }
+}
+
+fn section<'a>(j: &'a Json, key: &str) -> Json {
+    j.get(key).cloned().unwrap_or_else(Json::obj)
+}
+
+impl BenchConfig {
+    /// Build a config from a parsed YAML/JSON tree, applying defaults.
+    pub fn from_json(root: &Json) -> Result<Self, ConfigError> {
+        let d = BenchConfig::default();
+
+        let b = section(root, "benchmark");
+        let bench = BenchSection {
+            name: get_str(&b, "name", &d.bench.name),
+            seed: get_u64(&b, "seed", d.bench.seed)?,
+            mode: match get_str(&b, "mode", "wall").as_str() {
+                "wall" => ExecMode::Wall,
+                "sim" => ExecMode::Sim,
+                other => return err(format!("benchmark.mode: unknown '{other}'")),
+            },
+            duration_micros: get_duration(&b, "duration", d.bench.duration_micros)?,
+            warmup_micros: get_duration(&b, "warmup", d.bench.warmup_micros)?,
+        };
+
+        let w = section(root, "workload");
+        let rnd = section(&w, "random");
+        let burst = section(&w, "burst");
+        let workload = WorkloadSection {
+            pattern: match get_str(&w, "pattern", "constant").as_str() {
+                "constant" => Pattern::Constant,
+                "random" => Pattern::Random,
+                "burst" => Pattern::Burst,
+                other => return err(format!("workload.pattern: unknown '{other}'")),
+            },
+            rate: get_u64(&w, "rate", d.workload.rate)?,
+            event_bytes: get_bytes(&w, "event_bytes", d.workload.event_bytes as u64)? as usize,
+            sensors: get_u64(&w, "sensors", d.workload.sensors as u64)? as u32,
+            key_skew: get_f64(&w, "key_skew", d.workload.key_skew)?,
+            random: RandomPattern {
+                min_rate: get_u64(&rnd, "min_rate", d.workload.random.min_rate)?,
+                max_rate: get_u64(&rnd, "max_rate", d.workload.random.max_rate)?,
+                min_pause_micros: get_duration(
+                    &rnd,
+                    "min_pause",
+                    d.workload.random.min_pause_micros,
+                )?,
+                max_pause_micros: get_duration(
+                    &rnd,
+                    "max_pause",
+                    d.workload.random.max_pause_micros,
+                )?,
+            },
+            burst: BurstPattern {
+                interval_micros: get_duration(&burst, "interval", d.workload.burst.interval_micros)?,
+                burst_rate: get_u64(&burst, "burst_rate", d.workload.burst.burst_rate)?,
+            },
+        };
+
+        let g = section(root, "generators");
+        let generators = GeneratorSection {
+            instance_capacity: get_u64(&g, "instance_capacity", d.generators.instance_capacity)?,
+            max_instances: get_u64(&g, "max_instances", d.generators.max_instances as u64)? as u32,
+            heap_bytes: get_bytes(&g, "heap", d.generators.heap_bytes)?,
+        };
+
+        let br = section(root, "broker");
+        let broker = BrokerSection {
+            partitions: get_u64(&br, "partitions", d.broker.partitions as u64)? as u32,
+            io_threads: get_u64(&br, "io_threads", d.broker.io_threads as u64)? as u32,
+            network_threads: get_u64(&br, "network_threads", d.broker.network_threads as u64)?
+                as u32,
+            queue_depth: get_u64(&br, "queue_depth", d.broker.queue_depth as u64)? as usize,
+            heap_bytes: get_bytes(&br, "heap", d.broker.heap_bytes)?,
+            record_overhead_nanos: get_u64(
+                &br,
+                "record_overhead_nanos",
+                d.broker.record_overhead_nanos,
+            )?,
+        };
+
+        let e = section(root, "engine");
+        let engine = EngineSection {
+            framework: match get_str(&e, "framework", "flink").as_str() {
+                "flink" => Framework::Flink,
+                "spark" => Framework::Spark,
+                "kstreams" | "kafka-streams" => Framework::KStreams,
+                other => return err(format!("engine.framework: unknown '{other}'")),
+            },
+            pipeline: match get_str(&e, "pipeline", "cpu").as_str() {
+                "passthrough" => PipelineKind::PassThrough,
+                "cpu" => PipelineKind::CpuIntensive,
+                "mem" => PipelineKind::MemIntensive,
+                "fused" => PipelineKind::Fused,
+                other => return err(format!("engine.pipeline: unknown '{other}'")),
+            },
+            parallelism: get_u64(&e, "parallelism", d.engine.parallelism as u64)? as u32,
+            batch_size: get_u64(&e, "batch_size", d.engine.batch_size as u64)? as usize,
+            window_micros: get_duration(&e, "window", d.engine.window_micros)?,
+            slide_micros: get_duration(&e, "slide", d.engine.slide_micros)?,
+            threshold_f: get_f64(&e, "threshold_f", d.engine.threshold_f as f64)? as f32,
+            use_hlo: get_bool(&e, "use_hlo", d.engine.use_hlo)?,
+            microbatch_micros: get_duration(&e, "microbatch", d.engine.microbatch_micros)?,
+        };
+
+        let m = section(root, "metrics");
+        let metrics = MetricsSection {
+            sample_interval_micros: get_duration(
+                &m,
+                "sample_interval",
+                d.metrics.sample_interval_micros,
+            )?,
+            out_dir: get_str(&m, "out_dir", &d.metrics.out_dir),
+        };
+
+        let s = section(root, "slurm");
+        let slurm = SlurmSection {
+            enabled: get_bool(&s, "enabled", d.slurm.enabled)?,
+            nodes: get_u64(&s, "nodes", d.slurm.nodes as u64)? as u32,
+            cpus_per_task: get_u64(&s, "cpus_per_task", d.slurm.cpus_per_task as u64)? as u32,
+            mem_bytes: get_bytes(&s, "mem", d.slurm.mem_bytes)?,
+            time_limit_micros: get_duration(&s, "time_limit", d.slurm.time_limit_micros)?,
+            partition: get_str(&s, "partition", &d.slurm.partition),
+        };
+
+        let cfg = Self {
+            bench,
+            workload,
+            generators,
+            broker,
+            engine,
+            metrics,
+            slurm,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation. Called by `from_json`; public for tests.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.workload.event_bytes < 27 {
+            return err(format!(
+                "workload.event_bytes: minimum event size is 27 bytes (got {})",
+                self.workload.event_bytes
+            ));
+        }
+        if self.workload.rate == 0 {
+            return err("workload.rate must be > 0");
+        }
+        if self.workload.sensors == 0 {
+            return err("workload.sensors must be > 0");
+        }
+        if self.broker.partitions == 0 {
+            return err("broker.partitions must be > 0");
+        }
+        if self.engine.parallelism == 0 {
+            return err("engine.parallelism must be > 0");
+        }
+        if self.engine.batch_size == 0 {
+            return err("engine.batch_size must be > 0");
+        }
+        if self.generators.instance_capacity == 0 {
+            return err("generators.instance_capacity must be > 0");
+        }
+        if self.workload.pattern == Pattern::Random
+            && self.workload.random.min_rate > self.workload.random.max_rate
+        {
+            return err("workload.random: min_rate > max_rate");
+        }
+        if self.workload.pattern == Pattern::Random
+            && self.workload.random.min_pause_micros > self.workload.random.max_pause_micros
+        {
+            return err("workload.random: min_pause > max_pause");
+        }
+        if self.engine.slide_micros > self.engine.window_micros {
+            return err("engine.slide must be <= engine.window");
+        }
+        let needed =
+            (self.workload.rate + self.generators.instance_capacity - 1) / self.generators.instance_capacity;
+        if needed > self.generators.max_instances as u64 {
+            return err(format!(
+                "workload.rate {} requires {} generator instances (capacity {}), but generators.max_instances is {}",
+                self.workload.rate, needed, self.generators.instance_capacity, self.generators.max_instances
+            ));
+        }
+        Ok(())
+    }
+
+    /// Number of generator instances auto-scaled from the requested load
+    /// (paper Sec. 3.2: "automatically adjusts the number of generators").
+    pub fn generator_instances(&self) -> u32 {
+        ((self.workload.rate + self.generators.instance_capacity - 1)
+            / self.generators.instance_capacity) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::yaml;
+
+    #[test]
+    fn defaults_validate() {
+        BenchConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_empty_json_is_default_like() {
+        let cfg = BenchConfig::from_json(&Json::obj()).unwrap();
+        assert_eq!(cfg.workload.event_bytes, 27);
+        assert_eq!(cfg.engine.parallelism, 4);
+        assert_eq!(cfg.bench.mode, ExecMode::Wall);
+    }
+
+    #[test]
+    fn full_yaml_roundtrip() {
+        let y = "
+benchmark:
+  name: exp1
+  seed: 7
+  mode: sim
+  duration: 30s
+workload:
+  pattern: burst
+  rate: 8M
+  event_bytes: 64B
+  sensors: 2048
+  burst:
+    interval: 500ms
+    burst_rate: 2M
+engine:
+  framework: spark
+  pipeline: mem
+  parallelism: 16
+  batch_size: 4096
+slurm:
+  enabled: true
+  nodes: 4
+  mem: 200GB
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert_eq!(cfg.bench.name, "exp1");
+        assert_eq!(cfg.bench.mode, ExecMode::Sim);
+        assert_eq!(cfg.bench.duration_micros, 30_000_000);
+        assert_eq!(cfg.workload.pattern, Pattern::Burst);
+        assert_eq!(cfg.workload.rate, 8_000_000);
+        assert_eq!(cfg.workload.event_bytes, 64);
+        assert_eq!(cfg.workload.burst.interval_micros, 500_000);
+        assert_eq!(cfg.engine.framework, Framework::Spark);
+        assert_eq!(cfg.engine.pipeline, PipelineKind::MemIntensive);
+        assert_eq!(cfg.engine.parallelism, 16);
+        assert!(cfg.slurm.enabled);
+        assert_eq!(cfg.slurm.mem_bytes, 200_000_000_000);
+    }
+
+    #[test]
+    fn event_size_minimum_enforced() {
+        let y = "workload:\n  event_bytes: 20\n";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("27 bytes"), "{e}");
+    }
+
+    #[test]
+    fn unknown_enum_rejected() {
+        let y = "engine:\n  framework: storm\n";
+        assert!(BenchConfig::from_json(&yaml::parse(y).unwrap()).is_err());
+    }
+
+    #[test]
+    fn generator_autoscaling() {
+        let mut cfg = BenchConfig::default();
+        cfg.workload.rate = 2_000_000;
+        cfg.generators.instance_capacity = 500_000;
+        assert_eq!(cfg.generator_instances(), 4);
+        cfg.workload.rate = 2_000_001;
+        assert_eq!(cfg.generator_instances(), 5);
+    }
+
+    #[test]
+    fn random_pattern_bounds_checked() {
+        let y = "
+workload:
+  pattern: random
+  random:
+    min_rate: 2M
+    max_rate: 1M
+";
+        assert!(BenchConfig::from_json(&yaml::parse(y).unwrap()).is_err());
+    }
+
+    #[test]
+    fn slide_greater_than_window_rejected() {
+        let y = "engine:\n  window: 5s\n  slide: 10s\n";
+        assert!(BenchConfig::from_json(&yaml::parse(y).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,359 @@
+//! Indentation-based YAML-subset parser producing [`Json`] values.
+//!
+//! SProBench's single master configuration file (paper Sec. 3: "A single
+//! configuration file serves as a master control point") is YAML; serde_yaml
+//! is not vendored, so this parser supports the subset the suite needs:
+//!
+//! * nested mappings by indentation (spaces only),
+//! * block lists (`- item`, including list-of-mapping entries),
+//! * inline scalars: ints, floats, bools, null, quoted + bare strings,
+//! * inline lists `[a, b, c]`,
+//! * comments (`# ...`) and blank lines,
+//! * dotted keys are kept verbatim (the overlay layer interprets them).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct YamlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for YamlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+struct Line {
+    number: usize,
+    indent: usize,
+    text: String,
+}
+
+/// Parse a YAML-subset document into a [`Json`] tree.
+pub fn parse(input: &str) -> Result<Json, YamlError> {
+    let lines: Vec<Line> = input
+        .lines()
+        .enumerate()
+        .filter_map(|(i, raw)| {
+            let without_comment = strip_comment(raw);
+            let trimmed = without_comment.trim_end();
+            if trimmed.trim().is_empty() {
+                return None;
+            }
+            let indent = trimmed.len() - trimmed.trim_start().len();
+            Some(Line {
+                number: i + 1,
+                indent,
+                text: trimmed.trim_start().to_string(),
+            })
+        })
+        .collect();
+    if lines.is_empty() {
+        return Ok(Json::obj());
+    }
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        return Err(YamlError {
+            line: lines[pos].number,
+            message: "unexpected dedent/content".into(),
+        });
+    }
+    Ok(v)
+}
+
+fn strip_comment(raw: &str) -> &str {
+    // A '#' starts a comment unless inside quotes.
+    let bytes = raw.as_bytes();
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_d => in_s = !in_s,
+            b'"' if !in_s => in_d = !in_d,
+            b'#' if !in_s && !in_d => {
+                // Require '#' at start or after whitespace (YAML rule).
+                if i == 0 || bytes[i - 1] == b' ' || bytes[i - 1] == b'\t' {
+                    return &raw[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    raw
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+        parse_list(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError {
+                line: line.number,
+                message: "unexpected indent".into(),
+            });
+        }
+        if line.text.starts_with("- ") {
+            break; // a list at this level belongs to the parent key
+        }
+        let (key, rest) = split_key(&line.text).ok_or_else(|| YamlError {
+            line: line.number,
+            message: "expected 'key: value'".into(),
+        })?;
+        *pos += 1;
+        let value = if rest.is_empty() {
+            // Nested block (map or list) or empty value.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                parse_block(lines, pos, lines[*pos].indent)?
+            } else if *pos < lines.len()
+                && lines[*pos].indent == indent
+                && lines[*pos].text.starts_with("- ")
+            {
+                parse_list(lines, pos, indent)?
+            } else {
+                Json::Null
+            }
+        } else {
+            scalar(rest)
+        };
+        map.insert(key.to_string(), value);
+    }
+    Ok(Json::Obj(map))
+}
+
+fn parse_list(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent || !(line.text.starts_with("- ") || line.text == "-") {
+            if line.indent >= indent && !line.text.starts_with("- ") {
+                break;
+            }
+            if line.indent < indent {
+                break;
+            }
+            return Err(YamlError {
+                line: line.number,
+                message: "malformed list item".into(),
+            });
+        }
+        let inner = line.text.strip_prefix('-').unwrap().trim_start().to_string();
+        let number = line.number;
+        *pos += 1;
+        if inner.is_empty() {
+            // "- " alone: nested block as the item.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                items.push(parse_block(lines, pos, lines[*pos].indent)?);
+            } else {
+                items.push(Json::Null);
+            }
+        } else if let Some((k, rest)) = split_key(&inner) {
+            // List item that is a mapping: first pair inline, continuation
+            // lines are more deeply indented.
+            let mut map = BTreeMap::new();
+            let first_val = if rest.is_empty() {
+                if *pos < lines.len() && lines[*pos].indent > indent + 2 {
+                    parse_block(lines, pos, lines[*pos].indent)?
+                } else {
+                    Json::Null
+                }
+            } else {
+                scalar(rest)
+            };
+            map.insert(k.to_string(), first_val);
+            // Continuation pairs aligned under the first key (indent + 2).
+            while *pos < lines.len() && lines[*pos].indent > indent {
+                let cont_indent = lines[*pos].indent;
+                match parse_map(lines, pos, cont_indent)? {
+                    Json::Obj(m) => {
+                        for (k, v) in m {
+                            map.insert(k, v);
+                        }
+                    }
+                    _ => {
+                        return Err(YamlError {
+                            line: number,
+                            message: "bad mapping continuation in list".into(),
+                        })
+                    }
+                }
+            }
+            items.push(Json::Obj(map));
+        } else {
+            items.push(scalar(&inner));
+        }
+    }
+    Ok(Json::Arr(items))
+}
+
+fn split_key(text: &str) -> Option<(&str, &str)> {
+    // Key ends at the first ':' that is followed by space or EOL and is not
+    // inside quotes.
+    let bytes = text.as_bytes();
+    let mut in_s = false;
+    let mut in_d = false;
+    for i in 0..bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_d => in_s = !in_s,
+            b'"' if !in_s => in_d = !in_d,
+            b':' if !in_s && !in_d => {
+                if i + 1 == bytes.len() || bytes[i + 1] == b' ' {
+                    let key = text[..i].trim();
+                    let rest = text[i + 1..].trim();
+                    if key.is_empty() {
+                        return None;
+                    }
+                    return Some((key, rest));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse an inline scalar or inline list.
+fn scalar(text: &str) -> Json {
+    let t = text.trim();
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        if inner.trim().is_empty() {
+            return Json::Arr(vec![]);
+        }
+        return Json::Arr(inner.split(',').map(|s| scalar(s.trim())).collect());
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Json::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "null" | "~" => return Json::Null,
+        "true" | "True" => return Json::Bool(true),
+        "false" | "False" => return Json::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Json::Int(i);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Json::Num(f);
+    }
+    Json::Str(t.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_maps() {
+        let y = "
+benchmark:
+  name: quickstart
+  seed: 42
+workload:
+  rate: 500K
+  nested:
+    deep: true
+";
+        let v = parse(y).unwrap();
+        assert_eq!(
+            v.path(&["benchmark", "name"]).unwrap().as_str().unwrap(),
+            "quickstart"
+        );
+        assert_eq!(v.path(&["benchmark", "seed"]).unwrap().as_i64(), Some(42));
+        assert_eq!(
+            v.path(&["workload", "rate"]).unwrap().as_str().unwrap(),
+            "500K"
+        );
+        assert_eq!(
+            v.path(&["workload", "nested", "deep"]).unwrap().as_bool(),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn scalar_types() {
+        let v = parse("a: 1\nb: 2.5\nc: yes_string\nd: \"quoted: x\"\ne: null\nf: false").unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "yes_string");
+        assert_eq!(v.get("d").unwrap().as_str().unwrap(), "quoted: x");
+        assert_eq!(v.get("e").unwrap(), &Json::Null);
+        assert_eq!(v.get("f").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn block_list_of_scalars() {
+        let v = parse("rates:\n  - 1M\n  - 2M\n  - 4M\n").unwrap();
+        let arr = v.get("rates").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_str().unwrap(), "2M");
+    }
+
+    #[test]
+    fn inline_list() {
+        let v = parse("parallelism: [1, 2, 4, 8, 16]").unwrap();
+        let arr = v.get("parallelism").unwrap().as_arr().unwrap();
+        assert_eq!(arr.iter().filter_map(|x| x.as_i64()).collect::<Vec<_>>(), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn list_of_mappings() {
+        let y = "
+experiments:
+  - name: p1
+    engine.parallelism: 1
+  - name: p2
+    engine.parallelism: 2
+";
+        let v = parse(y).unwrap();
+        let arr = v.get("experiments").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "p1");
+        assert_eq!(arr[1].get("engine.parallelism").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let y = "# header\na: 1  # trailing\n\n# mid\nb: 2\n";
+        let v = parse(y).unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let v = parse("a: \"x # not a comment\"").unwrap();
+        assert_eq!(v.get("a").unwrap().as_str().unwrap(), "x # not a comment");
+    }
+
+    #[test]
+    fn empty_doc() {
+        assert_eq!(parse("").unwrap(), Json::obj());
+        assert_eq!(parse("# only comments\n").unwrap(), Json::obj());
+    }
+
+    #[test]
+    fn error_has_line_number() {
+        let err = parse("a:\n    b: 1\n  misdent: 2\n").unwrap_err();
+        assert_eq!(err.line, 3);
+    }
+}

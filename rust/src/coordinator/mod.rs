@@ -1,0 +1,389 @@
+//! Benchmark coordinator: wires generator fleet → broker → engine → broker
+//! together with the full monitoring stack, runs one experiment, and
+//! produces the results document.
+//!
+//! * [`run_wall`] — real-thread, real-time execution on this machine.
+//! * [`simrun::run_sim`] — analytic execution at cluster scale in virtual
+//!   time (the 630-node Barnard runs of the paper).
+//!
+//! Both return the same [`RunSummary`] shape, so post-processing, the
+//! workflow manager, the CLI and the benches treat them uniformly.
+
+pub mod simrun;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::broker::{Broker, BrokerConfig};
+use crate::config::BenchConfig;
+use crate::engine::Engine;
+use crate::jvm::JmxSampler;
+use crate::metrics::{LatencyRecorder, MeasurementPoint, MetricStore, ThroughputRecorder};
+use crate::runtime::RuntimeFactory;
+use crate::sysmon::{ActivityModel, NodeSpec, SysmonSampler};
+use crate::util::clock::{self, ClockRef};
+use crate::util::histogram::{Histogram, HistogramSummary};
+use crate::util::json::Json;
+use crate::wgen::{Fleet, GeneratorConfig, Pattern};
+
+/// Everything one experiment run produced.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub name: String,
+    pub pipeline: &'static str,
+    pub framework: &'static str,
+    pub parallelism: u32,
+    pub generated: u64,
+    pub processed: u64,
+    pub emitted: u64,
+    pub elapsed_micros: u64,
+    /// Offered load achieved by the fleet, events/second.
+    pub offered_rate: f64,
+    /// Engine-processed events/second.
+    pub processed_rate: f64,
+    pub offered_bytes_rate: f64,
+    pub latency: Vec<(MeasurementPoint, HistogramSummary)>,
+    pub gc_young_count: u64,
+    pub gc_young_time_micros: u64,
+    pub energy_joules: f64,
+    pub parse_failures: u64,
+    pub batches: u64,
+}
+
+impl RunSummary {
+    pub fn latency_at(&self, point: MeasurementPoint) -> Option<&HistogramSummary> {
+        self.latency.iter().find(|(p, _)| *p == point).map(|(_, s)| s)
+    }
+
+    /// The results.json document (checked by `postprocess::validate`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set("pipeline", Json::Str(self.pipeline.to_string()));
+        j.set("framework", Json::Str(self.framework.to_string()));
+        j.set("parallelism", Json::Int(self.parallelism as i64));
+        let mut events = Json::obj();
+        events.set("generated", Json::Int(self.generated as i64));
+        events.set("processed", Json::Int(self.processed as i64));
+        events.set("emitted", Json::Int(self.emitted as i64));
+        j.set("events", events);
+        let mut tp = Json::obj();
+        tp.set("offered", Json::Num(self.offered_rate));
+        tp.set("processed", Json::Num(self.processed_rate));
+        tp.set("offered_bytes", Json::Num(self.offered_bytes_rate));
+        j.set("throughput", tp);
+        let mut lat = Json::obj();
+        for (point, s) in &self.latency {
+            if s.count == 0 {
+                continue;
+            }
+            let mut p = Json::obj();
+            p.set("mean", Json::Num(s.mean));
+            p.set("p50", Json::Int(s.p50 as i64));
+            p.set("p95", Json::Int(s.p95 as i64));
+            p.set("p99", Json::Int(s.p99 as i64));
+            p.set("max", Json::Int(s.max as i64));
+            p.set("count", Json::Int(s.count as i64));
+            lat.set(point.name(), p);
+        }
+        j.set("latency_us", lat);
+        let mut gc = Json::obj();
+        gc.set("young_count", Json::Int(self.gc_young_count as i64));
+        gc.set(
+            "young_time_ms",
+            Json::Num(self.gc_young_time_micros as f64 / 1e3),
+        );
+        j.set("gc", gc);
+        let mut energy = Json::obj();
+        energy.set("joules", Json::Num(self.energy_joules));
+        j.set("energy", energy);
+        j.set("elapsed_us", Json::Int(self.elapsed_micros as i64));
+        j.set("parse_failures", Json::Int(self.parse_failures as i64));
+        j.set("batches", Json::Int(self.batches as i64));
+        j
+    }
+}
+
+/// Run one experiment in wall mode. Returns the summary and the metric
+/// store (the timeline series behind the Fig. 8-style plots).
+pub fn run_wall(
+    cfg: &BenchConfig,
+    runtime_factory: Option<RuntimeFactory>,
+) -> Result<(RunSummary, Arc<MetricStore>), String> {
+    let clk: ClockRef = clock::wall();
+    let store = Arc::new(MetricStore::new());
+    let throughput = Arc::new(ThroughputRecorder::new());
+    let latency = Arc::new(LatencyRecorder::new());
+
+    let broker = Broker::new(BrokerConfig::from_section(&cfg.broker), clk.clone());
+    let in_topic = broker.create_topic("ingest");
+    let out_topic = broker.create_topic("egest");
+
+    // Egestion drainer: the downstream consumer of processed results.
+    let drain_group = broker.subscribe("egest", "downstream", 1);
+    let drainer = {
+        let g = drain_group;
+        std::thread::Builder::new()
+            .name("egest-drain".into())
+            .spawn(move || {
+                let mut n = 0u64;
+                loop {
+                    match g.poll(0, 4096) {
+                        Ok(Some(b)) => {
+                            n += b.records.len() as u64;
+                            g.commit(b.partition, b.next_offset);
+                        }
+                        Ok(None) => std::thread::sleep(std::time::Duration::from_micros(500)),
+                        Err(_) => return n,
+                    }
+                }
+            })
+            .expect("spawn drainer")
+    };
+
+    // Engine first: its heaps register with JMX before sampling starts.
+    let engine = Engine::new(cfg, clk.clone(), throughput.clone(), latency.clone());
+    let mut jmx = JmxSampler::new(clk.clone(), store.clone());
+    for (i, h) in engine.heaps.iter().enumerate() {
+        jmx.register(&format!("engine-task-{i}"), h.clone());
+    }
+    let mut sysmon = SysmonSampler::new(
+        clk.clone(),
+        store.clone(),
+        throughput.clone(),
+        NodeSpec::default(),
+        ActivityModel::default(),
+    );
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler_stop = Arc::new(AtomicBool::new(false));
+
+    // Interval sampler: throughput rates + per-interval latency timeline
+    // (the Fig. 8 series) + JMX + sysmon.  ProcOut/EndToEnd histograms are
+    // drained per interval for the timeline and merged into cumulative
+    // copies for the whole-run summary.
+    let sampler = {
+        let clk = clk.clone();
+        let store = store.clone();
+        let tp = throughput.clone();
+        let lat = latency.clone();
+        let stop = sampler_stop.clone();
+        let interval = cfg.metrics.sample_interval_micros.max(10_000);
+        std::thread::Builder::new()
+            .name("metrics-sampler".into())
+            .spawn(move || {
+                let mut prev = tp.snapshot();
+                let mut prev_t = clk.now_micros();
+                let mut cum_proc = Histogram::new();
+                let mut cum_e2e = Histogram::new();
+                loop {
+                    let stopping = stop.load(Ordering::Relaxed);
+                    if !stopping {
+                        clk.sleep_micros(interval);
+                    }
+                    let now = clk.now_micros();
+                    let snap = tp.snapshot();
+                    let dt = now.saturating_sub(prev_t).max(1);
+                    for p in MeasurementPoint::ALL {
+                        store.append(
+                            &format!("throughput.{}.eps", p.name()),
+                            now,
+                            snap.rate_events(&prev, p, dt),
+                        );
+                        store.append(
+                            &format!("throughput.{}.bps", p.name()),
+                            now,
+                            snap.rate_bytes(&prev, p, dt),
+                        );
+                    }
+                    for (p, cum) in [
+                        (MeasurementPoint::ProcOut, &mut cum_proc),
+                        (MeasurementPoint::EndToEnd, &mut cum_e2e),
+                    ] {
+                        let h = lat.drain(p);
+                        if !h.is_empty() {
+                            store.append(&format!("latency.{}.p50_us", p.name()), now, h.p50() as f64);
+                            store.append(&format!("latency.{}.p99_us", p.name()), now, h.p99() as f64);
+                            store.append(&format!("latency.{}.mean_us", p.name()), now, h.mean());
+                            cum.merge(&h);
+                        }
+                    }
+                    jmx.sample();
+                    sysmon.sample();
+                    prev = snap;
+                    prev_t = now;
+                    if stopping {
+                        return (jmx, sysmon, cum_proc, cum_e2e);
+                    }
+                }
+            })
+            .expect("spawn sampler")
+    };
+
+    // Fleet in the background; it waits for every engine task to finish
+    // building its pipeline step (PJRT compile) before offering load, so
+    // compile time never masquerades as queueing latency.  Closes the
+    // input topic when done.
+    let engine_ready = Arc::new(std::sync::atomic::AtomicU32::new(0));
+    let fleet_handle = {
+        let broker2 = broker.clone();
+        let in_topic2 = in_topic.clone();
+        let clk2 = clk.clone();
+        let tp = throughput.clone();
+        let lat = latency.clone();
+        let stop2 = stop.clone();
+        let gen_cfg = GeneratorConfig::from_config(cfg);
+        let workload = cfg.workload.clone();
+        let duration = cfg.bench.duration_micros + cfg.bench.warmup_micros;
+        let ready = engine_ready.clone();
+        let parallelism = cfg.engine.parallelism;
+        std::thread::Builder::new()
+            .name("fleet-main".into())
+            .spawn(move || {
+                let wait_start = std::time::Instant::now();
+                while ready.load(Ordering::SeqCst) < parallelism
+                    && wait_start.elapsed().as_secs() < 60
+                    && !stop2.load(Ordering::Relaxed)
+                {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                let fleet = Fleet::new(gen_cfg, clk2, tp, lat);
+                let report = fleet.run(&broker2, &in_topic2, duration, &stop2, |share| {
+                    Pattern::from_config(&workload, share)
+                });
+                in_topic2.close();
+                report
+            })
+            .expect("spawn fleet")
+    };
+
+    // Engine runs on this thread; exits when the input closes and drains.
+    let engine_report = engine.run(
+        &broker,
+        "ingest",
+        &out_topic,
+        &stop,
+        cfg.bench.duration_micros + cfg.bench.warmup_micros + 30_000_000,
+        runtime_factory,
+        Some(engine_ready),
+    )?;
+    let fleet_report = fleet_handle.join().map_err(|_| "fleet panicked")?;
+
+    // Shut down sampler, broker, drainer (in that order).
+    sampler_stop.store(true, Ordering::SeqCst);
+    let (jmx, sysmon, cum_proc, cum_e2e) = sampler.join().map_err(|_| "sampler panicked")?;
+    broker.shutdown();
+    let drained = drainer.join().map_err(|_| "drainer panicked")?;
+
+    // Whole-run latency summaries: cumulative copies for the drained
+    // points, live recorder for the rest.
+    let latency_summaries: Vec<(MeasurementPoint, HistogramSummary)> = MeasurementPoint::ALL
+        .iter()
+        .map(|&p| {
+            let mut h = latency.merged(p);
+            match p {
+                MeasurementPoint::ProcOut => h.merge(&cum_proc),
+                MeasurementPoint::EndToEnd => h.merge(&cum_e2e),
+                _ => {}
+            }
+            (p, h.summary())
+        })
+        .collect();
+
+    let (gc_count, gc_time) = jmx.aggregate_young();
+    let summary = RunSummary {
+        name: cfg.bench.name.clone(),
+        pipeline: cfg.engine.pipeline.name(),
+        framework: match cfg.engine.framework {
+            crate::config::Framework::Flink => "flink",
+            crate::config::Framework::Spark => "spark",
+            crate::config::Framework::KStreams => "kstreams",
+        },
+        parallelism: cfg.engine.parallelism,
+        generated: fleet_report.events,
+        processed: engine_report.events_in,
+        emitted: drained,
+        elapsed_micros: fleet_report.elapsed_micros,
+        offered_rate: fleet_report.rate_events,
+        processed_rate: engine_report.rate_events,
+        offered_bytes_rate: fleet_report.rate_bytes,
+        latency: latency_summaries,
+        gc_young_count: gc_count,
+        gc_young_time_micros: gc_time,
+        energy_joules: sysmon.joules_total(),
+        parse_failures: engine_report.parse_failures,
+        batches: engine_report.batches,
+    };
+    Ok((summary, store))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Framework, PipelineKind};
+    use crate::postprocess::validate_results;
+
+    fn quick_cfg() -> BenchConfig {
+        let mut cfg = BenchConfig::default();
+        cfg.bench.name = "coord-test".into();
+        cfg.bench.duration_micros = 700_000;
+        cfg.bench.warmup_micros = 0;
+        cfg.workload.rate = 60_000;
+        cfg.workload.sensors = 128;
+        cfg.engine.parallelism = 2;
+        cfg.engine.use_hlo = false;
+        cfg.engine.batch_size = 256;
+        cfg.metrics.sample_interval_micros = 100_000;
+        cfg
+    }
+
+    #[test]
+    fn wall_run_produces_consistent_summary() {
+        let cfg = quick_cfg();
+        let (summary, store) = run_wall(&cfg, None).unwrap();
+        assert!(summary.generated > 10_000, "generated={}", summary.generated);
+        assert_eq!(summary.processed, summary.generated, "engine must drain");
+        assert_eq!(summary.emitted, summary.processed);
+        assert_eq!(summary.parse_failures, 0);
+        // Timeline series exist.
+        assert!(store.get("throughput.driver_out.eps").is_some());
+        assert!(store.get("jvm.engine-task-0.gc_young_count").is_some());
+        assert!(store.get("energy.joules_total").is_some());
+        // Latency recorded at the key points.
+        let e2e = summary.latency_at(MeasurementPoint::EndToEnd).unwrap();
+        assert_eq!(e2e.count, summary.processed);
+        assert!(e2e.p50 > 0);
+        // Results doc passes validation.
+        let violations = validate_results(&summary.to_json());
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn spark_personality_has_higher_latency_than_flink() {
+        let mut flink = quick_cfg();
+        flink.engine.framework = Framework::Flink;
+        let mut spark = quick_cfg();
+        spark.engine.framework = Framework::Spark;
+        spark.engine.microbatch_micros = 150_000;
+        let (sf, _) = run_wall(&flink, None).unwrap();
+        let (ss, _) = run_wall(&spark, None).unwrap();
+        let lf = sf.latency_at(MeasurementPoint::EndToEnd).unwrap().p50;
+        let ls = ss.latency_at(MeasurementPoint::EndToEnd).unwrap().p50;
+        assert!(
+            ls > lf,
+            "micro-batching must cost latency: spark p50 {ls} <= flink p50 {lf}"
+        );
+    }
+
+    #[test]
+    fn mem_pipeline_summary_validates() {
+        let mut cfg = quick_cfg();
+        cfg.engine.pipeline = PipelineKind::MemIntensive;
+        cfg.engine.window_micros = 300_000;
+        cfg.engine.slide_micros = 100_000;
+        let (summary, _) = run_wall(&cfg, None).unwrap();
+        assert!(summary.emitted > 0, "window aggregates must flow");
+        let violations = validate_results(&summary.to_json());
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+}

@@ -1,0 +1,314 @@
+//! Analytic cluster-scale execution (`mode: sim`).
+//!
+//! The paper's headline numbers come from a 630-node SLURM cluster; this
+//! machine is one box.  `run_sim` evaluates the same experiment on a
+//! *model* of the pipeline in virtual time: component capacities bound
+//! throughput, a queueing term shapes latency, and the JVM/energy models
+//! run forward analytically.  The model constants are calibrated against
+//! wall-mode measurements on this machine (see EXPERIMENTS.md §Calibration)
+//! so the *shape* of every curve — linearity in Fig. 6, the plateau in
+//! Fig. 7, the GC growth in Fig. 8 — carries over; absolute cluster-scale
+//! numbers are the model's.
+
+use std::sync::Arc;
+
+use super::RunSummary;
+use crate::config::{BenchConfig, PipelineKind};
+use crate::metrics::{MeasurementPoint, MetricStore};
+use crate::util::histogram::{Histogram, HistogramSummary};
+use crate::util::rng::Pcg32;
+
+/// Calibratable capacity/latency constants.
+#[derive(Clone, Debug)]
+pub struct SimModel {
+    /// Broker append+fetch capacity per partition, events/second.
+    pub broker_per_partition_rate: f64,
+    /// Engine per-task processing rate by pipeline, events/second.
+    pub task_rate_passthrough: f64,
+    pub task_rate_cpu: f64,
+    pub task_rate_mem: f64,
+    pub task_rate_fused: f64,
+    /// Fixed path latency floor (serialize + broker hop + dispatch), µs.
+    pub base_latency_micros: f64,
+    /// Per-task dispatch overhead per batch, µs (drives the Fig. 7
+    /// latency growth with parallelism).
+    pub per_task_dispatch_micros: f64,
+    /// JVM allocation per processed event, bytes.
+    pub alloc_per_event: f64,
+    /// Young-generation size per task, bytes.
+    pub young_bytes: f64,
+    /// Young GC pause, µs.
+    pub young_pause_micros: f64,
+    /// Node power model.
+    pub idle_watts: f64,
+    pub peak_watts: f64,
+}
+
+impl Default for SimModel {
+    fn default() -> Self {
+        Self {
+            broker_per_partition_rate: 6.0e6,
+            task_rate_passthrough: 3.0e6,
+            task_rate_cpu: 1.2e6,
+            task_rate_mem: 0.9e6,
+            task_rate_fused: 0.8e6,
+            base_latency_micros: 900.0,
+            per_task_dispatch_micros: 110.0,
+            alloc_per_event: 220.0,
+            young_bytes: 64.0 * (1 << 20) as f64,
+            young_pause_micros: 2_300.0,
+            idle_watts: 240.0,
+            peak_watts: 700.0,
+        }
+    }
+}
+
+impl SimModel {
+    fn task_rate(&self, p: PipelineKind) -> f64 {
+        match p {
+            PipelineKind::PassThrough => self.task_rate_passthrough,
+            PipelineKind::CpuIntensive => self.task_rate_cpu,
+            PipelineKind::MemIntensive => self.task_rate_mem,
+            PipelineKind::Fused => self.task_rate_fused,
+        }
+    }
+}
+
+/// Evaluate one experiment analytically. Also emits a synthetic timeline
+/// into a metric store (per-second samples with seeded jitter) so the
+/// Fig. 8-style plots work identically in both modes.
+pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricStore>) {
+    let duration_s = (cfg.bench.duration_micros as f64 / 1e6).max(0.001);
+    let instances = cfg.generator_instances() as f64;
+    let offered = (cfg.workload.rate as f64)
+        .min(instances * cfg.generators.instance_capacity as f64);
+
+    let broker_cap = cfg.broker.partitions as f64 * model.broker_per_partition_rate;
+    let par = cfg.engine.parallelism as f64;
+    // Effective engine capacity scales sub-linearly at high parallelism:
+    // coordination cost shaves (the Fig. 7 plateau).
+    let scaling_eff = 1.0 / (1.0 + 0.04 * (par - 1.0));
+    let engine_cap = par * model.task_rate(cfg.engine.pipeline) * scaling_eff;
+
+    let processed_rate = offered.min(broker_cap).min(engine_cap);
+    let rho_engine = (processed_rate / engine_cap).min(0.999);
+    let rho_broker = (processed_rate / broker_cap).min(0.999);
+
+    // Latency: floor + batch fill + dispatch growing with parallelism +
+    // M/M/1-style queueing amplification near saturation.
+    let per_task_rate = (processed_rate / par).max(1.0);
+    let batch_fill = cfg.engine.batch_size as f64 / per_task_rate * 1e6;
+    let queueing = model.base_latency_micros * (1.0 / (1.0 - rho_engine) - 1.0)
+        + model.base_latency_micros * 0.3 * (1.0 / (1.0 - rho_broker) - 1.0);
+    let dispatch = model.per_task_dispatch_micros * par;
+    let e2e_mean = model.base_latency_micros + batch_fill + dispatch + queueing.min(250_000.0);
+    let broker_lat = model.base_latency_micros * 0.25 * (1.0 + rho_broker * 3.0);
+
+    let generated = (offered * duration_s) as u64;
+    let processed = (processed_rate * duration_s) as u64;
+    let emitted = match cfg.engine.pipeline {
+        // Keyed pipeline emits window aggregates, not 1:1 events.
+        PipelineKind::MemIntensive => {
+            let windows = (cfg.bench.duration_micros / cfg.engine.slide_micros.max(1)) as u64;
+            windows * cfg.workload.sensors.min(1024) as u64
+        }
+        _ => processed,
+    };
+
+    // GC model forward run.
+    let alloc_rate = processed_rate * model.alloc_per_event;
+    let gc_per_sec_per_task = alloc_rate / par / model.young_bytes;
+    let gc_young_count = (gc_per_sec_per_task * par * duration_s) as u64;
+    let gc_young_time = (gc_young_count as f64 * model.young_pause_micros) as u64;
+
+    // Energy: utilisation-weighted linear power over the allocated nodes.
+    let nodes = cfg.slurm.nodes.max(1) as f64;
+    let util = rho_engine.max(0.05);
+    let watts = model.idle_watts + (model.peak_watts - model.idle_watts) * util;
+    let energy_joules = watts * nodes * duration_s;
+
+    // Synthetic timeline (seeded jitter, warmup ramp) for Fig. 8 plots.
+    let store = Arc::new(MetricStore::new());
+    let mut rng = Pcg32::from_master(cfg.bench.seed, 0x51);
+    let samples = (duration_s as u64).clamp(2, 600);
+    let mut joules = 0.0;
+    let mut gc_cum = 0.0;
+    let mut gc_time_cum = 0.0;
+    for s in 0..samples {
+        let t = (s + 1) * cfg.bench.duration_micros / samples;
+        let ramp = if s == 0 { 0.7 } else { 1.0 };
+        let jitter = 1.0 + (rng.f64() - 0.5) * 0.06;
+        let eps = processed_rate * ramp * jitter;
+        store.append("throughput.proc_out.eps", t, eps);
+        store.append("throughput.driver_out.eps", t, offered * jitter);
+        let lat_jitter = 1.0 + (rng.f64() - 0.5) * 0.10;
+        // Latency creeps up as state/backlog accumulates over the run.
+        let drift = 1.0 + 0.15 * s as f64 / samples as f64;
+        store.append(
+            "latency.end_to_end.p50_us",
+            t,
+            e2e_mean * lat_jitter * drift,
+        );
+        store.append(
+            "latency.end_to_end.p99_us",
+            t,
+            e2e_mean * 2.8 * lat_jitter * drift,
+        );
+        gc_cum += gc_young_count as f64 / samples as f64;
+        gc_time_cum += gc_young_time as f64 / samples as f64 / 1e3;
+        store.append("jvm.engine.gc_young_count", t, gc_cum);
+        store.append("jvm.engine.gc_young_time_ms", t, gc_time_cum);
+        joules += watts * nodes * duration_s / samples as f64;
+        store.append("energy.joules_total", t, joules);
+    }
+
+    // Latency summaries synthesized as tight lognormal-ish histograms.
+    let mut e2e_hist = Histogram::new();
+    let mut broker_hist = Histogram::new();
+    let mut proc_hist = Histogram::new();
+    for _ in 0..10_000 {
+        let f = 1.0 + rng.f64().powi(2) * 3.0; // right-skewed tail
+        e2e_hist.record((e2e_mean * f) as u64);
+        broker_hist.record((broker_lat * f) as u64);
+        proc_hist.record(((e2e_mean - broker_lat).max(1.0) * f * 0.8) as u64);
+    }
+    let latency: Vec<(MeasurementPoint, HistogramSummary)> = vec![
+        (MeasurementPoint::BrokerIn, broker_hist.summary()),
+        (MeasurementPoint::ProcOut, proc_hist.summary()),
+        (MeasurementPoint::EndToEnd, e2e_hist.summary()),
+    ];
+
+    let summary = RunSummary {
+        name: cfg.bench.name.clone(),
+        pipeline: cfg.engine.pipeline.name(),
+        framework: match cfg.engine.framework {
+            crate::config::Framework::Flink => "flink",
+            crate::config::Framework::Spark => "spark",
+            crate::config::Framework::KStreams => "kstreams",
+        },
+        parallelism: cfg.engine.parallelism,
+        generated,
+        processed,
+        emitted,
+        elapsed_micros: cfg.bench.duration_micros,
+        offered_rate: offered,
+        processed_rate,
+        offered_bytes_rate: offered * cfg.workload.event_bytes as f64,
+        latency,
+        gc_young_count,
+        gc_young_time_micros: gc_young_time,
+        energy_joules,
+        parse_failures: 0,
+        batches: processed / cfg.engine.batch_size.max(1) as u64,
+    };
+    (summary, store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::postprocess::validate_results;
+
+    fn cfg(rate: u64, parallelism: u32) -> BenchConfig {
+        let mut c = BenchConfig::default();
+        c.bench.duration_micros = 60_000_000;
+        c.workload.rate = rate;
+        c.engine.parallelism = parallelism;
+        c.generators.max_instances = 1024;
+        c
+    }
+
+    #[test]
+    fn throughput_scales_linearly_until_capacity() {
+        let m = SimModel::default();
+        let (s1, _) = run_sim(&cfg(500_000, 16), &m);
+        let (s2, _) = run_sim(&cfg(1_000_000, 16), &m);
+        // Below capacity: processed == offered (Fig. 6's 1:1 line).
+        assert!((s1.processed_rate - 500_000.0).abs() < 1.0);
+        assert!((s2.processed_rate - 1_000_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn parallelism_plateau_matches_fig7_shape() {
+        let m = SimModel::default();
+        let rates: Vec<f64> = [1u32, 2, 4, 8, 16]
+            .iter()
+            .map(|&p| run_sim(&cfg(50_000_000, p), &m).0.processed_rate)
+            .collect();
+        // Monotone increase…
+        assert!(rates.windows(2).all(|w| w[1] > w[0]), "{rates:?}");
+        // …with diminishing returns: speedup(16/8) < speedup(2/1).
+        let s21 = rates[1] / rates[0];
+        let s168 = rates[4] / rates[3];
+        assert!(s168 < s21, "no plateau: {rates:?}");
+    }
+
+    #[test]
+    fn latency_rises_with_parallelism_at_fixed_load() {
+        let m = SimModel::default();
+        let lat: Vec<f64> = [1u32, 4, 16]
+            .iter()
+            .map(|&p| {
+                run_sim(&cfg(400_000, p), &m)
+                    .0
+                    .latency_at(MeasurementPoint::EndToEnd)
+                    .unwrap()
+                    .mean
+            })
+            .collect();
+        assert!(lat[2] > lat[0], "dispatch cost must grow: {lat:?}");
+    }
+
+    #[test]
+    fn gc_count_scales_with_processed_volume() {
+        let m = SimModel::default();
+        let (a, _) = run_sim(&cfg(500_000, 8), &m);
+        let (b, _) = run_sim(&cfg(4_000_000, 8), &m);
+        assert!(b.gc_young_count > 4 * a.gc_young_count);
+    }
+
+    #[test]
+    fn cluster_scale_reaches_paper_throughput() {
+        // Table 1's 40 M ev/s aggregate: 100+ generator instances across a
+        // big allocation, wide broker.
+        let m = SimModel::default();
+        let mut c = cfg(45_000_000, 64);
+        c.broker.partitions = 32;
+        c.engine.pipeline = PipelineKind::PassThrough;
+        c.slurm.nodes = 16;
+        let (s, _) = run_sim(&c, &m);
+        assert!(
+            s.offered_rate >= 40e6,
+            "offered {:.1}M < 40M",
+            s.offered_rate / 1e6
+        );
+        assert!(s.processed_rate >= 40e6);
+    }
+
+    #[test]
+    fn sim_results_validate_and_have_timeline() {
+        let m = SimModel::default();
+        let (s, store) = run_sim(&cfg(1_000_000, 8), &m);
+        let v = validate_results(&s.to_json());
+        assert!(v.is_empty(), "{v:?}");
+        let gc = store.get("jvm.engine.gc_young_count").unwrap();
+        let vals: Vec<f64> = gc.values().collect();
+        assert!(
+            vals.windows(2).all(|w| w[1] >= w[0]),
+            "GC counters must be cumulative"
+        );
+        assert!(store.get("latency.end_to_end.p50_us").is_some());
+    }
+
+    #[test]
+    fn energy_scales_with_nodes_and_time() {
+        let m = SimModel::default();
+        let mut c1 = cfg(1_000_000, 8);
+        c1.slurm.nodes = 1;
+        let mut c4 = cfg(1_000_000, 8);
+        c4.slurm.nodes = 4;
+        let (s1, _) = run_sim(&c1, &m);
+        let (s4, _) = run_sim(&c4, &m);
+        assert!((s4.energy_joules / s1.energy_joules - 4.0).abs() < 0.01);
+    }
+}

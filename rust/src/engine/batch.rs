@@ -1,0 +1,123 @@
+//! Parsed event batches: broker records → structure-of-arrays, ready for
+//! tensor marshalling.
+
+use crate::broker::Record;
+use crate::wgen::SensorEvent;
+
+/// A batch of parsed sensor events in structure-of-arrays layout (the
+/// layout the HLO artifacts consume directly).
+#[derive(Clone, Debug, Default)]
+pub struct EventBatch {
+    pub ids: Vec<u32>,
+    pub temps: Vec<f32>,
+    /// Generation timestamps (end-to-end latency anchors).
+    pub gen_ts: Vec<u64>,
+    /// Broker append timestamps (processing-latency anchors).
+    pub append_ts: Vec<u64>,
+    /// Total payload bytes represented by this batch.
+    pub payload_bytes: u64,
+}
+
+impl EventBatch {
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            ids: Vec::with_capacity(n),
+            temps: Vec::with_capacity(n),
+            gen_ts: Vec::with_capacity(n),
+            append_ts: Vec::with_capacity(n),
+            payload_bytes: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.ids.clear();
+        self.temps.clear();
+        self.gen_ts.clear();
+        self.append_ts.clear();
+        self.payload_bytes = 0;
+    }
+
+    /// Parse and append `records`; returns the number of parse failures
+    /// (malformed payloads are counted and skipped, never crash the task).
+    pub fn extend_from_records(&mut self, records: &[Record]) -> usize {
+        let mut failures = 0;
+        for r in records {
+            match SensorEvent::parse(r.payload()) {
+                Some(ev) => {
+                    self.ids.push(ev.sensor_id);
+                    self.temps.push(ev.temp_c);
+                    self.gen_ts.push(ev.ts_micros);
+                    self.append_ts.push(r.append_ts_micros);
+                    self.payload_bytes += r.len() as u64;
+                }
+                None => failures += 1,
+            }
+        }
+        failures
+    }
+
+    /// Oldest generation timestamp in the batch (worst-case latency anchor).
+    pub fn oldest_gen_ts(&self) -> Option<u64> {
+        self.gen_ts.iter().copied().min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wgen::EventFormat;
+
+    fn record(id: u32, temp: f32, ts: u64) -> Record {
+        let ev = SensorEvent {
+            ts_micros: ts,
+            sensor_id: id,
+            temp_c: temp,
+        };
+        let mut buf = Vec::new();
+        ev.serialize_into(EventFormat::Json, 64, &mut buf);
+        let mut r = Record::new(id, buf.as_slice(), ts);
+        r.append_ts_micros = ts + 5;
+        r
+    }
+
+    #[test]
+    fn parses_records_into_soa() {
+        let mut b = EventBatch::with_capacity(4);
+        let records = vec![record(1, 20.5, 100), record(2, -3.25, 200)];
+        assert_eq!(b.extend_from_records(&records), 0);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.ids, vec![1, 2]);
+        assert!((b.temps[1] + 3.25).abs() < 0.01);
+        assert_eq!(b.gen_ts, vec![100, 200]);
+        assert_eq!(b.append_ts, vec![105, 205]);
+        assert_eq!(b.payload_bytes, 128);
+        assert_eq!(b.oldest_gen_ts(), Some(100));
+    }
+
+    #[test]
+    fn malformed_payloads_are_counted_not_fatal() {
+        let mut b = EventBatch::default();
+        let bad = Record::new(0, b"garbage!!".as_slice(), 0);
+        let records = vec![record(1, 1.0, 1), bad, record(2, 2.0, 2)];
+        assert_eq!(b.extend_from_records(&records), 1);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut b = EventBatch::default();
+        b.extend_from_records(&[record(1, 1.0, 1)]);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.payload_bytes, 0);
+        assert_eq!(b.oldest_gen_ts(), None);
+    }
+}

@@ -1,0 +1,333 @@
+//! Engine lifecycle: spawn task slots, join, aggregate reports.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use super::personality::Personality;
+use super::task::{TaskHarness, TaskReport};
+use crate::broker::{Broker, Topic};
+use crate::config::BenchConfig;
+use crate::jvm::{GcConfig, JvmHeap};
+use crate::metrics::{LatencyRecorder, ThroughputRecorder};
+use crate::pipelines::StepFactory;
+use crate::runtime::RuntimeFactory;
+use crate::util::clock::ClockRef;
+
+/// Aggregated engine result.
+#[derive(Clone, Debug, Default)]
+pub struct EngineReport {
+    pub tasks: Vec<TaskReport>,
+    pub events_in: u64,
+    pub events_out: u64,
+    pub parse_failures: u64,
+    pub batches: u64,
+    pub elapsed_micros: u64,
+    /// Processed events/second across all tasks.
+    pub rate_events: f64,
+}
+
+/// The stream engine: `parallelism` task slots over one consumer group.
+pub struct Engine {
+    config: BenchConfig,
+    clock: ClockRef,
+    throughput: Arc<ThroughputRecorder>,
+    latency: Arc<LatencyRecorder>,
+    /// One simulated JVM heap per task slot (registered with JMX).
+    pub heaps: Vec<Arc<JvmHeap>>,
+}
+
+impl Engine {
+    pub fn new(
+        config: &BenchConfig,
+        clock: ClockRef,
+        throughput: Arc<ThroughputRecorder>,
+        latency: Arc<LatencyRecorder>,
+    ) -> Self {
+        // Flink-style managed memory: the worker's heap is FIXED and
+        // divided across task slots, so each slot's young generation
+        // shrinks as parallelism grows — which is why total GC activity
+        // rises with parallelism (the paper's Fig. 8c).
+        let par = config.engine.parallelism.max(1) as u64;
+        let young = ((256u64 << 20) / par).max(1 << 20);
+        let old = ((2u64 << 30) / par).max(8 << 20);
+        let heaps = (0..config.engine.parallelism)
+            .map(|_| {
+                Arc::new(JvmHeap::new(
+                    GcConfig {
+                        young_bytes: young,
+                        old_bytes: old,
+                        ..GcConfig::default()
+                    },
+                    clock.clone(),
+                ))
+            })
+            .collect();
+        Self {
+            config: config.clone(),
+            clock,
+            throughput,
+            latency,
+            heaps,
+        }
+    }
+
+    /// Run the engine until `duration_micros` elapses or the input topic
+    /// closes.  Blocks until every task slot finished.
+    ///
+    /// `ready` (optional) is incremented once per task when its pipeline
+    /// step is constructed — i.e. after PJRT compilation — so a caller can
+    /// hold the workload until the engine is actually ready to consume.
+    pub fn run(
+        &self,
+        broker: &Arc<Broker>,
+        in_topic_name: &str,
+        out_topic: &Arc<Topic>,
+        stop: &Arc<AtomicBool>,
+        duration_micros: u64,
+        runtime_factory: Option<RuntimeFactory>,
+        ready: Option<Arc<std::sync::atomic::AtomicU32>>,
+    ) -> Result<EngineReport, String> {
+        let factory = Arc::new(StepFactory::new(&self.config, runtime_factory));
+        self.run_with_factory(broker, in_topic_name, out_topic, stop, duration_micros, factory, ready)
+    }
+
+    /// Like [`Engine::run`], but with an explicit step factory — the hook
+    /// for user-defined pipelines (`StepFactory::custom`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with_factory(
+        &self,
+        broker: &Arc<Broker>,
+        in_topic_name: &str,
+        out_topic: &Arc<Topic>,
+        stop: &Arc<AtomicBool>,
+        duration_micros: u64,
+        factory: Arc<StepFactory>,
+        ready: Option<Arc<std::sync::atomic::AtomicU32>>,
+    ) -> Result<EngineReport, String> {
+        let parallelism = self.config.engine.parallelism;
+        let personality = Personality::for_framework(
+            self.config.engine.framework,
+            self.config.engine.batch_size,
+            self.config.engine.microbatch_micros,
+        );
+        let group = broker.subscribe(in_topic_name, "engine", parallelism);
+        let ready = ready.unwrap_or_default();
+        let start = self.clock.now_micros();
+        let deadline = start + duration_micros;
+
+        let handles: Vec<_> = (0..parallelism)
+            .map(|id| {
+                let harness = TaskHarness {
+                    id,
+                    personality,
+                    group: group.clone(),
+                    out_topic: out_topic.clone(),
+                    broker: broker.clone(),
+                    clock: self.clock.clone(),
+                    throughput: self.throughput.clone(),
+                    latency: self.latency.clone(),
+                    heap: self.heaps[id as usize].clone(),
+                    stop: stop.clone(),
+                    factory: factory.clone(),
+                    deadline_micros: deadline,
+                    // warmup == 0 means "record everything", including
+                    // events generated before the engine started.
+                    measure_after_micros: if self.config.bench.warmup_micros == 0 {
+                        0
+                    } else {
+                        start + self.config.bench.warmup_micros
+                    },
+                    ready: ready.clone(),
+                };
+                std::thread::Builder::new()
+                    .name(format!("engine-task-{id}"))
+                    .spawn(move || harness.run())
+                    .expect("spawn engine task")
+            })
+            .collect();
+
+        let mut report = EngineReport::default();
+        for h in handles {
+            let task = h.join().map_err(|_| "engine task panicked")??;
+            report.events_in += task.events_in;
+            report.events_out += task.events_out;
+            report.parse_failures += task.parse_failures;
+            report.batches += task.batches;
+            report.tasks.push(task);
+        }
+        report.elapsed_micros = self.clock.now_micros().saturating_sub(start).max(1);
+        report.rate_events = report.events_in as f64 * 1e6 / report.elapsed_micros as f64;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{BrokerConfig, Record};
+    use crate::config::{Framework, PipelineKind};
+    use crate::util::clock;
+    use crate::wgen::{EventFormat, SensorEvent};
+    use std::sync::atomic::Ordering;
+
+    fn make_config(parallelism: u32, pipeline: PipelineKind, framework: Framework) -> BenchConfig {
+        let mut cfg = BenchConfig::default();
+        cfg.bench.warmup_micros = 0; // tests measure everything
+        cfg.engine.parallelism = parallelism;
+        cfg.engine.pipeline = pipeline;
+        cfg.engine.framework = framework;
+        cfg.engine.use_hlo = false; // unit tests run native; HLO covered elsewhere
+        cfg.engine.batch_size = 128;
+        cfg.workload.sensors = 64;
+        cfg
+    }
+
+    fn seed_topic(broker: &Arc<Broker>, topic: &Arc<Topic>, n: u32, clock: &ClockRef) {
+        let mut buf = Vec::new();
+        let records: Vec<Record> = (0..n)
+            .map(|i| {
+                let ev = SensorEvent {
+                    ts_micros: clock.now_micros(),
+                    sensor_id: i % 64,
+                    temp_c: (i % 100) as f32,
+                };
+                ev.serialize_into(EventFormat::Csv, 27, &mut buf);
+                Record::new(ev.sensor_id, buf.as_slice(), ev.ts_micros)
+            })
+            .collect();
+        broker.produce_batch(topic, records).unwrap();
+    }
+
+    fn run_engine(
+        cfg: &BenchConfig,
+        events: u32,
+    ) -> (EngineReport, Arc<ThroughputRecorder>, Arc<LatencyRecorder>) {
+        let clk = clock::wall();
+        let broker = Broker::new(BrokerConfig::default(), clk.clone());
+        let in_topic = broker.create_topic("in");
+        let out_topic = broker.create_topic("out");
+        // Drain the out topic so capacity never binds.
+        let drain = broker.subscribe("out", "drain", 1);
+        let drainer = std::thread::spawn(move || {
+            let mut n = 0u64;
+            loop {
+                match drain.poll(0, 4096) {
+                    Ok(Some(b)) => {
+                        n += b.records.len() as u64;
+                        drain.commit(b.partition, b.next_offset);
+                    }
+                    Ok(None) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                    Err(_) => return n,
+                }
+            }
+        });
+        seed_topic(&broker, &in_topic, events, &clk);
+        let tp = Arc::new(ThroughputRecorder::new());
+        let lat = Arc::new(LatencyRecorder::new());
+        let engine = Engine::new(cfg, clk.clone(), tp.clone(), lat.clone());
+        let stop = Arc::new(AtomicBool::new(false));
+        // Close the input once seeded so tasks drain and exit.
+        in_topic.close();
+        let report = engine
+            .run(&broker, "in", &out_topic, &stop, 30_000_000, None, None)
+            .unwrap();
+        broker.shutdown();
+        let drained = drainer.join().unwrap();
+        assert_eq!(drained, report.events_out, "egestion count mismatch");
+        (report, tp, lat)
+    }
+
+    #[test]
+    fn passthrough_forwards_every_event() {
+        let cfg = make_config(2, PipelineKind::PassThrough, Framework::Flink);
+        let (report, tp, _) = run_engine(&cfg, 1000);
+        assert_eq!(report.events_in, 1000);
+        assert_eq!(report.events_out, 1000);
+        assert_eq!(report.parse_failures, 0);
+        use crate::metrics::MeasurementPoint as P;
+        assert_eq!(tp.events_at(P::ProcIn), 1000);
+        assert_eq!(tp.events_at(P::ProcOut), 1000);
+        assert_eq!(tp.events_at(P::BrokerOut), 1000);
+    }
+
+    #[test]
+    fn cpu_pipeline_transforms_every_event() {
+        let cfg = make_config(4, PipelineKind::CpuIntensive, Framework::Flink);
+        let (report, _, lat) = run_engine(&cfg, 2000);
+        assert_eq!(report.events_in, 2000);
+        assert_eq!(report.events_out, 2000);
+        let alerts: u64 = report.tasks.iter().map(|t| t.step.alerts).sum();
+        // temps 0..99 °C → °F range 32..210; threshold 80°F ≈ 26.7°C.
+        assert!(alerts > 0, "some events must alert");
+        assert!(alerts < 2000, "not all events alert");
+        use crate::metrics::MeasurementPoint as P;
+        assert!(lat.merged(P::EndToEnd).count() == 2000);
+        assert!(lat.merged(P::ProcOut).count() == 2000);
+    }
+
+    #[test]
+    fn mem_pipeline_emits_window_aggregates() {
+        let mut cfg = make_config(2, PipelineKind::MemIntensive, Framework::Flink);
+        cfg.engine.window_micros = 200_000;
+        cfg.engine.slide_micros = 100_000;
+        let (report, _, _) = run_engine(&cfg, 1000);
+        assert_eq!(report.events_in, 1000);
+        // Finish-flush guarantees at least one emission per task.
+        assert!(report.events_out > 0, "no window aggregates emitted");
+        let emits: u64 = report.tasks.iter().map(|t| t.step.window_emits).sum();
+        assert!(emits >= 2);
+    }
+
+    #[test]
+    fn every_framework_personality_completes() {
+        for fw in [Framework::Flink, Framework::Spark, Framework::KStreams] {
+            let mut cfg = make_config(2, PipelineKind::CpuIntensive, fw);
+            cfg.engine.microbatch_micros = 20_000;
+            let (report, _, _) = run_engine(&cfg, 500);
+            assert_eq!(report.events_in, 500, "{fw:?} lost events");
+            assert_eq!(report.events_out, 500, "{fw:?} lost outputs");
+        }
+    }
+
+    #[test]
+    fn parallelism_splits_work_across_tasks() {
+        let cfg = make_config(4, PipelineKind::PassThrough, Framework::Flink);
+        let (report, _, _) = run_engine(&cfg, 4000);
+        let active = report.tasks.iter().filter(|t| t.events_in > 0).count();
+        assert!(active >= 2, "work stuck on {active} task(s)");
+        assert_eq!(report.tasks.len(), 4);
+    }
+
+    #[test]
+    fn gc_activity_scales_with_load() {
+        let cfg = make_config(1, PipelineKind::CpuIntensive, Framework::Flink);
+        let clk = clock::wall();
+        let broker = Broker::new(BrokerConfig::default(), clk.clone());
+        let in_topic = broker.create_topic("in");
+        let out_topic = broker.create_topic("out");
+        let drain = broker.subscribe("out", "drain", 1);
+        std::thread::spawn(move || loop {
+            match drain.poll(0, 4096) {
+                Ok(Some(b)) => drain.commit(b.partition, b.next_offset),
+                Ok(None) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                Err(_) => return,
+            }
+        });
+        seed_topic(&broker, &in_topic, 5000, &clk);
+        in_topic.close();
+        let tp = Arc::new(ThroughputRecorder::new());
+        let lat = Arc::new(LatencyRecorder::new());
+        let engine = Engine::new(&cfg, clk.clone(), tp, lat);
+        let stop = Arc::new(AtomicBool::new(false));
+        engine
+            .run(&broker, "in", &out_topic, &stop, 30_000_000, None, None)
+            .unwrap();
+        broker.shutdown();
+        let allocated = engine.heaps[0].stats().allocated_bytes;
+        assert!(
+            allocated >= 5000 * 120,
+            "allocation model under-counts: {allocated}"
+        );
+        let _ = stop.load(Ordering::Relaxed);
+    }
+}

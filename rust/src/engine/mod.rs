@@ -1,0 +1,33 @@
+//! Stream-processing engine substrate (the paper's Flink / Spark Streaming /
+//! Kafka Streams role).
+//!
+//! A deliberately compact dataflow engine: source (broker consumer) →
+//! pipeline step (the paper's three pipelines, compute via AOT HLO) → sink
+//! (broker producer), replicated across `parallelism` task slots.  Three
+//! *personalities* reproduce the execution disciplines of the frameworks
+//! the paper integrates:
+//!
+//! * **Flink** — record-pipelined: process every poll immediately,
+//!   moderate poll batches;
+//! * **Spark** — micro-batched: accumulate for a batch interval, then
+//!   process the accumulated slice at once (higher latency, high
+//!   throughput);
+//! * **Kafka Streams** — per-partition, small polls, commit per poll
+//!   (lowest latency, more per-batch overhead).
+//!
+//! * [`batch`] — parsed event batches (records → tensors-ready arrays).
+//! * [`window`] — sliding-window pane state for the keyed pipeline.
+//! * [`personality`] — the framework execution disciplines.
+//! * [`task`] — one task slot's poll→process→produce→commit loop.
+//! * [`core`] — engine lifecycle: spawn tasks, join, aggregate stats.
+
+pub mod batch;
+pub mod core;
+pub mod personality;
+pub mod task;
+pub mod window;
+
+pub use batch::EventBatch;
+pub use core::{Engine, EngineReport};
+pub use personality::Personality;
+pub use window::{SlidingWindow, WindowEmit};

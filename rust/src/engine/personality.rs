@@ -1,0 +1,107 @@
+//! Framework personalities: the execution disciplines of the three DSP
+//! frameworks the paper integrates (Sec. 3: Apache Flink, Apache Spark
+//! Streaming, Apache Kafka Streams).
+//!
+//! The same pipeline logic runs under all three; what differs is *when*
+//! work is batched and committed — which is what separates the frameworks
+//! in the paper's throughput/latency comparisons.
+
+use crate::config::Framework;
+
+/// Batching/commit discipline of one framework personality.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Personality {
+    pub framework: Framework,
+    /// Max records per broker poll.
+    pub poll_batch: usize,
+    /// Accumulate polls until this many records before processing
+    /// (1 poll's worth for record-pipelined engines).
+    pub process_batch: usize,
+    /// Accumulate for this long before processing (Spark micro-batching);
+    /// 0 = process as soon as `process_batch` is reached or input idles.
+    pub batch_interval_micros: u64,
+    /// Commit after every processed batch (true) or on an interval-aligned
+    /// cadence (false → commit when a micro-batch completes).
+    pub eager_commit: bool,
+    /// Per-batch framework overhead (task dispatch, barriers), microseconds
+    /// of busy work — what makes small batches expensive on real engines.
+    pub per_batch_overhead_micros: u64,
+}
+
+impl Personality {
+    /// Build the personality for `framework` with the engine batch size.
+    pub fn for_framework(
+        framework: Framework,
+        batch_size: usize,
+        microbatch_micros: u64,
+    ) -> Personality {
+        match framework {
+            // Flink: record-pipelined; polls feed processing directly.
+            Framework::Flink => Personality {
+                framework,
+                poll_batch: batch_size,
+                process_batch: batch_size,
+                batch_interval_micros: 0,
+                eager_commit: true,
+                per_batch_overhead_micros: 15,
+            },
+            // Spark Streaming: micro-batches on an interval; bigger slices,
+            // scheduler overhead per micro-batch, commits per micro-batch.
+            Framework::Spark => Personality {
+                framework,
+                poll_batch: batch_size,
+                process_batch: batch_size * 4,
+                batch_interval_micros: microbatch_micros,
+                eager_commit: false,
+                per_batch_overhead_micros: 120,
+            },
+            // Kafka Streams: per-partition loop, small polls, eager commits.
+            Framework::KStreams => Personality {
+                framework,
+                poll_batch: (batch_size / 4).max(64),
+                process_batch: (batch_size / 4).max(64),
+                batch_interval_micros: 0,
+                eager_commit: true,
+                per_batch_overhead_micros: 8,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flink_is_record_pipelined() {
+        let p = Personality::for_framework(Framework::Flink, 1024, 100_000);
+        assert_eq!(p.process_batch, 1024);
+        assert_eq!(p.batch_interval_micros, 0);
+        assert!(p.eager_commit);
+    }
+
+    #[test]
+    fn spark_micro_batches() {
+        let p = Personality::for_framework(Framework::Spark, 1024, 100_000);
+        assert_eq!(p.process_batch, 4096);
+        assert_eq!(p.batch_interval_micros, 100_000);
+        assert!(!p.eager_commit);
+        assert!(
+            p.per_batch_overhead_micros
+                > Personality::for_framework(Framework::Flink, 1024, 0).per_batch_overhead_micros
+        );
+    }
+
+    #[test]
+    fn kstreams_polls_small() {
+        let p = Personality::for_framework(Framework::KStreams, 1024, 0);
+        assert_eq!(p.poll_batch, 256);
+        assert!(p.eager_commit);
+    }
+
+    #[test]
+    fn kstreams_small_batch_floor() {
+        let p = Personality::for_framework(Framework::KStreams, 100, 0);
+        assert_eq!(p.poll_batch, 64);
+    }
+}

@@ -1,0 +1,262 @@
+//! One engine task slot: the poll → parse → process → produce → commit loop.
+//!
+//! A task owns one consumer-group membership on the ingestion topic and a
+//! producer role on the egestion topic.  Its behaviour between those two
+//! points is shaped by the framework [`Personality`] (batching/commit
+//! discipline) and the configured pipeline step.  Every step is metered:
+//!
+//! * `ProcIn` — events/bytes polled, latency broker-append → poll,
+//! * `ProcOut` — events processed, latency broker-append → processed,
+//! * `BrokerOut` — records produced to the egestion topic,
+//! * `EndToEnd` — latency generation → egestion append.
+//!
+//! JVM accounting: parsing and processing allocate on a simulated heap;
+//! GC pauses stall the task exactly where a real JVM would.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::batch::EventBatch;
+use super::personality::Personality;
+use crate::broker::{Broker, ConsumerGroup, Record, Topic};
+use crate::jvm::JvmHeap;
+use crate::metrics::{LatencyRecorder, MeasurementPoint, ThroughputRecorder};
+use crate::pipelines::{StepFactory, StepStats};
+use crate::util::clock::ClockRef;
+
+/// Estimated JVM allocation per parsed event (object headers, boxed tuple
+/// fields, char[] — what a JVM engine would churn per record).
+const ALLOC_PER_EVENT_BYTES: u64 = 120;
+
+/// Fixed allocation per processed batch (dispatch buffers, iterator
+/// wrappers, network envelopes).  Smaller batches at higher parallelism
+/// mean more batches and therefore more of this churn — the second
+/// driver of Fig. 8c's GC growth.
+const ALLOC_PER_BATCH_BYTES: u64 = 192 << 10;
+
+/// Everything a task thread needs; `Send`, the pipeline step is built
+/// inside the thread (PJRT runtimes are thread-confined).
+pub struct TaskHarness {
+    pub id: u32,
+    pub personality: Personality,
+    pub group: Arc<ConsumerGroup>,
+    pub out_topic: Arc<Topic>,
+    pub broker: Arc<Broker>,
+    pub clock: ClockRef,
+    pub throughput: Arc<ThroughputRecorder>,
+    pub latency: Arc<LatencyRecorder>,
+    pub heap: Arc<JvmHeap>,
+    pub stop: Arc<AtomicBool>,
+    pub factory: Arc<StepFactory>,
+    /// Hard deadline; the task drains and exits at this time even if the
+    /// input topic stays open.
+    pub deadline_micros: u64,
+    /// Latency samples earlier than this are warmup (PJRT compile, queue
+    /// fill) and are not recorded; 0 = record everything.
+    pub measure_after_micros: u64,
+    /// Incremented once this task's pipeline step is built (PJRT compile
+    /// done); the coordinator holds the generator fleet until every task
+    /// signalled so compile time never pollutes measured latency.
+    pub ready: std::sync::Arc<std::sync::atomic::AtomicU32>,
+}
+
+/// Per-task result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskReport {
+    pub events_in: u64,
+    pub events_out: u64,
+    pub batches: u64,
+    pub parse_failures: u64,
+    pub step: StepStats,
+}
+
+impl TaskHarness {
+    pub fn run(self) -> Result<TaskReport, String> {
+        let mut step = self.factory.create(self.clock.now_micros())?;
+        self.ready.fetch_add(1, Ordering::SeqCst);
+        let needs_parse = step.needs_parse();
+        let shard = self.id as usize;
+
+        let mut report = TaskReport::default();
+        let mut pending: Vec<Record> = Vec::with_capacity(self.personality.process_batch * 2);
+        let mut commits: Vec<(u32, u64)> = Vec::new();
+        let mut batch = EventBatch::with_capacity(self.personality.process_batch);
+        let mut out: Vec<Record> = Vec::new();
+        let mut batch_started = self.clock.now_micros();
+
+        let interval = self.personality.batch_interval_micros;
+        loop {
+            let now = self.clock.now_micros();
+            let stop_now = self.stop.load(Ordering::Relaxed) || now >= self.deadline_micros;
+            let mut closed = false;
+
+            if !stop_now {
+                match self.group.poll(self.id, self.personality.poll_batch) {
+                    Ok(Some(polled)) => {
+                        let n = polled.records.len() as u64;
+                        let bytes: u64 = polled.records.iter().map(|r| r.len() as u64).sum();
+                        self.throughput
+                            .record_events(MeasurementPoint::ProcIn, n, bytes);
+                        // Broker residency: append → poll.
+                        if now >= self.measure_after_micros {
+                            self.latency.record_batch(
+                                MeasurementPoint::ProcIn,
+                                shard,
+                                polled
+                                    .records
+                                    .iter()
+                                    .map(|r| now.saturating_sub(r.append_ts_micros)),
+                            );
+                        }
+                        pending.extend(polled.records);
+                        commits.push((polled.partition, polled.next_offset));
+                    }
+                    Ok(None) => {
+                        // Idle: if we hold a partial batch past the interval
+                        // (or have no interval), flush it; else back off.
+                        if pending.is_empty() {
+                            self.clock.sleep_micros(200);
+                            continue;
+                        }
+                    }
+                    Err(_) => closed = true,
+                }
+            }
+
+            let now = self.clock.now_micros();
+            let interval_elapsed = interval == 0 || now.saturating_sub(batch_started) >= interval;
+            let size_reached = pending.len() >= self.personality.process_batch;
+            let must_flush = closed || stop_now;
+
+            if !pending.is_empty() && (must_flush || size_reached || interval_elapsed) {
+                self.process_pending(
+                    &mut *step,
+                    needs_parse,
+                    &mut pending,
+                    &mut commits,
+                    &mut batch,
+                    &mut out,
+                    &mut report,
+                )?;
+                batch_started = self.clock.now_micros();
+            }
+
+            if must_flush {
+                let mut tail = Vec::new();
+                step.finish(self.clock.now_micros(), &mut tail)?;
+                if !tail.is_empty() {
+                    self.emit(&mut tail, &mut report)?;
+                }
+                report.step = step.stats();
+                return Ok(report);
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn process_pending(
+        &self,
+        step: &mut dyn crate::pipelines::PipelineStep,
+        needs_parse: bool,
+        pending: &mut Vec<Record>,
+        commits: &mut Vec<(u32, u64)>,
+        batch: &mut EventBatch,
+        out: &mut Vec<Record>,
+        report: &mut TaskReport,
+    ) -> Result<(), String> {
+        let shard = self.id as usize;
+        let n = pending.len() as u64;
+        let bytes: u64 = pending.iter().map(|r| r.len() as u64).sum();
+
+        // Framework dispatch overhead (what makes tiny batches costly).
+        self.burn(self.personality.per_batch_overhead_micros);
+
+        batch.clear();
+        if needs_parse {
+            report.parse_failures += batch.extend_from_records(pending) as u64;
+        }
+        let now = self.clock.now_micros();
+        out.clear();
+        step.process(now, pending, batch, out)?;
+
+        // JVM allocation model: parse tuples + output records + per-batch
+        // framework churn.
+        let out_bytes: u64 = out.iter().map(|r| r.len() as u64).sum();
+        self.heap
+            .alloc(n * ALLOC_PER_EVENT_BYTES + bytes + out_bytes + ALLOC_PER_BATCH_BYTES);
+
+        let done = self.clock.now_micros();
+        self.throughput
+            .record_events(MeasurementPoint::ProcOut, n, bytes);
+        // Processing latency: broker append → processing complete.
+        if done >= self.measure_after_micros {
+            self.latency.record_batch(
+                MeasurementPoint::ProcOut,
+                shard,
+                pending
+                    .iter()
+                    .map(|r| done.saturating_sub(r.append_ts_micros)),
+            );
+        }
+        report.events_in += n;
+        report.batches += 1;
+
+        // End-to-end anchors before the records move out.
+        let gen_ts: Vec<u64> = pending.iter().map(|r| r.gen_ts_micros).collect();
+        pending.clear();
+
+        self.emit(out, report)?;
+
+        let egest = self.clock.now_micros();
+        // End-to-end: only events *generated* after warmup count, so the
+        // compile-era queue backlog cannot poison the tail.
+        self.latency.record_batch(
+            MeasurementPoint::EndToEnd,
+            shard,
+            gen_ts
+                .iter()
+                .filter(|&&g| g >= self.measure_after_micros)
+                .map(|&g| egest.saturating_sub(g)),
+        );
+
+        // Commit the offsets covering the processed records.  Under eager
+        // commit (Flink/KStreams) this fires per processed poll-batch;
+        // under micro-batching (Spark) it fires once per micro-batch —
+        // the cadence difference the personalities model.
+        for (p, off) in commits.drain(..) {
+            self.group.commit(p, off);
+        }
+        Ok(())
+    }
+
+    /// Produce processed records to the egestion topic.
+    fn emit(&self, out: &mut Vec<Record>, report: &mut TaskReport) -> Result<(), String> {
+        if out.is_empty() {
+            return Ok(());
+        }
+        let n = out.len() as u64;
+        let bytes: u64 = out.iter().map(|r| r.len() as u64).sum();
+        self.broker
+            .produce_batch(&self.out_topic, std::mem::take(out))
+            .map_err(|_| "egestion topic closed".to_string())?;
+        self.throughput
+            .record_events(MeasurementPoint::BrokerOut, n, bytes);
+        report.events_out += n;
+        Ok(())
+    }
+
+    /// Busy-burn (wall) or advance (sim) the per-batch overhead.
+    fn burn(&self, micros: u64) {
+        if micros == 0 {
+            return;
+        }
+        if self.clock.is_virtual() {
+            self.clock.sleep_micros(micros);
+        } else {
+            let start = std::time::Instant::now();
+            while start.elapsed().as_micros() < micros as u128 {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}

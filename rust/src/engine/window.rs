@@ -1,0 +1,266 @@
+//! Sliding-window pane state for the memory-intensive pipeline.
+//!
+//! The paper's memory-intensive pipeline keys the stream by sensor ID and
+//! maintains a sliding-window mean temperature per key as operator state
+//! (Sec. 3.3).  Standard pane decomposition: the window (length `W`,
+//! slide `S`, `S | W`) is covered by `W/S` contiguous panes; each pane
+//! accumulates `(sum, cnt)` per key — that accumulation is exactly what
+//! the `mem_pipeline_step` HLO artifact computes — and on every slide
+//! boundary the live panes merge into one window emission.
+
+use std::collections::VecDeque;
+
+/// One pane's keyed accumulator (the tensors the HLO kernel updates).
+#[derive(Clone, Debug)]
+pub struct Pane {
+    pub start_micros: u64,
+    pub sum: Vec<f32>,
+    pub cnt: Vec<f32>,
+}
+
+impl Pane {
+    fn new(start_micros: u64, k: usize) -> Self {
+        Self {
+            start_micros,
+            sum: vec![0.0; k],
+            cnt: vec![0.0; k],
+        }
+    }
+
+    pub fn events(&self) -> f64 {
+        self.cnt.iter().map(|&c| c as f64).sum()
+    }
+}
+
+/// One emitted window aggregate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowEmit {
+    /// Window end time (the slide boundary that triggered the emission).
+    pub end_micros: u64,
+    /// `(key, mean, count)` for every key observed in the window.
+    pub aggregates: Vec<(u32, f32, u64)>,
+}
+
+/// Keyed sliding window over processing time.
+pub struct SlidingWindow {
+    k: usize,
+    window_micros: u64,
+    slide_micros: u64,
+    /// Closed panes still inside the window, oldest first.
+    panes: VecDeque<Pane>,
+    /// The open pane the kernel currently accumulates into.
+    current: Pane,
+}
+
+impl SlidingWindow {
+    pub fn new(k: usize, window_micros: u64, slide_micros: u64, start_micros: u64) -> Self {
+        assert!(slide_micros > 0 && window_micros >= slide_micros);
+        let aligned = start_micros - start_micros % slide_micros;
+        Self {
+            k,
+            window_micros,
+            slide_micros,
+            panes: VecDeque::new(),
+            current: Pane::new(aligned, k),
+        }
+    }
+
+    pub fn key_count(&self) -> usize {
+        self.k
+    }
+
+    /// The open pane (the HLO kernel reads its state in and writes the
+    /// updated state back via [`SlidingWindow::store_state`]).
+    pub fn current_pane(&self) -> &Pane {
+        &self.current
+    }
+
+    /// Write the kernel's updated `(sum, cnt)` back into the open pane.
+    pub fn store_state(&mut self, sum: Vec<f32>, cnt: Vec<f32>) {
+        debug_assert_eq!(sum.len(), self.k);
+        debug_assert_eq!(cnt.len(), self.k);
+        self.current.sum = sum;
+        self.current.cnt = cnt;
+    }
+
+    /// Native accumulation path (ablation / no-HLO mode).
+    pub fn accumulate_native(&mut self, ids: &[u32], temps: &[f32]) {
+        for (&id, &t) in ids.iter().zip(temps) {
+            if (id as usize) < self.k {
+                self.current.sum[id as usize] += t;
+                self.current.cnt[id as usize] += 1.0;
+            }
+        }
+    }
+
+    /// Advance processing time to `now`; emits one window aggregate per
+    /// crossed slide boundary (usually 0 or 1).
+    pub fn advance(&mut self, now_micros: u64) -> Vec<WindowEmit> {
+        let mut out = Vec::new();
+        while now_micros >= self.current.start_micros + self.slide_micros {
+            let boundary = self.current.start_micros + self.slide_micros;
+            let closed = std::mem::replace(&mut self.current, Pane::new(boundary, self.k));
+            self.panes.push_back(closed);
+            // Retain panes with start >= boundary - window (the window
+            // ending at `boundary` covers [boundary - W, boundary)).
+            while let Some(front) = self.panes.front() {
+                if front.start_micros + self.window_micros < boundary {
+                    self.panes.pop_front();
+                } else {
+                    break;
+                }
+            }
+            out.push(self.merge(boundary));
+        }
+        out
+    }
+
+    /// Merge all live panes into one aggregate.
+    fn merge(&self, end_micros: u64) -> WindowEmit {
+        let mut sum = vec![0.0f64; self.k];
+        let mut cnt = vec![0.0f64; self.k];
+        for pane in &self.panes {
+            for k in 0..self.k {
+                sum[k] += pane.sum[k] as f64;
+                cnt[k] += pane.cnt[k] as f64;
+            }
+        }
+        let aggregates = (0..self.k)
+            .filter(|&k| cnt[k] > 0.0)
+            .map(|k| (k as u32, (sum[k] / cnt[k]) as f32, cnt[k] as u64))
+            .collect();
+        WindowEmit {
+            end_micros,
+            aggregates,
+        }
+    }
+
+    /// End-of-stream flush: force the open pane closed and emit the final
+    /// window even if wall time never reached the next slide boundary.
+    /// No-op when the open pane is empty (nothing new to report).
+    pub fn flush(&mut self) -> Vec<WindowEmit> {
+        if self.current.events() == 0.0 {
+            return Vec::new();
+        }
+        let boundary = self.current.start_micros + self.slide_micros;
+        self.advance(boundary)
+    }
+
+    /// Number of closed panes currently held (state-size metric).
+    pub fn live_panes(&self) -> usize {
+        self.panes.len()
+    }
+
+    /// Approximate state footprint in bytes (keyed state metric).
+    pub fn state_bytes(&self) -> u64 {
+        ((self.panes.len() + 1) * self.k * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w() -> SlidingWindow {
+        // window 10s, slide 2s → 5 panes.
+        SlidingWindow::new(8, 10_000_000, 2_000_000, 0)
+    }
+
+    #[test]
+    fn no_emission_before_first_boundary() {
+        let mut sw = w();
+        sw.accumulate_native(&[1], &[10.0]);
+        assert!(sw.advance(1_999_999).is_empty());
+    }
+
+    #[test]
+    fn emission_at_each_slide_boundary() {
+        let mut sw = w();
+        sw.accumulate_native(&[1, 1, 2], &[10.0, 20.0, 5.0]);
+        let emits = sw.advance(2_000_000);
+        assert_eq!(emits.len(), 1);
+        let e = &emits[0];
+        assert_eq!(e.end_micros, 2_000_000);
+        assert_eq!(e.aggregates.len(), 2);
+        assert_eq!(e.aggregates[0], (1, 15.0, 2));
+        assert_eq!(e.aggregates[1], (2, 5.0, 1));
+    }
+
+    #[test]
+    fn window_retains_w_over_s_panes() {
+        let mut sw = w();
+        // Pane 0: key 0 = 100. Advance 5 slides; pane 0 leaves the window
+        // after boundary 12s (pane [0,2s) + 10s window ≤ 12s).
+        sw.accumulate_native(&[0], &[100.0]);
+        let e = sw.advance(2_000_000);
+        assert_eq!(e[0].aggregates, vec![(0, 100.0, 1)]);
+        for boundary in [4_000_000u64, 6_000_000, 8_000_000, 10_000_000] {
+            let e = sw.advance(boundary);
+            assert_eq!(e.len(), 1);
+            assert_eq!(
+                e[0].aggregates,
+                vec![(0, 100.0, 1)],
+                "boundary {boundary}: pane should still be live"
+            );
+        }
+        let e = sw.advance(12_000_000);
+        assert!(e[0].aggregates.is_empty(), "pane 0 must have expired");
+        assert!(sw.live_panes() <= 5);
+    }
+
+    #[test]
+    fn multiple_boundaries_in_one_advance() {
+        let mut sw = w();
+        sw.accumulate_native(&[3], &[1.0]);
+        let emits = sw.advance(6_500_000); // crosses 2s, 4s, 6s
+        assert_eq!(emits.len(), 3);
+        assert_eq!(emits[0].end_micros, 2_000_000);
+        assert_eq!(emits[2].end_micros, 6_000_000);
+        // The single event stays visible in all three windows.
+        for e in &emits {
+            assert_eq!(e.aggregates, vec![(3, 1.0, 1)]);
+        }
+    }
+
+    #[test]
+    fn store_state_roundtrip_matches_native() {
+        let mut a = w();
+        let mut b = w();
+        let ids = [0u32, 1, 1, 7, 7, 7];
+        let temps = [1.0f32, 2.0, 4.0, 9.0, 9.0, 9.0];
+        a.accumulate_native(&ids, &temps);
+        // Simulate the HLO path: read state, update outside, store back.
+        let pane = b.current_pane();
+        let mut sum = pane.sum.clone();
+        let mut cnt = pane.cnt.clone();
+        for (&id, &t) in ids.iter().zip(&temps) {
+            sum[id as usize] += t;
+            cnt[id as usize] += 1.0;
+        }
+        b.store_state(sum, cnt);
+        let (ea, eb) = (a.advance(2_000_000), b.advance(2_000_000));
+        assert_eq!(ea[0].aggregates, eb[0].aggregates);
+    }
+
+    #[test]
+    fn out_of_range_keys_are_dropped_natively() {
+        let mut sw = w();
+        sw.accumulate_native(&[100], &[5.0]); // k = 8
+        let e = sw.advance(2_000_000);
+        assert!(e[0].aggregates.is_empty());
+    }
+
+    #[test]
+    fn unaligned_start_is_aligned_down() {
+        let sw = SlidingWindow::new(4, 10_000_000, 2_000_000, 3_500_000);
+        assert_eq!(sw.current_pane().start_micros, 2_000_000);
+    }
+
+    #[test]
+    fn state_bytes_grows_with_panes() {
+        let mut sw = w();
+        let s0 = sw.state_bytes();
+        sw.advance(2_000_000);
+        assert!(sw.state_bytes() > s0);
+    }
+}

@@ -1,0 +1,273 @@
+//! The managed-heap model.
+//!
+//! Generational accounting only — no real memory moves.  Components call
+//! [`JvmHeap::alloc`] with the bytes they would have allocated on a JVM
+//! (event objects, deserialized tuples, window state).  The model:
+//!
+//! * young gen of `young_bytes`; allocation beyond it triggers a young GC,
+//! * young GC: pause = `young_pause_base + young_pause_per_mb × live`,
+//!   where live = `survivor_ratio × young fill`; survivors promote,
+//! * old gen of `old_bytes`; promotion beyond it triggers a full GC with
+//!   its own (larger) pause model, reclaiming `old_release_ratio`,
+//! * pauses stall the calling thread (wall) / advance time (sim) when
+//!   `stall` is set — GC cost is visible in latency, as on a real JVM.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::clock::ClockRef;
+
+/// GC model parameters.
+#[derive(Clone, Debug)]
+pub struct GcConfig {
+    pub young_bytes: u64,
+    pub old_bytes: u64,
+    /// Fraction of young-gen fill that survives a young collection.
+    pub survivor_ratio: f64,
+    pub young_pause_base_micros: u64,
+    pub young_pause_per_mb_micros: u64,
+    pub old_pause_base_micros: u64,
+    pub old_pause_per_mb_micros: u64,
+    /// Fraction of the old gen reclaimed by a full collection.
+    pub old_release_ratio: f64,
+    /// Stall the allocating thread for the pause duration.
+    pub stall: bool,
+}
+
+impl Default for GcConfig {
+    fn default() -> Self {
+        Self {
+            // Default: 256 MB young, 2 GB old — the paper gives workers
+            // 2 GB heap per generator and 5 GB for Kafka.
+            young_bytes: 256 << 20,
+            old_bytes: 2 << 30,
+            survivor_ratio: 0.10,
+            young_pause_base_micros: 500,
+            young_pause_per_mb_micros: 30,
+            old_pause_base_micros: 20_000,
+            old_pause_per_mb_micros: 80,
+            old_release_ratio: 0.8,
+            stall: true,
+        }
+    }
+}
+
+/// Cumulative GC statistics (the JMX view).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcStats {
+    pub young_count: u64,
+    pub young_time_micros: u64,
+    pub old_count: u64,
+    pub old_time_micros: u64,
+    pub allocated_bytes: u64,
+    pub young_used: u64,
+    pub old_used: u64,
+}
+
+struct HeapState {
+    young_used: u64,
+    old_used: u64,
+}
+
+/// One simulated JVM heap (per component: generator / broker / engine task).
+pub struct JvmHeap {
+    config: GcConfig,
+    clock: ClockRef,
+    state: Mutex<HeapState>,
+    young_count: AtomicU64,
+    young_time: AtomicU64,
+    old_count: AtomicU64,
+    old_time: AtomicU64,
+    allocated: AtomicU64,
+}
+
+impl JvmHeap {
+    pub fn new(config: GcConfig, clock: ClockRef) -> Self {
+        Self {
+            config,
+            clock,
+            state: Mutex::new(HeapState {
+                young_used: 0,
+                old_used: 0,
+            }),
+            young_count: AtomicU64::new(0),
+            young_time: AtomicU64::new(0),
+            old_count: AtomicU64::new(0),
+            old_time: AtomicU64::new(0),
+            allocated: AtomicU64::new(0),
+        }
+    }
+
+    /// Account an allocation; runs GC cycles when generations fill.
+    /// Returns the total pause microseconds incurred (0 on the fast path).
+    pub fn alloc(&self, bytes: u64) -> u64 {
+        self.allocated.fetch_add(bytes, Ordering::Relaxed);
+        let mut pause_total = 0u64;
+        let mut st = self.state.lock().expect("heap state");
+        st.young_used += bytes;
+        while st.young_used >= self.config.young_bytes {
+            pause_total += self.young_gc(&mut st);
+        }
+        if pause_total > 0 && self.config.stall {
+            drop(st);
+            self.clock.sleep_micros(pause_total);
+        }
+        pause_total
+    }
+
+    /// One young collection under the state lock. Returns its pause.
+    fn young_gc(&self, st: &mut HeapState) -> u64 {
+        let fill = st.young_used.min(self.config.young_bytes);
+        let survivors = (fill as f64 * self.config.survivor_ratio) as u64;
+        let live_mb = survivors >> 20;
+        let pause = self.config.young_pause_base_micros
+            + self.config.young_pause_per_mb_micros * live_mb;
+        st.young_used = st.young_used.saturating_sub(self.config.young_bytes);
+        st.old_used += survivors;
+        self.young_count.fetch_add(1, Ordering::Relaxed);
+        self.young_time.fetch_add(pause, Ordering::Relaxed);
+        let mut total = pause;
+        if st.old_used >= self.config.old_bytes {
+            total += self.old_gc(st);
+        }
+        total
+    }
+
+    fn old_gc(&self, st: &mut HeapState) -> u64 {
+        let live_mb = st.old_used >> 20;
+        let pause =
+            self.config.old_pause_base_micros + self.config.old_pause_per_mb_micros * live_mb;
+        st.old_used = (st.old_used as f64 * (1.0 - self.config.old_release_ratio)) as u64;
+        self.old_count.fetch_add(1, Ordering::Relaxed);
+        self.old_time.fetch_add(pause, Ordering::Relaxed);
+        pause
+    }
+
+    pub fn stats(&self) -> GcStats {
+        let st = self.state.lock().expect("heap state");
+        GcStats {
+            young_count: self.young_count.load(Ordering::Relaxed),
+            young_time_micros: self.young_time.load(Ordering::Relaxed),
+            old_count: self.old_count.load(Ordering::Relaxed),
+            old_time_micros: self.old_time.load(Ordering::Relaxed),
+            allocated_bytes: self.allocated.load(Ordering::Relaxed),
+            young_used: st.young_used,
+            old_used: st.old_used,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock;
+
+    fn small_heap(stall: bool) -> JvmHeap {
+        JvmHeap::new(
+            GcConfig {
+                young_bytes: 1 << 20, // 1 MB young
+                old_bytes: 4 << 20,   // 4 MB old
+                survivor_ratio: 0.25,
+                young_pause_base_micros: 100,
+                young_pause_per_mb_micros: 10,
+                old_pause_base_micros: 1_000,
+                old_pause_per_mb_micros: 100,
+                old_release_ratio: 1.0,
+                stall,
+            },
+            clock::sim(),
+        )
+    }
+
+    #[test]
+    fn no_gc_below_young_capacity() {
+        let h = small_heap(false);
+        h.alloc(512 << 10);
+        let s = h.stats();
+        assert_eq!(s.young_count, 0);
+        assert_eq!(s.young_used, 512 << 10);
+    }
+
+    #[test]
+    fn young_gc_fires_and_promotes() {
+        let h = small_heap(false);
+        h.alloc(1 << 20); // exactly one young gen
+        let s = h.stats();
+        assert_eq!(s.young_count, 1);
+        assert_eq!(s.young_used, 0);
+        assert_eq!(s.old_used, 256 << 10, "25% survivors promoted");
+        assert!(s.young_time_micros >= 100);
+    }
+
+    #[test]
+    fn gc_count_scales_with_allocation_rate() {
+        // The Fig. 8c mechanism: double the allocation → double the GCs.
+        let h1 = small_heap(false);
+        let h2 = small_heap(false);
+        for _ in 0..64 {
+            h1.alloc(256 << 10);
+            h2.alloc(512 << 10);
+        }
+        let (s1, s2) = (h1.stats(), h2.stats());
+        assert_eq!(s2.young_count, 2 * s1.young_count);
+        assert!(s2.young_time_micros > s1.young_time_micros);
+    }
+
+    #[test]
+    fn old_gc_fires_after_enough_promotion() {
+        let h = small_heap(false);
+        // Each young GC promotes 256 KB; the 4 MB old gen fills after 16.
+        for _ in 0..20 {
+            h.alloc(1 << 20);
+        }
+        let s = h.stats();
+        assert!(s.old_count >= 1, "old GC never fired: {s:?}");
+        assert!(s.old_time_micros >= 1_000);
+    }
+
+    #[test]
+    fn stall_advances_clock() {
+        let c = clock::sim();
+        let h = JvmHeap::new(
+            GcConfig {
+                young_bytes: 1 << 20,
+                stall: true,
+                young_pause_base_micros: 777,
+                young_pause_per_mb_micros: 0,
+                ..GcConfig::default()
+            },
+            c.clone(),
+        );
+        let pause = h.alloc(1 << 20);
+        assert_eq!(pause, 777);
+        assert_eq!(c.now_micros(), 777);
+    }
+
+    #[test]
+    fn giant_allocation_triggers_multiple_young_gcs() {
+        let h = small_heap(false);
+        h.alloc(5 << 20); // five young gens at once
+        let s = h.stats();
+        assert_eq!(s.young_count, 5);
+    }
+
+    #[test]
+    fn concurrent_allocs_are_accounted() {
+        use std::sync::Arc;
+        let h = Arc::new(small_heap(false));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        h.alloc(1 << 10);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.stats().allocated_bytes, 4 * 1000 * (1 << 10));
+    }
+}

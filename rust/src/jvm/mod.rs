@@ -1,0 +1,20 @@
+//! Simulated JVM managed heap + garbage collector, with a JMX-style sampler.
+//!
+//! The paper's frameworks are JVM-based and Sec. 3.4 collects "memory usage
+//! and garbage collection (time and count)" through the JMX API; Fig. 8c
+//! shows young-GC count and duration growing over the run and with
+//! parallelism.  This substrate reproduces the mechanism behind that
+//! curve: processing allocates; allocation fills the young generation;
+//! young collections promote survivors; promoted bytes accumulate until a
+//! (much costlier) old collection.  Pause times stall the allocating
+//! thread in wall mode — exactly how a stop-the-world young pause shows up
+//! in end-to-end latency.
+//!
+//! * [`heap::JvmHeap`] — the allocator + GC state machine.
+//! * [`jmx::JmxSampler`] — periodic snapshot into the central metric store.
+
+pub mod heap;
+pub mod jmx;
+
+pub use heap::{GcConfig, GcStats, JvmHeap};
+pub use jmx::JmxSampler;

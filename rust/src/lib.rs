@@ -1,0 +1,39 @@
+//! # SProBench — Stream Processing Benchmark for HPC Infrastructure
+//!
+//! A from-scratch reproduction of *SProBench* (Kulkarni & Ghiasvand, 2025)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the benchmark suite itself: workload generator
+//!   ([`wgen`]), message broker ([`broker`]), stream-processing engine
+//!   ([`engine`]) with three framework personalities, the three paper
+//!   pipelines ([`pipelines`]), metric collection ([`metrics`], [`jvm`],
+//!   [`sysmon`]), SLURM integration ([`slurm`]), workflow automation
+//!   ([`workflow`]), post-processing ([`postprocess`]), the baseline
+//!   benchmark models ([`baselines`]) and the driver ([`coordinator`]).
+//! * **L2/L1 (build time)** — the pipelines' per-event compute as JAX +
+//!   Pallas programs, AOT-lowered to HLO text by `python/compile/aot.py`
+//!   and executed on the hot path through [`runtime`] (PJRT CPU client).
+//!
+//! Python never runs at request time: `make artifacts` compiles once, the
+//! Rust binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod broker;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod jvm;
+pub mod metrics;
+pub mod pipelines;
+pub mod postprocess;
+pub mod runtime;
+pub mod slurm;
+pub mod sysmon;
+pub mod util;
+pub mod wgen;
+pub mod workflow;

@@ -1,0 +1,5 @@
+//! SProBench CLI entrypoint.
+fn main() {
+    let code = sprobench::cli::main();
+    std::process::exit(code);
+}

@@ -1,0 +1,19 @@
+//! Metric collection (paper Sec. 3.4).
+//!
+//! Throughput and latency are measured at several locations along the
+//! pipeline (paper Fig. 5) so bottlenecks can be localised; process
+//! metrics (GC, heap) come from [`crate::jvm`], system metrics (CPU,
+//! membw, energy) from [`crate::sysmon`].  Everything lands in a central
+//! [`store::MetricStore`] which post-processing aggregates.
+//!
+//! * [`point`] — the measurement points along the pipeline.
+//! * [`recorder`] — lock-cheap throughput counters + latency histograms.
+//! * [`store`] — central time-series storage with CSV/JSON export.
+
+pub mod point;
+pub mod recorder;
+pub mod store;
+
+pub use point::MeasurementPoint;
+pub use recorder::{LatencyRecorder, ThroughputRecorder, ThroughputSnapshot};
+pub use store::{MetricStore, Series};

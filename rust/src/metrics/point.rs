@@ -1,0 +1,79 @@
+//! Measurement points along the processing pipeline (paper Fig. 5).
+//!
+//! Latencies measured at different locations decompose the end-to-end
+//! latency into benchmark-driver, broker, and processing components,
+//! "which in turn facilitates the identification of bottlenecks in each
+//! pipeline" (Sec. 3.4).
+
+/// Where along the pipeline a throughput/latency sample was taken.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MeasurementPoint {
+    /// Generator output (offered load).
+    DriverOut,
+    /// Ingestion broker append (producer → broker).
+    BrokerIn,
+    /// Engine source operator (broker → engine).
+    ProcIn,
+    /// Engine sink operator (engine → broker).
+    ProcOut,
+    /// Egestion broker append (processed stream received).
+    BrokerOut,
+    /// Full path: generation timestamp → egestion append.
+    EndToEnd,
+}
+
+impl MeasurementPoint {
+    pub const ALL: [MeasurementPoint; 6] = [
+        MeasurementPoint::DriverOut,
+        MeasurementPoint::BrokerIn,
+        MeasurementPoint::ProcIn,
+        MeasurementPoint::ProcOut,
+        MeasurementPoint::BrokerOut,
+        MeasurementPoint::EndToEnd,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MeasurementPoint::DriverOut => "driver_out",
+            MeasurementPoint::BrokerIn => "broker_in",
+            MeasurementPoint::ProcIn => "proc_in",
+            MeasurementPoint::ProcOut => "proc_out",
+            MeasurementPoint::BrokerOut => "broker_out",
+            MeasurementPoint::EndToEnd => "end_to_end",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            MeasurementPoint::DriverOut => 0,
+            MeasurementPoint::BrokerIn => 1,
+            MeasurementPoint::ProcIn => 2,
+            MeasurementPoint::ProcOut => 3,
+            MeasurementPoint::BrokerOut => 4,
+            MeasurementPoint::EndToEnd => 5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_dense_and_unique() {
+        let mut seen = [false; 6];
+        for p in MeasurementPoint::ALL {
+            assert!(!seen[p.index()]);
+            seen[p.index()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<_> = MeasurementPoint::ALL.iter().map(|p| p.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 6);
+    }
+}

@@ -1,0 +1,226 @@
+//! Hot-path metric recorders.
+//!
+//! Throughput: per-point atomic event/byte counters — `record_events` is a
+//! pair of relaxed fetch-adds, cheap enough for the per-batch path.
+//! Latency: per-point sharded histograms (one shard per recording thread
+//! bucket) merged at snapshot time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::point::MeasurementPoint;
+use crate::util::histogram::{Histogram, HistogramSummary};
+
+const POINTS: usize = 6;
+/// Latency shards per point; threads hash into shards to avoid contention.
+const SHARDS: usize = 8;
+
+/// Monotonic event/byte counters for every measurement point.
+#[derive(Default)]
+pub struct ThroughputRecorder {
+    events: [AtomicU64; POINTS],
+    bytes: [AtomicU64; POINTS],
+}
+
+/// A point-in-time view of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ThroughputSnapshot {
+    pub events: [u64; POINTS],
+    pub bytes: [u64; POINTS],
+}
+
+impl ThroughputRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record_events(&self, point: MeasurementPoint, events: u64, bytes: u64) {
+        self.events[point.index()].fetch_add(events, Ordering::Relaxed);
+        self.bytes[point.index()].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ThroughputSnapshot {
+        let mut s = ThroughputSnapshot::default();
+        for i in 0..POINTS {
+            s.events[i] = self.events[i].load(Ordering::Relaxed);
+            s.bytes[i] = self.bytes[i].load(Ordering::Relaxed);
+        }
+        s
+    }
+
+    pub fn events_at(&self, point: MeasurementPoint) -> u64 {
+        self.events[point.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_at(&self, point: MeasurementPoint) -> u64 {
+        self.bytes[point.index()].load(Ordering::Relaxed)
+    }
+}
+
+impl ThroughputSnapshot {
+    /// Events/sec between two snapshots `dt_micros` apart.
+    pub fn rate_events(&self, earlier: &ThroughputSnapshot, point: MeasurementPoint, dt_micros: u64) -> f64 {
+        if dt_micros == 0 {
+            return 0.0;
+        }
+        let d = self.events[point.index()].saturating_sub(earlier.events[point.index()]);
+        d as f64 * 1e6 / dt_micros as f64
+    }
+
+    /// Bytes/sec between two snapshots.
+    pub fn rate_bytes(&self, earlier: &ThroughputSnapshot, point: MeasurementPoint, dt_micros: u64) -> f64 {
+        if dt_micros == 0 {
+            return 0.0;
+        }
+        let d = self.bytes[point.index()].saturating_sub(earlier.bytes[point.index()]);
+        d as f64 * 1e6 / dt_micros as f64
+    }
+}
+
+/// Sharded latency histograms per measurement point (microseconds).
+pub struct LatencyRecorder {
+    shards: Vec<Mutex<Histogram>>, // POINTS * SHARDS
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self {
+            shards: (0..POINTS * SHARDS).map(|_| Mutex::new(Histogram::new())).collect(),
+        }
+    }
+
+    /// Record one latency sample. `shard_hint` (e.g. task index) spreads
+    /// threads across shards; any value works.
+    #[inline]
+    pub fn record(&self, point: MeasurementPoint, shard_hint: usize, micros: u64) {
+        let idx = point.index() * SHARDS + (shard_hint % SHARDS);
+        self.shards[idx].lock().expect("latency shard").record(micros);
+    }
+
+    /// Record `n` samples of the same value (batch completion).
+    #[inline]
+    pub fn record_n(&self, point: MeasurementPoint, shard_hint: usize, micros: u64, n: u64) {
+        let idx = point.index() * SHARDS + (shard_hint % SHARDS);
+        self.shards[idx].lock().expect("latency shard").record_n(micros, n);
+    }
+
+    /// Record many distinct samples under a single lock acquisition
+    /// (per-event latencies of one processed batch).
+    pub fn record_batch(
+        &self,
+        point: MeasurementPoint,
+        shard_hint: usize,
+        samples: impl Iterator<Item = u64>,
+    ) {
+        let idx = point.index() * SHARDS + (shard_hint % SHARDS);
+        let mut h = self.shards[idx].lock().expect("latency shard");
+        for s in samples {
+            h.record(s);
+        }
+    }
+
+    /// Merge all shards of a point into one histogram.
+    pub fn merged(&self, point: MeasurementPoint) -> Histogram {
+        let mut out = Histogram::new();
+        for s in 0..SHARDS {
+            let shard = self.shards[point.index() * SHARDS + s].lock().expect("latency shard");
+            out.merge(&shard);
+        }
+        out
+    }
+
+    pub fn summary(&self, point: MeasurementPoint) -> HistogramSummary {
+        self.merged(point).summary()
+    }
+
+    /// Drain-and-reset: returns the merged histogram and clears all shards
+    /// (used for per-interval timeline sampling in Fig. 8).
+    pub fn drain(&self, point: MeasurementPoint) -> Histogram {
+        let mut out = Histogram::new();
+        for s in 0..SHARDS {
+            let mut shard = self.shards[point.index() * SHARDS + s].lock().expect("latency shard");
+            out.merge(&shard);
+            shard.reset();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn throughput_rates() {
+        let r = ThroughputRecorder::new();
+        let t0 = r.snapshot();
+        r.record_events(MeasurementPoint::BrokerIn, 1000, 27_000);
+        let t1 = r.snapshot();
+        let ev = t1.rate_events(&t0, MeasurementPoint::BrokerIn, 1_000_000);
+        let by = t1.rate_bytes(&t0, MeasurementPoint::BrokerIn, 1_000_000);
+        assert_eq!(ev, 1000.0);
+        assert_eq!(by, 27_000.0);
+        // Other points untouched.
+        assert_eq!(t1.rate_events(&t0, MeasurementPoint::ProcIn, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn zero_dt_is_zero_rate() {
+        let r = ThroughputRecorder::new();
+        let s = r.snapshot();
+        assert_eq!(s.rate_events(&s, MeasurementPoint::BrokerIn, 0), 0.0);
+    }
+
+    #[test]
+    fn latency_merge_across_shards() {
+        let r = LatencyRecorder::new();
+        for shard in 0..16 {
+            r.record(MeasurementPoint::EndToEnd, shard, 100 * (shard as u64 + 1));
+        }
+        let h = r.merged(MeasurementPoint::EndToEnd);
+        assert_eq!(h.count(), 16);
+        assert!(h.max() >= 1500);
+    }
+
+    #[test]
+    fn drain_resets() {
+        let r = LatencyRecorder::new();
+        r.record(MeasurementPoint::ProcIn, 0, 50);
+        assert_eq!(r.drain(MeasurementPoint::ProcIn).count(), 1);
+        assert_eq!(r.merged(MeasurementPoint::ProcIn).count(), 0);
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let r = Arc::new(ThroughputRecorder::new());
+        let lat = Arc::new(LatencyRecorder::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let r = r.clone();
+                let lat = lat.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        r.record_events(MeasurementPoint::DriverOut, 1, 27);
+                        if i % 100 == 0 {
+                            lat.record(MeasurementPoint::DriverOut, t, i);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.events_at(MeasurementPoint::DriverOut), 80_000);
+        assert_eq!(r.bytes_at(MeasurementPoint::DriverOut), 80_000 * 27);
+        assert_eq!(lat.merged(MeasurementPoint::DriverOut).count(), 800);
+    }
+}

@@ -1,0 +1,237 @@
+//! Central metric storage (paper Fig. 5: "the monitoring layer transmits
+//! all metrics to a central storage").
+//!
+//! A [`MetricStore`] holds named time series of `(t_micros, value)` points
+//! appended by the samplers (throughput/latency interval sampler, JMX, Pika,
+//! MetricQ equivalents).  Post-processing reads it back, aggregates, and
+//! exports CSV/JSON for the report generators.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// One named time series.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Series {
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, t_micros: u64, value: f64) {
+        self.points.push((t_micros, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = f64> + '_ {
+        self.points.iter().map(|&(_, v)| v)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.values().sum::<f64>() / self.points.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn last(&self) -> Option<(u64, f64)> {
+        self.points.last().copied()
+    }
+
+    /// Restrict to `t >= from` (drop warmup samples).
+    pub fn after(&self, from_micros: u64) -> Series {
+        Series {
+            points: self
+                .points
+                .iter()
+                .copied()
+                .filter(|&(t, _)| t >= from_micros)
+                .collect(),
+        }
+    }
+
+    /// Normalize timestamps to [0,1] over the series span (Fig. 8's
+    /// "normalized runtime" x-axis).
+    pub fn normalized(&self) -> Vec<(f64, f64)> {
+        if self.points.is_empty() {
+            return vec![];
+        }
+        let t0 = self.points.first().expect("nonempty").0 as f64;
+        let t1 = self.points.last().expect("nonempty").0 as f64;
+        let span = (t1 - t0).max(1.0);
+        self.points
+            .iter()
+            .map(|&(t, v)| ((t as f64 - t0) / span, v))
+            .collect()
+    }
+}
+
+/// Thread-safe map of named series.
+#[derive(Default)]
+pub struct MetricStore {
+    series: Mutex<BTreeMap<String, Series>>,
+}
+
+impl MetricStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn append(&self, name: &str, t_micros: u64, value: f64) {
+        let mut m = self.series.lock().expect("metric store");
+        m.entry(name.to_string()).or_default().push(t_micros, value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<Series> {
+        self.series.lock().expect("metric store").get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.series.lock().expect("metric store").keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.series.lock().expect("metric store").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Export every series as JSON: `{name: [[t, v], ...], ...}`.
+    pub fn to_json(&self) -> Json {
+        let m = self.series.lock().expect("metric store");
+        let mut obj = Json::obj();
+        for (name, series) in m.iter() {
+            let arr = series
+                .points
+                .iter()
+                .map(|&(t, v)| Json::Arr(vec![Json::Int(t as i64), Json::Num(v)]))
+                .collect();
+            obj.set(name, Json::Arr(arr));
+        }
+        obj
+    }
+
+    /// Export one series as CSV (`t_micros,value` lines with header).
+    pub fn to_csv(&self, name: &str) -> Option<String> {
+        let s = self.get(name)?;
+        let mut out = String::from("t_micros,value\n");
+        for (t, v) in &s.points {
+            out.push_str(&format!("{t},{v}\n"));
+        }
+        Some(out)
+    }
+
+    /// Export all series into a wide CSV keyed by sample index (for series
+    /// with aligned sampling intervals, e.g. the Fig. 8 timeline).
+    pub fn to_wide_csv(&self, names: &[&str]) -> String {
+        let m = self.series.lock().expect("metric store");
+        let cols: Vec<&Series> = names.iter().filter_map(|n| m.get(*n)).collect();
+        let rows = cols.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut out = String::from("idx");
+        for n in names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        for i in 0..rows {
+            out.push_str(&i.to_string());
+            for c in &cols {
+                out.push(',');
+                match c.points.get(i) {
+                    Some((_, v)) => out.push_str(&format!("{v}")),
+                    None => out.push_str(""),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read_back() {
+        let store = MetricStore::new();
+        store.append("throughput.broker_in", 0, 100.0);
+        store.append("throughput.broker_in", 1_000_000, 200.0);
+        let s = store.get("throughput.broker_in").unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.mean(), 150.0);
+        assert_eq!(s.max(), 200.0);
+        assert_eq!(s.last(), Some((1_000_000, 200.0)));
+    }
+
+    #[test]
+    fn after_drops_warmup() {
+        let store = MetricStore::new();
+        for t in 0..10u64 {
+            store.append("x", t * 1_000_000, t as f64);
+        }
+        let s = store.get("x").unwrap().after(5_000_000);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.points[0].1, 5.0);
+    }
+
+    #[test]
+    fn normalized_runtime_spans_unit_interval() {
+        let store = MetricStore::new();
+        for t in [10u64, 20, 30, 40] {
+            store.append("n", t, t as f64);
+        }
+        let n = store.get("n").unwrap().normalized();
+        assert_eq!(n.first().unwrap().0, 0.0);
+        assert_eq!(n.last().unwrap().0, 1.0);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let store = MetricStore::new();
+        store.append("a", 1, 2.5);
+        store.append("b", 2, 3.0);
+        let j = store.to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("a").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[1].as_f64(),
+            Some(2.5)
+        );
+    }
+
+    #[test]
+    fn csv_export() {
+        let store = MetricStore::new();
+        store.append("lat", 1000, 42.0);
+        let csv = store.to_csv("lat").unwrap();
+        assert!(csv.starts_with("t_micros,value\n"));
+        assert!(csv.contains("1000,42"));
+        assert!(store.to_csv("missing").is_none());
+    }
+
+    #[test]
+    fn wide_csv_handles_ragged_series() {
+        let store = MetricStore::new();
+        store.append("a", 0, 1.0);
+        store.append("a", 1, 2.0);
+        store.append("b", 0, 9.0);
+        let csv = store.to_wide_csv(&["a", "b"]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "idx,a,b");
+        assert_eq!(lines[1], "0,1,9");
+        assert_eq!(lines[2], "1,2,");
+    }
+}

@@ -1,0 +1,257 @@
+//! Fused pipeline: CPU transform + keyed window in one HLO dispatch.
+//!
+//! An extension beyond the paper's three pipelines (DESIGN.md lists it as
+//! an ablation): the °C→°F transform feeds the sliding window directly, so
+//! a single `fused_pipeline_step` artifact does the work of both pipelines
+//! per batch — XLA fuses the elementwise stage into the scatter's operand.
+//! The ablation bench compares one fused dispatch against two separate
+//! ones (`cargo bench --bench hotpath_micro`).
+
+use super::{Compute, PipelineStep, StepStats, HLO_KEYS};
+use crate::broker::Record;
+use crate::engine::{EventBatch, SlidingWindow, WindowEmit};
+use crate::runtime::Input;
+use crate::wgen::{EventFormat, SensorEvent};
+
+pub struct Fused {
+    compute: Compute,
+    threshold_f: f32,
+    event_bytes: usize,
+    window: SlidingWindow,
+    keys: usize,
+    stats: StepStats,
+    ids_pad: Vec<i32>,
+    temps_pad: Vec<f32>,
+    wire: Vec<u8>,
+}
+
+impl Fused {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        compute: Compute,
+        threshold_f: f32,
+        event_bytes: usize,
+        sensors: usize,
+        window_micros: u64,
+        slide_micros: u64,
+        start_micros: u64,
+    ) -> Self {
+        let keys = match &compute {
+            Compute::Hlo(_) => sensors.min(HLO_KEYS),
+            Compute::Native => sensors,
+        };
+        Self {
+            compute,
+            threshold_f,
+            event_bytes,
+            window: SlidingWindow::new(keys, window_micros, slide_micros, start_micros),
+            keys,
+            stats: StepStats::default(),
+            ids_pad: Vec::new(),
+            temps_pad: Vec::new(),
+            wire: Vec::new(),
+        }
+    }
+
+    fn emit_windows(&mut self, emits: Vec<WindowEmit>, out: &mut Vec<Record>) {
+        for e in emits {
+            self.stats.window_emits += 1;
+            for &(key, mean, count) in &e.aggregates {
+                let payload = format!(
+                    "{{\"win\":{},\"id\":{},\"avg\":{:.3},\"n\":{}}}",
+                    e.end_micros, key, mean, count
+                );
+                out.push(Record::new(key, payload.into_bytes(), e.end_micros));
+                self.stats.events_out += 1;
+            }
+        }
+    }
+
+    fn emit_transformed(&mut self, batch: &EventBatch, fahr: &[f32], alerts: &[f32], out: &mut Vec<Record>) {
+        let fmt = if self.event_bytes < 40 {
+            EventFormat::Csv
+        } else {
+            EventFormat::Json
+        };
+        for i in 0..batch.len() {
+            if alerts[i] > 0.5 {
+                self.stats.alerts += 1;
+            }
+            let ev = SensorEvent {
+                ts_micros: batch.gen_ts[i],
+                sensor_id: batch.ids[i],
+                temp_c: fahr[i],
+            };
+            ev.serialize_into(fmt, self.event_bytes, &mut self.wire);
+            out.push(Record::new(batch.ids[i], self.wire.as_slice(), batch.gen_ts[i]));
+            self.stats.events_out += 1;
+        }
+    }
+}
+
+impl PipelineStep for Fused {
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+
+    fn process(
+        &mut self,
+        now_micros: u64,
+        _records: &[Record],
+        batch: &EventBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        if !batch.is_empty() {
+            self.stats.events_in += batch.len() as u64;
+            match &self.compute {
+                Compute::Hlo(rt) => {
+                    let mut fahr_all = Vec::with_capacity(batch.len());
+                    let mut alerts_all = Vec::with_capacity(batch.len());
+                    let thresh = [self.threshold_f];
+                    let mut off = 0;
+                    while off < batch.len() {
+                        let remaining = batch.len() - off;
+                        let artifact = rt.select("fused_pipeline_step", remaining)?;
+                        let (b, k) = (artifact.batch, artifact.keys);
+                        let name = artifact.name.clone();
+                        let take = b.min(remaining);
+                        self.ids_pad.clear();
+                        self.temps_pad.clear();
+                        for i in off..off + take {
+                            let id = batch.ids[i] as usize;
+                            self.ids_pad
+                                .push(if id < self.keys { id as i32 } else { k as i32 });
+                            self.temps_pad.push(batch.temps[i]);
+                        }
+                        self.ids_pad.resize(b, k as i32);
+                        self.temps_pad.resize(b, 0.0);
+                        let pane = self.window.current_pane();
+                        let mut sum_state = pane.sum.clone();
+                        let mut cnt_state = pane.cnt.clone();
+                        sum_state.resize(k, 0.0);
+                        cnt_state.resize(k, 0.0);
+                        let outs = rt.execute_f32(
+                            &name,
+                            &[
+                                Input::I32(&self.ids_pad),
+                                Input::F32(&self.temps_pad),
+                                Input::F32(&thresh),
+                                Input::F32(&sum_state),
+                                Input::F32(&cnt_state),
+                            ],
+                        )?;
+                        self.stats.hlo_calls += 1;
+                        let mut it = outs.into_iter();
+                        let f = it.next().ok_or("missing fahr")?;
+                        let a = it.next().ok_or("missing alerts")?;
+                        let mut s = it.next().ok_or("missing sum")?;
+                        let mut c = it.next().ok_or("missing cnt")?;
+                        fahr_all.extend_from_slice(&f[..take]);
+                        alerts_all.extend_from_slice(&a[..take]);
+                        s.truncate(self.keys);
+                        c.truncate(self.keys);
+                        self.window.store_state(s, c);
+                        off += take;
+                    }
+                    let fahr = std::mem::take(&mut fahr_all);
+                    let alerts = std::mem::take(&mut alerts_all);
+                    self.emit_transformed(batch, &fahr, &alerts, out);
+                }
+                Compute::Native => {
+                    let fahr: Vec<f32> =
+                        batch.temps.iter().map(|t| t * 9.0 / 5.0 + 32.0).collect();
+                    let alerts: Vec<f32> = fahr
+                        .iter()
+                        .map(|&x| if x > self.threshold_f { 1.0 } else { 0.0 })
+                        .collect();
+                    self.window.accumulate_native(&batch.ids, &fahr);
+                    self.emit_transformed(batch, &fahr, &alerts, out);
+                }
+            }
+        }
+        let emits = self.window.advance(now_micros);
+        self.emit_windows(emits, out);
+        Ok(())
+    }
+
+    fn finish(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
+        let mut emits = self.window.advance(now_micros);
+        emits.extend(self.window.flush());
+        self.emit_windows(emits, out);
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RuntimeFactory;
+    use crate::util::json;
+
+    fn batch(ids: &[u32], temps: &[f32], ts: u64) -> EventBatch {
+        EventBatch {
+            ids: ids.to_vec(),
+            temps: temps.to_vec(),
+            gen_ts: vec![ts; ids.len()],
+            append_ts: vec![ts; ids.len()],
+            payload_bytes: ids.len() as u64 * 27,
+        }
+    }
+
+    #[test]
+    fn native_fused_emits_transformed_plus_windows() {
+        let mut p = Fused::new(Compute::Native, 80.0, 27, 8, 2_000_000, 1_000_000, 0);
+        let mut out = Vec::new();
+        p.process(0, &[], &batch(&[1, 2], &[0.0, 100.0], 0), &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 2, "transformed events forwarded immediately");
+        p.process(1_000_000, &[], &EventBatch::default(), &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 4, "window aggregates for both keys");
+        // Window aggregates fahrenheit (key 1: 32°F, key 2: 212°F).
+        let agg = json::parse(std::str::from_utf8(out[2].payload()).unwrap()).unwrap();
+        assert!((agg.get("avg").unwrap().as_f64().unwrap() - 32.0).abs() < 0.01);
+        assert_eq!(p.stats().alerts, 1);
+    }
+
+    #[test]
+    fn hlo_fused_matches_native() {
+        let f = RuntimeFactory::default_dir();
+        if !f.available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let ids: Vec<u32> = (0..400).map(|i| i % 32).collect();
+        let temps: Vec<f32> = (0..400).map(|i| i as f32 / 7.0 - 20.0).collect();
+        let mut native = Fused::new(Compute::Native, 80.0, 27, 32, 2_000_000, 1_000_000, 0);
+        let mut hlo = Fused::new(
+            Compute::Hlo(f.create().unwrap()),
+            80.0,
+            27,
+            32,
+            2_000_000,
+            1_000_000,
+            0,
+        );
+        let (mut on, mut oh) = (Vec::new(), Vec::new());
+        native.process(0, &[], &batch(&ids, &temps, 0), &mut on).unwrap();
+        hlo.process(0, &[], &batch(&ids, &temps, 0), &mut oh).unwrap();
+        native.finish(1_000_000, &mut on).unwrap();
+        hlo.finish(1_000_000, &mut oh).unwrap();
+        assert_eq!(on.len(), oh.len());
+        assert_eq!(native.stats().alerts, hlo.stats().alerts);
+        // Compare the window aggregates (tail records).
+        let tail = 32;
+        for (a, b) in on[on.len() - tail..].iter().zip(&oh[oh.len() - tail..]) {
+            let ja = json::parse(std::str::from_utf8(a.payload()).unwrap()).unwrap();
+            let jb = json::parse(std::str::from_utf8(b.payload()).unwrap()).unwrap();
+            let va = ja.get("avg").unwrap().as_f64().unwrap();
+            let vb = jb.get("avg").unwrap().as_f64().unwrap();
+            assert!((va - vb).abs() < 0.02, "{va} vs {vb}");
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Memory-intensive pipeline (paper Sec. 3.3, blue path).
+//!
+//! Parses the sensor stream, keys it by sensor ID, and maintains a sliding
+//! window over the temperatures; the per-key mean is kept as operator
+//! state and emitted at every slide boundary.  The per-batch state update
+//! is the `mem_pipeline_step` HLO artifact (L1 Pallas `keyed_window`
+//! kernel: masked-matmul scatter into VMEM-resident accumulators), with a
+//! native Rust path as the ablation baseline.
+
+use super::{Compute, PipelineStep, StepStats, HLO_KEYS};
+use crate::broker::Record;
+use crate::engine::{EventBatch, SlidingWindow, WindowEmit};
+use crate::runtime::Input;
+
+pub struct MemIntensive {
+    compute: Compute,
+    window: SlidingWindow,
+    keys: usize,
+    stats: StepStats,
+    // Reused marshalling buffers.
+    ids_pad: Vec<i32>,
+    temps_pad: Vec<f32>,
+}
+
+impl MemIntensive {
+    pub fn new(
+        compute: Compute,
+        sensors: usize,
+        window_micros: u64,
+        slide_micros: u64,
+        start_micros: u64,
+    ) -> Self {
+        // The AOT artifacts carry K = 1024 key slots; wider configurations
+        // use the native path for state (documented in DESIGN.md §5).
+        let keys = match &compute {
+            Compute::Hlo(_) => sensors.min(HLO_KEYS),
+            Compute::Native => sensors,
+        };
+        Self {
+            compute,
+            window: SlidingWindow::new(keys, window_micros, slide_micros, start_micros),
+            keys,
+            stats: StepStats::default(),
+            ids_pad: Vec::new(),
+            temps_pad: Vec::new(),
+        }
+    }
+
+    /// Accumulate one parsed batch into the open pane.
+    fn accumulate(&mut self, batch: &EventBatch) -> Result<(), String> {
+        match &self.compute {
+            Compute::Hlo(rt) => {
+                let mut off = 0;
+                while off < batch.len() {
+                    let remaining = batch.len() - off;
+                    let artifact = rt.select("mem_pipeline_step", remaining)?;
+                    let b = artifact.batch;
+                    let k = artifact.keys;
+                    let name = artifact.name.clone();
+                    debug_assert_eq!(k, HLO_KEYS);
+                    let take = b.min(remaining);
+                    self.ids_pad.clear();
+                    self.temps_pad.clear();
+                    for i in off..off + take {
+                        // Out-of-range sensors (> K) become padding too.
+                        let id = batch.ids[i] as usize;
+                        self.ids_pad
+                            .push(if id < self.keys { id as i32 } else { k as i32 });
+                        self.temps_pad.push(batch.temps[i]);
+                    }
+                    // Pad with id == K so padded slots drop out of the
+                    // one-hot mask inside the kernel.
+                    self.ids_pad.resize(b, k as i32);
+                    self.temps_pad.resize(b, 0.0);
+                    // HLO state width is K; pane state is self.keys <= K.
+                    let pane = self.window.current_pane();
+                    let mut sum_state = pane.sum.clone();
+                    let mut cnt_state = pane.cnt.clone();
+                    sum_state.resize(k, 0.0);
+                    cnt_state.resize(k, 0.0);
+                    let out = rt.execute_f32(
+                        &name,
+                        &[
+                            Input::I32(&self.ids_pad),
+                            Input::F32(&self.temps_pad),
+                            Input::F32(&sum_state),
+                            Input::F32(&cnt_state),
+                        ],
+                    )?;
+                    self.stats.hlo_calls += 1;
+                    let mut it = out.into_iter();
+                    let mut new_sum = it.next().ok_or("missing sum output")?;
+                    let mut new_cnt = it.next().ok_or("missing cnt output")?;
+                    new_sum.truncate(self.keys);
+                    new_cnt.truncate(self.keys);
+                    self.window.store_state(new_sum, new_cnt);
+                    off += take;
+                }
+                Ok(())
+            }
+            Compute::Native => {
+                self.window.accumulate_native(&batch.ids, &batch.temps);
+                Ok(())
+            }
+        }
+    }
+
+    /// Serialize window emissions as compact JSON aggregate records.
+    fn emit(&mut self, emits: Vec<WindowEmit>, out: &mut Vec<Record>) {
+        for e in emits {
+            self.stats.window_emits += 1;
+            for &(key, mean, count) in &e.aggregates {
+                let payload = format!(
+                    "{{\"win\":{},\"id\":{},\"avg\":{:.3},\"n\":{}}}",
+                    e.end_micros, key, mean, count
+                );
+                out.push(Record::new(key, payload.into_bytes(), e.end_micros));
+                self.stats.events_out += 1;
+            }
+        }
+    }
+}
+
+impl PipelineStep for MemIntensive {
+    fn name(&self) -> &'static str {
+        "mem"
+    }
+
+    fn process(
+        &mut self,
+        now_micros: u64,
+        _records: &[Record],
+        batch: &EventBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        if !batch.is_empty() {
+            self.stats.events_in += batch.len() as u64;
+            self.accumulate(batch)?;
+        }
+        let emits = self.window.advance(now_micros);
+        self.emit(emits, out);
+        Ok(())
+    }
+
+    fn finish(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
+        // Drain boundaries reached by `now`, then force the final pane
+        // closed so short runs still emit their window.
+        let mut emits = self.window.advance(now_micros);
+        emits.extend(self.window.flush());
+        self.emit(emits, out);
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RuntimeFactory;
+    use crate::util::json;
+
+    fn batch(ids: &[u32], temps: &[f32], ts: u64) -> EventBatch {
+        EventBatch {
+            ids: ids.to_vec(),
+            temps: temps.to_vec(),
+            gen_ts: vec![ts; ids.len()],
+            append_ts: vec![ts; ids.len()],
+            payload_bytes: ids.len() as u64 * 27,
+        }
+    }
+
+    #[test]
+    fn native_window_emits_per_key_means() {
+        let mut p = MemIntensive::new(Compute::Native, 16, 10_000_000, 2_000_000, 0);
+        let mut out = Vec::new();
+        p.process(0, &[], &batch(&[1, 1, 2], &[10.0, 20.0, 7.0], 0), &mut out)
+            .unwrap();
+        assert!(out.is_empty(), "no boundary crossed yet");
+        p.process(2_000_000, &[], &EventBatch::default(), &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let agg = json::parse(std::str::from_utf8(out[0].payload()).unwrap()).unwrap();
+        assert_eq!(agg.get("id").unwrap().as_i64(), Some(1));
+        assert!((agg.get("avg").unwrap().as_f64().unwrap() - 15.0).abs() < 1e-6);
+        assert_eq!(agg.get("n").unwrap().as_i64(), Some(2));
+        assert_eq!(p.stats().window_emits, 1);
+    }
+
+    #[test]
+    fn hlo_state_update_matches_native() {
+        let f = RuntimeFactory::default_dir();
+        if !f.available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut native = MemIntensive::new(Compute::Native, 64, 4_000_000, 2_000_000, 0);
+        let mut hlo = MemIntensive::new(
+            Compute::Hlo(f.create().unwrap()),
+            64,
+            4_000_000,
+            2_000_000,
+            0,
+        );
+        let ids: Vec<u32> = (0..500).map(|i| i % 64).collect();
+        let temps: Vec<f32> = (0..500).map(|i| (i as f32) / 10.0).collect();
+        let (mut on, mut oh) = (Vec::new(), Vec::new());
+        native.process(0, &[], &batch(&ids, &temps, 0), &mut on).unwrap();
+        hlo.process(0, &[], &batch(&ids, &temps, 0), &mut oh).unwrap();
+        native.process(2_000_000, &[], &EventBatch::default(), &mut on).unwrap();
+        hlo.process(2_000_000, &[], &EventBatch::default(), &mut oh).unwrap();
+        assert_eq!(on.len(), oh.len());
+        assert_eq!(on.len(), 64);
+        for (a, b) in on.iter().zip(&oh) {
+            let ja = json::parse(std::str::from_utf8(a.payload()).unwrap()).unwrap();
+            let jb = json::parse(std::str::from_utf8(b.payload()).unwrap()).unwrap();
+            assert_eq!(ja.get("id"), jb.get("id"));
+            let va = ja.get("avg").unwrap().as_f64().unwrap();
+            let vb = jb.get("avg").unwrap().as_f64().unwrap();
+            assert!((va - vb).abs() < 0.01, "{va} vs {vb}");
+            assert_eq!(ja.get("n"), jb.get("n"));
+        }
+        assert!(hlo.stats().hlo_calls >= 1);
+    }
+
+    #[test]
+    fn finish_flushes_pending_pane() {
+        let mut p = MemIntensive::new(Compute::Native, 8, 2_000_000, 1_000_000, 0);
+        let mut out = Vec::new();
+        p.process(100, &[], &batch(&[3], &[5.0], 100), &mut out).unwrap();
+        assert!(out.is_empty());
+        p.finish(1_000_000, &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn out_of_range_sensor_ids_do_not_poison_state() {
+        let mut p = MemIntensive::new(Compute::Native, 4, 2_000_000, 1_000_000, 0);
+        let mut out = Vec::new();
+        p.process(0, &[], &batch(&[2, 9999], &[1.0, 1.0], 0), &mut out)
+            .unwrap();
+        p.finish(1_000_000, &mut out).unwrap();
+        assert_eq!(out.len(), 1, "only the in-range key emits");
+    }
+}

@@ -1,0 +1,209 @@
+//! The paper's processing pipelines (Sec. 3.3): pass-through,
+//! CPU-intensive, memory-intensive — plus the fused extension.
+//!
+//! Every pipeline implements [`PipelineStep`]; the compute-heavy ones run
+//! their per-batch math either through the AOT HLO artifacts
+//! ([`Compute::Hlo`], the default — L1/L2 of the stack) or through native
+//! Rust reference ops ([`Compute::Native`], the ablation baseline and the
+//! fallback when artifacts are absent).
+//!
+//! Pipeline steps are **thread-confined** (they own a PJRT [`Runtime`])
+//! and are created inside each engine task thread via [`StepFactory`].
+
+pub mod cpu;
+pub mod fused;
+pub mod mem;
+pub mod passthrough;
+
+pub use cpu::CpuIntensive;
+pub use fused::Fused;
+pub use mem::MemIntensive;
+pub use passthrough::PassThrough;
+
+use crate::broker::Record;
+use crate::config::{BenchConfig, PipelineKind};
+use crate::engine::EventBatch;
+use crate::runtime::{Runtime, RuntimeFactory};
+
+/// Cumulative per-step statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepStats {
+    pub events_in: u64,
+    pub events_out: u64,
+    pub alerts: u64,
+    pub hlo_calls: u64,
+    pub window_emits: u64,
+    pub parse_failures: u64,
+}
+
+/// One pipeline instance, owned by one engine task thread.
+pub trait PipelineStep {
+    fn name(&self) -> &'static str;
+
+    /// Whether the task must parse records into an [`EventBatch`]
+    /// (pass-through forwards raw payloads and skips parsing).
+    fn needs_parse(&self) -> bool {
+        true
+    }
+
+    /// Process one batch. `records` are the raw broker records, `batch`
+    /// the parsed view (empty when `needs_parse()` is false).  Outputs are
+    /// pushed into `out` for the egestion topic.
+    fn process(
+        &mut self,
+        now_micros: u64,
+        records: &[Record],
+        batch: &EventBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String>;
+
+    /// End-of-stream flush (windows emit their pending aggregates).
+    fn finish(&mut self, _now_micros: u64, _out: &mut Vec<Record>) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats;
+}
+
+/// Compute backend for the heavy pipelines.
+pub enum Compute {
+    /// AOT HLO artifacts executed via PJRT (the three-layer path).
+    Hlo(Runtime),
+    /// Native Rust reference implementation (ablation baseline).
+    Native,
+}
+
+impl Compute {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Compute::Hlo(_) => "hlo",
+            Compute::Native => "native",
+        }
+    }
+}
+
+/// Builder signature for user-defined pipelines (paper Sec. 3.3: "users
+/// can also define custom processing logic … with minimal modifications").
+/// Called once per engine task thread with the task's start time.
+pub type CustomStepBuilder =
+    Box<dyn Fn(u64) -> Result<Box<dyn PipelineStep>, String> + Send + Sync>;
+
+/// Sendable factory: builds a fresh thread-confined step per engine task.
+pub struct StepFactory {
+    config: BenchConfig,
+    runtime_factory: Option<RuntimeFactory>,
+    custom: Option<CustomStepBuilder>,
+}
+
+impl StepFactory {
+    /// `runtime_factory = None` (or `use_hlo: false` in the config) forces
+    /// the native compute path.
+    pub fn new(config: &BenchConfig, runtime_factory: Option<RuntimeFactory>) -> Self {
+        Self {
+            config: config.clone(),
+            runtime_factory: if config.engine.use_hlo {
+                runtime_factory
+            } else {
+                None
+            },
+            custom: None,
+        }
+    }
+
+    /// A factory that builds user-defined pipeline steps instead of the
+    /// configured kind — the suite's extensibility hook (see
+    /// `examples/custom_pipeline.rs`).
+    pub fn custom(config: &BenchConfig, builder: CustomStepBuilder) -> Self {
+        Self {
+            config: config.clone(),
+            runtime_factory: None,
+            custom: Some(builder),
+        }
+    }
+
+    fn compute(&self, program: &str) -> Result<Compute, String> {
+        match &self.runtime_factory {
+            Some(f) if f.available() => {
+                let rt = f.create()?;
+                // Compile every batch-size variant up front: PJRT
+                // compilation must never land on the first hot batch
+                // (it would poison the latency tail).
+                rt.warm(program)?;
+                Ok(Compute::Hlo(rt))
+            }
+            Some(f) => Err(format!(
+                "artifacts not found in {} — run `make artifacts`",
+                f.dir().display()
+            )),
+            None => Ok(Compute::Native),
+        }
+    }
+
+    /// Build the configured pipeline for one task thread.
+    pub fn create(&self, start_micros: u64) -> Result<Box<dyn PipelineStep>, String> {
+        if let Some(builder) = &self.custom {
+            return builder(start_micros);
+        }
+        let c = &self.config;
+        Ok(match c.engine.pipeline {
+            PipelineKind::PassThrough => Box::new(PassThrough::new()),
+            PipelineKind::CpuIntensive => Box::new(CpuIntensive::new(
+                self.compute("cpu_pipeline_step")?,
+                c.engine.threshold_f,
+                c.workload.event_bytes,
+            )),
+            PipelineKind::MemIntensive => Box::new(MemIntensive::new(
+                self.compute("mem_pipeline_step")?,
+                c.workload.sensors as usize,
+                c.engine.window_micros,
+                c.engine.slide_micros,
+                start_micros,
+            )),
+            PipelineKind::Fused => Box::new(Fused::new(
+                self.compute("fused_pipeline_step")?,
+                c.engine.threshold_f,
+                c.workload.event_bytes,
+                c.workload.sensors as usize,
+                c.engine.window_micros,
+                c.engine.slide_micros,
+                start_micros,
+            )),
+        })
+    }
+}
+
+/// Round `n` up to the HLO key-state width supported by the artifacts.
+/// The AOT variants are built with K = 1024; configs with more sensors
+/// fall back to native compute for the keyed pipelines.
+pub const HLO_KEYS: usize = 1024;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_each_kind_native() {
+        let mut cfg = BenchConfig::default();
+        cfg.engine.use_hlo = false;
+        for kind in [
+            PipelineKind::PassThrough,
+            PipelineKind::CpuIntensive,
+            PipelineKind::MemIntensive,
+            PipelineKind::Fused,
+        ] {
+            cfg.engine.pipeline = kind;
+            let f = StepFactory::new(&cfg, None);
+            let step = f.create(0).unwrap();
+            assert_eq!(step.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn missing_artifacts_is_a_readable_error() {
+        let mut cfg = BenchConfig::default();
+        cfg.engine.pipeline = PipelineKind::CpuIntensive;
+        let f = StepFactory::new(&cfg, Some(RuntimeFactory::new("/nonexistent")));
+        let err = f.create(0).err().unwrap();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

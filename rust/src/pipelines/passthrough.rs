@@ -1,0 +1,76 @@
+//! Pass-through pipeline: the baseline (paper Sec. 3.3, green path).
+//!
+//! "The generated data is transmitted through the message broker, ingested
+//! by the streaming engines, and then forwarded to the message broker
+//! without undergoing any processing."  Payload `Arc`s are forwarded, so
+//! the cost is purely the engine's plumbing — which is the point of the
+//! baseline.
+
+use super::{PipelineStep, StepStats};
+use crate::broker::Record;
+use crate::engine::EventBatch;
+
+#[derive(Default)]
+pub struct PassThrough {
+    stats: StepStats,
+}
+
+impl PassThrough {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl PipelineStep for PassThrough {
+    fn name(&self) -> &'static str {
+        "passthrough"
+    }
+
+    fn needs_parse(&self) -> bool {
+        false
+    }
+
+    fn process(
+        &mut self,
+        _now_micros: u64,
+        records: &[Record],
+        _batch: &EventBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.stats.events_in += records.len() as u64;
+        self.stats.events_out += records.len() as u64;
+        out.extend(records.iter().cloned());
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forwards_without_copying_payloads() {
+        let mut p = PassThrough::new();
+        let records = vec![
+            Record::new(1, vec![1u8, 2, 3], 10),
+            Record::new(2, vec![4u8, 5], 20),
+        ];
+        let mut out = Vec::new();
+        p.process(0, &records, &EventBatch::default(), &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out[0].shares_storage_with(&records[0]));
+        let s = p.stats();
+        assert_eq!(s.events_in, 2);
+        assert_eq!(s.events_out, 2);
+    }
+
+    #[test]
+    fn does_not_require_parsing() {
+        assert!(!PassThrough::new().needs_parse());
+    }
+}

@@ -1,0 +1,15 @@
+//! Post-processing: aggregate, validate, and render collected metrics.
+//!
+//! The paper's post-processing unit "aggregates and validates the
+//! monitoring data" for offline analysis (Sec. 3).  Here:
+//!
+//! * [`report`] — ASCII tables + plots and CSV emitters used by the CLI
+//!   `report` command, the examples, and every bench target.
+//! * [`validate`] — consistency checks over a finished run's results
+//!   (conservation of events, sane latencies, monotone counters).
+
+pub mod report;
+pub mod validate;
+
+pub use report::{ascii_plot, ascii_table, csv_from_rows};
+pub use validate::{validate_results, Violation};

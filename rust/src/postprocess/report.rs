@@ -1,0 +1,145 @@
+//! ASCII table/plot rendering and CSV emission.
+
+/// Render an aligned ASCII table.
+pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(cols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep: String = {
+        let mut s = String::from("+");
+        for w in &widths {
+            s.push_str(&"-".repeat(w + 2));
+            s.push('+');
+        }
+        s.push('\n');
+        s
+    };
+    let mut out = String::new();
+    out.push_str(&sep);
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {h:<w$} |"));
+    }
+    out.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push('|');
+        for i in 0..cols {
+            let empty = String::new();
+            let cell = row.get(i).unwrap_or(&empty);
+            out.push_str(&format!(" {cell:<w$} |", w = widths[i]));
+        }
+        out.push('\n');
+    }
+    out.push_str(&sep);
+    out
+}
+
+/// Render a single series as an ASCII line plot (x ascending).
+pub fn ascii_plot(series: &[(f64, f64)], width: usize, height: usize, title: &str) -> String {
+    let mut out = format!("{title}\n");
+    if series.is_empty() || width < 8 || height < 2 {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (xmin, xmax) = series
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &(x, _)| {
+            (a.min(x), b.max(x))
+        });
+    let (ymin, ymax) = series
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &(_, y)| {
+            (a.min(y), b.max(y))
+        });
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+    let mut grid = vec![vec![b' '; width]; height];
+    for &(x, y) in series {
+        let cx = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+        let cy = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+        grid[height - 1 - cy][cx] = b'*';
+    }
+    out.push_str(&format!("{ymax:>12.3} ┤\n"));
+    for row in grid {
+        out.push_str("             │");
+        out.push_str(std::str::from_utf8(&row).expect("ascii"));
+        out.push('\n');
+    }
+    out.push_str(&format!("{ymin:>12.3} ┤"));
+    out.push_str(&"─".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "             {xmin:<.3} … {xmax:<.3}\n"
+    ));
+    out
+}
+
+/// Emit rows as CSV with a header line.
+pub fn csv_from_rows(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = headers.join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(
+            &row.iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = ascii_table(
+            &["name", "rate"],
+            &[
+                vec!["sprobench".into(), "40M".into()],
+                vec!["ysb".into(), "0.2M".into()],
+            ],
+        );
+        assert!(t.contains("| sprobench | 40M  |"));
+        assert!(t.contains("| ysb       | 0.2M |"));
+        let lines: Vec<&str> = t.lines().collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "ragged table:\n{t}");
+    }
+
+    #[test]
+    fn plot_renders_points() {
+        let series: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, (i * i) as f64)).collect();
+        let p = ascii_plot(&series, 40, 10, "growth");
+        assert!(p.starts_with("growth\n"));
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn plot_empty_series_is_graceful() {
+        assert!(ascii_plot(&[], 40, 10, "t").contains("(no data)"));
+    }
+
+    #[test]
+    fn csv_escapes_commas_and_quotes() {
+        let csv = csv_from_rows(
+            &["a", "b"],
+            &[vec!["x,y".into(), "say \"hi\"".into()]],
+        );
+        assert_eq!(csv, "a,b\n\"x,y\",\"say \"\"hi\"\"\"\n");
+    }
+}

@@ -1,0 +1,184 @@
+//! Result validation: the consistency checks the post-processing unit
+//! applies before a run's numbers are trusted (the paper cites ESPBench's
+//! result-validation emphasis and adopts it).
+
+use crate::util::json::Json;
+
+/// One failed validation check.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Violation {
+    pub check: &'static str,
+    pub detail: String,
+}
+
+fn get_f(j: &Json, path: &[&str]) -> Option<f64> {
+    j.path(path).and_then(|v| v.as_f64())
+}
+
+/// Validate a run's `results.json` document.
+///
+/// Expected shape (produced by the coordinator):
+/// ```json
+/// {
+///   "pipeline": "cpu", "events": {"generated": N, "processed": N, "emitted": N},
+///   "latency_us": {"broker_in": {...}, "end_to_end": {"p50": x, "p99": y, ...}},
+///   "throughput": {"offered": r, "processed": r},
+///   "gc": {"young_count": n, "young_time_ms": t},
+///   "energy": {"joules": e}
+/// }
+/// ```
+pub fn validate_results(results: &Json) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let pipeline = results
+        .get("pipeline")
+        .and_then(|p| p.as_str())
+        .unwrap_or("");
+
+    let generated = get_f(results, &["events", "generated"]).unwrap_or(-1.0);
+    let processed = get_f(results, &["events", "processed"]).unwrap_or(-1.0);
+    let emitted = get_f(results, &["events", "emitted"]).unwrap_or(-1.0);
+
+    if generated < 0.0 || processed < 0.0 || emitted < 0.0 {
+        v.push(Violation {
+            check: "counters-present",
+            detail: "missing events.{generated,processed,emitted}".into(),
+        });
+        return v;
+    }
+    if generated == 0.0 {
+        v.push(Violation {
+            check: "nonempty-run",
+            detail: "no events were generated".into(),
+        });
+    }
+    if processed > generated {
+        v.push(Violation {
+            check: "conservation",
+            detail: format!("processed {processed} > generated {generated}"),
+        });
+    }
+    // Pass-through and CPU pipelines forward 1:1; processed events that
+    // vanished without being emitted indicate loss.
+    if (pipeline == "passthrough" || pipeline == "cpu") && emitted < processed {
+        v.push(Violation {
+            check: "forwarding",
+            detail: format!("{pipeline}: emitted {emitted} < processed {processed}"),
+        });
+    }
+    // Latency sanity: p50 <= p99, positive, and present for e2e.
+    match (
+        get_f(results, &["latency_us", "end_to_end", "p50"]),
+        get_f(results, &["latency_us", "end_to_end", "p99"]),
+    ) {
+        (Some(p50), Some(p99)) => {
+            if p50 > p99 {
+                v.push(Violation {
+                    check: "latency-order",
+                    detail: format!("e2e p50 {p50} > p99 {p99}"),
+                });
+            }
+            if p50 < 0.0 {
+                v.push(Violation {
+                    check: "latency-positive",
+                    detail: format!("negative p50 {p50}"),
+                });
+            }
+        }
+        _ if processed > 0.0 => v.push(Violation {
+            check: "latency-present",
+            detail: "processed events but no end-to-end latency recorded".into(),
+        }),
+        _ => {}
+    }
+    // GC counters are cumulative → non-negative.
+    if let Some(c) = get_f(results, &["gc", "young_count"]) {
+        if c < 0.0 {
+            v.push(Violation {
+                check: "gc-nonnegative",
+                detail: format!("young_count {c}"),
+            });
+        }
+    }
+    if let Some(j) = get_f(results, &["energy", "joules"]) {
+        if !(j >= 0.0) || j.is_nan() {
+            v.push(Violation {
+                check: "energy-sane",
+                detail: format!("joules {j}"),
+            });
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn good() -> Json {
+        parse(
+            r#"{
+            "pipeline": "cpu",
+            "events": {"generated": 1000, "processed": 1000, "emitted": 1000},
+            "latency_us": {"end_to_end": {"p50": 900, "p99": 4000}},
+            "gc": {"young_count": 4},
+            "energy": {"joules": 120.5}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn clean_run_validates() {
+        assert!(validate_results(&good()).is_empty());
+    }
+
+    #[test]
+    fn detects_event_loss_on_forwarding_pipelines() {
+        let mut j = good();
+        crate::config::overlay(&mut j, "events.emitted", Json::Int(900));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "forwarding"), "{v:?}");
+    }
+
+    #[test]
+    fn mem_pipeline_may_emit_fewer() {
+        let mut j = good();
+        crate::config::overlay(&mut j, "pipeline", Json::Str("mem".into()));
+        crate::config::overlay(&mut j, "events.emitted", Json::Int(64));
+        assert!(validate_results(&j).is_empty());
+    }
+
+    #[test]
+    fn detects_impossible_conservation() {
+        let mut j = good();
+        crate::config::overlay(&mut j, "events.processed", Json::Int(2000));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "conservation"));
+    }
+
+    #[test]
+    fn detects_inverted_percentiles() {
+        let mut j = good();
+        crate::config::overlay(&mut j, "latency_us.end_to_end.p50", Json::Int(9000));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "latency-order"));
+    }
+
+    #[test]
+    fn missing_counters_is_fatal() {
+        let j = parse(r#"{"pipeline": "cpu"}"#).unwrap();
+        let v = validate_results(&j);
+        assert_eq!(v[0].check, "counters-present");
+    }
+
+    #[test]
+    fn empty_run_is_flagged() {
+        let mut j = good();
+        crate::config::overlay(&mut j, "events.generated", Json::Int(0));
+        crate::config::overlay(&mut j, "events.processed", Json::Int(0));
+        crate::config::overlay(&mut j, "events.emitted", Json::Int(0));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "nonempty-run"));
+    }
+}

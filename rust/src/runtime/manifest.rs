@@ -1,0 +1,256 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` lists every AOT-lowered HLO module with its
+//! I/O signature; the runtime keys executable selection and marshalling
+//! off this file and never guesses shapes.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Element type of a tensor input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(format!("unsupported dtype '{other}'")),
+        }
+    }
+}
+
+/// One tensor signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or("io spec missing dtype")?,
+        )?;
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or("io spec missing shape")?
+            .iter()
+            .map(|v| v.as_i64().map(|i| i as usize).ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self { dtype, shape })
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    /// L2 program this artifact lowers ("cpu_pipeline_step", …).
+    pub program: String,
+    pub batch: usize,
+    pub keys: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub source_sha256: String,
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse(dir: &Path, text: &str) -> Result<Self, String> {
+        let j = json::parse(text).map_err(|e| e.to_string())?;
+        let version = j.get("version").and_then(|v| v.as_i64()).unwrap_or(0);
+        if version != 1 {
+            return Err(format!("manifest version {version} unsupported (want 1)"));
+        }
+        let source_sha256 = j
+            .get("source_sha256")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
+        let mut artifacts = Vec::new();
+        for entry in j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("manifest missing artifacts list")?
+        {
+            let name = entry
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact missing name")?
+                .to_string();
+            let file = entry
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact missing file")?
+                .to_string();
+            let program = entry
+                .get("program")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact missing program")?
+                .to_string();
+            let batch = entry.get("batch").and_then(|v| v.as_i64()).unwrap_or(0) as usize;
+            let keys = entry.get("keys").and_then(|v| v.as_i64()).unwrap_or(0) as usize;
+            let inputs = entry
+                .get("inputs")
+                .and_then(|a| a.as_arr())
+                .ok_or("artifact missing inputs")?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            let outputs = entry
+                .get("outputs")
+                .and_then(|a| a.as_arr())
+                .ok_or("artifact missing outputs")?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            artifacts.push(Artifact {
+                name,
+                file,
+                program,
+                batch,
+                keys,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Self {
+            source_sha256,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Pick the best batch-size variant of `program` for `batch` events:
+    /// the smallest variant with `variant.batch >= batch`, else the
+    /// largest available (the batcher then splits).
+    pub fn select(&self, program: &str, batch: usize) -> Option<&Artifact> {
+        let mut candidates: Vec<&Artifact> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.program == program)
+            .collect();
+        candidates.sort_by_key(|a| a.batch);
+        candidates
+            .iter()
+            .find(|a| a.batch >= batch)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    pub fn hlo_path(&self, artifact: &Artifact) -> PathBuf {
+        self.dir.join(&artifact.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "source_sha256": "abc",
+      "artifacts": [
+        {"name": "cpu_b256", "file": "cpu_b256.hlo.txt",
+         "program": "cpu_pipeline_step", "batch": 256, "keys": 0,
+         "inputs": [{"dtype": "float32", "shape": [256]},
+                    {"dtype": "float32", "shape": [1]}],
+         "outputs": [{"dtype": "float32", "shape": [256]},
+                     {"dtype": "float32", "shape": [256]}]},
+        {"name": "cpu_b1024", "file": "cpu_b1024.hlo.txt",
+         "program": "cpu_pipeline_step", "batch": 1024, "keys": 0,
+         "inputs": [{"dtype": "float32", "shape": [1024]},
+                    {"dtype": "float32", "shape": [1]}],
+         "outputs": [{"dtype": "float32", "shape": [1024]},
+                     {"dtype": "float32", "shape": [1024]}]},
+        {"name": "mem_b256_k1024", "file": "mem.hlo.txt",
+         "program": "mem_pipeline_step", "batch": 256, "keys": 1024,
+         "inputs": [{"dtype": "int32", "shape": [256]},
+                    {"dtype": "float32", "shape": [256]},
+                    {"dtype": "float32", "shape": [1024]},
+                    {"dtype": "float32", "shape": [1024]}],
+         "outputs": [{"dtype": "float32", "shape": [1024]},
+                     {"dtype": "float32", "shape": [1024]},
+                     {"dtype": "float32", "shape": [1024]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let cpu = m.by_name("cpu_b256").unwrap();
+        assert_eq!(cpu.batch, 256);
+        assert_eq!(cpu.inputs[0].dtype, DType::F32);
+        assert_eq!(cpu.inputs[0].elements(), 256);
+        let mem = m.by_name("mem_b256_k1024").unwrap();
+        assert_eq!(mem.inputs[0].dtype, DType::I32);
+        assert_eq!(mem.keys, 1024);
+    }
+
+    #[test]
+    fn select_prefers_smallest_sufficient_batch() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.select("cpu_pipeline_step", 100).unwrap().batch, 256);
+        assert_eq!(m.select("cpu_pipeline_step", 256).unwrap().batch, 256);
+        assert_eq!(m.select("cpu_pipeline_step", 257).unwrap().batch, 1024);
+        // Larger than any variant: take the largest.
+        assert_eq!(m.select("cpu_pipeline_step", 9999).unwrap().batch, 1024);
+        assert!(m.select("unknown", 1).is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 2");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Exercises the real artifacts when `make artifacts` has run.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.by_name("cpu_b1024").is_some());
+            assert!(m.by_name("mem_b1024_k1024").is_some());
+            assert!(m.by_name("fused_b1024_k1024").is_some());
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them on the hot path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  HLO **text** is the interchange format
+//! (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1's
+//! proto path rejects; the text parser reassigns ids).
+//!
+//! Threading: the PJRT client wrapper is `Rc`-based (not `Send`), so a
+//! [`Runtime`] is **thread-confined**.  Engine tasks build one each from
+//! the cheap, sendable [`RuntimeFactory`]; compilation happens once per
+//! thread at startup and is cached thereafter — never on the per-batch
+//! path.
+
+pub mod manifest;
+
+pub use manifest::{Artifact, DType, IoSpec, Manifest};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Cheap, sendable handle that thread-confined [`Runtime`]s are built from.
+#[derive(Clone, Debug)]
+pub struct RuntimeFactory {
+    dir: PathBuf,
+}
+
+impl RuntimeFactory {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Self {
+        Self {
+            dir: artifacts_dir.as_ref().to_path_buf(),
+        }
+    }
+
+    /// Default location: `<repo>/artifacts`.
+    pub fn default_dir() -> Self {
+        Self::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether artifacts have been built.
+    pub fn available(&self) -> bool {
+        self.dir.join("manifest.json").exists()
+    }
+
+    /// Create a thread-local runtime (loads manifest, creates PJRT client).
+    pub fn create(&self) -> Result<Runtime, String> {
+        let manifest = Manifest::load(&self.dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+}
+
+/// One tensor argument for execution.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Input<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Input::F32(v) => v.len(),
+            Input::I32(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Input::F32(_) => DType::F32,
+            Input::I32(_) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self) -> xla::Literal {
+        match self {
+            Input::F32(v) => xla::Literal::vec1(v),
+            Input::I32(v) => xla::Literal::vec1(v),
+        }
+    }
+}
+
+/// Thread-confined executor over the artifact set.
+pub struct Runtime {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) the named artifact.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, String> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let artifact = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| format!("unknown artifact '{name}'"))?;
+        let path = self.manifest.hlo_path(artifact);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every variant of `program` (startup warm).
+    pub fn warm(&self, program: &str) -> Result<usize, String> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.program == program)
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute artifact `name` with `inputs`, returning every output as a
+    /// flat `f32` vector (all our programs emit f32 tensors).
+    ///
+    /// Validates input arity/dtype/length against the manifest before
+    /// touching PJRT so shape bugs fail with readable errors.
+    pub fn execute_f32(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>, String> {
+        let artifact = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| format!("unknown artifact '{name}'"))?;
+        if inputs.len() != artifact.inputs.len() {
+            return Err(format!(
+                "{name}: expected {} inputs, got {}",
+                artifact.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (spec, arg)) in artifact.inputs.iter().zip(inputs).enumerate() {
+            if spec.dtype != arg.dtype() {
+                return Err(format!("{name}: input {i} dtype mismatch"));
+            }
+            if spec.elements() != arg.len() {
+                return Err(format!(
+                    "{name}: input {i} length {} != expected {}",
+                    arg.len(),
+                    spec.elements()
+                ));
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs.iter().map(|i| i.to_literal()).collect();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the output tuple.
+        let parts = out.to_tuple().map_err(|e| format!("untuple {name}: {e}"))?;
+        if parts.len() != artifact.outputs.len() {
+            return Err(format!(
+                "{name}: expected {} outputs, got {}",
+                artifact.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| format!("read {name}: {e}")))
+            .collect()
+    }
+
+    /// Convenience: select a variant of `program` for `batch` and return
+    /// the artifact (marshalling decisions live with the caller).
+    pub fn select(&self, program: &str, batch: usize) -> Result<&Artifact, String> {
+        self.manifest
+            .select(program, batch)
+            .ok_or_else(|| format!("no artifact for program '{program}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn factory() -> Option<RuntimeFactory> {
+        let f = RuntimeFactory::default_dir();
+        if f.available() {
+            Some(f)
+        } else {
+            eprintln!("skipping runtime test: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn cpu_pipeline_executes_and_matches_oracle() {
+        let Some(f) = factory() else { return };
+        let rt = f.create().unwrap();
+        let temps: Vec<f32> = (0..1024).map(|i| (i as f32) / 10.0 - 40.0).collect();
+        let thresh = [80.0f32];
+        let out = rt
+            .execute_f32("cpu_b1024", &[Input::F32(&temps), Input::F32(&thresh)])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let (fahr, alerts) = (&out[0], &out[1]);
+        for i in 0..1024 {
+            let expect = temps[i] * 9.0 / 5.0 + 32.0;
+            assert!((fahr[i] - expect).abs() < 1e-3, "i={i}");
+            let expect_alert = if expect > 80.0 { 1.0 } else { 0.0 };
+            assert_eq!(alerts[i], expect_alert, "i={i}");
+        }
+    }
+
+    #[test]
+    fn mem_pipeline_accumulates_state() {
+        let Some(f) = factory() else { return };
+        let rt = f.create().unwrap();
+        let ids: Vec<i32> = (0..1024).map(|i| (i % 16) as i32).collect();
+        let temps: Vec<f32> = vec![2.0; 1024];
+        let zeros = vec![0.0f32; 1024];
+        let out = rt
+            .execute_f32(
+                "mem_b1024_k1024",
+                &[
+                    Input::I32(&ids),
+                    Input::F32(&temps),
+                    Input::F32(&zeros),
+                    Input::F32(&zeros),
+                ],
+            )
+            .unwrap();
+        let (sum, cnt, avg) = (&out[0], &out[1], &out[2]);
+        for k in 0..16 {
+            assert!((sum[k] - 128.0).abs() < 1e-3, "k={k} sum={}", sum[k]);
+            assert_eq!(cnt[k], 64.0);
+            assert!((avg[k] - 2.0).abs() < 1e-4);
+        }
+        assert_eq!(cnt[16], 0.0);
+        // Feed state back: counts double.
+        let out2 = rt
+            .execute_f32(
+                "mem_b1024_k1024",
+                &[
+                    Input::I32(&ids),
+                    Input::F32(&temps),
+                    Input::F32(sum),
+                    Input::F32(cnt),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out2[1][0], 128.0);
+    }
+
+    #[test]
+    fn padded_ids_are_dropped() {
+        let Some(f) = factory() else { return };
+        let rt = f.create().unwrap();
+        // Half the batch is padding (id == keys).
+        let ids: Vec<i32> = (0..1024).map(|i| if i < 512 { 0 } else { 1024 }).collect();
+        let temps = vec![1.0f32; 1024];
+        let zeros = vec![0.0f32; 1024];
+        let out = rt
+            .execute_f32(
+                "mem_b1024_k1024",
+                &[
+                    Input::I32(&ids),
+                    Input::F32(&temps),
+                    Input::F32(&zeros),
+                    Input::F32(&zeros),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[1][0], 512.0, "only real slots counted");
+        let total: f32 = out[1].iter().sum();
+        assert_eq!(total, 512.0, "padding leaked into some key");
+    }
+
+    #[test]
+    fn input_validation_catches_mistakes() {
+        let Some(f) = factory() else { return };
+        let rt = f.create().unwrap();
+        let short = vec![0.0f32; 10];
+        let th = [0.0f32];
+        // Wrong length.
+        assert!(rt
+            .execute_f32("cpu_b1024", &[Input::F32(&short), Input::F32(&th)])
+            .is_err());
+        // Wrong arity.
+        assert!(rt.execute_f32("cpu_b1024", &[Input::F32(&short)]).is_err());
+        // Unknown name.
+        assert!(rt.execute_f32("nope", &[]).is_err());
+        // Wrong dtype.
+        let ids = vec![0i32; 1024];
+        assert!(rt
+            .execute_f32("cpu_b1024", &[Input::I32(&ids), Input::F32(&th)])
+            .is_err());
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let Some(f) = factory() else { return };
+        let rt = f.create().unwrap();
+        let temps = vec![0.0f32; 256];
+        let th = [0.0f32];
+        let t0 = std::time::Instant::now();
+        rt.execute_f32("cpu_b256", &[Input::F32(&temps), Input::F32(&th)])
+            .unwrap();
+        let first = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        for _ in 0..10 {
+            rt.execute_f32("cpu_b256", &[Input::F32(&temps), Input::F32(&th)])
+                .unwrap();
+        }
+        let ten_more = t1.elapsed();
+        // 10 cached executions should be far cheaper than 1 compile+run.
+        assert!(ten_more < first * 5, "first={first:?} ten_more={ten_more:?}");
+    }
+
+    #[test]
+    fn warm_compiles_all_variants() {
+        let Some(f) = factory() else { return };
+        let rt = f.create().unwrap();
+        assert_eq!(rt.warm("cpu_pipeline_step").unwrap(), 3);
+    }
+}

@@ -1,0 +1,89 @@
+//! Cluster model: homogeneous nodes with core + memory capacity.
+
+/// Cluster description. Default models TU Dresden's Barnard (paper Sec. 4):
+/// 630 nodes × dual Xeon 8470 (104 cores) × 512 GB DDR5.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: u32,
+    pub cores_per_node: u32,
+    pub mem_per_node_bytes: u64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self {
+            nodes: 630,
+            cores_per_node: 104,
+            mem_per_node_bytes: 512 << 30,
+        }
+    }
+}
+
+impl ClusterSpec {
+    pub fn total_cores(&self) -> u64 {
+        self.nodes as u64 * self.cores_per_node as u64
+    }
+
+    /// A laptop-scale cluster for tests and wall-mode runs.
+    pub fn tiny(nodes: u32, cores: u32) -> Self {
+        Self {
+            nodes,
+            cores_per_node: cores,
+            mem_per_node_bytes: 16 << 30,
+        }
+    }
+}
+
+/// Mutable per-node allocation state used by the scheduler.
+#[derive(Clone, Debug)]
+pub struct NodeState {
+    pub free_cores: u32,
+    pub free_mem_bytes: u64,
+}
+
+impl NodeState {
+    pub fn new(spec: &ClusterSpec) -> Self {
+        Self {
+            free_cores: spec.cores_per_node,
+            free_mem_bytes: spec.mem_per_node_bytes,
+        }
+    }
+
+    pub fn fits(&self, cores: u32, mem: u64) -> bool {
+        self.free_cores >= cores && self.free_mem_bytes >= mem
+    }
+
+    pub fn take(&mut self, cores: u32, mem: u64) {
+        debug_assert!(self.fits(cores, mem));
+        self.free_cores -= cores;
+        self.free_mem_bytes -= mem;
+    }
+
+    pub fn release(&mut self, cores: u32, mem: u64, spec: &ClusterSpec) {
+        self.free_cores = (self.free_cores + cores).min(spec.cores_per_node);
+        self.free_mem_bytes = (self.free_mem_bytes + mem).min(spec.mem_per_node_bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barnard_defaults() {
+        let c = ClusterSpec::default();
+        assert_eq!(c.total_cores(), 65_520); // the paper's number
+    }
+
+    #[test]
+    fn node_take_release_roundtrip() {
+        let spec = ClusterSpec::tiny(1, 8);
+        let mut n = NodeState::new(&spec);
+        assert!(n.fits(4, 1 << 30));
+        n.take(4, 1 << 30);
+        assert!(!n.fits(5, 0));
+        n.release(4, 1 << 30, &spec);
+        assert_eq!(n.free_cores, 8);
+        assert_eq!(n.free_mem_bytes, 16 << 30);
+    }
+}

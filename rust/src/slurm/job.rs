@@ -1,0 +1,82 @@
+//! SLURM job model: requests, lifecycle states, records.
+
+/// Job identifier (monotonic, like SLURM job ids).
+pub type JobId = u64;
+
+/// A submitted job's resource and scheduling request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRequest {
+    pub name: String,
+    pub nodes: u32,
+    pub cores_per_node: u32,
+    pub mem_per_node_bytes: u64,
+    /// Declared wall-time limit.
+    pub time_limit_micros: u64,
+    /// Actual runtime in the simulation (≤ limit, or the job times out).
+    pub runtime_micros: u64,
+    /// `--dependency=afterok:<id>` equivalent.
+    pub after_ok: Option<JobId>,
+}
+
+impl JobRequest {
+    /// Small convenience for tests/examples.
+    pub fn simple(name: &str, nodes: u32, cores: u32, runtime_micros: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            nodes,
+            cores_per_node: cores,
+            mem_per_node_bytes: 1 << 30,
+            time_limit_micros: runtime_micros * 2,
+            runtime_micros,
+            after_ok: None,
+        }
+    }
+}
+
+/// Lifecycle state (matches `squeue` vocabulary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Timeout,
+    Cancelled,
+}
+
+/// Scheduler-side job record.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub request: JobRequest,
+    pub state: JobState,
+    pub submit_micros: u64,
+    pub start_micros: Option<u64>,
+    pub end_micros: Option<u64>,
+    /// Node indices allocated while running.
+    pub allocated_nodes: Vec<u32>,
+}
+
+impl Job {
+    pub fn wait_micros(&self) -> Option<u64> {
+        self.start_micros.map(|s| s - self.submit_micros)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wait_time_is_start_minus_submit() {
+        let j = Job {
+            id: 1,
+            request: JobRequest::simple("x", 1, 4, 1_000),
+            state: JobState::Running,
+            submit_micros: 100,
+            start_micros: Some(350),
+            end_micros: None,
+            allocated_nodes: vec![0],
+        };
+        assert_eq!(j.wait_micros(), Some(250));
+    }
+}

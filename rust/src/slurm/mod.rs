@@ -1,0 +1,30 @@
+//! SLURM integration substrate.
+//!
+//! The paper's headline differentiator is native SLURM support: the CLI
+//! "facilitates the allocation of resources in a SLURM-based environment
+//! … by referencing the memory and CPU requirements specified in the
+//! configuration file, the interface automatically determines the
+//! appropriate SLURM job parameters" (Sec. 3), supports interactive and
+//! batch execution, concurrent experiments and job dependencies
+//! (Sec. 3.1).  No SLURM cluster exists here, so this module provides:
+//!
+//! * [`cluster`] — a cluster model (nodes × cores × memory; defaults match
+//!   Barnard: 630 nodes, 104 cores, 512 GB),
+//! * [`job`] — job requests/records with SLURM-like lifecycle,
+//! * [`scheduler`] — a virtual-time FIFO + backfill scheduler,
+//! * [`script`] — `#SBATCH` script generation + automatic resource
+//!   calculation from the master config (the paper's feature).
+//!
+//! The workflow manager drives experiments through this simulator in
+//! `mode: sim`, and emits the same sbatch scripts a real deployment would
+//! use in `mode: wall`.
+
+pub mod cluster;
+pub mod job;
+pub mod scheduler;
+pub mod script;
+
+pub use cluster::ClusterSpec;
+pub use job::{JobId, JobRequest, JobState};
+pub use scheduler::{Scheduler, SchedulerStats};
+pub use script::{resource_request, sbatch_script, ResourceRequest};

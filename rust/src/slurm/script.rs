@@ -1,0 +1,153 @@
+//! Automatic SLURM resource calculation + `#SBATCH` script generation.
+//!
+//! The paper: "By referencing the memory and CPU requirements specified in
+//! the configuration file, the interface automatically determines the
+//! appropriate SLURM job parameters.  Once the resources are allocated,
+//! the interface defines all the environment variables necessary for the
+//! benchmark processes."  This module is that calculation, plus the script
+//! writer the batch path uses.
+
+use crate::config::BenchConfig;
+
+/// Resources derived from a benchmark configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResourceRequest {
+    pub nodes: u32,
+    pub tasks: u32,
+    pub cpus_per_task: u32,
+    pub mem_per_node_bytes: u64,
+    pub time_limit_micros: u64,
+}
+
+/// Compute the SLURM request for one experiment.
+///
+/// CPU demand = generator instances + broker (I/O + network threads) +
+/// engine parallelism + 2 service threads (samplers, drainer); memory =
+/// generator heaps + broker heap + a working-set margin.
+pub fn resource_request(cfg: &BenchConfig) -> ResourceRequest {
+    let gen_cpus = cfg.generator_instances();
+    let broker_cpus = cfg.broker.io_threads + cfg.broker.network_threads;
+    let engine_cpus = cfg.engine.parallelism;
+    let service_cpus = 2;
+    let total_cpus = gen_cpus + broker_cpus + engine_cpus + service_cpus;
+
+    let mem = cfg.generators.heap_bytes * cfg.generator_instances() as u64
+        + cfg.broker.heap_bytes
+        + (cfg.engine.parallelism as u64) * (1 << 30);
+
+    let cpus_per_node = cfg.slurm.cpus_per_task.max(1);
+    let nodes = cfg
+        .slurm
+        .nodes
+        .max(((total_cpus + cpus_per_node - 1) / cpus_per_node).max(1));
+
+    ResourceRequest {
+        nodes,
+        tasks: nodes,
+        cpus_per_task: cpus_per_node,
+        mem_per_node_bytes: (mem / nodes as u64).min(cfg.slurm.mem_bytes),
+        // Duration + warmup + 20% margin + fixed setup allowance.
+        time_limit_micros: cfg
+            .slurm
+            .time_limit_micros
+            .max((cfg.bench.duration_micros + cfg.bench.warmup_micros) * 12 / 10 + 60_000_000),
+    }
+}
+
+/// Render the `#SBATCH` batch script for one experiment.
+pub fn sbatch_script(cfg: &BenchConfig, config_path: &str) -> String {
+    let req = resource_request(cfg);
+    let mem_mb = req.mem_per_node_bytes / (1 << 20);
+    let time_min = (req.time_limit_micros / 60_000_000).max(1);
+    let mut s = String::new();
+    s.push_str("#!/bin/bash\n");
+    s.push_str(&format!("#SBATCH --job-name=sprobench-{}\n", cfg.bench.name));
+    s.push_str(&format!("#SBATCH --partition={}\n", cfg.slurm.partition));
+    s.push_str(&format!("#SBATCH --nodes={}\n", req.nodes));
+    s.push_str(&format!("#SBATCH --ntasks={}\n", req.tasks));
+    s.push_str(&format!("#SBATCH --cpus-per-task={}\n", req.cpus_per_task));
+    s.push_str(&format!("#SBATCH --mem={}M\n", mem_mb));
+    s.push_str(&format!("#SBATCH --time={}\n", fmt_slurm_time(time_min)));
+    s.push_str("#SBATCH --output=runs/%x-%j.out\n");
+    s.push('\n');
+    s.push_str("# Environment for the benchmark processes (auto-generated).\n");
+    s.push_str(&format!(
+        "export SPROBENCH_EXPERIMENT={}\n",
+        cfg.bench.name
+    ));
+    s.push_str(&format!("export SPROBENCH_SEED={}\n", cfg.bench.seed));
+    s.push_str(&format!(
+        "export SPROBENCH_PARALLELISM={}\n",
+        cfg.engine.parallelism
+    ));
+    s.push_str(&format!(
+        "export SPROBENCH_GENERATORS={}\n",
+        cfg.generator_instances()
+    ));
+    s.push('\n');
+    s.push_str(&format!(
+        "srun sprobench run --config {} --experiment {}\n",
+        config_path, cfg.bench.name
+    ));
+    s
+}
+
+fn fmt_slurm_time(total_min: u64) -> String {
+    format!("{:02}:{:02}:00", total_min / 60, total_min % 60)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_calc_counts_all_components() {
+        let mut cfg = BenchConfig::default();
+        cfg.workload.rate = 2_000_000; // 4 generator instances
+        cfg.engine.parallelism = 8;
+        cfg.broker.io_threads = 20;
+        cfg.broker.network_threads = 10;
+        cfg.slurm.cpus_per_task = 16;
+        let r = resource_request(&cfg);
+        // 4 + 30 + 8 + 2 = 44 cpus → 3 nodes of 16.
+        assert_eq!(r.nodes, 3);
+        assert_eq!(r.cpus_per_task, 16);
+        assert!(r.mem_per_node_bytes > 0);
+    }
+
+    #[test]
+    fn explicit_nodes_override_when_larger() {
+        let mut cfg = BenchConfig::default();
+        cfg.slurm.nodes = 10;
+        let r = resource_request(&cfg);
+        assert_eq!(r.nodes, 10);
+    }
+
+    #[test]
+    fn script_contains_the_paper_knobs() {
+        let mut cfg = BenchConfig::default();
+        cfg.bench.name = "exp7".into();
+        let s = sbatch_script(&cfg, "configs/exp.yaml");
+        assert!(s.starts_with("#!/bin/bash\n"));
+        assert!(s.contains("#SBATCH --job-name=sprobench-exp7"));
+        assert!(s.contains("#SBATCH --partition=barnard"));
+        assert!(s.contains("--cpus-per-task=16"));
+        assert!(s.contains("export SPROBENCH_PARALLELISM=4"));
+        assert!(s.contains("srun sprobench run --config configs/exp.yaml"));
+    }
+
+    #[test]
+    fn time_limit_covers_duration_plus_margin() {
+        let mut cfg = BenchConfig::default();
+        cfg.bench.duration_micros = 600_000_000; // 10 min
+        cfg.slurm.time_limit_micros = 0;
+        let r = resource_request(&cfg);
+        assert!(r.time_limit_micros >= 600_000_000);
+    }
+
+    #[test]
+    fn slurm_time_formatting() {
+        assert_eq!(fmt_slurm_time(30), "00:30:00");
+        assert_eq!(fmt_slurm_time(90), "01:30:00");
+    }
+}

@@ -1,0 +1,332 @@
+//! Bounded MPMC channel with blocking backpressure.
+//!
+//! The broker's partitions and the engine's task queues need a bounded
+//! queue whose `send` blocks when full (that *is* the backpressure signal
+//! the paper's pipelines exhibit).  std::sync::mpsc is MPSC and unbounded
+//! or rendezvous-ish; crossbeam-channel is not vendored — so: a Mutex +
+//! two Condvars around a VecDeque.  Simple, correct, and fast enough that
+//! the hot path (which batches) is never channel-limited; verified by
+//! `benches/hotpath_micro.rs`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Sending half; clonable (MPMC).
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Receiving half; clonable (MPMC).
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+/// Error returned when the channel is closed.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+/// Result of a timed receive.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeout<T> {
+    Item(T),
+    TimedOut,
+    Closed,
+}
+
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity > 0);
+    let inner = Arc::new(Inner {
+        queue: Mutex::new(State {
+            items: VecDeque::with_capacity(capacity),
+            closed: false,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        capacity,
+    });
+    (
+        Sender {
+            inner: inner.clone(),
+        },
+        Receiver { inner },
+    )
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; applies backpressure when the queue is full.
+    pub fn send(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.inner.queue.lock().expect("chan poisoned");
+        while st.items.len() >= self.inner.capacity {
+            if st.closed {
+                return Err(Closed);
+            }
+            st = self.inner.not_full.wait(st).expect("chan poisoned");
+        }
+        if st.closed {
+            return Err(Closed);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking send: returns the item back if the queue is full.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.inner.queue.lock().expect("chan poisoned");
+        if st.closed {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.items.len() >= self.inner.capacity {
+            return Err(TrySendError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel; receivers drain remaining items then see `Closed`.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().expect("chan poisoned");
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().expect("chan poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+}
+
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; returns `Err(Closed)` once closed *and* drained.
+    pub fn recv(&self) -> Result<T, Closed> {
+        let mut st = self.inner.queue.lock().expect("chan poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.closed {
+                return Err(Closed);
+            }
+            st = self.inner.not_empty.wait(st).expect("chan poisoned");
+        }
+    }
+
+    /// Receive with timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> RecvTimeout<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.inner.queue.lock().expect("chan poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return RecvTimeout::Item(item);
+            }
+            if st.closed {
+                return RecvTimeout::Closed;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return RecvTimeout::TimedOut;
+            }
+            let (next, timed_out) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .expect("chan poisoned");
+            st = next;
+            if timed_out.timed_out() && st.items.is_empty() {
+                if st.closed {
+                    return RecvTimeout::Closed;
+                }
+                return RecvTimeout::TimedOut;
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batch consumption).
+    pub fn drain_into(&self, buf: &mut Vec<T>, max: usize) -> usize {
+        let mut st = self.inner.queue.lock().expect("chan poisoned");
+        let n = max.min(st.items.len());
+        for _ in 0..n {
+            buf.push(st.items.pop_front().expect("len checked"));
+        }
+        drop(st);
+        if n > 0 {
+            self.inner.not_full.notify_all();
+        }
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().expect("chan poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn try_send_full() {
+        let (tx, _rx) = bounded(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        match tx.try_send(3) {
+            Err(TrySendError::Full(3)) => {}
+            other => panic!("expected Full, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_until_consumed() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = thread::spawn(move || {
+            tx.send(1).unwrap(); // blocks until the consumer pops
+            tx.send(2).unwrap();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 0);
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let (tx, rx) = bounded(4);
+        tx.send("a").unwrap();
+        tx.send("b").unwrap();
+        tx.close();
+        assert_eq!(rx.recv().unwrap(), "a");
+        assert_eq!(rx.recv().unwrap(), "b");
+        assert_eq!(rx.recv(), Err(Closed));
+        assert_eq!(tx.send("c"), Err(Closed));
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let (_tx, rx) = bounded::<u32>(1);
+        match rx.recv_timeout(Duration::from_millis(10)) {
+            RecvTimeout::TimedOut => {}
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_into_batches() {
+        let (tx, rx) = bounded(64);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let mut buf = Vec::new();
+        assert_eq!(rx.drain_into(&mut buf, 4), 4);
+        assert_eq!(buf, vec![0, 1, 2, 3]);
+        assert_eq!(rx.drain_into(&mut buf, 100), 6);
+        assert_eq!(buf.len(), 10);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(16);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..250 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        tx.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 1000);
+        all.dedup();
+        assert_eq!(all.len(), 1000, "duplicates delivered");
+    }
+}

@@ -1,0 +1,155 @@
+//! Wall and virtual clocks behind a single trait.
+//!
+//! The suite runs in two execution modes (DESIGN.md §1): `wall` drives real
+//! threads with real time; `sim` advances a shared virtual clock so the
+//! SLURM scheduler and cluster-scale extrapolations run instantly and
+//! deterministically.  All components take a [`ClockRef`] so either mode
+//! plugs in.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Microsecond-resolution clock abstraction.
+pub trait Clock: Send + Sync {
+    /// Current time in microseconds (epoch origin for wall, 0-origin for sim).
+    fn now_micros(&self) -> u64;
+    /// Sleep (wall) or advance the virtual clock (sim).
+    fn sleep_micros(&self, micros: u64);
+    /// True when this is a virtual clock.
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+pub type ClockRef = Arc<dyn Clock>;
+
+/// Real time, backed by `std::time`.
+#[derive(Default)]
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn now_micros(&self) -> u64 {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .expect("clock before epoch")
+            .as_micros() as u64
+    }
+
+    fn sleep_micros(&self, micros: u64) {
+        if micros > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(micros));
+        }
+    }
+}
+
+/// Shared virtual clock: `sleep` advances time atomically, `now` reads it.
+///
+/// Components in sim mode run sequentially (the discrete-event loop in
+/// [`crate::slurm::scheduler`] and [`crate::coordinator::simrun`] owns
+/// ordering), so a single atomic counter is sufficient.
+#[derive(Default)]
+pub struct SimClock {
+    micros: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn starting_at(micros: u64) -> Self {
+        Self {
+            micros: AtomicU64::new(micros),
+        }
+    }
+
+    /// Jump the clock to `t` (used by event-loop dispatch). Never rewinds.
+    pub fn advance_to(&self, t: u64) {
+        self.micros.fetch_max(t, Ordering::SeqCst);
+    }
+}
+
+impl Clock for SimClock {
+    fn now_micros(&self) -> u64 {
+        self.micros.load(Ordering::SeqCst)
+    }
+
+    fn sleep_micros(&self, micros: u64) {
+        self.micros.fetch_add(micros, Ordering::SeqCst);
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+/// Convenience constructors.
+pub fn wall() -> ClockRef {
+    Arc::new(WallClock)
+}
+
+pub fn sim() -> ClockRef {
+    Arc::new(SimClock::new())
+}
+
+/// Monotonic stopwatch over any clock.
+pub struct Stopwatch {
+    clock: ClockRef,
+    start: u64,
+}
+
+impl Stopwatch {
+    pub fn start(clock: ClockRef) -> Self {
+        let start = clock.now_micros();
+        Self { clock, start }
+    }
+
+    pub fn elapsed_micros(&self) -> u64 {
+        self.clock.now_micros().saturating_sub(self.start)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed_micros() as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotonic_enough() {
+        let c = wall();
+        let a = c.now_micros();
+        c.sleep_micros(2_000);
+        let b = c.now_micros();
+        assert!(b >= a + 1_000, "slept 2ms but advanced {}us", b - a);
+    }
+
+    #[test]
+    fn sim_clock_advances_on_sleep() {
+        let c = sim();
+        assert_eq!(c.now_micros(), 0);
+        c.sleep_micros(1_000_000);
+        assert_eq!(c.now_micros(), 1_000_000);
+        assert!(c.is_virtual());
+    }
+
+    #[test]
+    fn sim_clock_advance_to_never_rewinds() {
+        let c = SimClock::new();
+        c.advance_to(500);
+        c.advance_to(200);
+        assert_eq!(c.now_micros(), 500);
+    }
+
+    #[test]
+    fn stopwatch_over_sim_clock() {
+        let c: ClockRef = Arc::new(SimClock::new());
+        let sw = Stopwatch::start(c.clone());
+        c.sleep_micros(2_500_000);
+        assert_eq!(sw.elapsed_micros(), 2_500_000);
+        assert!((sw.elapsed_secs() - 2.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,126 @@
+//! Tiny leveled logger.
+//!
+//! The workflow manager requires every experiment step to be traceable
+//! (paper Sec. 3.1: "logs every step of an experiment for traceability"),
+//! so the logger supports an optional per-run log file in addition to
+//! stderr, and timestamps every line.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // Info
+static FILE: Mutex<Option<File>> = Mutex::new(None);
+
+/// Set the global minimum level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::SeqCst);
+}
+
+/// Mirror log lines into `path` (append). Used per experiment run.
+pub fn set_file(path: &Path) -> std::io::Result<()> {
+    let f = OpenOptions::new().create(true).append(true).open(path)?;
+    *FILE.lock().expect("logger poisoned") = Some(f);
+    Ok(())
+}
+
+/// Stop mirroring to a file.
+pub fn clear_file() {
+    *FILE.lock().expect("logger poisoned") = None;
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::SeqCst)
+}
+
+pub fn log(level: Level, target: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0);
+    let line = format!("[{now}] {} {target}: {msg}", level.tag());
+    eprintln!("{line}");
+    if let Some(f) = FILE.lock().expect("logger poisoned").as_mut() {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Error, $target, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn file_mirroring() {
+        let dir = std::env::temp_dir().join(format!("sprobench-log-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.log");
+        set_file(&path).unwrap();
+        log(Level::Error, "test", "hello-file");
+        clear_file();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("hello-file"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

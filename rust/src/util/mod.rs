@@ -1,0 +1,27 @@
+//! Foundation utilities: everything the rest of the suite builds on.
+//!
+//! All of these exist because the build environment is offline (only the
+//! `xla` crate closure is vendored); each is a small, tested substrate:
+//!
+//! * [`rng`] — PCG32/SplitMix64 PRNGs (deterministic, seedable).
+//! * [`clock`] — wall + virtual clocks behind one trait (sim mode).
+//! * [`histogram`] — HDR-style log-bucketed latency histogram.
+//! * [`json`] — minimal JSON value/parser/writer (manifest, events, reports).
+//! * [`chan`] — bounded MPMC channel with backpressure (broker substrate).
+//! * [`pool`] — fixed worker thread pool.
+//! * [`stats`] — mean/stddev/percentile/linear-regression helpers.
+//! * [`units`] — "500K"/"8M"-style quantity parsing and formatting.
+//! * [`proptest`] — mini property-testing framework (deterministic,
+//!   bounded shrinking) used across coordinator invariants.
+//! * [`logger`] — leveled stderr logger.
+
+pub mod chan;
+pub mod clock;
+pub mod histogram;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod units;

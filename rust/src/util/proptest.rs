@@ -1,0 +1,223 @@
+//! Mini property-testing framework (proptest is not vendored offline).
+//!
+//! Deterministic: every case derives from a master seed, and a failing
+//! case reports the seed + a bounded shrink of its inputs.  Used across
+//! the suite for coordinator invariants (routing, batching, state),
+//! broker log laws, and config round-trips.
+//!
+//! ```no_run
+//! use sprobench::util::proptest::{Config, Gen, check};
+//! check(Config::default().cases(64), "sorted idempotent", |g| {
+//!     let mut v = g.vec_u64(0..100, 0, 32);
+//!     v.sort();
+//!     let w = {{ let mut w = v.clone(); w.sort(); w }};
+//!     if v != w { return Err(format!("{v:?} != {w:?}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use std::ops::Range;
+
+use super::rng::Pcg32;
+
+/// Property-run configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 100,
+            // Honour SPROBENCH_PROPTEST_SEED for reproduction of failures.
+            seed: std::env::var("SPROBENCH_PROPTEST_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0xC0FF_EE00),
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Pcg32,
+    /// Shrink pressure in [0,1]: later shrink attempts bias toward small inputs.
+    shrink: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, shrink: f64) -> Self {
+        Self {
+            rng: Pcg32::from_master(seed, case),
+            shrink,
+        }
+    }
+
+    pub fn u64(&mut self, range: Range<u64>) -> u64 {
+        assert!(range.start < range.end);
+        let span = range.end - range.start;
+        let hi = if self.shrink > 0.0 {
+            // Shrink by shrinking the effective span toward 1.
+            let keep = ((1.0 - self.shrink) * span as f64).max(1.0) as u64;
+            range.start + keep
+        } else {
+            range.end
+        };
+        self.rng.range_u64(range.start, hi - 1)
+    }
+
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn i64(&mut self, range: Range<i64>) -> i64 {
+        let span = (range.end - range.start) as u64;
+        range.start + self.u64(0..span) as i64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn vec_u64(&mut self, each: Range<u64>, min_len: usize, max_len: usize) -> Vec<u64> {
+        let len = self.usize(min_len..max_len + 1);
+        (0..len).map(|_| self.u64(each.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, lo: f32, hi: f32, min_len: usize, max_len: usize) -> Vec<f32> {
+        let len = self.usize(min_len..max_len + 1);
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize(0..max_len + 1);
+        (0..len)
+            .map(|_| {
+                let c = self.rng.below(95) as u8 + 32; // printable ASCII
+                c as char
+            })
+            .collect()
+    }
+
+    /// Pick one of the provided values.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Run `property` for `config.cases` cases. On failure, retry the failing
+/// case at increasing shrink pressure and report the smallest failure.
+///
+/// Panics (test failure) with seed + case + message on any failing case.
+pub fn check<F>(config: Config, name: &str, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let mut g = Gen::new(config.seed, case as u64, 0.0);
+        if let Err(msg) = property(&mut g) {
+            // Shrink: same case seed, increasing pressure toward minimal inputs.
+            let mut best = msg;
+            let mut best_shrink = 0.0;
+            for step in 1..=8 {
+                let pressure = step as f64 / 8.0;
+                let mut g = Gen::new(config.seed, case as u64, pressure);
+                if let Err(m) = property(&mut g) {
+                    best = m;
+                    best_shrink = pressure;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={:#x}, case={case}, shrink={best_shrink}): {best}\n\
+                 reproduce with SPROBENCH_PROPTEST_SEED={}",
+                config.seed, config.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default().cases(50), "add-commutes", |g| {
+            let a = g.u64(0..1000);
+            let b = g.u64(0..1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(Config::default().cases(5), "always-fails", |_g| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check(Config::default().cases(200), "ranges", |g| {
+            let v = g.u64(10..20);
+            if !(10..20).contains(&v) {
+                return Err(format!("u64 out of range: {v}"));
+            }
+            let f = g.f64(-1.0, 1.0);
+            if !(-1.0..=1.0).contains(&f) {
+                return Err(format!("f64 out of range: {f}"));
+            }
+            let s = g.string(16);
+            if s.len() > 16 {
+                return Err("string too long".into());
+            }
+            let xs = g.vec_u64(0..5, 2, 8);
+            if xs.len() < 2 || xs.len() > 8 {
+                return Err("vec len out of range".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn same_seed_same_cases() {
+        let mut first = Vec::new();
+        check(Config::default().cases(10).seed(99), "collect-a", |g| {
+            first.push(g.u64(0..1_000_000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check(Config::default().cases(10).seed(99), "collect-b", |g| {
+            second.push(g.u64(0..1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

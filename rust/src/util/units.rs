@@ -1,0 +1,189 @@
+//! Human-friendly quantity parsing/formatting: "500K" events/s, "8M",
+//! "2G" bytes, "200GB" memory, "30s"/"5m" durations.
+//!
+//! The paper's single configuration file expresses workloads this way
+//! ("workloads of 5M and 10M events"); the config layer funnels every
+//! quantity through here.
+
+/// Parse a count with optional K/M/G/T suffix (decimal multipliers).
+pub fn parse_count(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Err("empty quantity".into());
+    }
+    let (num, mult) = split_suffix(t, &[("K", 1e3), ("M", 1e6), ("G", 1e9), ("T", 1e12)]);
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad number in quantity '{s}'"))?;
+    if v < 0.0 {
+        return Err(format!("negative quantity '{s}'"));
+    }
+    Ok((v * mult).round() as u64)
+}
+
+/// Parse a byte size with optional B/KB/MB/GB/KiB/MiB/GiB suffix.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    let pairs: &[(&str, f64)] = &[
+        ("KiB", 1024.0),
+        ("MiB", 1024.0 * 1024.0),
+        ("GiB", 1024.0 * 1024.0 * 1024.0),
+        ("KB", 1e3),
+        ("MB", 1e6),
+        ("GB", 1e9),
+        ("TB", 1e12),
+        ("B", 1.0),
+    ];
+    let (num, mult) = split_suffix(t, pairs);
+    // Bare "K"/"M"/"G" also accepted for sizes.
+    let (num, mult) = if mult == 1.0 && num == t {
+        split_suffix(t, &[("K", 1e3), ("M", 1e6), ("G", 1e9)])
+    } else {
+        (num, mult)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad number in size '{s}'"))?;
+    if v < 0.0 {
+        return Err(format!("negative size '{s}'"));
+    }
+    Ok((v * mult).round() as u64)
+}
+
+/// Parse a duration into microseconds: "500us", "10ms", "30s", "5m", "2h".
+pub fn parse_duration_micros(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    let pairs: &[(&str, f64)] = &[
+        ("us", 1.0),
+        ("ms", 1e3),
+        ("s", 1e6),
+        ("m", 60e6),
+        ("h", 3600e6),
+    ];
+    let (num, mult) = split_suffix(t, pairs);
+    if num == t {
+        // No suffix: seconds by convention.
+        let v: f64 = t.parse().map_err(|_| format!("bad duration '{s}'"))?;
+        return Ok((v * 1e6).round() as u64);
+    }
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad duration '{s}'"))?;
+    if v < 0.0 {
+        return Err(format!("negative duration '{s}'"));
+    }
+    Ok((v * mult).round() as u64)
+}
+
+fn split_suffix<'a>(s: &'a str, pairs: &[(&str, f64)]) -> (&'a str, f64) {
+    for (suf, mult) in pairs {
+        if s.len() > suf.len() && s.to_ascii_uppercase().ends_with(&suf.to_ascii_uppercase()) {
+            return (&s[..s.len() - suf.len()], *mult);
+        }
+    }
+    (s, 1.0)
+}
+
+/// Format an event count compactly ("1.5M", "40M", "800K").
+pub fn fmt_count(v: f64) -> String {
+    let (div, suf) = if v >= 1e12 {
+        (1e12, "T")
+    } else if v >= 1e9 {
+        (1e9, "G")
+    } else if v >= 1e6 {
+        (1e6, "M")
+    } else if v >= 1e3 {
+        (1e3, "K")
+    } else {
+        (1.0, "")
+    };
+    let x = v / div;
+    if x >= 100.0 || (x - x.round()).abs() < 0.05 {
+        format!("{:.0}{}", x, suf)
+    } else {
+        format!("{:.1}{}", x, suf)
+    }
+}
+
+/// Format bytes/s ("0.52 GB/s").
+pub fn fmt_rate_bytes(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2} GB/s", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2} MB/s", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2} KB/s", v / 1e3)
+    } else {
+        format!("{:.0} B/s", v)
+    }
+}
+
+/// Format microseconds adaptively ("532us", "4.2ms", "1.50s").
+pub fn fmt_micros(us: u64) -> String {
+    if us < 1_000 {
+        format!("{us}us")
+    } else if us < 1_000_000 {
+        format!("{:.1}ms", us as f64 / 1e3)
+    } else {
+        format!("{:.2}s", us as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        assert_eq!(parse_count("500K").unwrap(), 500_000);
+        assert_eq!(parse_count("8M").unwrap(), 8_000_000);
+        assert_eq!(parse_count("1.5m").unwrap(), 1_500_000);
+        assert_eq!(parse_count("42").unwrap(), 42);
+        assert_eq!(parse_count("2G").unwrap(), 2_000_000_000);
+        assert!(parse_count("abc").is_err());
+        assert!(parse_count("-5K").is_err());
+        assert!(parse_count("").is_err());
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(parse_bytes("27B").unwrap(), 27);
+        assert_eq!(parse_bytes("2KB").unwrap(), 2_000);
+        assert_eq!(parse_bytes("1KiB").unwrap(), 1_024);
+        assert_eq!(parse_bytes("200GB").unwrap(), 200_000_000_000);
+        assert_eq!(parse_bytes("5G").unwrap(), 5_000_000_000);
+        assert_eq!(parse_bytes("64").unwrap(), 64);
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(parse_duration_micros("500us").unwrap(), 500);
+        assert_eq!(parse_duration_micros("10ms").unwrap(), 10_000);
+        assert_eq!(parse_duration_micros("30s").unwrap(), 30_000_000);
+        assert_eq!(parse_duration_micros("5m").unwrap(), 300_000_000);
+        assert_eq!(parse_duration_micros("1.5").unwrap(), 1_500_000);
+        assert!(parse_duration_micros("x").is_err());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_count(40e6), "40M");
+        assert_eq!(fmt_count(1_500_000.0), "1.5M");
+        assert_eq!(fmt_count(800.0), "800");
+        assert_eq!(fmt_rate_bytes(0.52e9), "520.00 MB/s");
+        assert_eq!(fmt_rate_bytes(2.5e9), "2.50 GB/s");
+        assert_eq!(fmt_micros(532), "532us");
+        assert_eq!(fmt_micros(4_200), "4.2ms");
+        assert_eq!(fmt_micros(1_500_000), "1.50s");
+    }
+
+    #[test]
+    fn roundtrip_count_format() {
+        for v in [1_000u64, 500_000, 8_000_000, 40_000_000] {
+            assert_eq!(parse_count(&fmt_count(v as f64)).unwrap(), v);
+        }
+    }
+}

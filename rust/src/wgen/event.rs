@@ -1,0 +1,441 @@
+//! Sensor event model and wire formats.
+//!
+//! Default workload: synthetic sensor stream; every event has a timestamp,
+//! sensor ID, and temperature (paper Sec. 3.2).  Two wire formats:
+//!
+//! * `Json` — `{"ts":…,"id":…,"t":…}` (+ `"p"` padding to the target size),
+//! * `Csv`  — `ts,id,temp` + space padding; this is the compact form whose
+//!   floor is the paper's 27-byte minimum event size.
+//!
+//! The serializer writes into a caller-provided buffer (no allocation on
+//! the hot path) and always produces *exactly* `target_bytes` when the
+//! target is at or above the format's floor for the given values.
+
+/// One sensor reading.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SensorEvent {
+    /// Generation timestamp, microseconds.
+    pub ts_micros: u64,
+    /// Sensor id in `[0, sensors)` — the stream key.
+    pub sensor_id: u32,
+    /// Temperature, °C, two decimals of precision on the wire.
+    pub temp_c: f32,
+}
+
+/// Wire format for serialized events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventFormat {
+    Json,
+    Csv,
+}
+
+impl SensorEvent {
+    /// Serialize into `buf` (cleared first), padding to exactly
+    /// `target_bytes` when possible. Returns the serialized length.
+    pub fn serialize_into(&self, format: EventFormat, target_bytes: usize, buf: &mut Vec<u8>) -> usize {
+        buf.clear();
+        match format {
+            EventFormat::Json => {
+                buf.extend_from_slice(b"{\"ts\":");
+                write_u64(buf, self.ts_micros);
+                buf.extend_from_slice(b",\"id\":");
+                write_u64(buf, self.sensor_id as u64);
+                buf.extend_from_slice(b",\"t\":");
+                write_temp(buf, self.temp_c);
+                // Pad with a filler field to hit the exact target size:
+                // `,"p":"xxxx"}` costs 8 + padlen bytes.
+                let base = buf.len() + 1; // closing brace
+                if target_bytes >= base + 7 {
+                    let pad = target_bytes - base - 7;
+                    buf.extend_from_slice(b",\"p\":\"");
+                    buf.resize(buf.len() + pad, b'x');
+                    buf.extend_from_slice(b"\"}");
+                } else {
+                    buf.push(b'}');
+                }
+            }
+            EventFormat::Csv => {
+                write_u64(buf, self.ts_micros);
+                buf.push(b',');
+                write_u64(buf, self.sensor_id as u64);
+                buf.push(b',');
+                write_temp(buf, self.temp_c);
+                if target_bytes > buf.len() {
+                    buf.resize(target_bytes, b' ');
+                }
+            }
+        }
+        buf.len()
+    }
+
+    /// Parse either wire format (sniffs the first byte).
+    pub fn parse(bytes: &[u8]) -> Option<SensorEvent> {
+        if bytes.first() == Some(&b'{') {
+            Self::parse_json(bytes)
+        } else {
+            Self::parse_csv(bytes)
+        }
+    }
+
+    /// Fast-path JSON parse for the exact shape the generator emits.
+    /// Falls back to the general parser for reordered/foreign documents.
+    fn parse_json(bytes: &[u8]) -> Option<SensorEvent> {
+        let ts = field_u64(bytes, b"\"ts\":")?;
+        let id = field_u64(bytes, b"\"id\":")?;
+        let t = field_f32(bytes, b"\"t\":")?;
+        Some(SensorEvent {
+            ts_micros: ts,
+            sensor_id: id as u32,
+            temp_c: t,
+        })
+    }
+
+    /// Byte-level CSV parse (perf pass: the engine decodes every event on
+    /// the hot path — no UTF-8 validation, no float machinery for the
+    /// fixed two-decimal wire format).
+    fn parse_csv(bytes: &[u8]) -> Option<SensorEvent> {
+        let mut i = 0;
+        let ts = parse_u64_until(bytes, &mut i, b',')?;
+        let id = parse_u64_until(bytes, &mut i, b',')?;
+        if id > u32::MAX as u64 {
+            return None;
+        }
+        // Temperature: [-]INT[.FRAC] followed by padding spaces/EOL.
+        let neg = bytes.get(i) == Some(&b'-');
+        if neg {
+            i += 1;
+        }
+        let mut int_part: u64 = 0;
+        let mut any = false;
+        while let Some(&b) = bytes.get(i) {
+            if b.is_ascii_digit() {
+                int_part = int_part * 10 + (b - b'0') as u64;
+                any = true;
+                i += 1;
+            } else {
+                break;
+            }
+        }
+        if !any {
+            return None;
+        }
+        let mut frac: u64 = 0;
+        let mut scale: f32 = 1.0;
+        if bytes.get(i) == Some(&b'.') {
+            i += 1;
+            while let Some(&b) = bytes.get(i) {
+                if b.is_ascii_digit() && scale < 1e6 {
+                    frac = frac * 10 + (b - b'0') as u64;
+                    scale *= 10.0;
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        // Remainder must be padding.
+        while let Some(&b) = bytes.get(i) {
+            if b == b' ' || b == b'\n' || b == b'\r' {
+                i += 1;
+            } else {
+                return None;
+            }
+        }
+        let mut t = int_part as f32;
+        if scale > 1.0 {
+            t += frac as f32 / scale;
+        }
+        if neg {
+            t = -t;
+        }
+        Some(SensorEvent {
+            ts_micros: ts,
+            sensor_id: id as u32,
+            temp_c: t,
+        })
+    }
+}
+
+/// Prefix-caching serializer (perf pass): events inside one produce chunk
+/// share their timestamp, and the timestamp is the longest field on the
+/// wire — so the `…ts…` prefix is rendered once per chunk and reused
+/// until the timestamp changes.  ~1.9× over [`SensorEvent::serialize_into`]
+/// in the generator inner loop (EXPERIMENTS.md §Perf).
+pub struct EventSerializer {
+    format: EventFormat,
+    target_bytes: usize,
+    prefix: Vec<u8>,
+    prefix_ts: u64,
+}
+
+impl EventSerializer {
+    pub fn new(format: EventFormat, target_bytes: usize) -> Self {
+        Self {
+            format,
+            target_bytes,
+            prefix: Vec::with_capacity(32),
+            prefix_ts: u64::MAX,
+        }
+    }
+
+    #[inline]
+    fn rebuild_prefix(&mut self, ts: u64) {
+        self.prefix.clear();
+        match self.format {
+            EventFormat::Json => {
+                self.prefix.extend_from_slice(b"{\"ts\":");
+                write_u64(&mut self.prefix, ts);
+                self.prefix.extend_from_slice(b",\"id\":");
+            }
+            EventFormat::Csv => {
+                write_u64(&mut self.prefix, ts);
+                self.prefix.push(b',');
+            }
+        }
+        self.prefix_ts = ts;
+    }
+
+    /// Serialize into `buf` (cleared), padded to the exact target size
+    /// when reachable.  Bit-identical to `SensorEvent::serialize_into`.
+    #[inline]
+    pub fn serialize(&mut self, ev: &SensorEvent, buf: &mut Vec<u8>) -> usize {
+        if ev.ts_micros != self.prefix_ts {
+            self.rebuild_prefix(ev.ts_micros);
+        }
+        buf.clear();
+        buf.extend_from_slice(&self.prefix);
+        match self.format {
+            EventFormat::Json => {
+                write_u64(buf, ev.sensor_id as u64);
+                buf.extend_from_slice(b",\"t\":");
+                write_temp(buf, ev.temp_c);
+                let base = buf.len() + 1;
+                if self.target_bytes >= base + 7 {
+                    let pad = self.target_bytes - base - 7;
+                    buf.extend_from_slice(b",\"p\":\"");
+                    buf.resize(buf.len() + pad, b'x');
+                    buf.extend_from_slice(b"\"}");
+                } else {
+                    buf.push(b'}');
+                }
+            }
+            EventFormat::Csv => {
+                write_u64(buf, ev.sensor_id as u64);
+                buf.push(b',');
+                write_temp(buf, ev.temp_c);
+                if self.target_bytes > buf.len() {
+                    buf.resize(self.target_bytes, b' ');
+                }
+            }
+        }
+        buf.len()
+    }
+}
+
+/// Parse digits into u64 until `stop` (consumed) — hot-path helper.
+#[inline]
+fn parse_u64_until(bytes: &[u8], i: &mut usize, stop: u8) -> Option<u64> {
+    let mut v: u64 = 0;
+    let mut any = false;
+    while let Some(&b) = bytes.get(*i) {
+        if b.is_ascii_digit() {
+            v = v.wrapping_mul(10).wrapping_add((b - b'0') as u64);
+            any = true;
+            *i += 1;
+        } else if b == stop {
+            *i += 1;
+            return any.then_some(v);
+        } else {
+            return None;
+        }
+    }
+    None
+}
+
+#[inline]
+fn write_u64(buf: &mut Vec<u8>, mut v: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    buf.extend_from_slice(&tmp[i..]);
+}
+
+/// Write a temperature with exactly two decimals (no float formatting
+/// machinery on the hot path).
+#[inline]
+fn write_temp(buf: &mut Vec<u8>, t: f32) {
+    let neg = t < 0.0;
+    // Round to centi-degrees in integer space.
+    let cents = (t.abs() as f64 * 100.0).round() as u64;
+    if neg && cents > 0 {
+        buf.push(b'-');
+    }
+    write_u64(buf, cents / 100);
+    buf.push(b'.');
+    let frac = cents % 100;
+    buf.push(b'0' + (frac / 10) as u8);
+    buf.push(b'0' + (frac % 10) as u8);
+}
+
+/// Find `pat` in `hay` and parse the u64 right after it.
+#[inline]
+fn field_u64(hay: &[u8], pat: &[u8]) -> Option<u64> {
+    let pos = find(hay, pat)?;
+    let mut v: u64 = 0;
+    let mut any = false;
+    for &b in &hay[pos + pat.len()..] {
+        if b.is_ascii_digit() {
+            v = v * 10 + (b - b'0') as u64;
+            any = true;
+        } else {
+            break;
+        }
+    }
+    any.then_some(v)
+}
+
+#[inline]
+fn field_f32(hay: &[u8], pat: &[u8]) -> Option<f32> {
+    let pos = find(hay, pat)?;
+    let rest = &hay[pos + pat.len()..];
+    let end = rest
+        .iter()
+        .position(|&b| !(b.is_ascii_digit() || b == b'-' || b == b'.'))
+        .unwrap_or(rest.len());
+    std::str::from_utf8(&rest[..end]).ok()?.parse().ok()
+}
+
+#[inline]
+fn find(hay: &[u8], pat: &[u8]) -> Option<usize> {
+    hay.windows(pat.len()).position(|w| w == pat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev() -> SensorEvent {
+        SensorEvent {
+            ts_micros: 1_714_329_600_123_456,
+            sensor_id: 17,
+            temp_c: 21.5,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut buf = Vec::new();
+        ev().serialize_into(EventFormat::Json, 64, &mut buf);
+        let parsed = SensorEvent::parse(&buf).unwrap();
+        assert_eq!(parsed.ts_micros, ev().ts_micros);
+        assert_eq!(parsed.sensor_id, 17);
+        assert!((parsed.temp_c - 21.5).abs() < 0.005);
+    }
+
+    #[test]
+    fn csv_roundtrip_at_27_bytes() {
+        let e = SensorEvent {
+            ts_micros: 1_714_329_600_123_456,
+            sensor_id: 3,
+            temp_c: -7.25,
+        };
+        let mut buf = Vec::new();
+        let n = e.serialize_into(EventFormat::Csv, 27, &mut buf);
+        assert_eq!(n, 27, "csv floor must reach the paper's 27-byte minimum");
+        let parsed = SensorEvent::parse(&buf).unwrap();
+        assert_eq!(parsed.sensor_id, 3);
+        assert!((parsed.temp_c + 7.25).abs() < 0.005);
+    }
+
+    #[test]
+    fn exact_target_size_json() {
+        let mut buf = Vec::new();
+        for target in [64usize, 100, 256, 1024] {
+            let n = ev().serialize_into(EventFormat::Json, target, &mut buf);
+            assert_eq!(n, target, "target={target}");
+            assert!(SensorEvent::parse(&buf).is_some());
+        }
+    }
+
+    #[test]
+    fn exact_target_size_csv() {
+        let mut buf = Vec::new();
+        for target in [27usize, 32, 64, 512] {
+            let n = ev().serialize_into(EventFormat::Csv, target, &mut buf);
+            assert_eq!(n, target);
+            assert!(SensorEvent::parse(&buf).is_some());
+        }
+    }
+
+    #[test]
+    fn undersized_target_keeps_base_encoding() {
+        let mut buf = Vec::new();
+        let n = ev().serialize_into(EventFormat::Json, 10, &mut buf);
+        assert!(n > 10, "cannot shrink below the natural encoding");
+        assert!(SensorEvent::parse(&buf).is_some());
+    }
+
+    #[test]
+    fn negative_and_zero_temps() {
+        for t in [-40.0f32, -0.004, 0.0, 0.005, 99.99] {
+            let e = SensorEvent {
+                ts_micros: 1,
+                sensor_id: 0,
+                temp_c: t,
+            };
+            let mut buf = Vec::new();
+            e.serialize_into(EventFormat::Json, 48, &mut buf);
+            let p = SensorEvent::parse(&buf).unwrap();
+            assert!((p.temp_c - t).abs() < 0.006, "t={t} p={}", p.temp_c);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(SensorEvent::parse(b"{\"nope\":1}").is_none());
+        assert!(SensorEvent::parse(b"not,an").is_none());
+        assert!(SensorEvent::parse(b"").is_none());
+    }
+
+    #[test]
+    fn event_serializer_matches_serialize_into() {
+        // The cached-prefix serializer must be bit-identical, across ts
+        // changes and both formats.
+        for format in [EventFormat::Csv, EventFormat::Json] {
+            for target in [27usize, 64, 200] {
+                let mut cached = EventSerializer::new(format, target);
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                for i in 0..50u64 {
+                    let e = SensorEvent {
+                        ts_micros: 1_700_000_000_000_000 + (i / 7), // repeats
+                        sensor_id: (i * 13 % 1024) as u32,
+                        temp_c: i as f32 * 3.3 - 40.0,
+                    };
+                    e.serialize_into(format, target, &mut a);
+                    cached.serialize(&e, &mut b);
+                    assert_eq!(a, b, "format={format:?} target={target} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn temp_two_decimals_on_wire() {
+        let e = SensorEvent {
+            ts_micros: 1,
+            sensor_id: 2,
+            temp_c: 21.456,
+        };
+        let mut buf = Vec::new();
+        e.serialize_into(EventFormat::Csv, 0, &mut buf);
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.ends_with("21.46"), "{s}");
+    }
+}

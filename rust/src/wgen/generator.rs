@@ -1,0 +1,399 @@
+//! Generator instances and the auto-scaling fleet.
+//!
+//! One instance is a thread emitting serialized sensor events into the
+//! ingestion topic at its share of the configured load, paced by a token
+//! bucket and shaped by the configured pattern.  The fleet auto-scales the
+//! instance count from the requested total rate and per-instance capacity
+//! (paper Sec. 3.2: single instance ≈ 500 K ev/s; "multiple workload
+//! generators can operate in parallel" and the count is adjusted
+//! automatically).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::event::{EventFormat, SensorEvent};
+use super::pattern::{Pattern, PatternState};
+use super::ratelimit::TokenBucket;
+use crate::broker::{Broker, Record, Topic};
+use crate::metrics::{LatencyRecorder, MeasurementPoint, ThroughputRecorder};
+use crate::util::clock::ClockRef;
+use crate::util::rng::{Pcg32, Zipf};
+
+/// Per-fleet generation parameters (derived from the master config).
+#[derive(Clone, Debug)]
+pub struct GeneratorConfig {
+    pub total_rate: u64,
+    pub instance_capacity: u64,
+    pub max_instances: u32,
+    pub event_bytes: usize,
+    pub format: EventFormat,
+    pub sensors: u32,
+    /// Zipf exponent for key skew; 0 = uniform sensor ids.
+    pub key_skew: f64,
+    pub seed: u64,
+    /// Produce-batch size (records per broker append).
+    pub produce_batch: usize,
+}
+
+impl GeneratorConfig {
+    pub fn from_config(cfg: &crate::config::BenchConfig) -> Self {
+        Self {
+            total_rate: cfg.workload.rate,
+            instance_capacity: cfg.generators.instance_capacity,
+            max_instances: cfg.generators.max_instances,
+            event_bytes: cfg.workload.event_bytes,
+            format: if cfg.workload.event_bytes < 40 {
+                EventFormat::Csv
+            } else {
+                EventFormat::Json
+            },
+            sensors: cfg.workload.sensors,
+            key_skew: cfg.workload.key_skew,
+            seed: cfg.bench.seed,
+            produce_batch: 512,
+        }
+    }
+
+    /// Auto-scaled instance count.
+    pub fn instances(&self) -> u32 {
+        let n = (self.total_rate + self.instance_capacity - 1) / self.instance_capacity;
+        (n as u32).clamp(1, self.max_instances)
+    }
+}
+
+/// Result of a fleet run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetReport {
+    pub instances: u32,
+    pub events: u64,
+    pub bytes: u64,
+    pub elapsed_micros: u64,
+    /// Achieved offered load, events/second.
+    pub rate_events: f64,
+    pub rate_bytes: f64,
+}
+
+/// The auto-scaling generator fleet.
+pub struct Fleet {
+    config: GeneratorConfig,
+    clock: ClockRef,
+    throughput: Arc<ThroughputRecorder>,
+    latency: Arc<LatencyRecorder>,
+}
+
+impl Fleet {
+    pub fn new(
+        config: GeneratorConfig,
+        clock: ClockRef,
+        throughput: Arc<ThroughputRecorder>,
+        latency: Arc<LatencyRecorder>,
+    ) -> Self {
+        Self {
+            config,
+            clock,
+            throughput,
+            latency,
+        }
+    }
+
+    /// Run the fleet for `duration_micros` against `topic`, blocking until
+    /// all instances finish.  `pattern_of` builds each instance's schedule
+    /// from its load share.
+    pub fn run(
+        &self,
+        broker: &Arc<Broker>,
+        topic: &Arc<Topic>,
+        duration_micros: u64,
+        stop: &Arc<AtomicBool>,
+        pattern_of: impl Fn(u64) -> Pattern,
+    ) -> FleetReport {
+        let n = self.config.instances();
+        let share = self.config.total_rate / n as u64;
+        let remainder = self.config.total_rate - share * n as u64;
+        let start = self.clock.now_micros();
+
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                // First instance absorbs the division remainder.
+                let my_rate = if i == 0 { share + remainder } else { share };
+                let pattern = pattern_of(my_rate);
+                let worker = InstanceWorker {
+                    id: i,
+                    config: self.config.clone(),
+                    pattern,
+                    rate: my_rate,
+                    clock: self.clock.clone(),
+                    throughput: self.throughput.clone(),
+                    latency: self.latency.clone(),
+                    broker: broker.clone(),
+                    topic: topic.clone(),
+                    stop: stop.clone(),
+                };
+                let deadline = start + duration_micros;
+                std::thread::Builder::new()
+                    .name(format!("wgen-{i}"))
+                    .spawn(move || worker.run(deadline))
+                    .expect("spawn generator")
+            })
+            .collect();
+
+        let mut events = 0;
+        let mut bytes = 0;
+        for h in handles {
+            let (e, b) = h.join().expect("generator panicked");
+            events += e;
+            bytes += b;
+        }
+        let elapsed = self.clock.now_micros().saturating_sub(start).max(1);
+        FleetReport {
+            instances: n,
+            events,
+            bytes,
+            elapsed_micros: elapsed,
+            rate_events: events as f64 * 1e6 / elapsed as f64,
+            rate_bytes: bytes as f64 * 1e6 / elapsed as f64,
+        }
+    }
+}
+
+struct InstanceWorker {
+    id: u32,
+    config: GeneratorConfig,
+    pattern: Pattern,
+    rate: u64,
+    clock: ClockRef,
+    throughput: Arc<ThroughputRecorder>,
+    latency: Arc<LatencyRecorder>,
+    broker: Arc<Broker>,
+    topic: Arc<Topic>,
+    stop: Arc<AtomicBool>,
+}
+
+impl InstanceWorker {
+    fn run(self, deadline_micros: u64) -> (u64, u64) {
+        let mut rng = Pcg32::from_master(self.config.seed, self.id as u64);
+        let zipf = (self.config.key_skew > 0.0)
+            .then(|| Zipf::new(self.config.sensors as usize, self.config.key_skew));
+        let mut schedule = PatternState::new(
+            self.pattern.clone(),
+            Pcg32::from_master(self.config.seed ^ 0xDADA, self.id as u64),
+        );
+        // Pace at the instance share, never beyond rated capacity.
+        let paced_rate = self.rate.min(self.config.instance_capacity).max(1);
+        let mut bucket = TokenBucket::new(
+            self.clock.clone(),
+            paced_rate,
+            (paced_rate / 50).max(self.config.produce_batch as u64 * 2),
+        );
+
+        let mut total_events = 0u64;
+        let mut total_bytes = 0u64;
+        let mut wire = Vec::with_capacity(self.config.event_bytes + 32);
+        let mut serializer =
+            super::event::EventSerializer::new(self.config.format, self.config.event_bytes);
+        let mut batch: Vec<Record> = Vec::with_capacity(self.config.produce_batch);
+
+        'outer: while self.clock.now_micros() < deadline_micros
+            && !self.stop.load(Ordering::Relaxed)
+        {
+            let tick = schedule.next_tick();
+            let mut remaining = tick.events;
+            if remaining == 0 {
+                self.clock.sleep_micros(tick.duration_micros);
+                continue;
+            }
+            while remaining > 0 {
+                let chunk = remaining.min(self.config.produce_batch as u64);
+                bucket.acquire(chunk);
+                let now = self.clock.now_micros();
+                // Arena path: serialize the whole chunk into ONE shared
+                // allocation and carve per-record views — one Arc per
+                // chunk instead of one per event (EXPERIMENTS.md §Perf).
+                let mut arena: Vec<u8> =
+                    Vec::with_capacity(chunk as usize * (self.config.event_bytes + 8));
+                let mut slots: Vec<(u32, usize, usize)> = Vec::with_capacity(chunk as usize);
+                for _ in 0..chunk {
+                    let sensor_id = match &zipf {
+                        Some(z) => z.sample(&mut rng) as u32,
+                        None => rng.below(self.config.sensors),
+                    };
+                    let ev = SensorEvent {
+                        ts_micros: now,
+                        sensor_id,
+                        temp_c: 20.0 + rng.normal() as f32 * 15.0,
+                    };
+                    let n = serializer.serialize(&ev, &mut wire);
+                    total_bytes += n as u64;
+                    let off = arena.len();
+                    arena.extend_from_slice(&wire);
+                    slots.push((sensor_id, off, n));
+                }
+                let arena: std::sync::Arc<[u8]> = arena.into();
+                for (sensor_id, off, n) in slots {
+                    batch.push(Record::from_arena(sensor_id, arena.clone(), off, n, now));
+                }
+                let appended = batch.len() as u64;
+                // Acked produce: generation → network thread → append →
+                // ack, so the recorded BrokerIn latency sees broker-side
+                // queueing as load approaches broker capacity.
+                if self
+                    .broker
+                    .produce_batch_acked(&self.topic, std::mem::take(&mut batch))
+                    .is_err()
+                {
+                    break 'outer; // broker shut down
+                }
+                total_events += appended;
+                self.throughput.record_events(
+                    MeasurementPoint::DriverOut,
+                    appended,
+                    appended * self.config.event_bytes as u64,
+                );
+                self.throughput.record_events(
+                    MeasurementPoint::BrokerIn,
+                    appended,
+                    appended * self.config.event_bytes as u64,
+                );
+                // Broker-ingest latency: generation → append completion.
+                let lat = self.clock.now_micros().saturating_sub(now);
+                self.latency
+                    .record_n(MeasurementPoint::BrokerIn, self.id as usize, lat, appended);
+                remaining -= chunk;
+                if self.clock.now_micros() >= deadline_micros {
+                    break 'outer;
+                }
+            }
+        }
+        (total_events, total_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::BrokerConfig;
+    use crate::util::clock;
+
+    fn config(rate: u64) -> GeneratorConfig {
+        GeneratorConfig {
+            total_rate: rate,
+            instance_capacity: 500_000,
+            max_instances: 64,
+            event_bytes: 27,
+            format: EventFormat::Csv,
+            sensors: 256,
+            key_skew: 0.0,
+            seed: 42,
+            produce_batch: 256,
+        }
+    }
+
+    #[test]
+    fn autoscaling_matches_paper_rule() {
+        assert_eq!(config(100_000).instances(), 1);
+        assert_eq!(config(500_000).instances(), 1);
+        assert_eq!(config(500_001).instances(), 2);
+        assert_eq!(config(2_000_000).instances(), 4);
+        assert_eq!(config(8_000_000).instances(), 16);
+    }
+
+    #[test]
+    fn fleet_hits_constant_rate_within_tolerance() {
+        let clk = clock::wall();
+        let broker = Broker::new(BrokerConfig::default(), clk.clone());
+        let topic = broker.create_topic("in");
+        // Consume in the background so backpressure never binds.
+        let group = broker.subscribe("in", "sink", 1);
+        let consumer = {
+            let group = group.clone();
+            std::thread::spawn(move || {
+                let mut n = 0u64;
+                loop {
+                    match group.poll(0, 1024) {
+                        Ok(Some(b)) => {
+                            n += b.records.len() as u64;
+                            group.commit(b.partition, b.next_offset);
+                        }
+                        Ok(None) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                        Err(_) => return n,
+                    }
+                }
+            })
+        };
+        let tp = Arc::new(ThroughputRecorder::new());
+        let lat = Arc::new(LatencyRecorder::new());
+        let fleet = Fleet::new(config(200_000), clk, tp.clone(), lat);
+        let stop = Arc::new(AtomicBool::new(false));
+        let report = fleet.run(&broker, &topic, 1_000_000, &stop, |r| Pattern::Constant {
+            rate: r,
+        });
+        broker.shutdown();
+        let consumed = consumer.join().unwrap();
+        assert_eq!(report.instances, 1);
+        // 200K ev/s for 1s ± scheduler noise.
+        assert!(
+            (150_000.0..250_000.0).contains(&report.rate_events),
+            "rate={}",
+            report.rate_events
+        );
+        assert_eq!(report.events, consumed);
+        assert_eq!(tp.events_at(MeasurementPoint::DriverOut), report.events);
+        // 27-byte events: bytes metric consistent.
+        assert_eq!(report.bytes, report.events * 27);
+    }
+
+    #[test]
+    fn stop_flag_halts_fleet_early() {
+        let clk = clock::wall();
+        let broker = Broker::new(BrokerConfig::default(), clk.clone());
+        let topic = broker.create_topic("in");
+        let _g = broker.subscribe("in", "sink", 1);
+        let tp = Arc::new(ThroughputRecorder::new());
+        let lat = Arc::new(LatencyRecorder::new());
+        let fleet = Fleet::new(config(100_000), clk.clone(), tp, lat);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stopper = {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                stop.store(true, Ordering::SeqCst);
+            })
+        };
+        let t0 = std::time::Instant::now();
+        fleet.run(&broker, &topic, 60_000_000, &stop, |r| Pattern::Constant { rate: r });
+        assert!(t0.elapsed().as_secs() < 10, "stop flag ignored");
+        stopper.join().unwrap();
+    }
+
+    #[test]
+    fn zipf_skew_produces_hot_keys() {
+        let clk = clock::wall();
+        let broker = Broker::new(BrokerConfig::default(), clk.clone());
+        let topic = broker.create_topic("in");
+        let group = broker.subscribe("in", "sink", 1);
+        let mut cfg = config(50_000);
+        cfg.key_skew = 1.2;
+        let tp = Arc::new(ThroughputRecorder::new());
+        let lat = Arc::new(LatencyRecorder::new());
+        let fleet = Fleet::new(cfg, clk, tp, lat);
+        let stop = Arc::new(AtomicBool::new(false));
+        fleet.run(&broker, &topic, 400_000, &stop, |r| Pattern::Constant { rate: r });
+        broker.shutdown();
+        let mut counts = vec![0u64; 256];
+        loop {
+            match group.poll(0, 4096) {
+                Ok(Some(b)) => {
+                    for r in &b.records {
+                        counts[r.key as usize] += 1;
+                    }
+                    group.commit(b.partition, b.next_offset);
+                }
+                Ok(None) => continue,
+                Err(_) => break,
+            }
+        }
+        let hot: u64 = counts[..8].iter().sum();
+        let cold: u64 = counts[248..].iter().sum();
+        assert!(hot > cold * 3, "hot={hot} cold={cold}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Workload generator (paper Sec. 3.2).
+//!
+//! Produces synthetic sensor-data streams: each event carries a timestamp,
+//! sensor ID and temperature value, serialized as JSON (or the compact CSV
+//! wire format that reaches the paper's 27-byte minimum event size).
+//!
+//! * [`event`] — event model + serializer/parser with exact-size padding.
+//! * [`pattern`] — constant / random / burst generation schedules.
+//! * [`ratelimit`] — token-bucket rate control.
+//! * [`generator`] — generator instances + the auto-scaling fleet
+//!   ("automatically adjusts the number of generators based on the
+//!   requested total load").
+
+pub mod event;
+pub mod generator;
+pub mod pattern;
+pub mod ratelimit;
+
+pub use event::{EventFormat, EventSerializer, SensorEvent};
+pub use generator::{Fleet, FleetReport, GeneratorConfig};
+pub use pattern::{Pattern, PatternState, Tick};
+pub use ratelimit::TokenBucket;

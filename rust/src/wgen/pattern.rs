@@ -1,0 +1,282 @@
+//! Generation patterns (paper Sec. 3.2): constant, random, burst.
+//!
+//! A pattern is a schedule of *ticks*: each tick says how many events to
+//! emit and how long the tick spans.  The paper defines:
+//!
+//! * **constant** — fixed frequency;
+//! * **random** — variable rate bounded by min/max frequency, with random
+//!   pauses bounded by min/max pause;
+//! * **burst** — "a special case of the random interval generation, where
+//!   the minimum and maximum pauses … are the same, and the data
+//!   generation frequency is constant".
+
+use crate::util::rng::Pcg32;
+
+/// Tick granularity: rate control operates on 10ms slices, fine enough
+/// that per-second rates look smooth and coarse enough that the schedule
+/// itself costs nothing.
+pub const TICK_MICROS: u64 = 10_000;
+
+/// Generation pattern parameters (rates are events/second).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Pattern {
+    Constant {
+        rate: u64,
+    },
+    Random {
+        min_rate: u64,
+        max_rate: u64,
+        min_pause_micros: u64,
+        max_pause_micros: u64,
+    },
+    Burst {
+        interval_micros: u64,
+        burst_rate: u64,
+    },
+}
+
+impl Pattern {
+    /// Build from the workload section for one generator instance emitting
+    /// `share` of the total configured load.
+    pub fn from_config(w: &crate::config::schema::WorkloadSection, share: u64) -> Pattern {
+        use crate::config::schema::Pattern as P;
+        match w.pattern {
+            P::Constant => Pattern::Constant { rate: share },
+            P::Random => Pattern::Random {
+                // Scale the bounds by the same instance share ratio.
+                min_rate: scale(w.random.min_rate, share, w.rate),
+                max_rate: scale(w.random.max_rate, share, w.rate).max(1),
+                min_pause_micros: w.random.min_pause_micros,
+                max_pause_micros: w.random.max_pause_micros,
+            },
+            P::Burst => Pattern::Burst {
+                interval_micros: w.burst.interval_micros,
+                burst_rate: scale(w.burst.burst_rate, share, w.rate).max(1),
+            },
+        }
+    }
+
+    /// Long-run average rate (events/second) this pattern converges to.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            Pattern::Constant { rate } => rate as f64,
+            Pattern::Random {
+                min_rate,
+                max_rate,
+                min_pause_micros,
+                max_pause_micros,
+            } => {
+                // Alternates active ticks at uniform(min,max) rate with
+                // uniform(min,max) pauses: duty cycle = tick/(tick+pause).
+                let mean_rate = (min_rate + max_rate) as f64 / 2.0;
+                let mean_pause = (min_pause_micros + max_pause_micros) as f64 / 2.0;
+                let duty = TICK_MICROS as f64 / (TICK_MICROS as f64 + mean_pause);
+                mean_rate * duty
+            }
+            Pattern::Burst {
+                interval_micros,
+                burst_rate,
+            } => {
+                // One burst tick of TICK_MICROS at burst_rate per interval.
+                let events = burst_rate as f64 * TICK_MICROS as f64 / 1e6;
+                events / (interval_micros.max(TICK_MICROS) as f64 / 1e6)
+            }
+        }
+    }
+}
+
+fn scale(v: u64, share: u64, total: u64) -> u64 {
+    if total == 0 {
+        return v;
+    }
+    ((v as u128 * share as u128) / total as u128) as u64
+}
+
+/// One scheduling step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tick {
+    /// Events to emit during this tick.
+    pub events: u64,
+    /// Tick span in microseconds (emit + any pause).
+    pub duration_micros: u64,
+}
+
+/// Stateful tick generator for a pattern.
+pub struct PatternState {
+    pattern: Pattern,
+    rng: Pcg32,
+    /// Fractional-event carry so integer ticks hit the exact mean rate.
+    carry: f64,
+    /// For burst: time left until the next burst fires.
+    until_burst_micros: u64,
+}
+
+impl PatternState {
+    pub fn new(pattern: Pattern, rng: Pcg32) -> Self {
+        Self {
+            pattern,
+            rng,
+            carry: 0.0,
+            until_burst_micros: 0,
+        }
+    }
+
+    /// Produce the next tick of the schedule.
+    pub fn next_tick(&mut self) -> Tick {
+        match self.pattern {
+            Pattern::Constant { rate } => {
+                let want = rate as f64 * TICK_MICROS as f64 / 1e6 + self.carry;
+                let events = want.floor() as u64;
+                self.carry = want - events as f64;
+                Tick {
+                    events,
+                    duration_micros: TICK_MICROS,
+                }
+            }
+            Pattern::Random {
+                min_rate,
+                max_rate,
+                min_pause_micros,
+                max_pause_micros,
+            } => {
+                let rate = self.rng.range_u64(min_rate, max_rate.max(min_rate));
+                let pause = self
+                    .rng
+                    .range_u64(min_pause_micros, max_pause_micros.max(min_pause_micros));
+                let want = rate as f64 * TICK_MICROS as f64 / 1e6 + self.carry;
+                let events = want.floor() as u64;
+                self.carry = want - events as f64;
+                Tick {
+                    events,
+                    duration_micros: TICK_MICROS + pause,
+                }
+            }
+            Pattern::Burst {
+                interval_micros,
+                burst_rate,
+            } => {
+                if self.until_burst_micros >= TICK_MICROS {
+                    // Quiet period between bursts.
+                    let quiet = self.until_burst_micros;
+                    self.until_burst_micros = 0;
+                    return Tick {
+                        events: 0,
+                        duration_micros: quiet,
+                    };
+                }
+                let want = burst_rate as f64 * TICK_MICROS as f64 / 1e6 + self.carry;
+                let events = want.floor() as u64;
+                self.carry = want - events as f64;
+                self.until_burst_micros = interval_micros.saturating_sub(TICK_MICROS);
+                Tick {
+                    events,
+                    duration_micros: TICK_MICROS,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config as PtConfig};
+
+    fn run_for(pattern: Pattern, total_micros: u64) -> (u64, u64) {
+        let mut st = PatternState::new(pattern, Pcg32::new(1, 1));
+        let mut t = 0;
+        let mut events = 0;
+        while t < total_micros {
+            let tick = st.next_tick();
+            events += tick.events;
+            t += tick.duration_micros;
+        }
+        (events, t)
+    }
+
+    #[test]
+    fn constant_hits_exact_rate() {
+        let (events, t) = run_for(Pattern::Constant { rate: 123_456 }, 10_000_000);
+        let rate = events as f64 * 1e6 / t as f64;
+        assert!((rate - 123_456.0).abs() < 200.0, "rate={rate}");
+    }
+
+    #[test]
+    fn constant_low_rate_carry_accumulates() {
+        // 7 events/sec over 10s must produce ~70 events, not 0.
+        let (events, _) = run_for(Pattern::Constant { rate: 7 }, 10_000_000);
+        assert!((60..=80).contains(&events), "events={events}");
+    }
+
+    #[test]
+    fn random_respects_mean_rate_model() {
+        let p = Pattern::Random {
+            min_rate: 50_000,
+            max_rate: 150_000,
+            min_pause_micros: 0,
+            max_pause_micros: 10_000,
+        };
+        let expect = p.mean_rate();
+        let (events, t) = run_for(p, 20_000_000);
+        let rate = events as f64 * 1e6 / t as f64;
+        assert!(
+            (rate - expect).abs() / expect < 0.10,
+            "rate={rate} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn burst_is_quiet_between_bursts() {
+        let mut st = PatternState::new(
+            Pattern::Burst {
+                interval_micros: 1_000_000,
+                burst_rate: 1_000_000,
+            },
+            Pcg32::new(2, 2),
+        );
+        let first = st.next_tick();
+        assert!(first.events > 0);
+        let quiet = st.next_tick();
+        assert_eq!(quiet.events, 0);
+        assert_eq!(quiet.duration_micros, 1_000_000 - TICK_MICROS);
+        let second = st.next_tick();
+        assert!(second.events > 0);
+    }
+
+    #[test]
+    fn burst_mean_rate_matches_model() {
+        let p = Pattern::Burst {
+            interval_micros: 500_000,
+            burst_rate: 2_000_000,
+        };
+        let expect = p.mean_rate();
+        let (events, t) = run_for(p, 30_000_000);
+        let rate = events as f64 * 1e6 / t as f64;
+        assert!(
+            (rate - expect).abs() / expect < 0.05,
+            "rate={rate} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn prop_constant_rate_conservation() {
+        check(PtConfig::default().cases(40), "constant-conservation", |g| {
+            let rate = g.u64(1..2_000_000);
+            let (events, t) = run_for(Pattern::Constant { rate }, 2_000_000);
+            let got = events as f64 * 1e6 / t as f64;
+            let tol = (rate as f64 * 0.01).max(60.0);
+            if (got - rate as f64).abs() > tol {
+                return Err(format!("rate {rate}: got {got}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_config_scales_share() {
+        let w = crate::config::BenchConfig::default().workload;
+        // Default rate 100K; an instance carrying half the load.
+        let p = Pattern::from_config(&w, 50_000);
+        assert_eq!(p, Pattern::Constant { rate: 50_000 });
+    }
+}

@@ -1,0 +1,254 @@
+//! Experiment workflow management (paper Sec. 3.1).
+//!
+//! "The SProBench workflow management system logs every step of an
+//! experiment for traceability.  It automates most benchmarking tasks,
+//! reduces human error, and ensures consistency across experiments."
+//!
+//! One master config expands (via [`crate::config::expand_experiments`])
+//! into N experiments; the [`WorkflowManager`] gives each a run directory
+//! with the resolved config, a step-by-step trace log, the generated
+//! sbatch script, and the result/metric exports — then executes them
+//! sequentially (wall mode, one machine) or through the SLURM simulator
+//! (sim mode, concurrent batch jobs with dependencies).
+
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::config::Experiment;
+use crate::slurm::{sbatch_script, JobRequest, Scheduler};
+use crate::util::json::Json;
+
+/// A created run directory with its traceability log.
+pub struct RunDir {
+    pub path: PathBuf,
+    steps: Vec<String>,
+}
+
+impl RunDir {
+    /// Create `base/<experiment>-<serial>/` with the standard layout.
+    pub fn create(base: &Path, experiment: &Experiment) -> std::io::Result<RunDir> {
+        let serial = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        let path = base.join(format!("{}-{serial}", experiment.name));
+        std::fs::create_dir_all(path.join("metrics"))?;
+        let mut dir = RunDir {
+            path,
+            steps: Vec::new(),
+        };
+        // Traceability: persist the exact resolved configuration.
+        std::fs::write(
+            dir.path.join("config.resolved.json"),
+            experiment.resolved.to_pretty(),
+        )?;
+        dir.step("created run directory");
+        dir.step("wrote resolved config");
+        Ok(dir)
+    }
+
+    /// Record one traceability step (appended to `trace.log` on finish).
+    pub fn step(&mut self, what: &str) {
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        self.steps.push(format!("[{now}] {what}"));
+    }
+
+    /// Write results + the trace log.
+    pub fn finish(&mut self, results: &Json) -> std::io::Result<()> {
+        self.step("writing results");
+        std::fs::write(self.path.join("results.json"), results.to_pretty())?;
+        std::fs::write(self.path.join("trace.log"), self.steps.join("\n") + "\n")?;
+        Ok(())
+    }
+
+    pub fn metrics_dir(&self) -> PathBuf {
+        self.path.join("metrics")
+    }
+}
+
+/// Outcome of one experiment run.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub name: String,
+    pub dir: PathBuf,
+    pub results: Json,
+}
+
+/// Drives a list of experiments end to end.
+pub struct WorkflowManager {
+    base: PathBuf,
+}
+
+impl WorkflowManager {
+    pub fn new(base: impl AsRef<Path>) -> Self {
+        Self {
+            base: base.as_ref().to_path_buf(),
+        }
+    }
+
+    /// Execute every experiment sequentially through `runner`, giving each
+    /// a run directory.  The runner returns the experiment's result JSON.
+    pub fn run_all<F>(
+        &self,
+        experiments: &[Experiment],
+        mut runner: F,
+    ) -> Result<Vec<RunOutcome>, String>
+    where
+        F: FnMut(&Experiment, &mut RunDir) -> Result<Json, String>,
+    {
+        let mut outcomes = Vec::with_capacity(experiments.len());
+        for exp in experiments {
+            let mut dir = RunDir::create(&self.base, exp)
+                .map_err(|e| format!("run dir for '{}': {e}", exp.name))?;
+            // Emit the sbatch script the batch path would submit.
+            let script = sbatch_script(&exp.config, "config.resolved.json");
+            std::fs::write(dir.path.join("job.sbatch"), &script)
+                .map_err(|e| format!("write sbatch: {e}"))?;
+            dir.step("generated sbatch script");
+            dir.step("starting benchmark");
+            let results = runner(exp, &mut dir)?;
+            dir.step("benchmark complete");
+            dir.finish(&results).map_err(|e| format!("finish: {e}"))?;
+            outcomes.push(RunOutcome {
+                name: exp.name.clone(),
+                dir: dir.path.clone(),
+                results,
+            });
+        }
+        Ok(outcomes)
+    }
+
+    /// Batch mode: submit every experiment to the SLURM simulator (with
+    /// optional chaining) and return the schedule.  `runtime_of` supplies
+    /// each experiment's simulated runtime.
+    pub fn submit_batch(
+        &self,
+        experiments: &[Experiment],
+        scheduler: &mut Scheduler,
+        chain: bool,
+        runtime_of: impl Fn(&Experiment) -> u64,
+    ) -> Vec<crate::slurm::JobId> {
+        let mut prev = None;
+        experiments
+            .iter()
+            .map(|exp| {
+                let req = crate::slurm::resource_request(&exp.config);
+                let job = JobRequest {
+                    name: exp.name.clone(),
+                    nodes: req.nodes,
+                    cores_per_node: req.cpus_per_task,
+                    mem_per_node_bytes: req.mem_per_node_bytes,
+                    time_limit_micros: req.time_limit_micros,
+                    runtime_micros: runtime_of(exp),
+                    after_ok: if chain { prev } else { None },
+                };
+                let id = scheduler.submit(job);
+                prev = Some(id);
+                id
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{expand_experiments, yaml};
+    use crate::slurm::{ClusterSpec, JobState};
+
+    fn tmp() -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "sprobench-wf-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn experiments(n: usize) -> Vec<Experiment> {
+        let mut y = String::from("benchmark:\n  name: wf\nexperiments:\n");
+        for i in 0..n {
+            y.push_str(&format!("  - name: e{i}\n    engine.parallelism: {}\n", i + 1));
+        }
+        expand_experiments(&yaml::parse(&y).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn run_all_creates_complete_run_dirs() {
+        let base = tmp();
+        let exps = experiments(2);
+        let wm = WorkflowManager::new(&base);
+        let outcomes = wm
+            .run_all(&exps, |exp, dir| {
+                dir.step("doing the work");
+                let mut j = Json::obj();
+                j.set("parallelism", Json::Int(exp.config.engine.parallelism as i64));
+                Ok(j)
+            })
+            .unwrap();
+        assert_eq!(outcomes.len(), 2);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert!(o.dir.join("config.resolved.json").exists());
+            assert!(o.dir.join("job.sbatch").exists());
+            assert!(o.dir.join("results.json").exists());
+            let trace = std::fs::read_to_string(o.dir.join("trace.log")).unwrap();
+            assert!(trace.contains("doing the work"));
+            assert!(trace.contains("generated sbatch script"));
+            assert_eq!(
+                o.results.get("parallelism").unwrap().as_i64(),
+                Some(i as i64 + 1)
+            );
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn runner_failure_propagates() {
+        let base = tmp();
+        let exps = experiments(1);
+        let wm = WorkflowManager::new(&base);
+        let err = wm
+            .run_all(&exps, |_, _| Err("boom".to_string()))
+            .unwrap_err();
+        assert_eq!(err, "boom");
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn batch_submission_without_chaining_runs_concurrently() {
+        let base = tmp();
+        let exps = experiments(3);
+        let wm = WorkflowManager::new(&base);
+        let mut sched = Scheduler::new(ClusterSpec::tiny(8, 64));
+        let ids = wm.submit_batch(&exps, &mut sched, false, |_| 5_000_000);
+        sched.run_to_completion();
+        for id in ids {
+            let j = sched.job(id).unwrap();
+            assert_eq!(j.state, JobState::Completed);
+            assert_eq!(j.wait_micros(), Some(0), "should run concurrently");
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn batch_submission_with_chaining_serializes() {
+        let base = tmp();
+        let exps = experiments(3);
+        let wm = WorkflowManager::new(&base);
+        let mut sched = Scheduler::new(ClusterSpec::tiny(8, 64));
+        let ids = wm.submit_batch(&exps, &mut sched, true, |_| 5_000_000);
+        let makespan = sched.run_to_completion();
+        assert_eq!(makespan, 15_000_000, "chained jobs run back-to-back");
+        let starts: Vec<u64> = ids
+            .iter()
+            .map(|&id| sched.job(id).unwrap().start_micros.unwrap())
+            .collect();
+        assert!(starts.windows(2).all(|w| w[1] > w[0]));
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

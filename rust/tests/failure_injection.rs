@@ -1,0 +1,214 @@
+//! Failure injection: the suite must degrade cleanly, never hang, and
+//! keep its accounting honest under faults.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sprobench::broker::{Broker, BrokerConfig, Record};
+use sprobench::config::{BenchConfig, PipelineKind};
+use sprobench::engine::Engine;
+use sprobench::metrics::{LatencyRecorder, ThroughputRecorder};
+use sprobench::wgen::{EventFormat, SensorEvent};
+
+fn cfg(pipeline: PipelineKind) -> BenchConfig {
+    let mut c = BenchConfig::default();
+    c.bench.warmup_micros = 0;
+    c.engine.pipeline = pipeline;
+    c.engine.parallelism = 2;
+    c.engine.use_hlo = false;
+    c.engine.batch_size = 128;
+    c.workload.sensors = 64;
+    c
+}
+
+fn spawn_drainer(broker: &Arc<Broker>) -> std::thread::JoinHandle<u64> {
+    let drain = broker.subscribe("out", "drain", 1);
+    std::thread::spawn(move || {
+        let mut n = 0u64;
+        loop {
+            match drain.poll(0, 2048) {
+                Ok(Some(b)) => {
+                    n += b.records.len() as u64;
+                    drain.commit(b.partition, b.next_offset);
+                }
+                Ok(None) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                Err(_) => return n,
+            }
+        }
+    })
+}
+
+fn good_record(i: u32, ts: u64) -> Record {
+    let ev = SensorEvent {
+        ts_micros: ts,
+        sensor_id: i % 64,
+        temp_c: (i % 90) as f32,
+    };
+    let mut buf = Vec::new();
+    ev.serialize_into(EventFormat::Csv, 27, &mut buf);
+    Record::new(ev.sensor_id, buf, ts)
+}
+
+#[test]
+fn corrupted_payloads_are_counted_not_fatal() {
+    let clk = sprobench::util::clock::wall();
+    let broker = Broker::new(BrokerConfig::default(), clk.clone());
+    let in_topic = broker.create_topic("in");
+    let out_topic = broker.create_topic("out");
+    let drainer = spawn_drainer(&broker);
+
+    // 10% of the stream is garbage of various shapes.
+    let corrupt: [&[u8]; 5] = [
+        b"",
+        b"not,even",
+        b"{\"wrong\":1}",
+        b"\xff\xfe\xfd binary",
+        b"123,456",
+    ];
+    let mut records = Vec::new();
+    let mut bad = 0u64;
+    for i in 0..5_000u32 {
+        if i % 10 == 0 {
+            records.push(Record::new(i, corrupt[(i as usize / 10) % 5].to_vec(), 0));
+            bad += 1;
+        } else {
+            records.push(good_record(i, clk.now_micros()));
+        }
+    }
+    broker.produce_batch(&in_topic, records).unwrap();
+    in_topic.close();
+
+    let config = cfg(PipelineKind::CpuIntensive);
+    let tp = Arc::new(ThroughputRecorder::new());
+    let lat = Arc::new(LatencyRecorder::new());
+    let engine = Engine::new(&config, clk, tp, lat);
+    let stop = Arc::new(AtomicBool::new(false));
+    let report = engine
+        .run(&broker, "in", &out_topic, &stop, 30_000_000, None, None)
+        .unwrap();
+    broker.shutdown();
+    let forwarded = drainer.join().unwrap();
+
+    assert_eq!(report.events_in, 5_000, "all records consumed");
+    assert_eq!(report.parse_failures, bad, "every corruption counted");
+    assert_eq!(forwarded, 5_000 - bad, "only valid events forwarded");
+}
+
+#[test]
+fn broker_shutdown_mid_run_exits_cleanly() {
+    let clk = sprobench::util::clock::wall();
+    let broker = Broker::new(BrokerConfig::default(), clk.clone());
+    let in_topic = broker.create_topic("in");
+    let out_topic = broker.create_topic("out");
+    let drainer = spawn_drainer(&broker);
+    broker
+        .produce_batch(&in_topic, (0..2_000).map(|i| good_record(i, 0)).collect())
+        .unwrap();
+
+    let config = cfg(PipelineKind::PassThrough);
+    let tp = Arc::new(ThroughputRecorder::new());
+    let lat = Arc::new(LatencyRecorder::new());
+    let engine = Engine::new(&config, clk, tp, lat);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Kill the broker shortly into the run, from another thread.
+    let killer = {
+        let broker = broker.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            broker.shutdown();
+        })
+    };
+    let t0 = std::time::Instant::now();
+    // Must not hang: tasks see Closed on both topics and drain out.
+    let result = engine.run(&broker, "in", &out_topic, &stop, 60_000_000, None, None);
+    assert!(t0.elapsed().as_secs() < 20, "engine hung after broker death");
+    killer.join().unwrap();
+    // Either a clean report or a clean egestion error — never a panic.
+    match result {
+        Ok(report) => assert!(report.events_in <= 2_000),
+        Err(e) => assert!(e.contains("egestion"), "unexpected error: {e}"),
+    }
+    let _ = drainer.join().unwrap();
+}
+
+#[test]
+fn stop_flag_interrupts_engine_promptly() {
+    let clk = sprobench::util::clock::wall();
+    let broker = Broker::new(BrokerConfig::default(), clk.clone());
+    let _in = broker.create_topic("in");
+    let out_topic = broker.create_topic("out");
+    let drainer = spawn_drainer(&broker);
+
+    let config = cfg(PipelineKind::PassThrough);
+    let tp = Arc::new(ThroughputRecorder::new());
+    let lat = Arc::new(LatencyRecorder::new());
+    let engine = Engine::new(&config, clk, tp, lat);
+    let stop = Arc::new(AtomicBool::new(false));
+    let stopper = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            stop.store(true, Ordering::SeqCst);
+        })
+    };
+    let t0 = std::time::Instant::now();
+    // Input stays open and empty: only the stop flag can end this run.
+    let report = engine
+        .run(&broker, "in", &out_topic, &stop, 3_600_000_000, None, None)
+        .unwrap();
+    assert!(t0.elapsed().as_secs() < 10, "stop flag ignored");
+    assert_eq!(report.events_in, 0);
+    stopper.join().unwrap();
+    broker.shutdown();
+    let _ = drainer.join().unwrap();
+}
+
+#[test]
+fn window_state_survives_bursty_starvation() {
+    // Mem pipeline with long idle gaps between bursts: panes must rotate
+    // on time even when no events arrive (the advance-on-idle path).
+    let clk = sprobench::util::clock::wall();
+    let broker = Broker::new(BrokerConfig::default(), clk.clone());
+    let in_topic = broker.create_topic("in");
+    let out_topic = broker.create_topic("out");
+    let drainer = spawn_drainer(&broker);
+
+    let mut config = cfg(PipelineKind::MemIntensive);
+    config.engine.window_micros = 200_000;
+    config.engine.slide_micros = 100_000;
+    config.engine.parallelism = 1;
+
+    let tp = Arc::new(ThroughputRecorder::new());
+    let lat = Arc::new(LatencyRecorder::new());
+    let engine = Engine::new(&config, clk.clone(), tp, lat);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let feeder = {
+        let broker = broker.clone();
+        let in_topic = in_topic.clone();
+        let clk = clk.clone();
+        std::thread::spawn(move || {
+            for burst in 0..3 {
+                let records: Vec<Record> = (0..200)
+                    .map(|i| good_record(burst * 200 + i, clk.now_micros()))
+                    .collect();
+                broker.produce_batch(&in_topic, records).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(250)); // > window
+            }
+            in_topic.close();
+        })
+    };
+    let report = engine
+        .run(&broker, "in", &out_topic, &stop, 30_000_000, None, None)
+        .unwrap();
+    feeder.join().unwrap();
+    broker.shutdown();
+    let emitted = drainer.join().unwrap();
+    assert_eq!(report.events_in, 600);
+    // Each burst must land in its own window generation (idle gaps exceed
+    // the window): at least 3 distinct emission rounds.
+    let emits: u64 = report.tasks.iter().map(|t| t.step.window_emits).sum();
+    assert!(emits >= 3, "bursty stream produced only {emits} window emits");
+    assert!(emitted > 0);
+}

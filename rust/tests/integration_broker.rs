@@ -1,0 +1,165 @@
+//! Broker integration: multi-producer / multi-consumer stress under
+//! backpressure, record conservation, fan-out to multiple groups.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use sprobench::broker::{Broker, BrokerConfig, Record};
+use sprobench::util::clock;
+
+fn records(n: usize, key_base: u32) -> Vec<Record> {
+    (0..n)
+        .map(|i| Record::new(key_base + i as u32, vec![0u8; 27], i as u64))
+        .collect()
+}
+
+#[test]
+fn multi_producer_multi_consumer_conserves_records() {
+    let broker = Broker::new(
+        BrokerConfig {
+            partitions: 8,
+            queue_depth: 2048,
+            ..Default::default()
+        },
+        clock::wall(),
+    );
+    let topic = broker.create_topic("stress");
+    let group = broker.subscribe("stress", "workers", 4);
+
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: usize = 25_000;
+
+    let consumed = Arc::new(AtomicU64::new(0));
+    let consumers: Vec<_> = (0..4)
+        .map(|m| {
+            let g = group.clone();
+            let consumed = consumed.clone();
+            std::thread::spawn(move || loop {
+                match g.poll(m, 512) {
+                    Ok(Some(b)) => {
+                        consumed.fetch_add(b.records.len() as u64, Ordering::SeqCst);
+                        g.commit(b.partition, b.next_offset);
+                    }
+                    Ok(None) => std::thread::yield_now(),
+                    Err(_) => return,
+                }
+            })
+        })
+        .collect();
+
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let broker = broker.clone();
+            let topic = topic.clone();
+            std::thread::spawn(move || {
+                for chunk in records(PER_PRODUCER, (p * PER_PRODUCER) as u32).chunks(500) {
+                    broker.produce_batch(&topic, chunk.to_vec()).unwrap();
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    broker.shutdown();
+    for c in consumers {
+        c.join().unwrap();
+    }
+    assert_eq!(
+        consumed.load(Ordering::SeqCst),
+        (PRODUCERS * PER_PRODUCER) as u64
+    );
+    assert_eq!(broker.stats().backlog, 0);
+}
+
+#[test]
+fn backpressure_throttles_but_never_drops() {
+    // Tiny partitions; a slow consumer forces producers to block.
+    let broker = Broker::new(
+        BrokerConfig {
+            partitions: 2,
+            queue_depth: 64,
+            ..Default::default()
+        },
+        clock::wall(),
+    );
+    let topic = broker.create_topic("bp");
+    let group = broker.subscribe("bp", "slow", 1);
+    let producer = {
+        let broker = broker.clone();
+        let topic = topic.clone();
+        std::thread::spawn(move || {
+            for chunk in records(20_000, 0).chunks(100) {
+                broker.produce_batch(&topic, chunk.to_vec()).unwrap();
+            }
+        })
+    };
+    let mut seen = 0u64;
+    while seen < 20_000 {
+        if let Ok(Some(b)) = group.poll(0, 64) {
+            seen += b.records.len() as u64;
+            group.commit(b.partition, b.next_offset);
+            // Simulate a slow consumer.
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+    producer.join().unwrap();
+    assert_eq!(seen, 20_000);
+}
+
+#[test]
+fn fanout_to_two_groups_delivers_twice() {
+    let broker = Broker::new(BrokerConfig::default(), clock::wall());
+    let topic = broker.create_topic("fan");
+    let g1 = broker.subscribe("fan", "a", 1);
+    let g2 = broker.subscribe("fan", "b", 1);
+    broker.produce_batch(&topic, records(5_000, 0)).unwrap();
+    broker.shutdown();
+    let drain = |g: Arc<sprobench::broker::ConsumerGroup>| {
+        let mut n = 0;
+        loop {
+            match g.poll(0, 512) {
+                Ok(Some(b)) => {
+                    n += b.records.len();
+                    g.commit(b.partition, b.next_offset);
+                }
+                Ok(None) => continue,
+                Err(_) => return n,
+            }
+        }
+    };
+    assert_eq!(drain(g1), 5_000);
+    assert_eq!(drain(g2), 5_000);
+}
+
+#[test]
+fn per_partition_ordering_is_preserved() {
+    let broker = Broker::new(BrokerConfig::default(), clock::wall());
+    let topic = broker.create_topic("order");
+    // Same key → same partition → strict order.
+    for i in 0..1_000u64 {
+        broker
+            .produce(&topic, Record::new(7, i.to_le_bytes().to_vec(), i))
+            .unwrap();
+    }
+    broker.shutdown();
+    let g = broker.subscribe("order", "g", 1);
+    let mut last = None;
+    loop {
+        match g.poll(0, 128) {
+            Ok(Some(b)) => {
+                for r in &b.records {
+                    let v = u64::from_le_bytes(r.payload()[..8].try_into().unwrap());
+                    if let Some(prev) = last {
+                        assert!(v > prev, "order violated: {v} after {prev}");
+                    }
+                    last = Some(v);
+                }
+                g.commit(b.partition, b.next_offset);
+            }
+            Ok(None) => continue,
+            Err(_) => break,
+        }
+    }
+    assert_eq!(last, Some(999));
+}

@@ -1,0 +1,126 @@
+//! Workflow + SLURM + CLI integration: the paper's Sec. 3.1 automation
+//! path from one master config to archived, validated runs.
+
+use std::path::PathBuf;
+
+use sprobench::config::{expand_experiments, load_file, yaml};
+use sprobench::coordinator::simrun::{run_sim, SimModel};
+use sprobench::postprocess::validate_results;
+use sprobench::slurm::{ClusterSpec, JobState, Scheduler};
+use sprobench::workflow::WorkflowManager;
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("sprobench-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+const CAMPAIGN: &str = "
+benchmark:
+  name: campaign
+  mode: sim
+  duration: 30s
+workload:
+  rate: 2M
+generators:
+  max_instances: 64
+engine:
+  pipeline: cpu
+experiments:
+  - name: p2
+    engine.parallelism: 2
+  - name: p8
+    engine.parallelism: 8
+  - name: p16
+    engine.parallelism: 16
+";
+
+#[test]
+fn config_file_to_validated_run_dirs() {
+    let base = tmp("e2e");
+    let cfg_path = base.join("campaign.yaml");
+    std::fs::write(&cfg_path, CAMPAIGN).unwrap();
+
+    // File → experiments (the CLI `run` path).
+    let exps = load_file(&cfg_path).unwrap();
+    assert_eq!(exps.len(), 3);
+
+    let wm = WorkflowManager::new(base.join("runs"));
+    let model = SimModel::default();
+    let outcomes = wm
+        .run_all(&exps, |exp, dir| {
+            let (summary, store) = run_sim(&exp.config, &model);
+            std::fs::write(
+                dir.metrics_dir().join("series.json"),
+                store.to_json().to_pretty(),
+            )
+            .map_err(|e| e.to_string())?;
+            let results = summary.to_json();
+            let v = validate_results(&results);
+            if !v.is_empty() {
+                return Err(format!("{v:?}"));
+            }
+            Ok(results)
+        })
+        .unwrap();
+
+    assert_eq!(outcomes.len(), 3);
+    for o in &outcomes {
+        for f in ["config.resolved.json", "job.sbatch", "results.json", "trace.log"] {
+            assert!(o.dir.join(f).exists(), "{} missing {f}", o.name);
+        }
+        assert!(o.dir.join("metrics/series.json").exists());
+        // sbatch script references this experiment.
+        let sbatch = std::fs::read_to_string(o.dir.join("job.sbatch")).unwrap();
+        assert!(sbatch.contains(&format!("--job-name=sprobench-{}", o.name)));
+    }
+    // Parallelism override took effect and shows in results.
+    let p16 = &outcomes[2];
+    assert_eq!(
+        p16.results.path(&["parallelism"]).unwrap().as_i64(),
+        Some(16)
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn chained_batch_campaign_on_barnard_model() {
+    let exps = expand_experiments(&yaml::parse(CAMPAIGN).unwrap()).unwrap();
+    let mut sched = Scheduler::new(ClusterSpec::default());
+    let wm = WorkflowManager::new(tmp("batch"));
+    let ids = wm.submit_batch(&exps, &mut sched, true, |e| {
+        e.config.bench.duration_micros
+    });
+    sched.run_to_completion();
+    let mut last_end = 0;
+    for id in ids {
+        let j = sched.job(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        assert!(j.start_micros.unwrap() >= last_end, "chain violated");
+        last_end = j.end_micros.unwrap();
+    }
+}
+
+#[test]
+fn sim_sweep_reproduces_fig7_shape_through_workflow() {
+    // The whole loop: experiments → runs → results → shape claim.
+    let exps = expand_experiments(&yaml::parse(CAMPAIGN).unwrap()).unwrap();
+    let model = SimModel::default();
+    let rates: Vec<f64> = exps
+        .iter()
+        .map(|e| {
+            let mut cfg = e.config.clone();
+            cfg.workload.rate = 50_000_000; // saturating
+            cfg.generators.max_instances = 1024;
+            run_sim(&cfg, &model).0.processed_rate
+        })
+        .collect();
+    assert!(
+        rates.windows(2).all(|w| w[1] > w[0]),
+        "throughput must grow with parallelism: {rates:?}"
+    );
+    let early = rates[1] / rates[0]; // 8/2
+    let late = rates[2] / rates[1]; // 16/8
+    assert!(late < early, "no plateau: {rates:?}");
+}

@@ -1,0 +1,187 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! state) using the in-tree mini property-test framework.
+
+use sprobench::broker::{Broker, BrokerConfig, Record, Topic};
+use sprobench::engine::SlidingWindow;
+use sprobench::util::clock;
+use sprobench::util::histogram::Histogram;
+use sprobench::util::proptest::{check, Config};
+use sprobench::wgen::{EventFormat, SensorEvent};
+
+#[test]
+fn prop_routing_same_key_same_partition() {
+    check(Config::default().cases(100), "routing-stability", |g| {
+        let partitions = g.u64(1..32) as u32;
+        let topic = Topic::new("t", partitions, 1024);
+        let key = g.u64(0..1_000_000) as u32;
+        let p1 = topic.partition_for_key(key);
+        let p2 = topic.partition_for_key(key);
+        if p1 != p2 {
+            return Err(format!("key {key}: {p1} vs {p2}"));
+        }
+        if p1 >= partitions {
+            return Err(format!("partition {p1} out of range {partitions}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_produce_batch_conserves_by_partition() {
+    check(Config::default().cases(50), "batch-conservation", |g| {
+        let broker = Broker::new(
+            BrokerConfig {
+                partitions: g.u64(1..8) as u32,
+                queue_depth: 1 << 16,
+                ..Default::default()
+            },
+            clock::wall(),
+        );
+        let topic = broker.create_topic("t");
+        let n = g.usize(1..2000);
+        let records: Vec<Record> = (0..n)
+            .map(|i| Record::new(g.u64(0..5000) as u32, vec![0u8; 27], i as u64))
+            .collect();
+        broker.produce_batch(&topic, records).expect("produce");
+        let appended = topic.total_appended();
+        if appended != n as u64 {
+            return Err(format!("appended {appended} != produced {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_roundtrip_any_size_and_value() {
+    check(Config::default().cases(300), "event-roundtrip", |g| {
+        let ev = SensorEvent {
+            ts_micros: g.u64(0..(1 << 53)),
+            sensor_id: g.u64(0..1 << 22) as u32,
+            temp_c: g.f32(-500.0, 500.0),
+        };
+        let format = if g.bool() { EventFormat::Json } else { EventFormat::Csv };
+        let target = g.usize(27..512);
+        let mut buf = Vec::new();
+        let n = ev.serialize_into(format, target, &mut buf);
+        if n != buf.len() {
+            return Err("length mismatch".into());
+        }
+        let parsed = SensorEvent::parse(&buf)
+            .ok_or_else(|| format!("unparseable: {:?}", String::from_utf8_lossy(&buf)))?;
+        if parsed.ts_micros != ev.ts_micros || parsed.sensor_id != ev.sensor_id {
+            return Err(format!("ids/ts mismatch: {parsed:?} vs {ev:?}"));
+        }
+        if (parsed.temp_c - ev.temp_c).abs() > 0.006 {
+            return Err(format!("temp drift: {} vs {}", parsed.temp_c, ev.temp_c));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_split_equals_whole() {
+    // Accumulating a batch in two chunks must equal accumulating it whole
+    // (the engine splits batches arbitrarily at poll boundaries).
+    check(Config::default().cases(60), "window-split-merge", |g| {
+        let k = 64;
+        let n = g.usize(2..400);
+        let ids: Vec<u32> = (0..n).map(|_| g.u64(0..k as u64) as u32).collect();
+        let temps: Vec<f32> = (0..n).map(|_| g.f32(-50.0, 50.0)).collect();
+        let cut = g.usize(1..n);
+
+        let mut whole = SlidingWindow::new(k, 10_000_000, 2_000_000, 0);
+        whole.accumulate_native(&ids, &temps);
+        let mut split = SlidingWindow::new(k, 10_000_000, 2_000_000, 0);
+        split.accumulate_native(&ids[..cut], &temps[..cut]);
+        split.accumulate_native(&ids[cut..], &temps[cut..]);
+
+        let (ew, es) = (whole.advance(2_000_000), split.advance(2_000_000));
+        if ew.len() != 1 || es.len() != 1 {
+            return Err("expected one emission each".into());
+        }
+        if ew[0].aggregates.len() != es[0].aggregates.len() {
+            return Err("aggregate key sets differ".into());
+        }
+        for (a, b) in ew[0].aggregates.iter().zip(&es[0].aggregates) {
+            if a.0 != b.0 || a.2 != b.2 || (a.1 - b.1).abs() > 1e-3 {
+                return Err(format!("{a:?} vs {b:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_bounded_by_min_max() {
+    check(Config::default().cases(100), "histogram-bounds", |g| {
+        let mut h = Histogram::new();
+        let n = g.usize(1..500);
+        let mut lo = u64::MAX;
+        let mut hi = 0;
+        for _ in 0..n {
+            let v = g.u64(0..10_000_000);
+            lo = lo.min(v);
+            hi = hi.max(v);
+            h.record(v);
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let x = h.quantile(q);
+            if x < lo || x > hi {
+                return Err(format!("q{q}: {x} outside [{lo},{hi}]"));
+            }
+        }
+        if h.count() != n as u64 {
+            return Err("count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_merge_commutes() {
+    check(Config::default().cases(60), "histogram-merge-commute", |g| {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for _ in 0..g.usize(1..200) {
+            a.record(g.u64(0..1_000_000));
+        }
+        for _ in 0..g.usize(1..200) {
+            b.record(g.u64(0..1_000_000));
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        if ab.summary() != ba.summary() {
+            return Err(format!("{:?} vs {:?}", ab.summary(), ba.summary()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_consumer_group_assignment_partitions_exactly() {
+    check(Config::default().cases(100), "assignment-partition", |g| {
+        let partitions = g.u64(1..64) as u32;
+        let members = g.u64(1..16) as u32;
+        let broker = Broker::new(
+            BrokerConfig {
+                partitions,
+                ..Default::default()
+            },
+            clock::wall(),
+        );
+        broker.create_topic("t");
+        let group = broker.subscribe("t", "g", members);
+        let mut seen = vec![0u32; partitions as usize];
+        for m in 0..members {
+            for p in group.assignment(m) {
+                seen[p as usize] += 1;
+            }
+        }
+        if !seen.iter().all(|&c| c == 1) {
+            return Err(format!("partitions not covered exactly once: {seen:?}"));
+        }
+        Ok(())
+    });
+}
