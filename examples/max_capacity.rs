@@ -1,0 +1,54 @@
+//! Max-capacity sweep: escalate the offered load on the pass-through
+//! pipeline until this machine stops keeping up, then binary-search the
+//! knee and report the maximum sustainable throughput (MST).
+//!
+//! Writes `runs/max-capacity-example/report.json` + `report.md` — the
+//! same artifacts `sprobench max-capacity --config <yaml>` produces.
+//!
+//! ```bash
+//! cargo run --release --example max_capacity
+//! ```
+
+use sprobench::bench::scenarios;
+use sprobench::config::{BenchConfig, PipelineKind};
+use sprobench::coordinator::run_wall;
+use sprobench::experiment::MaxCapacityDriver;
+use sprobench::runtime::RuntimeFactory;
+use sprobench::util::units::fmt_count;
+
+fn main() {
+    // Wall-mode pass-through sweep: 1-second probes, doubling from 200K
+    // ev/s, then 3 refinement rounds around the knee.
+    let mut cfg = scenarios::max_capacity(PipelineKind::PassThrough);
+    cfg.bench.name = "max-capacity-example".into();
+    let rtf = RuntimeFactory::default_dir();
+    cfg.engine.use_hlo = rtf.available();
+    if !cfg.engine.use_hlo {
+        eprintln!("artifacts/ not built — falling back to native compute (run `make artifacts`)");
+    }
+    let use_hlo = cfg.engine.use_hlo;
+
+    let mut probes = 0u32;
+    let mut driver = MaxCapacityDriver::new(cfg, |c: &BenchConfig| {
+        probes += 1;
+        eprintln!("probe at {} ev/s ...", fmt_count(c.workload.rate as f64));
+        run_wall(c, use_hlo.then(|| rtf.clone()))
+    });
+    let report = driver.run().expect("sweep failed");
+    drop(driver);
+
+    let dir = std::path::Path::new("runs").join("max-capacity-example");
+    std::fs::create_dir_all(&dir).expect("create report dir");
+    std::fs::write(dir.join("report.json"), report.to_json().to_pretty())
+        .expect("write report.json");
+    std::fs::write(dir.join("report.md"), report.to_markdown()).expect("write report.md");
+
+    println!("{}", report.to_markdown());
+    println!(
+        "{} probes; reports under {}",
+        probes,
+        dir.display()
+    );
+    assert!(report.iterations.len() >= 2, "escalation must probe repeatedly");
+    println!("max_capacity OK");
+}

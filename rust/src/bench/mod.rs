@@ -4,6 +4,10 @@
 //! measured iterations, mean/p50/p99 wall time, derived throughput when
 //! the benched closure reports work units, aligned-table output and CSV
 //! export into `bench_results/`.
+//!
+//! [`scenarios`] holds the shared configuration builders that keep the
+//! bench targets, the examples and the max-capacity presets
+//! ([`scenarios::max_capacity`]) on identical setups.
 
 pub mod scenarios;
 

@@ -68,6 +68,50 @@ pub fn fig7_sim(parallelism: u32, rate: u64) -> BenchConfig {
     cfg
 }
 
+/// Max-capacity escalation preset for one pipeline kind (wall mode).
+///
+/// Short probe iterations keep a full sweep (≈6 escalations + 3
+/// refinements) in the tens of seconds on one box; the `experiment:`
+/// knobs start each pipeline near a rate it comfortably sustains so the
+/// escalation phase shows several sustainable doublings before the knee.
+pub fn max_capacity(kind: PipelineKind) -> BenchConfig {
+    let mut cfg = wall_base(&format!("maxcap-{}", kind.name()));
+    cfg.engine.pipeline = kind;
+    cfg.bench.duration_micros = 1_000_000;
+    cfg.bench.warmup_micros = 200_000;
+    cfg.workload.rate = match kind {
+        PipelineKind::PassThrough => 200_000,
+        PipelineKind::CpuIntensive => 100_000,
+        PipelineKind::MemIntensive => 100_000,
+        PipelineKind::Fused => 80_000,
+    };
+    cfg.generators.max_instances = 1024;
+    cfg.experiment.start_rate = cfg.workload.rate;
+    cfg.experiment.step_factor = 2.0;
+    cfg.experiment.max_iterations = 6;
+    cfg.experiment.refine_steps = 3;
+    cfg.experiment.sustain_ratio = 0.90;
+    cfg
+}
+
+/// Paper-scale sim variant of the max-capacity sweep: same escalation
+/// logic over the analytic cluster model, so the MST lands near the
+/// model's engine-capacity plateau (the Fig. 7 ceiling).
+pub fn max_capacity_sim(kind: PipelineKind, parallelism: u32) -> BenchConfig {
+    let mut cfg = max_capacity(kind);
+    cfg.bench.name = format!("maxcap-sim-{}-p{parallelism}", kind.name());
+    cfg.bench.mode = ExecMode::Sim;
+    cfg.bench.duration_micros = 30_000_000;
+    cfg.engine.parallelism = parallelism;
+    cfg.broker.partitions = parallelism.max(4);
+    cfg.workload.rate = 1_000_000;
+    cfg.experiment.start_rate = 1_000_000;
+    cfg.experiment.max_iterations = 10;
+    cfg.experiment.refine_steps = 5;
+    cfg.experiment.sustain_ratio = 0.95;
+    cfg
+}
+
 /// The paper's parallelism grid.
 pub const PARALLELISM_GRID: [u32; 5] = [1, 2, 4, 8, 16];
 
@@ -87,6 +131,37 @@ mod tests {
         fig6(500_000).validate().unwrap();
         fig7(16, 200_000, false).validate().unwrap();
         fig7_sim(16, 8_000_000).validate().unwrap();
+        for kind in [
+            PipelineKind::PassThrough,
+            PipelineKind::CpuIntensive,
+            PipelineKind::MemIntensive,
+            PipelineKind::Fused,
+        ] {
+            max_capacity(kind).validate().unwrap();
+            max_capacity_sim(kind, 8).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn max_capacity_presets_start_conservative() {
+        for kind in [
+            PipelineKind::PassThrough,
+            PipelineKind::CpuIntensive,
+            PipelineKind::MemIntensive,
+            PipelineKind::Fused,
+        ] {
+            let cfg = max_capacity(kind);
+            assert_eq!(cfg.engine.pipeline, kind);
+            assert_eq!(cfg.experiment.start_rate, cfg.workload.rate);
+            assert!(cfg.experiment.step_factor > 1.0);
+            assert!(
+                cfg.workload.rate <= 200_000,
+                "wall presets must start below one box's capacity"
+            );
+        }
+        let sim = max_capacity_sim(PipelineKind::PassThrough, 16);
+        assert_eq!(sim.bench.mode, ExecMode::Sim);
+        assert_eq!(sim.engine.parallelism, 16);
     }
 
     #[test]

@@ -5,18 +5,20 @@
 //! machines and SLURM clusters, interactive and batch (Sec. 3).
 //!
 //! ```text
-//! sprobench run      --config <file> [--experiment <name>] [--out <dir>]
-//! sprobench sbatch   --config <file> [--simulate] [--chain]
-//! sprobench report   --run <dir>
-//! sprobench baselines [--events <n>]
-//! sprobench list     --config <file>
+//! sprobench run          --config <file> [--experiment <name>] [--out <dir>]
+//! sprobench max-capacity --config <file> [--experiment <name>] [--out <dir>]
+//! sprobench sbatch       --config <file> [--simulate] [--chain]
+//! sprobench report       --run <dir>
+//! sprobench baselines    [--events <n>]
+//! sprobench list         --config <file>
 //! sprobench version | help
 //! ```
 
 use std::path::{Path, PathBuf};
 
-use crate::config::{self, ExecMode, Experiment};
+use crate::config::{self, BenchConfig, ExecMode, Experiment};
 use crate::coordinator::{run_wall, simrun};
+use crate::experiment::MaxCapacityDriver;
 use crate::postprocess::{ascii_table, validate_results};
 use crate::runtime::RuntimeFactory;
 use crate::slurm::{ClusterSpec, Scheduler};
@@ -85,6 +87,7 @@ pub fn dispatch(args: &[String]) -> Result<(), String> {
     let flags = Flags::parse(&args[1..]);
     match cmd {
         "run" => cmd_run(&flags),
+        "max-capacity" => cmd_max_capacity(&flags),
         "sbatch" => cmd_sbatch(&flags),
         "report" => cmd_report(&flags),
         "baselines" => cmd_baselines(&flags),
@@ -105,15 +108,19 @@ fn usage() -> &'static str {
     "SProBench — stream processing benchmark for HPC infrastructure
 
 USAGE:
-  sprobench run       --config <file> [--experiment <name>] [--out <dir>]
-  sprobench sbatch    --config <file> [--simulate] [--chain]
-  sprobench report    --run <dir>
-  sprobench baselines [--events <n>]
-  sprobench list      --config <file>
+  sprobench run          --config <file> [--experiment <name>] [--out <dir>]
+  sprobench max-capacity --config <file> [--experiment <name>] [--out <dir>]
+  sprobench sbatch       --config <file> [--simulate] [--chain]
+  sprobench report       --run <dir>
+  sprobench baselines    [--events <n>]
+  sprobench list         --config <file>
   sprobench version | help
 
 The config file is the single master control point (YAML); its
-`experiments:` list expands into one run per entry."
+`experiments:` list expands into one run per entry.  `max-capacity`
+escalates the offered load until the sustainability predicate fails
+(see the `experiment:` config section) and writes report.json +
+report.md with the maximum sustainable throughput."
 }
 
 fn load_experiments(flags: &Flags) -> Result<Vec<Experiment>, String> {
@@ -128,6 +135,24 @@ fn load_experiments(flags: &Flags) -> Result<Vec<Experiment>, String> {
     Ok(exps)
 }
 
+/// Execute one resolved config through the mode-appropriate entry point
+/// (shared by `run` and `max-capacity`).
+fn run_once(
+    cfg: &BenchConfig,
+    rtf: &RuntimeFactory,
+) -> Result<
+    (
+        crate::coordinator::RunSummary,
+        std::sync::Arc<crate::metrics::MetricStore>,
+    ),
+    String,
+> {
+    match cfg.bench.mode {
+        ExecMode::Wall => run_wall(cfg, cfg.engine.use_hlo.then(|| rtf.clone())),
+        ExecMode::Sim => Ok(simrun::run_sim(cfg, &simrun::SimModel::default())),
+    }
+}
+
 fn cmd_run(flags: &Flags) -> Result<(), String> {
     let exps = load_experiments(flags)?;
     let out_dir = PathBuf::from(flags.get("out").unwrap_or("runs"));
@@ -140,17 +165,7 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
             exp.config.engine.pipeline.name(),
             exp.config.engine.parallelism
         ));
-        let (summary, store) = match exp.config.bench.mode {
-            ExecMode::Wall => run_wall(
-                &exp.config,
-                if exp.config.engine.use_hlo {
-                    Some(rtf.clone())
-                } else {
-                    None
-                },
-            )?,
-            ExecMode::Sim => simrun::run_sim(&exp.config, &simrun::SimModel::default()),
-        };
+        let (summary, store) = run_once(&exp.config, &rtf)?;
         dir.step("exporting metrics");
         std::fs::write(dir.metrics_dir().join("series.json"), store.to_json().to_pretty())
             .map_err(|e| format!("write metrics: {e}"))?;
@@ -165,6 +180,33 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
         Ok(results)
     })?;
     println!("\n{} run(s) complete; results under {}", outcomes.len(), out_dir.display());
+    Ok(())
+}
+
+/// Escalate each configured experiment to its maximum sustainable
+/// throughput and write `report.json` + `report.md` per experiment.
+fn cmd_max_capacity(flags: &Flags) -> Result<(), String> {
+    let exps = load_experiments(flags)?;
+    let out_dir = PathBuf::from(flags.get("out").unwrap_or("runs"));
+    let rtf = RuntimeFactory::default_dir();
+    for exp in &exps {
+        let dir = out_dir.join(format!("{}-maxcap", exp.name));
+        std::fs::create_dir_all(&dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        println!("# max-capacity sweep: {} ({:?} mode)", exp.name, exp.config.bench.mode);
+        let rtf = rtf.clone();
+        let mut driver =
+            MaxCapacityDriver::new(exp.config.clone(), move |cfg: &BenchConfig| {
+                run_once(cfg, &rtf)
+            });
+        let report = driver.run()?;
+        std::fs::write(dir.join("report.json"), report.to_json().to_pretty())
+            .map_err(|e| format!("write report.json: {e}"))?;
+        let md = report.to_markdown();
+        std::fs::write(dir.join("report.md"), &md)
+            .map_err(|e| format!("write report.md: {e}"))?;
+        println!("{md}");
+        println!("reports written to {}", dir.display());
+    }
     Ok(())
 }
 
@@ -374,6 +416,51 @@ mod tests {
     fn run_requires_config() {
         let err = dispatch(&["run".to_string()]).unwrap_err();
         assert!(err.contains("--config"));
+    }
+
+    #[test]
+    fn max_capacity_writes_reports_from_a_sim_config() {
+        let dir = std::env::temp_dir().join(format!("sprobench-maxcap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("maxcap.yaml");
+        std::fs::write(
+            &cfg,
+            "benchmark:
+  name: mc
+  mode: sim
+  duration: 10s
+workload:
+  rate: 1M
+engine:
+  pipeline: passthrough
+experiment:
+  step_factor: 2.0
+  max_iterations: 6
+  refine_steps: 3
+",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        dispatch(&[
+            "max-capacity".into(),
+            "--config".into(),
+            cfg.display().to_string(),
+            "--out".into(),
+            out.display().to_string(),
+        ])
+        .unwrap();
+        let report_dir = out.join("mc-maxcap");
+        let json_text = std::fs::read_to_string(report_dir.join("report.json")).unwrap();
+        let report = crate::experiment::ExperimentReport::from_json(
+            &json::parse(&json_text).unwrap(),
+        )
+        .unwrap();
+        assert!(report.iterations.len() >= 2, "multi-iteration escalation");
+        assert!(report.mst_target_rate >= 1_000_000, "sim capacity is well above 1M");
+        let md = std::fs::read_to_string(report_dir.join("report.md")).unwrap();
+        assert!(md.contains("Maximum sustainable throughput"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

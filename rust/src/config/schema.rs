@@ -31,6 +31,16 @@ pub enum Framework {
     KStreams,
 }
 
+impl Framework {
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::Flink => "flink",
+            Framework::Spark => "spark",
+            Framework::KStreams => "kstreams",
+        }
+    }
+}
+
 /// Processing pipeline class (paper Sec. 3.3) plus the fused extension.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PipelineKind {
@@ -132,6 +142,45 @@ pub struct MetricsSection {
     pub out_dir: String,
 }
 
+/// Max-capacity experiment controls (the `experiment:` section).
+///
+/// Drives [`crate::experiment::MaxCapacityDriver`]: an escalation loop that
+/// multiplies the offered load by `step_factor` each iteration until the
+/// sustainability predicate fails, then binary-searches the knee for
+/// `refine_steps` rounds.  Sustainability follows the stepped-load
+/// definition of Karimov et al. / ShuffleBench: the engine keeps up with
+/// the offered rate without a growing backlog or runaway latency.
+#[derive(Clone, Debug)]
+pub struct ExperimentSection {
+    /// Initial target rate (events/s) for the escalation loop;
+    /// 0 = inherit `workload.rate`.
+    pub start_rate: u64,
+    /// Multiplicative step applied to the target rate each escalation
+    /// round; must be > 1.
+    pub step_factor: f64,
+    /// Maximum escalation iterations before the sweep gives up looking
+    /// for the knee.
+    pub max_iterations: u32,
+    /// Binary-search refinement rounds once the knee is bracketed.
+    pub refine_steps: u32,
+    /// A run is sustainable only if `processed_rate >= sustain_ratio *
+    /// offered_rate` (and the fleet itself achieved `sustain_ratio` of the
+    /// target).
+    pub sustain_ratio: f64,
+    /// p99 end-to-end latency bound in µs; 0 disables the check.
+    pub max_p99_micros: u64,
+    /// Bound on latency drift across the run: mean p50 of the second half
+    /// of the timeline may be at most this multiple of the first half.
+    /// 0 disables; values in (0, 1) are rejected.
+    pub max_latency_growth: f64,
+    /// Per-iteration measured duration; 0 = inherit `benchmark.duration`.
+    pub iteration_duration_micros: u64,
+    /// Timeline samples earlier than this offset from the start of each
+    /// iteration are discarded before evaluating sustainability;
+    /// 0 = inherit `benchmark.warmup`.
+    pub warmup_discard_micros: u64,
+}
+
 #[derive(Clone, Debug)]
 pub struct SlurmSection {
     pub enabled: bool,
@@ -151,6 +200,7 @@ pub struct BenchConfig {
     pub broker: BrokerSection,
     pub engine: EngineSection,
     pub metrics: MetricsSection,
+    pub experiment: ExperimentSection,
     pub slurm: SlurmSection,
 }
 
@@ -209,6 +259,17 @@ impl Default for BenchConfig {
                 sample_interval_micros: 1_000_000,
                 out_dir: "runs".into(),
             },
+            experiment: ExperimentSection {
+                start_rate: 0,
+                step_factor: 2.0,
+                max_iterations: 8,
+                refine_steps: 4,
+                sustain_ratio: 0.95,
+                max_p99_micros: 0,
+                max_latency_growth: 0.0,
+                iteration_duration_micros: 0,
+                warmup_discard_micros: 0,
+            },
             slurm: SlurmSection {
                 enabled: false,
                 nodes: 1,
@@ -253,6 +314,11 @@ fn get_u64(j: &Json, key: &str, default: u64) -> Result<u64, ConfigError> {
         Some(Json::Str(s)) => parse_count(s).map_err(ConfigError),
         Some(other) => err(format!("field '{key}': expected count, got {other:?}")),
     }
+}
+
+fn get_u32(j: &Json, key: &str, default: u32) -> Result<u32, ConfigError> {
+    let v = get_u64(j, key, default as u64)?;
+    u32::try_from(v).map_err(|_| ConfigError(format!("field '{key}': {v} exceeds u32 range")))
 }
 
 fn get_bytes(j: &Json, key: &str, default: u64) -> Result<u64, ConfigError> {
@@ -404,6 +470,31 @@ impl BenchConfig {
             out_dir: get_str(&m, "out_dir", &d.metrics.out_dir),
         };
 
+        let x = section(root, "experiment");
+        let experiment = ExperimentSection {
+            start_rate: get_u64(&x, "start_rate", d.experiment.start_rate)?,
+            step_factor: get_f64(&x, "step_factor", d.experiment.step_factor)?,
+            max_iterations: get_u32(&x, "max_iterations", d.experiment.max_iterations)?,
+            refine_steps: get_u32(&x, "refine_steps", d.experiment.refine_steps)?,
+            sustain_ratio: get_f64(&x, "sustain_ratio", d.experiment.sustain_ratio)?,
+            max_p99_micros: get_duration(&x, "max_p99", d.experiment.max_p99_micros)?,
+            max_latency_growth: get_f64(
+                &x,
+                "max_latency_growth",
+                d.experiment.max_latency_growth,
+            )?,
+            iteration_duration_micros: get_duration(
+                &x,
+                "iteration_duration",
+                d.experiment.iteration_duration_micros,
+            )?,
+            warmup_discard_micros: get_duration(
+                &x,
+                "warmup_discard",
+                d.experiment.warmup_discard_micros,
+            )?,
+        };
+
         let s = section(root, "slurm");
         let slurm = SlurmSection {
             enabled: get_bool(&s, "enabled", d.slurm.enabled)?,
@@ -421,6 +512,7 @@ impl BenchConfig {
             broker,
             engine,
             metrics,
+            experiment,
             slurm,
         };
         cfg.validate()?;
@@ -465,6 +557,29 @@ impl BenchConfig {
         }
         if self.engine.slide_micros > self.engine.window_micros {
             return err("engine.slide must be <= engine.window");
+        }
+        // Negated comparisons so NaN (parseable from YAML "nan") fails
+        // every bound instead of slipping past it.
+        if !(self.experiment.step_factor > 1.0 && self.experiment.step_factor.is_finite()) {
+            return err(format!(
+                "experiment.step_factor must be a finite number > 1 (got {})",
+                self.experiment.step_factor
+            ));
+        }
+        if !(self.experiment.sustain_ratio > 0.0 && self.experiment.sustain_ratio <= 1.0) {
+            return err(format!(
+                "experiment.sustain_ratio must be in (0, 1] (got {})",
+                self.experiment.sustain_ratio
+            ));
+        }
+        if self.experiment.max_iterations == 0 {
+            return err("experiment.max_iterations must be > 0");
+        }
+        let growth = self.experiment.max_latency_growth;
+        if !(growth == 0.0 || (growth >= 1.0 && growth.is_finite())) {
+            return err(format!(
+                "experiment.max_latency_growth must be 0 (disabled) or a finite number >= 1 (got {growth})"
+            ));
         }
         let needed =
             (self.workload.rate + self.generators.instance_capacity - 1) / self.generators.instance_capacity;
@@ -583,5 +698,62 @@ workload:
     fn slide_greater_than_window_rejected() {
         let y = "engine:\n  window: 5s\n  slide: 10s\n";
         assert!(BenchConfig::from_json(&yaml::parse(y).unwrap()).is_err());
+    }
+
+    #[test]
+    fn experiment_section_parses_with_units() {
+        let y = "
+experiment:
+  start_rate: 250K
+  step_factor: 1.5
+  max_iterations: 12
+  refine_steps: 6
+  sustain_ratio: 0.9
+  max_p99: 500ms
+  max_latency_growth: 2.5
+  iteration_duration: 5s
+  warmup_discard: 1s
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert_eq!(cfg.experiment.start_rate, 250_000);
+        assert_eq!(cfg.experiment.step_factor, 1.5);
+        assert_eq!(cfg.experiment.max_iterations, 12);
+        assert_eq!(cfg.experiment.refine_steps, 6);
+        assert_eq!(cfg.experiment.sustain_ratio, 0.9);
+        assert_eq!(cfg.experiment.max_p99_micros, 500_000);
+        assert_eq!(cfg.experiment.max_latency_growth, 2.5);
+        assert_eq!(cfg.experiment.iteration_duration_micros, 5_000_000);
+        assert_eq!(cfg.experiment.warmup_discard_micros, 1_000_000);
+    }
+
+    #[test]
+    fn experiment_defaults_are_inherit_markers() {
+        let cfg = BenchConfig::from_json(&Json::obj()).unwrap();
+        assert_eq!(cfg.experiment.start_rate, 0);
+        assert_eq!(cfg.experiment.step_factor, 2.0);
+        assert_eq!(cfg.experiment.max_p99_micros, 0);
+        assert_eq!(cfg.experiment.iteration_duration_micros, 0);
+    }
+
+    #[test]
+    fn experiment_bounds_rejected() {
+        for y in [
+            "experiment:\n  step_factor: 1.0\n",
+            "experiment:\n  step_factor: nan\n",
+            "experiment:\n  step_factor: inf\n",
+            "experiment:\n  sustain_ratio: 0\n",
+            "experiment:\n  sustain_ratio: 1.5\n",
+            "experiment:\n  sustain_ratio: nan\n",
+            "experiment:\n  max_iterations: 0\n",
+            "experiment:\n  max_iterations: 4294967297\n",
+            "experiment:\n  refine_steps: 4294967296\n",
+            "experiment:\n  max_latency_growth: 0.5\n",
+            "experiment:\n  max_latency_growth: nan\n",
+        ] {
+            assert!(
+                BenchConfig::from_json(&yaml::parse(y).unwrap()).is_err(),
+                "should reject: {y}"
+            );
+        }
     }
 }

@@ -356,4 +356,35 @@ experiments:
         let err = parse("a:\n    b: 1\n  misdent: 2\n").unwrap_err();
         assert_eq!(err.line, 3);
     }
+
+    #[test]
+    fn experiment_section_scalars_keep_their_types() {
+        // The max-capacity `experiment:` section mixes floats, ints and
+        // unit-suffixed strings; the parser must keep each distinct so the
+        // schema layer can apply unit parsing where appropriate.
+        let y = "
+experiment:
+  step_factor: 1.5
+  max_iterations: 12
+  start_rate: 250K
+  max_p99: 500ms
+";
+        let v = parse(y).unwrap();
+        assert_eq!(
+            v.path(&["experiment", "step_factor"]).unwrap().as_f64(),
+            Some(1.5)
+        );
+        assert_eq!(
+            v.path(&["experiment", "max_iterations"]).unwrap().as_i64(),
+            Some(12)
+        );
+        assert_eq!(
+            v.path(&["experiment", "start_rate"]).unwrap().as_str(),
+            Some("250K")
+        );
+        assert_eq!(
+            v.path(&["experiment", "max_p99"]).unwrap().as_str(),
+            Some("500ms")
+        );
+    }
 }

@@ -7,7 +7,9 @@
 //!   time (the 630-node Barnard runs of the paper).
 //!
 //! Both return the same [`RunSummary`] shape, so post-processing, the
-//! workflow manager, the CLI and the benches treat them uniformly.
+//! workflow manager, the CLI and the benches treat them uniformly — and
+//! [`crate::experiment::MaxCapacityDriver`] can wrap either entry point
+//! in its stepped-load escalation loop.
 
 pub mod simrun;
 
@@ -294,11 +296,7 @@ pub fn run_wall(
     let summary = RunSummary {
         name: cfg.bench.name.clone(),
         pipeline: cfg.engine.pipeline.name(),
-        framework: match cfg.engine.framework {
-            crate::config::Framework::Flink => "flink",
-            crate::config::Framework::Spark => "spark",
-            crate::config::Framework::KStreams => "kstreams",
-        },
+        framework: cfg.engine.framework.name(),
         parallelism: cfg.engine.parallelism,
         generated: fleet_report.events,
         processed: engine_report.events_in,

@@ -181,11 +181,7 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
     let summary = RunSummary {
         name: cfg.bench.name.clone(),
         pipeline: cfg.engine.pipeline.name(),
-        framework: match cfg.engine.framework {
-            crate::config::Framework::Flink => "flink",
-            crate::config::Framework::Spark => "spark",
-            crate::config::Framework::KStreams => "kstreams",
-        },
+        framework: cfg.engine.framework.name(),
         parallelism: cfg.engine.parallelism,
         generated,
         processed,

@@ -1,0 +1,350 @@
+//! The max-capacity escalation driver.
+//!
+//! [`MaxCapacityDriver`] wraps any spot-run entry point — normally
+//! [`crate::coordinator::run_wall`] or [`crate::coordinator::simrun::run_sim`]
+//! — in a stepped-load loop: probe at the starting rate, multiply the
+//! target by `experiment.step_factor` while the sustainability predicate
+//! ([`super::SustainPolicy`]) holds, then binary-search the bracket
+//! between the last sustained and the first failing rate.  The result is
+//! the benchmark's headline number: the **maximum sustainable
+//! throughput** (MST), plus a full [`ExperimentReport`] of every probe.
+//!
+//! The runner is injected as a closure so the escalation logic itself is
+//! deterministic and unit-testable against synthetic capacity models.
+
+use std::sync::Arc;
+
+use crate::config::BenchConfig;
+use crate::coordinator::RunSummary;
+use crate::metrics::{MeasurementPoint, MetricStore};
+
+use super::report::{config_fingerprint, ExperimentReport, IterationRecord, Phase};
+use super::sustain::SustainPolicy;
+
+/// Upper clamp on probe rates; keeps `rate * step_factor` well inside
+/// both u64 and the f64 integer range however long the sweep runs.
+const MAX_PROBE_RATE: u64 = 1_000_000_000_000;
+
+/// Drives one escalation sweep over a base configuration.
+pub struct MaxCapacityDriver<R> {
+    base: BenchConfig,
+    runner: R,
+}
+
+impl<R> MaxCapacityDriver<R>
+where
+    R: FnMut(&BenchConfig) -> Result<(RunSummary, Arc<MetricStore>), String>,
+{
+    /// `base` supplies everything but the per-probe rate; its
+    /// `experiment:` section controls the sweep.  `runner` executes one
+    /// spot run and returns its summary + timeline.
+    pub fn new(base: BenchConfig, runner: R) -> Self {
+        Self { base, runner }
+    }
+
+    /// Run the full sweep: escalation, then binary-search refinement.
+    pub fn run(&mut self) -> Result<ExperimentReport, String> {
+        let policy = SustainPolicy::from_config(&self.base);
+        let exp = self.base.experiment.clone();
+        let step = exp.step_factor;
+
+        let mut iterations: Vec<IterationRecord> = Vec::new();
+        let mut best_ok: Option<(u64, f64)> = None; // (target, processed rate)
+        let mut first_fail: Option<u64> = None;
+
+        // Phase 1: geometric escalation until the predicate fails.
+        let start = if exp.start_rate > 0 {
+            exp.start_rate
+        } else {
+            self.base.workload.rate
+        };
+        let mut rate = start.clamp(1, MAX_PROBE_RATE);
+        for _ in 0..exp.max_iterations {
+            let rec = self.probe(rate, Phase::Escalate, iterations.len() as u32, &policy)?;
+            let ok = rec.sustainable;
+            let processed = rec.processed_rate;
+            iterations.push(rec);
+            if ok {
+                best_ok = Some((rate, processed));
+                let next = ((rate as f64) * step).ceil() as u64;
+                rate = next.max(rate.saturating_add(1)).min(MAX_PROBE_RATE);
+            } else {
+                first_fail = Some(rate);
+                break;
+            }
+        }
+
+        // Phase 2: binary-search the knee inside the bracket.  When the
+        // very first probe failed there is no sustained lower bound; the
+        // search then descends from the failing rate toward zero.
+        if let Some(fail) = first_fail {
+            let mut lo = best_ok.map(|(t, _)| t).unwrap_or(0);
+            let mut hi = fail;
+            for _ in 0..exp.refine_steps {
+                let mid = lo + (hi - lo) / 2;
+                if mid == lo || mid == hi {
+                    break;
+                }
+                let rec = self.probe(mid, Phase::Refine, iterations.len() as u32, &policy)?;
+                let ok = rec.sustainable;
+                let processed = rec.processed_rate;
+                iterations.push(rec);
+                if ok {
+                    best_ok = Some((mid, processed));
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            first_fail = Some(hi);
+        }
+
+        // A knee needs both sides of the bracket: a sustained rate below
+        // and a failing rate above.  All-probes-failed sweeps have no
+        // sustained side, so they report no knee (and MST 0).
+        let knee = match (best_ok, first_fail) {
+            (Some((ok, _)), Some(fail)) => Some((ok, fail)),
+            _ => None,
+        };
+        let (mst_target_rate, mst_processed_rate) = best_ok.unwrap_or((0, 0.0));
+        Ok(ExperimentReport {
+            name: self.base.bench.name.clone(),
+            pipeline: self.base.engine.pipeline.name().to_string(),
+            framework: self.base.engine.framework.name().to_string(),
+            parallelism: self.base.engine.parallelism,
+            config_fingerprint: config_fingerprint(&self.base),
+            iterations,
+            mst_target_rate,
+            mst_processed_rate,
+            knee,
+        })
+    }
+
+    /// Execute one probe run at `target_rate` and fold the outcome into
+    /// an [`IterationRecord`].
+    fn probe(
+        &mut self,
+        target_rate: u64,
+        phase: Phase,
+        index: u32,
+        policy: &SustainPolicy,
+    ) -> Result<IterationRecord, String> {
+        let mut cfg = self.base.clone();
+        cfg.bench.name = format!("{}-{}{}", self.base.bench.name, phase.name(), index);
+        cfg.workload.rate = target_rate;
+        if cfg.experiment.iteration_duration_micros > 0 {
+            cfg.bench.duration_micros = cfg.experiment.iteration_duration_micros;
+        }
+        // Auto-scale the fleet so the raised rate never trips config
+        // validation; the paper's generator layer does the same.
+        let cap = cfg.generators.instance_capacity.max(1);
+        let needed = (target_rate + cap - 1) / cap;
+        if needed > cfg.generators.max_instances as u64 {
+            cfg.generators.max_instances = needed.min(u32::MAX as u64) as u32;
+        }
+
+        let (summary, store) = (self.runner)(&cfg)?;
+        let verdict = policy.evaluate(target_rate, &summary, Some(&store));
+        let e2e = summary.latency_at(MeasurementPoint::EndToEnd);
+        Ok(IterationRecord {
+            index,
+            phase,
+            target_rate,
+            offered_rate: summary.offered_rate,
+            processed_rate: summary.processed_rate,
+            p50_us: e2e.map(|h| h.p50).unwrap_or(0),
+            p95_us: e2e.map(|h| h.p95).unwrap_or(0),
+            p99_us: e2e.map(|h| h.p99).unwrap_or(0),
+            mean_us: e2e.map(|h| h.mean).unwrap_or(0.0),
+            backlog: summary.generated.saturating_sub(summary.processed),
+            elapsed_micros: summary.elapsed_micros,
+            sustainable: verdict.sustainable,
+            reasons: verdict.reasons,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::histogram::HistogramSummary;
+    use crate::util::rng::Pcg32;
+
+    /// A synthetic system with a hard capacity: offers exactly the target,
+    /// processes `min(target, capacity * (1 ± jitter))`, and shows
+    /// saturating latency near the knee.  Seeded, hence deterministic.
+    fn capacity_runner(
+        capacity: f64,
+        seed: u64,
+    ) -> impl FnMut(&BenchConfig) -> Result<(RunSummary, Arc<MetricStore>), String> {
+        let mut rng = Pcg32::from_master(seed, 0xCAFE);
+        move |cfg: &BenchConfig| {
+            let target = cfg.workload.rate as f64;
+            let jitter = 1.0 + (rng.f64() - 0.5) * 0.01;
+            let processed_rate = target.min(capacity * jitter);
+            let duration_s = cfg.bench.duration_micros as f64 / 1e6;
+            let generated = (target * duration_s) as u64;
+            let processed = (processed_rate * duration_s) as u64;
+            let rho = (processed_rate / capacity).min(0.999);
+            let p50 = (500.0 / (1.0 - rho)) as u64;
+            let summary = RunSummary {
+                name: cfg.bench.name.clone(),
+                pipeline: cfg.engine.pipeline.name(),
+                framework: "flink",
+                parallelism: cfg.engine.parallelism,
+                generated,
+                processed,
+                emitted: processed,
+                elapsed_micros: cfg.bench.duration_micros,
+                offered_rate: target,
+                processed_rate,
+                offered_bytes_rate: target * 27.0,
+                latency: vec![(
+                    MeasurementPoint::EndToEnd,
+                    HistogramSummary {
+                        count: processed.max(1),
+                        mean: p50 as f64 * 1.2,
+                        min: 100,
+                        p50,
+                        p95: p50 * 2,
+                        p99: p50 * 3,
+                        max: p50 * 5,
+                    },
+                )],
+                gc_young_count: 0,
+                gc_young_time_micros: 0,
+                energy_joules: 0.0,
+                parse_failures: 0,
+                batches: 1,
+            };
+            Ok((summary, Arc::new(MetricStore::new())))
+        }
+    }
+
+    fn sweep_cfg(start_rate: u64) -> BenchConfig {
+        let mut cfg = BenchConfig::default();
+        cfg.bench.name = "maxcap-test".into();
+        cfg.bench.duration_micros = 2_000_000;
+        cfg.experiment.start_rate = start_rate;
+        cfg.experiment.step_factor = 2.0;
+        cfg.experiment.max_iterations = 10;
+        cfg.experiment.refine_steps = 6;
+        cfg.experiment.sustain_ratio = 0.95;
+        cfg
+    }
+
+    #[test]
+    fn converges_to_the_synthetic_capacity() {
+        let capacity = 1_000_000.0;
+        let mut driver = MaxCapacityDriver::new(sweep_cfg(100_000), capacity_runner(capacity, 42));
+        let report = driver.run().unwrap();
+        let mst = report.mst_target_rate as f64;
+        assert!(
+            (0.85 * capacity..=1.1 * capacity).contains(&mst),
+            "MST {mst} not near capacity {capacity}"
+        );
+        let knee = report.knee.expect("knee bracketed");
+        assert!(knee.0 <= knee.1);
+        assert_eq!(knee.0, report.mst_target_rate);
+        // Escalation phase is geometric until the first failure.
+        let escalate: Vec<&IterationRecord> = report
+            .iterations
+            .iter()
+            .filter(|i| i.phase == Phase::Escalate)
+            .collect();
+        assert!(escalate.len() >= 4, "expected several doublings");
+        for w in escalate.windows(2) {
+            assert_eq!(w[1].target_rate, w[0].target_rate * 2);
+        }
+        assert!(escalate.last().unwrap().reasons.iter().any(|r| r.contains("fell behind")));
+    }
+
+    #[test]
+    fn deterministic_under_a_fixed_seed() {
+        let run = |seed| {
+            MaxCapacityDriver::new(sweep_cfg(100_000), capacity_runner(1_000_000.0, seed))
+                .run()
+                .unwrap()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b, "same seed must reproduce the sweep exactly");
+        assert_eq!(a.config_fingerprint, b.config_fingerprint);
+    }
+
+    #[test]
+    fn unbounded_capacity_never_finds_a_knee() {
+        let mut driver =
+            MaxCapacityDriver::new(sweep_cfg(100_000), capacity_runner(f64::INFINITY, 1));
+        let report = driver.run().unwrap();
+        assert!(report.knee.is_none());
+        assert_eq!(report.iterations.len(), 10, "all escalation iterations used");
+        assert!(report.iterations.iter().all(|i| i.sustainable));
+        // MST is the last (highest) sustained target: start * 2^9.
+        assert_eq!(report.mst_target_rate, 100_000 << 9);
+    }
+
+    #[test]
+    fn first_probe_failure_searches_downward() {
+        // Capacity far below the starting rate: the driver must refine
+        // down from the failing start, not give up.
+        let capacity = 200_000.0;
+        let mut driver = MaxCapacityDriver::new(sweep_cfg(1_600_000), capacity_runner(capacity, 3));
+        let report = driver.run().unwrap();
+        assert!(!report.iterations[0].sustainable);
+        assert!(report.mst_target_rate > 0, "refinement found a sustainable rate");
+        let mst = report.mst_target_rate as f64;
+        assert!(mst <= 1.1 * capacity, "MST {mst} above capacity {capacity}");
+        assert!(report.iterations.iter().skip(1).all(|i| i.phase == Phase::Refine));
+    }
+
+    #[test]
+    fn probe_runs_inherit_iteration_duration_and_autoscale() {
+        let mut cfg = sweep_cfg(10_000_000);
+        cfg.experiment.max_iterations = 1;
+        cfg.experiment.iteration_duration_micros = 750_000;
+        cfg.generators.max_instances = 4; // far too few for 10M ev/s
+        let mut seen: Vec<(u64, u32, u64)> = Vec::new();
+        let mut base = capacity_runner(f64::INFINITY, 9);
+        let mut driver = MaxCapacityDriver::new(cfg, |c: &BenchConfig| {
+            seen.push((
+                c.bench.duration_micros,
+                c.generators.max_instances,
+                c.workload.rate,
+            ));
+            c.validate().map_err(|e| e.to_string())?;
+            base(c)
+        });
+        driver.run().unwrap();
+        drop(driver);
+        assert_eq!(seen.len(), 1);
+        let (duration, instances, rate) = seen[0];
+        assert_eq!(duration, 750_000);
+        assert_eq!(rate, 10_000_000);
+        assert!(instances >= 20, "fleet must autoscale, got {instances}");
+    }
+
+    #[test]
+    fn all_probes_failing_reports_no_knee_and_zero_mst() {
+        // Capacity so low even the refinement floor fails: no sustained
+        // rate exists, so there is nothing to bracket.
+        let mut cfg = sweep_cfg(1_600_000);
+        cfg.experiment.refine_steps = 3;
+        let mut driver = MaxCapacityDriver::new(cfg, capacity_runner(10.0, 5));
+        let report = driver.run().unwrap();
+        assert!(report.iterations.iter().all(|i| !i.sustainable));
+        assert_eq!(report.mst_target_rate, 0);
+        assert!(report.knee.is_none(), "no sustained side → no knee");
+        let md = report.to_markdown();
+        assert!(md.contains("No sustainable rate found"));
+        assert!(!md.contains("Knee bracket"));
+    }
+
+    #[test]
+    fn runner_errors_propagate() {
+        let mut driver = MaxCapacityDriver::new(sweep_cfg(100_000), |_: &BenchConfig| {
+            Err("broker exploded".to_string())
+        });
+        assert!(driver.run().unwrap_err().contains("broker exploded"));
+    }
+}

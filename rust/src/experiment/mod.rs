@@ -1,0 +1,28 @@
+//! Automated max-capacity experiments (paper Sec. 3: "built-in automated
+//! experiment management tools" that push a framework to its scalability
+//! limit).
+//!
+//! A single spot run answers "what happened at rate R"; this module
+//! answers "what is the highest R the system sustains".  It implements
+//! the stepped-load methodology of Karimov et al. and ShuffleBench:
+//!
+//! * [`sustain`] — the sustainability predicate over a finished
+//!   [`crate::coordinator::RunSummary`] and its metric timeline.
+//! * [`driver`] — [`MaxCapacityDriver`]: geometric load escalation, then
+//!   binary-search refinement of the knee, around any spot-run entry
+//!   point (wall or sim).
+//! * [`report`] — [`ExperimentReport`]: machine-readable JSON plus a
+//!   Markdown summary of every probe and the final maximum sustainable
+//!   throughput (MST).
+//!
+//! Reached from the CLI as `sprobench max-capacity --config <yaml>`; the
+//! sweep's knobs live in the config's `experiment:` section
+//! ([`crate::config::schema::ExperimentSection`]).
+
+pub mod driver;
+pub mod report;
+pub mod sustain;
+
+pub use driver::MaxCapacityDriver;
+pub use report::{config_fingerprint, ExperimentReport, IterationRecord, Phase};
+pub use sustain::{SustainPolicy, Verdict};

@@ -1,0 +1,429 @@
+//! Structured max-capacity experiment reports.
+//!
+//! An [`ExperimentReport`] captures every iteration of one escalation
+//! sweep — target rate, measured rates, latency percentiles, and the
+//! sustainability verdict — plus the detected knee point and the final
+//! maximum sustainable throughput (MST).  It serializes to JSON
+//! (`report.json`, round-trippable through [`ExperimentReport::from_json`])
+//! and renders to a human-friendly Markdown summary (`report.md`) via
+//! [`crate::postprocess::markdown_table`].
+
+use crate::config::BenchConfig;
+use crate::postprocess::markdown_table;
+use crate::util::json::Json;
+use crate::util::units::{fmt_count, fmt_micros};
+
+/// Which loop of the driver produced an iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Geometric load escalation (rate × step_factor each round).
+    Escalate,
+    /// Binary-search refinement between the bracketing rates.
+    Refine,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Escalate => "escalate",
+            Phase::Refine => "refine",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Phase> {
+        match s {
+            "escalate" => Some(Phase::Escalate),
+            "refine" => Some(Phase::Refine),
+            _ => None,
+        }
+    }
+}
+
+/// One probe run inside the sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IterationRecord {
+    pub index: u32,
+    pub phase: Phase,
+    /// Rate the driver asked the fleet for, events/s.
+    pub target_rate: u64,
+    /// Rate the fleet actually offered, events/s.
+    pub offered_rate: f64,
+    /// Rate the engine processed, events/s.
+    pub processed_rate: f64,
+    /// End-to-end latency percentiles, µs (0 when not recorded).
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    /// Events generated but unprocessed at run end.
+    pub backlog: u64,
+    pub elapsed_micros: u64,
+    pub sustainable: bool,
+    /// One entry per failed sustainability check; empty when sustainable.
+    pub reasons: Vec<String>,
+}
+
+/// The complete sweep result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentReport {
+    pub name: String,
+    pub pipeline: String,
+    pub framework: String,
+    pub parallelism: u32,
+    /// FNV-1a fingerprint of the resolved base config, so reports from
+    /// different configurations are never compared by accident.
+    pub config_fingerprint: String,
+    pub iterations: Vec<IterationRecord>,
+    /// Highest target rate judged sustainable (events/s); 0 when none was.
+    pub mst_target_rate: u64,
+    /// Engine-processed rate measured at that target.
+    pub mst_processed_rate: f64,
+    /// The bracket around the knee: (highest sustained, lowest failing)
+    /// target rates.  `None` when the sweep never saw a failure, or when
+    /// no probe was sustainable (nothing to bracket from below).
+    pub knee: Option<(u64, u64)>,
+}
+
+/// FNV-1a hash of the config's debug representation, as 16 hex digits.
+pub fn config_fingerprint(cfg: &BenchConfig) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in format!("{cfg:?}").bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+impl IterationRecord {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("index", Json::Int(self.index as i64));
+        j.set("phase", Json::Str(self.phase.name().into()));
+        j.set("target_rate", Json::Int(self.target_rate as i64));
+        j.set("offered_rate", Json::Num(self.offered_rate));
+        j.set("processed_rate", Json::Num(self.processed_rate));
+        let mut lat = Json::obj();
+        lat.set("p50", Json::Int(self.p50_us as i64));
+        lat.set("p95", Json::Int(self.p95_us as i64));
+        lat.set("p99", Json::Int(self.p99_us as i64));
+        lat.set("mean", Json::Num(self.mean_us));
+        j.set("latency_us", lat);
+        j.set("backlog", Json::Int(self.backlog as i64));
+        j.set("elapsed_us", Json::Int(self.elapsed_micros as i64));
+        j.set("sustainable", Json::Bool(self.sustainable));
+        j.set(
+            "reasons",
+            Json::Arr(self.reasons.iter().map(|r| Json::Str(r.clone())).collect()),
+        );
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let int = |key: &str| -> Result<u64, String> {
+            j.get(key)
+                .and_then(|v| v.as_i64())
+                .map(|v| v.max(0) as u64)
+                .ok_or_else(|| format!("iteration: missing int '{key}'"))
+        };
+        let num = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("iteration: missing number '{key}'"))
+        };
+        let lat = j.get("latency_us").ok_or("iteration: missing latency_us")?;
+        let lat_int = |key: &str| -> u64 {
+            lat.get(key).and_then(|v| v.as_i64()).unwrap_or(0).max(0) as u64
+        };
+        Ok(IterationRecord {
+            index: int("index")? as u32,
+            phase: j
+                .get("phase")
+                .and_then(|v| v.as_str())
+                .and_then(Phase::from_name)
+                .ok_or("iteration: bad phase")?,
+            target_rate: int("target_rate")?,
+            offered_rate: num("offered_rate")?,
+            processed_rate: num("processed_rate")?,
+            p50_us: lat_int("p50"),
+            p95_us: lat_int("p95"),
+            p99_us: lat_int("p99"),
+            mean_us: lat.get("mean").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            backlog: int("backlog")?,
+            elapsed_micros: int("elapsed_us")?,
+            sustainable: j
+                .get("sustainable")
+                .and_then(|v| v.as_bool())
+                .ok_or("iteration: missing sustainable")?,
+            reasons: j
+                .get("reasons")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|r| r.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl ExperimentReport {
+    /// The `report.json` document.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()));
+        j.set("pipeline", Json::Str(self.pipeline.clone()));
+        j.set("framework", Json::Str(self.framework.clone()));
+        j.set("parallelism", Json::Int(self.parallelism as i64));
+        j.set(
+            "config_fingerprint",
+            Json::Str(self.config_fingerprint.clone()),
+        );
+        j.set(
+            "iterations",
+            Json::Arr(self.iterations.iter().map(|i| i.to_json()).collect()),
+        );
+        let mut mst = Json::obj();
+        mst.set("target_rate", Json::Int(self.mst_target_rate as i64));
+        mst.set("processed_rate", Json::Num(self.mst_processed_rate));
+        j.set("max_sustainable_throughput", mst);
+        match self.knee {
+            Some((ok, fail)) => {
+                let mut k = Json::obj();
+                k.set("sustained", Json::Int(ok as i64));
+                k.set("failing", Json::Int(fail as i64));
+                j.set("knee", k);
+            }
+            None => {
+                j.set("knee", Json::Null);
+            }
+        }
+        j
+    }
+
+    /// Parse a `report.json` document back (exact round-trip of
+    /// [`Self::to_json`]).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let s = |key: &str| -> Result<String, String> {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("report: missing string '{key}'"))
+        };
+        let iterations = j
+            .get("iterations")
+            .and_then(|v| v.as_arr())
+            .ok_or("report: missing iterations")?
+            .iter()
+            .map(IterationRecord::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let mst = j
+            .get("max_sustainable_throughput")
+            .ok_or("report: missing max_sustainable_throughput")?;
+        let knee = match j.get("knee") {
+            None | Some(Json::Null) => None,
+            Some(k) => Some((
+                k.get("sustained")
+                    .and_then(|v| v.as_i64())
+                    .ok_or("report: knee.sustained")?
+                    .max(0) as u64,
+                k.get("failing")
+                    .and_then(|v| v.as_i64())
+                    .ok_or("report: knee.failing")?
+                    .max(0) as u64,
+            )),
+        };
+        Ok(ExperimentReport {
+            name: s("name")?,
+            pipeline: s("pipeline")?,
+            framework: s("framework")?,
+            parallelism: j
+                .get("parallelism")
+                .and_then(|v| v.as_i64())
+                .ok_or("report: missing parallelism")?
+                .clamp(0, u32::MAX as i64) as u32,
+            config_fingerprint: s("config_fingerprint")?,
+            iterations,
+            mst_target_rate: mst
+                .get("target_rate")
+                .and_then(|v| v.as_i64())
+                .ok_or("report: mst.target_rate")?
+                .max(0) as u64,
+            mst_processed_rate: mst
+                .get("processed_rate")
+                .and_then(|v| v.as_f64())
+                .ok_or("report: mst.processed_rate")?,
+            knee,
+        })
+    }
+
+    /// The `report.md` document: run metadata, the per-iteration table,
+    /// and the MST headline.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("# Max-capacity report — {}\n\n", self.name);
+        out.push_str(&format!(
+            "- pipeline: `{}` / framework: `{}` / parallelism: {}\n",
+            self.pipeline, self.framework, self.parallelism
+        ));
+        out.push_str(&format!(
+            "- config fingerprint: `{}`\n\n",
+            self.config_fingerprint
+        ));
+        let rows: Vec<Vec<String>> = self
+            .iterations
+            .iter()
+            .map(|it| {
+                vec![
+                    it.index.to_string(),
+                    it.phase.name().to_string(),
+                    fmt_count(it.target_rate as f64),
+                    fmt_count(it.offered_rate),
+                    fmt_count(it.processed_rate),
+                    if it.p50_us > 0 {
+                        fmt_micros(it.p50_us)
+                    } else {
+                        "-".into()
+                    },
+                    if it.p99_us > 0 {
+                        fmt_micros(it.p99_us)
+                    } else {
+                        "-".into()
+                    },
+                    if it.sustainable {
+                        "yes".into()
+                    } else {
+                        format!("no — {}", it.reasons.join("; "))
+                    },
+                ]
+            })
+            .collect();
+        out.push_str(&markdown_table(
+            &[
+                "#", "phase", "target", "offered", "processed", "p50", "p99", "sustainable",
+            ],
+            &rows,
+        ));
+        out.push('\n');
+        if self.mst_target_rate > 0 {
+            out.push_str(&format!(
+                "**Maximum sustainable throughput: {} ev/s** (measured {} ev/s processed)\n",
+                fmt_count(self.mst_target_rate as f64),
+                fmt_count(self.mst_processed_rate),
+            ));
+        } else {
+            out.push_str("**No sustainable rate found** — every probe failed the predicate.\n");
+        }
+        match self.knee {
+            Some((ok, fail)) => out.push_str(&format!(
+                "\nKnee bracket: sustained at {} ev/s, failing at {} ev/s.\n",
+                fmt_count(ok as f64),
+                fmt_count(fail as f64)
+            )),
+            // All probes failed: the headline above already says so.
+            None if self.mst_target_rate == 0 => {}
+            None => out.push_str(
+                "\nNo knee found within the iteration budget — the system never saturated; \
+                 the MST is a lower bound.\n",
+            ),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_report() -> ExperimentReport {
+        ExperimentReport {
+            name: "maxcap-passthrough".into(),
+            pipeline: "passthrough".into(),
+            framework: "flink".into(),
+            parallelism: 4,
+            config_fingerprint: "00f1e2d3c4b5a697".into(),
+            iterations: vec![
+                IterationRecord {
+                    index: 0,
+                    phase: Phase::Escalate,
+                    target_rate: 100_000,
+                    offered_rate: 99_800.0,
+                    processed_rate: 99_700.0,
+                    p50_us: 900,
+                    p95_us: 2_000,
+                    p99_us: 3_100,
+                    mean_us: 1_100.5,
+                    backlog: 0,
+                    elapsed_micros: 2_000_000,
+                    sustainable: true,
+                    reasons: vec![],
+                },
+                IterationRecord {
+                    index: 1,
+                    phase: Phase::Escalate,
+                    target_rate: 200_000,
+                    offered_rate: 160_000.0,
+                    processed_rate: 120_000.0,
+                    p50_us: 45_000,
+                    p95_us: 0,
+                    p99_us: 250_000,
+                    mean_us: 80_000.0,
+                    backlog: 40_000,
+                    elapsed_micros: 2_500_000,
+                    sustainable: false,
+                    reasons: vec!["fell behind: processed 120000 ev/s < 95% of offered".into()],
+                },
+            ],
+            mst_target_rate: 100_000,
+            mst_processed_rate: 99_700.0,
+            knee: Some((100_000, 200_000)),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let report = sample_report();
+        let text = report.to_json().to_pretty();
+        let parsed = json::parse(&text).unwrap();
+        let back = ExperimentReport::from_json(&parsed).unwrap();
+        assert_eq!(back, report);
+    }
+
+    #[test]
+    fn json_roundtrip_without_knee() {
+        let mut report = sample_report();
+        report.knee = None;
+        report.iterations.truncate(1);
+        let back =
+            ExperimentReport::from_json(&json::parse(&report.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back, report);
+    }
+
+    #[test]
+    fn markdown_contains_iterations_and_mst() {
+        let md = sample_report().to_markdown();
+        assert!(md.contains("# Max-capacity report — maxcap-passthrough"));
+        assert!(md.contains("| # | phase | target | offered | processed | p50 | p99 | sustainable |"));
+        assert!(md.contains("escalate"));
+        assert!(md.contains("fell behind"));
+        assert!(md.contains("Maximum sustainable throughput: 100K ev/s"));
+        assert!(md.contains("Knee bracket"));
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_config_sensitive() {
+        let a = BenchConfig::default();
+        let mut b = BenchConfig::default();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.engine.parallelism = 16;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+        assert_eq!(config_fingerprint(&a).len(), 16);
+    }
+
+    #[test]
+    fn malformed_report_is_rejected() {
+        let j = json::parse("{\"name\": \"x\"}").unwrap();
+        assert!(ExperimentReport::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! The sustainability predicate: did one run keep up with its target?
+//!
+//! Following Karimov et al. ("Benchmarking Distributed Stream Data
+//! Processing Systems") and ShuffleBench, a load level is *sustainable*
+//! when the system processes it without falling behind: the engine's
+//! processed rate tracks the offered rate, no backlog accumulates, and
+//! latency neither exceeds a bound nor trends upward across the run.
+//! [`SustainPolicy::evaluate`] applies these checks to a finished
+//! [`RunSummary`] (plus, optionally, the run's timeline in a
+//! [`MetricStore`]) and returns a [`Verdict`] with a reason for every
+//! failed check — the reasons land verbatim in the experiment report.
+
+use crate::config::BenchConfig;
+use crate::coordinator::RunSummary;
+use crate::metrics::{MeasurementPoint, MetricStore};
+
+/// Thresholds the predicate applies; normally resolved from the
+/// `experiment:` config section via [`SustainPolicy::from_config`].
+#[derive(Clone, Debug)]
+pub struct SustainPolicy {
+    /// Minimum fraction of the offered rate the engine must process, and
+    /// of the target rate the fleet must offer.
+    pub sustain_ratio: f64,
+    /// p99 end-to-end latency bound in µs; 0 disables the check.
+    pub max_p99_micros: u64,
+    /// Max multiple by which mean p50 latency may grow from the first to
+    /// the second half of the timeline; 0 disables the check.
+    pub max_latency_growth: f64,
+    /// Timeline samples within this offset of the run start are discarded
+    /// before the latency-growth check.
+    pub warmup_discard_micros: u64,
+}
+
+impl SustainPolicy {
+    /// Resolve the policy from a config, applying the inherit rules
+    /// (`warmup_discard` 0 → `benchmark.warmup`).
+    pub fn from_config(cfg: &BenchConfig) -> Self {
+        let x = &cfg.experiment;
+        Self {
+            sustain_ratio: x.sustain_ratio,
+            max_p99_micros: x.max_p99_micros,
+            max_latency_growth: x.max_latency_growth,
+            warmup_discard_micros: if x.warmup_discard_micros > 0 {
+                x.warmup_discard_micros
+            } else {
+                cfg.bench.warmup_micros
+            },
+        }
+    }
+
+    /// Judge one finished run against a target rate.  `store` supplies
+    /// the per-interval timeline for the latency-trend check; pass `None`
+    /// when no timeline was collected (the check is then skipped).
+    pub fn evaluate(
+        &self,
+        target_rate: u64,
+        summary: &RunSummary,
+        store: Option<&MetricStore>,
+    ) -> Verdict {
+        let mut reasons = Vec::new();
+        let target = target_rate as f64;
+
+        // The fleet itself must achieve the target; if the generators are
+        // the bottleneck there is no point escalating further.
+        if summary.offered_rate < self.sustain_ratio * target {
+            reasons.push(format!(
+                "generator-limited: offered {:.0} ev/s < {:.0}% of target {:.0} ev/s",
+                summary.offered_rate,
+                self.sustain_ratio * 100.0,
+                target
+            ));
+        }
+
+        // Keep-up: the engine must process what was offered.
+        if summary.processed_rate < self.sustain_ratio * summary.offered_rate {
+            reasons.push(format!(
+                "fell behind: processed {:.0} ev/s < {:.0}% of offered {:.0} ev/s",
+                summary.processed_rate,
+                self.sustain_ratio * 100.0,
+                summary.offered_rate
+            ));
+        }
+
+        // Backlog: events generated but never processed by run end.
+        let backlog = summary.generated.saturating_sub(summary.processed);
+        if summary.generated > 0
+            && (summary.processed as f64) < self.sustain_ratio * summary.generated as f64
+        {
+            reasons.push(format!(
+                "backlog: {backlog} of {} generated events unprocessed",
+                summary.generated
+            ));
+        }
+
+        // Absolute latency bound.
+        if self.max_p99_micros > 0 {
+            if let Some(e2e) = summary.latency_at(MeasurementPoint::EndToEnd) {
+                if e2e.count > 0 && e2e.p99 > self.max_p99_micros {
+                    reasons.push(format!(
+                        "p99 latency {}µs > bound {}µs",
+                        e2e.p99, self.max_p99_micros
+                    ));
+                }
+            }
+        }
+
+        // Latency trend: a queue that is still filling shows up as p50
+        // drifting upward across the run even when throughput looks fine.
+        if self.max_latency_growth > 0.0 {
+            if let Some(growth) = store.and_then(|s| {
+                latency_growth(s, "latency.end_to_end.p50_us", self.warmup_discard_micros)
+            }) {
+                if growth > self.max_latency_growth {
+                    reasons.push(format!(
+                        "latency trending up: second-half p50 is {growth:.2}x first half \
+                         (bound {:.2}x)",
+                        self.max_latency_growth
+                    ));
+                }
+            }
+        }
+
+        Verdict {
+            sustainable: reasons.is_empty(),
+            reasons,
+        }
+    }
+}
+
+/// Outcome of one sustainability evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Verdict {
+    pub sustainable: bool,
+    /// One entry per failed check; empty iff `sustainable`.
+    pub reasons: Vec<String>,
+}
+
+/// Ratio of the mean of the second half of a series to the mean of the
+/// first half, after discarding `warmup_micros` from the series start.
+/// `None` when the series is missing or too short to split.
+fn latency_growth(store: &MetricStore, series: &str, warmup_micros: u64) -> Option<f64> {
+    let s = store.get(series)?;
+    let t0 = s.points.first()?.0;
+    let s = s.after(t0.saturating_add(warmup_micros));
+    if s.len() < 4 {
+        return None;
+    }
+    let mid = s.len() / 2;
+    let mean = |pts: &[(u64, f64)]| pts.iter().map(|&(_, v)| v).sum::<f64>() / pts.len() as f64;
+    let first = mean(&s.points[..mid]);
+    let second = mean(&s.points[mid..]);
+    if first <= 0.0 {
+        return None;
+    }
+    Some(second / first)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::histogram::HistogramSummary;
+
+    /// A synthetic summary with the fields the predicate reads.
+    fn summary(target: u64, offered: f64, processed_rate: f64, p99: u64) -> RunSummary {
+        let generated = (offered * 2.0) as u64;
+        let processed = ((processed_rate / offered.max(1.0)) * generated as f64) as u64;
+        RunSummary {
+            name: format!("probe-{target}"),
+            pipeline: "passthrough",
+            framework: "flink",
+            parallelism: 4,
+            generated,
+            processed: processed.min(generated),
+            emitted: processed.min(generated),
+            elapsed_micros: 2_000_000,
+            offered_rate: offered,
+            processed_rate,
+            offered_bytes_rate: offered * 27.0,
+            latency: vec![(
+                MeasurementPoint::EndToEnd,
+                HistogramSummary {
+                    count: 1000,
+                    mean: p99 as f64 / 3.0,
+                    min: 10,
+                    p50: p99 / 3,
+                    p95: p99 / 2,
+                    p99,
+                    max: p99 * 2,
+                },
+            )],
+            gc_young_count: 0,
+            gc_young_time_micros: 0,
+            energy_joules: 0.0,
+            parse_failures: 0,
+            batches: 1,
+        }
+    }
+
+    fn policy() -> SustainPolicy {
+        SustainPolicy {
+            sustain_ratio: 0.95,
+            max_p99_micros: 0,
+            max_latency_growth: 0.0,
+            warmup_discard_micros: 0,
+        }
+    }
+
+    #[test]
+    fn keeping_up_is_sustainable() {
+        let v = policy().evaluate(100_000, &summary(100_000, 100_000.0, 99_000.0, 5_000), None);
+        assert!(v.sustainable, "{:?}", v.reasons);
+        assert!(v.reasons.is_empty());
+    }
+
+    #[test]
+    fn falling_behind_is_not() {
+        let v = policy().evaluate(100_000, &summary(100_000, 100_000.0, 60_000.0, 5_000), None);
+        assert!(!v.sustainable);
+        assert!(
+            v.reasons.iter().any(|r| r.contains("fell behind")),
+            "{:?}",
+            v.reasons
+        );
+    }
+
+    #[test]
+    fn generator_shortfall_is_flagged() {
+        let v = policy().evaluate(1_000_000, &summary(1_000_000, 400_000.0, 400_000.0, 5_000), None);
+        assert!(!v.sustainable);
+        assert!(
+            v.reasons.iter().any(|r| r.contains("generator-limited")),
+            "{:?}",
+            v.reasons
+        );
+    }
+
+    #[test]
+    fn p99_bound_applies_only_when_set() {
+        let s = summary(100_000, 100_000.0, 99_000.0, 900_000);
+        assert!(policy().evaluate(100_000, &s, None).sustainable);
+        let mut p = policy();
+        p.max_p99_micros = 100_000;
+        let v = p.evaluate(100_000, &s, None);
+        assert!(!v.sustainable);
+        assert!(v.reasons.iter().any(|r| r.contains("p99")), "{:?}", v.reasons);
+    }
+
+    #[test]
+    fn latency_trend_detected_from_timeline() {
+        let store = MetricStore::new();
+        // Warmup noise, then a flat first half and a 3x second half.
+        store.append("latency.end_to_end.p50_us", 0, 9_999.0);
+        for i in 0..8u64 {
+            let v = if i < 4 { 100.0 } else { 300.0 };
+            store.append("latency.end_to_end.p50_us", 1_000_000 + i * 1_000_000, v);
+        }
+        let mut p = policy();
+        p.max_latency_growth = 2.0;
+        p.warmup_discard_micros = 500_000;
+        let good = summary(100_000, 100_000.0, 99_000.0, 5_000);
+        let v = p.evaluate(100_000, &good, Some(&store));
+        assert!(!v.sustainable);
+        assert!(
+            v.reasons.iter().any(|r| r.contains("trending up")),
+            "{:?}",
+            v.reasons
+        );
+        // Flat series passes.
+        let flat = MetricStore::new();
+        for i in 0..8u64 {
+            flat.append("latency.end_to_end.p50_us", i * 1_000_000, 100.0);
+        }
+        assert!(p.evaluate(100_000, &good, Some(&flat)).sustainable);
+        // Missing series skips the check.
+        assert!(p.evaluate(100_000, &good, None).sustainable);
+    }
+
+    #[test]
+    fn policy_resolves_inherit_rules_from_config() {
+        let mut cfg = BenchConfig::default();
+        cfg.bench.warmup_micros = 3_000_000;
+        cfg.experiment.warmup_discard_micros = 0;
+        assert_eq!(
+            SustainPolicy::from_config(&cfg).warmup_discard_micros,
+            3_000_000
+        );
+        cfg.experiment.warmup_discard_micros = 700_000;
+        assert_eq!(
+            SustainPolicy::from_config(&cfg).warmup_discard_micros,
+            700_000
+        );
+    }
+}

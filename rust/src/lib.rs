@@ -9,7 +9,9 @@
 //!   pipelines ([`pipelines`]), metric collection ([`metrics`], [`jvm`],
 //!   [`sysmon`]), SLURM integration ([`slurm`]), workflow automation
 //!   ([`workflow`]), post-processing ([`postprocess`]), the baseline
-//!   benchmark models ([`baselines`]) and the driver ([`coordinator`]).
+//!   benchmark models ([`baselines`]), the spot-run driver
+//!   ([`coordinator`]) and the max-capacity experiment driver
+//!   ([`experiment`]).
 //! * **L2/L1 (build time)** — the pipelines' per-event compute as JAX +
 //!   Pallas programs, AOT-lowered to HLO text by `python/compile/aot.py`
 //!   and executed on the hot path through [`runtime`] (PJRT CPU client).
@@ -17,8 +19,8 @@
 //! Python never runs at request time: `make artifacts` compiles once, the
 //! Rust binary is self-contained afterwards.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See the repository `README.md` for a quickstart and the module map,
+//! and `docs/ARCHITECTURE.md` for the run lifecycle and layering.
 
 pub mod baselines;
 pub mod bench;
@@ -27,6 +29,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod experiment;
 pub mod jvm;
 pub mod metrics;
 pub mod pipelines;

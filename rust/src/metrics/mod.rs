@@ -8,7 +8,9 @@
 //!
 //! * [`point`] — the measurement points along the pipeline.
 //! * [`recorder`] — lock-cheap throughput counters + latency histograms.
-//! * [`store`] — central time-series storage with CSV/JSON export.
+//! * [`store`] — central time-series storage with CSV/JSON export; the
+//!   max-capacity sustainability predicate ([`crate::experiment`]) reads
+//!   its latency timeline to detect drift.
 
 pub mod point;
 pub mod recorder;

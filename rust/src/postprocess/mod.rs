@@ -3,13 +3,14 @@
 //! The paper's post-processing unit "aggregates and validates the
 //! monitoring data" for offline analysis (Sec. 3).  Here:
 //!
-//! * [`report`] — ASCII tables + plots and CSV emitters used by the CLI
-//!   `report` command, the examples, and every bench target.
+//! * [`report`] — ASCII/Markdown tables, plots and CSV emitters used by
+//!   the CLI `report` and `max-capacity` commands, the examples, and
+//!   every bench target.
 //! * [`validate`] — consistency checks over a finished run's results
 //!   (conservation of events, sane latencies, monotone counters).
 
 pub mod report;
 pub mod validate;
 
-pub use report::{ascii_plot, ascii_table, csv_from_rows};
+pub use report::{ascii_plot, ascii_table, csv_from_rows, markdown_table};
 pub use validate::{validate_results, Violation};

@@ -1,4 +1,4 @@
-//! ASCII table/plot rendering and CSV emission.
+//! ASCII/Markdown table rendering, ASCII plots, and CSV emission.
 
 /// Render an aligned ASCII table.
 pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -36,6 +36,31 @@ pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
         out.push('\n');
     }
     out.push_str(&sep);
+    out
+}
+
+/// Render a GitHub-flavored Markdown table (used by the max-capacity
+/// experiment reports; cells are pipe-escaped).
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let esc = |s: &str| s.replace('|', "\\|");
+    let mut out = String::from("|");
+    for h in headers {
+        out.push_str(&format!(" {} |", esc(h)));
+    }
+    out.push_str("\n|");
+    for _ in headers {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push('|');
+        for i in 0..headers.len() {
+            let empty = String::new();
+            let cell = row.get(i).unwrap_or(&empty);
+            out.push_str(&format!(" {} |", esc(cell)));
+        }
+        out.push('\n');
+    }
     out
 }
 
@@ -119,6 +144,22 @@ mod tests {
         let lines: Vec<&str> = t.lines().collect();
         let w = lines[0].len();
         assert!(lines.iter().all(|l| l.len() == w), "ragged table:\n{t}");
+    }
+
+    #[test]
+    fn markdown_table_shape_and_escaping() {
+        let t = markdown_table(
+            &["rate", "verdict"],
+            &[
+                vec!["1M".into(), "ok".into()],
+                vec!["2M".into(), "p99 | too high".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines[0], "| rate | verdict |");
+        assert_eq!(lines[1], "|---|---|");
+        assert_eq!(lines[2], "| 1M | ok |");
+        assert!(lines[3].contains("p99 \\| too high"));
     }
 
     #[test]
