@@ -3,21 +3,124 @@
 //! Per-component cost of everything on the request path: event
 //! serialization/parsing, broker append/poll, channel transfer, latency
 //! recording, HLO dispatch per batch size, native-vs-HLO pipeline compute,
-//! and the fused-vs-separate dispatch ablation (DESIGN.md).
+//! and the fused-vs-separate dispatch ablation (DESIGN.md) — plus the
+//! **data-plane comparison**: a full produce → consume → parse → process
+//! loop on the per-record plane vs the batch-first plane (`RecordBatch`
+//! end-to-end), which is the number the batching refactor is accountable
+//! to.
+//!
+//! Run `cargo bench --bench hotpath_micro` for the full profile, or
+//! `-- --quick` for a reduced run (CI smoke).  Either way the data-plane
+//! comparison is written to `BENCH_hotpath.json` at the repo root so every
+//! change leaves a perf data point (schema documented in README.md).
 
 use std::sync::Arc;
 
-use sprobench::bench::Bencher;
-use sprobench::broker::{Broker, BrokerConfig, Record};
+use sprobench::bench::{Bencher, Measurement};
+use sprobench::broker::{Broker, BrokerConfig, PartitionedBatchBuilder, Record, Topic};
+use sprobench::engine::EventBatch;
 use sprobench::metrics::{LatencyRecorder, MeasurementPoint};
 use sprobench::runtime::{Input, RuntimeFactory};
 use sprobench::util::clock;
+use sprobench::util::json::Json;
 use sprobench::util::rng::Pcg32;
-use sprobench::wgen::{EventFormat, SensorEvent};
+use sprobench::wgen::{EventFormat, EventSerializer, SensorEvent};
 
-const N: u64 = 200_000;
+/// One produce → consume → parse → process pass over the **per-record**
+/// plane: per-record appends (one lock/condvar handshake each), records
+/// materialized from the poll, per-event latency samples.
+fn e2e_per_record(
+    broker: &Arc<Broker>,
+    topic: &Arc<Topic>,
+    group: &Arc<sprobench::broker::ConsumerGroup>,
+    payloads: &[Vec<u8>],
+    events: u64,
+    lat: &LatencyRecorder,
+) -> f64 {
+    for i in 0..events {
+        let p = &payloads[(i % 1000) as usize];
+        broker
+            .produce(topic, Record::new(i as u32, p.clone(), i))
+            .unwrap();
+    }
+    let mut seen = 0u64;
+    let mut parsed = EventBatch::with_capacity(4096);
+    while seen < events {
+        if let Ok(Some(b)) = group.poll(0, 4096) {
+            let records = b.to_records();
+            seen += records.len() as u64;
+            parsed.clear();
+            parsed.extend_from_records(&records);
+            for &append_ts in &parsed.append_ts {
+                lat.record(MeasurementPoint::ProcIn, 0, append_ts);
+            }
+            let alerts = parsed.temps.iter().filter(|&&t| t * 1.8 + 32.0 > 80.0).count();
+            std::hint::black_box(alerts);
+            group.commit(b.partition, b.next_offset);
+        }
+    }
+    events as f64
+}
+
+/// The same pass over the **batch-first** plane: chunked serialization
+/// into per-partition arenas, whole-batch appends and polls, payload-view
+/// parsing, one bulk latency group per batch.
+fn e2e_batched(
+    broker: &Arc<Broker>,
+    topic: &Arc<Topic>,
+    group: &Arc<sprobench::broker::ConsumerGroup>,
+    payloads: &[Vec<u8>],
+    events: u64,
+    lat: &LatencyRecorder,
+) -> f64 {
+    let mut sent = 0u64;
+    while sent < events {
+        let chunk = 512.min(events - sent);
+        let mut pb = PartitionedBatchBuilder::new(topic.partition_count());
+        for i in 0..chunk {
+            let key = (sent + i) as u32;
+            pb.push(
+                topic.partition_for_key(key),
+                key,
+                &payloads[((sent + i) % 1000) as usize],
+                sent + i,
+            );
+        }
+        broker.produce_batches(topic, pb.finish()).unwrap();
+        sent += chunk;
+    }
+    let mut seen = 0u64;
+    let mut parsed = EventBatch::with_capacity(4096);
+    while seen < events {
+        if let Ok(Some(b)) = group.poll(0, 4096) {
+            seen += b.record_count() as u64;
+            parsed.clear();
+            parsed.extend_from_batches(&b.batches);
+            lat.record_groups(
+                MeasurementPoint::ProcIn,
+                0,
+                b.batches.iter().map(|rb| (rb.append_ts_micros, rb.len() as u64)),
+            );
+            let alerts = parsed.temps.iter().filter(|&&t| t * 1.8 + 32.0 > 80.0).count();
+            std::hint::black_box(alerts);
+            group.commit(b.partition, b.next_offset);
+        }
+    }
+    events as f64
+}
+
+fn eps(m: &[Measurement], name: &str) -> f64 {
+    m.iter()
+        .find(|m| m.name == name)
+        .map(|m| m.throughput())
+        .unwrap_or(0.0)
+}
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: u64 = if quick { 40_000 } else { 200_000 };
+    let iters = if quick { 2 } else { 5 };
+
     let mut b = Bencher::new("hotpath_micro");
 
     // --- Event serialization (generator inner loop) ----------------------
@@ -28,9 +131,8 @@ fn main() {
         ("serialize json 64B", EventFormat::Json, 64),
         ("serialize json 256B", EventFormat::Json, 256),
     ] {
-        b.measure(label, 1, 5, || -> f64 {
-            
-            for _ in 0..N {
+        b.measure(label, 1, iters, || -> f64 {
+            for _ in 0..n {
                 let ev = SensorEvent {
                     ts_micros: 1_714_329_600_000_000,
                     sensor_id: rng.below(1024),
@@ -39,12 +141,13 @@ fn main() {
                 ev.serialize_into(format, size, &mut wire);
                 std::hint::black_box(&wire);
             }
-            N as f64
+            n as f64
         });
     }
 
     // --- Event parsing (engine source) ------------------------------------
     let mut payloads = Vec::new();
+    let mut serializer = EventSerializer::new(EventFormat::Csv, 27);
     for i in 0..1000u32 {
         let ev = SensorEvent {
             ts_micros: 1_714_329_600_000_000 + i as u64,
@@ -52,16 +155,16 @@ fn main() {
             temp_c: 21.5,
         };
         let mut buf = Vec::new();
-        ev.serialize_into(EventFormat::Csv, 27, &mut buf);
+        serializer.serialize(&ev, &mut buf);
         payloads.push(buf);
     }
-    b.measure("parse csv 27B", 1, 5, || -> f64 {
-        for _ in 0..(N / 1000) {
+    b.measure("parse csv 27B", 1, iters, || -> f64 {
+        for _ in 0..(n / 1000) {
             for p in &payloads {
                 std::hint::black_box(SensorEvent::parse(p));
             }
         }
-        N as f64
+        n as f64
     });
 
     // --- Broker produce_batch + consume ------------------------------------
@@ -75,8 +178,8 @@ fn main() {
     );
     let topic = broker.create_topic("micro");
     let group = broker.subscribe("micro", "g", 1);
-    b.measure("broker produce+consume batch=512", 1, 5, || -> f64 {
-        let total = 100_000u64;
+    b.measure("broker produce+consume batch=512", 1, iters, || -> f64 {
+        let total = n / 2;
         let mut sent = 0;
         while sent < total {
             let records: Vec<Record> = (0..512)
@@ -88,15 +191,34 @@ fn main() {
         let mut seen = 0u64;
         while seen < sent {
             if let Ok(Some(batch)) = group.poll(0, 4096) {
-                seen += batch.records.len() as u64;
+                seen += batch.record_count() as u64;
                 group.commit(batch.partition, batch.next_offset);
             }
         }
         sent as f64
     });
 
+    // --- Data-plane comparison: per-record vs RecordBatch end-to-end -------
+    // Same event count, same broker config, same parse + native compute;
+    // the only variable is the unit moving through the data plane.
+    let lat = LatencyRecorder::new();
+    {
+        let t = broker.create_topic("dp-record");
+        let g = broker.subscribe("dp-record", "dpr", 1);
+        b.measure("e2e data plane per-record", 1, iters, || {
+            e2e_per_record(&broker, &t, &g, &payloads, n / 2, &lat)
+        });
+    }
+    {
+        let t = broker.create_topic("dp-batch");
+        let g = broker.subscribe("dp-batch", "dpb", 1);
+        b.measure("e2e data plane batched", 1, iters, || {
+            e2e_batched(&broker, &t, &g, &payloads, n / 2, &lat)
+        });
+    }
+
     // --- Record construction: per-event alloc vs chunk arena ------------------
-    b.measure("record per-event alloc x512", 1, 5, || -> f64 {
+    b.measure("record per-event alloc x512", 1, iters, || -> f64 {
         let iters = 200;
         for _ in 0..iters {
             let records: Vec<Record> = (0..512)
@@ -106,38 +228,43 @@ fn main() {
         }
         (iters * 512) as f64
     });
-    b.measure("record arena views x512", 1, 5, || -> f64 {
+    b.measure("record batch arena x512", 1, iters, || -> f64 {
         let iters = 200;
         for _ in 0..iters {
-            let mut arena: Vec<u8> = Vec::with_capacity(512 * 27);
-            let mut slots = Vec::with_capacity(512);
+            let mut builder =
+                sprobench::broker::RecordBatchBuilder::with_capacity(512, 512 * 27);
             for i in 0..512usize {
-                let p = &payloads[i % 1000];
-                slots.push((i as u32, arena.len(), p.len()));
-                arena.extend_from_slice(p);
+                builder.push(i as u32, &payloads[i % 1000], 0);
             }
-            let arena: std::sync::Arc<[u8]> = arena.into();
-            let records: Vec<Record> = slots
-                .into_iter()
-                .map(|(k, off, n)| Record::from_arena(k, arena.clone(), off, n, 0))
-                .collect();
-            std::hint::black_box(records);
+            std::hint::black_box(builder.build());
         }
         (iters * 512) as f64
     });
 
     // --- Latency recording ---------------------------------------------------
-    let lat = Arc::new(LatencyRecorder::new());
-    b.measure("latency record_batch x1024", 1, 5, || -> f64 {
-        for _ in 0..(N / 1024) {
-            lat.record_batch(MeasurementPoint::EndToEnd, 0, (0..1024).map(|i| 500 + i));
+    let lrec = Arc::new(LatencyRecorder::new());
+    b.measure("latency record_batch x1024", 1, iters, || -> f64 {
+        for _ in 0..(n / 1024) {
+            lrec.record_batch(MeasurementPoint::EndToEnd, 0, (0..1024).map(|i| 500 + i));
         }
-        N as f64
+        n as f64
+    });
+    b.measure("latency record_groups 2x512", 1, iters, || -> f64 {
+        for _ in 0..(n / 1024) {
+            lrec.record_groups(
+                MeasurementPoint::EndToEnd,
+                0,
+                [(500u64, 512u64), (900, 512)].into_iter(),
+            );
+        }
+        n as f64
     });
 
-    // --- HLO dispatch cost per batch size -------------------------------------
+    // --- HLO dispatch cost per batch size (skipped in quick mode) -------------
     let rtf = RuntimeFactory::default_dir();
-    if rtf.available() {
+    if quick {
+        eprintln!("NOTE: --quick: skipping HLO microbenches");
+    } else if rtf.available() {
         let rt = rtf.create().expect("runtime");
         for batch in [256usize, 1024, 4096] {
             let temps = vec![21.5f32; batch];
@@ -228,7 +355,7 @@ fn main() {
 
     // --- Native pipeline compute reference -------------------------------------
     let temps: Vec<f32> = (0..4096).map(|i| i as f32 / 40.0).collect();
-    b.measure("native cpu transform b=4096", 1, 5, || -> f64 {
+    b.measure("native cpu transform b=4096", 1, iters, || -> f64 {
         let iters = 500;
         for _ in 0..iters {
             let f: Vec<f32> = temps.iter().map(|t| t * 9.0 / 5.0 + 32.0).collect();
@@ -237,6 +364,43 @@ fn main() {
         }
         (iters * 4096) as f64
     });
+
+    // --- BENCH_hotpath.json: the perf trajectory record ------------------------
+    // Written at the repo root on every run (full or quick) so CI and the
+    // next PR can compare data-plane throughput.  Schema: see README.md
+    // §Data plane batching.
+    let per_record_eps = eps(b.measurements(), "e2e data plane per-record");
+    let batched_eps = eps(b.measurements(), "e2e data plane batched");
+    let speedup = if per_record_eps > 0.0 {
+        batched_eps / per_record_eps
+    } else {
+        0.0
+    };
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Str("sprobench.bench.hotpath/v1".into()));
+    doc.set("target", Json::Str("hotpath_micro".into()));
+    doc.set("quick", Json::Bool(quick));
+    doc.set("events_per_case", Json::Int((n / 2) as i64));
+    let mut cases = Vec::new();
+    for m in b.measurements() {
+        let mut c = Json::obj();
+        c.set("name", Json::Str(m.name.clone()));
+        c.set("mean_s", Json::Num(m.mean_time()));
+        c.set("p50_s", Json::Num(m.p50_time()));
+        c.set("p99_s", Json::Num(m.p99_time()));
+        c.set("events_per_sec", Json::Num(m.throughput()));
+        cases.push(c);
+    }
+    doc.set("cases", Json::Arr(cases));
+    let mut dp = Json::obj();
+    dp.set("per_record_eps", Json::Num(per_record_eps));
+    dp.set("batched_eps", Json::Num(batched_eps));
+    dp.set("speedup", Json::Num(speedup));
+    doc.set("data_plane", dp);
+    match std::fs::write("BENCH_hotpath.json", doc.to_pretty()) {
+        Ok(()) => println!("wrote BENCH_hotpath.json (data-plane speedup: {speedup:.2}x)"),
+        Err(e) => eprintln!("WARNING: could not write BENCH_hotpath.json: {e}"),
+    }
 
     b.finish();
 }

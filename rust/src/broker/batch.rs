@@ -1,0 +1,401 @@
+//! `RecordBatch`: the unit of the data plane's hot path.
+//!
+//! A batch is a shared `Arc<[u8]>` payload arena plus a packed entry table
+//! of `(key, off, len, gen_ts)` per record, one `append_ts` stamp for the
+//! whole batch, and the partition offset of its first record.  Everything
+//! that moves through the broker — producer appends, the partition log,
+//! consumer polls — moves whole batches, so the lock/condvar handshake and
+//! the refcount traffic are amortized over hundreds of records instead of
+//! paid per event (ShuffleBench's "harness must never be the bottleneck"
+//! rule; SProBench's >10× throughput headline depends on it).
+//!
+//! Slicing a batch (`slice`) is two `Arc` clones plus range arithmetic, so
+//! a fetch that starts mid-batch or a prune that lands mid-batch never
+//! copies payload bytes.  The per-record [`Record`] type remains as a thin
+//! compatibility view materialized on demand ([`RecordBatch::record`]).
+
+use std::sync::Arc;
+
+use super::record::Record;
+
+/// Packed per-record entry in a batch: 24 bytes, no payload indirection.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchEntry {
+    /// Partitioning key (sensor id for the default workload).
+    pub key: u32,
+    off: u32,
+    len: u32,
+    /// Time the event was generated (end-to-end latency anchor).
+    pub gen_ts_micros: u64,
+}
+
+impl BatchEntry {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// A borrowed view of one record inside a batch — the zero-copy analog of
+/// [`Record`] for consumers that only need to look, not own.
+#[derive(Clone, Copy, Debug)]
+pub struct RecordView<'a> {
+    pub key: u32,
+    pub payload: &'a [u8],
+    pub gen_ts_micros: u64,
+    /// Broker append stamp — shared by every record in the batch.
+    pub append_ts_micros: u64,
+}
+
+impl RecordView<'_> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.payload.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    /// Materialize an owning [`Record`] (copies the payload).
+    pub fn to_record(&self) -> Record {
+        let mut r = Record::new(self.key, self.payload.to_vec(), self.gen_ts_micros);
+        r.append_ts_micros = self.append_ts_micros;
+        r
+    }
+}
+
+/// An immutable batch of records sharing one payload arena.
+///
+/// Cloning is cheap (two `Arc` bumps); the entry range makes sliced views
+/// equally cheap.  `base_offset` and `append_ts_micros` are stamped once by
+/// the partition on append.
+#[derive(Clone, Debug)]
+pub struct RecordBatch {
+    arena: Arc<[u8]>,
+    entries: Arc<[BatchEntry]>,
+    /// View range into `entries`.
+    start: u32,
+    count: u32,
+    /// Partition offset of the first record in this view.
+    pub base_offset: u64,
+    /// Broker append time — one stamp for the whole batch.
+    pub append_ts_micros: u64,
+}
+
+impl RecordBatch {
+    /// A single-record batch sharing the record's existing arena — the
+    /// zero-copy bridge for the legacy per-record produce path.
+    pub fn from_record(r: &Record) -> Self {
+        let (arena, off, len) = r.storage();
+        let entries: Arc<[BatchEntry]> = Arc::from(vec![BatchEntry {
+            key: r.key,
+            off,
+            len,
+            gen_ts_micros: r.gen_ts_micros,
+        }]);
+        Self {
+            arena,
+            entries,
+            start: 0,
+            count: 1,
+            base_offset: 0,
+            append_ts_micros: 0,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Offset one past the last record in this view.
+    #[inline]
+    pub fn next_offset(&self) -> u64 {
+        self.base_offset + self.count as u64
+    }
+
+    #[inline]
+    pub fn entry(&self, i: usize) -> &BatchEntry {
+        &self.entries[self.start as usize + i]
+    }
+
+    #[inline]
+    pub fn payload(&self, i: usize) -> &[u8] {
+        let e = self.entry(i);
+        &self.arena[e.off as usize..(e.off + e.len) as usize]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> RecordView<'_> {
+        let e = self.entry(i);
+        RecordView {
+            key: e.key,
+            payload: &self.arena[e.off as usize..(e.off + e.len) as usize],
+            gen_ts_micros: e.gen_ts_micros,
+            append_ts_micros: self.append_ts_micros,
+        }
+    }
+
+    /// Iterate the records as borrowed views (no clones, no locks).
+    pub fn iter(&self) -> impl Iterator<Item = RecordView<'_>> {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// Total payload bytes in this view.
+    pub fn payload_bytes(&self) -> u64 {
+        (0..self.len()).map(|i| self.entry(i).len() as u64).sum()
+    }
+
+    /// Cheap sub-view of records `[from, from + count)`; `base_offset`
+    /// advances by `from`.  Panics when the range exceeds the view.
+    pub fn slice(&self, from: usize, count: usize) -> RecordBatch {
+        assert!(from + count <= self.len(), "slice out of range");
+        RecordBatch {
+            arena: self.arena.clone(),
+            entries: self.entries.clone(),
+            start: self.start + from as u32,
+            count: count as u32,
+            base_offset: self.base_offset + from as u64,
+            append_ts_micros: self.append_ts_micros,
+        }
+    }
+
+    /// Materialize record `i` as an owning [`Record`] sharing the arena —
+    /// the compatibility view for per-record consumers.
+    pub fn record(&self, i: usize) -> Record {
+        let e = self.entry(i);
+        let mut r = Record::from_arena(
+            e.key,
+            self.arena.clone(),
+            e.off as usize,
+            e.len as usize,
+            e.gen_ts_micros,
+        );
+        r.append_ts_micros = self.append_ts_micros;
+        r
+    }
+
+    /// True when two batches share the same backing arena.
+    pub fn shares_storage_with(&self, other: &RecordBatch) -> bool {
+        Arc::ptr_eq(&self.arena, &other.arena)
+    }
+}
+
+/// Builds one [`RecordBatch`]: payloads are serialized straight into the
+/// arena, entries packed alongside — no intermediate `Vec<Record>`.
+#[derive(Default)]
+pub struct RecordBatchBuilder {
+    arena: Vec<u8>,
+    entries: Vec<BatchEntry>,
+}
+
+impl RecordBatchBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(records: usize, bytes: usize) -> Self {
+        Self {
+            arena: Vec::with_capacity(bytes),
+            entries: Vec::with_capacity(records),
+        }
+    }
+
+    /// Append one record's payload to the arena.
+    #[inline]
+    pub fn push(&mut self, key: u32, payload: &[u8], gen_ts_micros: u64) {
+        let off = self.arena.len() as u32;
+        self.arena.extend_from_slice(payload);
+        self.entries.push(BatchEntry {
+            key,
+            off,
+            len: payload.len() as u32,
+            gen_ts_micros,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.arena.len() as u64
+    }
+
+    /// Freeze into an immutable batch (offset/append stamp set on append).
+    pub fn build(self) -> RecordBatch {
+        let count = self.entries.len() as u32;
+        RecordBatch {
+            arena: self.arena.into(),
+            entries: self.entries.into(),
+            start: 0,
+            count,
+            base_offset: 0,
+            append_ts_micros: 0,
+        }
+    }
+}
+
+impl RecordBatch {
+    /// Copy a slice of `Record`s into a fresh single-arena batch — the
+    /// compatibility bridge for producers still assembling `Vec<Record>`.
+    pub fn from_records(records: &[Record]) -> RecordBatch {
+        let bytes = records.iter().map(|r| r.len()).sum();
+        let mut b = RecordBatchBuilder::with_capacity(records.len(), bytes);
+        for r in records {
+            b.push(r.key, r.payload(), r.gen_ts_micros);
+        }
+        b.build()
+    }
+}
+
+/// Routes records into one [`RecordBatchBuilder`] per partition, so a
+/// producer serializes a whole chunk and hands the broker ready-to-append
+/// per-partition batches (one lock acquisition each).
+pub struct PartitionedBatchBuilder {
+    builders: Vec<RecordBatchBuilder>,
+}
+
+impl PartitionedBatchBuilder {
+    pub fn new(partitions: u32) -> Self {
+        Self {
+            builders: (0..partitions).map(|_| RecordBatchBuilder::new()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, partition: u32, key: u32, payload: &[u8], gen_ts_micros: u64) {
+        self.builders[partition as usize].push(key, payload, gen_ts_micros);
+    }
+
+    pub fn total_records(&self) -> usize {
+        self.builders.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.builders.iter().map(|b| b.payload_bytes()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.builders.iter().all(|b| b.is_empty())
+    }
+
+    /// Non-empty `(partition, batch)` pairs, ready for appending.
+    pub fn finish(self) -> Vec<(u32, RecordBatch)> {
+        self.builders
+            .into_iter()
+            .enumerate()
+            .filter(|(_, b)| !b.is_empty())
+            .map(|(p, b)| (p as u32, b.build()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch_of(n: usize) -> RecordBatch {
+        let mut b = RecordBatchBuilder::with_capacity(n, n * 4);
+        for i in 0..n {
+            b.push(i as u32, &[i as u8; 4], 100 + i as u64);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn builder_packs_entries_and_arena() {
+        let rb = batch_of(3);
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.payload_bytes(), 12);
+        assert_eq!(rb.get(1).key, 1);
+        assert_eq!(rb.payload(1), &[1, 1, 1, 1]);
+        assert_eq!(rb.get(2).gen_ts_micros, 102);
+        assert_eq!(rb.iter().count(), 3);
+    }
+
+    #[test]
+    fn slice_is_a_cheap_view() {
+        let mut rb = batch_of(10);
+        rb.base_offset = 50;
+        rb.append_ts_micros = 999;
+        let s = rb.slice(4, 3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.base_offset, 54);
+        assert_eq!(s.next_offset(), 57);
+        assert_eq!(s.get(0).key, 4);
+        assert_eq!(s.get(0).append_ts_micros, 999);
+        assert!(s.shares_storage_with(&rb));
+    }
+
+    #[test]
+    #[should_panic(expected = "slice out of range")]
+    fn slice_past_end_panics() {
+        batch_of(2).slice(1, 2);
+    }
+
+    #[test]
+    fn record_compat_view_shares_arena() {
+        let mut rb = batch_of(2);
+        rb.append_ts_micros = 777;
+        let r0 = rb.record(0);
+        let r1 = rb.record(1);
+        assert_eq!(r0.key, 0);
+        assert_eq!(r0.append_ts_micros, 777);
+        assert_eq!(r1.payload(), &[1, 1, 1, 1]);
+        assert!(r0.shares_storage_with(&r1));
+    }
+
+    #[test]
+    fn from_records_roundtrip() {
+        let records = vec![
+            Record::new(5, vec![1u8, 2, 3], 10),
+            Record::new(6, vec![4u8, 5], 20),
+        ];
+        let rb = RecordBatch::from_records(&records);
+        assert_eq!(rb.len(), 2);
+        assert_eq!(rb.payload(0), &[1, 2, 3]);
+        assert_eq!(rb.get(1).key, 6);
+        assert_eq!(rb.get(1).gen_ts_micros, 20);
+    }
+
+    #[test]
+    fn from_record_is_zero_copy() {
+        let r = Record::new(9, vec![7u8; 8], 33);
+        let rb = RecordBatch::from_record(&r);
+        assert_eq!(rb.len(), 1);
+        assert_eq!(rb.payload(0), &[7u8; 8]);
+        // Shares the record's arena: materializing back shares storage.
+        assert!(rb.record(0).shares_storage_with(&r));
+    }
+
+    #[test]
+    fn partitioned_builder_routes() {
+        let mut pb = PartitionedBatchBuilder::new(3);
+        pb.push(0, 1, b"aa", 1);
+        pb.push(2, 2, b"bb", 2);
+        pb.push(0, 3, b"cc", 3);
+        assert_eq!(pb.total_records(), 3);
+        assert_eq!(pb.total_bytes(), 6);
+        let parts = pb.finish();
+        assert_eq!(parts.len(), 2, "empty partition elided");
+        assert_eq!(parts[0].0, 0);
+        assert_eq!(parts[0].1.len(), 2);
+        assert_eq!(parts[0].1.get(1).key, 3);
+        assert_eq!(parts[1].0, 2);
+        assert_eq!(parts[1].1.payload(0), b"bb");
+    }
+}

@@ -4,6 +4,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::batch::{RecordBatch, RecordView};
 use super::partition::PartitionClosed;
 use super::record::Record;
 use super::topic::Topic;
@@ -62,12 +63,46 @@ impl PruneCoordinator {
     }
 }
 
-/// A batch returned by [`ConsumerGroup::poll`].
+/// One poll result: whole [`RecordBatch`] views from a single partition
+/// (boundary batches arrive pre-sliced by the log — no payload copies).
 pub struct PolledBatch {
     pub partition: u32,
-    pub records: Vec<Record>,
+    pub batches: Vec<RecordBatch>,
     /// Offset to commit after processing this batch.
     pub next_offset: u64,
+}
+
+impl PolledBatch {
+    /// Total records across the polled batches.
+    pub fn record_count(&self) -> usize {
+        self.batches.iter().map(|b| b.len()).sum()
+    }
+
+    /// Total payload bytes across the polled batches.
+    pub fn payload_bytes(&self) -> u64 {
+        self.batches.iter().map(|b| b.payload_bytes()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batches.iter().all(|b| b.is_empty())
+    }
+
+    /// Iterate every record as a borrowed view, in offset order.
+    pub fn iter(&self) -> impl Iterator<Item = RecordView<'_>> {
+        self.batches.iter().flat_map(|b| b.iter())
+    }
+
+    /// Materialize owning [`Record`]s (compatibility path; payload arenas
+    /// are shared, not copied).
+    pub fn to_records(&self) -> Vec<Record> {
+        let mut out = Vec::with_capacity(self.record_count());
+        for b in &self.batches {
+            for i in 0..b.len() {
+                out.push(b.record(i));
+            }
+        }
+        out
+    }
 }
 
 /// One consumer group over one topic.
@@ -115,8 +150,8 @@ impl ConsumerGroup {
             .collect()
     }
 
-    /// Poll up to `max` records for `member`, round-robin over its
-    /// partitions. Non-blocking: returns `None` when nothing is available
+    /// Poll up to `max` records for `member` as batch views, round-robin
+    /// over its partitions. Non-blocking: returns `None` when nothing is available
     /// everywhere. Returns `Err` only when every owned partition is closed
     /// and drained.
     pub fn poll(&self, member: u32, max: usize) -> Result<Option<PolledBatch>, PartitionClosed> {
@@ -129,18 +164,18 @@ impl ConsumerGroup {
         // the others.
         let start = (self.positions[owned[0] as usize].load(Ordering::Relaxed) as usize)
             % owned.len();
+        let mut buf: Vec<RecordBatch> = Vec::new();
         for i in 0..owned.len() {
             let p = owned[(start + i) % owned.len()];
             let pos = self.positions[p as usize].load(Ordering::SeqCst);
-            let mut buf = Vec::new();
-            match self.topic.partition(p).fetch(pos, max, &mut buf, false) {
+            match self.topic.partition(p).fetch_batches(pos, max, &mut buf, false) {
                 Ok(next) => {
                     all_closed = false;
                     if !buf.is_empty() {
                         self.positions[p as usize].store(next, Ordering::SeqCst);
                         return Ok(Some(PolledBatch {
                             partition: p,
-                            records: buf,
+                            batches: buf,
                             next_offset: next,
                         }));
                     }
@@ -216,7 +251,7 @@ mod tests {
         }
         let mut total = 0;
         while let Ok(Some(batch)) = g.poll(0, 32) {
-            total += batch.records.len();
+            total += batch.record_count();
             g.commit(batch.partition, batch.next_offset);
             if total >= 100 {
                 break;
@@ -263,7 +298,7 @@ mod tests {
         t.close();
         // First poll drains the remaining record…
         let b = g.poll(0, 10).unwrap();
-        assert!(b.is_none() || b.unwrap().records.len() == 1);
+        assert!(b.is_none() || b.unwrap().record_count() == 1);
         // …after which the group reports closure.
         assert_eq!(g.poll(0, 10).err(), Some(PartitionClosed));
     }
@@ -277,7 +312,7 @@ mod tests {
         let mut got = [0usize; 2];
         for m in 0..2 {
             while let Ok(Some(batch)) = g.poll(m, 64) {
-                got[m as usize] += batch.records.len();
+                got[m as usize] += batch.record_count();
                 g.commit(batch.partition, batch.next_offset);
             }
         }

@@ -3,6 +3,7 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+use super::batch::{PartitionedBatchBuilder, RecordBatch};
 use super::consumer::{ConsumerGroup, PruneCoordinator};
 use super::partition::PartitionClosed;
 use super::record::Record;
@@ -133,30 +134,67 @@ impl Broker {
         topic.produce(record, self.clock.now_micros())
     }
 
-    /// Synchronous batched produce: groups records by partition and appends
-    /// each group under one lock acquisition. Returns records appended.
-    pub fn produce_batch(
+    /// Append ready-built per-partition batches, one lock acquisition
+    /// each — the primary (batch-first) produce path.  Returns records
+    /// appended.
+    pub fn produce_batches(
         &self,
         topic: &Topic,
-        records: Vec<Record>,
+        parts: Vec<(u32, RecordBatch)>,
     ) -> Result<usize, PartitionClosed> {
-        let n = records.len();
+        let n: usize = parts.iter().map(|(_, b)| b.len()).sum();
         if n == 0 {
             return Ok(0);
         }
         self.burn_overhead(n as u64);
         let now = self.clock.now_micros();
-        let parts = topic.partition_count();
-        let mut by_partition: Vec<Vec<Record>> = (0..parts).map(|_| Vec::new()).collect();
-        for r in records {
-            by_partition[topic.partition_for_key(r.key) as usize].push(r);
-        }
-        for (p, mut group) in by_partition.into_iter().enumerate() {
-            if !group.is_empty() {
-                topic.partition(p as u32).append_batch(&mut group, now)?;
-            }
+        for (p, batch) in parts {
+            topic.partition(p).append_record_batch(batch, now)?;
         }
         Ok(n)
+    }
+
+    /// Synchronous batched produce from a `Vec<Record>` (compatibility
+    /// path): routes the records into per-partition arenas, then appends
+    /// each under one lock acquisition.  Returns records appended.
+    pub fn produce_batch(
+        &self,
+        topic: &Topic,
+        mut records: Vec<Record>,
+    ) -> Result<usize, PartitionClosed> {
+        self.produce_records(topic, &mut records)
+    }
+
+    /// Like [`Broker::produce_batch`] but drains the caller's buffer in
+    /// place so its allocation is reused across produce calls (the
+    /// engine's emit path).
+    ///
+    /// Trade-off: payloads are *copied* into fresh per-partition arenas
+    /// (the old path moved `Record`s into the log with zero payload
+    /// copies).  The memcpy of small payloads buys one lock/condvar
+    /// handshake per partition instead of per record, per-batch refcount
+    /// traffic, and arena compaction — forwarded records no longer pin
+    /// their whole source arena in the egestion log.
+    pub fn produce_records(
+        &self,
+        topic: &Topic,
+        records: &mut Vec<Record>,
+    ) -> Result<usize, PartitionClosed> {
+        let n = records.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        let mut pb = PartitionedBatchBuilder::new(topic.partition_count());
+        for r in records.iter() {
+            pb.push(
+                topic.partition_for_key(r.key),
+                r.key,
+                r.payload(),
+                r.gen_ts_micros,
+            );
+        }
+        records.clear();
+        self.produce_batches(topic, pb.finish())
     }
 
     /// Fire-and-forget produce through the network pool (ack-less client).
@@ -183,6 +221,25 @@ impl Broker {
         let topic = topic.clone();
         self.network_pool.submit(move || {
             let result = this.produce_batch(&topic, records);
+            let _ = ack_tx.send(result);
+        });
+        ack_rx.recv().unwrap_or(Err(PartitionClosed))
+    }
+
+    /// Acked batch-first produce: ready-built per-partition batches are
+    /// appended by a broker network thread while the caller blocks for the
+    /// ack — same `acks=1` queueing model as
+    /// [`Broker::produce_batch_acked`], minus the `Vec<Record>` detour.
+    pub fn produce_batches_acked(
+        self: &Arc<Self>,
+        topic: &Arc<Topic>,
+        parts: Vec<(u32, RecordBatch)>,
+    ) -> Result<usize, PartitionClosed> {
+        let (ack_tx, ack_rx) = crate::util::chan::bounded::<Result<usize, PartitionClosed>>(1);
+        let this = self.clone();
+        let topic = topic.clone();
+        self.network_pool.submit(move || {
+            let result = this.produce_batches(&topic, parts);
             let _ = ack_tx.send(result);
         });
         ack_rx.recv().unwrap_or(Err(PartitionClosed))
@@ -285,7 +342,7 @@ mod tests {
         }
         let mut n = 0;
         while let Ok(Some(batch)) = g.poll(0, 16) {
-            n += batch.records.len();
+            n += batch.record_count();
             g.commit(batch.partition, batch.next_offset);
         }
         assert_eq!(n, 50);
@@ -302,6 +359,24 @@ mod tests {
         let records: Vec<Record> = (0..500).map(rec).collect();
         assert_eq!(b.produce_batch(&t, records).unwrap(), 500);
         assert_eq!(t.total_appended(), 500);
+    }
+
+    #[test]
+    fn produce_batches_appends_prebuilt_partition_batches() {
+        let b = broker();
+        let t = b.create_topic("in");
+        let mut pb = PartitionedBatchBuilder::new(t.partition_count());
+        for k in 0..100u32 {
+            pb.push(t.partition_for_key(k), k, &[0u8; 27], 5);
+        }
+        assert_eq!(b.produce_batches(&t, pb.finish()).unwrap(), 100);
+        assert_eq!(t.total_appended(), 100);
+        assert_eq!(t.total_bytes(), 2700);
+        // Acked variant goes through the network pool and still lands.
+        let mut pb = PartitionedBatchBuilder::new(t.partition_count());
+        pb.push(0, 1, &[0u8; 27], 6);
+        assert_eq!(b.produce_batches_acked(&t, pb.finish()).unwrap(), 1);
+        assert_eq!(t.total_appended(), 101);
     }
 
     #[test]
@@ -322,7 +397,7 @@ mod tests {
         b.produce(&t, rec(1)).unwrap();
         let g = b.subscribe("in", "g", 1);
         let batch = g.poll(0, 1).unwrap().unwrap();
-        assert!(batch.records[0].append_ts_micros > 0);
+        assert!(batch.iter().next().unwrap().append_ts_micros > 0);
     }
 
     #[test]

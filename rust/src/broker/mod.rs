@@ -14,15 +14,23 @@
 //!   Kafka tuning ("20 threads for I/O and 10 threads for network"),
 //! * per-record timestamps so broker latency (append → poll) is measurable.
 //!
-//! Modules: [`record`], [`partition`], [`topic`], [`core`] (the broker
-//! facade), [`consumer`].
+//! The data plane is **batch-first**: [`batch::RecordBatch`] (shared
+//! payload arena + packed entries + one append stamp) is the unit moved
+//! through produce, the partition log, and consumer polls; the per-record
+//! [`Record`] remains as a thin compatibility view (see
+//! docs/ARCHITECTURE.md §Data plane batching).
+//!
+//! Modules: [`batch`], [`record`], [`partition`], [`topic`], [`core`]
+//! (the broker facade), [`consumer`].
 
+pub mod batch;
 pub mod consumer;
 pub mod core;
 pub mod partition;
 pub mod record;
 pub mod topic;
 
+pub use batch::{BatchEntry, PartitionedBatchBuilder, RecordBatch, RecordBatchBuilder, RecordView};
 pub use consumer::{ConsumerGroup, PolledBatch};
 pub use core::{Broker, BrokerConfig, BrokerStats};
 pub use record::Record;

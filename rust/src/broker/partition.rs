@@ -1,19 +1,31 @@
-//! Bounded segmented partition log.
+//! Bounded segmented partition log, batch-first.
 //!
-//! A partition is an append-only record log addressed by offset.  Capacity
-//! is bounded: when `hwm - low_watermark >= capacity` the producer blocks
-//! until consumers advance and [`Partition::prune`] reclaims — this is the
+//! A partition is an append-only log addressed by *record* offset but
+//! stored as [`RecordBatch`]es: one `Mutex` acquisition and one condvar
+//! handshake admits or serves a whole batch, so harness overhead is
+//! amortized over hundreds of records (the data-plane batching refactor —
+//! see docs/ARCHITECTURE.md §Data plane batching).  Watermarks still count
+//! records: when `hwm - low_watermark >= capacity` the producer blocks
+//! until consumers advance and [`Partition::prune`] reclaims — the
 //! broker-side backpressure that keeps Fig. 6's broker latency linear in
 //! offered load instead of unbounded.
+//!
+//! Fetching at an offset that lands mid-batch returns a cheap sliced view
+//! (`RecordBatch::slice`), never a payload copy; pruning that lands
+//! mid-batch likewise retains a sliced tail.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
+use super::batch::RecordBatch;
 use super::record::Record;
 
 struct Log {
-    /// Records from `base_offset` upward.
-    records: VecDeque<Record>,
+    /// Batches from `base_offset` upward; record offsets are contiguous
+    /// across batches (`batches[i].base_offset + batches[i].len()` is
+    /// `batches[i+1].base_offset`).
+    batches: VecDeque<RecordBatch>,
+    /// Offset of the first retained record.
     base_offset: u64,
     /// Next offset to assign (high watermark).
     hwm: u64,
@@ -22,6 +34,17 @@ struct Log {
     closed: bool,
     /// Cumulative appended bytes (stats).
     appended_bytes: u64,
+}
+
+impl Log {
+    /// Index into `batches` of the batch containing record `offset`.
+    fn batch_index(&self, offset: u64) -> usize {
+        // Batches are sorted by base_offset; partition_point finds the
+        // first batch starting *after* offset, so the one before holds it.
+        self.batches
+            .partition_point(|b| b.base_offset <= offset)
+            .saturating_sub(1)
+    }
 }
 
 /// One partition of a topic.
@@ -39,7 +62,7 @@ impl Partition {
     pub fn new(capacity: usize) -> Self {
         Self {
             log: Mutex::new(Log {
-                records: VecDeque::new(),
+                batches: VecDeque::new(),
                 base_offset: 0,
                 hwm: 0,
                 low_watermark: 0,
@@ -52,27 +75,46 @@ impl Partition {
         }
     }
 
-    /// Append one record, blocking while the partition is at capacity.
-    /// Stamps `append_ts_micros`. Returns the assigned offset.
-    pub fn append(&self, mut record: Record, now_micros: u64) -> Result<u64, PartitionClosed> {
+    /// Append a whole batch under one lock acquisition: stamps the batch's
+    /// shared `append_ts_micros` and assigns its `base_offset`.  Blocks
+    /// while the partition is at capacity; the batch is admitted as a unit
+    /// once there is room for at least one record (slight overshoot keeps
+    /// producers coarse-grained — Kafka batches behave the same way).
+    /// Returns the offset of the batch's first record.
+    pub fn append_record_batch(
+        &self,
+        mut batch: RecordBatch,
+        now_micros: u64,
+    ) -> Result<u64, PartitionClosed> {
         let mut log = self.log.lock().expect("partition log");
+        if batch.is_empty() {
+            return Ok(log.hwm);
+        }
         while (log.hwm - log.low_watermark) as usize >= self.capacity && !log.closed {
             log = self.space.wait(log).expect("partition log");
         }
         if log.closed {
             return Err(PartitionClosed);
         }
-        let offset = log.hwm;
-        record.append_ts_micros = now_micros;
-        log.appended_bytes += record.len() as u64;
-        log.records.push_back(record);
-        log.hwm += 1;
+        batch.append_ts_micros = now_micros;
+        let base = log.hwm;
+        batch.base_offset = base;
+        log.hwm += batch.len() as u64;
+        log.appended_bytes += batch.payload_bytes();
+        log.batches.push_back(batch);
         drop(log);
         self.data.notify_all();
-        Ok(offset)
+        Ok(base)
     }
 
-    /// Append a batch (one lock acquisition; producer batching path).
+    /// Append one record (legacy per-record path): wraps it in a
+    /// single-record batch sharing its arena.  Returns the assigned offset.
+    pub fn append(&self, record: Record, now_micros: u64) -> Result<u64, PartitionClosed> {
+        self.append_record_batch(RecordBatch::from_record(&record), now_micros)
+    }
+
+    /// Append a `Vec<Record>` as one batch (compatibility path: copies the
+    /// payloads into a single fresh arena).  Returns the last offset.
     pub fn append_batch(
         &self,
         records: &mut Vec<Record>,
@@ -82,48 +124,49 @@ impl Partition {
             let log = self.log.lock().expect("partition log");
             return Ok(log.hwm);
         }
-        let mut log = self.log.lock().expect("partition log");
-        // Admit the batch as a unit once there is room for at least one
-        // record; allowing slight overshoot keeps producers coarse-grained
-        // (Kafka batches behave the same way).
-        while (log.hwm - log.low_watermark) as usize >= self.capacity && !log.closed {
-            log = self.space.wait(log).expect("partition log");
-        }
-        if log.closed {
-            return Err(PartitionClosed);
-        }
-        for mut r in records.drain(..) {
-            r.append_ts_micros = now_micros;
-            log.appended_bytes += r.len() as u64;
-            log.records.push_back(r);
-            log.hwm += 1;
-        }
-        let last = log.hwm - 1;
-        drop(log);
-        self.data.notify_all();
-        Ok(last)
+        let n = records.len() as u64;
+        let batch = RecordBatch::from_records(records);
+        records.clear();
+        self.append_record_batch(batch, now_micros)
+            .map(|base| base + n - 1)
     }
 
-    /// Read up to `max` records starting at `offset` into `buf`.
-    /// Returns the next offset to read. Blocks until data or close when
+    /// Read up to `max` records starting at `offset` as batch views pushed
+    /// into `out` (boundary batches are sliced — no payload copies).
+    /// Returns the next offset to read.  Blocks until data or close when
     /// `blocking`; a closed, fully-drained partition returns `Err`.
-    pub fn fetch(
+    pub fn fetch_batches(
         &self,
         offset: u64,
         max: usize,
-        buf: &mut Vec<Record>,
+        out: &mut Vec<RecordBatch>,
         blocking: bool,
     ) -> Result<u64, PartitionClosed> {
+        if max == 0 {
+            return Ok(offset);
+        }
         let mut log = self.log.lock().expect("partition log");
         loop {
             if offset < log.hwm {
+                // Fetching below the low watermark silently clamps forward.
                 let start = offset.max(log.base_offset);
-                let idx = (start - log.base_offset) as usize;
-                let n = max.min(log.records.len().saturating_sub(idx));
-                for i in 0..n {
-                    buf.push(log.records[idx + i].clone());
+                let mut pos = start;
+                let mut remaining = max;
+                let mut idx = log.batch_index(start);
+                while remaining > 0 && pos < log.hwm {
+                    let b = &log.batches[idx];
+                    let skip = (pos - b.base_offset) as usize;
+                    let take = (b.len() - skip).min(remaining);
+                    out.push(if skip == 0 && take == b.len() {
+                        b.clone()
+                    } else {
+                        b.slice(skip, take)
+                    });
+                    pos += take as u64;
+                    remaining -= take;
+                    idx += 1;
                 }
-                return Ok(start + n as u64);
+                return Ok(pos);
             }
             if log.closed {
                 return Err(PartitionClosed);
@@ -135,8 +178,29 @@ impl Partition {
         }
     }
 
+    /// Read up to `max` records starting at `offset` into `buf` as
+    /// materialized [`Record`]s (compatibility view; payload `Arc`s are
+    /// shared, not copied).  Returns the next offset to read.
+    pub fn fetch(
+        &self,
+        offset: u64,
+        max: usize,
+        buf: &mut Vec<Record>,
+        blocking: bool,
+    ) -> Result<u64, PartitionClosed> {
+        let mut batches = Vec::new();
+        let next = self.fetch_batches(offset, max, &mut batches, blocking)?;
+        for b in &batches {
+            for i in 0..b.len() {
+                buf.push(b.record(i));
+            }
+        }
+        Ok(next)
+    }
+
     /// Advance the low watermark (min committed offset across groups) and
-    /// drop reclaimable records, releasing blocked producers.
+    /// drop reclaimable batches, releasing blocked producers.  A watermark
+    /// landing mid-batch retains a sliced tail view.
     pub fn prune(&self, min_committed: u64) {
         let mut log = self.log.lock().expect("partition log");
         if min_committed <= log.low_watermark {
@@ -144,10 +208,22 @@ impl Partition {
         }
         let lw = min_committed.min(log.hwm);
         log.low_watermark = lw;
-        while log.base_offset < lw && !log.records.is_empty() {
-            log.records.pop_front();
-            log.base_offset += 1;
+        while let Some(front) = log.batches.front() {
+            if front.next_offset() <= lw {
+                log.batches.pop_front();
+            } else if front.base_offset < lw {
+                let skip = (lw - front.base_offset) as usize;
+                let tail = front.slice(skip, front.len() - skip);
+                log.batches[0] = tail;
+                break;
+            } else {
+                break;
+            }
         }
+        log.base_offset = match log.batches.front() {
+            Some(b) => b.base_offset,
+            None => lw,
+        };
         drop(log);
         self.space.notify_all();
     }
@@ -187,10 +263,19 @@ impl Partition {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::broker::batch::RecordBatchBuilder;
     use std::sync::Arc;
 
     fn rec(key: u32, ts: u64) -> Record {
         Record::new(key, vec![0u8; 27], ts)
+    }
+
+    fn batch(keys: std::ops::Range<u32>, ts: u64) -> RecordBatch {
+        let mut b = RecordBatchBuilder::new();
+        for k in keys {
+            b.push(k, &[0u8; 27], ts);
+        }
+        b.build()
     }
 
     #[test]
@@ -218,6 +303,26 @@ mod tests {
         let next = p.fetch(next, 10, &mut buf, false).unwrap();
         assert_eq!(next, 5);
         assert_eq!(buf.len(), 5);
+    }
+
+    #[test]
+    fn fetch_batches_slices_at_boundaries() {
+        let p = Partition::new(1024);
+        p.append_record_batch(batch(0..8, 100), 100).unwrap();
+        p.append_record_batch(batch(8..16, 200), 200).unwrap();
+        // Start mid-batch, cap mid-second-batch: 5..13 → [5..8), [8..13).
+        let mut out = Vec::new();
+        let next = p.fetch_batches(5, 8, &mut out, false).unwrap();
+        assert_eq!(next, 13);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].base_offset, 5);
+        assert_eq!(out[0].len(), 3);
+        assert_eq!(out[0].get(0).key, 5);
+        assert_eq!(out[0].append_ts_micros, 100);
+        assert_eq!(out[1].base_offset, 8);
+        assert_eq!(out[1].len(), 5);
+        assert_eq!(out[1].get(4).key, 12);
+        assert_eq!(out[1].append_ts_micros, 200);
     }
 
     #[test]
@@ -261,6 +366,21 @@ mod tests {
         let next = p.fetch(0, 10, &mut buf, false).unwrap();
         assert_eq!(next, 10);
         assert_eq!(buf[0].key, 6);
+    }
+
+    #[test]
+    fn prune_mid_batch_retains_sliced_tail() {
+        let p = Partition::new(64);
+        p.append_record_batch(batch(0..10, 7), 7).unwrap();
+        p.prune(4);
+        assert_eq!(p.low_watermark(), 4);
+        assert_eq!(p.lag(), 6);
+        let mut out = Vec::new();
+        let next = p.fetch_batches(0, 100, &mut out, false).unwrap();
+        assert_eq!(next, 10);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].base_offset, 4);
+        assert_eq!(out[0].get(0).key, 4);
     }
 
     #[test]

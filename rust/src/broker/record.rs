@@ -74,6 +74,12 @@ impl Record {
     pub fn shares_storage_with(&self, other: &Record) -> bool {
         Arc::ptr_eq(&self.data, &other.data)
     }
+
+    /// Backing arena and view range — lets `RecordBatch` wrap a record
+    /// without copying its payload (crate-internal bridge).
+    pub(crate) fn storage(&self) -> (Arc<[u8]>, u32, u32) {
+        (self.data.clone(), self.off, self.len)
+    }
 }
 
 #[cfg(test)]

@@ -132,7 +132,7 @@ pub fn run_wall(
                 loop {
                     match g.poll(0, 4096) {
                         Ok(Some(b)) => {
-                            n += b.records.len() as u64;
+                            n += b.record_count() as u64;
                             g.commit(b.partition, b.next_offset);
                         }
                         Ok(None) => std::thread::sleep(std::time::Duration::from_micros(500)),

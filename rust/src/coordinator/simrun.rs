@@ -45,13 +45,20 @@ pub struct SimModel {
 }
 
 impl Default for SimModel {
+    /// Constants recalibrated for the batch-first data plane (`RecordBatch`
+    /// end-to-end): the broker pays one lock/condvar handshake per batch
+    /// instead of per record, and the engine parses payload views without
+    /// `Record` clones.  These are *projected* ratios pending a wall-mode
+    /// run on the target machine — re-calibrate from `BENCH_hotpath.json`
+    /// (`data_plane.speedup`, written by `cargo bench --bench
+    /// hotpath_micro`) whenever the hot path changes.
     fn default() -> Self {
         Self {
-            broker_per_partition_rate: 6.0e6,
-            task_rate_passthrough: 3.0e6,
-            task_rate_cpu: 1.2e6,
-            task_rate_mem: 0.9e6,
-            task_rate_fused: 0.8e6,
+            broker_per_partition_rate: 12.0e6,
+            task_rate_passthrough: 4.2e6,
+            task_rate_cpu: 1.5e6,
+            task_rate_mem: 1.05e6,
+            task_rate_fused: 0.95e6,
             base_latency_micros: 900.0,
             per_task_dispatch_micros: 110.0,
             alloc_per_event: 220.0,

@@ -1,7 +1,7 @@
 //! Parsed event batches: broker records → structure-of-arrays, ready for
 //! tensor marshalling.
 
-use crate::broker::Record;
+use crate::broker::{Record, RecordBatch};
 use crate::wgen::SensorEvent;
 
 /// A batch of parsed sensor events in structure-of-arrays layout (the
@@ -64,6 +64,37 @@ impl EventBatch {
         failures
     }
 
+    /// Parse and append one [`RecordBatch`] by iterating its payload
+    /// views — no `Record` materialization, no refcount traffic.  The
+    /// batch's shared append stamp fans out to every parsed event.
+    /// Returns the number of parse failures.
+    pub fn extend_from_record_batch(&mut self, rb: &RecordBatch) -> usize {
+        let mut failures = 0;
+        let append_ts = rb.append_ts_micros;
+        for i in 0..rb.len() {
+            let payload = rb.payload(i);
+            match SensorEvent::parse(payload) {
+                Some(ev) => {
+                    self.ids.push(ev.sensor_id);
+                    self.temps.push(ev.temp_c);
+                    self.gen_ts.push(ev.ts_micros);
+                    self.append_ts.push(append_ts);
+                    self.payload_bytes += payload.len() as u64;
+                }
+                None => failures += 1,
+            }
+        }
+        failures
+    }
+
+    /// Parse and append a run of [`RecordBatch`]es (one poll's worth).
+    pub fn extend_from_batches(&mut self, batches: &[RecordBatch]) -> usize {
+        batches
+            .iter()
+            .map(|rb| self.extend_from_record_batch(rb))
+            .sum()
+    }
+
     /// Oldest generation timestamp in the batch (worst-case latency anchor).
     pub fn oldest_gen_ts(&self) -> Option<u64> {
         self.gen_ts.iter().copied().min()
@@ -100,6 +131,51 @@ mod tests {
         assert_eq!(b.append_ts, vec![105, 205]);
         assert_eq!(b.payload_bytes, 128);
         assert_eq!(b.oldest_gen_ts(), Some(100));
+    }
+
+    #[test]
+    fn parses_record_batches_with_shared_append_stamp() {
+        use crate::broker::RecordBatchBuilder;
+        let mut builder = RecordBatchBuilder::new();
+        let mut buf = Vec::new();
+        for (id, temp, ts) in [(1u32, 20.5f32, 100u64), (2, -3.25, 200)] {
+            let ev = SensorEvent {
+                ts_micros: ts,
+                sensor_id: id,
+                temp_c: temp,
+            };
+            ev.serialize_into(EventFormat::Json, 64, &mut buf);
+            builder.push(id, &buf, ts);
+        }
+        let mut rb = builder.build();
+        rb.append_ts_micros = 305;
+        let mut b = EventBatch::with_capacity(4);
+        assert_eq!(b.extend_from_batches(std::slice::from_ref(&rb)), 0);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.ids, vec![1, 2]);
+        assert_eq!(b.gen_ts, vec![100, 200]);
+        // One stamp per batch fans out to every event.
+        assert_eq!(b.append_ts, vec![305, 305]);
+        assert_eq!(b.payload_bytes, 128);
+    }
+
+    #[test]
+    fn malformed_payloads_in_batches_are_counted_not_fatal() {
+        use crate::broker::RecordBatchBuilder;
+        let mut builder = RecordBatchBuilder::new();
+        let ev = SensorEvent {
+            ts_micros: 1,
+            sensor_id: 1,
+            temp_c: 1.0,
+        };
+        let mut buf = Vec::new();
+        ev.serialize_into(EventFormat::Csv, 27, &mut buf);
+        builder.push(1, &buf, 1);
+        builder.push(0, b"garbage!!", 2);
+        let rb = builder.build();
+        let mut b = EventBatch::default();
+        assert_eq!(b.extend_from_record_batch(&rb), 1);
+        assert_eq!(b.len(), 1);
     }
 
     #[test]

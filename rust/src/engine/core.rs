@@ -213,7 +213,7 @@ mod tests {
             loop {
                 match drain.poll(0, 4096) {
                     Ok(Some(b)) => {
-                        n += b.records.len() as u64;
+                        n += b.record_count() as u64;
                         drain.commit(b.partition, b.next_offset);
                     }
                     Ok(None) => std::thread::sleep(std::time::Duration::from_millis(1)),

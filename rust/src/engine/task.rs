@@ -10,6 +10,13 @@
 //! * `BrokerOut` — records produced to the egestion topic,
 //! * `EndToEnd` — latency generation → egestion append.
 //!
+//! The loop is batch-first: polls hand back [`RecordBatch`] views that are
+//! parsed by iterating payload slices (no `Record` clones), broker-anchored
+//! latency collapses to one `(latency, count)` group per batch (every
+//! record in a batch shares its append stamp), and the `EventBatch` /
+//! emit buffers are reused across polls.  Per-record `Record`s are only
+//! materialized for steps that forward raw records (pass-through).
+//!
 //! JVM accounting: parsing and processing allocate on a simulated heap;
 //! GC pauses stall the task exactly where a real JVM would.
 
@@ -18,7 +25,7 @@ use std::sync::Arc;
 
 use super::batch::EventBatch;
 use super::personality::Personality;
-use crate::broker::{Broker, ConsumerGroup, Record, Topic};
+use crate::broker::{Broker, ConsumerGroup, Record, RecordBatch, Topic};
 use crate::jvm::JvmHeap;
 use crate::metrics::{LatencyRecorder, MeasurementPoint, ThroughputRecorder};
 use crate::pipelines::{StepFactory, StepStats};
@@ -70,6 +77,23 @@ pub struct TaskReport {
     pub step: StepStats,
 }
 
+/// Reusable per-task buffers, refilled every processed batch so the steady
+/// state allocates nothing on the hot path.
+struct TaskBuffers {
+    /// Polled-but-unprocessed batch views.
+    pending: Vec<RecordBatch>,
+    /// Record count across `pending` (so size checks don't re-sum).
+    pending_records: usize,
+    /// Uncommitted `(partition, next_offset)` pairs covering `pending`.
+    commits: Vec<(u32, u64)>,
+    /// Parsed structure-of-arrays view.
+    parsed: EventBatch,
+    /// Materialized records — only for steps that forward raw records.
+    compat: Vec<Record>,
+    /// Step outputs bound for the egestion topic.
+    out: Vec<Record>,
+}
+
 impl TaskHarness {
     pub fn run(self) -> Result<TaskReport, String> {
         let mut step = self.factory.create(self.clock.now_micros())?;
@@ -78,10 +102,14 @@ impl TaskHarness {
         let shard = self.id as usize;
 
         let mut report = TaskReport::default();
-        let mut pending: Vec<Record> = Vec::with_capacity(self.personality.process_batch * 2);
-        let mut commits: Vec<(u32, u64)> = Vec::new();
-        let mut batch = EventBatch::with_capacity(self.personality.process_batch);
-        let mut out: Vec<Record> = Vec::new();
+        let mut bufs = TaskBuffers {
+            pending: Vec::new(),
+            pending_records: 0,
+            commits: Vec::new(),
+            parsed: EventBatch::with_capacity(self.personality.process_batch),
+            compat: Vec::new(),
+            out: Vec::new(),
+        };
         let mut batch_started = self.clock.now_micros();
 
         let interval = self.personality.batch_interval_micros;
@@ -93,28 +121,30 @@ impl TaskHarness {
             if !stop_now {
                 match self.group.poll(self.id, self.personality.poll_batch) {
                     Ok(Some(polled)) => {
-                        let n = polled.records.len() as u64;
-                        let bytes: u64 = polled.records.iter().map(|r| r.len() as u64).sum();
+                        let n = polled.record_count() as u64;
+                        let bytes = polled.payload_bytes();
                         self.throughput
                             .record_events(MeasurementPoint::ProcIn, n, bytes);
-                        // Broker residency: append → poll.
+                        // Broker residency: append → poll.  One (latency,
+                        // count) group per batch under a single shard lock
+                        // — records share their batch's append stamp.
                         if now >= self.measure_after_micros {
-                            self.latency.record_batch(
+                            self.latency.record_groups(
                                 MeasurementPoint::ProcIn,
                                 shard,
-                                polled
-                                    .records
-                                    .iter()
-                                    .map(|r| now.saturating_sub(r.append_ts_micros)),
+                                polled.batches.iter().map(|b| {
+                                    (now.saturating_sub(b.append_ts_micros), b.len() as u64)
+                                }),
                             );
                         }
-                        pending.extend(polled.records);
-                        commits.push((polled.partition, polled.next_offset));
+                        bufs.pending_records += n as usize;
+                        bufs.pending.extend(polled.batches);
+                        bufs.commits.push((polled.partition, polled.next_offset));
                     }
                     Ok(None) => {
                         // Idle: if we hold a partial batch past the interval
                         // (or have no interval), flush it; else back off.
-                        if pending.is_empty() {
+                        if bufs.pending.is_empty() {
                             self.clock.sleep_micros(200);
                             continue;
                         }
@@ -125,19 +155,11 @@ impl TaskHarness {
 
             let now = self.clock.now_micros();
             let interval_elapsed = interval == 0 || now.saturating_sub(batch_started) >= interval;
-            let size_reached = pending.len() >= self.personality.process_batch;
+            let size_reached = bufs.pending_records >= self.personality.process_batch;
             let must_flush = closed || stop_now;
 
-            if !pending.is_empty() && (must_flush || size_reached || interval_elapsed) {
-                self.process_pending(
-                    &mut *step,
-                    needs_parse,
-                    &mut pending,
-                    &mut commits,
-                    &mut batch,
-                    &mut out,
-                    &mut report,
-                )?;
+            if !bufs.pending.is_empty() && (must_flush || size_reached || interval_elapsed) {
+                self.process_pending(&mut *step, needs_parse, &mut bufs, &mut report)?;
                 batch_started = self.clock.now_micros();
             }
 
@@ -153,83 +175,92 @@ impl TaskHarness {
         }
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn process_pending(
         &self,
         step: &mut dyn crate::pipelines::PipelineStep,
         needs_parse: bool,
-        pending: &mut Vec<Record>,
-        commits: &mut Vec<(u32, u64)>,
-        batch: &mut EventBatch,
-        out: &mut Vec<Record>,
+        bufs: &mut TaskBuffers,
         report: &mut TaskReport,
     ) -> Result<(), String> {
         let shard = self.id as usize;
-        let n = pending.len() as u64;
-        let bytes: u64 = pending.iter().map(|r| r.len() as u64).sum();
+        let n = bufs.pending_records as u64;
+        let bytes: u64 = bufs.pending.iter().map(|b| b.payload_bytes()).sum();
 
         // Framework dispatch overhead (what makes tiny batches costly).
         self.burn(self.personality.per_batch_overhead_micros);
 
-        batch.clear();
+        bufs.parsed.clear();
+        bufs.compat.clear();
         if needs_parse {
-            report.parse_failures += batch.extend_from_records(pending) as u64;
+            report.parse_failures += bufs.parsed.extend_from_batches(&bufs.pending) as u64;
+        } else {
+            // Per-record compatibility view for steps that forward raw
+            // records (pass-through); payload arenas are shared, not
+            // copied.
+            for rb in &bufs.pending {
+                for i in 0..rb.len() {
+                    bufs.compat.push(rb.record(i));
+                }
+            }
         }
         let now = self.clock.now_micros();
-        out.clear();
-        step.process(now, pending, batch, out)?;
+        bufs.out.clear();
+        step.process(now, &bufs.compat, &bufs.parsed, &mut bufs.out)?;
 
         // JVM allocation model: parse tuples + output records + per-batch
         // framework churn.
-        let out_bytes: u64 = out.iter().map(|r| r.len() as u64).sum();
+        let out_bytes: u64 = bufs.out.iter().map(|r| r.len() as u64).sum();
         self.heap
             .alloc(n * ALLOC_PER_EVENT_BYTES + bytes + out_bytes + ALLOC_PER_BATCH_BYTES);
 
         let done = self.clock.now_micros();
         self.throughput
             .record_events(MeasurementPoint::ProcOut, n, bytes);
-        // Processing latency: broker append → processing complete.
+        // Processing latency: broker append → processing complete; again
+        // one group per batch.
         if done >= self.measure_after_micros {
-            self.latency.record_batch(
+            self.latency.record_groups(
                 MeasurementPoint::ProcOut,
                 shard,
-                pending
+                bufs.pending
                     .iter()
-                    .map(|r| done.saturating_sub(r.append_ts_micros)),
+                    .map(|b| (done.saturating_sub(b.append_ts_micros), b.len() as u64)),
             );
         }
         report.events_in += n;
         report.batches += 1;
 
-        // End-to-end anchors before the records move out.
-        let gen_ts: Vec<u64> = pending.iter().map(|r| r.gen_ts_micros).collect();
-        pending.clear();
-
-        self.emit(out, report)?;
+        self.emit(&mut bufs.out, report)?;
 
         let egest = self.clock.now_micros();
         // End-to-end: only events *generated* after warmup count, so the
-        // compile-era queue backlog cannot poison the tail.
+        // compile-era queue backlog cannot poison the tail.  Generation
+        // stamps stay per-record (they are the anchor being measured);
+        // the entries are read straight from the batch views.
         self.latency.record_batch(
             MeasurementPoint::EndToEnd,
             shard,
-            gen_ts
+            bufs.pending
                 .iter()
-                .filter(|&&g| g >= self.measure_after_micros)
-                .map(|&g| egest.saturating_sub(g)),
+                .flat_map(|rb| (0..rb.len()).map(move |i| rb.entry(i).gen_ts_micros))
+                .filter(|&g| g >= self.measure_after_micros)
+                .map(|g| egest.saturating_sub(g)),
         );
+        bufs.pending.clear();
+        bufs.pending_records = 0;
 
         // Commit the offsets covering the processed records.  Under eager
         // commit (Flink/KStreams) this fires per processed poll-batch;
         // under micro-batching (Spark) it fires once per micro-batch —
         // the cadence difference the personalities model.
-        for (p, off) in commits.drain(..) {
+        for (p, off) in bufs.commits.drain(..) {
             self.group.commit(p, off);
         }
         Ok(())
     }
 
-    /// Produce processed records to the egestion topic.
+    /// Produce processed records to the egestion topic.  The buffer is
+    /// drained in place so its allocation survives across batches.
     fn emit(&self, out: &mut Vec<Record>, report: &mut TaskReport) -> Result<(), String> {
         if out.is_empty() {
             return Ok(());
@@ -237,7 +268,7 @@ impl TaskHarness {
         let n = out.len() as u64;
         let bytes: u64 = out.iter().map(|r| r.len() as u64).sum();
         self.broker
-            .produce_batch(&self.out_topic, std::mem::take(out))
+            .produce_records(&self.out_topic, out)
             .map_err(|_| "egestion topic closed".to_string())?;
         self.throughput
             .record_events(MeasurementPoint::BrokerOut, n, bytes);

@@ -111,6 +111,25 @@ impl LatencyRecorder {
         self.shards[idx].lock().expect("latency shard").record_n(micros, n);
     }
 
+    /// Record `(micros, count)` groups under a single lock acquisition —
+    /// the batch-first hot path: every record in a [`RecordBatch`] shares
+    /// one append stamp, so a poll's latency collapses to one group per
+    /// batch instead of one sample per event.
+    ///
+    /// [`RecordBatch`]: crate::broker::RecordBatch
+    pub fn record_groups(
+        &self,
+        point: MeasurementPoint,
+        shard_hint: usize,
+        groups: impl Iterator<Item = (u64, u64)>,
+    ) {
+        let idx = point.index() * SHARDS + (shard_hint % SHARDS);
+        let mut h = self.shards[idx].lock().expect("latency shard");
+        for (micros, n) in groups {
+            h.record_n(micros, n);
+        }
+    }
+
     /// Record many distinct samples under a single lock acquisition
     /// (per-event latencies of one processed batch).
     pub fn record_batch(
@@ -188,6 +207,20 @@ mod tests {
         let h = r.merged(MeasurementPoint::EndToEnd);
         assert_eq!(h.count(), 16);
         assert!(h.max() >= 1500);
+    }
+
+    #[test]
+    fn record_groups_bulk_records_per_batch_stamps() {
+        let r = LatencyRecorder::new();
+        // Three polled batches: (latency, record count) per batch.
+        r.record_groups(
+            MeasurementPoint::ProcIn,
+            3,
+            [(100u64, 512u64), (250, 512), (400, 76)].into_iter(),
+        );
+        let h = r.merged(MeasurementPoint::ProcIn);
+        assert_eq!(h.count(), 1100);
+        assert!(h.max() >= 400);
     }
 
     #[test]

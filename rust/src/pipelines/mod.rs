@@ -46,9 +46,13 @@ pub trait PipelineStep {
         true
     }
 
-    /// Process one batch. `records` are the raw broker records, `batch`
-    /// the parsed view (empty when `needs_parse()` is false).  Outputs are
-    /// pushed into `out` for the egestion topic.
+    /// Process one batch.  Exactly one of the two input views is
+    /// populated: when `needs_parse()` is true the task parses straight
+    /// from the broker's batch views into `batch` and `records` is empty;
+    /// when it is false, `records` holds the raw broker records
+    /// (materialized compatibility views sharing the batch arenas) and
+    /// `batch` is empty.  Outputs are pushed into `out` for the egestion
+    /// topic.
     fn process(
         &mut self,
         now_micros: u64,

@@ -200,8 +200,12 @@ impl<T> Receiver<T> {
             buf.push(st.items.pop_front().expect("len checked"));
         }
         drop(st);
-        if n > 0 {
-            self.inner.not_full.notify_all();
+        // Wake exactly as many blocked senders as slots freed: notify_all
+        // here was a thundering herd — every blocked sender woke, one won
+        // the slot, and the rest re-queued on the condvar having paid a
+        // wakeup + mutex round-trip for nothing.
+        for _ in 0..n {
+            self.inner.not_full.notify_one();
         }
         n
     }
@@ -289,6 +293,34 @@ mod tests {
         assert_eq!(buf, vec![0, 1, 2, 3]);
         assert_eq!(rx.drain_into(&mut buf, 100), 6);
         assert_eq!(buf.len(), 10);
+    }
+
+    #[test]
+    fn drain_wakes_exactly_the_freed_slots() {
+        let (tx, rx) = bounded(2);
+        tx.send(0).unwrap();
+        tx.send(1).unwrap();
+        // Three senders block on the full queue.
+        let senders: Vec<_> = (2..5)
+            .map(|i| {
+                let tx = tx.clone();
+                thread::spawn(move || tx.send(i).unwrap())
+            })
+            .collect();
+        thread::sleep(Duration::from_millis(30));
+        let mut buf = Vec::new();
+        // Freeing 2 slots wakes 2 senders; the third stays parked.
+        assert_eq!(rx.drain_into(&mut buf, 2), 2);
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(rx.len(), 2, "woken senders should refill freed slots");
+        // Free the last slot; everything drains and nothing is lost.
+        assert_eq!(rx.drain_into(&mut buf, 2), 2);
+        for s in senders {
+            s.join().unwrap();
+        }
+        rx.drain_into(&mut buf, 10);
+        buf.sort_unstable();
+        assert_eq!(buf, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use super::event::{EventFormat, SensorEvent};
 use super::pattern::{Pattern, PatternState};
 use super::ratelimit::TokenBucket;
-use crate::broker::{Broker, Record, Topic};
+use crate::broker::{Broker, PartitionedBatchBuilder, Topic};
 use crate::metrics::{LatencyRecorder, MeasurementPoint, ThroughputRecorder};
 use crate::util::clock::ClockRef;
 use crate::util::rng::{Pcg32, Zipf};
@@ -191,7 +191,7 @@ impl InstanceWorker {
         let mut wire = Vec::with_capacity(self.config.event_bytes + 32);
         let mut serializer =
             super::event::EventSerializer::new(self.config.format, self.config.event_bytes);
-        let mut batch: Vec<Record> = Vec::with_capacity(self.config.produce_batch);
+        let partitions = self.topic.partition_count();
 
         'outer: while self.clock.now_micros() < deadline_micros
             && !self.stop.load(Ordering::Relaxed)
@@ -206,12 +206,11 @@ impl InstanceWorker {
                 let chunk = remaining.min(self.config.produce_batch as u64);
                 bucket.acquire(chunk);
                 let now = self.clock.now_micros();
-                // Arena path: serialize the whole chunk into ONE shared
-                // allocation and carve per-record views — one Arc per
-                // chunk instead of one per event (EXPERIMENTS.md §Perf).
-                let mut arena: Vec<u8> =
-                    Vec::with_capacity(chunk as usize * (self.config.event_bytes + 8));
-                let mut slots: Vec<(u32, usize, usize)> = Vec::with_capacity(chunk as usize);
+                // Batch-first path: serialize the whole chunk straight
+                // into per-partition RecordBatch arenas — no intermediate
+                // Vec<Record>, one Arc and one partition-lock acquisition
+                // per (partition, chunk) instead of one per event.
+                let mut pb = PartitionedBatchBuilder::new(partitions);
                 for _ in 0..chunk {
                     let sensor_id = match &zipf {
                         Some(z) => z.sample(&mut rng) as u32,
@@ -224,21 +223,20 @@ impl InstanceWorker {
                     };
                     let n = serializer.serialize(&ev, &mut wire);
                     total_bytes += n as u64;
-                    let off = arena.len();
-                    arena.extend_from_slice(&wire);
-                    slots.push((sensor_id, off, n));
+                    pb.push(
+                        self.topic.partition_for_key(sensor_id),
+                        sensor_id,
+                        &wire,
+                        now,
+                    );
                 }
-                let arena: std::sync::Arc<[u8]> = arena.into();
-                for (sensor_id, off, n) in slots {
-                    batch.push(Record::from_arena(sensor_id, arena.clone(), off, n, now));
-                }
-                let appended = batch.len() as u64;
+                let appended = pb.total_records() as u64;
                 // Acked produce: generation → network thread → append →
                 // ack, so the recorded BrokerIn latency sees broker-side
                 // queueing as load approaches broker capacity.
                 if self
                     .broker
-                    .produce_batch_acked(&self.topic, std::mem::take(&mut batch))
+                    .produce_batches_acked(&self.topic, pb.finish())
                     .is_err()
                 {
                     break 'outer; // broker shut down
@@ -311,7 +309,7 @@ mod tests {
                 loop {
                     match group.poll(0, 1024) {
                         Ok(Some(b)) => {
-                            n += b.records.len() as u64;
+                            n += b.record_count() as u64;
                             group.commit(b.partition, b.next_offset);
                         }
                         Ok(None) => std::thread::sleep(std::time::Duration::from_millis(1)),
@@ -383,7 +381,7 @@ mod tests {
         loop {
             match group.poll(0, 4096) {
                 Ok(Some(b)) => {
-                    for r in &b.records {
+                    for r in b.iter() {
                         counts[r.key as usize] += 1;
                     }
                     group.commit(b.partition, b.next_offset);

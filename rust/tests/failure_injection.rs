@@ -28,7 +28,7 @@ fn spawn_drainer(broker: &Arc<Broker>) -> std::thread::JoinHandle<u64> {
         loop {
             match drain.poll(0, 2048) {
                 Ok(Some(b)) => {
-                    n += b.records.len() as u64;
+                    n += b.record_count() as u64;
                     drain.commit(b.partition, b.next_offset);
                 }
                 Ok(None) => std::thread::sleep(std::time::Duration::from_millis(1)),

@@ -37,7 +37,7 @@ fn multi_producer_multi_consumer_conserves_records() {
             std::thread::spawn(move || loop {
                 match g.poll(m, 512) {
                     Ok(Some(b)) => {
-                        consumed.fetch_add(b.records.len() as u64, Ordering::SeqCst);
+                        consumed.fetch_add(b.record_count() as u64, Ordering::SeqCst);
                         g.commit(b.partition, b.next_offset);
                     }
                     Ok(None) => std::thread::yield_now(),
@@ -97,7 +97,7 @@ fn backpressure_throttles_but_never_drops() {
     let mut seen = 0u64;
     while seen < 20_000 {
         if let Ok(Some(b)) = group.poll(0, 64) {
-            seen += b.records.len() as u64;
+            seen += b.record_count() as u64;
             group.commit(b.partition, b.next_offset);
             // Simulate a slow consumer.
             std::thread::sleep(std::time::Duration::from_micros(100));
@@ -120,7 +120,7 @@ fn fanout_to_two_groups_delivers_twice() {
         loop {
             match g.poll(0, 512) {
                 Ok(Some(b)) => {
-                    n += b.records.len();
+                    n += b.record_count();
                     g.commit(b.partition, b.next_offset);
                 }
                 Ok(None) => continue,
@@ -148,8 +148,8 @@ fn per_partition_ordering_is_preserved() {
     loop {
         match g.poll(0, 128) {
             Ok(Some(b)) => {
-                for r in &b.records {
-                    let v = u64::from_le_bytes(r.payload()[..8].try_into().unwrap());
+                for r in b.iter() {
+                    let v = u64::from_le_bytes(r.payload[..8].try_into().unwrap());
                     if let Some(prev) = last {
                         assert!(v > prev, "order violated: {v} after {prev}");
                     }
