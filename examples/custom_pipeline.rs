@@ -2,10 +2,13 @@
 //! processing logic tailored to their specific benchmarking objectives
 //! with minimal modifications").
 //!
-//! This example defines a user pipeline — an **alert filter** that parses
-//! sensor events, keeps only readings above a threshold, enriches them
-//! with a severity tag, and forwards them — and runs it through the full
-//! stack with `StepFactory::custom` + `Engine::run_with_factory`.
+//! This example defines a user **operator** — an alert filter that keeps
+//! only readings above a threshold and enriches them with a severity tag —
+//! registers it in an [`OperatorRegistry`] under the name `alert_filter`,
+//! and runs it through the full stack from a declarative YAML pipeline
+//! spec (`ops: [...]`) via `StepFactory::with_registry` +
+//! `Engine::run_with_factory`.  The same spec works from the CLI:
+//! `sprobench run --config bench.yaml --pipeline-spec alert.yaml`.
 //!
 //! ```bash
 //! cargo run --release --example custom_pipeline
@@ -15,48 +18,49 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use sprobench::broker::{Broker, BrokerConfig, Record};
-use sprobench::config::BenchConfig;
-use sprobench::engine::{Engine, EventBatch};
+use sprobench::config::{self, BenchConfig};
+use sprobench::engine::Engine;
 use sprobench::metrics::{LatencyRecorder, ThroughputRecorder};
-use sprobench::pipelines::{PipelineStep, StepFactory, StepStats};
+use sprobench::pipelines::{Operator, OperatorRegistry, RowBatch, StepFactory, StepStats};
 use sprobench::postprocess::ascii_table;
 use sprobench::util::clock;
 use sprobench::wgen::{Fleet, GeneratorConfig, Pattern};
 
-/// The user-defined step: filter + enrich.
+/// The user-defined operator: filter + enrich.  Rows above the threshold
+/// stay in the batch (so further operators could chain after it); each is
+/// also serialized and emitted with a severity tag.
 struct AlertFilter {
     threshold_c: f32,
     stats: StepStats,
 }
 
-impl PipelineStep for AlertFilter {
-    fn name(&self) -> &'static str {
-        "alert-filter"
+impl Operator for AlertFilter {
+    fn name(&self) -> &str {
+        "alert_filter"
     }
 
-    fn process(
+    fn apply(
         &mut self,
         _now_micros: u64,
-        _records: &[Record],
-        batch: &EventBatch,
+        rows: &mut RowBatch,
         out: &mut Vec<Record>,
     ) -> Result<(), String> {
-        self.stats.events_in += batch.len() as u64;
-        for i in 0..batch.len() {
-            if batch.temps[i] > self.threshold_c {
-                let severity = if batch.temps[i] > self.threshold_c + 15.0 {
-                    "critical"
-                } else {
-                    "warning"
-                };
-                let payload = format!(
-                    "{{\"id\":{},\"t\":{:.2},\"sev\":\"{severity}\"}}",
-                    batch.ids[i], batch.temps[i]
-                );
-                out.push(Record::new(batch.ids[i], payload.into_bytes(), batch.gen_ts[i]));
-                self.stats.events_out += 1;
-                self.stats.alerts += 1;
-            }
+        self.stats.events_in += rows.len() as u64;
+        let threshold = self.threshold_c;
+        rows.retain(|_, v| v > threshold);
+        for i in 0..rows.len() {
+            let severity = if rows.vals[i] > threshold + 15.0 {
+                "critical"
+            } else {
+                "warning"
+            };
+            let payload = format!(
+                "{{\"id\":{},\"t\":{:.2},\"sev\":\"{severity}\"}}",
+                rows.keys[i], rows.vals[i]
+            );
+            out.push(Record::new(rows.keys[i], payload.into_bytes(), rows.ts[i]));
+            self.stats.events_out += 1;
+            self.stats.alerts += 1;
         }
         Ok(())
     }
@@ -73,6 +77,34 @@ fn main() {
     cfg.bench.warmup_micros = 0;
     cfg.workload.rate = 80_000;
     cfg.engine.parallelism = 2;
+
+    // The declarative spec a user would put under `engine.pipeline` (or in
+    // a `--pipeline-spec` file); `alert_filter` resolves in the registry.
+    let spec_yaml = "
+ops:
+  - alert_filter:
+      threshold_c: 30.0
+";
+    let doc = config::yaml::parse(spec_yaml).expect("spec yaml");
+    cfg.engine.pipeline_spec = Some(config::parse_pipeline_spec(&doc).expect("spec"));
+    cfg.validate().expect("config validates");
+
+    // The one-line hook: register a builder for the custom operator name.
+    let mut registry = OperatorRegistry::new();
+    registry.register(
+        "alert_filter",
+        Box::new(|params, _ctx| {
+            let threshold_c = params
+                .get("threshold_c")
+                .and_then(|v| v.as_f64())
+                .ok_or("alert_filter needs `threshold_c:`")? as f32;
+            Ok(Box::new(AlertFilter {
+                threshold_c,
+                stats: StepStats::default(),
+            }) as Box<dyn Operator>)
+        }),
+    );
+    let factory = Arc::new(StepFactory::with_registry(&cfg, None, Arc::new(registry)));
 
     let clk = clock::wall();
     let broker = Broker::new(BrokerConfig::from_section(&cfg.broker), clk.clone());
@@ -96,17 +128,6 @@ fn main() {
     let tp = Arc::new(ThroughputRecorder::new());
     let lat = Arc::new(LatencyRecorder::new());
     let stop = Arc::new(AtomicBool::new(false));
-
-    // The one-line hook: a factory producing the user's step.
-    let factory = Arc::new(StepFactory::custom(
-        &cfg,
-        Box::new(|_start| {
-            Ok(Box::new(AlertFilter {
-                threshold_c: 30.0,
-                stats: StepStats::default(),
-            }) as Box<dyn PipelineStep>)
-        }),
-    ));
 
     // Fleet in the background, engine on this thread.
     let fleet_handle = {
@@ -146,8 +167,12 @@ fn main() {
         ],
     ];
     println!("{}", ascii_table(&["metric", "value"], &rows));
-    assert_eq!(report.events_in, fleet.events, "custom step must drain");
+    // Per-operator stats flow through the engine report.
+    let (op_name, op_stats) = &report.operators[0];
+    assert_eq!(op_name, "alert_filter");
+    assert_eq!(op_stats.alerts, total_alerts);
+    assert_eq!(report.events_in, fleet.events, "custom operator must drain");
     assert_eq!(alerts_forwarded, total_alerts);
     assert!(alerts_forwarded > 0 && alerts_forwarded < fleet.events);
-    println!("custom_pipeline OK — user-defined step ran through the full stack");
+    println!("custom_pipeline OK — registry operator `alert_filter` ran through the full stack");
 }

@@ -16,10 +16,11 @@
 
 use std::sync::Arc;
 
-use sprobench::bench::{Bencher, Measurement};
+use sprobench::bench::{scenarios, Bencher, Measurement};
 use sprobench::broker::{Broker, BrokerConfig, PartitionedBatchBuilder, Record, Topic};
 use sprobench::engine::EventBatch;
 use sprobench::metrics::{LatencyRecorder, MeasurementPoint};
+use sprobench::pipelines::{PipelineStep, StepFactory};
 use sprobench::runtime::{Input, RuntimeFactory};
 use sprobench::util::clock;
 use sprobench::util::json::Json;
@@ -106,6 +107,58 @@ fn e2e_batched(
             group.commit(b.partition, b.next_offset);
         }
     }
+    events as f64
+}
+
+/// The batched pass with a full operator chain processing each poll:
+/// `filter → keyby → window(mean) → topk → emit_aggregates` (the
+/// `chained_filter_topk` preset, native compute).  The delta against
+/// `e2e data plane batched` is the operator-chain overhead.
+fn e2e_chained(
+    broker: &Arc<Broker>,
+    topic: &Arc<Topic>,
+    group: &Arc<sprobench::broker::ConsumerGroup>,
+    payloads: &[Vec<u8>],
+    events: u64,
+) -> f64 {
+    let cfg = scenarios::chained_filter_topk();
+    let factory = StepFactory::new(&cfg, None);
+    let mut step = factory.create(0).expect("compile chain");
+    let mut sent = 0u64;
+    while sent < events {
+        let chunk = 512.min(events - sent);
+        let mut pb = PartitionedBatchBuilder::new(topic.partition_count());
+        for i in 0..chunk {
+            let key = (sent + i) as u32;
+            pb.push(
+                topic.partition_for_key(key),
+                key,
+                &payloads[((sent + i) % 1000) as usize],
+                sent + i,
+            );
+        }
+        broker.produce_batches(topic, pb.finish()).unwrap();
+        sent += chunk;
+    }
+    let mut seen = 0u64;
+    let mut parsed = EventBatch::with_capacity(4096);
+    let mut out = Vec::new();
+    while seen < events {
+        if let Ok(Some(b)) = group.poll(0, 4096) {
+            seen += b.record_count() as u64;
+            parsed.clear();
+            parsed.extend_from_batches(&b.batches);
+            out.clear();
+            // Virtual clock at 100 µs/event so the 500 ms slide keeps
+            // crossing boundaries (and topk + emit stay on the path).
+            step.process(seen * 100, &[], &parsed, &mut out).unwrap();
+            std::hint::black_box(out.len());
+            group.commit(b.partition, b.next_offset);
+        }
+    }
+    let mut tail = Vec::new();
+    step.finish(seen * 100 + 1_000_000, &mut tail).unwrap();
+    std::hint::black_box(tail.len());
     events as f64
 }
 
@@ -214,6 +267,13 @@ fn main() {
         let g = broker.subscribe("dp-batch", "dpb", 1);
         b.measure("e2e data plane batched", 1, iters, || {
             e2e_batched(&broker, &t, &g, &payloads, n / 2, &lat)
+        });
+    }
+    {
+        let t = broker.create_topic("dp-chain");
+        let g = broker.subscribe("dp-chain", "dpc", 1);
+        b.measure("e2e data plane chained", 1, iters, || {
+            e2e_chained(&broker, &t, &g, &payloads, n / 2)
         });
     }
 
@@ -371,8 +431,16 @@ fn main() {
     // §Data plane batching.
     let per_record_eps = eps(b.measurements(), "e2e data plane per-record");
     let batched_eps = eps(b.measurements(), "e2e data plane batched");
+    let chained_eps = eps(b.measurements(), "e2e data plane chained");
     let speedup = if per_record_eps > 0.0 {
         batched_eps / per_record_eps
+    } else {
+        0.0
+    };
+    // Operator-chain overhead vs the bare batched loop (< 1.0 means the
+    // chained preset costs throughput; tracked per PR).
+    let chain_vs_batched = if batched_eps > 0.0 {
+        chained_eps / batched_eps
     } else {
         0.0
     };
@@ -396,6 +464,8 @@ fn main() {
     dp.set("per_record_eps", Json::Num(per_record_eps));
     dp.set("batched_eps", Json::Num(batched_eps));
     dp.set("speedup", Json::Num(speedup));
+    dp.set("chained_eps", Json::Num(chained_eps));
+    dp.set("chain_vs_batched", Json::Num(chain_vs_batched));
     doc.set("data_plane", dp);
     match std::fs::write("BENCH_hotpath.json", doc.to_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json (data-plane speedup: {speedup:.2}x)"),

@@ -6,7 +6,8 @@
 //! bench target on identical configurations so the figures stay
 //! comparable.
 
-use crate::config::{BenchConfig, ExecMode, Framework, PipelineKind};
+use crate::config::{BenchConfig, CmpOp, ExecMode, Framework, OpSpec, PipelineKind, PipelineSpec};
+use crate::engine::AggKind;
 
 /// Baseline wall-mode scenario: short, laptop-friendly.
 pub fn wall_base(name: &str) -> BenchConfig {
@@ -112,6 +113,51 @@ pub fn max_capacity_sim(kind: PipelineKind, parallelism: u32) -> BenchConfig {
     cfg
 }
 
+/// Chained-topology preset: `filter → keyby → window(mean) → topk →
+/// emit_aggregates` — the shuffle-heavy keyed regrouping shape of
+/// Karimov et al. / ShuffleBench, expressed as an operator-chain spec.
+pub fn chained_filter_topk() -> BenchConfig {
+    let mut cfg = wall_base("chained-filter-topk");
+    cfg.workload.sensors = 1024;
+    cfg.engine.pipeline_spec = Some(PipelineSpec {
+        ops: vec![
+            OpSpec::Filter {
+                cmp: CmpOp::Gt,
+                value: 20.0,
+            },
+            OpSpec::KeyBy { modulo: 64 },
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 1_000_000,
+                slide_micros: 500_000,
+            },
+            OpSpec::TopK { k: 10 },
+            OpSpec::EmitAggregates,
+        ],
+    });
+    cfg
+}
+
+/// Chained-topology preset: `filter → map(°C→°F) → emit_events` — a
+/// projection/enrichment shape (selective forwarding, no keyed state).
+pub fn chained_hot_projection() -> BenchConfig {
+    let mut cfg = wall_base("chained-hot-projection");
+    cfg.engine.pipeline_spec = Some(PipelineSpec {
+        ops: vec![
+            OpSpec::Filter {
+                cmp: CmpOp::Gt,
+                value: 25.0,
+            },
+            OpSpec::Map {
+                scale: 1.8,
+                offset: 32.0,
+            },
+            OpSpec::EmitEvents,
+        ],
+    });
+    cfg
+}
+
 /// The paper's parallelism grid.
 pub const PARALLELISM_GRID: [u32; 5] = [1, 2, 4, 8, 16];
 
@@ -140,6 +186,21 @@ mod tests {
             max_capacity(kind).validate().unwrap();
             max_capacity_sim(kind, 8).validate().unwrap();
         }
+    }
+
+    #[test]
+    fn chained_presets_validate_and_carry_specs() {
+        for cfg in [chained_filter_topk(), chained_hot_projection()] {
+            cfg.validate().unwrap();
+            let spec = cfg.engine.pipeline_spec.as_ref().expect("preset has a spec");
+            assert!(spec.ops.len() >= 3, "chained topology, not a single op");
+            assert!(cfg.engine.pipeline_label().starts_with("chain["));
+        }
+        assert!(chained_filter_topk()
+            .engine
+            .pipeline_spec
+            .unwrap()
+            .has_window());
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! machines and SLURM clusters, interactive and batch (Sec. 3).
 //!
 //! ```text
-//! sprobench run          --config <file> [--experiment <name>] [--out <dir>]
-//! sprobench max-capacity --config <file> [--experiment <name>] [--out <dir>]
+//! sprobench run          --config <file> [--experiment <name>] [--out <dir>] [--pipeline-spec <file>]
+//! sprobench max-capacity --config <file> [--experiment <name>] [--out <dir>] [--pipeline-spec <file>]
 //! sprobench sbatch       --config <file> [--simulate] [--chain]
 //! sprobench report       --run <dir>
 //! sprobench baselines    [--events <n>]
@@ -19,7 +19,7 @@ use std::path::{Path, PathBuf};
 use crate::config::{self, BenchConfig, ExecMode, Experiment};
 use crate::coordinator::{run_wall, simrun};
 use crate::experiment::MaxCapacityDriver;
-use crate::postprocess::{ascii_table, validate_results};
+use crate::postprocess::{ascii_table, operator_stats_table, validate_results};
 use crate::runtime::RuntimeFactory;
 use crate::slurm::{ClusterSpec, Scheduler};
 use crate::util::json::{self, Json};
@@ -108,8 +108,8 @@ fn usage() -> &'static str {
     "SProBench — stream processing benchmark for HPC infrastructure
 
 USAGE:
-  sprobench run          --config <file> [--experiment <name>] [--out <dir>]
-  sprobench max-capacity --config <file> [--experiment <name>] [--out <dir>]
+  sprobench run          --config <file> [--experiment <name>] [--out <dir>] [--pipeline-spec <file>]
+  sprobench max-capacity --config <file> [--experiment <name>] [--out <dir>] [--pipeline-spec <file>]
   sprobench sbatch       --config <file> [--simulate] [--chain]
   sprobench report       --run <dir>
   sprobench baselines    [--events <n>]
@@ -120,7 +120,12 @@ The config file is the single master control point (YAML); its
 `experiments:` list expands into one run per entry.  `max-capacity`
 escalates the offered load until the sustainability predicate fails
 (see the `experiment:` config section) and writes report.json +
-report.md with the maximum sustainable throughput."
+report.md with the maximum sustainable throughput.
+
+Pipelines are operator chains: configure `engine.pipeline` with a kind
+(passthrough | cpu | mem | fused) or a declarative `ops:` spec
+(filter/map/keyby/window/topk/emit/custom); `--pipeline-spec <file>`
+overrides every selected experiment with the `ops:` list from <file>."
 }
 
 fn load_experiments(flags: &Flags) -> Result<Vec<Experiment>, String> {
@@ -132,7 +137,48 @@ fn load_experiments(flags: &Flags) -> Result<Vec<Experiment>, String> {
             return Err(format!("no experiment named '{name}' in {path}"));
         }
     }
+    apply_pipeline_spec_flag(flags, &mut exps)?;
+    // The CLI cannot supply an OperatorRegistry, so specs referencing
+    // custom (or misspelled) operator names must fail here — before a run
+    // launches — not inside the first engine task.
+    for exp in &exps {
+        if let Some(spec) = &exp.config.engine.pipeline_spec {
+            let custom = spec.custom_op_names();
+            if !custom.is_empty() {
+                return Err(format!(
+                    "{}: pipeline spec uses operator(s) [{}] that are not built-ins — \
+                     the CLI cannot resolve custom operators (use the \
+                     StepFactory::with_registry API; see examples/custom_pipeline.rs). \
+                     If this is a typo, the built-ins are: forward, filter, map, \
+                     cpu_transform, keyby, window, topk, emit, emit_events, \
+                     emit_aggregates.",
+                    exp.name,
+                    custom.join(", ")
+                ));
+            }
+        }
+    }
     Ok(exps)
+}
+
+/// `--pipeline-spec <file>`: override every selected experiment's pipeline
+/// with the operator-chain spec in <file> (an `ops:` document or bare
+/// list, same grammar as `engine.pipeline.ops`).
+fn apply_pipeline_spec_flag(flags: &Flags, exps: &mut [Experiment]) -> Result<(), String> {
+    let Some(path) = flags.get("pipeline-spec") else {
+        return Ok(());
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read pipeline spec {path}: {e}"))?;
+    let doc = config::yaml::parse(&text).map_err(|e| e.to_string())?;
+    let spec = config::parse_pipeline_spec(&doc).map_err(|e| e.to_string())?;
+    for exp in exps.iter_mut() {
+        exp.config.engine.pipeline_spec = Some(spec.clone());
+        exp.config
+            .validate()
+            .map_err(|e| format!("{}: {e}", exp.name))?;
+    }
+    Ok(())
 }
 
 /// Execute one resolved config through the mode-appropriate entry point
@@ -162,7 +208,7 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
         dir.step(&format!(
             "mode={:?} pipeline={} parallelism={}",
             exp.config.bench.mode,
-            exp.config.engine.pipeline.name(),
+            exp.config.engine.pipeline_label(),
             exp.config.engine.parallelism
         ));
         let (summary, store) = run_once(&exp.config, &rtf)?;
@@ -249,6 +295,10 @@ fn print_summary(s: &crate::coordinator::RunSummary) {
         vec!["energy".into(), format!("{:.1} J", s.energy_joules)],
     ];
     println!("{}", ascii_table(&["metric", "value"], &rows));
+    if !s.operators.is_empty() {
+        println!("per-operator stats (merged across tasks):");
+        println!("{}", operator_stats_table(&s.operators));
+    }
 }
 
 fn cmd_sbatch(flags: &Flags) -> Result<(), String> {
@@ -369,7 +419,7 @@ fn cmd_list(flags: &Flags) -> Result<(), String> {
             vec![
                 e.name.clone(),
                 format!("{:?}", e.config.bench.mode),
-                e.config.engine.pipeline.name().to_string(),
+                e.config.engine.pipeline_label(),
                 e.config.engine.parallelism.to_string(),
                 fmt_count(e.config.workload.rate as f64),
             ]
@@ -460,6 +510,162 @@ experiment:
         assert!(report.mst_target_rate >= 1_000_000, "sim capacity is well above 1M");
         let md = std::fs::read_to_string(report_dir.join("report.md")).unwrap();
         assert!(md.contains("Maximum sustainable throughput"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Find `results.json` under the single run directory for `name`.
+    fn results_json_under(out: &Path, name: &str) -> Json {
+        let dir = std::fs::read_dir(out)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(name))
+            })
+            .unwrap_or_else(|| panic!("no run dir for {name} under {}", out.display()));
+        let text = std::fs::read_to_string(dir.join("results.json")).unwrap();
+        json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn chained_spec_runs_end_to_end_through_the_cli() {
+        // A filter→keyby→window→topk→emit chain, declared in the master
+        // YAML, executed wall-mode through `sprobench run`.
+        let dir = std::env::temp_dir().join(format!("sprobench-chain-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("chain.yaml");
+        std::fs::write(
+            &cfg,
+            "benchmark:
+  name: chaintest
+  duration: 800ms
+  warmup: 0s
+workload:
+  rate: 40K
+  sensors: 256
+engine:
+  parallelism: 2
+  use_hlo: false
+  pipeline:
+    ops:
+      - filter:
+          cmp: gt
+          value: 15.0
+      - keyby:
+          modulo: 32
+      - window:
+          agg: mean
+          window: 200ms
+          slide: 100ms
+      - topk:
+          k: 5
+      - emit: aggregates
+",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        dispatch(&[
+            "run".into(),
+            "--config".into(),
+            cfg.display().to_string(),
+            "--out".into(),
+            out.display().to_string(),
+        ])
+        .unwrap();
+        let results = results_json_under(&out, "chaintest");
+        assert_eq!(
+            results.get("pipeline").and_then(|v| v.as_str()),
+            Some("chain[filter→keyby→window→topk→emit_aggregates]")
+        );
+        let ops = results.get("operators").and_then(|v| v.as_arr()).unwrap();
+        let names: Vec<&str> = ops
+            .iter()
+            .filter_map(|o| o.get("op").and_then(|v| v.as_str()))
+            .collect();
+        assert_eq!(names, vec!["filter", "keyby", "window", "topk", "emit_aggregates"]);
+        let processed = results.path(&["events", "processed"]).unwrap().as_i64().unwrap();
+        assert!(processed > 0);
+        let emitted = results.path(&["events", "emitted"]).unwrap().as_i64().unwrap();
+        assert!(emitted > 0, "chained topology must emit top-k aggregates");
+        // topk bounds emissions: ≤ k per window emission.
+        let window_emits: i64 = ops
+            .iter()
+            .filter(|o| o.get("op").and_then(|v| v.as_str()) == Some("window"))
+            .filter_map(|o| o.get("window_emits").and_then(|v| v.as_i64()))
+            .sum();
+        assert!(emitted <= window_emits * 5, "emitted {emitted} > {window_emits} windows × k");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pipeline_spec_flag_overrides_the_configured_pipeline() {
+        // The projection chain (filter→map→emit) from a standalone spec
+        // file, over a sim-mode base config that says `pipeline: mem`.
+        let dir = std::env::temp_dir().join(format!("sprobench-specflag-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("base.yaml");
+        std::fs::write(
+            &cfg,
+            "benchmark:\n  name: specflag\n  mode: sim\n  duration: 10s\nworkload:\n  rate: 1M\nengine:\n  pipeline: mem\n",
+        )
+        .unwrap();
+        let spec = dir.join("projection.yaml");
+        std::fs::write(
+            &spec,
+            "ops:\n  - filter:\n      cmp: gt\n      value: 20.0\n  - map:\n      scale: 1.8\n      offset: 32.0\n  - emit: events\n",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        dispatch(&[
+            "run".into(),
+            "--config".into(),
+            cfg.display().to_string(),
+            "--pipeline-spec".into(),
+            spec.display().to_string(),
+            "--out".into(),
+            out.display().to_string(),
+        ])
+        .unwrap();
+        let results = results_json_under(&out, "specflag");
+        assert_eq!(
+            results.get("pipeline").and_then(|v| v.as_str()),
+            Some("chain[filter→map→emit_events]")
+        );
+        // A malformed spec file must fail with the grammar in the error.
+        std::fs::write(&spec, "ops:\n  - window:\n      agg: median\n").unwrap();
+        let err = dispatch(&[
+            "run".into(),
+            "--config".into(),
+            cfg.display().to_string(),
+            "--pipeline-spec".into(),
+            spec.display().to_string(),
+        ])
+        .unwrap_err();
+        assert!(err.contains("unknown agg"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn custom_ops_are_rejected_before_launch_with_builtin_list() {
+        // The CLI can never supply an OperatorRegistry; a custom (or
+        // typo'd) op name must fail at load, not inside an engine task.
+        let dir = std::env::temp_dir().join(format!("sprobench-customop-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("typo.yaml");
+        std::fs::write(
+            &cfg,
+            "benchmark:\n  name: typo\n  mode: sim\nengine:\n  pipeline:\n    ops:\n      - fitler:\n          value: 20.0\n      - emit: events\n",
+        )
+        .unwrap();
+        let err = dispatch(&["run".into(), "--config".into(), cfg.display().to_string()])
+            .unwrap_err();
+        assert!(err.contains("fitler"), "{err}");
+        assert!(err.contains("built-ins"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

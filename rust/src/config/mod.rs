@@ -11,7 +11,10 @@
 pub mod schema;
 pub mod yaml;
 
-pub use schema::{BenchConfig, ConfigError, ExecMode, Framework, Pattern, PipelineKind};
+pub use schema::{
+    parse_pipeline_spec, pipeline_grammar, BenchConfig, CmpOp, ConfigError, ExecMode, Framework,
+    OpSpec, Pattern, PipelineKind, PipelineSpec,
+};
 
 use crate::util::json::Json;
 

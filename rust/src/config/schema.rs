@@ -4,6 +4,7 @@
 //! config is the only manual step).  All quantities accept human units
 //! ("500K", "27B", "30s") via [`crate::util::units`].
 
+use crate::engine::window::AggKind;
 use crate::util::json::Json;
 use crate::util::units::{parse_bytes, parse_count, parse_duration_micros};
 
@@ -58,6 +59,169 @@ impl PipelineKind {
             PipelineKind::MemIntensive => "mem",
             PipelineKind::Fused => "fused",
         }
+    }
+
+    /// The paper pipeline expressed as an operator chain — the canonical
+    /// spec [`crate::pipelines::StepFactory`] compiles when no explicit
+    /// `pipeline: {ops: [...]}` spec is configured.  Window durations of 0
+    /// inherit `engine.window` / `engine.slide` at compile time.
+    pub fn canonical_spec(self) -> PipelineSpec {
+        let ops = match self {
+            PipelineKind::PassThrough => vec![OpSpec::Forward],
+            PipelineKind::CpuIntensive => vec![OpSpec::CpuTransform, OpSpec::EmitEvents],
+            PipelineKind::MemIntensive => vec![
+                OpSpec::Window {
+                    agg: AggKind::Mean,
+                    window_micros: 0,
+                    slide_micros: 0,
+                },
+                OpSpec::EmitAggregates,
+            ],
+            PipelineKind::Fused => vec![
+                OpSpec::CpuTransform,
+                OpSpec::EmitEvents,
+                OpSpec::Window {
+                    agg: AggKind::Mean,
+                    window_micros: 0,
+                    slide_micros: 0,
+                },
+                OpSpec::EmitAggregates,
+            ],
+        };
+        PipelineSpec { ops }
+    }
+}
+
+/// Comparison operator for [`OpSpec::Filter`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Gt,
+    Ge,
+    Lt,
+    Le,
+}
+
+impl CmpOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            CmpOp::Gt => "gt",
+            CmpOp::Ge => "ge",
+            CmpOp::Lt => "lt",
+            CmpOp::Le => "le",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<CmpOp> {
+        match s {
+            "gt" | ">" => Some(CmpOp::Gt),
+            "ge" | ">=" => Some(CmpOp::Ge),
+            "lt" | "<" => Some(CmpOp::Lt),
+            "le" | "<=" => Some(CmpOp::Le),
+            _ => None,
+        }
+    }
+
+    pub fn eval(self, lhs: f32, rhs: f32) -> bool {
+        match self {
+            CmpOp::Gt => lhs > rhs,
+            CmpOp::Ge => lhs >= rhs,
+            CmpOp::Lt => lhs < rhs,
+            CmpOp::Le => lhs <= rhs,
+        }
+    }
+}
+
+/// One operator in a declarative pipeline spec (the `pipeline: {ops: [...]}`
+/// config form).  Compiled to a concrete operator by
+/// [`crate::pipelines::Chain`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpSpec {
+    /// Forward raw broker records untouched (the pass-through baseline).
+    /// Must be the only operator in its chain.
+    Forward,
+    /// Keep rows whose value compares true against `value`.
+    Filter { cmp: CmpOp, value: f32 },
+    /// Affine projection of the value: `v * scale + offset`.
+    Map { scale: f32, offset: f32 },
+    /// The paper's CPU-intensive transform: °C → °F plus alert counting
+    /// against `engine.threshold_f`; HLO-accelerated when artifacts exist.
+    CpuTransform,
+    /// Re-key rows by `key % modulo` (shuffle-style regrouping).
+    KeyBy { modulo: u32 },
+    /// Keyed sliding-window aggregation; 0 durations inherit
+    /// `engine.window` / `engine.slide`.  Consumes event rows and emits
+    /// aggregate rows downstream.
+    Window {
+        agg: AggKind,
+        window_micros: u64,
+        slide_micros: u64,
+    },
+    /// Keep the `k` largest aggregates per window.
+    TopK { k: usize },
+    /// Serialize rows as sensor events to the egestion topic (rows pass
+    /// through unchanged, so a window may follow — the fused shape).
+    EmitEvents,
+    /// Serialize aggregate rows as compact JSON aggregate records.
+    EmitAggregates,
+    /// A user operator resolved by name against the
+    /// [`crate::pipelines::OperatorRegistry`] at engine start.
+    Custom { name: String, params: Json },
+}
+
+impl OpSpec {
+    pub fn op_name(&self) -> &str {
+        match self {
+            OpSpec::Forward => "forward",
+            OpSpec::Filter { .. } => "filter",
+            OpSpec::Map { .. } => "map",
+            OpSpec::CpuTransform => "cpu_transform",
+            OpSpec::KeyBy { .. } => "keyby",
+            OpSpec::Window { .. } => "window",
+            OpSpec::TopK { .. } => "topk",
+            OpSpec::EmitEvents => "emit_events",
+            OpSpec::EmitAggregates => "emit_aggregates",
+            OpSpec::Custom { name, .. } => name,
+        }
+    }
+}
+
+/// A declarative operator-chain pipeline (`engine.pipeline: {ops: [...]}`).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct PipelineSpec {
+    pub ops: Vec<OpSpec>,
+}
+
+impl PipelineSpec {
+    /// Display label, e.g. `chain[filter→keyby→window→topk→emit_aggregates]`.
+    pub fn label(&self) -> String {
+        let names: Vec<&str> = self.ops.iter().map(|o| o.op_name()).collect();
+        format!("chain[{}]", names.join("→"))
+    }
+
+    /// The aggregator of the last window at or before op index `i`
+    /// (drives the JSON field name of a downstream `emit_aggregates`).
+    pub fn window_agg_before(&self, i: usize) -> Option<AggKind> {
+        self.ops[..i].iter().rev().find_map(|o| match o {
+            OpSpec::Window { agg, .. } => Some(*agg),
+            _ => None,
+        })
+    }
+
+    pub fn has_window(&self) -> bool {
+        self.ops.iter().any(|o| matches!(o, OpSpec::Window { .. }))
+    }
+
+    /// Names of operators that need an `OperatorRegistry` to compile.
+    /// Callers that can never supply one (the CLI) reject these up front,
+    /// before a run is launched.
+    pub fn custom_op_names(&self) -> Vec<&str> {
+        self.ops
+            .iter()
+            .filter_map(|o| match o {
+                OpSpec::Custom { name, .. } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect()
     }
 }
 
@@ -124,6 +288,8 @@ pub struct BrokerSection {
 pub struct EngineSection {
     pub framework: Framework,
     pub pipeline: PipelineKind,
+    /// Explicit operator-chain spec; overrides `pipeline` when present.
+    pub pipeline_spec: Option<PipelineSpec>,
     pub parallelism: u32,
     pub batch_size: usize,
     pub window_micros: u64,
@@ -134,6 +300,25 @@ pub struct EngineSection {
     pub use_hlo: bool,
     /// Micro-batch interval for the Spark personality.
     pub microbatch_micros: u64,
+}
+
+impl EngineSection {
+    /// The operator chain this engine runs: the explicit spec when one is
+    /// configured, else the canonical chain of the configured kind.
+    pub fn effective_spec(&self) -> PipelineSpec {
+        self.pipeline_spec
+            .clone()
+            .unwrap_or_else(|| self.pipeline.canonical_spec())
+    }
+
+    /// Human-readable pipeline name for reports: the kind name for the
+    /// paper pipelines, a `chain[...]` label for explicit specs.
+    pub fn pipeline_label(&self) -> String {
+        match &self.pipeline_spec {
+            None => self.pipeline.name().to_string(),
+            Some(spec) => spec.label(),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -247,6 +432,7 @@ impl Default for BenchConfig {
             engine: EngineSection {
                 framework: Framework::Flink,
                 pipeline: PipelineKind::CpuIntensive,
+                pipeline_spec: None,
                 parallelism: 4,
                 batch_size: 1024,
                 window_micros: 10_000_000,
@@ -358,8 +544,183 @@ fn get_bool(j: &Json, key: &str, default: bool) -> Result<bool, ConfigError> {
     }
 }
 
-fn section<'a>(j: &'a Json, key: &str) -> Json {
+fn section(j: &Json, key: &str) -> Json {
     j.get(key).cloned().unwrap_or_else(Json::obj)
+}
+
+// --- operator-chain pipeline specs ------------------------------------------
+
+/// The spec grammar, appended to every pipeline config error so a typo
+/// never produces an opaque parse failure.
+pub fn pipeline_grammar() -> &'static str {
+    "engine.pipeline accepts a kind — passthrough | cpu | mem | fused — or an \
+operator-chain spec:
+  pipeline:
+    ops:
+      - filter:
+          cmp: gt          # gt | ge | lt | le
+          value: 26.0
+      - keyby:
+          modulo: 64
+      - window:
+          agg: mean        # mean | sum | min | max | count
+          window: 2s       # omit to inherit engine.window
+          slide: 1s        # omit to inherit engine.slide
+      - topk:
+          k: 10
+      - emit: aggregates   # or: events
+built-in ops: forward, filter(cmp,value), map(scale,offset), cpu_transform, \
+keyby(modulo), window(agg,window,slide), topk(k), emit(events|aggregates); \
+any other name resolves against the custom OperatorRegistry at engine start \
+(see docs/ARCHITECTURE.md §Pipeline operator chains)"
+}
+
+/// Parse an operator-chain spec from its JSON tree: either `{ops: [...]}`
+/// or a bare ops list (the `--pipeline-spec` file form).
+pub fn parse_pipeline_spec(j: &Json) -> Result<PipelineSpec, ConfigError> {
+    let ops_json: &[Json] = match j {
+        Json::Arr(a) => a.as_slice(),
+        _ => j
+            .get("ops")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| {
+                ConfigError(format!(
+                    "engine.pipeline: an operator-chain spec needs an `ops:` list\n{}",
+                    pipeline_grammar()
+                ))
+            })?,
+    };
+    if ops_json.is_empty() {
+        return err(format!(
+            "engine.pipeline.ops: the chain is empty\n{}",
+            pipeline_grammar()
+        ));
+    }
+    let ops = ops_json
+        .iter()
+        .enumerate()
+        .map(|(i, entry)| parse_op(i, entry))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(PipelineSpec { ops })
+}
+
+fn parse_op(i: usize, entry: &Json) -> Result<OpSpec, ConfigError> {
+    match entry {
+        Json::Str(s) => build_op(i, s, &Json::obj()),
+        Json::Obj(m) => {
+            // Single-key form (`- filter: {…}` nested block), or the
+            // flattened YAML form where the op key parsed to null and its
+            // parameters landed as siblings.
+            let (name, params) = if m.len() == 1 {
+                let (k, v) = m.iter().next().expect("len checked");
+                (k.clone(), v.clone())
+            } else {
+                let mut nulls = m.iter().filter(|(_, v)| matches!(v, Json::Null));
+                match (nulls.next(), nulls.next()) {
+                    (Some((k, _)), None) => {
+                        let mut rest = m.clone();
+                        let k = k.clone();
+                        rest.remove(&k);
+                        (k, Json::Obj(rest))
+                    }
+                    _ => {
+                        return err(format!(
+                            "engine.pipeline.ops[{i}]: cannot identify the operator key in \
+                             {entry:?} — write one op per list item\n{}",
+                            pipeline_grammar()
+                        ))
+                    }
+                }
+            };
+            build_op(i, &name, &params)
+        }
+        other => err(format!(
+            "engine.pipeline.ops[{i}]: expected an operator name or mapping, got {other:?}\n{}",
+            pipeline_grammar()
+        )),
+    }
+}
+
+fn build_op(i: usize, name: &str, params: &Json) -> Result<OpSpec, ConfigError> {
+    let at = |what: &str| format!("engine.pipeline.ops[{i}] ({name}): {what}");
+    match name {
+        "forward" => Ok(OpSpec::Forward),
+        "cpu_transform" => Ok(OpSpec::CpuTransform),
+        "emit_events" => Ok(OpSpec::EmitEvents),
+        "emit_aggregates" => Ok(OpSpec::EmitAggregates),
+        "emit" => {
+            let kind = params
+                .as_str()
+                .or_else(|| params.get("kind").and_then(|v| v.as_str()))
+                .unwrap_or("events");
+            match kind {
+                "events" => Ok(OpSpec::EmitEvents),
+                "aggregates" => Ok(OpSpec::EmitAggregates),
+                other => err(at(&format!(
+                    "unknown emit kind '{other}' — expected events or aggregates"
+                ))),
+            }
+        }
+        "filter" => {
+            let cmp_name = params
+                .get("cmp")
+                .or_else(|| params.get("op"))
+                .and_then(|v| v.as_str())
+                .unwrap_or("gt");
+            let cmp = CmpOp::from_name(cmp_name).ok_or_else(|| {
+                ConfigError(at(&format!(
+                    "unknown cmp '{cmp_name}' — expected gt, ge, lt or le"
+                )))
+            })?;
+            let value = get_f64(params, "value", f64::NAN)? as f32;
+            if !value.is_finite() {
+                return err(at("needs a finite `value:`"));
+            }
+            Ok(OpSpec::Filter { cmp, value })
+        }
+        "map" => {
+            let scale = get_f64(params, "scale", 1.0)? as f32;
+            let offset = get_f64(params, "offset", 0.0)? as f32;
+            if !scale.is_finite() || !offset.is_finite() {
+                return err(at("scale/offset must be finite"));
+            }
+            Ok(OpSpec::Map { scale, offset })
+        }
+        "keyby" => {
+            let modulo = get_u64(params, "modulo", 0)? as u32;
+            if modulo == 0 {
+                return err(at("needs `modulo:` > 0"));
+            }
+            Ok(OpSpec::KeyBy { modulo })
+        }
+        "window" => {
+            let agg_name = params
+                .get("agg")
+                .and_then(|v| v.as_str())
+                .unwrap_or("mean");
+            let agg = AggKind::from_name(agg_name).ok_or_else(|| {
+                ConfigError(at(&format!(
+                    "unknown agg '{agg_name}' — expected mean, sum, min, max or count"
+                )))
+            })?;
+            Ok(OpSpec::Window {
+                agg,
+                window_micros: get_duration(params, "window", 0)?,
+                slide_micros: get_duration(params, "slide", 0)?,
+            })
+        }
+        "topk" => {
+            let k = get_u64(params, "k", 0)? as usize;
+            if k == 0 {
+                return err(at("needs `k:` > 0"));
+            }
+            Ok(OpSpec::TopK { k })
+        }
+        custom => Ok(OpSpec::Custom {
+            name: custom.to_string(),
+            params: params.clone(),
+        }),
+    }
 }
 
 impl BenchConfig {
@@ -437,6 +798,33 @@ impl BenchConfig {
         };
 
         let e = section(root, "engine");
+        let (pipeline, pipeline_spec) = match e.get("pipeline") {
+            None | Some(Json::Null) => (d.engine.pipeline, None),
+            Some(Json::Str(s)) => (
+                match s.as_str() {
+                    "passthrough" => PipelineKind::PassThrough,
+                    "cpu" => PipelineKind::CpuIntensive,
+                    "mem" => PipelineKind::MemIntensive,
+                    "fused" => PipelineKind::Fused,
+                    other => {
+                        return err(format!(
+                            "engine.pipeline: unknown kind '{other}'\n{}",
+                            pipeline_grammar()
+                        ))
+                    }
+                },
+                None,
+            ),
+            Some(obj @ Json::Obj(_)) => {
+                (d.engine.pipeline, Some(parse_pipeline_spec(obj)?))
+            }
+            Some(other) => {
+                return err(format!(
+                    "engine.pipeline: expected a kind name or an ops spec, got {other:?}\n{}",
+                    pipeline_grammar()
+                ))
+            }
+        };
         let engine = EngineSection {
             framework: match get_str(&e, "framework", "flink").as_str() {
                 "flink" => Framework::Flink,
@@ -444,13 +832,8 @@ impl BenchConfig {
                 "kstreams" | "kafka-streams" => Framework::KStreams,
                 other => return err(format!("engine.framework: unknown '{other}'")),
             },
-            pipeline: match get_str(&e, "pipeline", "cpu").as_str() {
-                "passthrough" => PipelineKind::PassThrough,
-                "cpu" => PipelineKind::CpuIntensive,
-                "mem" => PipelineKind::MemIntensive,
-                "fused" => PipelineKind::Fused,
-                other => return err(format!("engine.pipeline: unknown '{other}'")),
-            },
+            pipeline,
+            pipeline_spec,
             parallelism: get_u64(&e, "parallelism", d.engine.parallelism as u64)? as u32,
             batch_size: get_u64(&e, "batch_size", d.engine.batch_size as u64)? as usize,
             window_micros: get_duration(&e, "window", d.engine.window_micros)?,
@@ -558,6 +941,9 @@ impl BenchConfig {
         if self.engine.slide_micros > self.engine.window_micros {
             return err("engine.slide must be <= engine.window");
         }
+        if let Some(spec) = &self.engine.pipeline_spec {
+            self.validate_spec(spec)?;
+        }
         // Negated comparisons so NaN (parseable from YAML "nan") fails
         // every bound instead of slipping past it.
         if !(self.experiment.step_factor > 1.0 && self.experiment.step_factor.is_finite()) {
@@ -588,6 +974,62 @@ impl BenchConfig {
                 "workload.rate {} requires {} generator instances (capacity {}), but generators.max_instances is {}",
                 self.workload.rate, needed, self.generators.instance_capacity, self.generators.max_instances
             ));
+        }
+        Ok(())
+    }
+
+    /// Chain-level validation of an operator spec (per-op parameter bounds
+    /// are enforced at parse time; this checks cross-op structure).
+    fn validate_spec(&self, spec: &PipelineSpec) -> Result<(), ConfigError> {
+        if spec.ops.is_empty() {
+            return err(format!("engine.pipeline.ops is empty\n{}", pipeline_grammar()));
+        }
+        if spec.ops.iter().any(|o| matches!(o, OpSpec::Forward)) && spec.ops.len() > 1 {
+            return err(
+                "engine.pipeline.ops: `forward` moves raw broker records and must be \
+                 the only operator in its chain",
+            );
+        }
+        let mut saw_window = false;
+        for (i, op) in spec.ops.iter().enumerate() {
+            match op {
+                OpSpec::Window {
+                    window_micros,
+                    slide_micros,
+                    ..
+                } => {
+                    let w = if *window_micros > 0 {
+                        *window_micros
+                    } else {
+                        self.engine.window_micros
+                    };
+                    let s = if *slide_micros > 0 {
+                        *slide_micros
+                    } else {
+                        self.engine.slide_micros
+                    };
+                    if s == 0 || s > w {
+                        return err(format!(
+                            "engine.pipeline.ops[{i}] (window): needs slide in (0, window] \
+                             (resolved window={w}µs slide={s}µs)"
+                        ));
+                    }
+                    saw_window = true;
+                }
+                OpSpec::TopK { .. } if !saw_window => {
+                    return err(format!(
+                        "engine.pipeline.ops[{i}] (topk): requires a window(...) earlier in \
+                         the chain — top-k selects among window aggregates"
+                    ));
+                }
+                OpSpec::EmitAggregates if !saw_window => {
+                    return err(format!(
+                        "engine.pipeline.ops[{i}] (emit: aggregates): requires a window(...) \
+                         earlier in the chain"
+                    ));
+                }
+                _ => {}
+            }
         }
         Ok(())
     }
@@ -733,6 +1175,166 @@ experiment:
         assert_eq!(cfg.experiment.step_factor, 2.0);
         assert_eq!(cfg.experiment.max_p99_micros, 0);
         assert_eq!(cfg.experiment.iteration_duration_micros, 0);
+    }
+
+    #[test]
+    fn operator_chain_spec_parses_from_yaml() {
+        let y = "
+engine:
+  pipeline:
+    ops:
+      - filter:
+          cmp: gt
+          value: 26.0
+      - keyby:
+          modulo: 64
+      - window:
+          agg: mean
+          window: 2s
+          slide: 1s
+      - topk:
+          k: 10
+      - emit: aggregates
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        let spec = cfg.engine.pipeline_spec.expect("spec parsed");
+        assert_eq!(spec.ops.len(), 5);
+        assert_eq!(spec.ops[0], OpSpec::Filter { cmp: CmpOp::Gt, value: 26.0 });
+        assert_eq!(spec.ops[1], OpSpec::KeyBy { modulo: 64 });
+        assert_eq!(
+            spec.ops[2],
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 2_000_000,
+                slide_micros: 1_000_000
+            }
+        );
+        assert_eq!(spec.ops[3], OpSpec::TopK { k: 10 });
+        assert_eq!(spec.ops[4], OpSpec::EmitAggregates);
+        assert_eq!(
+            spec.label(),
+            "chain[filter→keyby→window→topk→emit_aggregates]"
+        );
+    }
+
+    #[test]
+    fn flattened_yaml_op_form_is_tolerated() {
+        // Two-space continuation puts params beside the op key; the parser
+        // must still identify `filter` as the operator.
+        let y = "
+engine:
+  pipeline:
+    ops:
+      - filter:
+        cmp: lt
+        value: 5.0
+      - emit: events
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        let spec = cfg.engine.pipeline_spec.unwrap();
+        assert_eq!(spec.ops[0], OpSpec::Filter { cmp: CmpOp::Lt, value: 5.0 });
+        assert_eq!(spec.ops[1], OpSpec::EmitEvents);
+    }
+
+    #[test]
+    fn unknown_pipeline_kind_error_lists_kinds_and_grammar() {
+        let y = "engine:\n  pipeline: storm\n";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("unknown kind 'storm'"), "{e}");
+        assert!(e.0.contains("passthrough | cpu | mem | fused"), "{e}");
+        assert!(e.0.contains("ops:"), "error must show the spec grammar: {e}");
+        assert!(e.0.contains("OperatorRegistry"), "{e}");
+    }
+
+    #[test]
+    fn bad_spec_params_are_readable_errors() {
+        for (y, needle) in [
+            (
+                "engine:\n  pipeline:\n    ops:\n      - filter:\n          cmp: spaceship\n          value: 1\n",
+                "unknown cmp",
+            ),
+            (
+                "engine:\n  pipeline:\n    ops:\n      - window:\n          agg: median\n",
+                "unknown agg",
+            ),
+            ("engine:\n  pipeline:\n    ops:\n      - topk:\n          k: 0\n", "k:"),
+            ("engine:\n  pipeline:\n    ops: []\n", "empty"),
+            ("engine:\n  pipeline:\n    knobs: 3\n", "ops:"),
+        ] {
+            let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+            assert!(e.0.contains(needle), "expected '{needle}' in: {e}");
+        }
+    }
+
+    #[test]
+    fn spec_structure_is_validated() {
+        // topk before any window.
+        let y = "engine:\n  pipeline:\n    ops:\n      - topk:\n          k: 3\n";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("requires a window"), "{e}");
+        // forward mixed with other ops.
+        let y = "engine:\n  pipeline:\n    ops:\n      - forward\n      - emit: events\n";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("forward"), "{e}");
+        // emit aggregates with no window.
+        let y = "engine:\n  pipeline:\n    ops:\n      - emit: aggregates\n";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("requires a window"), "{e}");
+    }
+
+    #[test]
+    fn unknown_op_names_become_custom_specs() {
+        let y = "
+engine:
+  pipeline:
+    ops:
+      - alert_filter:
+          threshold_c: 30.0
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        let spec = cfg.engine.pipeline_spec.unwrap();
+        match &spec.ops[0] {
+            OpSpec::Custom { name, params } => {
+                assert_eq!(name, "alert_filter");
+                assert_eq!(params.get("threshold_c").and_then(|v| v.as_f64()), Some(30.0));
+            }
+            other => panic!("expected custom op, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn canonical_specs_cover_the_paper_pipelines() {
+        assert_eq!(
+            PipelineKind::PassThrough.canonical_spec().ops,
+            vec![OpSpec::Forward]
+        );
+        assert_eq!(
+            PipelineKind::CpuIntensive.canonical_spec().ops,
+            vec![OpSpec::CpuTransform, OpSpec::EmitEvents]
+        );
+        assert!(PipelineKind::MemIntensive.canonical_spec().has_window());
+        assert_eq!(PipelineKind::Fused.canonical_spec().ops.len(), 4);
+        // Canonical chains must themselves validate against the defaults.
+        for kind in [
+            PipelineKind::PassThrough,
+            PipelineKind::CpuIntensive,
+            PipelineKind::MemIntensive,
+            PipelineKind::Fused,
+        ] {
+            let mut cfg = BenchConfig::default();
+            cfg.engine.pipeline_spec = Some(kind.canonical_spec());
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn pipeline_label_reflects_spec_or_kind() {
+        let mut cfg = BenchConfig::default();
+        assert_eq!(cfg.engine.pipeline_label(), "cpu");
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![OpSpec::Forward],
+        });
+        assert_eq!(cfg.engine.pipeline_label(), "chain[forward]");
     }
 
     #[test]

@@ -358,6 +358,33 @@ experiments:
     }
 
     #[test]
+    fn pipeline_ops_block_parses_as_list_of_single_key_maps() {
+        // The operator-chain spec shape (schema::parse_pipeline_spec
+        // consumes this tree); each `- op:` item with a deeper-indented
+        // block must become a single-key mapping.
+        let y = "
+engine:
+  pipeline:
+    ops:
+      - filter:
+          cmp: gt
+          value: 26.0
+      - emit: aggregates
+";
+        let v = parse(y).unwrap();
+        let ops = v
+            .path(&["engine", "pipeline", "ops"])
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(ops.len(), 2);
+        let filter = ops[0].get("filter").expect("single-key op mapping");
+        assert_eq!(filter.get("cmp").unwrap().as_str(), Some("gt"));
+        assert_eq!(filter.get("value").unwrap().as_f64(), Some(26.0));
+        assert_eq!(ops[1].get("emit").unwrap().as_str(), Some("aggregates"));
+    }
+
+    #[test]
     fn experiment_section_scalars_keep_their_types() {
         // The max-capacity `experiment:` section mixes floats, ints and
         // unit-suffixed strings; the parser must keep each distinct so the

@@ -32,7 +32,9 @@ use crate::wgen::{Fleet, GeneratorConfig, Pattern};
 #[derive(Clone, Debug)]
 pub struct RunSummary {
     pub name: String,
-    pub pipeline: &'static str,
+    /// Pipeline label: the kind name (`cpu`) or a `chain[...]` label for
+    /// explicit operator-chain specs.
+    pub pipeline: String,
     pub framework: &'static str,
     pub parallelism: u32,
     pub generated: u64,
@@ -50,6 +52,9 @@ pub struct RunSummary {
     pub energy_joules: f64,
     pub parse_failures: u64,
     pub batches: u64,
+    /// Per-operator stats merged across engine tasks, in chain order
+    /// (empty for sim runs — the analytic model has no per-op counters).
+    pub operators: Vec<(String, crate::pipelines::StepStats)>,
 }
 
 impl RunSummary {
@@ -102,6 +107,17 @@ impl RunSummary {
         j.set("elapsed_us", Json::Int(self.elapsed_micros as i64));
         j.set("parse_failures", Json::Int(self.parse_failures as i64));
         j.set("batches", Json::Int(self.batches as i64));
+        // Per-operator breakdown, chain order preserved (array, not map).
+        let ops: Vec<Json> = self
+            .operators
+            .iter()
+            .map(|(name, s)| {
+                let mut o = s.to_json();
+                o.set("op", Json::Str(name.clone()));
+                o
+            })
+            .collect();
+        j.set("operators", Json::Arr(ops));
         j
     }
 }
@@ -295,7 +311,7 @@ pub fn run_wall(
     let (gc_count, gc_time) = jmx.aggregate_young();
     let summary = RunSummary {
         name: cfg.bench.name.clone(),
-        pipeline: cfg.engine.pipeline.name(),
+        pipeline: cfg.engine.pipeline_label(),
         framework: cfg.engine.framework.name(),
         parallelism: cfg.engine.parallelism,
         generated: fleet_report.events,
@@ -311,6 +327,7 @@ pub fn run_wall(
         energy_joules: sysmon.joules_total(),
         parse_failures: engine_report.parse_failures,
         batches: engine_report.batches,
+        operators: engine_report.operators.clone(),
     };
     Ok((summary, store))
 }
@@ -354,6 +371,14 @@ mod tests {
         // Results doc passes validation.
         let violations = validate_results(&summary.to_json());
         assert!(violations.is_empty(), "{violations:?}");
+        // Per-operator stats survive into the results document.
+        let names: Vec<&str> = summary.operators.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["cpu_transform", "emit_events"]);
+        assert_eq!(summary.operators[0].1.events_in, summary.processed);
+        let ops = summary.to_json();
+        let ops = ops.get("operators").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[0].get("op").and_then(|v| v.as_str()), Some("cpu_transform"));
     }
 
     #[test]

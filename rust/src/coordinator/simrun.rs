@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use super::RunSummary;
-use crate::config::{BenchConfig, PipelineKind};
+use crate::config::{BenchConfig, OpSpec, PipelineKind, PipelineSpec};
 use crate::metrics::{MeasurementPoint, MetricStore};
 use crate::util::histogram::{Histogram, HistogramSummary};
 use crate::util::rng::Pcg32;
@@ -79,6 +79,38 @@ impl SimModel {
             PipelineKind::Fused => self.task_rate_fused,
         }
     }
+
+    /// Per-task rate for an operator-chain spec: service times add along
+    /// the chain.  The per-op costs are projections calibrated so the
+    /// canonical kind chains land on the measured kind rates above
+    /// (forward ≈ passthrough; cpu_transform + emit ≈ cpu; window + emit ≈
+    /// mem); re-calibrate from `BENCH_hotpath.json` (`e2e data plane
+    /// chained`) when the operator layer changes.
+    fn task_rate_spec(&self, spec: &PipelineSpec) -> f64 {
+        let cost_micros: f64 = spec
+            .ops
+            .iter()
+            .map(|op| match op {
+                OpSpec::Forward => 1e6 / self.task_rate_passthrough,
+                OpSpec::Filter { .. } => 0.08,
+                OpSpec::Map { .. } => 0.06,
+                OpSpec::KeyBy { .. } => 0.06,
+                OpSpec::CpuTransform => 1e6 / self.task_rate_cpu - 0.25,
+                OpSpec::Window { .. } => 1e6 / self.task_rate_mem - 0.25,
+                OpSpec::TopK { .. } => 0.12,
+                OpSpec::EmitEvents | OpSpec::EmitAggregates => 0.25,
+                OpSpec::Custom { .. } => 0.50,
+            })
+            .sum();
+        1e6 / cost_micros.max(0.01)
+    }
+
+    fn task_rate_for(&self, cfg: &BenchConfig) -> f64 {
+        match &cfg.engine.pipeline_spec {
+            Some(spec) => self.task_rate_spec(spec),
+            None => self.task_rate(cfg.engine.pipeline),
+        }
+    }
 }
 
 /// Evaluate one experiment analytically. Also emits a synthetic timeline
@@ -95,7 +127,7 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
     // Effective engine capacity scales sub-linearly at high parallelism:
     // coordination cost shaves (the Fig. 7 plateau).
     let scaling_eff = 1.0 / (1.0 + 0.04 * (par - 1.0));
-    let engine_cap = par * model.task_rate(cfg.engine.pipeline) * scaling_eff;
+    let engine_cap = par * model.task_rate_for(cfg) * scaling_eff;
 
     let processed_rate = offered.min(broker_cap).min(engine_cap);
     let rho_engine = (processed_rate / engine_cap).min(0.999);
@@ -113,13 +145,46 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
 
     let generated = (offered * duration_s) as u64;
     let processed = (processed_rate * duration_s) as u64;
-    let emitted = match cfg.engine.pipeline {
-        // Keyed pipeline emits window aggregates, not 1:1 events.
-        PipelineKind::MemIntensive => {
-            let windows = (cfg.bench.duration_micros / cfg.engine.slide_micros.max(1)) as u64;
-            windows * cfg.workload.sensors.min(1024) as u64
+    // Keyed pipelines emit window aggregates, not 1:1 events.  For chain
+    // specs the emission model follows the chain's shape: keys narrowed by
+    // keyby, aggregates capped by topk.  (Filters are load-dependent and
+    // left at the 1:1 bound.)
+    let window_emitted = |slide: u64, keys: u64| -> u64 {
+        (cfg.bench.duration_micros / slide.max(1)) * keys
+    };
+    let emitted = match &cfg.engine.pipeline_spec {
+        Some(spec) if spec.has_window() => {
+            // Position-sensitive: only keyby ops *upstream* of the first
+            // window narrow the emitting key space, and that window's
+            // slide sets the emission cadence.
+            let mut keys = cfg.workload.sensors.min(1024) as u64;
+            let mut slide = cfg.engine.slide_micros;
+            let mut cap = u64::MAX;
+            let mut saw_window = false;
+            for op in &spec.ops {
+                match op {
+                    OpSpec::KeyBy { modulo } if !saw_window => {
+                        keys = keys.min(*modulo as u64)
+                    }
+                    OpSpec::Window { slide_micros, .. } if !saw_window => {
+                        if *slide_micros > 0 {
+                            slide = *slide_micros;
+                        }
+                        saw_window = true;
+                    }
+                    OpSpec::TopK { k } => cap = *k as u64,
+                    _ => {}
+                }
+            }
+            window_emitted(slide, keys.min(cap))
         }
-        _ => processed,
+        Some(_) => processed,
+        None => match cfg.engine.pipeline {
+            PipelineKind::MemIntensive => {
+                window_emitted(cfg.engine.slide_micros, cfg.workload.sensors.min(1024) as u64)
+            }
+            _ => processed,
+        },
     };
 
     // GC model forward run.
@@ -187,7 +252,7 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
 
     let summary = RunSummary {
         name: cfg.bench.name.clone(),
-        pipeline: cfg.engine.pipeline.name(),
+        pipeline: cfg.engine.pipeline_label(),
         framework: cfg.engine.framework.name(),
         parallelism: cfg.engine.parallelism,
         generated,
@@ -202,6 +267,8 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
         gc_young_time_micros: gc_young_time,
         energy_joules,
         parse_failures: 0,
+        // The analytic model carries no per-operator counters.
+        operators: Vec::new(),
         batches: processed / cfg.engine.batch_size.max(1) as u64,
     };
     (summary, store)
@@ -260,6 +327,59 @@ mod tests {
             })
             .collect();
         assert!(lat[2] > lat[0], "dispatch cost must grow: {lat:?}");
+    }
+
+    #[test]
+    fn chain_specs_get_a_composed_rate_and_emission_model() {
+        use crate::config::{CmpOp, PipelineSpec};
+        use crate::engine::AggKind;
+        let m = SimModel::default();
+        let mut c = cfg(50_000_000, 8);
+        c.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::Filter {
+                    cmp: CmpOp::Gt,
+                    value: 25.0,
+                },
+                OpSpec::KeyBy { modulo: 64 },
+                OpSpec::Window {
+                    agg: AggKind::Mean,
+                    window_micros: 2_000_000,
+                    slide_micros: 1_000_000,
+                },
+                OpSpec::TopK { k: 10 },
+                OpSpec::EmitAggregates,
+            ],
+        });
+        let (s, _) = run_sim(&c, &m);
+        assert!(s.pipeline.starts_with("chain["), "{}", s.pipeline);
+        // The chain's composed service time must cost more than the bare
+        // keyed pipeline it extends.
+        let mut mem = cfg(50_000_000, 8);
+        mem.engine.pipeline = PipelineKind::MemIntensive;
+        let (sm, _) = run_sim(&mem, &m);
+        assert!(s.processed_rate < sm.processed_rate);
+        // topk caps the emission model at k aggregates per window.
+        let windows = c.bench.duration_micros / 1_000_000;
+        assert!(s.emitted <= windows * 10, "emitted {}", s.emitted);
+        assert!(s.emitted > 0);
+        // A keyby placed *after* the window re-keys aggregates and must
+        // not narrow the modeled emitting key space.
+        let mut post = cfg(50_000_000, 8);
+        post.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::Window {
+                    agg: AggKind::Mean,
+                    window_micros: 2_000_000,
+                    slide_micros: 1_000_000,
+                },
+                OpSpec::KeyBy { modulo: 4 },
+                OpSpec::EmitAggregates,
+            ],
+        });
+        let (sp, _) = run_sim(&post, &m);
+        let keys = post.workload.sensors.min(1024) as u64;
+        assert_eq!(sp.emitted, (post.bench.duration_micros / 1_000_000) * keys);
     }
 
     #[test]

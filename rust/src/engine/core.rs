@@ -24,6 +24,9 @@ pub struct EngineReport {
     pub elapsed_micros: u64,
     /// Processed events/second across all tasks.
     pub rate_events: f64,
+    /// Per-operator stats merged across tasks by operator name, in chain
+    /// order of first appearance.
+    pub operators: Vec<(String, crate::pipelines::StepStats)>,
 }
 
 /// The stream engine: `parallelism` task slots over one consumer group.
@@ -153,6 +156,16 @@ impl Engine {
             report.events_out += task.events_out;
             report.parse_failures += task.parse_failures;
             report.batches += task.batches;
+            // Merge positionally: every task runs the same chain, so op i
+            // of task j is the same operator instance slot.  (Merging by
+            // name would collapse chains that repeat an operator, e.g.
+            // two filters.)
+            for (i, (name, stats)) in task.op_stats.iter().enumerate() {
+                match report.operators.get_mut(i) {
+                    Some((n, merged)) if n == name => merged.merge(stats),
+                    _ => report.operators.push((name.clone(), *stats)),
+                }
+            }
             report.tasks.push(task);
         }
         report.elapsed_micros = self.clock.now_micros().saturating_sub(start).max(1);
@@ -276,6 +289,48 @@ mod tests {
         assert!(report.events_out > 0, "no window aggregates emitted");
         let emits: u64 = report.tasks.iter().map(|t| t.step.window_emits).sum();
         assert!(emits >= 2);
+    }
+
+    #[test]
+    fn per_operator_stats_are_merged_across_tasks() {
+        let cfg = make_config(4, PipelineKind::CpuIntensive, Framework::Flink);
+        let (report, _, _) = run_engine(&cfg, 2000);
+        let names: Vec<&str> = report.operators.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["cpu_transform", "emit_events"]);
+        let cpu = &report.operators[0].1;
+        assert_eq!(cpu.events_in, 2000, "intake summed across tasks");
+        let alerts_from_tasks: u64 = report.tasks.iter().map(|t| t.step.alerts).sum();
+        assert_eq!(cpu.alerts, alerts_from_tasks);
+        assert_eq!(report.operators[1].1.events_out, 2000);
+    }
+
+    #[test]
+    fn repeated_operators_keep_distinct_stat_entries() {
+        use crate::config::{CmpOp, OpSpec, PipelineSpec};
+        let mut cfg = make_config(2, PipelineKind::PassThrough, Framework::Flink);
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::Filter {
+                    cmp: CmpOp::Ge,
+                    value: 0.0,
+                },
+                OpSpec::Filter {
+                    cmp: CmpOp::Lt,
+                    value: 50.0,
+                },
+                OpSpec::EmitEvents,
+            ],
+        });
+        let (report, _, _) = run_engine(&cfg, 500);
+        let names: Vec<&str> = report.operators.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["filter", "filter", "emit_events"],
+            "positional merge must not collapse repeated ops"
+        );
+        // Chain-position semantics: second filter's intake is the first
+        // filter's output.
+        assert_eq!(report.operators[0].1.events_out, report.operators[1].1.events_in);
     }
 
     #[test]

@@ -30,4 +30,4 @@ pub mod window;
 pub use batch::EventBatch;
 pub use core::{Engine, EngineReport};
 pub use personality::Personality;
-pub use window::{SlidingWindow, WindowEmit};
+pub use window::{AggKind, SlidingWindow, WindowEmit};

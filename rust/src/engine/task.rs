@@ -68,13 +68,15 @@ pub struct TaskHarness {
 }
 
 /// Per-task result.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct TaskReport {
     pub events_in: u64,
     pub events_out: u64,
     pub batches: u64,
     pub parse_failures: u64,
     pub step: StepStats,
+    /// Per-operator stats in chain order (one entry for monolithic steps).
+    pub op_stats: Vec<(String, StepStats)>,
 }
 
 /// Reusable per-task buffers, refilled every processed batch so the steady
@@ -170,6 +172,7 @@ impl TaskHarness {
                     self.emit(&mut tail, &mut report)?;
                 }
                 report.step = step.stats();
+                report.op_stats = step.operator_stats();
                 return Ok(report);
             }
         }

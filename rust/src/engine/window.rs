@@ -1,4 +1,4 @@
-//! Sliding-window pane state for the memory-intensive pipeline.
+//! Keyed sliding-window pane state with pluggable aggregators.
 //!
 //! The paper's memory-intensive pipeline keys the stream by sensor ID and
 //! maintains a sliding-window mean temperature per key as operator state
@@ -7,8 +7,65 @@
 //! accumulates `(sum, cnt)` per key — that accumulation is exactly what
 //! the `mem_pipeline_step` HLO artifact computes — and on every slide
 //! boundary the live panes merge into one window emission.
+//!
+//! The aggregation applied at merge time is pluggable ([`AggKind`]):
+//! mean, sum and count all reduce over the same `(sum, cnt)` pane state
+//! (and therefore stay HLO-compatible); min and max additionally track
+//! per-pane extrema and are native-only.
 
 use std::collections::VecDeque;
+
+/// Per-key aggregation function applied when a window closes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKind {
+    Mean,
+    Sum,
+    Min,
+    Max,
+    Count,
+}
+
+impl AggKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AggKind::Mean => "mean",
+            AggKind::Sum => "sum",
+            AggKind::Min => "min",
+            AggKind::Max => "max",
+            AggKind::Count => "count",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AggKind> {
+        match s {
+            "mean" | "avg" => Some(AggKind::Mean),
+            "sum" => Some(AggKind::Sum),
+            "min" => Some(AggKind::Min),
+            "max" => Some(AggKind::Max),
+            "count" | "cnt" => Some(AggKind::Count),
+            _ => None,
+        }
+    }
+
+    /// True when the aggregate reduces over the `(sum, cnt)` pane tensors
+    /// alone — the state shape the `mem_pipeline_step` HLO artifact
+    /// updates.  Min/max need per-pane extrema and run native-only.
+    pub fn uses_sum_cnt(self) -> bool {
+        !matches!(self, AggKind::Min | AggKind::Max)
+    }
+
+    /// JSON field name carrying the aggregate value in emitted records
+    /// (`avg` for mean keeps the paper pipeline's wire format stable).
+    pub fn field(self) -> &'static str {
+        match self {
+            AggKind::Mean => "avg",
+            AggKind::Sum => "sum",
+            AggKind::Min => "min",
+            AggKind::Max => "max",
+            AggKind::Count => "cnt",
+        }
+    }
+}
 
 /// One pane's keyed accumulator (the tensors the HLO kernel updates).
 #[derive(Clone, Debug)]
@@ -16,14 +73,19 @@ pub struct Pane {
     pub start_micros: u64,
     pub sum: Vec<f32>,
     pub cnt: Vec<f32>,
+    /// Per-key extrema; empty unless the window's aggregator needs them.
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
 }
 
 impl Pane {
-    fn new(start_micros: u64, k: usize) -> Self {
+    fn new(start_micros: u64, k: usize, extrema: bool) -> Self {
         Self {
             start_micros,
             sum: vec![0.0; k],
             cnt: vec![0.0; k],
+            min: if extrema { vec![f32::INFINITY; k] } else { Vec::new() },
+            max: if extrema { vec![f32::NEG_INFINITY; k] } else { Vec::new() },
         }
     }
 
@@ -37,7 +99,8 @@ impl Pane {
 pub struct WindowEmit {
     /// Window end time (the slide boundary that triggered the emission).
     pub end_micros: u64,
-    /// `(key, mean, count)` for every key observed in the window.
+    /// `(key, value, count)` for every key observed in the window; the
+    /// value is the window's [`AggKind`] applied to that key's events.
     pub aggregates: Vec<(u32, f32, u64)>,
 }
 
@@ -46,6 +109,7 @@ pub struct SlidingWindow {
     k: usize,
     window_micros: u64,
     slide_micros: u64,
+    agg: AggKind,
     /// Closed panes still inside the window, oldest first.
     panes: VecDeque<Pane>,
     /// The open pane the kernel currently accumulates into.
@@ -53,20 +117,38 @@ pub struct SlidingWindow {
 }
 
 impl SlidingWindow {
+    /// A mean-aggregating window (the paper's memory-intensive pipeline).
     pub fn new(k: usize, window_micros: u64, slide_micros: u64, start_micros: u64) -> Self {
+        Self::with_agg(k, window_micros, slide_micros, start_micros, AggKind::Mean)
+    }
+
+    /// A window with an explicit aggregator.
+    pub fn with_agg(
+        k: usize,
+        window_micros: u64,
+        slide_micros: u64,
+        start_micros: u64,
+        agg: AggKind,
+    ) -> Self {
         assert!(slide_micros > 0 && window_micros >= slide_micros);
         let aligned = start_micros - start_micros % slide_micros;
+        let extrema = !agg.uses_sum_cnt();
         Self {
             k,
             window_micros,
             slide_micros,
+            agg,
             panes: VecDeque::new(),
-            current: Pane::new(aligned, k),
+            current: Pane::new(aligned, k, extrema),
         }
     }
 
     pub fn key_count(&self) -> usize {
         self.k
+    }
+
+    pub fn agg(&self) -> AggKind {
+        self.agg
     }
 
     /// The open pane (the HLO kernel reads its state in and writes the
@@ -76,30 +158,46 @@ impl SlidingWindow {
     }
 
     /// Write the kernel's updated `(sum, cnt)` back into the open pane.
+    /// Only valid for `sum/cnt` aggregators (mean, sum, count) — the HLO
+    /// state carries no extrema.
     pub fn store_state(&mut self, sum: Vec<f32>, cnt: Vec<f32>) {
+        debug_assert!(self.agg.uses_sum_cnt(), "HLO state path needs a sum/cnt aggregator");
         debug_assert_eq!(sum.len(), self.k);
         debug_assert_eq!(cnt.len(), self.k);
         self.current.sum = sum;
         self.current.cnt = cnt;
     }
 
-    /// Native accumulation path (ablation / no-HLO mode).
-    pub fn accumulate_native(&mut self, ids: &[u32], temps: &[f32]) {
-        for (&id, &t) in ids.iter().zip(temps) {
-            if (id as usize) < self.k {
-                self.current.sum[id as usize] += t;
-                self.current.cnt[id as usize] += 1.0;
+    /// Native accumulation path (ablation / no-HLO mode / extrema).
+    pub fn accumulate_native(&mut self, ids: &[u32], vals: &[f32]) {
+        let extrema = !self.current.min.is_empty();
+        for (&id, &v) in ids.iter().zip(vals) {
+            let i = id as usize;
+            if i < self.k {
+                self.current.sum[i] += v;
+                self.current.cnt[i] += 1.0;
+                if extrema {
+                    if v < self.current.min[i] {
+                        self.current.min[i] = v;
+                    }
+                    if v > self.current.max[i] {
+                        self.current.max[i] = v;
+                    }
+                }
             }
         }
     }
 
     /// Advance processing time to `now`; emits one window aggregate per
-    /// crossed slide boundary (usually 0 or 1).
+    /// crossed slide boundary (usually 0 or 1).  A window with no events
+    /// still emits — with an empty `aggregates` list.
     pub fn advance(&mut self, now_micros: u64) -> Vec<WindowEmit> {
         let mut out = Vec::new();
         while now_micros >= self.current.start_micros + self.slide_micros {
             let boundary = self.current.start_micros + self.slide_micros;
-            let closed = std::mem::replace(&mut self.current, Pane::new(boundary, self.k));
+            let extrema = !self.agg.uses_sum_cnt();
+            let closed =
+                std::mem::replace(&mut self.current, Pane::new(boundary, self.k, extrema));
             self.panes.push_back(closed);
             // Retain panes with start >= boundary - window (the window
             // ending at `boundary` covers [boundary - W, boundary)).
@@ -119,15 +217,40 @@ impl SlidingWindow {
     fn merge(&self, end_micros: u64) -> WindowEmit {
         let mut sum = vec![0.0f64; self.k];
         let mut cnt = vec![0.0f64; self.k];
+        let mut min = vec![f32::INFINITY; if self.agg == AggKind::Min { self.k } else { 0 }];
+        let mut max = vec![f32::NEG_INFINITY; if self.agg == AggKind::Max { self.k } else { 0 }];
         for pane in &self.panes {
             for k in 0..self.k {
                 sum[k] += pane.sum[k] as f64;
                 cnt[k] += pane.cnt[k] as f64;
             }
+            if self.agg == AggKind::Min {
+                for k in 0..self.k {
+                    if pane.min[k] < min[k] {
+                        min[k] = pane.min[k];
+                    }
+                }
+            }
+            if self.agg == AggKind::Max {
+                for k in 0..self.k {
+                    if pane.max[k] > max[k] {
+                        max[k] = pane.max[k];
+                    }
+                }
+            }
         }
         let aggregates = (0..self.k)
             .filter(|&k| cnt[k] > 0.0)
-            .map(|k| (k as u32, (sum[k] / cnt[k]) as f32, cnt[k] as u64))
+            .map(|k| {
+                let value = match self.agg {
+                    AggKind::Mean => (sum[k] / cnt[k]) as f32,
+                    AggKind::Sum => sum[k] as f32,
+                    AggKind::Count => cnt[k] as f32,
+                    AggKind::Min => min[k],
+                    AggKind::Max => max[k],
+                };
+                (k as u32, value, cnt[k] as u64)
+            })
             .collect();
         WindowEmit {
             end_micros,
@@ -153,7 +276,8 @@ impl SlidingWindow {
 
     /// Approximate state footprint in bytes (keyed state metric).
     pub fn state_bytes(&self) -> u64 {
-        ((self.panes.len() + 1) * self.k * 8) as u64
+        let per_key = if self.agg.uses_sum_cnt() { 8 } else { 16 };
+        ((self.panes.len() + 1) * self.k * per_key) as u64
     }
 }
 
@@ -262,5 +386,101 @@ mod tests {
         let s0 = sw.state_bytes();
         sw.advance(2_000_000);
         assert!(sw.state_bytes() > s0);
+    }
+
+    // --- satellite: edge cases + pluggable aggregators -------------------
+
+    #[test]
+    fn non_aligned_start_event_lands_in_the_aligned_pane() {
+        // start 3.5s aligns down to pane [2s, 4s); an event accumulated
+        // before the first boundary must emit in the window ending at 4s.
+        let mut sw = SlidingWindow::new(4, 4_000_000, 2_000_000, 3_500_000);
+        sw.accumulate_native(&[2], &[7.0]);
+        assert!(sw.advance(3_999_999).is_empty(), "boundary is 4s, not 3.5s+slide");
+        let e = sw.advance(4_000_000);
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].end_micros, 4_000_000);
+        assert_eq!(e[0].aggregates, vec![(2, 7.0, 1)]);
+    }
+
+    #[test]
+    fn slide_equal_to_window_is_tumbling() {
+        // slide == window → one pane per window; events never carry over.
+        let mut sw = SlidingWindow::new(4, 2_000_000, 2_000_000, 0);
+        sw.accumulate_native(&[1], &[10.0]);
+        let e = sw.advance(2_000_000);
+        assert_eq!(e[0].aggregates, vec![(1, 10.0, 1)]);
+        let e = sw.advance(4_000_000);
+        assert!(
+            e[0].aggregates.is_empty(),
+            "tumbling window must not re-emit the previous window's events"
+        );
+        assert!(sw.live_panes() <= 1);
+    }
+
+    #[test]
+    fn empty_windows_emit_zero_aggregates() {
+        let mut sw = w();
+        let emits = sw.advance(6_000_000); // three boundaries, no data at all
+        assert_eq!(emits.len(), 3);
+        for e in &emits {
+            assert!(e.aggregates.is_empty(), "no data → no aggregates at {}", e.end_micros);
+        }
+        // flush() after pure-empty advance is also a no-op.
+        assert!(sw.flush().is_empty());
+    }
+
+    #[test]
+    fn sum_min_max_count_aggregators() {
+        let cases: [(AggKind, f32); 4] = [
+            (AggKind::Sum, 36.0),
+            (AggKind::Min, 2.0),
+            (AggKind::Max, 30.0),
+            (AggKind::Count, 3.0),
+        ];
+        for (agg, expect) in cases {
+            let mut sw = SlidingWindow::with_agg(4, 4_000_000, 2_000_000, 0, agg);
+            sw.accumulate_native(&[1, 1, 1], &[4.0, 2.0, 30.0]);
+            let e = sw.advance(2_000_000);
+            assert_eq!(e[0].aggregates, vec![(1, expect, 3)], "{agg:?}");
+        }
+    }
+
+    #[test]
+    fn extrema_survive_pane_merges() {
+        // Min lives in pane 0, max in pane 1; the merged window must see both.
+        let mut min_w = SlidingWindow::with_agg(4, 4_000_000, 2_000_000, 0, AggKind::Min);
+        let mut max_w = SlidingWindow::with_agg(4, 4_000_000, 2_000_000, 0, AggKind::Max);
+        for sw in [&mut min_w, &mut max_w] {
+            sw.accumulate_native(&[0], &[-5.0]);
+            sw.advance(2_000_000);
+            sw.accumulate_native(&[0], &[50.0]);
+        }
+        let e = min_w.advance(4_000_000);
+        assert_eq!(e[0].aggregates, vec![(0, -5.0, 2)]);
+        let e = max_w.advance(4_000_000);
+        assert_eq!(e[0].aggregates, vec![(0, 50.0, 2)]);
+    }
+
+    #[test]
+    fn agg_names_roundtrip() {
+        for agg in [AggKind::Mean, AggKind::Sum, AggKind::Min, AggKind::Max, AggKind::Count] {
+            assert_eq!(AggKind::from_name(agg.name()), Some(agg));
+        }
+        assert_eq!(AggKind::from_name("avg"), Some(AggKind::Mean));
+        assert_eq!(AggKind::from_name("median"), None);
+        assert_eq!(AggKind::Mean.field(), "avg");
+    }
+
+    #[test]
+    fn store_state_roundtrip_for_sum_aggregator() {
+        let mut sw = SlidingWindow::with_agg(4, 2_000_000, 1_000_000, 0, AggKind::Sum);
+        let pane = sw.current_pane();
+        let (mut sum, mut cnt) = (pane.sum.clone(), pane.cnt.clone());
+        sum[3] = 12.5;
+        cnt[3] = 5.0;
+        sw.store_state(sum, cnt);
+        let e = sw.advance(1_000_000);
+        assert_eq!(e[0].aggregates, vec![(3, 12.5, 5)]);
     }
 }

@@ -109,7 +109,7 @@ where
         let (mst_target_rate, mst_processed_rate) = best_ok.unwrap_or((0, 0.0));
         Ok(ExperimentReport {
             name: self.base.bench.name.clone(),
-            pipeline: self.base.engine.pipeline.name().to_string(),
+            pipeline: self.base.engine.pipeline_label(),
             framework: self.base.engine.framework.name().to_string(),
             parallelism: self.base.engine.parallelism,
             config_fingerprint: config_fingerprint(&self.base),
@@ -160,6 +160,7 @@ where
             elapsed_micros: summary.elapsed_micros,
             sustainable: verdict.sustainable,
             reasons: verdict.reasons,
+            operators: summary.operators.clone(),
         })
     }
 }
@@ -189,7 +190,7 @@ mod tests {
             let p50 = (500.0 / (1.0 - rho)) as u64;
             let summary = RunSummary {
                 name: cfg.bench.name.clone(),
-                pipeline: cfg.engine.pipeline.name(),
+                pipeline: cfg.engine.pipeline_label(),
                 framework: "flink",
                 parallelism: cfg.engine.parallelism,
                 generated,
@@ -216,6 +217,7 @@ mod tests {
                 energy_joules: 0.0,
                 parse_failures: 0,
                 batches: 1,
+                operators: Vec::new(),
             };
             Ok((summary, Arc::new(MetricStore::new())))
         }

@@ -9,6 +9,7 @@
 //! [`crate::postprocess::markdown_table`].
 
 use crate::config::BenchConfig;
+use crate::pipelines::StepStats;
 use crate::postprocess::markdown_table;
 use crate::util::json::Json;
 use crate::util::units::{fmt_count, fmt_micros};
@@ -61,6 +62,9 @@ pub struct IterationRecord {
     pub sustainable: bool,
     /// One entry per failed sustainability check; empty when sustainable.
     pub reasons: Vec<String>,
+    /// Per-operator stats merged across engine tasks for this probe, in
+    /// chain order (empty for sim probes and pre-chain reports).
+    pub operators: Vec<(String, StepStats)>,
 }
 
 /// The complete sweep result.
@@ -115,6 +119,19 @@ impl IterationRecord {
             "reasons",
             Json::Arr(self.reasons.iter().map(|r| Json::Str(r.clone())).collect()),
         );
+        j.set(
+            "operators",
+            Json::Arr(
+                self.operators
+                    .iter()
+                    .map(|(name, s)| {
+                        let mut o = s.to_json();
+                        o.set("op", Json::Str(name.clone()));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
         j
     }
 
@@ -160,6 +177,20 @@ impl IterationRecord {
                 .map(|a| {
                     a.iter()
                         .filter_map(|r| r.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            // Missing in pre-chain reports → empty (back-compat).
+            operators: j
+                .get("operators")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|o| {
+                            o.get("op")
+                                .and_then(|v| v.as_str())
+                                .map(|name| (name.to_string(), StepStats::from_json(o)))
+                        })
                         .collect()
                 })
                 .unwrap_or_default(),
@@ -357,6 +388,27 @@ mod tests {
                     elapsed_micros: 2_000_000,
                     sustainable: true,
                     reasons: vec![],
+                    operators: vec![
+                        (
+                            "cpu_transform".into(),
+                            StepStats {
+                                events_in: 199_400,
+                                events_out: 199_400,
+                                alerts: 1_200,
+                                hlo_calls: 400,
+                                window_emits: 0,
+                                parse_failures: 0,
+                            },
+                        ),
+                        (
+                            "emit_events".into(),
+                            StepStats {
+                                events_in: 199_400,
+                                events_out: 199_400,
+                                ..StepStats::default()
+                            },
+                        ),
+                    ],
                 },
                 IterationRecord {
                     index: 1,
@@ -372,6 +424,7 @@ mod tests {
                     elapsed_micros: 2_500_000,
                     sustainable: false,
                     reasons: vec!["fell behind: processed 120000 ev/s < 95% of offered".into()],
+                    operators: vec![],
                 },
             ],
             mst_target_rate: 100_000,
@@ -425,5 +478,40 @@ mod tests {
     fn malformed_report_is_rejected() {
         let j = json::parse("{\"name\": \"x\"}").unwrap();
         assert!(ExperimentReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn pre_chain_reports_without_operator_stats_still_parse() {
+        let report = sample_report();
+        let mut j = report.to_json();
+        // Simulate a report written before the operator-chain redesign.
+        if let Json::Arr(iters) = j.get("iterations").cloned().unwrap() {
+            let stripped: Vec<Json> = iters
+                .into_iter()
+                .map(|mut it| {
+                    if let Json::Obj(m) = &mut it {
+                        m.remove("operators");
+                    }
+                    it
+                })
+                .collect();
+            j.set("iterations", Json::Arr(stripped));
+        }
+        let back = ExperimentReport::from_json(&j).unwrap();
+        assert!(back.iterations.iter().all(|i| i.operators.is_empty()));
+        assert_eq!(back.mst_target_rate, report.mst_target_rate);
+    }
+
+    #[test]
+    fn operator_stats_roundtrip_in_order() {
+        let report = sample_report();
+        let back =
+            ExperimentReport::from_json(&json::parse(&report.to_json().to_pretty()).unwrap())
+                .unwrap();
+        let ops = &back.iterations[0].operators;
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[0].0, "cpu_transform");
+        assert_eq!(ops[0].1.hlo_calls, 400);
+        assert_eq!(ops[1].0, "emit_events");
     }
 }

@@ -166,7 +166,7 @@ mod tests {
         let processed = ((processed_rate / offered.max(1.0)) * generated as f64) as u64;
         RunSummary {
             name: format!("probe-{target}"),
-            pipeline: "passthrough",
+            pipeline: "passthrough".into(),
             framework: "flink",
             parallelism: 4,
             generated,
@@ -193,6 +193,7 @@ mod tests {
             energy_joules: 0.0,
             parse_failures: 0,
             batches: 1,
+            operators: Vec::new(),
         }
     }
 

@@ -5,8 +5,9 @@
 //!
 //! * **L3 (this crate)** — the benchmark suite itself: workload generator
 //!   ([`wgen`]), message broker ([`broker`]), stream-processing engine
-//!   ([`engine`]) with three framework personalities, the three paper
-//!   pipelines ([`pipelines`]), metric collection ([`metrics`], [`jvm`],
+//!   ([`engine`]) with three framework personalities, composable
+//!   operator-chain pipelines ([`pipelines`]) covering the three paper
+//!   pipelines as canonical chains, metric collection ([`metrics`], [`jvm`],
 //!   [`sysmon`]), SLURM integration ([`slurm`]), workflow automation
 //!   ([`workflow`]), post-processing ([`postprocess`]), the baseline
 //!   benchmark models ([`baselines`]), the spot-run driver

@@ -5,6 +5,10 @@
 //! is forwarded to the egestion broker.  The per-batch math is the
 //! `cpu_pipeline_step` HLO artifact (L1 Pallas `sensor_transform` kernel)
 //! executed via PJRT, with a native Rust path as the ablation baseline.
+//!
+//! Since the operator-chain redesign the production path is the canonical
+//! `[cpu_transform, emit_events]` chain; this struct is the reference
+//! implementation the equivalence suite compares against.
 
 use super::{Compute, PipelineStep, StepStats};
 use crate::broker::Record;
@@ -79,7 +83,7 @@ impl CpuIntensive {
 }
 
 impl PipelineStep for CpuIntensive {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "cpu"
     }
 

@@ -6,6 +6,14 @@
 //! per batch — XLA fuses the elementwise stage into the scatter's operand.
 //! The ablation bench compares one fused dispatch against two separate
 //! ones (`cargo bench --bench hotpath_micro`).
+//!
+//! Since the operator-chain redesign the production path is the canonical
+//! `[cpu_transform, emit_events, window(mean), emit_aggregates]` chain,
+//! which trades the single fused HLO dispatch for composability (two
+//! dispatches on the HLO path; the native paths are byte-identical).  This
+//! struct keeps the genuinely fused single-dispatch kernel for the
+//! ablation and is the reference implementation the equivalence suite
+//! compares against.
 
 use super::{Compute, PipelineStep, StepStats, HLO_KEYS};
 use crate::broker::Record;
@@ -90,7 +98,7 @@ impl Fused {
 }
 
 impl PipelineStep for Fused {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "fused"
     }
 

@@ -6,6 +6,10 @@
 //! is the `mem_pipeline_step` HLO artifact (L1 Pallas `keyed_window`
 //! kernel: masked-matmul scatter into VMEM-resident accumulators), with a
 //! native Rust path as the ablation baseline.
+//!
+//! Since the operator-chain redesign the production path is the canonical
+//! `[window(mean), emit_aggregates]` chain; this struct is the reference
+//! implementation the equivalence suite compares against.
 
 use super::{Compute, PipelineStep, StepStats, HLO_KEYS};
 use crate::broker::Record;
@@ -122,7 +126,7 @@ impl MemIntensive {
 }
 
 impl PipelineStep for MemIntensive {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "mem"
     }
 

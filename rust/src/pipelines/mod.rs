@@ -1,29 +1,46 @@
-//! The paper's processing pipelines (Sec. 3.3): pass-through,
-//! CPU-intensive, memory-intensive — plus the fused extension.
+//! Processing pipelines: the composable operator-chain API plus the
+//! paper's reference pipelines (Sec. 3.3).
 //!
-//! Every pipeline implements [`PipelineStep`]; the compute-heavy ones run
-//! their per-batch math either through the AOT HLO artifacts
-//! ([`Compute::Hlo`], the default — L1/L2 of the stack) or through native
-//! Rust reference ops ([`Compute::Native`], the ablation baseline and the
-//! fallback when artifacts are absent).
+//! The engine-facing contract is [`PipelineStep`]; since the operator-chain
+//! redesign its production implementation is [`Chain`] — a sequence of
+//! [`Operator`]s ([`operator`]) compiled from a declarative
+//! [`PipelineSpec`](crate::config::PipelineSpec) by [`StepFactory`].  The
+//! four paper pipelines (pass-through, CPU-, memory-intensive, fused) are
+//! canonical chains; the monolithic structs ([`PassThrough`],
+//! [`CpuIntensive`], [`MemIntensive`], [`Fused`]) remain as the reference
+//! implementations the equivalence suite (`rust/tests/chain_equivalence.rs`)
+//! and the fused-dispatch ablation compare against.
 //!
-//! Pipeline steps are **thread-confined** (they own a PJRT [`Runtime`])
-//! and are created inside each engine task thread via [`StepFactory`].
+//! Compute-heavy operators run their per-batch math either through the AOT
+//! HLO artifacts ([`Compute::Hlo`] / [`operator::OpCompute::Hlo`], the
+//! default — L1/L2 of the stack) or through native Rust reference ops (the
+//! ablation baseline and the fallback when artifacts are absent).
+//!
+//! Pipeline steps are **thread-confined** (they may own a PJRT
+//! [`Runtime`]) and are created inside each engine task thread via
+//! [`StepFactory`]; user operators plug in through [`OperatorRegistry`].
 
 pub mod cpu;
 pub mod fused;
 pub mod mem;
+pub mod operator;
 pub mod passthrough;
+pub mod registry;
 
 pub use cpu::CpuIntensive;
 pub use fused::Fused;
 pub use mem::MemIntensive;
+pub use operator::{Chain, OpCompute, Operator, RowBatch};
 pub use passthrough::PassThrough;
+pub use registry::{OpContext, OperatorBuilder, OperatorRegistry};
+
+use std::sync::Arc;
 
 use crate::broker::Record;
-use crate::config::{BenchConfig, PipelineKind};
+use crate::config::BenchConfig;
 use crate::engine::EventBatch;
 use crate::runtime::{Runtime, RuntimeFactory};
+use crate::util::json::Json;
 
 /// Cumulative per-step statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -36,9 +53,48 @@ pub struct StepStats {
     pub parse_failures: u64,
 }
 
+impl StepStats {
+    /// Fold `other` into `self` (aggregating one operator's stats across
+    /// engine tasks for the run report).
+    pub fn merge(&mut self, other: &StepStats) {
+        self.events_in += other.events_in;
+        self.events_out += other.events_out;
+        self.alerts += other.alerts;
+        self.hlo_calls += other.hlo_calls;
+        self.window_emits += other.window_emits;
+        self.parse_failures += other.parse_failures;
+    }
+
+    /// JSON object for results/report documents.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("events_in", Json::Int(self.events_in as i64));
+        j.set("events_out", Json::Int(self.events_out as i64));
+        j.set("alerts", Json::Int(self.alerts as i64));
+        j.set("hlo_calls", Json::Int(self.hlo_calls as i64));
+        j.set("window_emits", Json::Int(self.window_emits as i64));
+        j.set("parse_failures", Json::Int(self.parse_failures as i64));
+        j
+    }
+
+    /// Parse back what [`StepStats::to_json`] wrote (missing fields read
+    /// as 0, so older report documents stay loadable).
+    pub fn from_json(j: &Json) -> StepStats {
+        let int = |key: &str| j.get(key).and_then(|v| v.as_i64()).unwrap_or(0).max(0) as u64;
+        StepStats {
+            events_in: int("events_in"),
+            events_out: int("events_out"),
+            alerts: int("alerts"),
+            hlo_calls: int("hlo_calls"),
+            window_emits: int("window_emits"),
+            parse_failures: int("parse_failures"),
+        }
+    }
+}
+
 /// One pipeline instance, owned by one engine task thread.
 pub trait PipelineStep {
-    fn name(&self) -> &'static str;
+    fn name(&self) -> &str;
 
     /// Whether the task must parse records into an [`EventBatch`]
     /// (pass-through forwards raw payloads and skips parsing).
@@ -67,9 +123,15 @@ pub trait PipelineStep {
     }
 
     fn stats(&self) -> StepStats;
+
+    /// Per-operator stats for the run report; monolithic steps report one
+    /// entry, [`Chain`] one per operator in chain order.
+    fn operator_stats(&self) -> Vec<(String, StepStats)> {
+        vec![(self.name().to_string(), self.stats())]
+    }
 }
 
-/// Compute backend for the heavy pipelines.
+/// Compute backend for the monolithic reference pipelines.
 pub enum Compute {
     /// AOT HLO artifacts executed via PJRT (the three-layer path).
     Hlo(Runtime),
@@ -86,17 +148,26 @@ impl Compute {
     }
 }
 
-/// Builder signature for user-defined pipelines (paper Sec. 3.3: "users
-/// can also define custom processing logic … with minimal modifications").
+/// Builder signature for fully custom pipeline steps — the pre-redesign
+/// extensibility hook, kept for steps that want to bypass the operator
+/// chain entirely.  Prefer [`OperatorRegistry`] + a `pipeline: {ops: ...}`
+/// spec for composable custom logic.
 /// Called once per engine task thread with the task's start time.
 pub type CustomStepBuilder =
     Box<dyn Fn(u64) -> Result<Box<dyn PipelineStep>, String> + Send + Sync>;
 
 /// Sendable factory: builds a fresh thread-confined step per engine task.
+///
+/// Since the operator-chain redesign this is a thin spec→chain compiler:
+/// the configured [`PipelineSpec`](crate::config::PipelineSpec) (explicit
+/// `pipeline: {ops: [...]}`, or the canonical chain of the configured
+/// [`PipelineKind`](crate::config::PipelineKind)) is compiled into a
+/// [`Chain`] on each task thread.
 pub struct StepFactory {
     config: BenchConfig,
     runtime_factory: Option<RuntimeFactory>,
     custom: Option<CustomStepBuilder>,
+    registry: Option<Arc<OperatorRegistry>>,
 }
 
 impl StepFactory {
@@ -111,35 +182,30 @@ impl StepFactory {
                 None
             },
             custom: None,
+            registry: None,
         }
     }
 
+    /// A factory whose chains can resolve user operators by name — the
+    /// suite's extensibility hook (see `examples/custom_pipeline.rs`).
+    pub fn with_registry(
+        config: &BenchConfig,
+        runtime_factory: Option<RuntimeFactory>,
+        registry: Arc<OperatorRegistry>,
+    ) -> Self {
+        let mut f = Self::new(config, runtime_factory);
+        f.registry = Some(registry);
+        f
+    }
+
     /// A factory that builds user-defined pipeline steps instead of the
-    /// configured kind — the suite's extensibility hook (see
-    /// `examples/custom_pipeline.rs`).
+    /// configured kind, bypassing the chain compiler entirely.
     pub fn custom(config: &BenchConfig, builder: CustomStepBuilder) -> Self {
         Self {
             config: config.clone(),
             runtime_factory: None,
             custom: Some(builder),
-        }
-    }
-
-    fn compute(&self, program: &str) -> Result<Compute, String> {
-        match &self.runtime_factory {
-            Some(f) if f.available() => {
-                let rt = f.create()?;
-                // Compile every batch-size variant up front: PJRT
-                // compilation must never land on the first hot batch
-                // (it would poison the latency tail).
-                rt.warm(program)?;
-                Ok(Compute::Hlo(rt))
-            }
-            Some(f) => Err(format!(
-                "artifacts not found in {} — run `make artifacts`",
-                f.dir().display()
-            )),
-            None => Ok(Compute::Native),
+            registry: None,
         }
     }
 
@@ -148,31 +214,17 @@ impl StepFactory {
         if let Some(builder) = &self.custom {
             return builder(start_micros);
         }
-        let c = &self.config;
-        Ok(match c.engine.pipeline {
-            PipelineKind::PassThrough => Box::new(PassThrough::new()),
-            PipelineKind::CpuIntensive => Box::new(CpuIntensive::new(
-                self.compute("cpu_pipeline_step")?,
-                c.engine.threshold_f,
-                c.workload.event_bytes,
-            )),
-            PipelineKind::MemIntensive => Box::new(MemIntensive::new(
-                self.compute("mem_pipeline_step")?,
-                c.workload.sensors as usize,
-                c.engine.window_micros,
-                c.engine.slide_micros,
-                start_micros,
-            )),
-            PipelineKind::Fused => Box::new(Fused::new(
-                self.compute("fused_pipeline_step")?,
-                c.engine.threshold_f,
-                c.workload.event_bytes,
-                c.workload.sensors as usize,
-                c.engine.window_micros,
-                c.engine.slide_micros,
-                start_micros,
-            )),
-        })
+        let spec = self.config.engine.effective_spec();
+        let label = self.config.engine.pipeline_label();
+        let chain = Chain::compile(
+            &self.config,
+            &spec,
+            label,
+            self.runtime_factory.as_ref(),
+            self.registry.as_deref(),
+            start_micros,
+        )?;
+        Ok(Box::new(chain))
     }
 }
 
@@ -184,6 +236,7 @@ pub const HLO_KEYS: usize = 1024;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::PipelineKind;
 
     #[test]
     fn factory_builds_each_kind_native() {
@@ -209,5 +262,62 @@ mod tests {
         let f = StepFactory::new(&cfg, Some(RuntimeFactory::new("/nonexistent")));
         let err = f.create(0).err().unwrap();
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn passthrough_never_needs_artifacts() {
+        let mut cfg = BenchConfig::default();
+        cfg.engine.pipeline = PipelineKind::PassThrough;
+        let f = StepFactory::new(&cfg, Some(RuntimeFactory::new("/nonexistent")));
+        let step = f.create(0).unwrap();
+        assert!(!step.needs_parse());
+    }
+
+    #[test]
+    fn factory_compiles_explicit_specs_into_chains() {
+        use crate::config::{CmpOp, OpSpec, PipelineSpec};
+        let mut cfg = BenchConfig::default();
+        cfg.engine.use_hlo = false;
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::Filter {
+                    cmp: CmpOp::Gt,
+                    value: 0.0,
+                },
+                OpSpec::EmitEvents,
+            ],
+        });
+        let f = StepFactory::new(&cfg, None);
+        let step = f.create(0).unwrap();
+        assert_eq!(step.name(), "chain[filter→emit_events]");
+        assert_eq!(step.operator_stats().len(), 2);
+    }
+
+    #[test]
+    fn step_stats_merge_and_json_roundtrip() {
+        let mut a = StepStats {
+            events_in: 10,
+            events_out: 8,
+            alerts: 2,
+            hlo_calls: 1,
+            window_emits: 0,
+            parse_failures: 1,
+        };
+        let b = StepStats {
+            events_in: 5,
+            events_out: 5,
+            alerts: 1,
+            hlo_calls: 0,
+            window_emits: 3,
+            parse_failures: 0,
+        };
+        a.merge(&b);
+        assert_eq!(a.events_in, 15);
+        assert_eq!(a.events_out, 13);
+        assert_eq!(a.alerts, 3);
+        assert_eq!(a.window_emits, 3);
+        assert_eq!(StepStats::from_json(&a.to_json()), a);
+        // Missing fields read as zero (older documents).
+        assert_eq!(StepStats::from_json(&Json::obj()), StepStats::default());
     }
 }

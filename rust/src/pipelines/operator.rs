@@ -1,0 +1,1200 @@
+//! Composable operator-chain pipeline API.
+//!
+//! The paper promises "complete customization options" for processing
+//! logic (Sec. 3.3); the operator chain is how this suite delivers them.
+//! A pipeline is a sequence of [`Operator`]s fused into one [`Chain`] per
+//! engine-task thread.  Between operators flows a [`RowBatch`] — a
+//! structure-of-arrays working set of `(key, value, timestamp, count)`
+//! rows derived from the parsed [`EventBatch`] — while serialized outputs
+//! accumulate in the task's egestion buffer.  Each operator keeps its own
+//! [`StepStats`], preserved per-operator through the run report.
+//!
+//! The four paper pipelines are canonical chains
+//! ([`crate::config::PipelineKind::canonical_spec`]) compiled by
+//! [`StepFactory`](super::StepFactory); their output is byte-identical to
+//! the legacy monolithic implementations (`rust/tests/chain_equivalence.rs`
+//! proves it).  User operators plug in through the
+//! [`OperatorRegistry`](super::OperatorRegistry) and the `pipeline:
+//! {ops: [...]}` config spec.
+
+use std::rc::Rc;
+
+use super::{PipelineStep, StepStats, HLO_KEYS};
+use crate::broker::Record;
+use crate::config::{BenchConfig, CmpOp, OpSpec, PipelineSpec};
+use crate::engine::window::AggKind;
+use crate::engine::{EventBatch, SlidingWindow, WindowEmit};
+use crate::runtime::{Input, Runtime, RuntimeFactory};
+use crate::wgen::{EventFormat, SensorEvent};
+
+/// The working set flowing between chained operators: one row per event
+/// (count = 1, timestamp = generation time) or per window aggregate
+/// (count = events aggregated, timestamp = window end).
+#[derive(Clone, Debug, Default)]
+pub struct RowBatch {
+    pub keys: Vec<u32>,
+    pub vals: Vec<f32>,
+    pub ts: Vec<u64>,
+    pub counts: Vec<u64>,
+}
+
+impl RowBatch {
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.keys.clear();
+        self.vals.clear();
+        self.ts.clear();
+        self.counts.clear();
+    }
+
+    pub fn push(&mut self, key: u32, val: f32, ts: u64, count: u64) {
+        self.keys.push(key);
+        self.vals.push(val);
+        self.ts.push(ts);
+        self.counts.push(count);
+    }
+
+    /// Reload from a parsed event batch (clears first).
+    pub fn load_events(&mut self, batch: &EventBatch) {
+        self.clear();
+        self.keys.extend_from_slice(&batch.ids);
+        self.vals.extend_from_slice(&batch.temps);
+        self.ts.extend_from_slice(&batch.gen_ts);
+        self.counts.resize(batch.len(), 1);
+    }
+
+    /// In-place compaction keeping rows where `keep(key, val)` is true.
+    pub fn retain(&mut self, mut keep: impl FnMut(u32, f32) -> bool) {
+        let mut w = 0;
+        for r in 0..self.len() {
+            if keep(self.keys[r], self.vals[r]) {
+                if w != r {
+                    self.keys[w] = self.keys[r];
+                    self.vals[w] = self.vals[r];
+                    self.ts[w] = self.ts[r];
+                    self.counts[w] = self.counts[r];
+                }
+                w += 1;
+            }
+        }
+        self.truncate(w);
+    }
+
+    /// In-place gather of the rows at `keep` (strictly ascending indices).
+    pub fn select(&mut self, keep: &[usize]) {
+        for (w, &r) in keep.iter().enumerate() {
+            debug_assert!(w <= r, "select indices must be ascending");
+            self.keys[w] = self.keys[r];
+            self.vals[w] = self.vals[r];
+            self.ts[w] = self.ts[r];
+            self.counts[w] = self.counts[r];
+        }
+        self.truncate(keep.len());
+    }
+
+    fn truncate(&mut self, n: usize) {
+        self.keys.truncate(n);
+        self.vals.truncate(n);
+        self.ts.truncate(n);
+        self.counts.truncate(n);
+    }
+}
+
+/// One operator in a chain, thread-confined like the chain itself.
+///
+/// `apply` transforms the rows in place (filters compact, maps rewrite
+/// values, windows consume events and emit aggregates) and may push
+/// serialized records into the egestion buffer.  `finish` is the
+/// end-of-stream hook: the default forwards pending upstream rows through
+/// `apply`, stateful operators additionally flush their state so the
+/// emissions flow through the operators downstream.
+pub trait Operator {
+    fn name(&self) -> &str;
+
+    /// True for operators that move raw broker records without parsing
+    /// (the pass-through baseline).  Such an operator must be alone in its
+    /// chain; the chain then skips parsing entirely.
+    fn forwards_raw(&self) -> bool {
+        false
+    }
+
+    fn apply(
+        &mut self,
+        now_micros: u64,
+        rows: &mut RowBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String>;
+
+    /// Raw-record path, only called when [`Operator::forwards_raw`] is true.
+    fn apply_raw(&mut self, _now_micros: u64, _records: &[Record], _out: &mut Vec<Record>)
+        -> Result<(), String> {
+        Err(format!("operator '{}' does not forward raw records", self.name()))
+    }
+
+    fn finish(
+        &mut self,
+        now_micros: u64,
+        rows: &mut RowBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.apply(now_micros, rows, out)
+    }
+
+    fn stats(&self) -> StepStats;
+}
+
+/// Compute backend handle for HLO-capable operators; the `Rc` lets every
+/// operator in a chain share one thread-confined PJRT runtime.
+pub enum OpCompute {
+    Hlo(Rc<Runtime>),
+    Native,
+}
+
+// --- built-in operators ------------------------------------------------------
+
+/// Pass-through: forwards raw broker records (payload `Arc`s, no copy).
+#[derive(Default)]
+pub struct ForwardOp {
+    stats: StepStats,
+}
+
+impl Operator for ForwardOp {
+    fn name(&self) -> &str {
+        "forward"
+    }
+
+    fn forwards_raw(&self) -> bool {
+        true
+    }
+
+    fn apply(
+        &mut self,
+        _now_micros: u64,
+        _rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        Err("forward runs on the raw-record path".into())
+    }
+
+    fn apply_raw(
+        &mut self,
+        _now_micros: u64,
+        records: &[Record],
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.stats.events_in += records.len() as u64;
+        self.stats.events_out += records.len() as u64;
+        out.extend(records.iter().cloned());
+        Ok(())
+    }
+
+    fn finish(
+        &mut self,
+        _now_micros: u64,
+        _rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// Predicate filter over row values.
+pub struct FilterOp {
+    cmp: CmpOp,
+    value: f32,
+    stats: StepStats,
+}
+
+impl FilterOp {
+    pub fn new(cmp: CmpOp, value: f32) -> Self {
+        Self {
+            cmp,
+            value,
+            stats: StepStats::default(),
+        }
+    }
+}
+
+impl Operator for FilterOp {
+    fn name(&self) -> &str {
+        "filter"
+    }
+
+    fn apply(
+        &mut self,
+        _now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.stats.events_in += rows.len() as u64;
+        let (cmp, value) = (self.cmp, self.value);
+        rows.retain(|_, v| cmp.eval(v, value));
+        self.stats.events_out += rows.len() as u64;
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// Affine projection of the value: `v * scale + offset`.
+pub struct MapOp {
+    scale: f32,
+    offset: f32,
+    stats: StepStats,
+}
+
+impl MapOp {
+    pub fn new(scale: f32, offset: f32) -> Self {
+        Self {
+            scale,
+            offset,
+            stats: StepStats::default(),
+        }
+    }
+}
+
+impl Operator for MapOp {
+    fn name(&self) -> &str {
+        "map"
+    }
+
+    fn apply(
+        &mut self,
+        _now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.stats.events_in += rows.len() as u64;
+        for v in &mut rows.vals {
+            *v = *v * self.scale + self.offset;
+        }
+        self.stats.events_out += rows.len() as u64;
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// Shuffle-style regrouping: `key % modulo`.
+pub struct KeyByOp {
+    modulo: u32,
+    stats: StepStats,
+}
+
+impl KeyByOp {
+    pub fn new(modulo: u32) -> Self {
+        assert!(modulo > 0);
+        Self {
+            modulo,
+            stats: StepStats::default(),
+        }
+    }
+}
+
+impl Operator for KeyByOp {
+    fn name(&self) -> &str {
+        "keyby"
+    }
+
+    fn apply(
+        &mut self,
+        _now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.stats.events_in += rows.len() as u64;
+        for k in &mut rows.keys {
+            *k %= self.modulo;
+        }
+        self.stats.events_out += rows.len() as u64;
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// The paper's CPU-intensive transform: °C → °F, counting threshold
+/// alerts; HLO (`cpu_pipeline_step`) or native compute.
+pub struct CpuTransformOp {
+    compute: OpCompute,
+    threshold_f: f32,
+    stats: StepStats,
+    temps_pad: Vec<f32>,
+}
+
+impl CpuTransformOp {
+    pub fn new(compute: OpCompute, threshold_f: f32) -> Self {
+        Self {
+            compute,
+            threshold_f,
+            stats: StepStats::default(),
+            temps_pad: Vec::new(),
+        }
+    }
+}
+
+impl Operator for CpuTransformOp {
+    fn name(&self) -> &str {
+        "cpu_transform"
+    }
+
+    fn apply(
+        &mut self,
+        _now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        let n = rows.len();
+        if n == 0 {
+            return Ok(());
+        }
+        self.stats.events_in += n as u64;
+        match &self.compute {
+            OpCompute::Hlo(rt) => {
+                let thresh = [self.threshold_f];
+                let mut off = 0;
+                while off < n {
+                    let remaining = n - off;
+                    let artifact = rt.select("cpu_pipeline_step", remaining)?;
+                    let b = artifact.batch;
+                    let name = artifact.name.clone();
+                    let take = b.min(remaining);
+                    self.temps_pad.clear();
+                    self.temps_pad.extend_from_slice(&rows.vals[off..off + take]);
+                    self.temps_pad.resize(b, 0.0);
+                    let outs = rt.execute_f32(
+                        &name,
+                        &[Input::F32(&self.temps_pad), Input::F32(&thresh)],
+                    )?;
+                    self.stats.hlo_calls += 1;
+                    let mut it = outs.into_iter();
+                    let fahr = it.next().ok_or("missing fahr output")?;
+                    let alerts = it.next().ok_or("missing alerts output")?;
+                    rows.vals[off..off + take].copy_from_slice(&fahr[..take]);
+                    self.stats.alerts +=
+                        alerts[..take].iter().filter(|&&a| a > 0.5).count() as u64;
+                    off += take;
+                }
+            }
+            OpCompute::Native => {
+                for v in &mut rows.vals {
+                    *v = *v * 9.0 / 5.0 + 32.0;
+                    if *v > self.threshold_f {
+                        self.stats.alerts += 1;
+                    }
+                }
+            }
+        }
+        self.stats.events_out += n as u64;
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// Keyed sliding-window aggregation: consumes event rows, emits one
+/// aggregate row per `(window, key)` at every slide boundary.  The
+/// per-batch state update runs through the `mem_pipeline_step` HLO
+/// artifact for sum/cnt aggregators, natively otherwise.
+pub struct WindowAggregateOp {
+    compute: OpCompute,
+    window: SlidingWindow,
+    keys: usize,
+    stats: StepStats,
+    ids_pad: Vec<i32>,
+    temps_pad: Vec<f32>,
+}
+
+impl WindowAggregateOp {
+    pub fn new(
+        compute: OpCompute,
+        agg: AggKind,
+        sensors: usize,
+        window_micros: u64,
+        slide_micros: u64,
+        start_micros: u64,
+    ) -> Self {
+        // The AOT artifacts carry K = 1024 key slots; wider configurations
+        // (and extrema aggregators) keep state natively.
+        let keys = match &compute {
+            OpCompute::Hlo(_) => sensors.min(HLO_KEYS),
+            OpCompute::Native => sensors,
+        };
+        Self {
+            compute,
+            window: SlidingWindow::with_agg(keys, window_micros, slide_micros, start_micros, agg),
+            keys,
+            stats: StepStats::default(),
+            ids_pad: Vec::new(),
+            temps_pad: Vec::new(),
+        }
+    }
+
+    pub fn agg(&self) -> AggKind {
+        self.window.agg()
+    }
+
+    fn accumulate(&mut self, rows: &RowBatch) -> Result<(), String> {
+        match &self.compute {
+            OpCompute::Hlo(rt) => {
+                let mut off = 0;
+                while off < rows.len() {
+                    let remaining = rows.len() - off;
+                    let artifact = rt.select("mem_pipeline_step", remaining)?;
+                    let b = artifact.batch;
+                    let k = artifact.keys;
+                    let name = artifact.name.clone();
+                    debug_assert_eq!(k, HLO_KEYS);
+                    let take = b.min(remaining);
+                    self.ids_pad.clear();
+                    self.temps_pad.clear();
+                    for i in off..off + take {
+                        // Out-of-range keys (> K) become padding too.
+                        let id = rows.keys[i] as usize;
+                        self.ids_pad
+                            .push(if id < self.keys { id as i32 } else { k as i32 });
+                        self.temps_pad.push(rows.vals[i]);
+                    }
+                    // Pad with id == K so padded slots drop out of the
+                    // one-hot mask inside the kernel.
+                    self.ids_pad.resize(b, k as i32);
+                    self.temps_pad.resize(b, 0.0);
+                    let pane = self.window.current_pane();
+                    let mut sum_state = pane.sum.clone();
+                    let mut cnt_state = pane.cnt.clone();
+                    sum_state.resize(k, 0.0);
+                    cnt_state.resize(k, 0.0);
+                    let outs = rt.execute_f32(
+                        &name,
+                        &[
+                            Input::I32(&self.ids_pad),
+                            Input::F32(&self.temps_pad),
+                            Input::F32(&sum_state),
+                            Input::F32(&cnt_state),
+                        ],
+                    )?;
+                    self.stats.hlo_calls += 1;
+                    let mut it = outs.into_iter();
+                    let mut new_sum = it.next().ok_or("missing sum output")?;
+                    let mut new_cnt = it.next().ok_or("missing cnt output")?;
+                    new_sum.truncate(self.keys);
+                    new_cnt.truncate(self.keys);
+                    self.window.store_state(new_sum, new_cnt);
+                    off += take;
+                }
+                Ok(())
+            }
+            OpCompute::Native => {
+                self.window.accumulate_native(&rows.keys, &rows.vals);
+                Ok(())
+            }
+        }
+    }
+
+    /// Replace the rows with the emitted aggregates.
+    fn emit_rows(&mut self, emits: Vec<WindowEmit>, rows: &mut RowBatch) {
+        rows.clear();
+        for e in emits {
+            self.stats.window_emits += 1;
+            for &(key, value, count) in &e.aggregates {
+                rows.push(key, value, e.end_micros, count);
+                self.stats.events_out += 1;
+            }
+        }
+    }
+}
+
+impl Operator for WindowAggregateOp {
+    fn name(&self) -> &str {
+        "window"
+    }
+
+    fn apply(
+        &mut self,
+        now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        if !rows.is_empty() {
+            self.stats.events_in += rows.len() as u64;
+            self.accumulate(rows)?;
+        }
+        let emits = self.window.advance(now_micros);
+        self.emit_rows(emits, rows);
+        Ok(())
+    }
+
+    fn finish(
+        &mut self,
+        now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        // Accumulate rows still pending from upstream flushes, then drain
+        // boundaries reached by `now` and force the final pane closed so
+        // short runs still emit their window.
+        if !rows.is_empty() {
+            self.stats.events_in += rows.len() as u64;
+            self.accumulate(rows)?;
+        }
+        let mut emits = self.window.advance(now_micros);
+        emits.extend(self.window.flush());
+        self.emit_rows(emits, rows);
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// Keep the `k` largest aggregates per window (rows grouped by their
+/// window-end timestamp).  Ties break toward the smaller key, so the
+/// selection is deterministic.
+pub struct TopKOp {
+    k: usize,
+    stats: StepStats,
+    idx: Vec<usize>,
+    kept: Vec<usize>,
+}
+
+impl TopKOp {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        Self {
+            k,
+            stats: StepStats::default(),
+            idx: Vec::new(),
+            kept: Vec::new(),
+        }
+    }
+}
+
+impl Operator for TopKOp {
+    fn name(&self) -> &str {
+        "topk"
+    }
+
+    fn apply(
+        &mut self,
+        _now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        let n = rows.len();
+        if n == 0 {
+            return Ok(());
+        }
+        self.stats.events_in += n as u64;
+        self.idx.clear();
+        self.idx.extend(0..n);
+        let (ts, vals, keys) = (&rows.ts, &rows.vals, &rows.keys);
+        self.idx.sort_by(|&a, &b| {
+            ts[a]
+                .cmp(&ts[b])
+                .then_with(|| {
+                    vals[b]
+                        .partial_cmp(&vals[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .then_with(|| keys[a].cmp(&keys[b]))
+        });
+        self.kept.clear();
+        let mut cur_ts = None;
+        let mut taken = 0usize;
+        for &i in &self.idx {
+            if cur_ts != Some(ts[i]) {
+                cur_ts = Some(ts[i]);
+                taken = 0;
+            }
+            if taken < self.k {
+                self.kept.push(i);
+                taken += 1;
+            }
+        }
+        // Restore original (window, key) emission order.
+        self.kept.sort_unstable();
+        rows.select(&self.kept);
+        self.stats.events_out += rows.len() as u64;
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// Serialize rows as sensor events for the egestion topic; rows pass
+/// through unchanged so a window may follow (the fused shape).
+pub struct EmitEventsOp {
+    event_bytes: usize,
+    stats: StepStats,
+    wire: Vec<u8>,
+}
+
+impl EmitEventsOp {
+    pub fn new(event_bytes: usize) -> Self {
+        Self {
+            event_bytes,
+            stats: StepStats::default(),
+            wire: Vec::new(),
+        }
+    }
+}
+
+impl Operator for EmitEventsOp {
+    fn name(&self) -> &str {
+        "emit_events"
+    }
+
+    fn apply(
+        &mut self,
+        _now_micros: u64,
+        rows: &mut RowBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.stats.events_in += rows.len() as u64;
+        let fmt = if self.event_bytes < 40 {
+            EventFormat::Csv
+        } else {
+            EventFormat::Json
+        };
+        for i in 0..rows.len() {
+            let ev = SensorEvent {
+                ts_micros: rows.ts[i],
+                sensor_id: rows.keys[i],
+                temp_c: rows.vals[i],
+            };
+            ev.serialize_into(fmt, self.event_bytes, &mut self.wire);
+            out.push(Record::new(rows.keys[i], self.wire.as_slice(), rows.ts[i]));
+            self.stats.events_out += 1;
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// Serialize aggregate rows as compact JSON records
+/// (`{"win":…,"id":…,"<agg>":…,"n":…}`); `avg` for mean keeps the paper
+/// pipeline's wire format byte-stable.
+pub struct EmitAggregatesOp {
+    field: &'static str,
+    stats: StepStats,
+}
+
+impl EmitAggregatesOp {
+    pub fn new(agg: AggKind) -> Self {
+        Self {
+            field: agg.field(),
+            stats: StepStats::default(),
+        }
+    }
+}
+
+impl Operator for EmitAggregatesOp {
+    fn name(&self) -> &str {
+        "emit_aggregates"
+    }
+
+    fn apply(
+        &mut self,
+        _now_micros: u64,
+        rows: &mut RowBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.stats.events_in += rows.len() as u64;
+        for i in 0..rows.len() {
+            let payload = format!(
+                "{{\"win\":{},\"id\":{},\"{}\":{:.3},\"n\":{}}}",
+                rows.ts[i], rows.keys[i], self.field, rows.vals[i], rows.counts[i]
+            );
+            out.push(Record::new(rows.keys[i], payload.into_bytes(), rows.ts[i]));
+            self.stats.events_out += 1;
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+// --- the chain ---------------------------------------------------------------
+
+/// A fused chain of operators, one per engine-task thread, implementing
+/// the engine-facing [`PipelineStep`] contract.
+pub struct Chain {
+    label: String,
+    ops: Vec<Box<dyn Operator>>,
+    rows: RowBatch,
+    raw: bool,
+    events_out: u64,
+}
+
+impl Chain {
+    /// Assemble a chain from already-built operators (tests, benches, and
+    /// the registry path).  `label` is the pipeline name reported by
+    /// [`PipelineStep::name`].
+    pub fn from_ops(label: impl Into<String>, ops: Vec<Box<dyn Operator>>) -> Result<Chain, String> {
+        if ops.is_empty() {
+            return Err("operator chain is empty".into());
+        }
+        let raw = ops[0].forwards_raw();
+        if raw && ops.len() > 1 {
+            return Err("a raw-forwarding operator must be the only one in its chain".into());
+        }
+        Ok(Chain {
+            label: label.into(),
+            ops,
+            rows: RowBatch::default(),
+            raw,
+            events_out: 0,
+        })
+    }
+
+    /// Compile a declarative spec into a chain.  One shared PJRT runtime
+    /// backs every HLO-capable operator; when `runtime_factory` is present
+    /// but its artifacts are missing, compilation fails with the same
+    /// readable error the monolithic factory produced.
+    pub fn compile(
+        cfg: &BenchConfig,
+        spec: &PipelineSpec,
+        label: impl Into<String>,
+        runtime_factory: Option<&RuntimeFactory>,
+        registry: Option<&super::OperatorRegistry>,
+        start_micros: u64,
+    ) -> Result<Chain, String> {
+        // Which HLO programs does this chain need?
+        let mut programs: Vec<&'static str> = Vec::new();
+        for op in &spec.ops {
+            match op {
+                OpSpec::CpuTransform => programs.push("cpu_pipeline_step"),
+                OpSpec::Window { agg, .. } if agg.uses_sum_cnt() => {
+                    programs.push("mem_pipeline_step")
+                }
+                _ => {}
+            }
+        }
+        programs.sort_unstable();
+        programs.dedup();
+        let runtime: Option<Rc<Runtime>> = match runtime_factory {
+            Some(f) if !programs.is_empty() => {
+                if !f.available() {
+                    return Err(format!(
+                        "artifacts not found in {} — run `make artifacts`",
+                        f.dir().display()
+                    ));
+                }
+                let rt = f.create()?;
+                // Compile every batch-size variant up front: PJRT
+                // compilation must never land on the first hot batch
+                // (it would poison the latency tail).
+                for p in &programs {
+                    rt.warm(p)?;
+                }
+                Some(Rc::new(rt))
+            }
+            _ => None,
+        };
+        let hlo = |needed: bool| -> OpCompute {
+            match (&runtime, needed) {
+                (Some(rt), true) => OpCompute::Hlo(rt.clone()),
+                _ => OpCompute::Native,
+            }
+        };
+
+        let ctx = super::OpContext {
+            config: cfg,
+            start_micros,
+        };
+        let mut ops: Vec<Box<dyn Operator>> = Vec::with_capacity(spec.ops.len());
+        for (i, op) in spec.ops.iter().enumerate() {
+            ops.push(match op {
+                OpSpec::Forward => Box::new(ForwardOp::default()),
+                OpSpec::Filter { cmp, value } => Box::new(FilterOp::new(*cmp, *value)),
+                OpSpec::Map { scale, offset } => Box::new(MapOp::new(*scale, *offset)),
+                OpSpec::CpuTransform => {
+                    Box::new(CpuTransformOp::new(hlo(true), cfg.engine.threshold_f))
+                }
+                OpSpec::KeyBy { modulo } => Box::new(KeyByOp::new(*modulo)),
+                OpSpec::Window {
+                    agg,
+                    window_micros,
+                    slide_micros,
+                } => {
+                    let w = if *window_micros > 0 {
+                        *window_micros
+                    } else {
+                        cfg.engine.window_micros
+                    };
+                    let s = if *slide_micros > 0 {
+                        *slide_micros
+                    } else {
+                        cfg.engine.slide_micros
+                    };
+                    Box::new(WindowAggregateOp::new(
+                        hlo(agg.uses_sum_cnt()),
+                        *agg,
+                        cfg.workload.sensors as usize,
+                        w,
+                        s,
+                        start_micros,
+                    ))
+                }
+                OpSpec::TopK { k } => Box::new(TopKOp::new(*k)),
+                OpSpec::EmitEvents => Box::new(EmitEventsOp::new(cfg.workload.event_bytes)),
+                OpSpec::EmitAggregates => Box::new(EmitAggregatesOp::new(
+                    spec.window_agg_before(i).unwrap_or(AggKind::Mean),
+                )),
+                OpSpec::Custom { name, params } => {
+                    let reg = registry.ok_or_else(|| {
+                        format!(
+                            "pipeline spec uses operator '{name}', which is not a \
+                             built-in (forward, filter, map, cpu_transform, keyby, \
+                             window, topk, emit_events, emit_aggregates) and no \
+                             OperatorRegistry was provided — check for a misspelled \
+                             built-in, or register '{name}' and build the factory \
+                             with StepFactory::with_registry"
+                        )
+                    })?;
+                    reg.build(name, params, &ctx)?
+                }
+            });
+        }
+        Chain::from_ops(label, ops)
+    }
+
+    /// Per-operator names, in chain order.
+    pub fn op_names(&self) -> Vec<&str> {
+        self.ops.iter().map(|o| o.name()).collect()
+    }
+}
+
+impl PipelineStep for Chain {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn needs_parse(&self) -> bool {
+        !self.raw
+    }
+
+    fn process(
+        &mut self,
+        now_micros: u64,
+        records: &[Record],
+        batch: &EventBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        let out_before = out.len();
+        if self.raw {
+            self.ops[0].apply_raw(now_micros, records, out)?;
+        } else {
+            self.rows.load_events(batch);
+            for op in self.ops.iter_mut() {
+                op.apply(now_micros, &mut self.rows, out)?;
+            }
+        }
+        self.events_out += (out.len() - out_before) as u64;
+        Ok(())
+    }
+
+    fn finish(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
+        let out_before = out.len();
+        if !self.raw {
+            self.rows.clear();
+            for op in self.ops.iter_mut() {
+                op.finish(now_micros, &mut self.rows, out)?;
+            }
+        }
+        self.events_out += (out.len() - out_before) as u64;
+        Ok(())
+    }
+
+    /// Whole-chain stats, shaped to match the monolithic pipelines:
+    /// `events_in` is the first operator's intake, `events_out` the records
+    /// the chain pushed to egestion, counters sum across operators.
+    fn stats(&self) -> StepStats {
+        let mut s = StepStats::default();
+        for op in &self.ops {
+            let o = op.stats();
+            s.alerts += o.alerts;
+            s.hlo_calls += o.hlo_calls;
+            s.window_emits += o.window_emits;
+            s.parse_failures += o.parse_failures;
+        }
+        s.events_in = self.ops.first().map(|o| o.stats().events_in).unwrap_or(0);
+        s.events_out = self.events_out;
+        s
+    }
+
+    fn operator_stats(&self) -> Vec<(String, StepStats)> {
+        self.ops
+            .iter()
+            .map(|o| (o.name().to_string(), o.stats()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(keys: &[u32], vals: &[f32]) -> RowBatch {
+        let mut r = RowBatch::default();
+        for (i, (&k, &v)) in keys.iter().zip(vals).enumerate() {
+            r.push(k, v, i as u64, 1);
+        }
+        r
+    }
+
+    #[test]
+    fn filter_compacts_rows_in_place() {
+        let mut f = FilterOp::new(CmpOp::Gt, 10.0);
+        let mut r = rows(&[1, 2, 3, 4], &[5.0, 15.0, 10.0, 30.0]);
+        let mut out = Vec::new();
+        f.apply(0, &mut r, &mut out).unwrap();
+        assert_eq!(r.keys, vec![2, 4]);
+        assert_eq!(r.vals, vec![15.0, 30.0]);
+        assert_eq!(r.ts, vec![1, 3]);
+        let s = f.stats();
+        assert_eq!(s.events_in, 4);
+        assert_eq!(s.events_out, 2);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_applies_affine_transform() {
+        let mut m = MapOp::new(1.8, 32.0);
+        let mut r = rows(&[0, 1], &[0.0, 100.0]);
+        let mut out = Vec::new();
+        m.apply(0, &mut r, &mut out).unwrap();
+        assert!((r.vals[0] - 32.0).abs() < 1e-6);
+        assert!((r.vals[1] - 212.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn keyby_regroups_keys() {
+        let mut k = KeyByOp::new(4);
+        let mut r = rows(&[0, 5, 9, 13], &[1.0; 4]);
+        let mut out = Vec::new();
+        k.apply(0, &mut r, &mut out).unwrap();
+        assert_eq!(r.keys, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn cpu_transform_native_matches_formula_and_counts_alerts() {
+        let mut op = CpuTransformOp::new(OpCompute::Native, 80.0);
+        let mut r = rows(&[1, 2, 3], &[0.0, 100.0, -40.0]);
+        let mut out = Vec::new();
+        op.apply(0, &mut r, &mut out).unwrap();
+        assert!((r.vals[0] - 32.0).abs() < 0.01);
+        assert!((r.vals[1] - 212.0).abs() < 0.01);
+        assert!((r.vals[2] + 40.0).abs() < 0.01);
+        assert_eq!(op.stats().alerts, 1); // only 212°F > 80°F
+    }
+
+    #[test]
+    fn window_consumes_events_and_emits_aggregate_rows() {
+        let mut w = WindowAggregateOp::new(
+            OpCompute::Native,
+            AggKind::Mean,
+            16,
+            2_000_000,
+            1_000_000,
+            0,
+        );
+        let mut out = Vec::new();
+        let mut r = rows(&[1, 1, 2], &[10.0, 20.0, 7.0]);
+        w.apply(0, &mut r, &mut out).unwrap();
+        assert!(r.is_empty(), "no boundary crossed yet → no aggregate rows");
+        let mut r = RowBatch::default();
+        w.apply(1_000_000, &mut r, &mut out).unwrap();
+        assert_eq!(r.keys, vec![1, 2]);
+        assert_eq!(r.vals, vec![15.0, 7.0]);
+        assert_eq!(r.counts, vec![2, 1]);
+        assert_eq!(r.ts, vec![1_000_000, 1_000_000]);
+        assert_eq!(w.stats().window_emits, 1);
+        assert!(out.is_empty(), "window emits rows, not records");
+    }
+
+    #[test]
+    fn topk_keeps_largest_per_window() {
+        let mut t = TopKOp::new(2);
+        let mut r = RowBatch::default();
+        // Window A at ts 100: vals 5, 9, 1 → keep 9, 5.
+        r.push(0, 5.0, 100, 1);
+        r.push(1, 9.0, 100, 1);
+        r.push(2, 1.0, 100, 1);
+        // Window B at ts 200: vals 3, 3, 2 → tie on 3 keeps smaller keys.
+        r.push(7, 3.0, 200, 1);
+        r.push(4, 3.0, 200, 1);
+        r.push(5, 2.0, 200, 1);
+        let mut out = Vec::new();
+        t.apply(0, &mut r, &mut out).unwrap();
+        assert_eq!(r.ts, vec![100, 100, 200, 200]);
+        assert_eq!(r.keys, vec![0, 1, 7, 4], "original emission order kept");
+        assert_eq!(t.stats().events_out, 4);
+    }
+
+    #[test]
+    fn emit_aggregates_serializes_window_rows() {
+        let mut e = EmitAggregatesOp::new(AggKind::Mean);
+        let mut r = RowBatch::default();
+        r.push(3, 15.0, 2_000_000, 2);
+        let mut out = Vec::new();
+        e.apply(0, &mut r, &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            std::str::from_utf8(out[0].payload()).unwrap(),
+            "{\"win\":2000000,\"id\":3,\"avg\":15.000,\"n\":2}"
+        );
+        assert_eq!(out[0].key, 3);
+        assert_eq!(out[0].gen_ts_micros, 2_000_000);
+        // Non-mean aggregators change the field name.
+        let mut e = EmitAggregatesOp::new(AggKind::Max);
+        let mut out = Vec::new();
+        e.apply(0, &mut r, &mut out).unwrap();
+        assert!(std::str::from_utf8(out[0].payload()).unwrap().contains("\"max\":"));
+    }
+
+    #[test]
+    fn chained_filter_window_topk_runs_end_to_end() {
+        let ops: Vec<Box<dyn Operator>> = vec![
+            Box::new(FilterOp::new(CmpOp::Gt, 0.0)),
+            Box::new(KeyByOp::new(4)),
+            Box::new(WindowAggregateOp::new(
+                OpCompute::Native,
+                AggKind::Mean,
+                8,
+                1_000_000,
+                500_000,
+                0,
+            )),
+            Box::new(TopKOp::new(2)),
+            Box::new(EmitAggregatesOp::new(AggKind::Mean)),
+        ];
+        let mut chain = Chain::from_ops("chain[test]", ops).unwrap();
+        assert!(chain.needs_parse());
+
+        let batch = EventBatch {
+            ids: vec![0, 1, 2, 5, 6, 9],
+            temps: vec![-1.0, 10.0, 20.0, 30.0, 40.0, 50.0],
+            gen_ts: vec![0; 6],
+            append_ts: vec![0; 6],
+            payload_bytes: 6 * 27,
+        };
+        let mut out = Vec::new();
+        chain.process(0, &[], &batch, &mut out).unwrap();
+        assert!(out.is_empty(), "no window boundary yet");
+        chain.process(500_000, &[], &EventBatch::default(), &mut out).unwrap();
+        // Keys after filter(+keyby 4): 1, 2, 1(5), 2(6), 1(9) → means per
+        // key: key1 = (10+30+50)/3 = 30, key2 = (20+40)/2 = 30 → top-2
+        // keeps both.
+        assert_eq!(out.len(), 2);
+        let s = chain.stats();
+        assert_eq!(s.events_in, 6, "chain intake is the first op's intake");
+        assert_eq!(s.events_out, 2, "egestion records actually pushed");
+        assert_eq!(s.window_emits, 1);
+        let per_op = chain.operator_stats();
+        assert_eq!(per_op.len(), 5);
+        assert_eq!(per_op[0].0, "filter");
+        assert_eq!(per_op[0].1.events_out, 5, "filter dropped the -1.0 row");
+        assert_eq!(per_op[3].0, "topk");
+    }
+
+    #[test]
+    fn chain_finish_flushes_through_downstream_ops() {
+        let ops: Vec<Box<dyn Operator>> = vec![
+            Box::new(WindowAggregateOp::new(
+                OpCompute::Native,
+                AggKind::Sum,
+                4,
+                2_000_000,
+                1_000_000,
+                0,
+            )),
+            Box::new(EmitAggregatesOp::new(AggKind::Sum)),
+        ];
+        let mut chain = Chain::from_ops("chain[flush]", ops).unwrap();
+        let batch = EventBatch {
+            ids: vec![3, 3],
+            temps: vec![5.0, 7.0],
+            gen_ts: vec![100, 100],
+            append_ts: vec![100, 100],
+            payload_bytes: 54,
+        };
+        let mut out = Vec::new();
+        chain.process(100, &[], &batch, &mut out).unwrap();
+        assert!(out.is_empty());
+        chain.finish(200, &mut out).unwrap();
+        assert_eq!(out.len(), 1, "finish must flush the pending pane downstream");
+        assert!(std::str::from_utf8(out[0].payload()).unwrap().contains("\"sum\":12.000"));
+    }
+
+    #[test]
+    fn raw_forward_chain_skips_parsing() {
+        let mut chain =
+            Chain::from_ops("passthrough", vec![Box::new(ForwardOp::default()) as Box<dyn Operator>])
+                .unwrap();
+        assert!(!chain.needs_parse());
+        let records = vec![
+            Record::new(1, vec![1u8, 2, 3], 10),
+            Record::new(2, vec![4u8, 5], 20),
+        ];
+        let mut out = Vec::new();
+        chain.process(0, &records, &EventBatch::default(), &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out[0].shares_storage_with(&records[0]));
+        let s = chain.stats();
+        assert_eq!(s.events_in, 2);
+        assert_eq!(s.events_out, 2);
+        chain.finish(1, &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn raw_forward_must_be_alone() {
+        let ops: Vec<Box<dyn Operator>> = vec![
+            Box::new(ForwardOp::default()),
+            Box::new(MapOp::new(1.0, 0.0)),
+        ];
+        assert!(Chain::from_ops("bad", ops).is_err());
+    }
+
+    #[test]
+    fn compile_missing_custom_registry_is_a_readable_error() {
+        let cfg = BenchConfig::default();
+        let spec = PipelineSpec {
+            ops: vec![OpSpec::Custom {
+                name: "mystery".into(),
+                params: crate::util::json::Json::obj(),
+            }],
+        };
+        let err = Chain::compile(&cfg, &spec, "x", None, None, 0).unwrap_err();
+        assert!(err.contains("mystery"), "{err}");
+        assert!(err.contains("with_registry"), "{err}");
+    }
+}

@@ -5,6 +5,10 @@
 //! without undergoing any processing."  Payload `Arc`s are forwarded, so
 //! the cost is purely the engine's plumbing — which is the point of the
 //! baseline.
+//!
+//! Since the operator-chain redesign the production path is the canonical
+//! `[forward]` chain; this struct is the reference implementation the
+//! equivalence suite compares against.
 
 use super::{PipelineStep, StepStats};
 use crate::broker::Record;
@@ -22,7 +26,7 @@ impl PassThrough {
 }
 
 impl PipelineStep for PassThrough {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "passthrough"
     }
 

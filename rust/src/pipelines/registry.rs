@@ -1,0 +1,174 @@
+//! Named registry for user-defined operators.
+//!
+//! The paper's extensibility promise (Sec. 3.3: "users can also define
+//! custom processing logic … with minimal modifications") maps onto the
+//! operator-chain API here: implement [`Operator`], register a builder
+//! under a name, and reference that name from the `pipeline: {ops: [...]}`
+//! config spec — the chain compiler resolves it per engine-task thread.
+//! See `examples/custom_pipeline.rs` for the worked example.
+
+use std::collections::BTreeMap;
+
+use super::operator::Operator;
+use crate::config::BenchConfig;
+use crate::util::json::Json;
+
+/// What a builder gets to work with: the resolved run configuration and
+/// the task's start time (window alignment).
+pub struct OpContext<'a> {
+    pub config: &'a BenchConfig,
+    pub start_micros: u64,
+}
+
+/// Builds one thread-confined operator instance from its spec parameters.
+/// Called once per engine-task thread.
+pub type OperatorBuilder =
+    Box<dyn Fn(&Json, &OpContext<'_>) -> Result<Box<dyn Operator>, String> + Send + Sync>;
+
+/// Name → builder map shared by every engine task (`Send + Sync`; the
+/// operators it builds are not, they stay on their task thread).
+#[derive(Default)]
+pub struct OperatorRegistry {
+    builders: BTreeMap<String, OperatorBuilder>,
+}
+
+impl OperatorRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `builder` under `name`; re-registering a name replaces the
+    /// previous builder (last one wins).
+    pub fn register(&mut self, name: impl Into<String>, builder: OperatorBuilder) -> &mut Self {
+        self.builders.insert(name.into(), builder);
+        self
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.builders.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.builders.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Build the operator registered as `name`, or a readable error
+    /// listing what is registered.
+    pub fn build(
+        &self,
+        name: &str,
+        params: &Json,
+        ctx: &OpContext<'_>,
+    ) -> Result<Box<dyn Operator>, String> {
+        match self.builders.get(name) {
+            Some(b) => b(params, ctx)
+                .map_err(|e| format!("building custom operator '{name}': {e}")),
+            None => Err(format!(
+                "unknown operator '{name}' — registered custom operators: [{}]",
+                self.names().join(", ")
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::Record;
+    use crate::pipelines::operator::RowBatch;
+    use crate::pipelines::StepStats;
+
+    struct Doubler {
+        stats: StepStats,
+    }
+
+    impl Operator for Doubler {
+        fn name(&self) -> &str {
+            "doubler"
+        }
+
+        fn apply(
+            &mut self,
+            _now: u64,
+            rows: &mut RowBatch,
+            _out: &mut Vec<Record>,
+        ) -> Result<(), String> {
+            self.stats.events_in += rows.len() as u64;
+            for v in &mut rows.vals {
+                *v *= 2.0;
+            }
+            self.stats.events_out += rows.len() as u64;
+            Ok(())
+        }
+
+        fn stats(&self) -> StepStats {
+            self.stats
+        }
+    }
+
+    #[test]
+    fn registered_builder_resolves_and_builds() {
+        let mut reg = OperatorRegistry::new();
+        reg.register(
+            "doubler",
+            Box::new(|_params, _ctx| {
+                Ok(Box::new(Doubler {
+                    stats: StepStats::default(),
+                }) as Box<dyn Operator>)
+            }),
+        );
+        assert!(reg.contains("doubler"));
+        let cfg = BenchConfig::default();
+        let ctx = OpContext {
+            config: &cfg,
+            start_micros: 0,
+        };
+        let mut op = reg.build("doubler", &Json::obj(), &ctx).unwrap();
+        let mut rows = RowBatch::default();
+        rows.push(1, 3.0, 0, 1);
+        let mut out = Vec::new();
+        op.apply(0, &mut rows, &mut out).unwrap();
+        assert_eq!(rows.vals, vec![6.0]);
+    }
+
+    #[test]
+    fn unknown_name_lists_registered_ops() {
+        let mut reg = OperatorRegistry::new();
+        reg.register("a_op", Box::new(|_, _| Err("unused".into())));
+        let cfg = BenchConfig::default();
+        let ctx = OpContext {
+            config: &cfg,
+            start_micros: 0,
+        };
+        let err = reg.build("nope", &Json::obj(), &ctx).unwrap_err();
+        assert!(err.contains("nope") && err.contains("a_op"), "{err}");
+    }
+
+    #[test]
+    fn builder_params_reach_the_builder() {
+        let mut reg = OperatorRegistry::new();
+        reg.register(
+            "strict",
+            Box::new(|params, _ctx| {
+                let t = params
+                    .get("threshold")
+                    .and_then(|v| v.as_f64())
+                    .ok_or("needs `threshold:`")?;
+                assert_eq!(t, 4.5);
+                Ok(Box::new(Doubler {
+                    stats: StepStats::default(),
+                }) as Box<dyn Operator>)
+            }),
+        );
+        let cfg = BenchConfig::default();
+        let ctx = OpContext {
+            config: &cfg,
+            start_micros: 0,
+        };
+        let mut params = Json::obj();
+        params.set("threshold", Json::Num(4.5));
+        assert!(reg.build("strict", &params, &ctx).is_ok());
+        let err = reg.build("strict", &Json::obj(), &ctx).unwrap_err();
+        assert!(err.contains("threshold"), "{err}");
+    }
+}

@@ -12,5 +12,5 @@
 pub mod report;
 pub mod validate;
 
-pub use report::{ascii_plot, ascii_table, csv_from_rows, markdown_table};
+pub use report::{ascii_plot, ascii_table, csv_from_rows, markdown_table, operator_stats_table};
 pub use validate::{validate_results, Violation};

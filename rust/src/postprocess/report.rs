@@ -1,5 +1,7 @@
 //! ASCII/Markdown table rendering, ASCII plots, and CSV emission.
 
+use crate::pipelines::StepStats;
+
 /// Render an aligned ASCII table.
 pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     let cols = headers.len();
@@ -37,6 +39,29 @@ pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     }
     out.push_str(&sep);
     out
+}
+
+/// Render the per-operator stats breakdown of a run (chain order), as
+/// printed under the CLI run summary.
+pub fn operator_stats_table(ops: &[(String, StepStats)]) -> String {
+    let rows: Vec<Vec<String>> = ops
+        .iter()
+        .map(|(name, s)| {
+            vec![
+                name.clone(),
+                s.events_in.to_string(),
+                s.events_out.to_string(),
+                s.alerts.to_string(),
+                s.hlo_calls.to_string(),
+                s.window_emits.to_string(),
+                s.parse_failures.to_string(),
+            ]
+        })
+        .collect();
+    ascii_table(
+        &["operator", "in", "out", "alerts", "hlo", "win_emits", "parse_fail"],
+        &rows,
+    )
 }
 
 /// Render a GitHub-flavored Markdown table (used by the max-capacity
@@ -144,6 +169,34 @@ mod tests {
         let lines: Vec<&str> = t.lines().collect();
         let w = lines[0].len();
         assert!(lines.iter().all(|l| l.len() == w), "ragged table:\n{t}");
+    }
+
+    #[test]
+    fn operator_table_lists_chain_order() {
+        let ops = vec![
+            (
+                "filter".to_string(),
+                StepStats {
+                    events_in: 100,
+                    events_out: 60,
+                    ..StepStats::default()
+                },
+            ),
+            (
+                "window".to_string(),
+                StepStats {
+                    events_in: 60,
+                    window_emits: 4,
+                    ..StepStats::default()
+                },
+            ),
+        ];
+        let t = operator_stats_table(&ops);
+        let filter_line = t.lines().position(|l| l.contains("filter")).unwrap();
+        let window_line = t.lines().position(|l| l.contains("window")).unwrap();
+        assert!(filter_line < window_line, "chain order must be preserved:\n{t}");
+        assert!(t.contains("100"));
+        assert!(t.contains("win_emits"));
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Operator-chain ↔ monolith equivalence suite.
+//!
+//! The operator-chain redesign re-expresses the four paper pipelines
+//! (passthrough / cpu / mem / fused) as canonical chains compiled by
+//! `StepFactory`.  This suite proves the redesign is behavior-preserving
+//! on the native compute path: for identical input sequences, each chain
+//! produces **byte-identical** egestion output (payload bytes, keys,
+//! generation timestamps, in order) and **matching `StepStats`** against
+//! the pre-redesign monolithic implementations, which remain in-tree as
+//! reference implementations.
+
+use sprobench::broker::Record;
+use sprobench::config::{BenchConfig, PipelineKind};
+use sprobench::engine::EventBatch;
+use sprobench::pipelines::{
+    Compute, CpuIntensive, Fused, MemIntensive, PassThrough, PipelineStep, StepFactory,
+};
+
+const SENSORS: u32 = 64;
+const WINDOW_MICROS: u64 = 2_000_000;
+const SLIDE_MICROS: u64 = 1_000_000;
+
+fn cfg(kind: PipelineKind) -> BenchConfig {
+    let mut cfg = BenchConfig::default();
+    cfg.engine.pipeline = kind;
+    cfg.engine.use_hlo = false; // native path: byte-exact comparisons
+    cfg.engine.threshold_f = 80.0;
+    cfg.engine.window_micros = WINDOW_MICROS;
+    cfg.engine.slide_micros = SLIDE_MICROS;
+    cfg.workload.event_bytes = 27;
+    cfg.workload.sensors = SENSORS;
+    cfg
+}
+
+fn legacy(kind: PipelineKind) -> Box<dyn PipelineStep> {
+    match kind {
+        PipelineKind::PassThrough => Box::new(PassThrough::new()),
+        PipelineKind::CpuIntensive => Box::new(CpuIntensive::new(Compute::Native, 80.0, 27)),
+        PipelineKind::MemIntensive => Box::new(MemIntensive::new(
+            Compute::Native,
+            SENSORS as usize,
+            WINDOW_MICROS,
+            SLIDE_MICROS,
+            0,
+        )),
+        PipelineKind::Fused => Box::new(Fused::new(
+            Compute::Native,
+            80.0,
+            27,
+            SENSORS as usize,
+            WINDOW_MICROS,
+            SLIDE_MICROS,
+            0,
+        )),
+    }
+}
+
+fn chain(kind: PipelineKind) -> Box<dyn PipelineStep> {
+    StepFactory::new(&cfg(kind), None)
+        .create(0)
+        .expect("canonical chain compiles")
+}
+
+/// A deterministic, varied batch: skewed keys (including one id outside
+/// the keyed-state width), negative and alert-crossing temperatures.
+fn batch(seq: u64, len: usize) -> EventBatch {
+    let mut b = EventBatch::default();
+    for i in 0..len {
+        let x = seq.wrapping_mul(31).wrapping_add(i as u64);
+        let id = if i % 17 == 0 {
+            SENSORS + 5 // out of range: dropped by keyed state, kept by cpu
+        } else {
+            (x % SENSORS as u64) as u32
+        };
+        b.ids.push(id);
+        b.temps.push(((x % 160) as f32) - 40.0 + (i as f32) * 0.125);
+        b.gen_ts.push(seq * 1000 + i as u64);
+        b.append_ts.push(seq * 1000 + i as u64 + 7);
+    }
+    b.payload_bytes = (len * 27) as u64;
+    b
+}
+
+/// Drive a step through the shared scenario: several parsed batches with
+/// advancing processing time (crossing multiple slide boundaries, with an
+/// idle gap), then the end-of-stream flush.
+fn drive_parsed(step: &mut dyn PipelineStep) -> Vec<Record> {
+    let mut out = Vec::new();
+    let script: &[(u64, usize)] = &[
+        (0, 200),
+        (400_000, 64),
+        (1_100_000, 300),   // after first slide boundary
+        (1_700_000, 1),
+        (3_200_000, 128),   // skips a boundary entirely
+        (3_300_000, 0),     // empty poll
+    ];
+    for &(now, len) in script {
+        let b = if len == 0 {
+            EventBatch::default()
+        } else {
+            batch(now / 100 + len as u64, len)
+        };
+        step.process(now, &[], &b, &mut out).expect("process");
+    }
+    step.finish(3_900_000, &mut out).expect("finish");
+    out
+}
+
+fn assert_identical(kind: &str, legacy_out: &[Record], chain_out: &[Record]) {
+    assert_eq!(
+        legacy_out.len(),
+        chain_out.len(),
+        "{kind}: egestion record count differs"
+    );
+    for (i, (l, c)) in legacy_out.iter().zip(chain_out).enumerate() {
+        assert_eq!(l.key, c.key, "{kind}: key differs at record {i}");
+        assert_eq!(
+            l.gen_ts_micros, c.gen_ts_micros,
+            "{kind}: gen_ts differs at record {i}"
+        );
+        assert_eq!(
+            l.payload(),
+            c.payload(),
+            "{kind}: payload bytes differ at record {i}: {:?} vs {:?}",
+            String::from_utf8_lossy(l.payload()),
+            String::from_utf8_lossy(c.payload()),
+        );
+    }
+}
+
+#[test]
+fn cpu_chain_is_byte_identical_to_monolith() {
+    let mut l = legacy(PipelineKind::CpuIntensive);
+    let mut c = chain(PipelineKind::CpuIntensive);
+    assert_eq!(c.name(), "cpu");
+    let (lo, co) = (drive_parsed(l.as_mut()), drive_parsed(c.as_mut()));
+    assert!(!lo.is_empty());
+    assert_identical("cpu", &lo, &co);
+    assert_eq!(l.stats(), c.stats(), "cpu: StepStats must match");
+    assert!(c.stats().alerts > 0, "scenario must cross the alert threshold");
+}
+
+#[test]
+fn mem_chain_is_byte_identical_to_monolith() {
+    let mut l = legacy(PipelineKind::MemIntensive);
+    let mut c = chain(PipelineKind::MemIntensive);
+    assert_eq!(c.name(), "mem");
+    let (lo, co) = (drive_parsed(l.as_mut()), drive_parsed(c.as_mut()));
+    assert!(!lo.is_empty(), "windows must emit");
+    assert_identical("mem", &lo, &co);
+    assert_eq!(l.stats(), c.stats(), "mem: StepStats must match");
+    assert!(c.stats().window_emits >= 3, "several boundaries crossed");
+}
+
+#[test]
+fn fused_chain_is_byte_identical_to_monolith() {
+    let mut l = legacy(PipelineKind::Fused);
+    let mut c = chain(PipelineKind::Fused);
+    assert_eq!(c.name(), "fused");
+    let (lo, co) = (drive_parsed(l.as_mut()), drive_parsed(c.as_mut()));
+    assert_identical("fused", &lo, &co);
+    assert_eq!(l.stats(), c.stats(), "fused: StepStats must match");
+    // Both output classes present: transformed events and aggregates.
+    assert!(co.iter().any(|r| r.payload().starts_with(b"{\"win\":")));
+    assert!(co.iter().any(|r| !r.payload().starts_with(b"{\"win\":")));
+}
+
+#[test]
+fn passthrough_chain_is_identical_and_shares_storage() {
+    let mut l = legacy(PipelineKind::PassThrough);
+    let mut c = chain(PipelineKind::PassThrough);
+    assert_eq!(c.name(), "passthrough");
+    assert!(!c.needs_parse(), "raw chain must skip parsing");
+    let records: Vec<Record> = (0..257)
+        .map(|i| {
+            let payload = format!("1000,{},{:.2}", i % 64, 20.0 + i as f32);
+            Record::new(i % 64, payload.into_bytes(), 1000 + i as u64)
+        })
+        .collect();
+    let mut lo = Vec::new();
+    let mut co = Vec::new();
+    l.process(5, &records, &EventBatch::default(), &mut lo).unwrap();
+    c.process(5, &records, &EventBatch::default(), &mut co).unwrap();
+    l.finish(10, &mut lo).unwrap();
+    c.finish(10, &mut co).unwrap();
+    assert_identical("passthrough", &lo, &co);
+    for (r, o) in records.iter().zip(&co) {
+        assert!(o.shares_storage_with(r), "payloads must be forwarded, not copied");
+    }
+    assert_eq!(l.stats(), c.stats());
+}
+
+#[test]
+fn chain_exposes_per_operator_stats_the_monolith_cannot() {
+    let mut c = chain(PipelineKind::Fused);
+    drive_parsed(c.as_mut());
+    let per_op = c.operator_stats();
+    let names: Vec<&str> = per_op.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(
+        names,
+        vec!["cpu_transform", "emit_events", "window", "emit_aggregates"]
+    );
+    // The per-op breakdown is self-consistent with the chain totals.
+    let total = c.stats();
+    assert_eq!(per_op[0].1.events_in, total.events_in);
+    assert_eq!(total.alerts, per_op[0].1.alerts);
+    assert_eq!(total.window_emits, per_op[2].1.window_emits);
+    assert_eq!(
+        total.events_out,
+        per_op[1].1.events_out + per_op[3].1.events_out,
+        "chain egestion = transformed events + aggregates"
+    );
+}
