@@ -7,7 +7,9 @@
 //! **data-plane comparison**: a full produce → consume → parse → process
 //! loop on the per-record plane vs the batch-first plane (`RecordBatch`
 //! end-to-end), which is the number the batching refactor is accountable
-//! to.
+//! to, the chained operator preset, and the event-time window case
+//! (disordered stream → watermarked window) whose surcharge is tracked
+//! as `data_plane.event_vs_chained`.
 //!
 //! Run `cargo bench --bench hotpath_micro` for the full profile, or
 //! `-- --quick` for a reduced run (CI smoke).  Either way the data-plane
@@ -162,6 +164,88 @@ fn e2e_chained(
     events as f64
 }
 
+/// The batched pass through an **event-time** window chain over a
+/// disorder-injected stream: virtual event time advances 100µs/event,
+/// emission order is shuffled in 32-event blocks (≤3.1ms displacement,
+/// inside the 5ms watermark bound), and the chain is
+/// `window(event, mean, merge_if_open) → emit_aggregates`.  The delta
+/// against `e2e data plane chained` is the event-time surcharge
+/// (watermark bookkeeping + data-dependent pane assignment).
+fn e2e_event_time(
+    broker: &Arc<Broker>,
+    topic: &Arc<Topic>,
+    group: &Arc<sprobench::broker::ConsumerGroup>,
+    events: u64,
+) -> f64 {
+    use sprobench::config::{OpSpec, PipelineSpec};
+    use sprobench::engine::{AggKind, LatePolicy, WindowTime};
+    let mut cfg = scenarios::wall_base("hotpath-event-time");
+    cfg.engine.use_hlo = false;
+    cfg.engine.pipeline_spec = Some(PipelineSpec {
+        ops: vec![
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 100_000,
+                slide_micros: 50_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: 10_000,
+                late_policy: LatePolicy::MergeIfOpen,
+                watermark_micros: 5_000,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    });
+    let factory = StepFactory::new(&cfg, None);
+    let mut step = factory.create(0).expect("compile event-time chain");
+
+    let mut serializer = EventSerializer::new(EventFormat::Csv, 27);
+    let mut wire = Vec::new();
+    let mut sent = 0u64;
+    while sent < events {
+        let chunk = 512.min(events - sent);
+        let mut pb = PartitionedBatchBuilder::new(topic.partition_count());
+        let mut idx: Vec<u64> = (sent..sent + chunk).collect();
+        for block in idx.chunks_mut(32) {
+            block.reverse();
+        }
+        for &i in &idx {
+            let ev = SensorEvent {
+                ts_micros: i * 100,
+                sensor_id: (i % 1024) as u32,
+                temp_c: 20.0 + (i % 40) as f32,
+            };
+            serializer.serialize(&ev, &mut wire);
+            // Everything on partition 0: the whole stream is produced
+            // before consumption starts, and per-partition polling would
+            // otherwise interleave ~seconds of event-time skew across
+            // partitions — blowing past the watermark bound and turning
+            // the case into a drop-path measurement instead of real
+            // watermark bookkeeping + pane assignment.
+            pb.push(0, ev.sensor_id, &wire, ev.ts_micros);
+        }
+        broker.produce_batches(topic, pb.finish()).unwrap();
+        sent += chunk;
+    }
+    let mut seen = 0u64;
+    let mut parsed = EventBatch::with_capacity(4096);
+    let mut out = Vec::new();
+    while seen < events {
+        if let Ok(Some(b)) = group.poll(0, 4096) {
+            seen += b.record_count() as u64;
+            parsed.clear();
+            parsed.extend_from_batches(&b.batches);
+            out.clear();
+            step.process(seen * 100, &[], &parsed, &mut out).unwrap();
+            std::hint::black_box(out.len());
+            group.commit(b.partition, b.next_offset);
+        }
+    }
+    let mut tail = Vec::new();
+    step.finish(seen * 100 + 1_000_000, &mut tail).unwrap();
+    std::hint::black_box(tail.len());
+    events as f64
+}
+
 fn eps(m: &[Measurement], name: &str) -> f64 {
     m.iter()
         .find(|m| m.name == name)
@@ -274,6 +358,13 @@ fn main() {
         let g = broker.subscribe("dp-chain", "dpc", 1);
         b.measure("e2e data plane chained", 1, iters, || {
             e2e_chained(&broker, &t, &g, &payloads, n / 2)
+        });
+    }
+    {
+        let t = broker.create_topic("dp-event");
+        let g = broker.subscribe("dp-event", "dpe", 1);
+        b.measure("e2e data plane event-time", 1, iters, || {
+            e2e_event_time(&broker, &t, &g, n / 2)
         });
     }
 
@@ -432,6 +523,7 @@ fn main() {
     let per_record_eps = eps(b.measurements(), "e2e data plane per-record");
     let batched_eps = eps(b.measurements(), "e2e data plane batched");
     let chained_eps = eps(b.measurements(), "e2e data plane chained");
+    let event_time_eps = eps(b.measurements(), "e2e data plane event-time");
     let speedup = if per_record_eps > 0.0 {
         batched_eps / per_record_eps
     } else {
@@ -441,6 +533,12 @@ fn main() {
     // chained preset costs throughput; tracked per PR).
     let chain_vs_batched = if batched_eps > 0.0 {
         chained_eps / batched_eps
+    } else {
+        0.0
+    };
+    // Event-time surcharge vs the processing-time chained loop.
+    let event_vs_chained = if chained_eps > 0.0 {
+        event_time_eps / chained_eps
     } else {
         0.0
     };
@@ -466,6 +564,8 @@ fn main() {
     dp.set("speedup", Json::Num(speedup));
     dp.set("chained_eps", Json::Num(chained_eps));
     dp.set("chain_vs_batched", Json::Num(chain_vs_batched));
+    dp.set("event_time_eps", Json::Num(event_time_eps));
+    dp.set("event_vs_chained", Json::Num(event_vs_chained));
     doc.set("data_plane", dp);
     match std::fs::write("BENCH_hotpath.json", doc.to_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json (data-plane speedup: {speedup:.2}x)"),

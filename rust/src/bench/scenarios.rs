@@ -6,8 +6,10 @@
 //! bench target on identical configurations so the figures stay
 //! comparable.
 
-use crate::config::{BenchConfig, CmpOp, ExecMode, Framework, OpSpec, PipelineKind, PipelineSpec};
-use crate::engine::AggKind;
+use crate::config::{
+    BenchConfig, CmpOp, DisorderSection, ExecMode, Framework, OpSpec, PipelineKind, PipelineSpec,
+};
+use crate::engine::{AggKind, LatePolicy, WindowTime};
 
 /// Baseline wall-mode scenario: short, laptop-friendly.
 pub fn wall_base(name: &str) -> BenchConfig {
@@ -126,11 +128,7 @@ pub fn chained_filter_topk() -> BenchConfig {
                 value: 20.0,
             },
             OpSpec::KeyBy { modulo: 64 },
-            OpSpec::Window {
-                agg: AggKind::Mean,
-                window_micros: 1_000_000,
-                slide_micros: 500_000,
-            },
+            OpSpec::window(AggKind::Mean, 1_000_000, 500_000),
             OpSpec::TopK { k: 10 },
             OpSpec::EmitAggregates,
         ],
@@ -155,6 +153,69 @@ pub fn chained_hot_projection() -> BenchConfig {
             OpSpec::EmitEvents,
         ],
     });
+    cfg
+}
+
+/// Event-time scenario: disordered workload (bounded lateness + shuffle
+/// window + a sliver of droppable stragglers) through an event-time
+/// window whose watermark bound matches the disorder's lateness and whose
+/// late policy merges still-open windows — the configuration under which
+/// event-time aggregates reproduce the in-order stream's results, modulo
+/// stragglers.
+pub fn event_time_disorder() -> BenchConfig {
+    let mut cfg = wall_base("event-time-disorder");
+    cfg.workload.sensors = 256;
+    cfg.workload.disorder = DisorderSection {
+        lateness_micros: 250_000,
+        late_fraction: 0.25,
+        straggler_fraction: 0.01,
+        straggler_micros: 2_000_000,
+        shuffle_window: 128,
+    };
+    cfg.engine.pipeline_spec = Some(PipelineSpec {
+        ops: vec![
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 1_000_000,
+                slide_micros: 500_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: 250_000,
+                late_policy: LatePolicy::MergeIfOpen,
+                // Explicitly pinned to the disorder's lateness bound (the
+                // omitted-field inherit would resolve to max(lateness,
+                // slide) = 500ms and overshoot the documented scenario).
+                watermark_micros: 250_000,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    });
+    cfg
+}
+
+/// Event-time scenario, strict flavour: a tight watermark, zero allowed
+/// lateness and a `drop` policy over the same disordered workload — the
+/// configuration that makes lateness *visible* (dropped counts, watermark
+/// lag) and exercises the `max_late_fraction` sustainability check.
+pub fn event_time_strict() -> BenchConfig {
+    let mut cfg = event_time_disorder();
+    cfg.bench.name = "event-time-strict".into();
+    cfg.engine.pipeline_spec = Some(PipelineSpec {
+        ops: vec![
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 1_000_000,
+                slide_micros: 500_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: 0,
+                late_policy: LatePolicy::Drop,
+                watermark_micros: 50_000, // far below the 250ms disorder
+            },
+            OpSpec::EmitAggregates,
+        ],
+    });
+    // A quarter of the stream is late by construction; fail the run only
+    // when more than half goes missing.
+    cfg.experiment.max_late_fraction = 0.5;
     cfg
 }
 
@@ -201,6 +262,37 @@ mod tests {
             .pipeline_spec
             .unwrap()
             .has_window());
+    }
+
+    #[test]
+    fn event_time_presets_validate_and_differ_in_policy() {
+        for cfg in [event_time_disorder(), event_time_strict()] {
+            cfg.validate().unwrap();
+            assert!(cfg.workload.disorder.enabled());
+            let spec = cfg.engine.pipeline_spec.as_ref().unwrap();
+            match &spec.ops[0] {
+                OpSpec::Window { time, .. } => assert_eq!(*time, WindowTime::Event),
+                other => panic!("expected an event-time window, got {other:?}"),
+            }
+        }
+        let relaxed = event_time_disorder();
+        match &relaxed.engine.pipeline_spec.unwrap().ops[0] {
+            OpSpec::Window {
+                late_policy,
+                allowed_lateness_micros,
+                ..
+            } => {
+                assert_eq!(*late_policy, LatePolicy::MergeIfOpen);
+                assert!(*allowed_lateness_micros > 0);
+            }
+            _ => unreachable!(),
+        }
+        let strict = event_time_strict();
+        assert_eq!(strict.experiment.max_late_fraction, 0.5);
+        match &strict.engine.pipeline_spec.unwrap().ops[0] {
+            OpSpec::Window { late_policy, .. } => assert_eq!(*late_policy, LatePolicy::Drop),
+            _ => unreachable!(),
+        }
     }
 
     #[test]

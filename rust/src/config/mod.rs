@@ -12,8 +12,8 @@ pub mod schema;
 pub mod yaml;
 
 pub use schema::{
-    parse_pipeline_spec, pipeline_grammar, BenchConfig, CmpOp, ConfigError, ExecMode, Framework,
-    OpSpec, Pattern, PipelineKind, PipelineSpec,
+    parse_pipeline_spec, pipeline_grammar, BenchConfig, CmpOp, ConfigError, DisorderSection,
+    ExecMode, Framework, OpSpec, Pattern, PipelineKind, PipelineSpec,
 };
 
 use crate::util::json::Json;

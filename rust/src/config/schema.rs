@@ -4,7 +4,7 @@
 //! config is the only manual step).  All quantities accept human units
 //! ("500K", "27B", "30s") via [`crate::util::units`].
 
-use crate::engine::window::AggKind;
+use crate::engine::window::{AggKind, LatePolicy, WindowTime};
 use crate::util::json::Json;
 use crate::util::units::{parse_bytes, parse_count, parse_duration_micros};
 
@@ -70,21 +70,13 @@ impl PipelineKind {
             PipelineKind::PassThrough => vec![OpSpec::Forward],
             PipelineKind::CpuIntensive => vec![OpSpec::CpuTransform, OpSpec::EmitEvents],
             PipelineKind::MemIntensive => vec![
-                OpSpec::Window {
-                    agg: AggKind::Mean,
-                    window_micros: 0,
-                    slide_micros: 0,
-                },
+                OpSpec::window(AggKind::Mean, 0, 0),
                 OpSpec::EmitAggregates,
             ],
             PipelineKind::Fused => vec![
                 OpSpec::CpuTransform,
                 OpSpec::EmitEvents,
-                OpSpec::Window {
-                    agg: AggKind::Mean,
-                    window_micros: 0,
-                    slide_micros: 0,
-                },
+                OpSpec::window(AggKind::Mean, 0, 0),
                 OpSpec::EmitAggregates,
             ],
         };
@@ -150,11 +142,24 @@ pub enum OpSpec {
     KeyBy { modulo: u32 },
     /// Keyed sliding-window aggregation; 0 durations inherit
     /// `engine.window` / `engine.slide`.  Consumes event rows and emits
-    /// aggregate rows downstream.
+    /// aggregate rows downstream.  `time: event` switches pane assignment
+    /// from arrival order to the record's generation timestamp, driven by
+    /// a bounded-disorder watermark.
     Window {
         agg: AggKind,
         window_micros: u64,
         slide_micros: u64,
+        /// Processing-time (default) or event-time pane assignment.
+        time: WindowTime,
+        /// Event time only: windows stay open until the watermark passes
+        /// `end + allowed_lateness`.
+        allowed_lateness_micros: u64,
+        /// Event time only: what to do with records behind the watermark.
+        late_policy: LatePolicy,
+        /// Event time only: watermark bound (disorder slack); 0 inherits
+        /// `max(workload.disorder.lateness, slide)` — the slide floor
+        /// protects shuffle-only disorder from a degenerate tiny bound.
+        watermark_micros: u64,
     },
     /// Keep the `k` largest aggregates per window.
     TopK { k: usize },
@@ -169,6 +174,20 @@ pub enum OpSpec {
 }
 
 impl OpSpec {
+    /// A processing-time window op (the common literal form; event-time
+    /// windows set the extra fields explicitly).
+    pub fn window(agg: AggKind, window_micros: u64, slide_micros: u64) -> OpSpec {
+        OpSpec::Window {
+            agg,
+            window_micros,
+            slide_micros,
+            time: WindowTime::Processing,
+            allowed_lateness_micros: 0,
+            late_policy: LatePolicy::default(),
+            watermark_micros: 0,
+        }
+    }
+
     pub fn op_name(&self) -> &str {
         match self {
             OpSpec::Forward => "forward",
@@ -248,6 +267,37 @@ pub struct BurstPattern {
     pub burst_rate: u64,
 }
 
+/// Out-of-order workload model (`workload.disorder`): perturbs each
+/// event's generation timestamp relative to its emission order, so the
+/// stream arriving at the engine carries the disorder every real HPC
+/// ingest path exhibits.  All knobs default to 0 (perfectly ordered).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DisorderSection {
+    /// Maximum in-bound lateness (µs): delayed events are backdated by
+    /// uniform(0, lateness].  An event-time window whose watermark bound
+    /// covers this never drops an in-bound event.
+    pub lateness_micros: u64,
+    /// Fraction of events receiving an in-bound delay.
+    pub late_fraction: f64,
+    /// Fraction of events becoming "too-late" stragglers: backdated by
+    /// lateness + uniform(0, straggler_lateness] — droppable by design.
+    pub straggler_fraction: f64,
+    /// Extra delay span for stragglers beyond `lateness` (µs).
+    pub straggler_micros: u64,
+    /// Reorder-buffer size: each emission slot releases a uniformly
+    /// random pending event, shuffling emission order (0 disables).
+    pub shuffle_window: usize,
+}
+
+impl DisorderSection {
+    /// True when any disorder mechanism is active.
+    pub fn enabled(&self) -> bool {
+        (self.lateness_micros > 0 && self.late_fraction > 0.0)
+            || self.straggler_fraction > 0.0
+            || self.shuffle_window > 0
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct WorkloadSection {
     pub pattern: Pattern,
@@ -261,6 +311,8 @@ pub struct WorkloadSection {
     pub key_skew: f64,
     pub random: RandomPattern,
     pub burst: BurstPattern,
+    /// Out-of-order arrival model; disabled by default.
+    pub disorder: DisorderSection,
 }
 
 #[derive(Clone, Debug)]
@@ -364,6 +416,10 @@ pub struct ExperimentSection {
     /// iteration are discarded before evaluating sustainability;
     /// 0 = inherit `benchmark.warmup`.
     pub warmup_discard_micros: u64,
+    /// A run is unsustainable when more than this fraction of processed
+    /// events arrived behind the watermark (late + dropped, summed across
+    /// event-time operators); 0 disables the check.
+    pub max_late_fraction: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -415,6 +471,7 @@ impl Default for BenchConfig {
                     interval_micros: 1_000_000,
                     burst_rate: 1_000_000,
                 },
+                disorder: DisorderSection::default(),
             },
             generators: GeneratorSection {
                 instance_capacity: 500_000,
@@ -455,6 +512,7 @@ impl Default for BenchConfig {
                 max_latency_growth: 0.0,
                 iteration_duration_micros: 0,
                 warmup_discard_micros: 0,
+                max_late_fraction: 0.0,
             },
             slurm: SlurmSection {
                 enabled: false,
@@ -564,15 +622,21 @@ operator-chain spec:
           modulo: 64
       - window:
           agg: mean        # mean | sum | min | max | count
-          window: 2s       # omit to inherit engine.window
+          window: 2s       # omit to inherit engine.window; slide must divide window
           slide: 1s        # omit to inherit engine.slide
+          time: event      # processing (default) | event
+          allowed_lateness: 250ms   # event time: hold windows open past end
+          late_policy: merge_if_open  # drop | side_count | merge_if_open
+          watermark: 250ms # event time: disorder slack; omit to inherit
+                           # max(workload.disorder.lateness, slide)
       - topk:
           k: 10
       - emit: aggregates   # or: events
 built-in ops: forward, filter(cmp,value), map(scale,offset), cpu_transform, \
-keyby(modulo), window(agg,window,slide), topk(k), emit(events|aggregates); \
-any other name resolves against the custom OperatorRegistry at engine start \
-(see docs/ARCHITECTURE.md §Pipeline operator chains)"
+keyby(modulo), window(agg,window,slide,time,allowed_lateness,late_policy,\
+watermark), topk(k), emit(events|aggregates); any other name resolves \
+against the custom OperatorRegistry at engine start \
+(see docs/ARCHITECTURE.md §Pipeline operator chains and §Time semantics)"
 }
 
 /// Parse an operator-chain spec from its JSON tree: either `{ops: [...]}`
@@ -703,10 +767,45 @@ fn build_op(i: usize, name: &str, params: &Json) -> Result<OpSpec, ConfigError> 
                     "unknown agg '{agg_name}' — expected mean, sum, min, max or count"
                 )))
             })?;
+            let time_name = params
+                .get("time")
+                .and_then(|v| v.as_str())
+                .unwrap_or("processing");
+            let time = WindowTime::from_name(time_name).ok_or_else(|| {
+                ConfigError(at(&format!(
+                    "unknown time '{time_name}' — expected processing or event"
+                )))
+            })?;
+            let policy_name = params
+                .get("late_policy")
+                .and_then(|v| v.as_str())
+                .unwrap_or("drop");
+            let late_policy = LatePolicy::from_name(policy_name).ok_or_else(|| {
+                ConfigError(at(&format!(
+                    "unknown late_policy '{policy_name}' — expected drop, side_count \
+                     or merge_if_open"
+                )))
+            })?;
+            let allowed_lateness_micros = get_duration(params, "allowed_lateness", 0)?;
+            let watermark_micros = get_duration(params, "watermark", 0)?;
+            if time == WindowTime::Processing
+                && (allowed_lateness_micros > 0
+                    || watermark_micros > 0
+                    || params.get("late_policy").is_some())
+            {
+                return err(at(
+                    "allowed_lateness/late_policy/watermark apply only to \
+                     `time: event` windows",
+                ));
+            }
             Ok(OpSpec::Window {
                 agg,
                 window_micros: get_duration(params, "window", 0)?,
                 slide_micros: get_duration(params, "slide", 0)?,
+                time,
+                allowed_lateness_micros,
+                late_policy,
+                watermark_micros,
             })
         }
         "topk" => {
@@ -744,6 +843,7 @@ impl BenchConfig {
         let w = section(root, "workload");
         let rnd = section(&w, "random");
         let burst = section(&w, "burst");
+        let dis = section(&w, "disorder");
         let workload = WorkloadSection {
             pattern: match get_str(&w, "pattern", "constant").as_str() {
                 "constant" => Pattern::Constant,
@@ -772,6 +872,25 @@ impl BenchConfig {
             burst: BurstPattern {
                 interval_micros: get_duration(&burst, "interval", d.workload.burst.interval_micros)?,
                 burst_rate: get_u64(&burst, "burst_rate", d.workload.burst.burst_rate)?,
+            },
+            disorder: DisorderSection {
+                lateness_micros: get_duration(&dis, "lateness", d.workload.disorder.lateness_micros)?,
+                late_fraction: get_f64(&dis, "late_fraction", d.workload.disorder.late_fraction)?,
+                straggler_fraction: get_f64(
+                    &dis,
+                    "straggler_fraction",
+                    d.workload.disorder.straggler_fraction,
+                )?,
+                straggler_micros: get_duration(
+                    &dis,
+                    "straggler_lateness",
+                    d.workload.disorder.straggler_micros,
+                )?,
+                shuffle_window: get_u64(
+                    &dis,
+                    "shuffle_window",
+                    d.workload.disorder.shuffle_window as u64,
+                )? as usize,
             },
         };
 
@@ -876,6 +995,7 @@ impl BenchConfig {
                 "warmup_discard",
                 d.experiment.warmup_discard_micros,
             )?,
+            max_late_fraction: get_f64(&x, "max_late_fraction", d.experiment.max_late_fraction)?,
         };
 
         let s = section(root, "slurm");
@@ -941,8 +1061,39 @@ impl BenchConfig {
         if self.engine.slide_micros > self.engine.window_micros {
             return err("engine.slide must be <= engine.window");
         }
-        if let Some(spec) = &self.engine.pipeline_spec {
-            self.validate_spec(spec)?;
+        // Validate the chain that will actually run: the explicit spec, or
+        // the canonical chain of the configured kind (whose window inherits
+        // engine.window/slide — so a non-divisible pane spec is caught here
+        // for every pipeline, not only explicit `ops:` documents).
+        self.validate_spec(&self.engine.effective_spec())?;
+        let dis = &self.workload.disorder;
+        for (name, frac) in [
+            ("late_fraction", dis.late_fraction),
+            ("straggler_fraction", dis.straggler_fraction),
+        ] {
+            if !(0.0..=1.0).contains(&frac) || !frac.is_finite() {
+                return err(format!(
+                    "workload.disorder.{name} must be in [0, 1] (got {frac})"
+                ));
+            }
+        }
+        if dis.late_fraction + dis.straggler_fraction > 1.0 {
+            return err(format!(
+                "workload.disorder: late_fraction + straggler_fraction must not exceed 1 \
+                 (got {} + {})",
+                dis.late_fraction, dis.straggler_fraction
+            ));
+        }
+        if dis.late_fraction > 0.0 && dis.lateness_micros == 0 {
+            return err(
+                "workload.disorder.late_fraction > 0 needs `lateness:` > 0 (the delay bound)",
+            );
+        }
+        if dis.straggler_fraction > 0.0 && dis.straggler_micros == 0 {
+            return err(
+                "workload.disorder.straggler_fraction > 0 needs `straggler_lateness:` > 0 \
+                 (the extra delay span beyond `lateness`)",
+            );
         }
         // Negated comparisons so NaN (parseable from YAML "nan") fails
         // every bound instead of slipping past it.
@@ -965,6 +1116,12 @@ impl BenchConfig {
         if !(growth == 0.0 || (growth >= 1.0 && growth.is_finite())) {
             return err(format!(
                 "experiment.max_latency_growth must be 0 (disabled) or a finite number >= 1 (got {growth})"
+            ));
+        }
+        let late = self.experiment.max_late_fraction;
+        if !(0.0..=1.0).contains(&late) || !late.is_finite() {
+            return err(format!(
+                "experiment.max_late_fraction must be in [0, 1] (0 disables; got {late})"
             ));
         }
         let needed =
@@ -1012,6 +1169,17 @@ impl BenchConfig {
                         return err(format!(
                             "engine.pipeline.ops[{i}] (window): needs slide in (0, window] \
                              (resolved window={w}µs slide={s}µs)"
+                        ));
+                    }
+                    // Pane decomposition needs S | W; anything else would
+                    // silently truncate W/S panes inside the window state.
+                    if w % s != 0 {
+                        return err(format!(
+                            "engine.pipeline.ops[{i}] (window): slide must divide window \
+                             exactly — the window is covered by W/S whole panes \
+                             (resolved window={w}µs slide={s}µs leaves a {}µs remainder)\n{}",
+                            w % s,
+                            pipeline_grammar()
                         ));
                     }
                     saw_window = true;
@@ -1203,11 +1371,7 @@ engine:
         assert_eq!(spec.ops[1], OpSpec::KeyBy { modulo: 64 });
         assert_eq!(
             spec.ops[2],
-            OpSpec::Window {
-                agg: AggKind::Mean,
-                window_micros: 2_000_000,
-                slide_micros: 1_000_000
-            }
+            OpSpec::window(AggKind::Mean, 2_000_000, 1_000_000)
         );
         assert_eq!(spec.ops[3], OpSpec::TopK { k: 10 });
         assert_eq!(spec.ops[4], OpSpec::EmitAggregates);
@@ -1335,6 +1499,153 @@ engine:
             ops: vec![OpSpec::Forward],
         });
         assert_eq!(cfg.engine.pipeline_label(), "chain[forward]");
+    }
+
+    #[test]
+    fn disorder_section_parses_with_units() {
+        let y = "
+workload:
+  disorder:
+    lateness: 250ms
+    late_fraction: 0.25
+    straggler_fraction: 0.01
+    straggler_lateness: 2s
+    shuffle_window: 128
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        let d = &cfg.workload.disorder;
+        assert_eq!(d.lateness_micros, 250_000);
+        assert_eq!(d.late_fraction, 0.25);
+        assert_eq!(d.straggler_fraction, 0.01);
+        assert_eq!(d.straggler_micros, 2_000_000);
+        assert_eq!(d.shuffle_window, 128);
+        assert!(d.enabled());
+        assert!(!BenchConfig::default().workload.disorder.enabled());
+    }
+
+    #[test]
+    fn disorder_bounds_rejected() {
+        for (y, needle) in [
+            ("workload:\n  disorder:\n    late_fraction: 1.5\n", "late_fraction"),
+            ("workload:\n  disorder:\n    straggler_fraction: -0.1\n", "straggler_fraction"),
+            (
+                "workload:\n  disorder:\n    lateness: 1s\n    late_fraction: 0.6\n    straggler_fraction: 0.6\n    straggler_lateness: 1s\n",
+                "must not exceed 1",
+            ),
+            ("workload:\n  disorder:\n    late_fraction: 0.5\n", "lateness"),
+            (
+                "workload:\n  disorder:\n    straggler_fraction: 0.1\n",
+                "straggler_lateness",
+            ),
+        ] {
+            let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+            assert!(e.0.contains(needle), "expected '{needle}' in: {e}");
+        }
+    }
+
+    #[test]
+    fn event_time_window_spec_parses() {
+        let y = "
+engine:
+  pipeline:
+    ops:
+      - window:
+          agg: mean
+          window: 2s
+          slide: 1s
+          time: event
+          allowed_lateness: 250ms
+          late_policy: merge_if_open
+          watermark: 300ms
+      - emit: aggregates
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        let spec = cfg.engine.pipeline_spec.unwrap();
+        assert_eq!(
+            spec.ops[0],
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 2_000_000,
+                slide_micros: 1_000_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: 250_000,
+                late_policy: LatePolicy::MergeIfOpen,
+                watermark_micros: 300_000,
+            }
+        );
+    }
+
+    #[test]
+    fn event_time_knobs_rejected_on_processing_windows() {
+        let y = "
+engine:
+  pipeline:
+    ops:
+      - window:
+          agg: mean
+          window: 2s
+          slide: 1s
+          allowed_lateness: 250ms
+      - emit: aggregates
+";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("time: event"), "{e}");
+        // Unknown enum values are readable errors.
+        for (y, needle) in [
+            (
+                "engine:\n  pipeline:\n    ops:\n      - window:\n          time: lunar\n",
+                "unknown time",
+            ),
+            (
+                "engine:\n  pipeline:\n    ops:\n      - window:\n          time: event\n          late_policy: hope\n",
+                "unknown late_policy",
+            ),
+        ] {
+            let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+            assert!(e.0.contains(needle), "expected '{needle}' in: {e}");
+        }
+    }
+
+    #[test]
+    fn non_divisible_window_slide_rejected_with_grammar() {
+        // Explicit spec.
+        let y = "
+engine:
+  pipeline:
+    ops:
+      - window:
+          agg: mean
+          window: 10s
+          slide: 3s
+      - emit: aggregates
+";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("slide must divide window"), "{e}");
+        assert!(e.0.contains("1000000µs remainder"), "{e}");
+        assert!(e.0.contains("ops:"), "error must carry the grammar: {e}");
+        // Canonical kind inheriting non-divisible engine.window/slide is
+        // caught too (the mem pipeline would silently truncate panes).
+        let y = "engine:\n  pipeline: mem\n  window: 10s\n  slide: 3s\n";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("slide must divide window"), "{e}");
+    }
+
+    #[test]
+    fn max_late_fraction_parses_and_bounds() {
+        let y = "experiment:\n  max_late_fraction: 0.05\n";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert_eq!(cfg.experiment.max_late_fraction, 0.05);
+        assert_eq!(BenchConfig::default().experiment.max_late_fraction, 0.0);
+        for y in [
+            "experiment:\n  max_late_fraction: 1.5\n",
+            "experiment:\n  max_late_fraction: -0.2\n",
+            "experiment:\n  max_late_fraction: nan\n",
+        ] {
+            assert!(
+                BenchConfig::from_json(&yaml::parse(y).unwrap()).is_err(),
+                "should reject: {y}"
+            );
+        }
     }
 
     #[test]

@@ -96,7 +96,16 @@ impl SimModel {
                 OpSpec::Map { .. } => 0.06,
                 OpSpec::KeyBy { .. } => 0.06,
                 OpSpec::CpuTransform => 1e6 / self.task_rate_cpu - 0.25,
-                OpSpec::Window { .. } => 1e6 / self.task_rate_mem - 0.25,
+                // Event-time windows pay a small extra service time per
+                // event: watermark bookkeeping + late routing, and the
+                // native (non-HLO) accumulation path.
+                OpSpec::Window { time, .. } => {
+                    1e6 / self.task_rate_mem - 0.25
+                        + match time {
+                            crate::engine::WindowTime::Processing => 0.0,
+                            crate::engine::WindowTime::Event => 0.06,
+                        }
+                }
                 OpSpec::TopK { .. } => 0.12,
                 OpSpec::EmitEvents | OpSpec::EmitAggregates => 0.25,
                 OpSpec::Custom { .. } => 0.50,
@@ -342,11 +351,7 @@ mod tests {
                     value: 25.0,
                 },
                 OpSpec::KeyBy { modulo: 64 },
-                OpSpec::Window {
-                    agg: AggKind::Mean,
-                    window_micros: 2_000_000,
-                    slide_micros: 1_000_000,
-                },
+                OpSpec::window(AggKind::Mean, 2_000_000, 1_000_000),
                 OpSpec::TopK { k: 10 },
                 OpSpec::EmitAggregates,
             ],
@@ -368,11 +373,7 @@ mod tests {
         let mut post = cfg(50_000_000, 8);
         post.engine.pipeline_spec = Some(PipelineSpec {
             ops: vec![
-                OpSpec::Window {
-                    agg: AggKind::Mean,
-                    window_micros: 2_000_000,
-                    slide_micros: 1_000_000,
-                },
+                OpSpec::window(AggKind::Mean, 2_000_000, 1_000_000),
                 OpSpec::KeyBy { modulo: 4 },
                 OpSpec::EmitAggregates,
             ],
@@ -380,6 +381,42 @@ mod tests {
         let (sp, _) = run_sim(&post, &m);
         let keys = post.workload.sensors.min(1024) as u64;
         assert_eq!(sp.emitted, (post.bench.duration_micros / 1_000_000) * keys);
+    }
+
+    #[test]
+    fn event_time_window_costs_more_than_processing_time() {
+        use crate::engine::{AggKind, LatePolicy, WindowTime};
+        let m = SimModel::default();
+        let spec_for = |time: WindowTime| {
+            PipelineSpec {
+                ops: vec![
+                    OpSpec::Window {
+                        agg: AggKind::Mean,
+                        window_micros: 2_000_000,
+                        slide_micros: 1_000_000,
+                        time,
+                        allowed_lateness_micros: 0,
+                        late_policy: LatePolicy::Drop,
+                        watermark_micros: 0,
+                    },
+                    OpSpec::EmitAggregates,
+                ],
+            }
+        };
+        let mut proc = cfg(50_000_000, 8);
+        proc.engine.pipeline_spec = Some(spec_for(WindowTime::Processing));
+        let mut event = cfg(50_000_000, 8);
+        event.engine.pipeline_spec = Some(spec_for(WindowTime::Event));
+        let (sp, _) = run_sim(&proc, &m);
+        let (se, _) = run_sim(&event, &m);
+        assert!(
+            se.processed_rate < sp.processed_rate,
+            "event-time bookkeeping must cost service time: {} !< {}",
+            se.processed_rate,
+            sp.processed_rate
+        );
+        // Emission cadence (slide-driven) is time-domain independent.
+        assert_eq!(se.emitted, sp.emitted);
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //!   (lowest latency, more per-batch overhead).
 //!
 //! * [`batch`] — parsed event batches (records → tensors-ready arrays).
-//! * [`window`] — sliding-window pane state for the keyed pipeline.
+//! * [`window`] — sliding-window pane state for the keyed pipeline, in
+//!   processing-time and event-time (watermark-driven) flavours.
+//! * [`watermark`] — bounded-disorder watermark tracking.
 //! * [`personality`] — the framework execution disciplines.
 //! * [`task`] — one task slot's poll→process→produce→commit loop.
 //! * [`core`] — engine lifecycle: spawn tasks, join, aggregate stats.
@@ -25,9 +27,11 @@ pub mod batch;
 pub mod core;
 pub mod personality;
 pub mod task;
+pub mod watermark;
 pub mod window;
 
 pub use batch::EventBatch;
 pub use core::{Engine, EngineReport};
 pub use personality::Personality;
-pub use window::{AggKind, SlidingWindow, WindowEmit};
+pub use watermark::WatermarkTracker;
+pub use window::{AggKind, EventTimeWindow, LatePolicy, SlidingWindow, WindowEmit, WindowTime};

@@ -1,4 +1,5 @@
-//! Keyed sliding-window pane state with pluggable aggregators.
+//! Keyed sliding-window pane state with pluggable aggregators, in both
+//! processing-time and event-time flavours.
 //!
 //! The paper's memory-intensive pipeline keys the stream by sensor ID and
 //! maintains a sliding-window mean temperature per key as operator state
@@ -8,12 +9,26 @@
 //! the `mem_pipeline_step` HLO artifact computes — and on every slide
 //! boundary the live panes merge into one window emission.
 //!
+//! Two time domains (following Karimov et al., "Benchmarking Distributed
+//! Stream Data Processing Systems"):
+//!
+//! * [`SlidingWindow`] — **processing time**: records land in the pane
+//!   that is open when they are processed; windows close on wall/virtual
+//!   clock boundaries.
+//! * [`EventTimeWindow`] — **event time**: records are assigned to panes
+//!   by their generation timestamp (`gen_ts`), windows stay open until a
+//!   watermark (see [`super::watermark::WatermarkTracker`]) passes
+//!   `end + allowed_lateness`, and records arriving behind the watermark
+//!   are routed through a [`LatePolicy`].
+//!
 //! The aggregation applied at merge time is pluggable ([`AggKind`]):
 //! mean, sum and count all reduce over the same `(sum, cnt)` pane state
 //! (and therefore stay HLO-compatible); min and max additionally track
-//! per-pane extrema and are native-only.
+//! per-pane extrema and are native-only.  Event-time windows accumulate
+//! natively — pane assignment is data-dependent per record, which the
+//! single-state `mem_pipeline_step` artifact cannot express.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Per-key aggregation function applied when a window closes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,6 +82,71 @@ impl AggKind {
     }
 }
 
+/// Which clock assigns records to window panes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WindowTime {
+    /// Panes follow the processing clock (arrival order) — the default.
+    #[default]
+    Processing,
+    /// Panes follow the record's generation timestamp; windows close on
+    /// watermark progress.
+    Event,
+}
+
+impl WindowTime {
+    pub fn name(self) -> &'static str {
+        match self {
+            WindowTime::Processing => "processing",
+            WindowTime::Event => "event",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<WindowTime> {
+        match s {
+            "processing" | "proc" | "wall" => Some(WindowTime::Processing),
+            "event" | "event_time" | "event-time" => Some(WindowTime::Event),
+            _ => None,
+        }
+    }
+}
+
+/// What an event-time window does with a record that arrives behind the
+/// watermark while at least one window covering it is still open.
+/// Records whose every covering window has already been finalized are
+/// always dropped (and counted), whatever the policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LatePolicy {
+    /// Discard late records (counted as dropped).
+    #[default]
+    Drop,
+    /// Discard late records from aggregation but account for them in the
+    /// side channel (`late_events`).
+    SideCount,
+    /// Merge late records into their pane when the covering window is
+    /// still open — with a watermark bound at or above the stream's real
+    /// disorder this reproduces the in-order aggregates exactly.
+    MergeIfOpen,
+}
+
+impl LatePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            LatePolicy::Drop => "drop",
+            LatePolicy::SideCount => "side_count",
+            LatePolicy::MergeIfOpen => "merge_if_open",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<LatePolicy> {
+        match s {
+            "drop" => Some(LatePolicy::Drop),
+            "side_count" | "side-count" | "side" => Some(LatePolicy::SideCount),
+            "merge_if_open" | "merge-if-open" | "merge" => Some(LatePolicy::MergeIfOpen),
+            _ => None,
+        }
+    }
+}
+
 /// One pane's keyed accumulator (the tensors the HLO kernel updates).
 #[derive(Clone, Debug)]
 pub struct Pane {
@@ -86,6 +166,24 @@ impl Pane {
             cnt: vec![0.0; k],
             min: if extrema { vec![f32::INFINITY; k] } else { Vec::new() },
             max: if extrema { vec![f32::NEG_INFINITY; k] } else { Vec::new() },
+        }
+    }
+
+    /// Record one `(key index, value)` event — the single definition of
+    /// the per-record pane update, shared by the processing-time and
+    /// event-time accumulation paths (the merge side is shared the same
+    /// way via `merge_panes`).
+    #[inline]
+    fn record(&mut self, i: usize, v: f32) {
+        self.sum[i] += v;
+        self.cnt[i] += 1.0;
+        if !self.min.is_empty() {
+            if v < self.min[i] {
+                self.min[i] = v;
+            }
+            if v > self.max[i] {
+                self.max[i] = v;
+            }
         }
     }
 
@@ -130,7 +228,12 @@ impl SlidingWindow {
         start_micros: u64,
         agg: AggKind,
     ) -> Self {
-        assert!(slide_micros > 0 && window_micros >= slide_micros);
+        // Backstop only: config validation rejects non-divisible specs
+        // with a readable error before any window is constructed.
+        assert!(
+            slide_micros > 0 && window_micros >= slide_micros && window_micros % slide_micros == 0,
+            "window ({window_micros}µs) must be a whole multiple of slide ({slide_micros}µs)"
+        );
         let aligned = start_micros - start_micros % slide_micros;
         let extrema = !agg.uses_sum_cnt();
         Self {
@@ -170,20 +273,10 @@ impl SlidingWindow {
 
     /// Native accumulation path (ablation / no-HLO mode / extrema).
     pub fn accumulate_native(&mut self, ids: &[u32], vals: &[f32]) {
-        let extrema = !self.current.min.is_empty();
         for (&id, &v) in ids.iter().zip(vals) {
             let i = id as usize;
             if i < self.k {
-                self.current.sum[i] += v;
-                self.current.cnt[i] += 1.0;
-                if extrema {
-                    if v < self.current.min[i] {
-                        self.current.min[i] = v;
-                    }
-                    if v > self.current.max[i] {
-                        self.current.max[i] = v;
-                    }
-                }
+                self.current.record(i, v);
             }
         }
     }
@@ -215,47 +308,7 @@ impl SlidingWindow {
 
     /// Merge all live panes into one aggregate.
     fn merge(&self, end_micros: u64) -> WindowEmit {
-        let mut sum = vec![0.0f64; self.k];
-        let mut cnt = vec![0.0f64; self.k];
-        let mut min = vec![f32::INFINITY; if self.agg == AggKind::Min { self.k } else { 0 }];
-        let mut max = vec![f32::NEG_INFINITY; if self.agg == AggKind::Max { self.k } else { 0 }];
-        for pane in &self.panes {
-            for k in 0..self.k {
-                sum[k] += pane.sum[k] as f64;
-                cnt[k] += pane.cnt[k] as f64;
-            }
-            if self.agg == AggKind::Min {
-                for k in 0..self.k {
-                    if pane.min[k] < min[k] {
-                        min[k] = pane.min[k];
-                    }
-                }
-            }
-            if self.agg == AggKind::Max {
-                for k in 0..self.k {
-                    if pane.max[k] > max[k] {
-                        max[k] = pane.max[k];
-                    }
-                }
-            }
-        }
-        let aggregates = (0..self.k)
-            .filter(|&k| cnt[k] > 0.0)
-            .map(|k| {
-                let value = match self.agg {
-                    AggKind::Mean => (sum[k] / cnt[k]) as f32,
-                    AggKind::Sum => sum[k] as f32,
-                    AggKind::Count => cnt[k] as f32,
-                    AggKind::Min => min[k],
-                    AggKind::Max => max[k],
-                };
-                (k as u32, value, cnt[k] as u64)
-            })
-            .collect();
-        WindowEmit {
-            end_micros,
-            aggregates,
-        }
+        merge_panes(self.panes.iter(), self.k, self.agg, end_micros)
     }
 
     /// End-of-stream flush: force the open pane closed and emit the final
@@ -278,6 +331,260 @@ impl SlidingWindow {
     pub fn state_bytes(&self) -> u64 {
         let per_key = if self.agg.uses_sum_cnt() { 8 } else { 16 };
         ((self.panes.len() + 1) * self.k * per_key) as u64
+    }
+}
+
+/// Merge a run of panes into one window aggregate: deterministic key
+/// order (ascending), keys with no events omitted.  Shared by the
+/// processing-time and event-time windows.
+fn merge_panes<'a>(
+    panes: impl Iterator<Item = &'a Pane>,
+    k: usize,
+    agg: AggKind,
+    end_micros: u64,
+) -> WindowEmit {
+    let mut sum = vec![0.0f64; k];
+    let mut cnt = vec![0.0f64; k];
+    let mut min = vec![f32::INFINITY; if agg == AggKind::Min { k } else { 0 }];
+    let mut max = vec![f32::NEG_INFINITY; if agg == AggKind::Max { k } else { 0 }];
+    for pane in panes {
+        for i in 0..k {
+            sum[i] += pane.sum[i] as f64;
+            cnt[i] += pane.cnt[i] as f64;
+        }
+        if agg == AggKind::Min {
+            for i in 0..k {
+                if pane.min[i] < min[i] {
+                    min[i] = pane.min[i];
+                }
+            }
+        }
+        if agg == AggKind::Max {
+            for i in 0..k {
+                if pane.max[i] > max[i] {
+                    max[i] = pane.max[i];
+                }
+            }
+        }
+    }
+    let aggregates = (0..k)
+        .filter(|&i| cnt[i] > 0.0)
+        .map(|i| {
+            let value = match agg {
+                AggKind::Mean => (sum[i] / cnt[i]) as f32,
+                AggKind::Sum => sum[i] as f32,
+                AggKind::Count => cnt[i] as f32,
+                AggKind::Min => min[i],
+                AggKind::Max => max[i],
+            };
+            (i as u32, value, cnt[i] as u64)
+        })
+        .collect();
+    WindowEmit {
+        end_micros,
+        aggregates,
+    }
+}
+
+/// Keyed sliding window over **event time**.
+///
+/// Records land in the pane covering their generation timestamp; the
+/// window ending at `E` (covering `[E - W, E)`) is finalized — merged and
+/// emitted — once the caller-supplied watermark reaches
+/// `E + allowed_lateness`.  Records arriving behind the watermark:
+///
+/// * every covering window already finalized → dropped (counted in
+///   [`EventTimeWindow::dropped_events`]), whatever the policy;
+/// * some covering window still open → routed through the [`LatePolicy`]
+///   (merge into the pane, count to the side, or drop).
+///
+/// Emission order is deterministic: window ends advance monotonically and
+/// aggregates list keys ascending, so two streams carrying the same
+/// `(key, value, gen_ts)` multiset produce byte-identical emissions as
+/// long as no record is dropped.
+///
+/// Pane state is **sparse** (a `BTreeMap` keyed by pane start): panes
+/// exist only where records landed, so a single corrupted far-future
+/// timestamp costs one pane, not a contiguous run of allocations — and
+/// finalization fast-forwards across stretches no retained pane touches,
+/// bounding the work of [`EventTimeWindow::advance`] by the number of
+/// data-bearing windows rather than by raw watermark distance.
+pub struct EventTimeWindow {
+    k: usize,
+    window_micros: u64,
+    slide_micros: u64,
+    agg: AggKind,
+    allowed_lateness_micros: u64,
+    policy: LatePolicy,
+    extrema: bool,
+    /// Sparse panes keyed by their start (a multiple of the slide).
+    panes: BTreeMap<u64, Pane>,
+    /// Next window end boundary to finalize (multiple of the slide).
+    next_end: u64,
+    /// Highest watermark observed via [`EventTimeWindow::advance`].
+    watermark: u64,
+    late_events: u64,
+    dropped_events: u64,
+}
+
+impl EventTimeWindow {
+    pub fn new(
+        k: usize,
+        window_micros: u64,
+        slide_micros: u64,
+        start_micros: u64,
+        agg: AggKind,
+        allowed_lateness_micros: u64,
+        policy: LatePolicy,
+    ) -> Self {
+        assert!(
+            slide_micros > 0 && window_micros >= slide_micros && window_micros % slide_micros == 0,
+            "window ({window_micros}µs) must be a whole multiple of slide ({slide_micros}µs)"
+        );
+        let aligned = start_micros - start_micros % slide_micros;
+        Self {
+            k,
+            window_micros,
+            slide_micros,
+            agg,
+            allowed_lateness_micros,
+            policy,
+            extrema: !agg.uses_sum_cnt(),
+            panes: BTreeMap::new(),
+            next_end: aligned + slide_micros,
+            watermark: 0,
+            late_events: 0,
+            dropped_events: 0,
+        }
+    }
+
+    pub fn agg(&self) -> AggKind {
+        self.agg
+    }
+
+    /// Records merged (or side-counted) after arriving behind the watermark.
+    pub fn late_events(&self) -> u64 {
+        self.late_events
+    }
+
+    /// Records discarded: too late for every covering window, or late
+    /// under the `drop` policy.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped_events
+    }
+
+    /// Number of retained panes (state-size metric).
+    pub fn live_panes(&self) -> usize {
+        self.panes.len()
+    }
+
+    /// Accumulate one batch of `(id, value, gen_ts)` rows.  Out-of-range
+    /// keys are skipped like in [`SlidingWindow::accumulate_native`].
+    pub fn accumulate(&mut self, ids: &[u32], vals: &[f32], ts: &[u64]) {
+        for ((&id, &v), &t) in ids.iter().zip(vals).zip(ts) {
+            let i = id as usize;
+            if i >= self.k {
+                continue;
+            }
+            let pane_start = t - t % self.slide_micros;
+            // The last window covering `t` ends at pane_start + W; once
+            // that is finalized the record has nowhere left to go.
+            if pane_start + self.window_micros < self.next_end {
+                self.dropped_events += 1;
+                continue;
+            }
+            if t < self.watermark {
+                match self.policy {
+                    LatePolicy::Drop => {
+                        self.dropped_events += 1;
+                        continue;
+                    }
+                    LatePolicy::SideCount => {
+                        self.late_events += 1;
+                        continue;
+                    }
+                    LatePolicy::MergeIfOpen => self.late_events += 1,
+                }
+            }
+            let (kk, extrema) = (self.k, self.extrema);
+            self.panes
+                .entry(pane_start)
+                .or_insert_with(|| Pane::new(pane_start, kk, extrema))
+                .record(i, v);
+        }
+    }
+
+    fn merge_window(&self, end_micros: u64) -> WindowEmit {
+        let lo = end_micros.saturating_sub(self.window_micros);
+        merge_panes(
+            self.panes.range(lo..end_micros).map(|(_, p)| p),
+            self.k,
+            self.agg,
+            end_micros,
+        )
+    }
+
+    fn prune(&mut self) {
+        // Keep panes some unfinalized window still covers.
+        let min_keep = self.next_end.saturating_sub(self.window_micros);
+        self.panes = self.panes.split_off(&min_keep);
+    }
+
+    /// Skip boundaries no retained pane's first covering window reaches
+    /// (capped at `last`): every pane holds at least one record, so the
+    /// skipped windows are empty and emitting them would carry no data.
+    fn fast_forward(&mut self, last: u64) {
+        match self.panes.keys().next() {
+            Some(&first) => {
+                // Pane starts are multiples of the slide, so the first
+                // window containing pane `first` ends at first + slide.
+                let first_end = first + self.slide_micros;
+                if first_end > self.next_end {
+                    self.next_end = first_end.min(last);
+                }
+            }
+            None => self.next_end = last,
+        }
+    }
+
+    /// Advance the watermark; finalizes (merges + emits) every
+    /// data-bearing window whose `end + allowed_lateness` the watermark
+    /// has passed.  Empty stretches are fast-forwarded (at most one
+    /// trailing empty emission marks the jump), so a corrupted far-future
+    /// timestamp cannot spin this loop for eons.
+    pub fn advance(&mut self, watermark: u64) -> Vec<WindowEmit> {
+        self.watermark = self.watermark.max(watermark);
+        let mut out = Vec::new();
+        let Some(horizon) = self.watermark.checked_sub(self.allowed_lateness_micros) else {
+            return out;
+        };
+        // Last finalizable window end on the slide grid.
+        let last = horizon - horizon % self.slide_micros;
+        while self.next_end <= last {
+            self.fast_forward(last);
+            out.push(self.merge_window(self.next_end));
+            self.next_end += self.slide_micros;
+            self.prune();
+        }
+        out
+    }
+
+    /// End-of-stream flush: finalize windows until every pane holding
+    /// events has been emitted at least once (one boundary past the last
+    /// retained pane).  No-op when no events are pending.
+    pub fn flush(&mut self) -> Vec<WindowEmit> {
+        let Some(&last_pane) = self.panes.keys().next_back() else {
+            return Vec::new();
+        };
+        let final_end = last_pane + self.slide_micros;
+        let mut out = Vec::new();
+        while self.next_end <= final_end {
+            self.fast_forward(final_end);
+            out.push(self.merge_window(self.next_end));
+            self.next_end += self.slide_micros;
+            self.prune();
+        }
+        out
     }
 }
 
@@ -482,5 +789,141 @@ mod tests {
         sw.store_state(sum, cnt);
         let e = sw.advance(1_000_000);
         assert_eq!(e[0].aggregates, vec![(3, 12.5, 5)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole multiple")]
+    fn non_divisible_pane_spec_panics_as_backstop() {
+        // Config validation rejects this first; the constructor assert is
+        // the last line of defence against silent W/S truncation.
+        SlidingWindow::new(4, 10_000_000, 3_000_000, 0);
+    }
+
+    // --- event-time windows ----------------------------------------------
+
+    fn etw(policy: LatePolicy) -> EventTimeWindow {
+        // window 4s, slide 2s, no allowed lateness.
+        EventTimeWindow::new(8, 4_000_000, 2_000_000, 0, AggKind::Mean, 0, policy)
+    }
+
+    #[test]
+    fn event_time_assigns_by_gen_ts_not_arrival() {
+        let mut w = etw(LatePolicy::Drop);
+        // Two records with event times in pane [0,2s) and one in [2s,4s),
+        // presented in scrambled arrival order.
+        w.accumulate(&[1, 2, 1], &[10.0, 7.0, 20.0], &[1_900_000, 2_100_000, 100_000]);
+        let emits = w.advance(4_000_000); // watermark past ends 2s and 4s
+        assert_eq!(emits.len(), 2);
+        assert_eq!(emits[0].end_micros, 2_000_000);
+        assert_eq!(emits[0].aggregates, vec![(1, 15.0, 2)]);
+        assert_eq!(emits[1].end_micros, 4_000_000);
+        // Window [0,4s) sees all three records.
+        assert_eq!(emits[1].aggregates, vec![(1, 15.0, 2), (2, 7.0, 1)]);
+    }
+
+    #[test]
+    fn window_held_open_until_watermark_passes_lateness() {
+        let mut w =
+            EventTimeWindow::new(4, 2_000_000, 2_000_000, 0, AggKind::Sum, 500_000, LatePolicy::Drop);
+        w.accumulate(&[0], &[5.0], &[100]);
+        assert!(w.advance(2_000_000).is_empty(), "end reached but lateness not");
+        assert!(w.advance(2_400_000).is_empty());
+        let e = w.advance(2_500_000);
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].aggregates, vec![(0, 5.0, 1)]);
+    }
+
+    #[test]
+    fn late_policies_route_stragglers() {
+        // Tumbling 2s windows; watermark at 3s finalizes window [0,2s).
+        for (policy, expect_in_window, late, dropped) in [
+            (LatePolicy::Drop, false, 0u64, 1u64),
+            (LatePolicy::SideCount, false, 1, 0),
+            (LatePolicy::MergeIfOpen, true, 1, 0),
+        ] {
+            let mut w =
+                EventTimeWindow::new(4, 4_000_000, 2_000_000, 0, AggKind::Sum, 0, policy);
+            w.accumulate(&[0], &[1.0], &[3_000_000]);
+            let e = w.advance(3_000_000); // finalizes end 2s only
+            assert_eq!(e.len(), 1, "{policy:?}");
+            // A record at 1.5s is behind the watermark (3s) but its last
+            // covering window [0,4s) is still open.
+            w.accumulate(&[1], &[9.0], &[1_500_000]);
+            assert_eq!(w.late_events(), late, "{policy:?}");
+            assert_eq!(w.dropped_events(), dropped, "{policy:?}");
+            let e = w.advance(4_000_000); // finalizes end 4s
+            assert_eq!(e.len(), 1);
+            let has_key1 = e[0].aggregates.iter().any(|&(k, ..)| k == 1);
+            assert_eq!(has_key1, expect_in_window, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn too_late_for_every_window_is_always_dropped() {
+        let mut w = etw(LatePolicy::MergeIfOpen);
+        w.accumulate(&[0], &[1.0], &[9_000_000]);
+        w.advance(9_000_000); // finalizes ends 2s..8s; next_end = 10s
+        // Last window covering t=3s ends at 2s+4s=6s < 10s: gone entirely.
+        w.accumulate(&[0], &[1.0], &[3_000_000]);
+        assert_eq!(w.dropped_events(), 1);
+        assert_eq!(w.late_events(), 0);
+    }
+
+    #[test]
+    fn event_time_flush_emits_pending_panes_once() {
+        let mut w = etw(LatePolicy::Drop);
+        w.accumulate(&[2], &[4.0], &[500_000]);
+        assert!(w.advance(500_000).is_empty(), "watermark behind first end");
+        let e = w.flush();
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].end_micros, 2_000_000);
+        assert_eq!(e[0].aggregates, vec![(2, 4.0, 1)]);
+        assert!(w.flush().is_empty(), "second flush has nothing new");
+    }
+
+    #[test]
+    fn event_time_equivalence_under_bounded_disorder() {
+        // The same (key, value, ts) multiset fed in order and in a
+        // disordered permutation must emit identical aggregates under
+        // merge_if_open with a watermark that respects the disorder bound.
+        let events: Vec<(u32, f32, u64)> = (0..400u64)
+            .map(|i| ((i % 7) as u32, (i % 13) as f32, i * 10_000))
+            .collect();
+        let mut shuffled = events.clone();
+        // Bounded disorder: reverse within blocks of 16 (max displacement
+        // 15 events = 150ms < the 200ms watermark bound the caller uses).
+        for chunk in shuffled.chunks_mut(16) {
+            chunk.reverse();
+        }
+        let bound = 200_000u64;
+        let run = |stream: &[(u32, f32, u64)]| -> Vec<WindowEmit> {
+            let mut w = EventTimeWindow::new(
+                8,
+                1_000_000,
+                500_000,
+                0,
+                AggKind::Mean,
+                0,
+                LatePolicy::MergeIfOpen,
+            );
+            let mut out = Vec::new();
+            let mut max_ts = 0u64;
+            for batch in stream.chunks(13) {
+                let ids: Vec<u32> = batch.iter().map(|e| e.0).collect();
+                let vals: Vec<f32> = batch.iter().map(|e| e.1).collect();
+                let ts: Vec<u64> = batch.iter().map(|e| e.2).collect();
+                max_ts = max_ts.max(ts.iter().copied().max().unwrap());
+                w.accumulate(&ids, &vals, &ts);
+                out.extend(w.advance(max_ts.saturating_sub(bound)));
+            }
+            out.extend(w.advance(max_ts.saturating_sub(bound)));
+            out.extend(w.flush());
+            assert_eq!(w.dropped_events(), 0, "bounded disorder must not drop");
+            out
+        };
+        let ordered = run(&events);
+        let disordered = run(&shuffled);
+        assert_eq!(ordered, disordered);
+        assert!(!ordered.is_empty());
     }
 }

@@ -396,8 +396,7 @@ mod tests {
                                 events_out: 199_400,
                                 alerts: 1_200,
                                 hlo_calls: 400,
-                                window_emits: 0,
-                                parse_failures: 0,
+                                ..StepStats::default()
                             },
                         ),
                         (

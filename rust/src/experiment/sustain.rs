@@ -29,6 +29,10 @@ pub struct SustainPolicy {
     /// Timeline samples within this offset of the run start are discarded
     /// before the latency-growth check.
     pub warmup_discard_micros: u64,
+    /// Max fraction of processed events that may arrive behind the
+    /// watermark (late + dropped, summed across the run's event-time
+    /// operators); 0 disables the check.
+    pub max_late_fraction: f64,
 }
 
 impl SustainPolicy {
@@ -45,6 +49,7 @@ impl SustainPolicy {
             } else {
                 cfg.bench.warmup_micros
             },
+            max_late_fraction: x.max_late_fraction,
         }
     }
 
@@ -101,6 +106,28 @@ impl SustainPolicy {
                         e2e.p99, self.max_p99_micros
                     ));
                 }
+            }
+        }
+
+        // Event-time health: a system that "keeps up" by letting the
+        // watermark race past the data is not sustaining the load — bound
+        // the fraction of records arriving behind the watermark.
+        if self.max_late_fraction > 0.0 && summary.processed > 0 {
+            let late: u64 = summary.operators.iter().map(|(_, s)| s.late_events).sum();
+            let dropped: u64 = summary
+                .operators
+                .iter()
+                .map(|(_, s)| s.dropped_events)
+                .sum();
+            let frac = (late + dropped) as f64 / summary.processed as f64;
+            if frac > self.max_late_fraction {
+                reasons.push(format!(
+                    "late-fraction {:.1}% > bound {:.1}% ({late} late + {dropped} dropped \
+                     of {} processed)",
+                    frac * 100.0,
+                    self.max_late_fraction * 100.0,
+                    summary.processed
+                ));
             }
         }
 
@@ -203,6 +230,7 @@ mod tests {
             max_p99_micros: 0,
             max_latency_growth: 0.0,
             warmup_discard_micros: 0,
+            max_late_fraction: 0.0,
         }
     }
 
@@ -274,6 +302,35 @@ mod tests {
         assert!(p.evaluate(100_000, &good, Some(&flat)).sustainable);
         // Missing series skips the check.
         assert!(p.evaluate(100_000, &good, None).sustainable);
+    }
+
+    #[test]
+    fn late_fraction_bound_applies_only_when_set() {
+        use crate::pipelines::StepStats;
+        let mut s = summary(100_000, 100_000.0, 99_000.0, 5_000);
+        // Window op with 30% of the processed stream behind the watermark.
+        s.operators = vec![(
+            "window".to_string(),
+            StepStats {
+                events_in: s.processed,
+                late_events: s.processed / 5,
+                dropped_events: s.processed / 10,
+                ..StepStats::default()
+            },
+        )];
+        assert!(policy().evaluate(100_000, &s, None).sustainable, "disabled by default");
+        let mut p = policy();
+        p.max_late_fraction = 0.25;
+        let v = p.evaluate(100_000, &s, None);
+        assert!(!v.sustainable);
+        assert!(
+            v.reasons.iter().any(|r| r.contains("late-fraction")),
+            "{:?}",
+            v.reasons
+        );
+        // Under the bound: sustainable.
+        p.max_late_fraction = 0.40;
+        assert!(p.evaluate(100_000, &s, None).sustainable);
     }
 
     #[test]

@@ -51,11 +51,21 @@ pub struct StepStats {
     pub hlo_calls: u64,
     pub window_emits: u64,
     pub parse_failures: u64,
+    /// Event-time records that arrived behind the watermark but were
+    /// merged or side-counted (see [`crate::engine::LatePolicy`]).
+    pub late_events: u64,
+    /// Event-time records discarded: too late for every covering window,
+    /// or late under the `drop` policy.
+    pub dropped_events: u64,
+    /// Maximum observed watermark lag (processing time − watermark), µs.
+    /// Merged with `max`, not summed.
+    pub watermark_lag_micros: u64,
 }
 
 impl StepStats {
     /// Fold `other` into `self` (aggregating one operator's stats across
-    /// engine tasks for the run report).
+    /// engine tasks for the run report).  Counters sum; the watermark lag
+    /// keeps the worst (maximum) across tasks.
     pub fn merge(&mut self, other: &StepStats) {
         self.events_in += other.events_in;
         self.events_out += other.events_out;
@@ -63,6 +73,9 @@ impl StepStats {
         self.hlo_calls += other.hlo_calls;
         self.window_emits += other.window_emits;
         self.parse_failures += other.parse_failures;
+        self.late_events += other.late_events;
+        self.dropped_events += other.dropped_events;
+        self.watermark_lag_micros = self.watermark_lag_micros.max(other.watermark_lag_micros);
     }
 
     /// JSON object for results/report documents.
@@ -74,6 +87,12 @@ impl StepStats {
         j.set("hlo_calls", Json::Int(self.hlo_calls as i64));
         j.set("window_emits", Json::Int(self.window_emits as i64));
         j.set("parse_failures", Json::Int(self.parse_failures as i64));
+        j.set("late_events", Json::Int(self.late_events as i64));
+        j.set("dropped_events", Json::Int(self.dropped_events as i64));
+        j.set(
+            "watermark_lag_us",
+            Json::Int(self.watermark_lag_micros as i64),
+        );
         j
     }
 
@@ -88,6 +107,9 @@ impl StepStats {
             hlo_calls: int("hlo_calls"),
             window_emits: int("window_emits"),
             parse_failures: int("parse_failures"),
+            late_events: int("late_events"),
+            dropped_events: int("dropped_events"),
+            watermark_lag_micros: int("watermark_lag_us"),
         }
     }
 }
@@ -302,6 +324,9 @@ mod tests {
             hlo_calls: 1,
             window_emits: 0,
             parse_failures: 1,
+            late_events: 4,
+            dropped_events: 2,
+            watermark_lag_micros: 900,
         };
         let b = StepStats {
             events_in: 5,
@@ -310,12 +335,18 @@ mod tests {
             hlo_calls: 0,
             window_emits: 3,
             parse_failures: 0,
+            late_events: 1,
+            dropped_events: 0,
+            watermark_lag_micros: 1_500,
         };
         a.merge(&b);
         assert_eq!(a.events_in, 15);
         assert_eq!(a.events_out, 13);
         assert_eq!(a.alerts, 3);
         assert_eq!(a.window_emits, 3);
+        assert_eq!(a.late_events, 5);
+        assert_eq!(a.dropped_events, 2);
+        assert_eq!(a.watermark_lag_micros, 1_500, "lag merges with max, not sum");
         assert_eq!(StepStats::from_json(&a.to_json()), a);
         // Missing fields read as zero (older documents).
         assert_eq!(StepStats::from_json(&Json::obj()), StepStats::default());

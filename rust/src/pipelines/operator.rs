@@ -22,8 +22,8 @@ use std::rc::Rc;
 use super::{PipelineStep, StepStats, HLO_KEYS};
 use crate::broker::Record;
 use crate::config::{BenchConfig, CmpOp, OpSpec, PipelineSpec};
-use crate::engine::window::AggKind;
-use crate::engine::{EventBatch, SlidingWindow, WindowEmit};
+use crate::engine::window::{AggKind, LatePolicy, WindowTime};
+use crate::engine::{EventBatch, EventTimeWindow, SlidingWindow, WatermarkTracker, WindowEmit};
 use crate::runtime::{Input, Runtime, RuntimeFactory};
 use crate::wgen::{EventFormat, SensorEvent};
 
@@ -512,13 +512,20 @@ impl WindowAggregateOp {
 
     /// Replace the rows with the emitted aggregates.
     fn emit_rows(&mut self, emits: Vec<WindowEmit>, rows: &mut RowBatch) {
-        rows.clear();
-        for e in emits {
-            self.stats.window_emits += 1;
-            for &(key, value, count) in &e.aggregates {
-                rows.push(key, value, e.end_micros, count);
-                self.stats.events_out += 1;
-            }
+        emit_aggregate_rows(emits, rows, &mut self.stats);
+    }
+}
+
+/// Replace `rows` with one row per emitted `(window, key)` aggregate,
+/// updating the owning operator's emission counters.  Shared by the
+/// processing-time and event-time window operators.
+fn emit_aggregate_rows(emits: Vec<WindowEmit>, rows: &mut RowBatch, stats: &mut StepStats) {
+    rows.clear();
+    for e in emits {
+        stats.window_emits += 1;
+        for &(key, value, count) in &e.aggregates {
+            rows.push(key, value, e.end_micros, count);
+            stats.events_out += 1;
         }
     }
 }
@@ -559,6 +566,102 @@ impl Operator for WindowAggregateOp {
         let mut emits = self.window.advance(now_micros);
         emits.extend(self.window.flush());
         self.emit_rows(emits, rows);
+        Ok(())
+    }
+
+    fn stats(&self) -> StepStats {
+        self.stats
+    }
+}
+
+/// Keyed sliding-window aggregation over **event time**: rows are
+/// assigned to panes by their generation timestamp, a bounded-disorder
+/// [`WatermarkTracker`] (advanced once per [`RowBatch`]) drives window
+/// finalization, and records behind the watermark are routed through the
+/// configured [`LatePolicy`].  Runs native-only: pane assignment is
+/// data-dependent per record, which the single-state `mem_pipeline_step`
+/// HLO artifact cannot express.
+pub struct EventTimeWindowOp {
+    tracker: WatermarkTracker,
+    window: EventTimeWindow,
+    stats: StepStats,
+}
+
+impl EventTimeWindowOp {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        agg: AggKind,
+        sensors: usize,
+        window_micros: u64,
+        slide_micros: u64,
+        start_micros: u64,
+        watermark_bound_micros: u64,
+        allowed_lateness_micros: u64,
+        policy: LatePolicy,
+    ) -> Self {
+        Self {
+            tracker: WatermarkTracker::new(watermark_bound_micros),
+            window: EventTimeWindow::new(
+                sensors,
+                window_micros,
+                slide_micros,
+                start_micros,
+                agg,
+                allowed_lateness_micros,
+                policy,
+            ),
+            stats: StepStats::default(),
+        }
+    }
+
+    pub fn agg(&self) -> AggKind {
+        self.window.agg()
+    }
+
+    fn ingest(&mut self, now_micros: u64, rows: &mut RowBatch) -> Vec<WindowEmit> {
+        if !rows.is_empty() {
+            self.stats.events_in += rows.len() as u64;
+            self.tracker.observe_batch(&rows.ts);
+            self.window.accumulate(&rows.keys, &rows.vals, &rows.ts);
+        }
+        let wm = self.tracker.advance();
+        let emits = self.window.advance(wm);
+        // The window holds the cumulative truth; mirror, don't add.
+        self.stats.late_events = self.window.late_events();
+        self.stats.dropped_events = self.window.dropped_events();
+        self.stats.watermark_lag_micros = self
+            .stats
+            .watermark_lag_micros
+            .max(self.tracker.lag_at(now_micros));
+        emits
+    }
+}
+
+impl Operator for EventTimeWindowOp {
+    fn name(&self) -> &str {
+        "window"
+    }
+
+    fn apply(
+        &mut self,
+        now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        let emits = self.ingest(now_micros, rows);
+        emit_aggregate_rows(emits, rows, &mut self.stats);
+        Ok(())
+    }
+
+    fn finish(
+        &mut self,
+        now_micros: u64,
+        rows: &mut RowBatch,
+        _out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        let mut emits = self.ingest(now_micros, rows);
+        emits.extend(self.window.flush());
+        emit_aggregate_rows(emits, rows, &mut self.stats);
         Ok(())
     }
 
@@ -791,7 +894,12 @@ impl Chain {
         for op in &spec.ops {
             match op {
                 OpSpec::CpuTransform => programs.push("cpu_pipeline_step"),
-                OpSpec::Window { agg, .. } if agg.uses_sum_cnt() => {
+                // Event-time windows accumulate natively (pane assignment
+                // is per-record data-dependent), so only processing-time
+                // sum/cnt windows need the keyed-state artifact.
+                OpSpec::Window { agg, time, .. }
+                    if *time == WindowTime::Processing && agg.uses_sum_cnt() =>
+                {
                     programs.push("mem_pipeline_step")
                 }
                 _ => {}
@@ -843,6 +951,10 @@ impl Chain {
                     agg,
                     window_micros,
                     slide_micros,
+                    time,
+                    allowed_lateness_micros,
+                    late_policy,
+                    watermark_micros,
                 } => {
                     let w = if *window_micros > 0 {
                         *window_micros
@@ -854,14 +966,39 @@ impl Chain {
                     } else {
                         cfg.engine.slide_micros
                     };
-                    Box::new(WindowAggregateOp::new(
-                        hlo(agg.uses_sum_cnt()),
-                        *agg,
-                        cfg.workload.sensors as usize,
-                        w,
-                        s,
-                        start_micros,
-                    ))
+                    match time {
+                        WindowTime::Processing => Box::new(WindowAggregateOp::new(
+                            hlo(agg.uses_sum_cnt()),
+                            *agg,
+                            cfg.workload.sensors as usize,
+                            w,
+                            s,
+                            start_micros,
+                        )) as Box<dyn Operator>,
+                        WindowTime::Event => {
+                            // Watermark bound inherit chain: explicit spec
+                            // value, else max(disorder lateness, slide) —
+                            // the slide floor matters when disorder comes
+                            // from shuffle/stragglers alone (lateness 0),
+                            // where a tiny bound would drop most of the
+                            // reordered stream.
+                            let bound = if *watermark_micros > 0 {
+                                *watermark_micros
+                            } else {
+                                cfg.workload.disorder.lateness_micros.max(s)
+                            };
+                            Box::new(EventTimeWindowOp::new(
+                                *agg,
+                                cfg.workload.sensors as usize,
+                                w,
+                                s,
+                                start_micros,
+                                bound,
+                                *allowed_lateness_micros,
+                                *late_policy,
+                            ))
+                        }
+                    }
                 }
                 OpSpec::TopK { k } => Box::new(TopKOp::new(*k)),
                 OpSpec::EmitEvents => Box::new(EmitEventsOp::new(cfg.workload.event_bytes)),
@@ -944,6 +1081,9 @@ impl PipelineStep for Chain {
             s.hlo_calls += o.hlo_calls;
             s.window_emits += o.window_emits;
             s.parse_failures += o.parse_failures;
+            s.late_events += o.late_events;
+            s.dropped_events += o.dropped_events;
+            s.watermark_lag_micros = s.watermark_lag_micros.max(o.watermark_lag_micros);
         }
         s.events_in = self.ops.first().map(|o| o.stats().events_in).unwrap_or(0);
         s.events_out = self.events_out;
@@ -1038,6 +1178,94 @@ mod tests {
         assert_eq!(r.ts, vec![1_000_000, 1_000_000]);
         assert_eq!(w.stats().window_emits, 1);
         assert!(out.is_empty(), "window emits rows, not records");
+    }
+
+    #[test]
+    fn event_time_window_op_consumes_rows_and_tracks_watermark() {
+        let mut w = EventTimeWindowOp::new(
+            AggKind::Mean,
+            16,
+            2_000_000,
+            1_000_000,
+            0,
+            500_000, // watermark bound
+            0,
+            LatePolicy::Drop,
+        );
+        let mut out = Vec::new();
+        // Rows carry event timestamps; the third arrives out of order.
+        let mut r = RowBatch::default();
+        r.push(1, 10.0, 900_000, 1);
+        r.push(1, 20.0, 950_000, 1);
+        r.push(2, 7.0, 100_000, 1);
+        w.apply(1_000_000, &mut r, &mut out).unwrap();
+        assert!(r.is_empty(), "watermark 450ms is behind the first end (1s)");
+        // Frontier 2.6s → watermark 2.1s → finalizes ends 1s and 2s.
+        let mut r = RowBatch::default();
+        r.push(3, 1.0, 2_600_000, 1);
+        w.apply(2_700_000, &mut r, &mut out).unwrap();
+        assert_eq!(r.ts, vec![1_000_000, 1_000_000, 2_000_000, 2_000_000]);
+        assert_eq!(r.keys, vec![1, 2, 1, 2], "keys ascending per window");
+        let s = w.stats();
+        assert_eq!(s.window_emits, 2);
+        assert_eq!(s.dropped_events, 0);
+        assert!(
+            s.watermark_lag_micros >= 600_000,
+            "lag = now 2.7s − watermark 2.1s, got {}",
+            s.watermark_lag_micros
+        );
+        assert!(out.is_empty(), "window emits rows, not records");
+    }
+
+    #[test]
+    fn event_time_window_op_finish_flushes_open_panes() {
+        let mut w = EventTimeWindowOp::new(
+            AggKind::Sum,
+            4,
+            2_000_000,
+            1_000_000,
+            0,
+            1_000_000,
+            0,
+            LatePolicy::MergeIfOpen,
+        );
+        let mut out = Vec::new();
+        let mut r = RowBatch::default();
+        r.push(2, 5.0, 400_000, 1);
+        r.push(2, 7.0, 600_000, 1);
+        w.apply(700_000, &mut r, &mut out).unwrap();
+        assert!(r.is_empty());
+        let mut r = RowBatch::default();
+        w.finish(800_000, &mut r, &mut out).unwrap();
+        assert_eq!(r.keys, vec![2]);
+        assert_eq!(r.vals, vec![12.0]);
+        assert_eq!(r.counts, vec![2]);
+        assert_eq!(w.stats().events_in, 2);
+    }
+
+    #[test]
+    fn event_time_drop_policy_counts_dropped_rows() {
+        let mut w = EventTimeWindowOp::new(
+            AggKind::Mean,
+            4,
+            1_000_000,
+            1_000_000,
+            0,
+            0, // zero bound: watermark rides the frontier
+            0,
+            LatePolicy::Drop,
+        );
+        let mut out = Vec::new();
+        let mut r = RowBatch::default();
+        r.push(0, 1.0, 5_000_000, 1);
+        w.apply(5_000_000, &mut r, &mut out).unwrap();
+        // A record 5s behind the frontier: every covering window is gone.
+        let mut r = RowBatch::default();
+        r.push(0, 9.0, 100_000, 1);
+        w.apply(5_100_000, &mut r, &mut out).unwrap();
+        let s = w.stats();
+        assert_eq!(s.dropped_events, 1);
+        assert_eq!(s.events_in, 2);
     }
 
     #[test]

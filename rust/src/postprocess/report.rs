@@ -42,7 +42,8 @@ pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
 }
 
 /// Render the per-operator stats breakdown of a run (chain order), as
-/// printed under the CLI run summary.
+/// printed under the CLI run summary.  The event-time columns (late,
+/// dropped, watermark lag) are all zero for processing-time chains.
 pub fn operator_stats_table(ops: &[(String, StepStats)]) -> String {
     let rows: Vec<Vec<String>> = ops
         .iter()
@@ -55,11 +56,25 @@ pub fn operator_stats_table(ops: &[(String, StepStats)]) -> String {
                 s.hlo_calls.to_string(),
                 s.window_emits.to_string(),
                 s.parse_failures.to_string(),
+                s.late_events.to_string(),
+                s.dropped_events.to_string(),
+                s.watermark_lag_micros.to_string(),
             ]
         })
         .collect();
     ascii_table(
-        &["operator", "in", "out", "alerts", "hlo", "win_emits", "parse_fail"],
+        &[
+            "operator",
+            "in",
+            "out",
+            "alerts",
+            "hlo",
+            "win_emits",
+            "parse_fail",
+            "late",
+            "dropped",
+            "wm_lag_us",
+        ],
         &rows,
     )
 }
@@ -187,6 +202,9 @@ mod tests {
                 StepStats {
                     events_in: 60,
                     window_emits: 4,
+                    late_events: 7,
+                    dropped_events: 3,
+                    watermark_lag_micros: 1_250,
                     ..StepStats::default()
                 },
             ),
@@ -197,6 +215,11 @@ mod tests {
         assert!(filter_line < window_line, "chain order must be preserved:\n{t}");
         assert!(t.contains("100"));
         assert!(t.contains("win_emits"));
+        // Event-time accounting columns.
+        assert!(t.contains("late"));
+        assert!(t.contains("dropped"));
+        assert!(t.contains("wm_lag_us"));
+        assert!(t.contains("1250"));
     }
 
     #[test]

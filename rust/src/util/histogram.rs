@@ -270,4 +270,96 @@ mod tests {
         assert!(h.is_empty());
         assert_eq!(h.max(), 0);
     }
+
+    // --- property tests: the quantile laws the watermark-lag and
+    // event-time latency metrics lean on ---------------------------------
+
+    use crate::util::proptest::{check, Config as PtConfig};
+
+    /// Random histogram over a wide dynamic range (mixes exact small
+    /// values with bucketed large ones).
+    fn arbitrary_histogram(g: &mut crate::util::proptest::Gen) -> Histogram {
+        let mut h = Histogram::new();
+        let n = g.usize(1..200);
+        for _ in 0..n {
+            // Spread across octaves: 2^0 .. 2^40.
+            let shift = g.u64(0..40);
+            h.record(g.u64(0..1_000) << shift);
+        }
+        h
+    }
+
+    #[test]
+    fn prop_quantile_is_monotone_in_q() {
+        check(PtConfig::default().cases(200), "quantile-monotone", |g| {
+            let h = arbitrary_histogram(g);
+            let q1 = g.f64(0.0, 1.0);
+            let q2 = g.f64(0.0, 1.0);
+            let (lo, hi) = if q1 <= q2 { (q1, q2) } else { (q2, q1) };
+            let (vlo, vhi) = (h.quantile(lo), h.quantile(hi));
+            if vlo > vhi {
+                return Err(format!("q{lo:.3}={vlo} > q{hi:.3}={vhi}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantiles_clamped_to_min_max() {
+        check(PtConfig::default().cases(200), "quantile-clamped", |g| {
+            let h = arbitrary_histogram(g);
+            for q in [0.0, 0.001, 0.25, 0.5, 0.9, 0.999, 1.0] {
+                let v = h.quantile(q);
+                if v < h.min() || v > h.max() {
+                    return Err(format!(
+                        "q{q}={v} outside [{}, {}]",
+                        h.min(),
+                        h.max()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_extreme_quantiles_hit_the_bounds() {
+        check(PtConfig::default().cases(200), "quantile-extremes", |g| {
+            let h = arbitrary_histogram(g);
+            // q=1 is exactly the maximum (bucket upper bound clamps down).
+            if h.quantile(1.0) != h.max() {
+                return Err(format!("q1={} != max={}", h.quantile(1.0), h.max()));
+            }
+            // q=0 lands in the minimum's bucket: never below the min,
+            // never past its bucket's representative error bound.
+            let q0 = h.quantile(0.0);
+            if q0 < h.min() {
+                return Err(format!("q0={q0} < min={}", h.min()));
+            }
+            let bound = h.min() + (h.min() >> 5) + 1; // ≤ one sub-bucket up
+            if q0 > bound.min(h.max()) {
+                return Err(format!("q0={q0} beyond min's bucket ({bound})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_single_sample_is_every_quantile() {
+        check(PtConfig::default().cases(200), "single-sample", |g| {
+            let v = g.u64(0..u64::MAX >> 1);
+            let mut h = Histogram::new();
+            h.record(v);
+            for q in [0.0, 0.5, 1.0] {
+                // min == max == v, so clamping pins every quantile to v.
+                if h.quantile(q) != v {
+                    return Err(format!("q{q}={} != {v}", h.quantile(q)));
+                }
+            }
+            if h.min() != v || h.max() != v {
+                return Err("min/max of a single sample must be the sample".into());
+            }
+            Ok(())
+        });
+    }
 }

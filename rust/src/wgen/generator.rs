@@ -11,10 +11,12 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use super::disorder::DisorderState;
 use super::event::{EventFormat, SensorEvent};
 use super::pattern::{Pattern, PatternState};
 use super::ratelimit::TokenBucket;
 use crate::broker::{Broker, PartitionedBatchBuilder, Topic};
+use crate::config::DisorderSection;
 use crate::metrics::{LatencyRecorder, MeasurementPoint, ThroughputRecorder};
 use crate::util::clock::ClockRef;
 use crate::util::rng::{Pcg32, Zipf};
@@ -33,6 +35,9 @@ pub struct GeneratorConfig {
     pub seed: u64,
     /// Produce-batch size (records per broker append).
     pub produce_batch: usize,
+    /// Out-of-order arrival model (`workload.disorder`); identity when
+    /// disabled.
+    pub disorder: DisorderSection,
 }
 
 impl GeneratorConfig {
@@ -51,6 +56,7 @@ impl GeneratorConfig {
             key_skew: cfg.workload.key_skew,
             seed: cfg.bench.seed,
             produce_batch: 512,
+            disorder: cfg.workload.disorder.clone(),
         }
     }
 
@@ -178,6 +184,14 @@ impl InstanceWorker {
             self.pattern.clone(),
             Pcg32::from_master(self.config.seed ^ 0xDADA, self.id as u64),
         );
+        // Disorder model: seeded per instance, so disordered runs are
+        // exactly reproducible.
+        let mut disorder = self.config.disorder.enabled().then(|| {
+            DisorderState::new(
+                self.config.disorder.clone(),
+                Pcg32::from_master(self.config.seed ^ 0xD150, self.id as u64),
+            )
+        });
         // Pace at the instance share, never beyond rated capacity.
         let paced_rate = self.rate.min(self.config.instance_capacity).max(1);
         let mut bucket = TokenBucket::new(
@@ -221,48 +235,96 @@ impl InstanceWorker {
                         sensor_id,
                         temp_c: 20.0 + rng.normal() as f32 * 15.0,
                     };
+                    // Disorder: backdate the generation stamp and/or hold
+                    // the event in the shuffle window.  The perturbed
+                    // stamp lands in both the wire payload and the batch
+                    // entry, so the whole downstream plane sees it.
+                    let ev = match &mut disorder {
+                        Some(d) => match d.admit(ev) {
+                            Some(e) => e,
+                            None => continue, // buffered; emitted later
+                        },
+                        None => ev,
+                    };
                     let n = serializer.serialize(&ev, &mut wire);
                     total_bytes += n as u64;
                     pb.push(
-                        self.topic.partition_for_key(sensor_id),
-                        sensor_id,
+                        self.topic.partition_for_key(ev.sensor_id),
+                        ev.sensor_id,
                         &wire,
-                        now,
+                        ev.ts_micros,
                     );
                 }
-                let appended = pb.total_records() as u64;
                 // Acked produce: generation → network thread → append →
                 // ack, so the recorded BrokerIn latency sees broker-side
                 // queueing as load approaches broker capacity.
-                if self
-                    .broker
-                    .produce_batches_acked(&self.topic, pb.finish())
-                    .is_err()
-                {
+                if !self.append_and_account(pb, now, &mut total_events) {
                     break 'outer; // broker shut down
                 }
-                total_events += appended;
-                self.throughput.record_events(
-                    MeasurementPoint::DriverOut,
-                    appended,
-                    appended * self.config.event_bytes as u64,
-                );
-                self.throughput.record_events(
-                    MeasurementPoint::BrokerIn,
-                    appended,
-                    appended * self.config.event_bytes as u64,
-                );
-                // Broker-ingest latency: generation → append completion.
-                let lat = self.clock.now_micros().saturating_sub(now);
-                self.latency
-                    .record_n(MeasurementPoint::BrokerIn, self.id as usize, lat, appended);
                 remaining -= chunk;
                 if self.clock.now_micros() >= deadline_micros {
                     break 'outer;
                 }
             }
         }
+        // Drain the shuffle window so every generated event reaches the
+        // broker (conservation: rate accounting and the engine's intake
+        // stay consistent with the disabled-disorder path).
+        if let Some(d) = &mut disorder {
+            let mut pb = PartitionedBatchBuilder::new(partitions);
+            let now = self.clock.now_micros();
+            while let Some(ev) = d.flush_one() {
+                let n = serializer.serialize(&ev, &mut wire);
+                total_bytes += n as u64;
+                pb.push(
+                    self.topic.partition_for_key(ev.sensor_id),
+                    ev.sensor_id,
+                    &wire,
+                    ev.ts_micros,
+                );
+            }
+            self.append_and_account(pb, now, &mut total_events);
+        }
         (total_events, total_bytes)
+    }
+
+    /// Append a finished builder and record the produce-side metrics
+    /// (DriverOut/BrokerIn throughput + broker-ingest latency anchored at
+    /// `gen_now`, the batch-assembly time).  Note the anchor semantics
+    /// under disorder: shuffle-window residence happens *before* assembly
+    /// and is deliberately excluded — BrokerIn measures broker-side
+    /// produce/queueing cost, while the reservoir delay is workload
+    /// disorder and shows up (with the backdating) in the end-to-end
+    /// `gen_ts`-anchored latency instead.  Returns `false` when the
+    /// broker has shut down; no-op for an empty builder.
+    fn append_and_account(
+        &self,
+        pb: PartitionedBatchBuilder,
+        gen_now: u64,
+        total_events: &mut u64,
+    ) -> bool {
+        let appended = pb.total_records() as u64;
+        if appended == 0 {
+            return true;
+        }
+        if self
+            .broker
+            .produce_batches_acked(&self.topic, pb.finish())
+            .is_err()
+        {
+            return false;
+        }
+        *total_events += appended;
+        let bytes = appended * self.config.event_bytes as u64;
+        self.throughput
+            .record_events(MeasurementPoint::DriverOut, appended, bytes);
+        self.throughput
+            .record_events(MeasurementPoint::BrokerIn, appended, bytes);
+        // Broker-ingest latency: batch assembly → append completion.
+        let lat = self.clock.now_micros().saturating_sub(gen_now);
+        self.latency
+            .record_n(MeasurementPoint::BrokerIn, self.id as usize, lat, appended);
+        true
     }
 }
 
@@ -283,6 +345,7 @@ mod tests {
             key_skew: 0.0,
             seed: 42,
             produce_batch: 256,
+            disorder: DisorderSection::default(),
         }
     }
 
@@ -361,6 +424,62 @@ mod tests {
         fleet.run(&broker, &topic, 60_000_000, &stop, |r| Pattern::Constant { rate: r });
         assert!(t0.elapsed().as_secs() < 10, "stop flag ignored");
         stopper.join().unwrap();
+    }
+
+    #[test]
+    fn disordered_fleet_conserves_events_and_perturbs_gen_ts() {
+        let clk = clock::wall();
+        let broker = Broker::new(BrokerConfig::default(), clk.clone());
+        let topic = broker.create_topic("in");
+        let group = broker.subscribe("in", "sink", 1);
+        let mut cfg = config(60_000);
+        cfg.disorder = DisorderSection {
+            lateness_micros: 50_000,
+            late_fraction: 0.5,
+            straggler_fraction: 0.0,
+            straggler_micros: 0,
+            shuffle_window: 64,
+        };
+        let tp = Arc::new(ThroughputRecorder::new());
+        let lat = Arc::new(LatencyRecorder::new());
+        let fleet = Fleet::new(cfg, clk, tp.clone(), lat);
+        let stop = Arc::new(AtomicBool::new(false));
+        let report = fleet.run(&broker, &topic, 500_000, &stop, |r| Pattern::Constant {
+            rate: r,
+        });
+        broker.shutdown();
+        // Every generated event reaches the broker (shuffle window drained).
+        assert_eq!(tp.events_at(MeasurementPoint::DriverOut), report.events);
+        // Count ts regressions *within* each record batch: one batch is
+        // one instance's emission order, so without disorder every entry
+        // would carry the same chunk stamp (zero regressions).
+        let mut regressions = 0u64;
+        let mut consumed = 0u64;
+        loop {
+            match group.poll(0, 4096) {
+                Ok(Some(b)) => {
+                    for rb in &b.batches {
+                        let mut prev_ts = 0u64;
+                        for i in 0..rb.len() {
+                            let ts = rb.entry(i).gen_ts_micros;
+                            if ts < prev_ts {
+                                regressions += 1;
+                            }
+                            prev_ts = ts;
+                            consumed += 1;
+                        }
+                    }
+                    group.commit(b.partition, b.next_offset);
+                }
+                Ok(None) => continue,
+                Err(_) => break,
+            }
+        }
+        assert_eq!(consumed, report.events, "conservation through the broker");
+        assert!(
+            regressions > report.events / 50,
+            "disorder must produce out-of-order gen_ts: {regressions} of {consumed}"
+        );
     }
 
     #[test]

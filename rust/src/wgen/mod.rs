@@ -6,16 +6,20 @@
 //!
 //! * [`event`] — event model + serializer/parser with exact-size padding.
 //! * [`pattern`] — constant / random / burst generation schedules.
+//! * [`disorder`] — out-of-order arrival model (lateness sampling,
+//!   stragglers, shuffle window) for event-time scenarios.
 //! * [`ratelimit`] — token-bucket rate control.
 //! * [`generator`] — generator instances + the auto-scaling fleet
 //!   ("automatically adjusts the number of generators based on the
 //!   requested total load").
 
+pub mod disorder;
 pub mod event;
 pub mod generator;
 pub mod pattern;
 pub mod ratelimit;
 
+pub use disorder::DisorderState;
 pub use event::{EventFormat, EventSerializer, SensorEvent};
 pub use generator::{Fleet, FleetReport, GeneratorConfig};
 pub use pattern::{Pattern, PatternState, Tick};

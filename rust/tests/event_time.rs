@@ -1,0 +1,173 @@
+//! End-to-end event-time semantics: disorder-injected workloads through
+//! event-time window chains.
+//!
+//! The headline guarantee (Karimov et al.'s event-time correctness
+//! argument): with a watermark bound covering the stream's real disorder
+//! and a `merge_if_open` late policy, a disordered stream produces
+//! **byte-identical** window aggregates to the same stream fed in order —
+//! and the full wall-mode pipeline surfaces late/dropped counts and
+//! watermark lag in `results.json operators[]` and the CLI summary table.
+
+use sprobench::bench::scenarios;
+use sprobench::config::{BenchConfig, OpSpec, PipelineSpec};
+use sprobench::coordinator::run_wall;
+use sprobench::engine::{AggKind, EventBatch, LatePolicy, WindowTime};
+use sprobench::pipelines::{Chain, PipelineStep};
+use sprobench::postprocess::{operator_stats_table, validate_results};
+
+/// Build the event-time chain under test: window(event) → emit_aggregates.
+fn event_chain(watermark: u64, lateness: u64, policy: LatePolicy) -> Chain {
+    let mut cfg = BenchConfig::default();
+    cfg.engine.use_hlo = false;
+    cfg.workload.sensors = 64;
+    let spec = PipelineSpec {
+        ops: vec![
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 1_000_000,
+                slide_micros: 500_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: lateness,
+                late_policy: policy,
+                watermark_micros: watermark,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    };
+    Chain::compile(&cfg, &spec, "event-chain", None, None, 0).expect("compile event-time chain")
+}
+
+/// Feed `(key, val, gen_ts)` events through a chain in batches; returns
+/// the emitted `(key, payload)` records plus the chain's final stats.
+fn run_stream(
+    chain: &mut Chain,
+    events: &[(u32, f32, u64)],
+) -> (Vec<(u32, Vec<u8>)>, sprobench::pipelines::StepStats) {
+    let mut out = Vec::new();
+    for (i, chunk) in events.chunks(100).enumerate() {
+        let batch = EventBatch {
+            ids: chunk.iter().map(|e| e.0).collect(),
+            temps: chunk.iter().map(|e| e.1).collect(),
+            gen_ts: chunk.iter().map(|e| e.2).collect(),
+            append_ts: chunk.iter().map(|e| e.2).collect(),
+            payload_bytes: chunk.len() as u64 * 27,
+        };
+        chain
+            .process(i as u64 * 1_000, &[], &batch, &mut out)
+            .unwrap();
+    }
+    chain.finish(events.len() as u64 * 1_000, &mut out).unwrap();
+    let records = out
+        .into_iter()
+        .map(|r| (r.key, r.payload().to_vec()))
+        .collect();
+    (records, chain.stats())
+}
+
+#[test]
+fn disordered_stream_reproduces_in_order_aggregates_byte_identically() {
+    // 2000 events, 5ms apart, 7 hot keys.
+    let ordered: Vec<(u32, f32, u64)> = (0..2_000u64)
+        .map(|i| ((i % 7) as u32, (i % 23) as f32 * 1.5 - 10.0, i * 5_000))
+        .collect();
+    // Bounded disorder: reverse 32-event blocks → max displacement
+    // 31 × 5ms = 155ms.  The watermark bound (100ms) is deliberately
+    // *below* that, so a slice of the stream genuinely arrives behind the
+    // watermark; allowed_lateness (200ms) keeps their windows open, and
+    // merge_if_open folds them in.
+    let mut disordered = ordered.clone();
+    for block in disordered.chunks_mut(32) {
+        block.reverse();
+    }
+
+    let mut a = event_chain(100_000, 200_000, LatePolicy::MergeIfOpen);
+    let (out_ordered, stats_ordered) = run_stream(&mut a, &ordered);
+    let mut b = event_chain(100_000, 200_000, LatePolicy::MergeIfOpen);
+    let (out_disordered, stats_disordered) = run_stream(&mut b, &disordered);
+
+    assert_eq!(stats_ordered.dropped_events, 0);
+    assert_eq!(stats_ordered.late_events, 0, "in-order stream has no lates");
+    assert_eq!(stats_disordered.dropped_events, 0, "bounded disorder must not drop");
+    assert!(
+        stats_disordered.late_events > 0,
+        "the disorder exceeds the watermark bound, so merges must happen"
+    );
+    assert!(!out_ordered.is_empty(), "windows must have emitted");
+    assert_eq!(
+        out_ordered, out_disordered,
+        "event-time aggregates must be independent of arrival order"
+    );
+}
+
+#[test]
+fn drop_policy_diverges_and_accounts_for_losses() {
+    let ordered: Vec<(u32, f32, u64)> = (0..2_000u64)
+        .map(|i| ((i % 7) as u32, (i % 23) as f32, i * 5_000))
+        .collect();
+    let mut disordered = ordered.clone();
+    for block in disordered.chunks_mut(32) {
+        block.reverse();
+    }
+    // Zero allowed lateness + a tight watermark: the same disorder now
+    // loses events, and the accounting must say so.
+    let mut a = event_chain(100_000, 0, LatePolicy::Drop);
+    let (out_ordered, _) = run_stream(&mut a, &ordered);
+    let mut b = event_chain(100_000, 0, LatePolicy::Drop);
+    let (out_disordered, stats) = run_stream(&mut b, &disordered);
+    assert!(stats.dropped_events > 0, "tight watermark + drop must lose events");
+    assert_ne!(
+        out_ordered, out_disordered,
+        "dropping late records must change the aggregates"
+    );
+}
+
+#[test]
+fn wall_run_surfaces_event_time_metrics_in_results_and_cli_table() {
+    // The event_time_disorder preset scaled down to a sub-second smoke;
+    // stragglers bumped so late accounting is guaranteed visible.
+    let mut cfg = scenarios::event_time_disorder();
+    cfg.bench.name = "event-time-e2e".into();
+    cfg.bench.duration_micros = 800_000;
+    cfg.bench.warmup_micros = 0;
+    cfg.workload.rate = 40_000;
+    cfg.workload.sensors = 128;
+    cfg.workload.disorder.straggler_fraction = 0.05;
+    cfg.workload.disorder.straggler_micros = 1_000_000;
+    cfg.engine.parallelism = 2;
+    cfg.engine.use_hlo = false;
+    cfg.engine.batch_size = 256;
+    cfg.metrics.sample_interval_micros = 100_000;
+    cfg.validate().unwrap();
+
+    let (summary, _store) = run_wall(&cfg, None).unwrap();
+    assert_eq!(summary.processed, summary.generated, "engine must drain");
+    assert!(summary.emitted > 0, "finish-flush emits pending event-time panes");
+
+    // (b1) results.json operators[]: the window op carries the event-time
+    // counters.
+    let results = summary.to_json();
+    assert!(validate_results(&results).is_empty());
+    let ops = results.get("operators").and_then(|v| v.as_arr()).unwrap();
+    let window = ops
+        .iter()
+        .find(|o| o.get("op").and_then(|v| v.as_str()) == Some("window"))
+        .expect("window op in results.json operators[]");
+    let field = |k: &str| window.get(k).and_then(|v| v.as_i64()).expect(k);
+    assert!(
+        field("late_events") + field("dropped_events") > 0,
+        "5% stragglers beyond the watermark bound must register as late/dropped"
+    );
+    assert!(field("watermark_lag_us") > 0, "watermark trails processing time");
+
+    // (b2) CLI summary table: same counters, rendered columns.
+    let table = operator_stats_table(&summary.operators);
+    for needle in ["late", "dropped", "wm_lag_us", "window"] {
+        assert!(table.contains(needle), "missing '{needle}' in:\n{table}");
+    }
+    let (_, wstats) = summary
+        .operators
+        .iter()
+        .find(|(n, _)| n == "window")
+        .expect("window op in summary.operators");
+    assert!(wstats.watermark_lag_micros > 0);
+}
