@@ -22,7 +22,7 @@ use sprobench::bench::{scenarios, Bencher, Measurement};
 use sprobench::broker::{Broker, BrokerConfig, PartitionedBatchBuilder, Record, Topic};
 use sprobench::engine::EventBatch;
 use sprobench::metrics::{LatencyRecorder, MeasurementPoint};
-use sprobench::pipelines::{PipelineStep, StepFactory};
+use sprobench::pipelines::{LockstepExchange, PipelineStep, StepFactory};
 use sprobench::runtime::{Input, RuntimeFactory};
 use sprobench::util::clock;
 use sprobench::util::json::Json;
@@ -246,6 +246,85 @@ fn e2e_event_time(
     events as f64
 }
 
+/// Synthetic event batches shared by the shuffle case and its
+/// task-local baseline: `total` rows per round split across `ways`
+/// batches, ids sweeping a 1024-key space, `now` advancing 1ms/round so
+/// the 500ms slide keeps crossing boundaries.
+fn shuffle_round_batches(sent: u64, ways: usize, per_way: usize, now: u64) -> Vec<EventBatch> {
+    (0..ways)
+        .map(|t| {
+            let mut b = EventBatch::with_capacity(per_way);
+            for i in 0..per_way {
+                let id = ((sent + (t * per_way + i) as u64) % 1024) as u32;
+                b.ids.push(id);
+                b.temps.push(20.0 + (i % 40) as f32);
+                b.gen_ts.push(now);
+                b.append_ts.push(now);
+            }
+            b.payload_bytes = (per_way * 27) as u64;
+            b
+        })
+        .collect()
+}
+
+/// The keyed-exchange (shuffle) data plane: the `shuffle_uniform` preset
+/// chain (`keyby → window(mean) → topk → emit_aggregates`) staged across
+/// 4 task instances and driven in deterministic lockstep rounds — every
+/// row crosses the keyby boundary, every window aggregate crosses the
+/// global top-k boundary.  The delta against `e2e shuffle task-local`
+/// (identical chain, identical synthetic feed, one fused chain instance)
+/// is the exchange surcharge.
+fn e2e_shuffle(events: u64) -> f64 {
+    let mut cfg = scenarios::shuffle_uniform();
+    cfg.engine.use_hlo = false;
+    let par = cfg.engine.parallelism as usize;
+    let mut lx = LockstepExchange::compile(&cfg)
+        .expect("compile staged chain")
+        .expect("the shuffle preset stages");
+    let chunk = 512usize;
+    let mut out = Vec::new();
+    let mut sent = 0u64;
+    let mut now = 0u64;
+    while sent < events {
+        now += 1_000;
+        let batches = shuffle_round_batches(sent, par, chunk, now);
+        lx.process_round(now, &batches, &mut out).unwrap();
+        std::hint::black_box(out.len());
+        out.clear();
+        sent += (par * chunk) as u64;
+    }
+    lx.finish(now + 1_000_000, &mut out).unwrap();
+    std::hint::black_box(out.len());
+    sent as f64
+}
+
+/// The task-local baseline for [`e2e_shuffle`]: the *same* chain over
+/// the *same* synthetic rounds, executed as one fused chain instance
+/// with no exchange (what `engine.exchange: none` runs per task).
+fn e2e_shuffle_local(events: u64) -> f64 {
+    let mut cfg = scenarios::shuffle_uniform();
+    cfg.engine.use_hlo = false;
+    let par = cfg.engine.parallelism as usize;
+    let factory = StepFactory::new(&cfg, None);
+    let mut step = factory.create(0).expect("compile fused chain");
+    let chunk = 512usize;
+    let mut out = Vec::new();
+    let mut sent = 0u64;
+    let mut now = 0u64;
+    while sent < events {
+        now += 1_000;
+        for b in shuffle_round_batches(sent, par, chunk, now) {
+            step.process(now, &[], &b, &mut out).unwrap();
+        }
+        std::hint::black_box(out.len());
+        out.clear();
+        sent += (par * chunk) as u64;
+    }
+    step.finish(now + 1_000_000, &mut out).unwrap();
+    std::hint::black_box(out.len());
+    sent as f64
+}
+
 fn eps(m: &[Measurement], name: &str) -> f64 {
     m.iter()
         .find(|m| m.name == name)
@@ -367,6 +446,8 @@ fn main() {
             e2e_event_time(&broker, &t, &g, n / 2)
         });
     }
+    b.measure("e2e shuffle task-local", 1, iters, || e2e_shuffle_local(n / 2));
+    b.measure("e2e data plane shuffle", 1, iters, || e2e_shuffle(n / 2));
 
     // --- Record construction: per-event alloc vs chunk arena ------------------
     b.measure("record per-event alloc x512", 1, iters, || -> f64 {
@@ -524,6 +605,8 @@ fn main() {
     let batched_eps = eps(b.measurements(), "e2e data plane batched");
     let chained_eps = eps(b.measurements(), "e2e data plane chained");
     let event_time_eps = eps(b.measurements(), "e2e data plane event-time");
+    let shuffle_eps = eps(b.measurements(), "e2e data plane shuffle");
+    let shuffle_local_eps = eps(b.measurements(), "e2e shuffle task-local");
     let speedup = if per_record_eps > 0.0 {
         batched_eps / per_record_eps
     } else {
@@ -539,6 +622,14 @@ fn main() {
     // Event-time surcharge vs the processing-time chained loop.
     let event_vs_chained = if chained_eps > 0.0 {
         event_time_eps / chained_eps
+    } else {
+        0.0
+    };
+    // Keyed-exchange surcharge vs the task-local run of the *same* chain
+    // over the same synthetic feed (broker/parse cost excluded on both
+    // sides, so the ratio isolates routing + channels + gating).
+    let shuffle_vs_local = if shuffle_local_eps > 0.0 {
+        shuffle_eps / shuffle_local_eps
     } else {
         0.0
     };
@@ -566,6 +657,9 @@ fn main() {
     dp.set("chain_vs_batched", Json::Num(chain_vs_batched));
     dp.set("event_time_eps", Json::Num(event_time_eps));
     dp.set("event_vs_chained", Json::Num(event_vs_chained));
+    dp.set("shuffle_eps", Json::Num(shuffle_eps));
+    dp.set("shuffle_local_eps", Json::Num(shuffle_local_eps));
+    dp.set("shuffle_vs_local", Json::Num(shuffle_vs_local));
     doc.set("data_plane", dp);
     match std::fs::write("BENCH_hotpath.json", doc.to_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json (data-plane speedup: {speedup:.2}x)"),

@@ -7,7 +7,8 @@
 //! comparable.
 
 use crate::config::{
-    BenchConfig, CmpOp, DisorderSection, ExecMode, Framework, OpSpec, PipelineKind, PipelineSpec,
+    BenchConfig, CmpOp, DisorderSection, ExchangeMode, ExecMode, Framework, OpSpec, PipelineKind,
+    PipelineSpec,
 };
 use crate::engine::{AggKind, LatePolicy, WindowTime};
 
@@ -127,12 +128,64 @@ pub fn chained_filter_topk() -> BenchConfig {
                 cmp: CmpOp::Gt,
                 value: 20.0,
             },
-            OpSpec::KeyBy { modulo: 64 },
+            OpSpec::KeyBy {
+                modulo: 64,
+                parallelism: 0,
+            },
             OpSpec::window(AggKind::Mean, 1_000_000, 500_000),
-            OpSpec::TopK { k: 10 },
+            OpSpec::TopK {
+                k: 10,
+                parallelism: 0,
+            },
             OpSpec::EmitAggregates,
         ],
     });
+    cfg
+}
+
+/// The shared keyed-exchange chain behind the shuffle presets:
+/// `keyby → window(mean) → topk → emit_aggregates`, split into stages and
+/// hash-routed between tasks (`engine.exchange: hash`).
+fn shuffle_chain(cfg: &mut BenchConfig) {
+    cfg.engine.exchange = ExchangeMode::Hash;
+    cfg.engine.pipeline_spec = Some(PipelineSpec {
+        ops: vec![
+            OpSpec::KeyBy {
+                modulo: 64,
+                parallelism: 0,
+            },
+            OpSpec::window(AggKind::Mean, 1_000_000, 500_000),
+            OpSpec::TopK {
+                k: 10,
+                parallelism: 0,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    });
+}
+
+/// Skewed-key shuffle scenario (the ShuffleBench regime the exchange is
+/// accountable to): a Zipf tail plus a concentrated hot set — half the
+/// stream hammers 4 sensors — through the keyed exchange chain.  Hot
+/// derived keys all land on single stage instances, so this preset is the
+/// one that makes exchange imbalance visible in per-operator stats.
+pub fn shuffle_skew() -> BenchConfig {
+    let mut cfg = wall_base("shuffle-skew");
+    cfg.workload.sensors = 1024;
+    cfg.workload.key_skew = 1.1;
+    cfg.workload.hot_keys = 4;
+    cfg.workload.hot_fraction = 0.5;
+    shuffle_chain(&mut cfg);
+    cfg
+}
+
+/// Uniform-key control for [`shuffle_skew`]: identical chain and load,
+/// keys drawn uniformly — the baseline an exchange-imbalance comparison
+/// reads against.
+pub fn shuffle_uniform() -> BenchConfig {
+    let mut cfg = wall_base("shuffle-uniform");
+    cfg.workload.sensors = 1024;
+    shuffle_chain(&mut cfg);
     cfg
 }
 
@@ -262,6 +315,27 @@ mod tests {
             .pipeline_spec
             .unwrap()
             .has_window());
+    }
+
+    #[test]
+    fn shuffle_presets_validate_and_stage() {
+        for cfg in [shuffle_skew(), shuffle_uniform()] {
+            cfg.validate().unwrap();
+            assert_eq!(cfg.engine.exchange, ExchangeMode::Hash);
+            let stages = cfg
+                .engine
+                .effective_spec()
+                .split_stages(cfg.engine.parallelism);
+            assert_eq!(stages.len(), 3, "keyby and topk boundaries");
+            assert_eq!(stages[2].parallelism, 1, "global top-k stage");
+        }
+        let skew = shuffle_skew();
+        assert!(skew.workload.key_skew > 0.0);
+        assert_eq!(skew.workload.hot_keys, 4);
+        assert_eq!(skew.workload.hot_fraction, 0.5);
+        let uniform = shuffle_uniform();
+        assert_eq!(uniform.workload.key_skew, 0.0);
+        assert_eq!(uniform.workload.hot_fraction, 0.0);
     }
 
     #[test]

@@ -34,4 +34,4 @@ pub use batch::{BatchEntry, PartitionedBatchBuilder, RecordBatch, RecordBatchBui
 pub use consumer::{ConsumerGroup, PolledBatch};
 pub use core::{Broker, BrokerConfig, BrokerStats};
 pub use record::Record;
-pub use topic::Topic;
+pub use topic::{fib_slot, Topic};

@@ -5,6 +5,20 @@ use std::sync::Arc;
 use super::partition::{Partition, PartitionClosed};
 use super::record::Record;
 
+/// Fibonacci multiplicative hash of `key` into a slot in `[0, n)`.
+///
+/// This is the single routing function shared by broker partitioning
+/// ([`Topic::partition_for_key`]) and the engine's keyed exchange
+/// ([`crate::engine::exchange`]): both planes must agree on how a dense
+/// sensor-id keyspace spreads, so a key's exchange route stays consistent
+/// with the broker partition that carried it.
+#[inline]
+pub fn fib_slot(key: u32, n: u32) -> u32 {
+    debug_assert!(n > 0);
+    let h = (key as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    (h >> 33) as u32 % n
+}
+
 /// A named topic with `n` partitions.
 pub struct Topic {
     pub name: String,
@@ -33,8 +47,7 @@ impl Topic {
     /// Fibonacci hashing spreads dense sensor-id keyspaces evenly.
     #[inline]
     pub fn partition_for_key(&self, key: u32) -> u32 {
-        let h = (key as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        (h >> 33) as u32 % self.partition_count()
+        fib_slot(key, self.partition_count())
     }
 
     /// Append via key routing.
@@ -102,6 +115,26 @@ mod tests {
         let p = t.partition_for_key(77);
         assert_eq!(t.partition(p).high_watermark(), 10);
         assert_eq!(t.total_appended(), 10);
+    }
+
+    #[test]
+    fn fib_slot_agrees_with_partition_routing() {
+        // The exchange plane routes with the same function the broker
+        // partitions with; the two must never drift apart.
+        let t = Topic::new("in", 6, 1024);
+        for key in 0..2048u32 {
+            assert_eq!(fib_slot(key, 6), t.partition_for_key(key));
+        }
+        // Every slot count covers its full range.
+        for n in 1..9u32 {
+            let mut seen = vec![false; n as usize];
+            for key in 0..4096u32 {
+                let s = fib_slot(key, n);
+                assert!(s < n);
+                seen[s as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "unreached slot at n={n}");
+        }
     }
 
     #[test]

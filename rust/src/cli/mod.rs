@@ -580,16 +580,29 @@ engine:
             results.get("pipeline").and_then(|v| v.as_str()),
             Some("chain[filter→keyby→window→topk→emit_aggregates]")
         );
+        // The keyed chain stages at the keyby and topk boundaries, so the
+        // report carries one `exchange` entry per boundary.
         let ops = results.get("operators").and_then(|v| v.as_arr()).unwrap();
         let names: Vec<&str> = ops
             .iter()
             .filter_map(|o| o.get("op").and_then(|v| v.as_str()))
             .collect();
-        assert_eq!(names, vec!["filter", "keyby", "window", "topk", "emit_aggregates"]);
+        assert_eq!(
+            names,
+            vec!["filter", "keyby", "exchange", "window", "exchange", "topk", "emit_aggregates"]
+        );
         let processed = results.path(&["events", "processed"]).unwrap().as_i64().unwrap();
         assert!(processed > 0);
         let emitted = results.path(&["events", "emitted"]).unwrap().as_i64().unwrap();
         assert!(emitted > 0, "chained topology must emit top-k aggregates");
+        // Exchange accounting: the filter passes most rows, and every
+        // surviving row crosses the first boundary.
+        let xchg: i64 = ops
+            .iter()
+            .filter(|o| o.get("op").and_then(|v| v.as_str()) == Some("exchange"))
+            .filter_map(|o| o.get("exchange_records").and_then(|v| v.as_i64()))
+            .sum();
+        assert!(xchg > 0, "rows must cross the exchange: {results:?}");
         // topk bounds emissions: ≤ k per window emission.
         let window_emits: i64 = ops
             .iter()

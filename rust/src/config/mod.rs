@@ -13,7 +13,7 @@ pub mod yaml;
 
 pub use schema::{
     parse_pipeline_spec, pipeline_grammar, BenchConfig, CmpOp, ConfigError, DisorderSection,
-    ExecMode, Framework, OpSpec, Pattern, PipelineKind, PipelineSpec,
+    ExchangeMode, ExecMode, Framework, OpSpec, Pattern, PipelineKind, PipelineSpec, StageSpec,
 };
 
 use crate::util::json::Json;

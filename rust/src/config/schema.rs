@@ -84,6 +84,41 @@ impl PipelineKind {
     }
 }
 
+/// How rows move between pipeline stages split at `keyby` boundaries.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// Hash-routed inter-task exchange (the default): after a re-keying
+    /// every row travels to the task that owns its derived key, so keyed
+    /// state downstream sees the whole key group regardless of which
+    /// broker partition produced the row.  Routing uses the same
+    /// Fibonacci hash as broker partitioning
+    /// ([`crate::broker::fib_slot`]).
+    #[default]
+    Hash,
+    /// No exchange: rows stay on the task that polled them — the
+    /// pre-exchange behaviour, under which per-key aggregates silently
+    /// change with `engine.parallelism`.  Kept as an explicit opt-out for
+    /// ablations and the regression suite.
+    None,
+}
+
+impl ExchangeMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExchangeMode::Hash => "hash",
+            ExchangeMode::None => "none",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ExchangeMode> {
+        match s {
+            "hash" => Some(ExchangeMode::Hash),
+            "none" | "off" => Some(ExchangeMode::None),
+            _ => None,
+        }
+    }
+}
+
 /// Comparison operator for [`OpSpec::Filter`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CmpOp {
@@ -138,8 +173,12 @@ pub enum OpSpec {
     /// The paper's CPU-intensive transform: °C → °F plus alert counting
     /// against `engine.threshold_f`; HLO-accelerated when artifacts exist.
     CpuTransform,
-    /// Re-key rows by `key % modulo` (shuffle-style regrouping).
-    KeyBy { modulo: u32 },
+    /// Re-key rows by `key % modulo` (shuffle-style regrouping).  With the
+    /// exchange enabled, every `keyby` opens a new pipeline stage whose
+    /// rows are hash-routed to the task owning the derived key;
+    /// `parallelism` sets that stage's instance count (0 inherits
+    /// `engine.parallelism`).
+    KeyBy { modulo: u32, parallelism: u32 },
     /// Keyed sliding-window aggregation; 0 durations inherit
     /// `engine.window` / `engine.slide`.  Consumes event rows and emits
     /// aggregate rows downstream.  `time: event` switches pane assignment
@@ -161,8 +200,12 @@ pub enum OpSpec {
         /// protects shuffle-only disorder from a degenerate tiny bound.
         watermark_micros: u64,
     },
-    /// Keep the `k` largest aggregates per window.
-    TopK { k: usize },
+    /// Keep the `k` largest aggregates per window.  Top-k selects across
+    /// *all* keys of a window, so with the exchange enabled it runs in its
+    /// own stage; `parallelism` 0 defaults that stage to a single global
+    /// instance (the only width at which the selection sees every
+    /// aggregate).
+    TopK { k: usize, parallelism: u32 },
     /// Serialize rows as sensor events to the egestion topic (rows pass
     /// through unchanged, so a window may follow — the fused shape).
     EmitEvents,
@@ -185,6 +228,35 @@ impl OpSpec {
             allowed_lateness_micros: 0,
             late_policy: LatePolicy::default(),
             watermark_micros: 0,
+        }
+    }
+
+    /// Resolved watermark bound of an **event-time window** op: the
+    /// explicit `watermark:`, else `max(workload.disorder.lateness,
+    /// resolved slide)` — the single definition shared by the chain
+    /// compiler (constructing the window's tracker) and the staged
+    /// compiler (sizing the exchange source's liveness slack); the two
+    /// must never drift apart.  `None` for every other op.
+    pub fn event_watermark_bound(&self, cfg: &BenchConfig) -> Option<u64> {
+        match self {
+            OpSpec::Window {
+                time: WindowTime::Event,
+                slide_micros,
+                watermark_micros,
+                ..
+            } => {
+                if *watermark_micros > 0 {
+                    Some(*watermark_micros)
+                } else {
+                    let s = if *slide_micros > 0 {
+                        *slide_micros
+                    } else {
+                        cfg.engine.slide_micros
+                    };
+                    Some(cfg.workload.disorder.lateness_micros.max(s))
+                }
+            }
+            _ => None,
         }
     }
 
@@ -230,6 +302,67 @@ impl PipelineSpec {
         self.ops.iter().any(|o| matches!(o, OpSpec::Window { .. }))
     }
 
+    /// Aggregator of the last window anywhere in the spec (used to carry
+    /// the emit field name across stage boundaries).
+    pub fn last_window_agg(&self) -> Option<AggKind> {
+        self.window_agg_before(self.ops.len())
+    }
+
+    /// Decompose the chain into exchange-connected stages.
+    ///
+    /// A new stage opens after every `keyby` (rows must be re-routed to
+    /// the task owning the derived key) and before every `topk` whose
+    /// effective parallelism differs from the running stage's (top-k is a
+    /// whole-window selection, so it defaults to one global instance).
+    /// Stage 0 always runs at `engine_parallelism` — it is fed by the
+    /// broker consumer group.  A chain without re-keying collapses to a
+    /// single stage (no exchange).
+    pub fn split_stages(&self, engine_parallelism: u32) -> Vec<StageSpec> {
+        let par = engine_parallelism.max(1);
+        let mut stages = vec![StageSpec {
+            ops: Vec::new(),
+            parallelism: par,
+        }];
+        for op in &self.ops {
+            match op {
+                OpSpec::KeyBy { parallelism, .. } => {
+                    stages.last_mut().expect("nonempty").ops.push(op.clone());
+                    let p = if *parallelism > 0 { *parallelism } else { par };
+                    stages.push(StageSpec {
+                        ops: Vec::new(),
+                        parallelism: p.min(par),
+                    });
+                }
+                OpSpec::TopK { parallelism, .. } => {
+                    let declared = if *parallelism > 0 { *parallelism } else { 1 };
+                    let p = declared.min(par);
+                    let cur = stages.last_mut().expect("nonempty");
+                    if cur.ops.is_empty() {
+                        // Stage just opened by a keyby: adopt the top-k
+                        // width instead of opening yet another stage.
+                        cur.parallelism = p;
+                        cur.ops.push(op.clone());
+                    } else {
+                        // Top-k always starts its own stage (whatever the
+                        // parallelism), so the stage graph is identical at
+                        // every `engine.parallelism` — the property the
+                        // equivalence suite compares across.
+                        stages.push(StageSpec {
+                            ops: vec![op.clone()],
+                            parallelism: p,
+                        });
+                    }
+                }
+                other => stages.last_mut().expect("nonempty").ops.push(other.clone()),
+            }
+        }
+        // A trailing keyby opens a stage nothing flows into; fold it away.
+        if stages.last().is_some_and(|s| s.ops.is_empty()) {
+            stages.pop();
+        }
+        stages
+    }
+
     /// Names of operators that need an `OperatorRegistry` to compile.
     /// Callers that can never supply one (the CLI) reject these up front,
     /// before a run is launched.
@@ -242,6 +375,15 @@ impl PipelineSpec {
             })
             .collect()
     }
+}
+
+/// One exchange-connected slice of an operator chain (see
+/// [`PipelineSpec::split_stages`]): the ops executed between two keyed
+/// routing boundaries, and the number of parallel instances hosting them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSpec {
+    pub ops: Vec<OpSpec>,
+    pub parallelism: u32,
 }
 
 #[derive(Clone, Debug)]
@@ -309,6 +451,12 @@ pub struct WorkloadSection {
     pub sensors: u32,
     /// Zipf exponent for key skew; 0 = uniform.
     pub key_skew: f64,
+    /// Hot-key set size: `hot_fraction` of the stream is drawn uniformly
+    /// from sensor ids `[0, hot_keys)` — a concentrated hotspot on top of
+    /// (or instead of) the Zipf tail.  0 disables.
+    pub hot_keys: u32,
+    /// Fraction of events hitting the hot-key set; 0 disables.
+    pub hot_fraction: f64,
     pub random: RandomPattern,
     pub burst: BurstPattern,
     /// Out-of-order arrival model; disabled by default.
@@ -352,6 +500,10 @@ pub struct EngineSection {
     pub use_hlo: bool,
     /// Micro-batch interval for the Spark personality.
     pub microbatch_micros: u64,
+    /// Keyed exchange between pipeline stages split at `keyby`
+    /// boundaries: `hash` (default) routes rows to the task owning the
+    /// derived key; `none` keeps the pre-exchange task-local behaviour.
+    pub exchange: ExchangeMode,
 }
 
 impl EngineSection {
@@ -461,6 +613,8 @@ impl Default for BenchConfig {
                 event_bytes: 27,
                 sensors: 1024,
                 key_skew: 0.0,
+                hot_keys: 0,
+                hot_fraction: 0.0,
                 random: RandomPattern {
                     min_rate: 50_000,
                     max_rate: 200_000,
@@ -497,6 +651,7 @@ impl Default for BenchConfig {
                 threshold_f: 80.0,
                 use_hlo: true,
                 microbatch_micros: 100_000,
+                exchange: ExchangeMode::Hash,
             },
             metrics: MetricsSection {
                 sample_interval_micros: 1_000_000,
@@ -620,6 +775,8 @@ operator-chain spec:
           value: 26.0
       - keyby:
           modulo: 64
+          parallelism: 4   # instances of the stage this keyby opens;
+                           # omit to inherit engine.parallelism
       - window:
           agg: mean        # mean | sum | min | max | count
           window: 2s       # omit to inherit engine.window; slide must divide window
@@ -631,12 +788,18 @@ operator-chain spec:
                            # max(workload.disorder.lateness, slide)
       - topk:
           k: 10
+          parallelism: 1   # top-k runs in its own single global stage
+                           # (1 or omitted; partial top-k is rejected)
       - emit: aggregates   # or: events
 built-in ops: forward, filter(cmp,value), map(scale,offset), cpu_transform, \
-keyby(modulo), window(agg,window,slide,time,allowed_lateness,late_policy,\
-watermark), topk(k), emit(events|aggregates); any other name resolves \
-against the custom OperatorRegistry at engine start \
-(see docs/ARCHITECTURE.md §Pipeline operator chains and §Time semantics)"
+keyby(modulo,parallelism), window(agg,window,slide,time,allowed_lateness,\
+late_policy,watermark), topk(k,parallelism), emit(events|aggregates); any \
+other name resolves against the custom OperatorRegistry at engine start.  \
+Chains are split into stages at each keyby; `engine.exchange: hash` \
+(default) hash-routes rows between stages so keyed state sees whole key \
+groups, `none` keeps rows task-local \
+(see docs/ARCHITECTURE.md §Pipeline operator chains, §Time semantics and \
+§Exchange & keyed state)"
 }
 
 /// Parse an operator-chain spec from its JSON tree: either `{ops: [...]}`
@@ -755,7 +918,10 @@ fn build_op(i: usize, name: &str, params: &Json) -> Result<OpSpec, ConfigError> 
             if modulo == 0 {
                 return err(at("needs `modulo:` > 0"));
             }
-            Ok(OpSpec::KeyBy { modulo })
+            Ok(OpSpec::KeyBy {
+                modulo,
+                parallelism: get_u32(params, "parallelism", 0)?,
+            })
         }
         "window" => {
             let agg_name = params
@@ -813,7 +979,10 @@ fn build_op(i: usize, name: &str, params: &Json) -> Result<OpSpec, ConfigError> 
             if k == 0 {
                 return err(at("needs `k:` > 0"));
             }
-            Ok(OpSpec::TopK { k })
+            Ok(OpSpec::TopK {
+                k,
+                parallelism: get_u32(params, "parallelism", 0)?,
+            })
         }
         custom => Ok(OpSpec::Custom {
             name: custom.to_string(),
@@ -855,6 +1024,8 @@ impl BenchConfig {
             event_bytes: get_bytes(&w, "event_bytes", d.workload.event_bytes as u64)? as usize,
             sensors: get_u64(&w, "sensors", d.workload.sensors as u64)? as u32,
             key_skew: get_f64(&w, "key_skew", d.workload.key_skew)?,
+            hot_keys: get_u32(&w, "hot_keys", d.workload.hot_keys)?,
+            hot_fraction: get_f64(&w, "hot_fraction", d.workload.hot_fraction)?,
             random: RandomPattern {
                 min_rate: get_u64(&rnd, "min_rate", d.workload.random.min_rate)?,
                 max_rate: get_u64(&rnd, "max_rate", d.workload.random.max_rate)?,
@@ -960,6 +1131,14 @@ impl BenchConfig {
             threshold_f: get_f64(&e, "threshold_f", d.engine.threshold_f as f64)? as f32,
             use_hlo: get_bool(&e, "use_hlo", d.engine.use_hlo)?,
             microbatch_micros: get_duration(&e, "microbatch", d.engine.microbatch_micros)?,
+            exchange: {
+                let name = get_str(&e, "exchange", d.engine.exchange.name());
+                ExchangeMode::from_name(&name).ok_or_else(|| {
+                    ConfigError(format!(
+                        "engine.exchange: unknown mode '{name}' — expected hash or none"
+                    ))
+                })?
+            },
         };
 
         let m = section(root, "metrics");
@@ -1066,6 +1245,21 @@ impl BenchConfig {
         // engine.window/slide — so a non-divisible pane spec is caught here
         // for every pipeline, not only explicit `ops:` documents).
         self.validate_spec(&self.engine.effective_spec())?;
+        let hot = self.workload.hot_fraction;
+        if !(0.0..=1.0).contains(&hot) || !hot.is_finite() {
+            return err(format!(
+                "workload.hot_fraction must be in [0, 1] (got {hot})"
+            ));
+        }
+        if hot > 0.0 && self.workload.hot_keys == 0 {
+            return err("workload.hot_fraction > 0 needs `hot_keys:` > 0 (the hot-set size)");
+        }
+        if self.workload.hot_keys > self.workload.sensors {
+            return err(format!(
+                "workload.hot_keys ({}) cannot exceed workload.sensors ({})",
+                self.workload.hot_keys, self.workload.sensors
+            ));
+        }
         let dis = &self.workload.disorder;
         for (name, frac) in [
             ("late_fraction", dis.late_fraction),
@@ -1150,6 +1344,45 @@ impl BenchConfig {
         let mut saw_window = false;
         for (i, op) in spec.ops.iter().enumerate() {
             match op {
+                // keyby/topk zero parameters are rejected at YAML parse
+                // time, but a programmatically constructed spec skips that
+                // layer and would otherwise abort the engine thread on the
+                // constructor `assert!` backstops (operator.rs).  Catch
+                // them here with the grammar attached.
+                OpSpec::KeyBy { modulo: 0, .. } => {
+                    return err(format!(
+                        "engine.pipeline.ops[{i}] (keyby): needs `modulo:` > 0 — keying by \
+                         zero groups is undefined\n{}",
+                        pipeline_grammar()
+                    ));
+                }
+                OpSpec::TopK { k: 0, .. } => {
+                    return err(format!(
+                        "engine.pipeline.ops[{i}] (topk): needs `k:` > 0 — an empty \
+                         selection would drop every window\n{}",
+                        pipeline_grammar()
+                    ));
+                }
+                OpSpec::KeyBy { parallelism, .. } | OpSpec::TopK { parallelism, .. }
+                    if *parallelism > self.engine.parallelism =>
+                {
+                    return err(format!(
+                        "engine.pipeline.ops[{i}] ({}): stage parallelism {} exceeds \
+                         engine.parallelism {} — a stage cannot have more instances than \
+                         there are task slots to host them",
+                        op.op_name(),
+                        parallelism,
+                        self.engine.parallelism
+                    ));
+                }
+                OpSpec::TopK { parallelism, .. } if *parallelism > 1 => {
+                    return err(format!(
+                        "engine.pipeline.ops[{i}] (topk): parallelism {parallelism} would \
+                         select top-k over each instance's key subset, not globally — \
+                         partial top-k is not supported (use 1, or omit for the global \
+                         default)"
+                    ));
+                }
                 OpSpec::Window {
                     window_micros,
                     slide_micros,
@@ -1368,12 +1601,24 @@ engine:
         let spec = cfg.engine.pipeline_spec.expect("spec parsed");
         assert_eq!(spec.ops.len(), 5);
         assert_eq!(spec.ops[0], OpSpec::Filter { cmp: CmpOp::Gt, value: 26.0 });
-        assert_eq!(spec.ops[1], OpSpec::KeyBy { modulo: 64 });
+        assert_eq!(
+            spec.ops[1],
+            OpSpec::KeyBy {
+                modulo: 64,
+                parallelism: 0
+            }
+        );
         assert_eq!(
             spec.ops[2],
             OpSpec::window(AggKind::Mean, 2_000_000, 1_000_000)
         );
-        assert_eq!(spec.ops[3], OpSpec::TopK { k: 10 });
+        assert_eq!(
+            spec.ops[3],
+            OpSpec::TopK {
+                k: 10,
+                parallelism: 0
+            }
+        );
         assert_eq!(spec.ops[4], OpSpec::EmitAggregates);
         assert_eq!(
             spec.label(),
@@ -1645,6 +1890,191 @@ engine:
                 BenchConfig::from_json(&yaml::parse(y).unwrap()).is_err(),
                 "should reject: {y}"
             );
+        }
+    }
+
+    #[test]
+    fn exchange_mode_parses_and_rejects_unknown() {
+        assert_eq!(BenchConfig::default().engine.exchange, ExchangeMode::Hash);
+        let y = "engine:\n  exchange: none\n";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert_eq!(cfg.engine.exchange, ExchangeMode::None);
+        let y = "engine:\n  exchange: teleport\n";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("hash or none"), "{e}");
+    }
+
+    #[test]
+    fn per_stage_parallelism_parses_from_yaml() {
+        let y = "
+engine:
+  parallelism: 8
+  pipeline:
+    ops:
+      - keyby:
+          modulo: 64
+          parallelism: 4
+      - window:
+          agg: mean
+          window: 2s
+          slide: 1s
+      - topk:
+          k: 3
+          parallelism: 1
+      - emit: aggregates
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        let spec = cfg.engine.pipeline_spec.unwrap();
+        assert_eq!(
+            spec.ops[0],
+            OpSpec::KeyBy {
+                modulo: 64,
+                parallelism: 4
+            }
+        );
+        assert_eq!(
+            spec.ops[2],
+            OpSpec::TopK {
+                k: 3,
+                parallelism: 1
+            }
+        );
+        // Partial top-k (parallelism > 1) would select per key subset —
+        // rejected with an explanation.
+        let y = y.replace("parallelism: 1", "parallelism: 2");
+        let e = BenchConfig::from_json(&yaml::parse(&y).unwrap()).unwrap_err();
+        assert!(e.0.contains("partial top-k"), "{e}");
+    }
+
+    #[test]
+    fn stage_parallelism_beyond_engine_is_rejected() {
+        let y = "
+engine:
+  parallelism: 2
+  pipeline:
+    ops:
+      - keyby:
+          modulo: 8
+          parallelism: 4
+      - window:
+          agg: mean
+          window: 2s
+          slide: 1s
+      - emit: aggregates
+";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("exceeds"), "{e}");
+        assert!(e.0.contains("task slots"), "{e}");
+    }
+
+    #[test]
+    fn programmatic_keyby_and_topk_zero_rejected_at_validate() {
+        // The YAML layer rejects these; a spec built in code must be
+        // caught by validate(), not by the engine-thread assert backstop.
+        let mut cfg = BenchConfig::default();
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::KeyBy {
+                    modulo: 0,
+                    parallelism: 0,
+                },
+                OpSpec::EmitEvents,
+            ],
+        });
+        let e = cfg.validate().unwrap_err();
+        assert!(e.0.contains("modulo"), "{e}");
+        assert!(e.0.contains("ops:"), "error must carry the grammar: {e}");
+        let mut cfg = BenchConfig::default();
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::window(AggKind::Mean, 2_000_000, 1_000_000),
+                OpSpec::TopK {
+                    k: 0,
+                    parallelism: 0,
+                },
+                OpSpec::EmitAggregates,
+            ],
+        });
+        let e = cfg.validate().unwrap_err();
+        assert!(e.0.contains("k:"), "{e}");
+        assert!(e.0.contains("ops:"), "error must carry the grammar: {e}");
+    }
+
+    #[test]
+    fn split_stages_cuts_at_keyby_and_topk() {
+        let spec = PipelineSpec {
+            ops: vec![
+                OpSpec::Filter {
+                    cmp: CmpOp::Gt,
+                    value: 20.0,
+                },
+                OpSpec::KeyBy {
+                    modulo: 64,
+                    parallelism: 0,
+                },
+                OpSpec::window(AggKind::Mean, 1_000_000, 500_000),
+                OpSpec::TopK {
+                    k: 10,
+                    parallelism: 0,
+                },
+                OpSpec::EmitAggregates,
+            ],
+        };
+        let stages = spec.split_stages(4);
+        assert_eq!(stages.len(), 3);
+        assert_eq!(stages[0].ops.len(), 2, "filter + keyby");
+        assert_eq!(stages[0].parallelism, 4);
+        assert_eq!(stages[1].ops.len(), 1, "window");
+        assert_eq!(stages[1].parallelism, 4);
+        assert_eq!(stages[2].ops.len(), 2, "topk + emit");
+        assert_eq!(stages[2].parallelism, 1, "top-k defaults to one global instance");
+        // The stage graph is parallelism-independent (instance counts are
+        // clamped, the cuts are not).
+        let at_one = spec.split_stages(1);
+        assert_eq!(at_one.len(), 3);
+        assert!(at_one.iter().all(|s| s.parallelism == 1));
+        // No keyby → single stage, no exchange.
+        let flat = PipelineSpec {
+            ops: vec![OpSpec::CpuTransform, OpSpec::EmitEvents],
+        };
+        assert_eq!(flat.split_stages(4).len(), 1);
+        // keyby directly into topk: the opened stage adopts the top-k width.
+        let kt = PipelineSpec {
+            ops: vec![
+                OpSpec::window(AggKind::Mean, 1_000_000, 500_000),
+                OpSpec::KeyBy {
+                    modulo: 8,
+                    parallelism: 0,
+                },
+                OpSpec::TopK {
+                    k: 2,
+                    parallelism: 0,
+                },
+                OpSpec::EmitAggregates,
+            ],
+        };
+        let stages = kt.split_stages(4);
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[1].parallelism, 1, "topk width adopted by the keyby stage");
+        assert_eq!(stages[1].ops.len(), 2, "topk + emit share the keyby-opened stage");
+    }
+
+    #[test]
+    fn hot_key_knobs_parse_and_bound() {
+        let y = "workload:\n  sensors: 256\n  hot_keys: 8\n  hot_fraction: 0.5\n";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert_eq!(cfg.workload.hot_keys, 8);
+        assert_eq!(cfg.workload.hot_fraction, 0.5);
+        for (y, needle) in [
+            ("workload:\n  hot_fraction: 1.5\n", "hot_fraction"),
+            ("workload:\n  hot_fraction: 0.2\n", "hot_keys"),
+            (
+                "workload:\n  sensors: 16\n  hot_keys: 64\n  hot_fraction: 0.1\n",
+                "cannot exceed",
+            ),
+        ] {
+            let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+            assert!(e.0.contains(needle), "expected '{needle}' in: {e}");
         }
     }
 

@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use super::RunSummary;
-use crate::config::{BenchConfig, OpSpec, PipelineKind, PipelineSpec};
+use crate::config::{BenchConfig, ExchangeMode, OpSpec, PipelineKind, PipelineSpec};
 use crate::metrics::{MeasurementPoint, MetricStore};
 use crate::util::histogram::{Histogram, HistogramSummary};
 use crate::util::rng::Pcg32;
@@ -33,6 +33,10 @@ pub struct SimModel {
     /// Per-task dispatch overhead per batch, µs (drives the Fig. 7
     /// latency growth with parallelism).
     pub per_task_dispatch_micros: f64,
+    /// Per-event cost of crossing one keyed-exchange boundary, µs
+    /// (route hash + channel handshake + drain), charged once per
+    /// boundary when `engine.exchange: hash` stages the chain.
+    pub exchange_per_event_micros: f64,
     /// JVM allocation per processed event, bytes.
     pub alloc_per_event: f64,
     /// Young-generation size per task, bytes.
@@ -61,6 +65,7 @@ impl Default for SimModel {
             task_rate_fused: 0.95e6,
             base_latency_micros: 900.0,
             per_task_dispatch_micros: 110.0,
+            exchange_per_event_micros: 0.18,
             alloc_per_event: 220.0,
             young_bytes: 64.0 * (1 << 20) as f64,
             young_pause_micros: 2_300.0,
@@ -86,8 +91,8 @@ impl SimModel {
     /// (forward ≈ passthrough; cpu_transform + emit ≈ cpu; window + emit ≈
     /// mem); re-calibrate from `BENCH_hotpath.json` (`e2e data plane
     /// chained`) when the operator layer changes.
-    fn task_rate_spec(&self, spec: &PipelineSpec) -> f64 {
-        let cost_micros: f64 = spec
+    fn task_rate_spec(&self, spec: &PipelineSpec, cfg: &BenchConfig) -> f64 {
+        let op_cost: f64 = spec
             .ops
             .iter()
             .map(|op| match op {
@@ -111,12 +116,21 @@ impl SimModel {
                 OpSpec::Custom { .. } => 0.50,
             })
             .sum();
+        // Exchange pricing: every keyed boundary the staged chain crosses
+        // charges one route+transfer per event — the shuffle cost
+        // ShuffleBench isolates, which `max-capacity` sweeps must see.
+        let boundaries = if cfg.engine.exchange == ExchangeMode::Hash {
+            spec.split_stages(cfg.engine.parallelism).len().saturating_sub(1)
+        } else {
+            0
+        };
+        let cost_micros = op_cost + boundaries as f64 * self.exchange_per_event_micros;
         1e6 / cost_micros.max(0.01)
     }
 
     fn task_rate_for(&self, cfg: &BenchConfig) -> f64 {
         match &cfg.engine.pipeline_spec {
-            Some(spec) => self.task_rate_spec(spec),
+            Some(spec) => self.task_rate_spec(spec, cfg),
             None => self.task_rate(cfg.engine.pipeline),
         }
     }
@@ -172,7 +186,7 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
             let mut saw_window = false;
             for op in &spec.ops {
                 match op {
-                    OpSpec::KeyBy { modulo } if !saw_window => {
+                    OpSpec::KeyBy { modulo, .. } if !saw_window => {
                         keys = keys.min(*modulo as u64)
                     }
                     OpSpec::Window { slide_micros, .. } if !saw_window => {
@@ -181,7 +195,7 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
                         }
                         saw_window = true;
                     }
-                    OpSpec::TopK { k } => cap = *k as u64,
+                    OpSpec::TopK { k, .. } => cap = *k as u64,
                     _ => {}
                 }
             }
@@ -350,9 +364,15 @@ mod tests {
                     cmp: CmpOp::Gt,
                     value: 25.0,
                 },
-                OpSpec::KeyBy { modulo: 64 },
+                OpSpec::KeyBy {
+                    modulo: 64,
+                    parallelism: 0,
+                },
                 OpSpec::window(AggKind::Mean, 2_000_000, 1_000_000),
-                OpSpec::TopK { k: 10 },
+                OpSpec::TopK {
+                    k: 10,
+                    parallelism: 0,
+                },
                 OpSpec::EmitAggregates,
             ],
         });
@@ -374,7 +394,10 @@ mod tests {
         post.engine.pipeline_spec = Some(PipelineSpec {
             ops: vec![
                 OpSpec::window(AggKind::Mean, 2_000_000, 1_000_000),
-                OpSpec::KeyBy { modulo: 4 },
+                OpSpec::KeyBy {
+                    modulo: 4,
+                    parallelism: 0,
+                },
                 OpSpec::EmitAggregates,
             ],
         });
@@ -417,6 +440,50 @@ mod tests {
         );
         // Emission cadence (slide-driven) is time-domain independent.
         assert_eq!(se.emitted, sp.emitted);
+    }
+
+    #[test]
+    fn exchange_costing_prices_the_shuffle() {
+        use crate::config::ExchangeMode;
+        use crate::engine::AggKind;
+        let m = SimModel::default();
+        let keyed = |exchange: ExchangeMode| {
+            let mut c = cfg(50_000_000, 8);
+            c.engine.exchange = exchange;
+            c.engine.pipeline_spec = Some(PipelineSpec {
+                ops: vec![
+                    OpSpec::KeyBy {
+                        modulo: 64,
+                        parallelism: 0,
+                    },
+                    OpSpec::window(AggKind::Mean, 2_000_000, 1_000_000),
+                    OpSpec::TopK {
+                        k: 10,
+                        parallelism: 0,
+                    },
+                    OpSpec::EmitAggregates,
+                ],
+            });
+            run_sim(&c, &m).0.processed_rate
+        };
+        let with = keyed(ExchangeMode::Hash);
+        let without = keyed(ExchangeMode::None);
+        assert!(
+            with < without,
+            "two exchange boundaries must cost service time: {with} !< {without}"
+        );
+        // The surcharge is a shuffle, not a collapse: within ~35%.
+        assert!(with > without * 0.65, "{with} vs {without}");
+        // A boundary-free chain prices identically either way.
+        let flat = |exchange: ExchangeMode| {
+            let mut c = cfg(50_000_000, 8);
+            c.engine.exchange = exchange;
+            c.engine.pipeline_spec = Some(PipelineSpec {
+                ops: vec![OpSpec::CpuTransform, OpSpec::EmitEvents],
+            });
+            run_sim(&c, &m).0.processed_rate
+        };
+        assert_eq!(flat(ExchangeMode::Hash), flat(ExchangeMode::None));
     }
 
     #[test]

@@ -118,6 +118,16 @@ impl Engine {
         let start = self.clock.now_micros();
         let deadline = start + duration_micros;
 
+        // Keyed exchange: when the configured chain splits at a keyby
+        // boundary, one engine-lifetime fabric connects the per-task
+        // stage instances (see engine::exchange).
+        let fabric = factory.staged_spec().map(|stages| {
+            Arc::new(crate::engine::exchange::ExchangeFabric::new(
+                &stages,
+                crate::pipelines::StagedChain::channel_capacity(),
+            ))
+        });
+
         let handles: Vec<_> = (0..parallelism)
             .map(|id| {
                 let harness = TaskHarness {
@@ -132,6 +142,7 @@ impl Engine {
                     heap: self.heaps[id as usize].clone(),
                     stop: stop.clone(),
                     factory: factory.clone(),
+                    exchange: fabric.clone(),
                     deadline_micros: deadline,
                     // warmup == 0 means "record everything", including
                     // events generated before the engine started.

@@ -1,0 +1,288 @@
+//! Keyed exchange (shuffle) fabric: hash-routed inter-task row channels.
+//!
+//! ShuffleBench (Henning et al.) isolates the data-shuffling step between
+//! re-keying and keyed state as the place distributed stream frameworks
+//! win or lose at scale; without it, a `keyby` that only rewrites keys
+//! leaves every derived key group split across task slots and per-key
+//! results silently change with `engine.parallelism` — the
+//! task-sensitivity bug class Karimov et al. warn benchmark harnesses
+//! against.  The fabric fixes that: an operator chain is split into
+//! [`StageSpec`](crate::config::StageSpec)s at each `keyby` boundary, and
+//! every boundary owns one bounded channel per downstream instance.
+//! Rows are routed with [`crate::broker::fib_slot`] — the same Fibonacci
+//! hash the broker partitions with — so a key's exchange route stays
+//! consistent with broker partitioning.
+//!
+//! Besides rows, a boundary carries **frontiers**: each upstream instance
+//! publishes a monotone event-time (or window-end) frontier, and the
+//! downstream side reads the **minimum over live upstreams** as its safe
+//! frontier.  That min-merge is what makes event-time watermarks correct
+//! across the exchange (no instance's watermark can outrun a slower
+//! upstream still holding older rows) and lets a global top-k stage wait
+//! until every upstream window instance has emitted through a window end
+//! before selecting.
+//!
+//! The fabric is engine-lifetime shared state; each task interacts with
+//! it through its thread-confined
+//! [`StagedChain`](crate::pipelines::StagedChain).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::config::StageSpec;
+use crate::pipelines::RowBatch;
+use crate::util::chan::{self, Receiver, Sender, TrySendError};
+
+/// Serialized row footprint on the exchange wire: key (4) + value (4) +
+/// timestamp (8) + count (8) — what a real shuffle would move per row.
+pub const ROW_WIRE_BYTES: u64 = 24;
+
+/// One routed slice of rows, stamped at send time so the drain side can
+/// meter queue residency.
+pub struct ExchangePacket {
+    pub rows: RowBatch,
+    pub sent_micros: u64,
+}
+
+/// One stage boundary: `upstreams` sending instances, one channel per
+/// downstream instance, per-upstream frontier/done cells.
+pub struct Boundary {
+    txs: Vec<Sender<ExchangePacket>>,
+    rxs: Vec<Receiver<ExchangePacket>>,
+    frontiers: Vec<AtomicU64>,
+    done: Vec<AtomicBool>,
+    records: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Boundary {
+    fn new(upstreams: u32, downstreams: u32, capacity: usize) -> Boundary {
+        let (txs, rxs) = (0..downstreams.max(1))
+            .map(|_| chan::bounded(capacity))
+            .unzip();
+        Boundary {
+            txs,
+            rxs,
+            frontiers: (0..upstreams.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            done: (0..upstreams.max(1)).map(|_| AtomicBool::new(false)).collect(),
+            records: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn downstreams(&self) -> u32 {
+        self.txs.len() as u32
+    }
+
+    pub fn upstreams(&self) -> u32 {
+        self.done.len() as u32
+    }
+
+    /// Non-blocking route: hands the packet back when the destination
+    /// queue is full (or closed), so the caller can relieve its own
+    /// inbound queues and retry instead of parking.  There is
+    /// deliberately no blocking variant: every fabric participant also
+    /// *receives*, and a sender parked on a full queue cannot drain its
+    /// own inbound channels — two tasks parked on each other would
+    /// deadlock (see `StagedChain::send_with_relief` for the retry
+    /// discipline).
+    pub fn try_send(&self, dest: u32, packet: ExchangePacket) -> Result<(), ExchangePacket> {
+        let n = packet.rows.len() as u64;
+        match self.txs[dest as usize].try_send(packet) {
+            Ok(()) => {
+                self.records.fetch_add(n, Ordering::Relaxed);
+                self.bytes.fetch_add(n * ROW_WIRE_BYTES, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(p)) | Err(TrySendError::Closed(p)) => Err(p),
+        }
+    }
+
+    /// Drain pending packets for downstream instance `dest` without
+    /// blocking; returns how many packets were moved into `buf`.
+    pub fn drain(&self, dest: u32, buf: &mut Vec<ExchangePacket>, max: usize) -> usize {
+        self.rxs[dest as usize].drain_into(buf, max)
+    }
+
+    /// True when downstream instance `dest` has no queued packets.
+    pub fn is_drained(&self, dest: u32) -> bool {
+        self.rxs[dest as usize].is_empty()
+    }
+
+    /// Publish upstream instance `upstream`'s frontier (monotone max).
+    pub fn publish_frontier(&self, upstream: u32, frontier_micros: u64) {
+        self.frontiers[upstream as usize].fetch_max(frontier_micros, Ordering::SeqCst);
+    }
+
+    /// Mark upstream instance `upstream` finished; its frontier stops
+    /// constraining the safe frontier.
+    pub fn finish_upstream(&self, upstream: u32) {
+        self.done[upstream as usize].store(true, Ordering::SeqCst);
+    }
+
+    /// The min-merged safe frontier: no live upstream will send a row (or
+    /// window emission) with a timestamp at or below it that it has not
+    /// already sent.  `u64::MAX` once every upstream finished.
+    pub fn safe_frontier(&self) -> u64 {
+        let mut safe = u64::MAX;
+        for (f, d) in self.frontiers.iter().zip(&self.done) {
+            if !d.load(Ordering::SeqCst) {
+                safe = safe.min(f.load(Ordering::SeqCst));
+            }
+        }
+        safe
+    }
+
+    /// True once every upstream instance marked itself finished.
+    pub fn all_done(&self) -> bool {
+        self.done.iter().all(|d| d.load(Ordering::SeqCst))
+    }
+
+    /// Total rows routed through this boundary (all upstreams).
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes routed through this boundary.
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// The engine-lifetime exchange: one [`Boundary`] between each pair of
+/// adjacent stages.
+pub struct ExchangeFabric {
+    boundaries: Vec<Boundary>,
+}
+
+impl ExchangeFabric {
+    /// Build the fabric for a staged spec.  Boundary `b` connects stage
+    /// `b` (its `parallelism` instances are the upstreams) to stage
+    /// `b + 1` (whose instances own the channels).
+    pub fn new(stages: &[StageSpec], capacity: usize) -> ExchangeFabric {
+        let boundaries = stages
+            .windows(2)
+            .map(|w| Boundary::new(w[0].parallelism, w[1].parallelism, capacity))
+            .collect();
+        ExchangeFabric { boundaries }
+    }
+
+    pub fn boundary(&self, b: usize) -> &Boundary {
+        &self.boundaries[b]
+    }
+
+    pub fn boundary_count(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// Total rows routed across every boundary.
+    pub fn total_records(&self) -> u64 {
+        self.boundaries.iter().map(|b| b.records()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OpSpec, PipelineSpec};
+    use crate::engine::window::AggKind;
+
+    fn staged() -> Vec<StageSpec> {
+        PipelineSpec {
+            ops: vec![
+                OpSpec::KeyBy {
+                    modulo: 16,
+                    parallelism: 0,
+                },
+                OpSpec::window(AggKind::Mean, 1_000_000, 500_000),
+                OpSpec::TopK {
+                    k: 4,
+                    parallelism: 0,
+                },
+                OpSpec::EmitAggregates,
+            ],
+        }
+        .split_stages(4)
+    }
+
+    fn packet(n: usize, ts0: u64, sent: u64) -> ExchangePacket {
+        let mut rows = RowBatch::default();
+        for i in 0..n {
+            rows.push(i as u32, 1.0, ts0 + i as u64, 1);
+        }
+        ExchangePacket {
+            rows,
+            sent_micros: sent,
+        }
+    }
+
+    #[test]
+    fn fabric_shapes_follow_the_staged_spec() {
+        let stages = staged();
+        assert_eq!(stages.len(), 3);
+        let fabric = ExchangeFabric::new(&stages, 64);
+        assert_eq!(fabric.boundary_count(), 2);
+        assert_eq!(fabric.boundary(0).upstreams(), 4);
+        assert_eq!(fabric.boundary(0).downstreams(), 4);
+        assert_eq!(fabric.boundary(1).upstreams(), 4);
+        assert_eq!(fabric.boundary(1).downstreams(), 1, "global top-k");
+    }
+
+    #[test]
+    fn send_drain_accounts_records_and_bytes() {
+        let fabric = ExchangeFabric::new(&staged(), 64);
+        let b = fabric.boundary(0);
+        assert!(b.try_send(2, packet(5, 100, 42)).is_ok());
+        assert!(b.try_send(2, packet(3, 200, 43)).is_ok());
+        assert_eq!(b.records(), 8);
+        assert_eq!(b.bytes(), 8 * ROW_WIRE_BYTES);
+        let mut buf = Vec::new();
+        assert_eq!(b.drain(2, &mut buf, 16), 2);
+        assert_eq!(buf[0].rows.len(), 5);
+        assert_eq!(buf[0].sent_micros, 42);
+        assert!(b.is_drained(2));
+        assert_eq!(b.drain(2, &mut buf, 16), 0);
+    }
+
+    #[test]
+    fn try_send_hands_the_packet_back_when_full() {
+        let fabric = ExchangeFabric::new(&staged(), 2);
+        let b = fabric.boundary(0);
+        assert!(b.try_send(0, packet(1, 0, 1)).is_ok());
+        assert!(b.try_send(0, packet(1, 10, 2)).is_ok());
+        // Queue depth 2: the third packet comes back intact, uncounted.
+        let refused = b.try_send(0, packet(3, 20, 3)).unwrap_err();
+        assert_eq!(refused.rows.len(), 3);
+        assert_eq!(refused.sent_micros, 3);
+        assert_eq!(b.records(), 2, "refused packets are not counted");
+        // Draining frees capacity; the retry succeeds and is counted.
+        let mut buf = Vec::new();
+        assert_eq!(b.drain(0, &mut buf, 1), 1);
+        assert!(b.try_send(0, refused).is_ok());
+        assert_eq!(b.records(), 5);
+    }
+
+    #[test]
+    fn safe_frontier_is_min_over_live_upstreams() {
+        let fabric = ExchangeFabric::new(&staged(), 64);
+        let b = fabric.boundary(0);
+        assert_eq!(b.safe_frontier(), 0, "nothing published yet");
+        b.publish_frontier(0, 1_000);
+        b.publish_frontier(1, 5_000);
+        b.publish_frontier(2, 3_000);
+        b.publish_frontier(3, 9_000);
+        assert_eq!(b.safe_frontier(), 1_000, "the slowest upstream gates");
+        // Frontiers are monotone: an older publish never regresses.
+        b.publish_frontier(0, 500);
+        assert_eq!(b.safe_frontier(), 1_000);
+        b.publish_frontier(0, 4_000);
+        assert_eq!(b.safe_frontier(), 3_000);
+        // Finished upstreams stop constraining.
+        b.finish_upstream(2);
+        assert_eq!(b.safe_frontier(), 4_000);
+        for u in [0, 1, 3] {
+            b.finish_upstream(u);
+        }
+        assert!(b.all_done());
+        assert_eq!(b.safe_frontier(), u64::MAX);
+    }
+}

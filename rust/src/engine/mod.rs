@@ -19,12 +19,15 @@
 //! * [`window`] — sliding-window pane state for the keyed pipeline, in
 //!   processing-time and event-time (watermark-driven) flavours.
 //! * [`watermark`] — bounded-disorder watermark tracking.
+//! * [`exchange`] — keyed inter-task exchange (shuffle) fabric: stage
+//!   boundaries with hash-routed row channels and min-merged frontiers.
 //! * [`personality`] — the framework execution disciplines.
 //! * [`task`] — one task slot's poll→process→produce→commit loop.
 //! * [`core`] — engine lifecycle: spawn tasks, join, aggregate stats.
 
 pub mod batch;
 pub mod core;
+pub mod exchange;
 pub mod personality;
 pub mod task;
 pub mod watermark;
@@ -32,6 +35,7 @@ pub mod window;
 
 pub use batch::EventBatch;
 pub use core::{Engine, EngineReport};
+pub use exchange::{Boundary, ExchangeFabric, ExchangePacket};
 pub use personality::Personality;
 pub use watermark::WatermarkTracker;
 pub use window::{AggKind, EventTimeWindow, LatePolicy, SlidingWindow, WindowEmit, WindowTime};

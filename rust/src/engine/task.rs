@@ -55,6 +55,9 @@ pub struct TaskHarness {
     pub heap: Arc<JvmHeap>,
     pub stop: Arc<AtomicBool>,
     pub factory: Arc<StepFactory>,
+    /// Shared keyed-exchange fabric when the configured chain stages at a
+    /// `keyby` boundary; `None` runs the classic fused chain.
+    pub exchange: Option<Arc<crate::engine::exchange::ExchangeFabric>>,
     /// Hard deadline; the task drains and exits at this time even if the
     /// input topic stays open.
     pub deadline_micros: u64,
@@ -98,8 +101,24 @@ struct TaskBuffers {
 
 impl TaskHarness {
     pub fn run(self) -> Result<TaskReport, String> {
-        let mut step = self.factory.create(self.clock.now_micros())?;
+        let mut step = match &self.exchange {
+            Some(fabric) => self
+                .factory
+                .create_staged(self.id, fabric, self.clock.now_micros())?,
+            None => self.factory.create(self.clock.now_micros())?,
+        };
         self.ready.fetch_add(1, Ordering::SeqCst);
+        let res = self.drive(&mut *step);
+        if res.is_err() {
+            // Release anything sibling tasks are waiting on (exchange
+            // boundaries) so their finish drains terminate and the
+            // engine join surfaces this error instead of hanging.
+            step.abort();
+        }
+        res
+    }
+
+    fn drive(&self, step: &mut dyn crate::pipelines::PipelineStep) -> Result<TaskReport, String> {
         let needs_parse = step.needs_parse();
         let shard = self.id as usize;
 
@@ -145,8 +164,16 @@ impl TaskHarness {
                     }
                     Ok(None) => {
                         // Idle: if we hold a partial batch past the interval
-                        // (or have no interval), flush it; else back off.
+                        // (or have no interval), flush it; else tick the
+                        // step (exchange-staged chains drain their inbound
+                        // boundaries and keep frontiers moving) and back
+                        // off.
                         if bufs.pending.is_empty() {
+                            bufs.out.clear();
+                            step.idle(now, &mut bufs.out)?;
+                            if !bufs.out.is_empty() {
+                                self.emit(&mut bufs.out, &mut report)?;
+                            }
                             self.clock.sleep_micros(200);
                             continue;
                         }

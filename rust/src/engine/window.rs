@@ -478,6 +478,13 @@ impl EventTimeWindow {
         self.panes.len()
     }
 
+    /// The last window end this instance has finalized (0 before any
+    /// finalization) — the frontier a downstream exchange stage gates on:
+    /// every aggregate with `end <= emitted_through()` has been emitted.
+    pub fn emitted_through(&self) -> u64 {
+        self.next_end.saturating_sub(self.slide_micros)
+    }
+
     /// Accumulate one batch of `(id, value, gen_ts)` rows.  Out-of-range
     /// keys are skipped like in [`SlidingWindow::accumulate_native`].
     pub fn accumulate(&mut self, ids: &[u32], vals: &[f32], ts: &[u64]) {

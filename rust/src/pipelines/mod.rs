@@ -26,6 +26,7 @@ pub mod mem;
 pub mod operator;
 pub mod passthrough;
 pub mod registry;
+pub mod staged;
 
 pub use cpu::CpuIntensive;
 pub use fused::Fused;
@@ -33,11 +34,13 @@ pub use mem::MemIntensive;
 pub use operator::{Chain, OpCompute, Operator, RowBatch};
 pub use passthrough::PassThrough;
 pub use registry::{OpContext, OperatorBuilder, OperatorRegistry};
+pub use staged::{LockstepExchange, StagedChain};
 
 use std::sync::Arc;
 
 use crate::broker::Record;
-use crate::config::BenchConfig;
+use crate::config::{BenchConfig, ExchangeMode, StageSpec};
+use crate::engine::exchange::ExchangeFabric;
 use crate::engine::EventBatch;
 use crate::runtime::{Runtime, RuntimeFactory};
 use crate::util::json::Json;
@@ -60,6 +63,14 @@ pub struct StepStats {
     /// Maximum observed watermark lag (processing time − watermark), µs.
     /// Merged with `max`, not summed.
     pub watermark_lag_micros: u64,
+    /// Rows routed through a keyed-exchange boundary (the shuffle plane);
+    /// zero for chains without an exchange.
+    pub exchange_records: u64,
+    /// Bytes moved across exchange boundaries (row wire size × records).
+    pub exchange_bytes: u64,
+    /// Maximum observed exchange queue residency (send → drain), µs.
+    /// Merged with `max`, not summed.
+    pub exchange_wait_micros: u64,
 }
 
 impl StepStats {
@@ -76,6 +87,9 @@ impl StepStats {
         self.late_events += other.late_events;
         self.dropped_events += other.dropped_events;
         self.watermark_lag_micros = self.watermark_lag_micros.max(other.watermark_lag_micros);
+        self.exchange_records += other.exchange_records;
+        self.exchange_bytes += other.exchange_bytes;
+        self.exchange_wait_micros = self.exchange_wait_micros.max(other.exchange_wait_micros);
     }
 
     /// JSON object for results/report documents.
@@ -92,6 +106,12 @@ impl StepStats {
         j.set(
             "watermark_lag_us",
             Json::Int(self.watermark_lag_micros as i64),
+        );
+        j.set("exchange_records", Json::Int(self.exchange_records as i64));
+        j.set("exchange_bytes", Json::Int(self.exchange_bytes as i64));
+        j.set(
+            "exchange_wait_us",
+            Json::Int(self.exchange_wait_micros as i64),
         );
         j
     }
@@ -110,6 +130,9 @@ impl StepStats {
             late_events: int("late_events"),
             dropped_events: int("dropped_events"),
             watermark_lag_micros: int("watermark_lag_us"),
+            exchange_records: int("exchange_records"),
+            exchange_bytes: int("exchange_bytes"),
+            exchange_wait_micros: int("exchange_wait_us"),
         }
     }
 }
@@ -143,6 +166,21 @@ pub trait PipelineStep {
     fn finish(&mut self, _now_micros: u64, _out: &mut Vec<Record>) -> Result<(), String> {
         Ok(())
     }
+
+    /// Periodic tick while the task has nothing polled.  Exchange-staged
+    /// chains drain their inbound boundaries and keep frontiers moving so
+    /// a quiet broker partition never stalls downstream watermarks; plain
+    /// chains do nothing.
+    fn idle(&mut self, _now_micros: u64, _out: &mut Vec<Record>) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// The task is abandoning this step after an error: release anything
+    /// peers are waiting on.  Exchange-staged chains mark themselves done
+    /// on every boundary so sibling tasks' finish drains terminate
+    /// instead of waiting forever on a dead upstream; plain chains do
+    /// nothing.
+    fn abort(&mut self) {}
 
     fn stats(&self) -> StepStats;
 
@@ -248,6 +286,46 @@ impl StepFactory {
         )?;
         Ok(Box::new(chain))
     }
+
+    /// The stage decomposition the engine should build an exchange fabric
+    /// for: `Some` exactly when the configured chain splits at a keyed
+    /// boundary, the exchange is enabled, and no custom builder bypasses
+    /// the chain compiler.
+    pub fn staged_spec(&self) -> Option<Vec<StageSpec>> {
+        if self.custom.is_some() || self.config.engine.exchange == ExchangeMode::None {
+            return None;
+        }
+        let stages = self
+            .config
+            .engine
+            .effective_spec()
+            .split_stages(self.config.engine.parallelism);
+        (stages.len() > 1).then_some(stages)
+    }
+
+    /// Build one task's exchange-staged step over a shared fabric (built
+    /// from this factory's [`StepFactory::staged_spec`]).
+    pub fn create_staged(
+        &self,
+        task_id: u32,
+        fabric: &Arc<ExchangeFabric>,
+        start_micros: u64,
+    ) -> Result<Box<dyn PipelineStep>, String> {
+        let stages = self
+            .staged_spec()
+            .ok_or("create_staged called on a factory whose spec does not stage")?;
+        let staged = StagedChain::compile(
+            &self.config,
+            &stages,
+            self.config.engine.pipeline_label(),
+            task_id,
+            fabric.clone(),
+            self.runtime_factory.as_ref(),
+            self.registry.as_deref(),
+            start_micros,
+        )?;
+        Ok(Box::new(staged))
+    }
 }
 
 /// Round `n` up to the HLO key-state width supported by the artifacts.
@@ -327,6 +405,9 @@ mod tests {
             late_events: 4,
             dropped_events: 2,
             watermark_lag_micros: 900,
+            exchange_records: 40,
+            exchange_bytes: 960,
+            exchange_wait_micros: 70,
         };
         let b = StepStats {
             events_in: 5,
@@ -338,6 +419,9 @@ mod tests {
             late_events: 1,
             dropped_events: 0,
             watermark_lag_micros: 1_500,
+            exchange_records: 10,
+            exchange_bytes: 240,
+            exchange_wait_micros: 30,
         };
         a.merge(&b);
         assert_eq!(a.events_in, 15);
@@ -347,6 +431,9 @@ mod tests {
         assert_eq!(a.late_events, 5);
         assert_eq!(a.dropped_events, 2);
         assert_eq!(a.watermark_lag_micros, 1_500, "lag merges with max, not sum");
+        assert_eq!(a.exchange_records, 50);
+        assert_eq!(a.exchange_bytes, 1_200);
+        assert_eq!(a.exchange_wait_micros, 70, "queue wait merges with max");
         assert_eq!(StepStats::from_json(&a.to_json()), a);
         // Missing fields read as zero (older documents).
         assert_eq!(StepStats::from_json(&Json::obj()), StepStats::default());

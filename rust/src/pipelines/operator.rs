@@ -61,6 +61,14 @@ impl RowBatch {
         self.counts.push(count);
     }
 
+    /// Append every row of `other` (exchange drain path).
+    pub fn extend_from(&mut self, other: &RowBatch) {
+        self.keys.extend_from_slice(&other.keys);
+        self.vals.extend_from_slice(&other.vals);
+        self.ts.extend_from_slice(&other.ts);
+        self.counts.extend_from_slice(&other.counts);
+    }
+
     /// Reload from a parsed event batch (clears first).
     pub fn load_events(&mut self, batch: &EventBatch) {
         self.clear();
@@ -145,6 +153,26 @@ pub trait Operator {
         out: &mut Vec<Record>,
     ) -> Result<(), String> {
         self.apply(now_micros, rows, out)
+    }
+
+    /// Exchange hook: called once at chain compile time when this
+    /// operator's stage is fed by a keyed exchange boundary instead of the
+    /// local parse path.  Event-time windows switch their watermark source
+    /// from per-row observation to the exchange's min-merged frontier
+    /// ([`Operator::note_watermark`]); everything else ignores it.
+    fn set_exchange_input(&mut self, _fed_by_exchange: bool) {}
+
+    /// Exchange hook: the boundary's safe frontier (min over live
+    /// upstream frontiers), delivered before every `apply` on an
+    /// exchange-fed stage.
+    fn note_watermark(&mut self, _frontier_micros: u64) {}
+
+    /// The timestamp frontier this operator has emitted through, when it
+    /// gates downstream progress (windows report their finalized
+    /// boundary); `None` for operators that forward their input frontier
+    /// unchanged.
+    fn out_frontier(&self) -> Option<u64> {
+        None
     }
 
     fn stats(&self) -> StepStats;
@@ -569,6 +597,12 @@ impl Operator for WindowAggregateOp {
         Ok(())
     }
 
+    fn out_frontier(&self) -> Option<u64> {
+        // The open pane starts where the last emitted boundary ended:
+        // every aggregate with end <= this has been emitted.
+        Some(self.window.current_pane().start_micros)
+    }
+
     fn stats(&self) -> StepStats {
         self.stats
     }
@@ -585,6 +619,12 @@ pub struct EventTimeWindowOp {
     tracker: WatermarkTracker,
     window: EventTimeWindow,
     stats: StepStats,
+    /// When fed by a keyed exchange, the watermark follows the boundary's
+    /// min-merged safe frontier instead of locally observed row
+    /// timestamps — a fast local sub-stream must not outrun rows still in
+    /// flight from a slower upstream task.
+    exchange_fed: bool,
+    external_frontier: u64,
 }
 
 impl EventTimeWindowOp {
@@ -611,6 +651,8 @@ impl EventTimeWindowOp {
                 policy,
             ),
             stats: StepStats::default(),
+            exchange_fed: false,
+            external_frontier: 0,
         }
     }
 
@@ -619,9 +661,21 @@ impl EventTimeWindowOp {
     }
 
     fn ingest(&mut self, now_micros: u64, rows: &mut RowBatch) -> Vec<WindowEmit> {
+        if self.exchange_fed && self.external_frontier > 0 && self.external_frontier < u64::MAX {
+            // Exchange-fed: the boundary's safe frontier drives the
+            // watermark; per-row observation would let one fast upstream
+            // finalize windows whose rows are still queued elsewhere.
+            // Frontier 0 = no upstream published yet (no signal); MAX =
+            // every upstream finished — `finish`'s flush finalizes the
+            // remaining panes, and observing MAX here would fast-forward
+            // the window to a far-future empty emission instead.
+            self.tracker.observe(self.external_frontier);
+        }
         if !rows.is_empty() {
             self.stats.events_in += rows.len() as u64;
-            self.tracker.observe_batch(&rows.ts);
+            if !self.exchange_fed {
+                self.tracker.observe_batch(&rows.ts);
+            }
             self.window.accumulate(&rows.keys, &rows.vals, &rows.ts);
         }
         let wm = self.tracker.advance();
@@ -663,6 +717,18 @@ impl Operator for EventTimeWindowOp {
         emits.extend(self.window.flush());
         emit_aggregate_rows(emits, rows, &mut self.stats);
         Ok(())
+    }
+
+    fn set_exchange_input(&mut self, fed_by_exchange: bool) {
+        self.exchange_fed = fed_by_exchange;
+    }
+
+    fn note_watermark(&mut self, frontier_micros: u64) {
+        self.external_frontier = self.external_frontier.max(frontier_micros);
+    }
+
+    fn out_frontier(&self) -> Option<u64> {
+        Some(self.window.emitted_through())
     }
 
     fn stats(&self) -> StepStats {
@@ -889,6 +955,22 @@ impl Chain {
         registry: Option<&super::OperatorRegistry>,
         start_micros: u64,
     ) -> Result<Chain, String> {
+        Chain::compile_with_agg(cfg, spec, label, runtime_factory, registry, start_micros, None)
+    }
+
+    /// [`Chain::compile`] with an inherited aggregator for
+    /// `emit_aggregates` ops whose window lives in an upstream exchange
+    /// stage (the staged compiler passes the full spec's last window agg).
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile_with_agg(
+        cfg: &BenchConfig,
+        spec: &PipelineSpec,
+        label: impl Into<String>,
+        runtime_factory: Option<&RuntimeFactory>,
+        registry: Option<&super::OperatorRegistry>,
+        start_micros: u64,
+        inherited_agg: Option<AggKind>,
+    ) -> Result<Chain, String> {
         // Which HLO programs does this chain need?
         let mut programs: Vec<&'static str> = Vec::new();
         for op in &spec.ops {
@@ -946,7 +1028,7 @@ impl Chain {
                 OpSpec::CpuTransform => {
                     Box::new(CpuTransformOp::new(hlo(true), cfg.engine.threshold_f))
                 }
-                OpSpec::KeyBy { modulo } => Box::new(KeyByOp::new(*modulo)),
+                OpSpec::KeyBy { modulo, .. } => Box::new(KeyByOp::new(*modulo)),
                 OpSpec::Window {
                     agg,
                     window_micros,
@@ -954,7 +1036,7 @@ impl Chain {
                     time,
                     allowed_lateness_micros,
                     late_policy,
-                    watermark_micros,
+                    ..
                 } => {
                     let w = if *window_micros > 0 {
                         *window_micros
@@ -976,17 +1058,16 @@ impl Chain {
                             start_micros,
                         )) as Box<dyn Operator>,
                         WindowTime::Event => {
-                            // Watermark bound inherit chain: explicit spec
-                            // value, else max(disorder lateness, slide) —
-                            // the slide floor matters when disorder comes
-                            // from shuffle/stragglers alone (lateness 0),
-                            // where a tiny bound would drop most of the
-                            // reordered stream.
-                            let bound = if *watermark_micros > 0 {
-                                *watermark_micros
-                            } else {
-                                cfg.workload.disorder.lateness_micros.max(s)
-                            };
+                            // Watermark bound inherit chain (single
+                            // definition: OpSpec::event_watermark_bound):
+                            // explicit spec value, else max(disorder
+                            // lateness, slide) — the slide floor matters
+                            // when disorder comes from shuffle/stragglers
+                            // alone (lateness 0), where a tiny bound would
+                            // drop most of the reordered stream.
+                            let bound = op
+                                .event_watermark_bound(cfg)
+                                .expect("event-time window resolves a bound");
                             Box::new(EventTimeWindowOp::new(
                                 *agg,
                                 cfg.workload.sensors as usize,
@@ -1000,10 +1081,12 @@ impl Chain {
                         }
                     }
                 }
-                OpSpec::TopK { k } => Box::new(TopKOp::new(*k)),
+                OpSpec::TopK { k, .. } => Box::new(TopKOp::new(*k)),
                 OpSpec::EmitEvents => Box::new(EmitEventsOp::new(cfg.workload.event_bytes)),
                 OpSpec::EmitAggregates => Box::new(EmitAggregatesOp::new(
-                    spec.window_agg_before(i).unwrap_or(AggKind::Mean),
+                    spec.window_agg_before(i)
+                        .or(inherited_agg)
+                        .unwrap_or(AggKind::Mean),
                 )),
                 OpSpec::Custom { name, params } => {
                     let reg = registry.ok_or_else(|| {
@@ -1027,6 +1110,69 @@ impl Chain {
     pub fn op_names(&self) -> Vec<&str> {
         self.ops.iter().map(|o| o.name()).collect()
     }
+
+    /// Run the operators over an externally supplied row working set (the
+    /// staged-exchange entry point: downstream stages receive rows from
+    /// the fabric, not from a parsed [`EventBatch`]).  `rows` is
+    /// transformed in place; serialized outputs land in `out`.
+    pub fn process_rows(
+        &mut self,
+        now_micros: u64,
+        rows: &mut RowBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        let out_before = out.len();
+        for op in self.ops.iter_mut() {
+            op.apply(now_micros, rows, out)?;
+        }
+        self.events_out += (out.len() - out_before) as u64;
+        Ok(())
+    }
+
+    /// End-of-stream flush over an externally supplied working set
+    /// (stateful operators drain through the downstream ops).
+    pub fn finish_rows(
+        &mut self,
+        now_micros: u64,
+        rows: &mut RowBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        let out_before = out.len();
+        for op in self.ops.iter_mut() {
+            op.finish(now_micros, rows, out)?;
+        }
+        self.events_out += (out.len() - out_before) as u64;
+        Ok(())
+    }
+
+    /// Deliver the exchange boundary's safe frontier to every operator
+    /// (event-time windows advance their watermark from it).
+    pub fn note_watermark(&mut self, frontier_micros: u64) {
+        for op in self.ops.iter_mut() {
+            op.note_watermark(frontier_micros);
+        }
+    }
+
+    /// Mark this chain as fed by a keyed exchange boundary (switches
+    /// event-time windows to the external watermark source).
+    pub fn mark_exchange_fed(&mut self) {
+        for op in self.ops.iter_mut() {
+            op.set_exchange_input(true);
+        }
+    }
+
+    /// The frontier this chain has emitted through, given the frontier of
+    /// its input: windows narrow it to their finalized boundary,
+    /// transparent operators pass it along.
+    pub fn out_frontier(&self, input_frontier_micros: u64) -> u64 {
+        let mut f = input_frontier_micros;
+        for op in &self.ops {
+            if let Some(v) = op.out_frontier() {
+                f = v;
+            }
+        }
+        f
+    }
 }
 
 impl PipelineStep for Chain {
@@ -1045,28 +1191,28 @@ impl PipelineStep for Chain {
         batch: &EventBatch,
         out: &mut Vec<Record>,
     ) -> Result<(), String> {
-        let out_before = out.len();
         if self.raw {
+            let out_before = out.len();
             self.ops[0].apply_raw(now_micros, records, out)?;
+            self.events_out += (out.len() - out_before) as u64;
         } else {
-            self.rows.load_events(batch);
-            for op in self.ops.iter_mut() {
-                op.apply(now_micros, &mut self.rows, out)?;
-            }
+            let mut rows = std::mem::take(&mut self.rows);
+            rows.load_events(batch);
+            let res = self.process_rows(now_micros, &mut rows, out);
+            self.rows = rows;
+            res?;
         }
-        self.events_out += (out.len() - out_before) as u64;
         Ok(())
     }
 
     fn finish(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
-        let out_before = out.len();
         if !self.raw {
-            self.rows.clear();
-            for op in self.ops.iter_mut() {
-                op.finish(now_micros, &mut self.rows, out)?;
-            }
+            let mut rows = std::mem::take(&mut self.rows);
+            rows.clear();
+            let res = self.finish_rows(now_micros, &mut rows, out);
+            self.rows = rows;
+            res?;
         }
-        self.events_out += (out.len() - out_before) as u64;
         Ok(())
     }
 
@@ -1076,15 +1222,10 @@ impl PipelineStep for Chain {
     fn stats(&self) -> StepStats {
         let mut s = StepStats::default();
         for op in &self.ops {
-            let o = op.stats();
-            s.alerts += o.alerts;
-            s.hlo_calls += o.hlo_calls;
-            s.window_emits += o.window_emits;
-            s.parse_failures += o.parse_failures;
-            s.late_events += o.late_events;
-            s.dropped_events += o.dropped_events;
-            s.watermark_lag_micros = s.watermark_lag_micros.max(o.watermark_lag_micros);
+            s.merge(&op.stats());
         }
+        // The merge summed per-op intake/output; chain-level semantics
+        // are the first op's intake and the records actually egested.
         s.events_in = self.ops.first().map(|o| o.stats().events_in).unwrap_or(0);
         s.events_out = self.events_out;
         s

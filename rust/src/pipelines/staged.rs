@@ -1,0 +1,866 @@
+//! Exchange-staged pipeline execution: one [`StagedChain`] per engine
+//! task, connected through the [`ExchangeFabric`].
+//!
+//! A chain with `keyby` boundaries is split into
+//! [`StageSpec`](crate::config::StageSpec)s; every task hosts an instance
+//! of each stage it is a member of (task id < stage parallelism) and the
+//! fabric hash-routes rows between them with the broker's Fibonacci hash.
+//! Three mechanisms make the results invariant under
+//! `engine.parallelism`:
+//!
+//! * **Key routing** — after a re-keying, every row of a derived key
+//!   group lands on the same stage instance, so keyed window state sees
+//!   whole groups instead of the task-local slices the pre-exchange
+//!   engine aggregated.
+//! * **Watermark min-merge** — event-time stages advance their watermark
+//!   from the boundary's safe frontier (minimum over live upstream
+//!   frontiers), never from locally observed rows; a fast sub-stream
+//!   cannot finalize windows whose rows are still queued on a slower
+//!   upstream path.
+//! * **Completeness gating** — a global `topk` stage buffers aggregate
+//!   rows until the safe frontier passes their window end, then releases
+//!   them in a canonical `(ts, key)` order: the selection always sees
+//!   complete windows, in a deterministic sequence.
+//!
+//! [`LockstepExchange`] drives a whole staged pipeline single-threaded in
+//! deterministic rounds — the harness behind
+//! `rust/tests/shuffle_equivalence.rs` and the `hotpath_micro` shuffle
+//! case.
+
+use std::sync::Arc;
+
+use super::operator::Chain;
+use super::{OperatorRegistry, PipelineStep, StepStats};
+use crate::broker::{fib_slot, Record};
+use crate::config::{BenchConfig, ExchangeMode, PipelineSpec, StageSpec};
+use crate::engine::exchange::{ExchangeFabric, ExchangePacket, ROW_WIRE_BYTES};
+use crate::engine::EventBatch;
+use crate::pipelines::RowBatch;
+use crate::runtime::RuntimeFactory;
+
+/// Per-channel queue depth (packets, not rows): one packet is one routed
+/// slice per (call, destination), so a few thousand absorbs long stalls
+/// while `try_send` still delivers backpressure eventually.
+const CHANNEL_PACKETS: usize = 4096;
+
+/// Per-stage cap on packets stashed off the channel during send relief.
+/// Relief must drain *something* to break sender cycles, but an
+/// unbounded stash would convert inbound backpressure into unbounded
+/// memory during a long stall; past the cap, backpressure propagates
+/// upstream again (worst case the 30s send deadline fails the run —
+/// a bounded error beats an OOM).
+const STASH_CAP_PACKETS: usize = 4 * CHANNEL_PACKETS;
+
+/// Completeness gate: holds rows until the boundary's safe frontier
+/// passes their timestamp, then releases them sorted by
+/// `(ts, key, value bits, count)` — a total, content-only order, so the
+/// release sequence is identical at every parallelism.
+#[derive(Default)]
+struct Gate {
+    pending: Vec<(u64, u32, u32, u64)>,
+}
+
+impl Gate {
+    fn absorb(&mut self, rows: &RowBatch) {
+        for i in 0..rows.len() {
+            self.pending
+                .push((rows.ts[i], rows.keys[i], rows.vals[i].to_bits(), rows.counts[i]));
+        }
+    }
+
+    fn release_into(&mut self, safe_micros: u64, out: &mut RowBatch) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let mut released = Vec::new();
+        self.pending.retain(|r| {
+            if r.0 <= safe_micros {
+                released.push(*r);
+                false
+            } else {
+                true
+            }
+        });
+        released.sort_unstable();
+        for (ts, key, bits, count) in released {
+            out.push(key, f32::from_bits(bits), ts, count);
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+/// One task's slot for one stage.
+struct StageSlot {
+    /// Compiled chain when this task hosts an instance (`task_id <
+    /// stage.parallelism`); `None` otherwise.
+    chain: Option<Chain>,
+    /// Op names for the run report when the stage is not hosted here.
+    op_names: Vec<String>,
+    /// Completeness gate on the inbound boundary (top-k stages only).
+    gate: Gate,
+    gated: bool,
+    /// Reused working set for the stage's inbound rows.
+    rows: RowBatch,
+    /// Packets pulled off the inbound channel while this task was
+    /// waiting on a full outbound queue (`send_with_relief`): moved out
+    /// of the channel to free capacity, consumed by the next `pump`.
+    stash: Vec<ExchangePacket>,
+    finished: bool,
+}
+
+/// The staged, exchange-connected [`PipelineStep`] one engine task runs.
+pub struct StagedChain {
+    label: String,
+    task_id: u32,
+    fabric: Arc<ExchangeFabric>,
+    stages: Vec<StageSlot>,
+    /// Highest generation timestamp seen at the source (stage 0 input).
+    src_frontier: u64,
+    /// Liveness slack subtracted from `now` for the source frontier: the
+    /// largest event-time watermark bound in the spec (0 for pure
+    /// processing-time chains, where the frontier rides `now`).
+    source_slack_micros: u64,
+    source_finished: bool,
+    /// Stage-0 working set (reused across polls).
+    rows: RowBatch,
+    /// Per-destination routing scratch.
+    route: Vec<RowBatch>,
+    /// Drain scratch.
+    drain_buf: Vec<ExchangePacket>,
+    /// Per-boundary exchange stats from this task's perspective:
+    /// `events_in`/`exchange_records`/`exchange_bytes` count the send
+    /// side, `events_out` the drain side, `exchange_wait_micros` the
+    /// worst queue residency observed on drain.
+    boundary_stats: Vec<StepStats>,
+}
+
+impl StagedChain {
+    /// Compile one task's staged chain.  `stages` must be the
+    /// [`PipelineSpec::split_stages`] decomposition the shared `fabric`
+    /// was built from.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile(
+        cfg: &BenchConfig,
+        stages_spec: &[StageSpec],
+        label: impl Into<String>,
+        task_id: u32,
+        fabric: Arc<ExchangeFabric>,
+        runtime_factory: Option<&RuntimeFactory>,
+        registry: Option<&OperatorRegistry>,
+        start_micros: u64,
+    ) -> Result<StagedChain, String> {
+        if stages_spec.len() < 2 {
+            return Err("a staged chain needs at least two stages — use Chain directly".into());
+        }
+        let label = label.into();
+        let mut slots = Vec::with_capacity(stages_spec.len());
+        // The aggregator of the last window in *earlier* stages, carried
+        // so a downstream `emit_aggregates` keeps its field name.
+        let mut carried_agg = None;
+        for (s, stage) in stages_spec.iter().enumerate() {
+            let sub = PipelineSpec {
+                ops: stage.ops.clone(),
+            };
+            let hosted = task_id < stage.parallelism;
+            let chain = if hosted {
+                let mut c = Chain::compile_with_agg(
+                    cfg,
+                    &sub,
+                    format!("{label}#{s}"),
+                    runtime_factory,
+                    registry,
+                    start_micros,
+                    carried_agg,
+                )?;
+                if s > 0 {
+                    c.mark_exchange_fed();
+                }
+                Some(c)
+            } else {
+                None
+            };
+            let gated = s > 0
+                && matches!(stage.ops.first(), Some(crate::config::OpSpec::TopK { .. }));
+            slots.push(StageSlot {
+                chain,
+                op_names: sub.ops.iter().map(|o| o.op_name().to_string()).collect(),
+                gate: Gate::default(),
+                gated,
+                rows: RowBatch::default(),
+                stash: Vec::new(),
+                finished: false,
+            });
+            carried_agg = sub.last_window_agg().or(carried_agg);
+        }
+        // Idle-liveness slack: the largest event-time watermark bound in
+        // the spec (same resolution as the windows themselves —
+        // OpSpec::event_watermark_bound); 0 for processing-time chains,
+        // whose idle frontier rides `now` directly.
+        let mut slack = 0u64;
+        for stage in stages_spec {
+            for op in &stage.ops {
+                if let Some(bound) = op.event_watermark_bound(cfg) {
+                    slack = slack.max(bound);
+                }
+            }
+        }
+        let boundaries = stages_spec.len() - 1;
+        Ok(StagedChain {
+            label,
+            task_id,
+            fabric,
+            stages: slots,
+            src_frontier: 0,
+            source_slack_micros: slack,
+            source_finished: false,
+            rows: RowBatch::default(),
+            route: Vec::new(),
+            drain_buf: Vec::new(),
+            boundary_stats: vec![StepStats::default(); boundaries],
+        })
+    }
+
+    /// The channel capacity the shared fabric should be built with.
+    pub fn channel_capacity() -> usize {
+        CHANNEL_PACKETS
+    }
+
+    /// Source frontier while the task is *idle* (its own partitions
+    /// polled empty): the data frontier, floored at `now − slack` for
+    /// liveness.  The floor is safe exactly because idle means nothing
+    /// older is queued behind this task — any future row's backdating is
+    /// bounded by the disorder lateness, which `slack` covers.  The
+    /// *active* path (`run_source`) publishes the data frontier alone:
+    /// flooring it at wall time there would let broker queueing delay
+    /// masquerade as event-time lateness under backlog.
+    fn idle_source_frontier(&self, now_micros: u64) -> u64 {
+        self.src_frontier
+            .max(now_micros.saturating_sub(self.source_slack_micros))
+    }
+
+    /// Pull everything off this task's inbound channels into the
+    /// per-stage stashes (no processing): frees channel capacity while
+    /// this task is itself blocked on a full outbound queue, so a ring of
+    /// mutually-sending tasks can never deadlock.
+    fn stash_inbound(&mut self) {
+        for s in 1..self.stages.len() {
+            if self.stages[s].chain.is_none() {
+                continue;
+            }
+            let room = STASH_CAP_PACKETS.saturating_sub(self.stages[s].stash.len());
+            if room == 0 {
+                continue;
+            }
+            self.fabric
+                .boundary(s - 1)
+                .drain(self.task_id, &mut self.stages[s].stash, room);
+        }
+    }
+
+    /// Deliver one packet, relieving our own inbound queues while the
+    /// destination is full.  Never parks: a blocked blocking-`send` here
+    /// would stop this task from draining its own channels (self-route
+    /// on a full queue would even self-deadlock).  Bounded so a dead
+    /// downstream task fails the run instead of spinning forever.
+    fn send_with_relief(
+        &mut self,
+        b: usize,
+        dest: u32,
+        mut packet: ExchangePacket,
+    ) -> Result<(), String> {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            packet = match self.fabric.boundary(b).try_send(dest, packet) {
+                Ok(()) => return Ok(()),
+                Err(p) => p,
+            };
+            if std::time::Instant::now() >= deadline {
+                return Err(format!(
+                    "task {}: exchange send to stage {} instance {dest} timed out — \
+                     the downstream task stalled or died",
+                    self.task_id,
+                    b + 1
+                ));
+            }
+            self.stash_inbound();
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
+
+    /// Hash-route `rows` into boundary `b` and record the send-side
+    /// stats.  `rows` is left empty.
+    fn route_to(&mut self, b: usize, rows: &mut RowBatch, now_micros: u64) -> Result<(), String> {
+        if rows.is_empty() {
+            return Ok(());
+        }
+        let dests = self.fabric.boundary(b).downstreams();
+        {
+            let stats = &mut self.boundary_stats[b];
+            let n = rows.len() as u64;
+            stats.events_in += n;
+            stats.exchange_records += n;
+            stats.exchange_bytes += n * ROW_WIRE_BYTES;
+        }
+        if dests == 1 {
+            let packet = ExchangePacket {
+                rows: std::mem::take(rows),
+                sent_micros: now_micros,
+            };
+            return self.send_with_relief(b, 0, packet);
+        }
+        if self.route.len() < dests as usize {
+            self.route.resize_with(dests as usize, RowBatch::default);
+        }
+        for i in 0..rows.len() {
+            let dest = fib_slot(rows.keys[i], dests) as usize;
+            self.route[dest].push(rows.keys[i], rows.vals[i], rows.ts[i], rows.counts[i]);
+        }
+        rows.clear();
+        for dest in 0..dests {
+            if self.route[dest as usize].is_empty() {
+                continue;
+            }
+            let packet = ExchangePacket {
+                rows: std::mem::take(&mut self.route[dest as usize]),
+                sent_micros: now_micros,
+            };
+            self.send_with_relief(b, dest, packet)?;
+        }
+        Ok(())
+    }
+
+    /// Ingest one parsed poll batch through stage 0, route the survivors
+    /// into boundary 0, and publish the source frontier.
+    fn run_source(
+        &mut self,
+        now_micros: u64,
+        batch: &EventBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        debug_assert!(!self.source_finished, "process after finish");
+        for &t in &batch.gen_ts {
+            if t > self.src_frontier {
+                self.src_frontier = t;
+            }
+        }
+        let mut rows = std::mem::take(&mut self.rows);
+        rows.load_events(batch);
+        let mut res = self
+            .stages[0]
+            .chain
+            .as_mut()
+            .expect("stage 0 is hosted on every task")
+            .process_rows(now_micros, &mut rows, out);
+        if res.is_ok() {
+            res = self.route_to(0, &mut rows, now_micros);
+        }
+        if res.is_ok() {
+            // Data-driven frontier only (no wall-time floor): rows still
+            // queued in the broker behind this poll must keep gating the
+            // downstream watermark.  Published only after the rows it
+            // covers were sent: a downstream reader that observes `f` is
+            // guaranteed a subsequent drain sees every row with ts <= f.
+            let f = self.stages[0]
+                .chain
+                .as_ref()
+                .expect("hosted")
+                .out_frontier(self.src_frontier);
+            self.fabric.boundary(0).publish_frontier(self.task_id, f);
+        }
+        self.rows = rows;
+        res
+    }
+
+    /// One pass over the downstream stages: drain, gate, process, route,
+    /// publish.  With `finishing`, stages whose inbound boundary has
+    /// fully completed are flushed and marked done; returns whether every
+    /// hosted stage has finished.
+    fn pump(
+        &mut self,
+        now_micros: u64,
+        out: &mut Vec<Record>,
+        finishing: bool,
+    ) -> Result<bool, String> {
+        let mut complete = true;
+        for s in 1..self.stages.len() {
+            if self.stages[s].chain.is_none() || self.stages[s].finished {
+                continue;
+            }
+            let b = s - 1;
+            // Read the frontier BEFORE draining: every packet carrying
+            // ts <= safe was sent before its upstream published that
+            // frontier value, so a drain issued after this read observes
+            // it (channel mutex + SeqCst publish ordering).
+            let safe = self.fabric.boundary(b).safe_frontier();
+            let mut drain_buf = std::mem::take(&mut self.drain_buf);
+            drain_buf.clear();
+            // Stashed packets first: they were pulled off the channel
+            // even earlier (while we waited on a full outbound queue),
+            // so the safe-before-drain ordering still covers them.
+            let mut stash = std::mem::take(&mut self.stages[s].stash);
+            drain_buf.append(&mut stash);
+            self.stages[s].stash = stash;
+            self.fabric
+                .boundary(b)
+                .drain(self.task_id, &mut drain_buf, usize::MAX);
+            let mut rows = std::mem::take(&mut self.stages[s].rows);
+            rows.clear();
+            {
+                let stats = &mut self.boundary_stats[b];
+                let slot = &mut self.stages[s];
+                for pkt in drain_buf.drain(..) {
+                    stats.events_out += pkt.rows.len() as u64;
+                    stats.exchange_wait_micros = stats
+                        .exchange_wait_micros
+                        .max(now_micros.saturating_sub(pkt.sent_micros));
+                    if slot.gated {
+                        slot.gate.absorb(&pkt.rows);
+                    } else {
+                        rows.extend_from(&pkt.rows);
+                    }
+                }
+                if slot.gated {
+                    slot.gate.release_into(safe, &mut rows);
+                }
+            }
+            self.drain_buf = drain_buf;
+
+            let has_next = s + 1 < self.stages.len();
+            let chain = self.stages[s].chain.as_mut().expect("checked hosted");
+            chain.note_watermark(safe);
+            let res = chain.process_rows(now_micros, &mut rows, out);
+            if let Err(e) = res {
+                self.stages[s].rows = rows;
+                return Err(e);
+            }
+            // The stage's output must move on (or be dropped, for the
+            // final stage whose emits went to `out`) before any
+            // end-of-stream flush — flushing over the stage's own output
+            // would re-ingest it.
+            if has_next {
+                if let Err(e) = self.route_to(s, &mut rows, now_micros) {
+                    self.stages[s].rows = rows;
+                    return Err(e);
+                }
+            } else {
+                rows.clear();
+            }
+
+            // Is this stage's input exhausted for good?
+            let inbound_done = finishing
+                && self.fabric.boundary(b).all_done()
+                && self.fabric.boundary(b).is_drained(self.task_id)
+                && self.stages[s].stash.is_empty()
+                && self.stages[s].gate.is_empty();
+            if inbound_done {
+                // No final watermark push: event-time windows finalize
+                // their remaining panes through finish_rows' flush (an
+                // u64::MAX observation would fast-forward them to a
+                // far-future empty emission).
+                let chain = self.stages[s].chain.as_mut().expect("checked hosted");
+                let res = chain.finish_rows(now_micros, &mut rows, out);
+                if let Err(e) = res {
+                    self.stages[s].rows = rows;
+                    return Err(e);
+                }
+                if has_next {
+                    if let Err(e) = self.route_to(s, &mut rows, now_micros) {
+                        self.stages[s].rows = rows;
+                        return Err(e);
+                    }
+                } else {
+                    rows.clear();
+                }
+            }
+            if has_next {
+                let chain = self.stages[s].chain.as_ref().expect("checked hosted");
+                let f = chain.out_frontier(safe);
+                // Published after every send it covers (same ordering
+                // contract as the source frontier).
+                self.fabric.boundary(s).publish_frontier(self.task_id, f);
+            }
+            if inbound_done {
+                if has_next {
+                    self.fabric.boundary(s).finish_upstream(self.task_id);
+                }
+                self.stages[s].finished = true;
+            } else {
+                complete = false;
+            }
+            self.stages[s].rows = rows;
+        }
+        Ok(complete)
+    }
+
+    /// Flush stage 0 (end of the broker stream) and mark this task done
+    /// on boundary 0.  Idempotent.
+    pub fn finish_source(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
+        if self.source_finished {
+            return Ok(());
+        }
+        self.source_finished = true;
+        let mut rows = std::mem::take(&mut self.rows);
+        rows.clear();
+        let mut res = self
+            .stages[0]
+            .chain
+            .as_mut()
+            .expect("stage 0 is hosted on every task")
+            .finish_rows(now_micros, &mut rows, out);
+        if res.is_ok() {
+            res = self.route_to(0, &mut rows, now_micros);
+        }
+        // Mark done even on a failed route: peers must not wait on a
+        // task that is about to error out.
+        self.fabric.boundary(0).finish_upstream(self.task_id);
+        self.rows = rows;
+        res
+    }
+
+    /// One finishing pass over the downstream stages; returns `true` once
+    /// every hosted stage has flushed.  Callers that own all tasks
+    /// single-threaded (the lockstep harness) alternate this across
+    /// tasks; the engine's task threads loop it with a short sleep.
+    pub fn pump_finish(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<bool, String> {
+        self.pump(now_micros, out, true)
+    }
+
+    /// Rows this task routed across all boundaries (send side).
+    pub fn routed_records(&self) -> u64 {
+        self.boundary_stats.iter().map(|s| s.exchange_records).sum()
+    }
+}
+
+impl PipelineStep for StagedChain {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn needs_parse(&self) -> bool {
+        true
+    }
+
+    fn process(
+        &mut self,
+        now_micros: u64,
+        _records: &[Record],
+        batch: &EventBatch,
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        self.run_source(now_micros, batch, out)?;
+        self.pump(now_micros, out, false)?;
+        Ok(())
+    }
+
+    fn idle(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
+        // Keep the source frontier moving while the broker is quiet so
+        // downstream watermarks (min-merged over upstreams) never stall
+        // on an idle task, then drain whatever other tasks routed here.
+        if !self.source_finished {
+            let f = self.stages[0]
+                .chain
+                .as_ref()
+                .expect("stage 0 is hosted on every task")
+                .out_frontier(self.idle_source_frontier(now_micros));
+            self.fabric.boundary(0).publish_frontier(self.task_id, f);
+        }
+        self.pump(now_micros, out, false)?;
+        Ok(())
+    }
+
+    fn finish(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
+        self.finish_source(now_micros, out)?;
+        // Escape hatch: a sibling task that died (panicked past its
+        // abort hook) never marks its boundaries done; bail with an
+        // error after a generous drain window instead of hanging the
+        // engine join forever.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            if self.pump_finish(now_micros, out)? {
+                return Ok(());
+            }
+            if std::time::Instant::now() >= deadline {
+                return Err(format!(
+                    "task {}: exchange finish timed out — an upstream task \
+                     likely died without flushing its stages",
+                    self.task_id
+                ));
+            }
+            // Other task threads are still flushing their stages into our
+            // boundaries; yield briefly and re-drain.
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+
+    /// Abandon the staged chain (task error path): mark this task done on
+    /// every boundary it feeds so sibling finish drains terminate.
+    fn abort(&mut self) {
+        if !self.source_finished {
+            self.source_finished = true;
+            self.fabric.boundary(0).finish_upstream(self.task_id);
+        }
+        for s in 1..self.stages.len() {
+            if self.stages[s].chain.is_some() && !self.stages[s].finished {
+                self.stages[s].finished = true;
+                if s < self.stages.len() - 1 {
+                    self.fabric.boundary(s).finish_upstream(self.task_id);
+                }
+            }
+        }
+    }
+
+    fn stats(&self) -> StepStats {
+        let mut s = StepStats::default();
+        for (_, o) in self.operator_stats() {
+            s.merge(&o);
+        }
+        // The merge summed per-op intake/output; step-level semantics are
+        // the source intake and the records actually egested.
+        s.events_in = self.stages[0]
+            .chain
+            .as_ref()
+            .and_then(|c| c.operator_stats().first().map(|(_, o)| o.events_in))
+            .unwrap_or(0);
+        s.events_out = self
+            .stages
+            .iter()
+            .filter_map(|slot| slot.chain.as_ref().map(|c| c.stats().events_out))
+            .sum();
+        s
+    }
+
+    /// Full staged op list — identical names on every task (stats are
+    /// merged positionally across tasks), with one `exchange` entry per
+    /// boundary between its stages.
+    fn operator_stats(&self) -> Vec<(String, StepStats)> {
+        let mut ops = Vec::new();
+        for (s, slot) in self.stages.iter().enumerate() {
+            if s > 0 {
+                ops.push(("exchange".to_string(), self.boundary_stats[s - 1]));
+            }
+            match &slot.chain {
+                Some(c) => ops.extend(c.operator_stats()),
+                None => ops.extend(
+                    slot.op_names
+                        .iter()
+                        .map(|n| (n.clone(), StepStats::default())),
+                ),
+            }
+        }
+        ops
+    }
+}
+
+/// Deterministic single-threaded driver over a full staged pipeline: all
+/// task instances advance in lockstep rounds, so two runs over the same
+/// input — at *any* parallelism — drain the exchange in the same order.
+/// The equivalence suite and the `hotpath_micro` shuffle case run on it.
+pub struct LockstepExchange {
+    tasks: Vec<StagedChain>,
+    fabric: Arc<ExchangeFabric>,
+}
+
+impl LockstepExchange {
+    /// Build the staged pipeline for `cfg`'s effective spec.  Returns
+    /// `None` when the spec does not stage (no keyed boundary, or
+    /// `engine.exchange: none`).
+    pub fn compile(cfg: &BenchConfig) -> Result<Option<LockstepExchange>, String> {
+        if cfg.engine.exchange == ExchangeMode::None {
+            return Ok(None);
+        }
+        let spec = cfg.engine.effective_spec();
+        let stages = spec.split_stages(cfg.engine.parallelism);
+        if stages.len() < 2 {
+            return Ok(None);
+        }
+        let fabric = Arc::new(ExchangeFabric::new(&stages, StagedChain::channel_capacity()));
+        let label = cfg.engine.pipeline_label();
+        let tasks = (0..cfg.engine.parallelism)
+            .map(|t| {
+                StagedChain::compile(cfg, &stages, label.clone(), t, fabric.clone(), None, None, 0)
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Some(LockstepExchange { tasks, fabric }))
+    }
+
+    pub fn parallelism(&self) -> u32 {
+        self.tasks.len() as u32
+    }
+
+    /// Total rows routed across every boundary so far.
+    pub fn routed_records(&self) -> u64 {
+        self.fabric.total_records()
+    }
+
+    /// One lockstep round at `now`: task `t` ingests `batches[t]` (tasks
+    /// beyond the slice idle), then drains its inbound boundaries.
+    pub fn process_round(
+        &mut self,
+        now_micros: u64,
+        batches: &[EventBatch],
+        out: &mut Vec<Record>,
+    ) -> Result<(), String> {
+        for (t, task) in self.tasks.iter_mut().enumerate() {
+            match batches.get(t) {
+                Some(b) if !b.is_empty() => task.process(now_micros, &[], b, out)?,
+                _ => task.idle(now_micros, out)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// An input-less round: every task publishes its frontier and drains.
+    pub fn idle_round(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
+        self.process_round(now_micros, &[], out)
+    }
+
+    /// Flush the whole staged pipeline deterministically: every task
+    /// closes its source, then finishing passes alternate across tasks
+    /// until each stage has drained (at most one pass per stage per task
+    /// round, bounded by the stage count).
+    pub fn finish(&mut self, now_micros: u64, out: &mut Vec<Record>) -> Result<(), String> {
+        for task in &mut self.tasks {
+            task.finish_source(now_micros, out)?;
+        }
+        // Each round completes at least one more stage tier across all
+        // tasks, so stages+2 rounds always suffice; the cap is a
+        // belt-and-braces guard against a wiring bug looping forever.
+        let mut rounds = 0usize;
+        loop {
+            let mut all = true;
+            for task in &mut self.tasks {
+                if !task.pump_finish(now_micros, out)? {
+                    all = false;
+                }
+            }
+            if all {
+                return Ok(());
+            }
+            rounds += 1;
+            if rounds > self.tasks.len() * 16 + 64 {
+                return Err("lockstep finish failed to converge — exchange wiring bug".into());
+            }
+        }
+    }
+
+    /// Per-operator stats merged positionally across the task instances
+    /// (the same shape the engine reports).
+    pub fn operator_stats(&self) -> Vec<(String, StepStats)> {
+        let mut merged: Vec<(String, StepStats)> = Vec::new();
+        for task in &self.tasks {
+            for (i, (name, stats)) in task.operator_stats().iter().enumerate() {
+                match merged.get_mut(i) {
+                    Some((n, m)) if n == name => m.merge(stats),
+                    _ => merged.push((name.clone(), *stats)),
+                }
+            }
+        }
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OpSpec;
+    use crate::engine::window::AggKind;
+
+    fn keyed_cfg(parallelism: u32) -> BenchConfig {
+        let mut cfg = BenchConfig::default();
+        cfg.engine.use_hlo = false;
+        cfg.engine.parallelism = parallelism;
+        cfg.workload.sensors = 64;
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::KeyBy {
+                    modulo: 16,
+                    parallelism: 0,
+                },
+                OpSpec::window(AggKind::Sum, 1_000_000, 500_000),
+                OpSpec::EmitAggregates,
+            ],
+        });
+        cfg
+    }
+
+    fn batch(keys: &[u32], vals: &[f32], ts: u64) -> EventBatch {
+        EventBatch {
+            ids: keys.to_vec(),
+            temps: vals.to_vec(),
+            gen_ts: vec![ts; keys.len()],
+            append_ts: vec![ts; keys.len()],
+            payload_bytes: keys.len() as u64 * 27,
+        }
+    }
+
+    #[test]
+    fn flat_specs_do_not_stage() {
+        let mut cfg = BenchConfig::default();
+        cfg.engine.use_hlo = false;
+        assert!(LockstepExchange::compile(&cfg).unwrap().is_none());
+        let mut cfg = keyed_cfg(2);
+        cfg.engine.exchange = ExchangeMode::None;
+        assert!(LockstepExchange::compile(&cfg).unwrap().is_none());
+    }
+
+    #[test]
+    fn keyed_state_sees_whole_groups_across_tasks() {
+        // Keys 3 and 19 both map to derived key 3 (mod 16); feed them to
+        // *different* tasks and the exchange must still aggregate them in
+        // one window state.
+        let mut lx = LockstepExchange::compile(&keyed_cfg(2)).unwrap().unwrap();
+        let mut out = Vec::new();
+        let t0 = 100_000u64;
+        lx.process_round(
+            t0,
+            &[batch(&[3], &[10.0], t0), batch(&[19], &[32.0], t0)],
+            &mut out,
+        )
+        .unwrap();
+        lx.finish(600_000, &mut out).unwrap();
+        assert!(lx.routed_records() >= 2, "rows must cross the exchange");
+        let payloads: Vec<String> = out
+            .iter()
+            .map(|r| String::from_utf8(r.payload().to_vec()).unwrap())
+            .collect();
+        // One merged aggregate for derived key 3: 10 + 32 = 42.
+        let merged: Vec<&String> = payloads
+            .iter()
+            .filter(|p| p.contains("\"id\":3,"))
+            .collect();
+        assert_eq!(merged.len(), 1, "one window emission for key 3: {payloads:?}");
+        assert!(
+            merged[0].contains("\"sum\":42.000"),
+            "split keyed state: {merged:?}"
+        );
+        assert!(merged[0].contains("\"n\":2"), "{merged:?}");
+    }
+
+    #[test]
+    fn exchange_stats_flow_into_operator_stats() {
+        let mut lx = LockstepExchange::compile(&keyed_cfg(2)).unwrap().unwrap();
+        let mut out = Vec::new();
+        lx.process_round(
+            50_000,
+            &[batch(&[1, 2], &[1.0, 2.0], 50_000), batch(&[3], &[3.0], 50_000)],
+            &mut out,
+        )
+        .unwrap();
+        lx.finish(700_000, &mut out).unwrap();
+        let ops = lx.operator_stats();
+        let names: Vec<&str> = ops.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["keyby", "exchange", "window", "emit_aggregates"],
+            "exchange entry sits at the stage boundary"
+        );
+        let (_, x) = &ops[1];
+        assert_eq!(x.exchange_records, 3, "all rows cross the boundary");
+        assert_eq!(x.events_in, 3);
+        assert_eq!(x.events_out, 3, "sent == drained after finish");
+        assert_eq!(x.exchange_bytes, 3 * ROW_WIRE_BYTES);
+    }
+}

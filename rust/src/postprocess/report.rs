@@ -43,7 +43,9 @@ pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
 
 /// Render the per-operator stats breakdown of a run (chain order), as
 /// printed under the CLI run summary.  The event-time columns (late,
-/// dropped, watermark lag) are all zero for processing-time chains.
+/// dropped, watermark lag) are all zero for processing-time chains, and
+/// the exchange columns (rows/bytes routed, worst queue wait) are only
+/// non-zero on the `exchange` boundary entries of staged chains.
 pub fn operator_stats_table(ops: &[(String, StepStats)]) -> String {
     let rows: Vec<Vec<String>> = ops
         .iter()
@@ -59,6 +61,9 @@ pub fn operator_stats_table(ops: &[(String, StepStats)]) -> String {
                 s.late_events.to_string(),
                 s.dropped_events.to_string(),
                 s.watermark_lag_micros.to_string(),
+                s.exchange_records.to_string(),
+                s.exchange_bytes.to_string(),
+                s.exchange_wait_micros.to_string(),
             ]
         })
         .collect();
@@ -74,6 +79,9 @@ pub fn operator_stats_table(ops: &[(String, StepStats)]) -> String {
             "late",
             "dropped",
             "wm_lag_us",
+            "xchg_rows",
+            "xchg_bytes",
+            "xchg_wait_us",
         ],
         &rows,
     )
@@ -198,6 +206,17 @@ mod tests {
                 },
             ),
             (
+                "exchange".to_string(),
+                StepStats {
+                    events_in: 60,
+                    events_out: 60,
+                    exchange_records: 60,
+                    exchange_bytes: 1_440,
+                    exchange_wait_micros: 330,
+                    ..StepStats::default()
+                },
+            ),
+            (
                 "window".to_string(),
                 StepStats {
                     events_in: 60,
@@ -220,6 +239,12 @@ mod tests {
         assert!(t.contains("dropped"));
         assert!(t.contains("wm_lag_us"));
         assert!(t.contains("1250"));
+        // Exchange columns.
+        assert!(t.contains("xchg_rows"));
+        assert!(t.contains("xchg_bytes"));
+        assert!(t.contains("xchg_wait_us"));
+        assert!(t.contains("1440"));
+        assert!(t.contains("330"));
     }
 
     #[test]

@@ -13,13 +13,13 @@ use std::sync::Arc;
 
 use super::disorder::DisorderState;
 use super::event::{EventFormat, SensorEvent};
-use super::pattern::{Pattern, PatternState};
+use super::pattern::{KeyDist, Pattern, PatternState};
 use super::ratelimit::TokenBucket;
 use crate::broker::{Broker, PartitionedBatchBuilder, Topic};
 use crate::config::DisorderSection;
 use crate::metrics::{LatencyRecorder, MeasurementPoint, ThroughputRecorder};
 use crate::util::clock::ClockRef;
-use crate::util::rng::{Pcg32, Zipf};
+use crate::util::rng::Pcg32;
 
 /// Per-fleet generation parameters (derived from the master config).
 #[derive(Clone, Debug)]
@@ -32,6 +32,10 @@ pub struct GeneratorConfig {
     pub sensors: u32,
     /// Zipf exponent for key skew; 0 = uniform sensor ids.
     pub key_skew: f64,
+    /// Concentrated hot set: `hot_fraction` of events land on sensor ids
+    /// `[0, hot_keys)` (see [`KeyDist`]); 0/0.0 disables.
+    pub hot_keys: u32,
+    pub hot_fraction: f64,
     pub seed: u64,
     /// Produce-batch size (records per broker append).
     pub produce_batch: usize,
@@ -54,6 +58,8 @@ impl GeneratorConfig {
             },
             sensors: cfg.workload.sensors,
             key_skew: cfg.workload.key_skew,
+            hot_keys: cfg.workload.hot_keys,
+            hot_fraction: cfg.workload.hot_fraction,
             seed: cfg.bench.seed,
             produce_batch: 512,
             disorder: cfg.workload.disorder.clone(),
@@ -178,8 +184,12 @@ struct InstanceWorker {
 impl InstanceWorker {
     fn run(self, deadline_micros: u64) -> (u64, u64) {
         let mut rng = Pcg32::from_master(self.config.seed, self.id as u64);
-        let zipf = (self.config.key_skew > 0.0)
-            .then(|| Zipf::new(self.config.sensors as usize, self.config.key_skew));
+        let keys = KeyDist::new(
+            self.config.sensors,
+            self.config.key_skew,
+            self.config.hot_keys,
+            self.config.hot_fraction,
+        );
         let mut schedule = PatternState::new(
             self.pattern.clone(),
             Pcg32::from_master(self.config.seed ^ 0xDADA, self.id as u64),
@@ -226,10 +236,7 @@ impl InstanceWorker {
                 // per (partition, chunk) instead of one per event.
                 let mut pb = PartitionedBatchBuilder::new(partitions);
                 for _ in 0..chunk {
-                    let sensor_id = match &zipf {
-                        Some(z) => z.sample(&mut rng) as u32,
-                        None => rng.below(self.config.sensors),
-                    };
+                    let sensor_id = keys.sample(&mut rng);
                     let ev = SensorEvent {
                         ts_micros: now,
                         sensor_id,
@@ -343,6 +350,8 @@ mod tests {
             format: EventFormat::Csv,
             sensors: 256,
             key_skew: 0.0,
+            hot_keys: 0,
+            hot_fraction: 0.0,
             seed: 42,
             produce_batch: 256,
             disorder: DisorderSection::default(),

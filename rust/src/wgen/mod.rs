@@ -22,5 +22,5 @@ pub mod ratelimit;
 pub use disorder::DisorderState;
 pub use event::{EventFormat, EventSerializer, SensorEvent};
 pub use generator::{Fleet, FleetReport, GeneratorConfig};
-pub use pattern::{Pattern, PatternState, Tick};
+pub use pattern::{KeyDist, Pattern, PatternState, Tick};
 pub use ratelimit::TokenBucket;

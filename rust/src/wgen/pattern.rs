@@ -10,7 +10,7 @@
 //!   the minimum and maximum pauses … are the same, and the data
 //!   generation frequency is constant".
 
-use crate::util::rng::Pcg32;
+use crate::util::rng::{Pcg32, Zipf};
 
 /// Tick granularity: rate control operates on 10ms slices, fine enough
 /// that per-second rates look smooth and coarse enough that the schedule
@@ -90,6 +90,52 @@ fn scale(v: u64, share: u64, total: u64) -> u64 {
         return v;
     }
     ((v as u128 * share as u128) / total as u128) as u64
+}
+
+/// Sensor-id (key) distribution for generated events: uniform by default,
+/// a Zipf tail under `workload.key_skew`, and a concentrated hot set
+/// under `workload.hot_keys`/`hot_fraction` — the skewed-key regimes the
+/// keyed exchange is benchmarked against (ShuffleBench's hot-key
+/// scenarios).  The three compose: `hot_fraction` of the stream hits the
+/// hot set uniformly, the remainder follows the Zipf (or uniform) body.
+#[derive(Clone, Debug)]
+pub struct KeyDist {
+    sensors: u32,
+    zipf: Option<Zipf>,
+    hot_keys: u32,
+    hot_fraction: f64,
+}
+
+impl KeyDist {
+    pub fn new(sensors: u32, key_skew: f64, hot_keys: u32, hot_fraction: f64) -> KeyDist {
+        KeyDist {
+            sensors: sensors.max(1),
+            zipf: (key_skew > 0.0).then(|| Zipf::new(sensors.max(1) as usize, key_skew)),
+            hot_keys: hot_keys.min(sensors.max(1)),
+            hot_fraction,
+        }
+    }
+
+    /// Build from the workload section of the master config.
+    pub fn from_workload(w: &crate::config::schema::WorkloadSection) -> KeyDist {
+        KeyDist::new(w.sensors, w.key_skew, w.hot_keys, w.hot_fraction)
+    }
+
+    /// True when any non-uniform mechanism is active.
+    pub fn skewed(&self) -> bool {
+        self.zipf.is_some() || (self.hot_fraction > 0.0 && self.hot_keys > 0)
+    }
+
+    /// Sample one sensor id.
+    pub fn sample(&self, rng: &mut Pcg32) -> u32 {
+        if self.hot_fraction > 0.0 && self.hot_keys > 0 && rng.f64() < self.hot_fraction {
+            return rng.below(self.hot_keys);
+        }
+        match &self.zipf {
+            Some(z) => z.sample(rng) as u32,
+            None => rng.below(self.sensors),
+        }
+    }
 }
 
 /// One scheduling step.
@@ -270,6 +316,49 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn key_dist_uniform_covers_the_keyspace() {
+        let d = KeyDist::new(64, 0.0, 0, 0.0);
+        assert!(!d.skewed());
+        let mut rng = Pcg32::new(7, 7);
+        let mut counts = [0u64; 64];
+        for _ in 0..64_000 {
+            counts[d.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 500), "uniform draw: {counts:?}");
+    }
+
+    #[test]
+    fn key_dist_hot_set_concentrates_traffic() {
+        // Half the stream on 4 hot keys over a 256-key space.
+        let d = KeyDist::new(256, 0.0, 4, 0.5);
+        assert!(d.skewed());
+        let mut rng = Pcg32::new(9, 9);
+        let mut hot = 0u64;
+        let n = 100_000;
+        for _ in 0..n {
+            if d.sample(&mut rng) < 4 {
+                hot += 1;
+            }
+        }
+        // hot_fraction 0.5 + the uniform body's 4/256 sliver.
+        let frac = hot as f64 / n as f64;
+        assert!((0.45..0.60).contains(&frac), "hot fraction {frac}");
+    }
+
+    #[test]
+    fn key_dist_zipf_and_hot_set_compose() {
+        let d = KeyDist::new(256, 1.2, 8, 0.25);
+        let mut rng = Pcg32::new(11, 11);
+        let mut counts = vec![0u64; 256];
+        for _ in 0..100_000 {
+            counts[d.sample(&mut rng) as usize] += 1;
+        }
+        let head: u64 = counts[..8].iter().sum();
+        let tail: u64 = counts[248..].iter().sum();
+        assert!(head > tail * 5, "head {head} vs tail {tail}");
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Keyed-exchange equivalence suite: with the exchange on, keyed results
+//! are **invariant under `engine.parallelism`** — byte-identical at 1, 2
+//! and 4 task instances, including under out-of-order (`disorder`-style)
+//! input — and the pre-exchange task-local behaviour (per-key aggregates
+//! silently changing with parallelism) is pinned as a regression behind
+//! the explicit `exchange: none` opt-out.
+//!
+//! The staged pipelines run on the deterministic lockstep harness
+//! ([`LockstepExchange`]); one wall-mode test drives the real threaded
+//! engine end to end and checks the exchange surfaces in results.json.
+//!
+//! Values are multiples of 0.25 in a small range, so every pane sum is
+//! exactly representable in f32 and aggregation is order-independent —
+//! the byte-equality below tests routing/watermark/gating logic, not
+//! float-summation luck.
+
+use sprobench::broker::Record;
+use sprobench::config::{BenchConfig, ExchangeMode, OpSpec, PipelineSpec};
+use sprobench::coordinator::run_wall;
+use sprobench::engine::{AggKind, EventBatch, LatePolicy, WindowTime};
+use sprobench::pipelines::{LockstepExchange, PipelineStep, StepFactory, StepStats};
+use sprobench::postprocess::validate_results;
+
+/// One synthetic event: (sensor id, value, generation timestamp).
+type Ev = (u32, f32, u64);
+
+/// Canonicalized egestion output: sorted `(window end, key, payload)`.
+type Canon = Vec<(u64, u32, Vec<u8>)>;
+
+fn base_cfg(parallelism: u32) -> BenchConfig {
+    let mut cfg = BenchConfig::default();
+    cfg.engine.use_hlo = false;
+    cfg.engine.parallelism = parallelism;
+    cfg.workload.sensors = 64;
+    cfg
+}
+
+fn keyed_window_spec() -> PipelineSpec {
+    PipelineSpec {
+        ops: vec![
+            OpSpec::KeyBy {
+                modulo: 16,
+                parallelism: 0,
+            },
+            OpSpec::window(AggKind::Mean, 1_000_000, 500_000),
+            OpSpec::EmitAggregates,
+        ],
+    }
+}
+
+fn keyed_topk_spec() -> PipelineSpec {
+    PipelineSpec {
+        ops: vec![
+            OpSpec::KeyBy {
+                modulo: 16,
+                parallelism: 0,
+            },
+            OpSpec::window(AggKind::Sum, 1_000_000, 500_000),
+            OpSpec::TopK {
+                k: 3,
+                parallelism: 0,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    }
+}
+
+/// Split a global stream across `par` source tasks (what distinct broker
+/// partition assignments do to the real engine).
+fn shard(events: &[Ev], par: usize) -> Vec<Vec<Ev>> {
+    let mut shards = vec![Vec::new(); par];
+    for (i, ev) in events.iter().enumerate() {
+        shards[i % par].push(*ev);
+    }
+    shards
+}
+
+fn batch_of(events: &[Ev]) -> EventBatch {
+    EventBatch {
+        ids: events.iter().map(|e| e.0).collect(),
+        temps: events.iter().map(|e| e.1).collect(),
+        gen_ts: events.iter().map(|e| e.2).collect(),
+        append_ts: events.iter().map(|e| e.2).collect(),
+        payload_bytes: events.len() as u64 * 27,
+    }
+}
+
+/// Canonicalize egestion output: parallel instances emit in an
+/// instance-interleaved order, so equality is over the sorted
+/// `(window end, key, payload bytes)` multiset.
+fn canonical(out: Vec<Record>) -> Canon {
+    let mut v: Vec<_> = out
+        .into_iter()
+        .map(|r| (r.gen_ts_micros, r.key, r.payload().to_vec()))
+        .collect();
+    v.sort();
+    v
+}
+
+/// Drive a staged chain over feed phases `(now, events)` in lockstep
+/// rounds (a few idle rounds after each phase drain the fabric), then
+/// finish at `end_now`.  Returns canonical outputs, rows routed, and the
+/// merged per-operator stats.
+fn run_staged(
+    cfg: &BenchConfig,
+    phases: &[(u64, &[Ev])],
+    end_now: u64,
+) -> (Canon, u64, Vec<(String, StepStats)>) {
+    let mut lx = LockstepExchange::compile(cfg)
+        .expect("compile staged chain")
+        .expect("spec must stage");
+    let par = lx.parallelism() as usize;
+    let mut out = Vec::new();
+    for &(now, events) in phases {
+        let batches: Vec<EventBatch> = shard(events, par).iter().map(|s| batch_of(s)).collect();
+        lx.process_round(now, &batches, &mut out).unwrap();
+        for _ in 0..4 {
+            lx.idle_round(now, &mut out).unwrap();
+        }
+    }
+    lx.finish(end_now, &mut out).unwrap();
+    let routed = lx.routed_records();
+    let stats = lx.operator_stats();
+    (canonical(out), routed, stats)
+}
+
+/// Deterministic event set: keys sweep the sensor space, values are
+/// multiples of 0.25 (exact f32 sums).
+fn events(n: u64, ts: u64) -> Vec<Ev> {
+    (0..n)
+        .map(|i| (((i * 7) % 64) as u32, ((i % 40) as f32) * 0.25, ts))
+        .collect()
+}
+
+#[test]
+fn keyed_window_results_byte_identical_across_parallelism() {
+    let evs = events(3_000, 100_000);
+    let phases: &[(u64, &[Ev])] = &[(100_000, &evs)];
+    let mut results = Vec::new();
+    for par in [1u32, 2, 4] {
+        let mut cfg = base_cfg(par);
+        cfg.engine.pipeline_spec = Some(keyed_window_spec());
+        let (out, routed, _) = run_staged(&cfg, phases, 650_000);
+        assert!(!out.is_empty(), "par {par}: windows must emit");
+        assert_eq!(routed, 3_000, "par {par}: every row crosses the keyby boundary");
+        results.push((par, out));
+    }
+    let (_, baseline) = &results[0];
+    for (par, out) in &results[1..] {
+        assert_eq!(
+            out, baseline,
+            "parallelism {par} must be byte-identical to parallelism 1"
+        );
+    }
+    // Sanity: 16 derived key groups, each exactly once per window.
+    let first_window = baseline.iter().filter(|(w, ..)| *w == 500_000).count();
+    assert_eq!(first_window, 16, "one aggregate per derived key");
+}
+
+#[test]
+fn keyed_topk_results_byte_identical_across_parallelism() {
+    // Two window-fulls so top-k selects per window end, with a global
+    // (parallelism-1) top-k stage fed by the gated exchange.
+    let first = events(2_000, 100_000);
+    let second: Vec<Ev> = (0..2_000u64)
+        .map(|i| (((i * 11) % 64) as u32, ((i % 23) as f32) * 0.5, 700_000))
+        .collect();
+    // The empty 600ms phase is a barrier: every window instance advances
+    // past the 500ms boundary (emitting it) before any second-window row
+    // arrives, so pane membership is identical at every parallelism.
+    let phases: &[(u64, &[Ev])] = &[(100_000, &first), (600_000, &[]), (700_000, &second)];
+    let mut results = Vec::new();
+    for par in [1u32, 2, 4] {
+        let mut cfg = base_cfg(par);
+        cfg.engine.pipeline_spec = Some(keyed_topk_spec());
+        let (out, routed, stats) = run_staged(&cfg, phases, 1_300_000);
+        assert!(!out.is_empty(), "par {par}: top-k must emit");
+        assert!(routed >= 4_000, "par {par}: events + aggregates cross boundaries");
+        // Every window end emits at most k = 3 aggregates.
+        for w in [500_000u64, 1_000_000, 1_500_000] {
+            let per = out.iter().filter(|(e, ..)| *e == w).count();
+            assert!(per <= 3, "par {par}: window {w} emitted {per} > k");
+        }
+        // The staged op list carries one exchange entry per boundary.
+        let names: Vec<&str> = stats.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["keyby", "exchange", "window", "exchange", "topk", "emit_aggregates"]
+        );
+        results.push((par, out));
+    }
+    let (_, baseline) = &results[0];
+    for (par, out) in &results[1..] {
+        assert_eq!(
+            out, baseline,
+            "parallelism {par} top-k must be byte-identical to parallelism 1"
+        );
+    }
+}
+
+#[test]
+fn event_time_keyed_window_equivalent_under_disorder_and_parallelism() {
+    // An out-of-order stream (workload.disorder's reorder-buffer class:
+    // block-reversed emission) through an event-time keyed window.  The
+    // exchange must propagate watermarks as the min over upstreams, so
+    // results stay byte-identical to the ordered stream at parallelism 1.
+    let spec = PipelineSpec {
+        ops: vec![
+            OpSpec::KeyBy {
+                modulo: 16,
+                parallelism: 0,
+            },
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 1_000_000,
+                slide_micros: 500_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: 2_000_000,
+                late_policy: LatePolicy::MergeIfOpen,
+                watermark_micros: 500_000,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    };
+    let ordered: Vec<Ev> = (0..4_000u64)
+        .map(|i| (((i * 7) % 64) as u32, ((i % 40) as f32) * 0.25, 100_000 + i * 2_000))
+        .collect();
+    let mut disordered = ordered.clone();
+    for block in disordered.chunks_mut(32) {
+        block.reverse(); // ≤ 31 × 2ms = 62ms displacement, well in bound
+    }
+    let run = |par: u32, stream: &[Ev]| {
+        let mut cfg = base_cfg(par);
+        cfg.engine.pipeline_spec = Some(spec.clone());
+        // Feed in bounded rounds; `now` tracks the stream frontier.
+        let mut lx = LockstepExchange::compile(&cfg).unwrap().unwrap();
+        let p = lx.parallelism() as usize;
+        let mut out = Vec::new();
+        for chunk in stream.chunks(128) {
+            let now = chunk.iter().map(|e| e.2).max().unwrap() + 10_000;
+            let batches: Vec<EventBatch> =
+                shard(chunk, p).iter().map(|s| batch_of(s)).collect();
+            lx.process_round(now, &batches, &mut out).unwrap();
+        }
+        let end = stream.iter().map(|e| e.2).max().unwrap() + 4_000_000;
+        for _ in 0..4 {
+            lx.idle_round(end, &mut out).unwrap();
+        }
+        lx.finish(end, &mut out).unwrap();
+        let stats = lx.operator_stats();
+        let window = stats
+            .iter()
+            .find(|(n, _)| n == "window")
+            .expect("window op")
+            .1;
+        assert_eq!(window.dropped_events, 0, "bounded disorder must not drop");
+        (canonical(out), window)
+    };
+    let (baseline, _) = run(1, &ordered);
+    assert!(!baseline.is_empty());
+    for par in [1u32, 2, 4] {
+        let (got, window) = run(par, &disordered);
+        assert_eq!(
+            got, baseline,
+            "par {par}: disordered event-time aggregates must match the \
+             ordered parallelism-1 run byte for byte"
+        );
+        assert!(
+            window.watermark_lag_micros < 6_000_000,
+            "par {par}: watermark lag unbounded: {}",
+            window.watermark_lag_micros
+        );
+    }
+}
+
+/// The pre-exchange behaviour, pinned: with `exchange: none` every task
+/// keeps its own keyed state, so a derived key group split across tasks
+/// emits one partial aggregate per task and per-key results change with
+/// parallelism — exactly the task-sensitivity the exchange removes.
+#[test]
+fn exchange_none_regression_keeps_task_local_split_state() {
+    let evs = events(2_000, 100_000);
+    let run_local = |par: usize| {
+        let mut cfg = base_cfg(par as u32);
+        cfg.engine.exchange = ExchangeMode::None;
+        cfg.engine.pipeline_spec = Some(keyed_window_spec());
+        assert!(
+            LockstepExchange::compile(&cfg).unwrap().is_none(),
+            "exchange: none must not stage"
+        );
+        let factory = StepFactory::new(&cfg, None);
+        let mut out = Vec::new();
+        for sh in shard(&evs, par) {
+            let mut step = factory.create(0).unwrap();
+            step.process(100_000, &[], &batch_of(&sh), &mut out).unwrap();
+            step.finish(650_000, &mut out).unwrap();
+        }
+        canonical(out)
+    };
+    let p1 = run_local(1);
+    let p4 = run_local(4);
+    assert_ne!(
+        p1, p4,
+        "task-local keyed state must split key groups (the documented \
+         pre-exchange behaviour the opt-out preserves)"
+    );
+    // The split shows up as duplicate (window, key) emissions: one
+    // partial aggregate per task that saw the key.
+    let dup = |v: &[(u64, u32, Vec<u8>)]| {
+        let mut seen = std::collections::HashSet::new();
+        v.iter().filter(|(w, k, _)| !seen.insert((*w, *k))).count()
+    };
+    assert_eq!(dup(&p1), 0);
+    assert!(dup(&p4) > 0, "split key groups emit per-task partials");
+}
+
+#[test]
+fn wall_engine_surfaces_exchange_in_results_json() {
+    // The real threaded engine over a disordered keyed event-time chain:
+    // conservation holds, the exchange reports non-zero routed
+    // records/bytes in results.json operators[], and watermark lag stays
+    // bounded.
+    let mut cfg = base_cfg(2);
+    cfg.bench.name = "shuffle-e2e".into();
+    cfg.bench.duration_micros = 700_000;
+    cfg.bench.warmup_micros = 0;
+    cfg.workload.rate = 40_000;
+    cfg.workload.sensors = 128;
+    cfg.workload.disorder.lateness_micros = 100_000;
+    cfg.workload.disorder.late_fraction = 0.25;
+    cfg.workload.disorder.shuffle_window = 64;
+    cfg.engine.batch_size = 256;
+    cfg.metrics.sample_interval_micros = 100_000;
+    cfg.engine.pipeline_spec = Some(PipelineSpec {
+        ops: vec![
+            OpSpec::KeyBy {
+                modulo: 32,
+                parallelism: 0,
+            },
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 500_000,
+                slide_micros: 250_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: 250_000,
+                late_policy: LatePolicy::MergeIfOpen,
+                watermark_micros: 100_000,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    });
+    cfg.validate().unwrap();
+
+    let (summary, _store) = run_wall(&cfg, None).unwrap();
+    assert_eq!(summary.processed, summary.generated, "engine must drain");
+    assert!(summary.emitted > 0, "keyed aggregates must flow");
+
+    let results = summary.to_json();
+    assert!(validate_results(&results).is_empty());
+    let ops = results.get("operators").and_then(|v| v.as_arr()).unwrap();
+    let names: Vec<&str> = ops
+        .iter()
+        .filter_map(|o| o.get("op").and_then(|v| v.as_str()))
+        .collect();
+    assert_eq!(names, vec!["keyby", "exchange", "window", "emit_aggregates"]);
+    let exchange = &ops[1];
+    let field = |o: &sprobench::util::json::Json, k: &str| {
+        o.get(k).and_then(|v| v.as_i64()).expect(k)
+    };
+    assert_eq!(
+        field(exchange, "exchange_records") as u64,
+        summary.processed,
+        "every row crosses the keyby boundary"
+    );
+    assert!(field(exchange, "exchange_bytes") > 0);
+    assert_eq!(
+        field(exchange, "events_in"),
+        field(exchange, "events_out"),
+        "sent == drained once the run flushed"
+    );
+    let window = &ops[2];
+    let lag = field(window, "watermark_lag_us");
+    assert!(lag > 0, "event-time window must observe watermark lag");
+    assert!(lag < 10_000_000, "watermark lag unbounded: {lag}");
+}
