@@ -7,9 +7,12 @@
 //! **data-plane comparison**: a full produce → consume → parse → process
 //! loop on the per-record plane vs the batch-first plane (`RecordBatch`
 //! end-to-end), which is the number the batching refactor is accountable
-//! to, the chained operator preset, and the event-time window case
+//! to, the chained operator preset, the event-time window case
 //! (disordered stream → watermarked window) whose surcharge is tracked
-//! as `data_plane.event_vs_chained`.
+//! as `data_plane.event_vs_chained`, and the checkpoint/restore smoke
+//! pair: the chained loop with an aligned snapshot + file-commit cycle
+//! on the path (`data_plane.checkpoint_eps`) and warm-restore vs
+//! cold-replay recovery (`data_plane.restore_vs_cold`).
 //!
 //! Run `cargo bench --bench hotpath_micro` for the full profile, or
 //! `-- --quick` for a reduced run (CI smoke).  Either way the data-plane
@@ -20,7 +23,7 @@ use std::sync::Arc;
 
 use sprobench::bench::{scenarios, Bencher, Measurement};
 use sprobench::broker::{Broker, BrokerConfig, PartitionedBatchBuilder, Record, Topic};
-use sprobench::engine::EventBatch;
+use sprobench::engine::{Checkpoint, CheckpointStore, EventBatch, TaskPart};
 use sprobench::metrics::{LatencyRecorder, MeasurementPoint};
 use sprobench::pipelines::{LockstepExchange, PipelineStep, StepFactory};
 use sprobench::runtime::{Input, RuntimeFactory};
@@ -246,6 +249,76 @@ fn e2e_event_time(
     events as f64
 }
 
+/// [`e2e_chained`] with an aligned checkpoint cycle on the hot path:
+/// every 8th poll the chain snapshots its operator state and commits a
+/// CRC-stamped checkpoint file (temp-then-rename) through a real
+/// [`CheckpointStore`].  The delta against `e2e data plane chained` is
+/// the checkpointing surcharge, tracked as
+/// `data_plane.checkpoint_vs_chained`.
+fn e2e_checkpointed(
+    broker: &Arc<Broker>,
+    topic: &Arc<Topic>,
+    group: &Arc<sprobench::broker::ConsumerGroup>,
+    payloads: &[Vec<u8>],
+    events: u64,
+    store: &CheckpointStore,
+) -> f64 {
+    let cfg = scenarios::chained_filter_topk();
+    let factory = StepFactory::new(&cfg, None);
+    let mut step = factory.create(0).expect("compile chain");
+    let mut sent = 0u64;
+    while sent < events {
+        let chunk = 512.min(events - sent);
+        let mut pb = PartitionedBatchBuilder::new(topic.partition_count());
+        for i in 0..chunk {
+            let key = (sent + i) as u32;
+            pb.push(
+                topic.partition_for_key(key),
+                key,
+                &payloads[((sent + i) % 1000) as usize],
+                sent + i,
+            );
+        }
+        broker.produce_batches(topic, pb.finish()).unwrap();
+        sent += chunk;
+    }
+    let mut seen = 0u64;
+    let mut parsed = EventBatch::with_capacity(4096);
+    let mut out = Vec::new();
+    let mut rounds = 0u64;
+    let mut epoch = 0u64;
+    while seen < events {
+        if let Ok(Some(b)) = group.poll(0, 4096) {
+            seen += b.record_count() as u64;
+            parsed.clear();
+            parsed.extend_from_batches(&b.batches);
+            out.clear();
+            step.process(seen * 100, &[], &parsed, &mut out).unwrap();
+            std::hint::black_box(out.len());
+            group.commit(b.partition, b.next_offset);
+            rounds += 1;
+            if rounds % 8 == 0 {
+                epoch += 1;
+                let state = step.snapshot().expect("chain snapshots");
+                store
+                    .write(&Checkpoint {
+                        epoch,
+                        tasks: vec![TaskPart {
+                            offsets: vec![(0, seen)],
+                            events_in: seen,
+                            state,
+                        }],
+                    })
+                    .expect("checkpoint commit");
+            }
+        }
+    }
+    let mut tail = Vec::new();
+    step.finish(seen * 100 + 1_000_000, &mut tail).unwrap();
+    std::hint::black_box(tail.len());
+    events as f64
+}
+
 /// Synthetic event batches shared by the shuffle case and its
 /// task-local baseline: `total` rows per round split across `ways`
 /// batches, ids sweeping a 1024-key space, `now` advancing 1ms/round so
@@ -449,6 +522,94 @@ fn main() {
     b.measure("e2e shuffle task-local", 1, iters, || e2e_shuffle_local(n / 2));
     b.measure("e2e data plane shuffle", 1, iters, || e2e_shuffle(n / 2));
 
+    // --- Checkpoint + recovery smoke (runs in quick mode: CI coverage) -----
+    let ckpt_dir = std::env::temp_dir().join(format!(
+        "sprobench-hotpath-ckpt-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let store = CheckpointStore::new(&ckpt_dir, 2);
+    {
+        let t = broker.create_topic("dp-ckpt");
+        let g = broker.subscribe("dp-ckpt", "dpk", 1);
+        b.measure("e2e data plane checkpointed", 1, iters, || {
+            e2e_checkpointed(&broker, &t, &g, &payloads, n / 2, &store)
+        });
+    }
+    // Warm-restore vs cold-replay recovery: a fused chain is run to its
+    // midpoint and checkpointed once; "warm" recovery loads + restores
+    // that state and replays only the suffix, "cold" replays the whole
+    // stream from scratch.  Both cases return the full stream length (the
+    // end state they reach), so `warm_eps / cold_eps` is the recovery
+    // speedup a checkpoint buys (`data_plane.restore_vs_cold`, > 1 when
+    // restoring beats replaying — the restore + file-read overhead is
+    // what pulls it below the ideal 2x at a midpoint checkpoint).
+    let recovery_rounds: Vec<(u64, EventBatch)> = {
+        let chunk = 512usize;
+        let mut v = Vec::new();
+        let mut sent = 0u64;
+        let mut now = 0u64;
+        while sent < n / 2 {
+            now += 1_000;
+            let mut bs = shuffle_round_batches(sent, 1, chunk, now);
+            v.push((now, bs.pop().expect("one batch at ways=1")));
+            sent += chunk as u64;
+        }
+        v
+    };
+    let recovery_total = (recovery_rounds.len() * 512) as f64;
+    let mid = recovery_rounds.len() / 2;
+    let recovery_cfg = scenarios::chained_filter_topk();
+    let recovery_factory = StepFactory::new(&recovery_cfg, None);
+    const RECOVERY_EPOCH: u64 = 1_000_000;
+    {
+        // Run to the midpoint once; commit the checkpoint warm restores read.
+        let mut step = recovery_factory.create(0).expect("compile chain");
+        let mut out = Vec::new();
+        for (now, batch) in &recovery_rounds[..mid] {
+            step.process(*now, &[], batch, &mut out).unwrap();
+            out.clear();
+        }
+        let state = step.snapshot().expect("chain snapshots");
+        store
+            .write(&Checkpoint {
+                epoch: RECOVERY_EPOCH,
+                tasks: vec![TaskPart {
+                    offsets: vec![(0, (mid * 512) as u64)],
+                    events_in: (mid * 512) as u64,
+                    state,
+                }],
+            })
+            .expect("checkpoint commit");
+    }
+    b.measure("recover warm from checkpoint", 1, iters, || -> f64 {
+        let ckpt = store.load(RECOVERY_EPOCH).expect("recovery checkpoint");
+        let mut step = recovery_factory.create(0).expect("compile chain");
+        step.restore(&ckpt.tasks[0].state).expect("restore chain state");
+        let mut out = Vec::new();
+        for (now, batch) in &recovery_rounds[mid..] {
+            step.process(*now, &[], batch, &mut out).unwrap();
+            out.clear();
+        }
+        let last_now = recovery_rounds.last().expect("rounds").0;
+        step.finish(last_now + 1_000_000, &mut out).unwrap();
+        std::hint::black_box(out.len());
+        recovery_total
+    });
+    b.measure("recover cold replay", 1, iters, || -> f64 {
+        let mut step = recovery_factory.create(0).expect("compile chain");
+        let mut out = Vec::new();
+        for (now, batch) in &recovery_rounds {
+            step.process(*now, &[], batch, &mut out).unwrap();
+            out.clear();
+        }
+        let last_now = recovery_rounds.last().expect("rounds").0;
+        step.finish(last_now + 1_000_000, &mut out).unwrap();
+        std::hint::black_box(out.len());
+        recovery_total
+    });
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
     // --- Record construction: per-event alloc vs chunk arena ------------------
     b.measure("record per-event alloc x512", 1, iters, || -> f64 {
         let iters = 200;
@@ -607,6 +768,9 @@ fn main() {
     let event_time_eps = eps(b.measurements(), "e2e data plane event-time");
     let shuffle_eps = eps(b.measurements(), "e2e data plane shuffle");
     let shuffle_local_eps = eps(b.measurements(), "e2e shuffle task-local");
+    let checkpoint_eps = eps(b.measurements(), "e2e data plane checkpointed");
+    let restore_warm_eps = eps(b.measurements(), "recover warm from checkpoint");
+    let restore_cold_eps = eps(b.measurements(), "recover cold replay");
     let speedup = if per_record_eps > 0.0 {
         batched_eps / per_record_eps
     } else {
@@ -630,6 +794,21 @@ fn main() {
     // sides, so the ratio isolates routing + channels + gating).
     let shuffle_vs_local = if shuffle_local_eps > 0.0 {
         shuffle_eps / shuffle_local_eps
+    } else {
+        0.0
+    };
+    // Aligned-checkpoint surcharge vs the same chained loop without the
+    // snapshot + file-commit cycle.
+    let checkpoint_vs_chained = if chained_eps > 0.0 {
+        checkpoint_eps / chained_eps
+    } else {
+        0.0
+    };
+    // Recovery speedup: warm restore (load + restore + replay the suffix)
+    // vs cold replay of the whole stream, both reaching the same end
+    // state.  > 1 means the checkpoint pays for itself on restore.
+    let restore_vs_cold = if restore_cold_eps > 0.0 {
+        restore_warm_eps / restore_cold_eps
     } else {
         0.0
     };
@@ -660,6 +839,11 @@ fn main() {
     dp.set("shuffle_eps", Json::Num(shuffle_eps));
     dp.set("shuffle_local_eps", Json::Num(shuffle_local_eps));
     dp.set("shuffle_vs_local", Json::Num(shuffle_vs_local));
+    dp.set("checkpoint_eps", Json::Num(checkpoint_eps));
+    dp.set("checkpoint_vs_chained", Json::Num(checkpoint_vs_chained));
+    dp.set("restore_warm_eps", Json::Num(restore_warm_eps));
+    dp.set("restore_cold_eps", Json::Num(restore_cold_eps));
+    dp.set("restore_vs_cold", Json::Num(restore_vs_cold));
     doc.set("data_plane", dp);
     match std::fs::write("BENCH_hotpath.json", doc.to_pretty()) {
         Ok(()) => println!("wrote BENCH_hotpath.json (data-plane speedup: {speedup:.2}x)"),

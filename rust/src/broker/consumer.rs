@@ -47,6 +47,13 @@ impl PruneCoordinator {
         self.groups.lock().expect("prune groups").push(offsets);
     }
 
+    fn unregister(&self, offsets: &Arc<GroupOffsets>) {
+        self.groups
+            .lock()
+            .expect("prune groups")
+            .retain(|g| !Arc::ptr_eq(g, offsets));
+    }
+
     /// Prune `partition` up to the min committed offset across groups.
     pub fn prune(&self, partition: u32) {
         let groups = self.groups.lock().expect("prune groups");
@@ -196,6 +203,36 @@ impl ConsumerGroup {
         self.coordinator.prune(partition);
     }
 
+    /// Current fetch position for `partition` (the next offset a poll
+    /// would read; may run ahead of the committed offset).
+    pub fn position(&self, partition: u32) -> u64 {
+        self.positions[partition as usize].load(Ordering::SeqCst)
+    }
+
+    /// Rewind (or advance) the fetch position for `partition` — the
+    /// recovery path: after a restore, positions are seeked back to the
+    /// checkpoint's recorded offsets so every record processed after the
+    /// snapshot is replayed.  The committed offset is untouched; commits
+    /// are monotone (`fetch_max`), so replayed batches re-commit
+    /// harmlessly.  The prune coordinator only reclaims below *committed*
+    /// offsets, which deferred (checkpoint-gated) commits keep at the
+    /// last durable snapshot — so seeked-back records are still in the
+    /// log.
+    pub fn seek(&self, partition: u32, offset: u64) {
+        self.positions[partition as usize].store(offset, Ordering::SeqCst);
+    }
+
+    /// Deregister this group from prune coordination.  A crashed engine
+    /// incarnation's group must not pin the log forever: its committed
+    /// offsets are frozen, so leaving lets the surviving groups' progress
+    /// bound retention again.  The group object stays usable for reads;
+    /// only its pruning veto is dropped (pruning is monotone, so nothing
+    /// already retained is at risk until a remaining group commits past
+    /// it).
+    pub fn leave(&self) {
+        self.coordinator.unregister(&self.offsets);
+    }
+
     /// Total committed records across partitions.
     pub fn total_committed(&self) -> u64 {
         (0..self.topic.partition_count())
@@ -301,6 +338,42 @@ mod tests {
         assert!(b.is_none() || b.unwrap().record_count() == 1);
         // …after which the group reports closure.
         assert_eq!(g.poll(0, 10).err(), Some(PartitionClosed));
+    }
+
+    #[test]
+    fn left_group_no_longer_blocks_pruning() {
+        let topic = Arc::new(Topic::new("t", 1, 4096));
+        let coord = Arc::new(PruneCoordinator::new(topic.clone()));
+        let g1 = ConsumerGroup::new("dead", topic.clone(), coord.clone(), 1);
+        let g2 = ConsumerGroup::new("live", topic.clone(), coord, 1);
+        for k in 0..5 {
+            topic.produce(rec(k), 0).unwrap();
+        }
+        let b = g2.poll(0, 10).unwrap().unwrap();
+        g2.commit(b.partition, b.next_offset);
+        assert_eq!(topic.partition(0).low_watermark(), 0, "dead group pins the log");
+        g1.leave();
+        // Any later commit re-evaluates the prune point without g1's veto.
+        g2.commit(0, 5);
+        assert_eq!(topic.partition(0).low_watermark(), 5);
+    }
+
+    #[test]
+    fn seek_rewinds_and_replays_uncommitted_records() {
+        let (t, g) = setup(1, 1);
+        for k in 0..20 {
+            t.produce(rec(k), 0).unwrap();
+        }
+        let b = g.poll(0, 20).unwrap().unwrap();
+        assert_eq!(b.record_count(), 20);
+        assert_eq!(g.position(0), 20);
+        // No commit happened (checkpoint-gated), so the log retains
+        // everything and a seek-back replays the same records.
+        g.seek(0, 5);
+        assert_eq!(g.position(0), 5);
+        let b = g.poll(0, 20).unwrap().unwrap();
+        assert_eq!(b.record_count(), 15, "offsets 5..20 replayed");
+        assert_eq!(b.next_offset, 20);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::config::{self, BenchConfig, ExecMode, Experiment};
-use crate::coordinator::{run_wall, simrun};
+use crate::coordinator::{run_recovery, simrun};
 use crate::experiment::MaxCapacityDriver;
 use crate::postprocess::{ascii_table, operator_stats_table, validate_results};
 use crate::runtime::RuntimeFactory;
@@ -194,7 +194,9 @@ fn run_once(
     String,
 > {
     match cfg.bench.mode {
-        ExecMode::Wall => run_wall(cfg, cfg.engine.use_hlo.then(|| rtf.clone())),
+        // `run_recovery` degrades to a plain wall run when no fault plan
+        // is configured, so wall mode always routes through it.
+        ExecMode::Wall => run_recovery(cfg, cfg.engine.use_hlo.then(|| rtf.clone())),
         ExecMode::Sim => Ok(simrun::run_sim(cfg, &simrun::SimModel::default())),
     }
 }
@@ -264,7 +266,7 @@ fn print_summary(s: &crate::coordinator::RunSummary) {
             .map(|h| format!("p50 {} p99 {}", fmt_micros(h.p50), fmt_micros(h.p99)))
             .unwrap_or_else(|| "-".into())
     };
-    let rows = vec![
+    let mut rows = vec![
         vec!["experiment".into(), s.name.clone()],
         vec![
             "pipeline / framework".into(),
@@ -294,6 +296,29 @@ fn print_summary(s: &crate::coordinator::RunSummary) {
         ],
         vec!["energy".into(), format!("{:.1} J", s.energy_joules)],
     ];
+    if let Some(r) = &s.recovery {
+        rows.push(vec![
+            "recovery".into(),
+            format!(
+                "{} after kill ({} replayed, {})",
+                fmt_micros(r.recovery_time_micros),
+                r.replayed_records,
+                if r.cold_start {
+                    "cold start".to_string()
+                } else {
+                    format!("restored epoch {}", r.restored_epoch)
+                }
+            ),
+        ]);
+        rows.push(vec![
+            "checkpoints".into(),
+            format!(
+                "{} committed, {} B, write {} ({} corrupt skipped)",
+                r.checkpoints, r.checkpoint_bytes,
+                fmt_micros(r.checkpoint_write_micros), r.corrupt_skipped
+            ),
+        ]);
+    }
     println!("{}", ascii_table(&["metric", "value"], &rows));
     if !s.operators.is_empty() {
         println!("per-operator stats (merged across tasks):");

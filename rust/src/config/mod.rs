@@ -12,8 +12,9 @@ pub mod schema;
 pub mod yaml;
 
 pub use schema::{
-    parse_pipeline_spec, pipeline_grammar, BenchConfig, CmpOp, ConfigError, DisorderSection,
-    ExchangeMode, ExecMode, Framework, OpSpec, Pattern, PipelineKind, PipelineSpec, StageSpec,
+    parse_pipeline_spec, pipeline_grammar, BenchConfig, CheckpointSection, CmpOp, ConfigError,
+    DisorderSection, ExchangeMode, ExecMode, FaultSection, Framework, OpSpec, Pattern,
+    PipelineKind, PipelineSpec, StageSpec,
 };
 
 use crate::util::json::Json;

@@ -531,6 +531,63 @@ pub struct MetricsSection {
     pub out_dir: String,
 }
 
+/// Aligned-checkpointing controls (the `checkpoint:` section).
+///
+/// When `interval` is nonzero the run is divided into epochs of that
+/// length; at the first batch boundary past each epoch edge every engine
+/// task snapshots its operator state and consumer offsets into the
+/// [`crate::engine::CheckpointCoordinator`], which commits the epoch to a
+/// versioned, CRC-guarded file once all tasks have contributed.  Offsets
+/// are only committed to the broker group for epochs whose checkpoint
+/// file has durably committed, so a restore can always replay every
+/// record processed after the snapshot.
+#[derive(Clone, Debug)]
+pub struct CheckpointSection {
+    /// Checkpoint epoch length in µs; 0 disables checkpointing.
+    pub interval_micros: u64,
+    /// Directory for checkpoint files; empty string resolves to
+    /// `<metrics.out_dir>/checkpoints` (see
+    /// [`BenchConfig::checkpoint_dir`]).
+    pub dir: String,
+    /// How many committed checkpoints to retain on disk (older files are
+    /// pruned); 0 keeps every checkpoint.
+    pub retain: usize,
+}
+
+impl CheckpointSection {
+    /// Whether checkpointing is configured at all.
+    pub fn enabled(&self) -> bool {
+        self.interval_micros > 0
+    }
+}
+
+/// Fault-injection plan (the `fault:` section): kill one engine task
+/// mid-run — an abort, not a graceful stop: no window flush, no offset
+/// commit — then restart the fleet, restoring from the latest committed
+/// checkpoint when `restore` is on.  Drives the kill-and-restore recovery
+/// path measured by `recovery_time_us` / `replayed_records` in
+/// results.json.
+#[derive(Clone, Debug)]
+pub struct FaultSection {
+    /// Engine task id to kill; must be < `engine.parallelism`.
+    pub kill_task: u32,
+    /// Run offset at which the kill fires, µs from engine start;
+    /// 0 disables the fault plan.
+    pub kill_after_micros: u64,
+    /// Restore operator state and offsets from the latest committed
+    /// checkpoint after the kill.  A missing or wholly corrupt checkpoint
+    /// directory degrades to a cold start at runtime (counted in
+    /// results.json); `restore: false` forces the cold start.
+    pub restore: bool,
+}
+
+impl FaultSection {
+    /// Whether a kill is planned for this run.
+    pub fn enabled(&self) -> bool {
+        self.kill_after_micros > 0
+    }
+}
+
 /// Max-capacity experiment controls (the `experiment:` section).
 ///
 /// Drives [`crate::experiment::MaxCapacityDriver`]: an escalation loop that
@@ -593,6 +650,8 @@ pub struct BenchConfig {
     pub broker: BrokerSection,
     pub engine: EngineSection,
     pub metrics: MetricsSection,
+    pub checkpoint: CheckpointSection,
+    pub fault: FaultSection,
     pub experiment: ExperimentSection,
     pub slurm: SlurmSection,
 }
@@ -656,6 +715,16 @@ impl Default for BenchConfig {
             metrics: MetricsSection {
                 sample_interval_micros: 1_000_000,
                 out_dir: "runs".into(),
+            },
+            checkpoint: CheckpointSection {
+                interval_micros: 0,
+                dir: String::new(),
+                retain: 2,
+            },
+            fault: FaultSection {
+                kill_task: 0,
+                kill_after_micros: 0,
+                restore: true,
             },
             experiment: ExperimentSection {
                 start_rate: 0,
@@ -1151,6 +1220,20 @@ impl BenchConfig {
             out_dir: get_str(&m, "out_dir", &d.metrics.out_dir),
         };
 
+        let c = section(root, "checkpoint");
+        let checkpoint = CheckpointSection {
+            interval_micros: get_duration(&c, "interval", d.checkpoint.interval_micros)?,
+            dir: get_str(&c, "dir", &d.checkpoint.dir),
+            retain: get_u64(&c, "retain", d.checkpoint.retain as u64)? as usize,
+        };
+
+        let f = section(root, "fault");
+        let fault = FaultSection {
+            kill_task: get_u32(&f, "kill_task", d.fault.kill_task)?,
+            kill_after_micros: get_duration(&f, "kill_after", d.fault.kill_after_micros)?,
+            restore: get_bool(&f, "restore", d.fault.restore)?,
+        };
+
         let x = section(root, "experiment");
         let experiment = ExperimentSection {
             start_rate: get_u64(&x, "start_rate", d.experiment.start_rate)?,
@@ -1194,6 +1277,8 @@ impl BenchConfig {
             broker,
             engine,
             metrics,
+            checkpoint,
+            fault,
             experiment,
             slurm,
         };
@@ -1318,6 +1403,43 @@ impl BenchConfig {
                 "experiment.max_late_fraction must be in [0, 1] (0 disables; got {late})"
             ));
         }
+        // Aligned checkpoints quiesce the whole fleet at a consistent
+        // epoch; the wall-clock threaded engine can only do that for flat
+        // chains, where every task is independent.  Exchange-staged chains
+        // checkpoint on the deterministic lockstep harness instead.
+        if self.checkpoint.enabled()
+            && self.bench.mode == ExecMode::Wall
+            && self.engine.exchange == ExchangeMode::Hash
+            && self
+                .engine
+                .effective_spec()
+                .split_stages(self.engine.parallelism)
+                .len()
+                > 1
+        {
+            return err(
+                "checkpoint.interval: wall-mode checkpointing supports flat (single-stage) \
+                 chains only; exchange-staged chains snapshot/restore on the deterministic \
+                 lockstep harness (LockstepExchange).  Use a spec without `keyby`, or set \
+                 `engine.exchange: none`",
+            );
+        }
+        if self.fault.enabled() {
+            if self.fault.kill_task >= self.engine.parallelism {
+                return err(format!(
+                    "fault.kill_task {} is out of range: engine.parallelism is {} \
+                     (task ids are 0-based)",
+                    self.fault.kill_task, self.engine.parallelism
+                ));
+            }
+            if self.fault.restore && !self.checkpoint.enabled() {
+                return err(
+                    "fault.restore needs `checkpoint.interval:` > 0 — with checkpointing \
+                     disabled there is nothing to restore from; enable checkpointing or set \
+                     `fault.restore: false` for a cold restart",
+                );
+            }
+        }
         let needed =
             (self.workload.rate + self.generators.instance_capacity - 1) / self.generators.instance_capacity;
         if needed > self.generators.max_instances as u64 {
@@ -1433,6 +1555,16 @@ impl BenchConfig {
             }
         }
         Ok(())
+    }
+
+    /// The directory checkpoint files live in: `checkpoint.dir` when set,
+    /// else `checkpoints/` under `metrics.out_dir`.
+    pub fn checkpoint_dir(&self) -> String {
+        if self.checkpoint.dir.is_empty() {
+            format!("{}/checkpoints", self.metrics.out_dir)
+        } else {
+            self.checkpoint.dir.clone()
+        }
     }
 
     /// Number of generator instances auto-scaled from the requested load
@@ -2076,6 +2208,103 @@ engine:
             let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
             assert!(e.0.contains(needle), "expected '{needle}' in: {e}");
         }
+    }
+
+    #[test]
+    fn checkpoint_and_fault_sections_parse_with_units() {
+        let y = "
+checkpoint:
+  interval: 500ms
+  dir: /tmp/ckpts
+  retain: 5
+fault:
+  kill_task: 2
+  kill_after: 2s
+  restore: true
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert_eq!(cfg.checkpoint.interval_micros, 500_000);
+        assert!(cfg.checkpoint.enabled());
+        assert_eq!(cfg.checkpoint.dir, "/tmp/ckpts");
+        assert_eq!(cfg.checkpoint.retain, 5);
+        assert_eq!(cfg.checkpoint_dir(), "/tmp/ckpts");
+        assert_eq!(cfg.fault.kill_task, 2);
+        assert_eq!(cfg.fault.kill_after_micros, 2_000_000);
+        assert!(cfg.fault.enabled());
+        assert!(cfg.fault.restore);
+        // Defaults: both disabled, dir derived under metrics.out_dir.
+        let d = BenchConfig::default();
+        assert!(!d.checkpoint.enabled());
+        assert!(!d.fault.enabled());
+        assert_eq!(d.checkpoint.retain, 2);
+        assert_eq!(d.checkpoint_dir(), "runs/checkpoints");
+    }
+
+    #[test]
+    fn fault_plan_bounds_are_validated() {
+        // kill_task beyond the task-slot range.
+        let y = "
+engine:
+  parallelism: 2
+checkpoint:
+  interval: 1s
+fault:
+  kill_task: 2
+  kill_after: 1s
+";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("kill_task"), "{e}");
+        assert!(e.0.contains("parallelism"), "{e}");
+        // restore without checkpointing enabled.
+        let y = "fault:\n  kill_after: 1s\n";
+        let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+        assert!(e.0.contains("checkpoint.interval"), "{e}");
+        // ...but an explicit cold restart is fine.
+        let y = "fault:\n  kill_after: 1s\n  restore: false\n";
+        BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn wall_mode_staged_checkpointing_rejected_readably() {
+        let staged = "
+checkpoint:
+  interval: 1s
+engine:
+  pipeline:
+    ops:
+      - keyby:
+          modulo: 16
+      - window:
+          agg: sum
+          window: 1s
+          slide: 500ms
+      - emit: aggregates
+";
+        let e = BenchConfig::from_json(&yaml::parse(staged).unwrap()).unwrap_err();
+        assert!(e.0.contains("lockstep"), "{e}");
+        assert!(e.0.contains("flat"), "{e}");
+        // Sim mode prices the same config instead of running it.
+        let sim = format!("benchmark:\n  mode: sim\n{staged}");
+        BenchConfig::from_json(&yaml::parse(&sim).unwrap()).unwrap();
+        // Disabling the exchange keeps the chain flat (task-local keyby).
+        let mut cfg = BenchConfig::default();
+        cfg.checkpoint.interval_micros = 1_000_000;
+        cfg.engine.exchange = ExchangeMode::None;
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::KeyBy {
+                    modulo: 16,
+                    parallelism: 0,
+                },
+                OpSpec::window(AggKind::Sum, 1_000_000, 500_000),
+                OpSpec::EmitAggregates,
+            ],
+        });
+        cfg.validate().unwrap();
+        // A flat chain checkpoints in wall mode without complaint.
+        let mut cfg = BenchConfig::default();
+        cfg.checkpoint.interval_micros = 1_000_000;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -13,20 +13,44 @@
 
 pub mod simrun;
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::broker::{Broker, BrokerConfig};
+use crate::broker::{Broker, BrokerConfig, Topic};
 use crate::config::BenchConfig;
-use crate::engine::Engine;
+use crate::engine::{CheckpointCoordinator, CheckpointStore, Engine, RunHooks};
 use crate::jvm::JmxSampler;
 use crate::metrics::{LatencyRecorder, MeasurementPoint, MetricStore, ThroughputRecorder};
+use crate::pipelines::StepFactory;
 use crate::runtime::RuntimeFactory;
 use crate::sysmon::{ActivityModel, NodeSpec, SysmonSampler};
 use crate::util::clock::{self, ClockRef};
 use crate::util::histogram::{Histogram, HistogramSummary};
 use crate::util::json::Json;
-use crate::wgen::{Fleet, GeneratorConfig, Pattern};
+use crate::wgen::{Fleet, FleetReport, GeneratorConfig, Pattern};
+
+/// What a kill-and-restore run ([`run_recovery`]) measured, reported in
+/// the results document as the `recovery` block.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Kill switch flip → every restarted task ready to consume, µs.
+    pub recovery_time_micros: u64,
+    /// Records the killed incarnation had ingested beyond the restore
+    /// point — re-read and re-processed by the restarted incarnation.
+    pub replayed_records: u64,
+    /// Epoch of the checkpoint restored from (0 on a cold start).
+    pub restored_epoch: u64,
+    /// True when no valid checkpoint survived (or `fault.restore` was
+    /// off) and the engine restarted from scratch.
+    pub cold_start: bool,
+    /// Corrupt or truncated checkpoint files the latest-scan skipped.
+    pub corrupt_skipped: u64,
+    /// Committed checkpoint files across both incarnations.
+    pub checkpoints: u64,
+    pub checkpoint_bytes: u64,
+    /// Wall time spent assembling + writing committed checkpoints, µs.
+    pub checkpoint_write_micros: u64,
+}
 
 /// Everything one experiment run produced.
 #[derive(Clone, Debug)]
@@ -55,6 +79,8 @@ pub struct RunSummary {
     /// Per-operator stats merged across engine tasks, in chain order
     /// (empty for sim runs — the analytic model has no per-op counters).
     pub operators: Vec<(String, crate::pipelines::StepStats)>,
+    /// Kill-and-restore measurements; `None` for fault-free runs.
+    pub recovery: Option<RecoveryStats>,
 }
 
 impl RunSummary {
@@ -107,6 +133,18 @@ impl RunSummary {
         j.set("elapsed_us", Json::Int(self.elapsed_micros as i64));
         j.set("parse_failures", Json::Int(self.parse_failures as i64));
         j.set("batches", Json::Int(self.batches as i64));
+        if let Some(r) = &self.recovery {
+            let mut rec = Json::obj();
+            rec.set("recovery_time_us", Json::Int(r.recovery_time_micros as i64));
+            rec.set("replayed_records", Json::Int(r.replayed_records as i64));
+            rec.set("restored_epoch", Json::Int(r.restored_epoch as i64));
+            rec.set("cold_start", Json::Bool(r.cold_start));
+            rec.set("corrupt_skipped", Json::Int(r.corrupt_skipped as i64));
+            rec.set("checkpoints", Json::Int(r.checkpoints as i64));
+            rec.set("checkpoint_bytes", Json::Int(r.checkpoint_bytes as i64));
+            rec.set("checkpoint_write_us", Json::Int(r.checkpoint_write_micros as i64));
+            j.set("recovery", rec);
+        }
         // Per-operator breakdown, chain order preserved (array, not map).
         let ops: Vec<Json> = self
             .operators
@@ -122,212 +160,502 @@ impl RunSummary {
     }
 }
 
+/// The shared wall-mode scaffold behind [`run_wall`] and
+/// [`run_recovery`]: broker + topics, egestion drainer, engine (heaps
+/// JMX-registered), interval sampler, and the generator fleet.  The
+/// fleet waits for `engine_ready` before offering load and closes the
+/// input topic when its run span elapses — which is what eventually
+/// makes the engine phase(s) drain and return.
+struct WallHarness {
+    clk: ClockRef,
+    store: Arc<MetricStore>,
+    latency: Arc<LatencyRecorder>,
+    broker: Arc<Broker>,
+    in_topic: Arc<Topic>,
+    out_topic: Arc<Topic>,
+    engine: Engine,
+    stop: Arc<AtomicBool>,
+    engine_ready: Arc<AtomicU32>,
+    drainer: std::thread::JoinHandle<u64>,
+    sampler_stop: Arc<AtomicBool>,
+    sampler: std::thread::JoinHandle<(JmxSampler, SysmonSampler, Histogram, Histogram)>,
+    fleet: std::thread::JoinHandle<FleetReport>,
+}
+
+/// Everything [`WallHarness::finish`] collects after the engine phase(s).
+struct WallTeardown {
+    fleet: FleetReport,
+    drained: u64,
+    latency: Vec<(MeasurementPoint, HistogramSummary)>,
+    gc_young_count: u64,
+    gc_young_time_micros: u64,
+    energy_joules: f64,
+}
+
+impl WallHarness {
+    /// Engine deadline: the configured run span plus generous slack for
+    /// pipeline compilation and final drain.
+    fn engine_deadline(cfg: &BenchConfig) -> u64 {
+        cfg.bench.duration_micros + cfg.bench.warmup_micros + 30_000_000
+    }
+
+    fn start(cfg: &BenchConfig) -> WallHarness {
+        let clk: ClockRef = clock::wall();
+        let store = Arc::new(MetricStore::new());
+        let throughput = Arc::new(ThroughputRecorder::new());
+        let latency = Arc::new(LatencyRecorder::new());
+
+        let broker = Broker::new(BrokerConfig::from_section(&cfg.broker), clk.clone());
+        let in_topic = broker.create_topic("ingest");
+        let out_topic = broker.create_topic("egest");
+
+        // Egestion drainer: the downstream consumer of processed results.
+        let drain_group = broker.subscribe("egest", "downstream", 1);
+        let drainer = {
+            let g = drain_group;
+            std::thread::Builder::new()
+                .name("egest-drain".into())
+                .spawn(move || {
+                    let mut n = 0u64;
+                    loop {
+                        match g.poll(0, 4096) {
+                            Ok(Some(b)) => {
+                                n += b.record_count() as u64;
+                                g.commit(b.partition, b.next_offset);
+                            }
+                            Ok(None) => std::thread::sleep(std::time::Duration::from_micros(500)),
+                            Err(_) => return n,
+                        }
+                    }
+                })
+                .expect("spawn drainer")
+        };
+
+        // Engine first: its heaps register with JMX before sampling starts.
+        let engine = Engine::new(cfg, clk.clone(), throughput.clone(), latency.clone());
+        let mut jmx = JmxSampler::new(clk.clone(), store.clone());
+        for (i, h) in engine.heaps.iter().enumerate() {
+            jmx.register(&format!("engine-task-{i}"), h.clone());
+        }
+        let mut sysmon = SysmonSampler::new(
+            clk.clone(),
+            store.clone(),
+            throughput.clone(),
+            NodeSpec::default(),
+            ActivityModel::default(),
+        );
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let sampler_stop = Arc::new(AtomicBool::new(false));
+
+        // Interval sampler: throughput rates + per-interval latency timeline
+        // (the Fig. 8 series) + JMX + sysmon.  ProcOut/EndToEnd histograms are
+        // drained per interval for the timeline and merged into cumulative
+        // copies for the whole-run summary.
+        let sampler = {
+            let clk = clk.clone();
+            let store = store.clone();
+            let tp = throughput.clone();
+            let lat = latency.clone();
+            let stop = sampler_stop.clone();
+            let interval = cfg.metrics.sample_interval_micros.max(10_000);
+            std::thread::Builder::new()
+                .name("metrics-sampler".into())
+                .spawn(move || {
+                    let mut prev = tp.snapshot();
+                    let mut prev_t = clk.now_micros();
+                    let mut cum_proc = Histogram::new();
+                    let mut cum_e2e = Histogram::new();
+                    loop {
+                        let stopping = stop.load(Ordering::Relaxed);
+                        if !stopping {
+                            clk.sleep_micros(interval);
+                        }
+                        let now = clk.now_micros();
+                        let snap = tp.snapshot();
+                        let dt = now.saturating_sub(prev_t).max(1);
+                        for p in MeasurementPoint::ALL {
+                            store.append(
+                                &format!("throughput.{}.eps", p.name()),
+                                now,
+                                snap.rate_events(&prev, p, dt),
+                            );
+                            store.append(
+                                &format!("throughput.{}.bps", p.name()),
+                                now,
+                                snap.rate_bytes(&prev, p, dt),
+                            );
+                        }
+                        for (p, cum) in [
+                            (MeasurementPoint::ProcOut, &mut cum_proc),
+                            (MeasurementPoint::EndToEnd, &mut cum_e2e),
+                        ] {
+                            let h = lat.drain(p);
+                            if !h.is_empty() {
+                                store.append(&format!("latency.{}.p50_us", p.name()), now, h.p50() as f64);
+                                store.append(&format!("latency.{}.p99_us", p.name()), now, h.p99() as f64);
+                                store.append(&format!("latency.{}.mean_us", p.name()), now, h.mean());
+                                cum.merge(&h);
+                            }
+                        }
+                        jmx.sample();
+                        sysmon.sample();
+                        prev = snap;
+                        prev_t = now;
+                        if stopping {
+                            return (jmx, sysmon, cum_proc, cum_e2e);
+                        }
+                    }
+                })
+                .expect("spawn sampler")
+        };
+
+        // Fleet in the background; it waits for every engine task to finish
+        // building its pipeline step (PJRT compile) before offering load, so
+        // compile time never masquerades as queueing latency.  Closes the
+        // input topic when done.
+        let engine_ready = Arc::new(AtomicU32::new(0));
+        let fleet = {
+            let broker2 = broker.clone();
+            let in_topic2 = in_topic.clone();
+            let clk2 = clk.clone();
+            let tp = throughput.clone();
+            let lat = latency.clone();
+            let stop2 = stop.clone();
+            let gen_cfg = GeneratorConfig::from_config(cfg);
+            let workload = cfg.workload.clone();
+            let duration = cfg.bench.duration_micros + cfg.bench.warmup_micros;
+            let ready = engine_ready.clone();
+            let parallelism = cfg.engine.parallelism;
+            std::thread::Builder::new()
+                .name("fleet-main".into())
+                .spawn(move || {
+                    let wait_start = std::time::Instant::now();
+                    while ready.load(Ordering::SeqCst) < parallelism
+                        && wait_start.elapsed().as_secs() < 60
+                        && !stop2.load(Ordering::Relaxed)
+                    {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    let fleet = Fleet::new(gen_cfg, clk2, tp, lat);
+                    let report = fleet.run(&broker2, &in_topic2, duration, &stop2, |share| {
+                        Pattern::from_config(&workload, share)
+                    });
+                    in_topic2.close();
+                    report
+                })
+                .expect("spawn fleet")
+        };
+
+        WallHarness {
+            clk,
+            store,
+            latency,
+            broker,
+            in_topic,
+            out_topic,
+            engine,
+            stop,
+            engine_ready,
+            drainer,
+            sampler_stop,
+            sampler,
+            fleet,
+        }
+    }
+
+    /// Join the fleet, stop the sampler, shut the broker down, join the
+    /// drainer (in that order), and fold the cumulative latency copies
+    /// back into the whole-run summaries.
+    fn finish(self) -> Result<WallTeardown, String> {
+        let fleet = self.fleet.join().map_err(|_| "fleet panicked")?;
+        self.sampler_stop.store(true, Ordering::SeqCst);
+        let (jmx, sysmon, cum_proc, cum_e2e) =
+            self.sampler.join().map_err(|_| "sampler panicked")?;
+        self.broker.shutdown();
+        let drained = self.drainer.join().map_err(|_| "drainer panicked")?;
+
+        // Whole-run latency summaries: cumulative copies for the drained
+        // points, live recorder for the rest.
+        let latency: Vec<(MeasurementPoint, HistogramSummary)> = MeasurementPoint::ALL
+            .iter()
+            .map(|&p| {
+                let mut h = self.latency.merged(p);
+                match p {
+                    MeasurementPoint::ProcOut => h.merge(&cum_proc),
+                    MeasurementPoint::EndToEnd => h.merge(&cum_e2e),
+                    _ => {}
+                }
+                (p, h.summary())
+            })
+            .collect();
+
+        let (gc_young_count, gc_young_time_micros) = jmx.aggregate_young();
+        Ok(WallTeardown {
+            fleet,
+            drained,
+            latency,
+            gc_young_count,
+            gc_young_time_micros,
+            energy_joules: sysmon.joules_total(),
+        })
+    }
+}
+
 /// Run one experiment in wall mode. Returns the summary and the metric
 /// store (the timeline series behind the Fig. 8-style plots).
 pub fn run_wall(
     cfg: &BenchConfig,
     runtime_factory: Option<RuntimeFactory>,
 ) -> Result<(RunSummary, Arc<MetricStore>), String> {
-    let clk: ClockRef = clock::wall();
-    let store = Arc::new(MetricStore::new());
-    let throughput = Arc::new(ThroughputRecorder::new());
-    let latency = Arc::new(LatencyRecorder::new());
-
-    let broker = Broker::new(BrokerConfig::from_section(&cfg.broker), clk.clone());
-    let in_topic = broker.create_topic("ingest");
-    let out_topic = broker.create_topic("egest");
-
-    // Egestion drainer: the downstream consumer of processed results.
-    let drain_group = broker.subscribe("egest", "downstream", 1);
-    let drainer = {
-        let g = drain_group;
-        std::thread::Builder::new()
-            .name("egest-drain".into())
-            .spawn(move || {
-                let mut n = 0u64;
-                loop {
-                    match g.poll(0, 4096) {
-                        Ok(Some(b)) => {
-                            n += b.record_count() as u64;
-                            g.commit(b.partition, b.next_offset);
-                        }
-                        Ok(None) => std::thread::sleep(std::time::Duration::from_micros(500)),
-                        Err(_) => return n,
-                    }
-                }
-            })
-            .expect("spawn drainer")
-    };
-
-    // Engine first: its heaps register with JMX before sampling starts.
-    let engine = Engine::new(cfg, clk.clone(), throughput.clone(), latency.clone());
-    let mut jmx = JmxSampler::new(clk.clone(), store.clone());
-    for (i, h) in engine.heaps.iter().enumerate() {
-        jmx.register(&format!("engine-task-{i}"), h.clone());
-    }
-    let mut sysmon = SysmonSampler::new(
-        clk.clone(),
-        store.clone(),
-        throughput.clone(),
-        NodeSpec::default(),
-        ActivityModel::default(),
-    );
-
-    let stop = Arc::new(AtomicBool::new(false));
-    let sampler_stop = Arc::new(AtomicBool::new(false));
-
-    // Interval sampler: throughput rates + per-interval latency timeline
-    // (the Fig. 8 series) + JMX + sysmon.  ProcOut/EndToEnd histograms are
-    // drained per interval for the timeline and merged into cumulative
-    // copies for the whole-run summary.
-    let sampler = {
-        let clk = clk.clone();
-        let store = store.clone();
-        let tp = throughput.clone();
-        let lat = latency.clone();
-        let stop = sampler_stop.clone();
-        let interval = cfg.metrics.sample_interval_micros.max(10_000);
-        std::thread::Builder::new()
-            .name("metrics-sampler".into())
-            .spawn(move || {
-                let mut prev = tp.snapshot();
-                let mut prev_t = clk.now_micros();
-                let mut cum_proc = Histogram::new();
-                let mut cum_e2e = Histogram::new();
-                loop {
-                    let stopping = stop.load(Ordering::Relaxed);
-                    if !stopping {
-                        clk.sleep_micros(interval);
-                    }
-                    let now = clk.now_micros();
-                    let snap = tp.snapshot();
-                    let dt = now.saturating_sub(prev_t).max(1);
-                    for p in MeasurementPoint::ALL {
-                        store.append(
-                            &format!("throughput.{}.eps", p.name()),
-                            now,
-                            snap.rate_events(&prev, p, dt),
-                        );
-                        store.append(
-                            &format!("throughput.{}.bps", p.name()),
-                            now,
-                            snap.rate_bytes(&prev, p, dt),
-                        );
-                    }
-                    for (p, cum) in [
-                        (MeasurementPoint::ProcOut, &mut cum_proc),
-                        (MeasurementPoint::EndToEnd, &mut cum_e2e),
-                    ] {
-                        let h = lat.drain(p);
-                        if !h.is_empty() {
-                            store.append(&format!("latency.{}.p50_us", p.name()), now, h.p50() as f64);
-                            store.append(&format!("latency.{}.p99_us", p.name()), now, h.p99() as f64);
-                            store.append(&format!("latency.{}.mean_us", p.name()), now, h.mean());
-                            cum.merge(&h);
-                        }
-                    }
-                    jmx.sample();
-                    sysmon.sample();
-                    prev = snap;
-                    prev_t = now;
-                    if stopping {
-                        return (jmx, sysmon, cum_proc, cum_e2e);
-                    }
-                }
-            })
-            .expect("spawn sampler")
-    };
-
-    // Fleet in the background; it waits for every engine task to finish
-    // building its pipeline step (PJRT compile) before offering load, so
-    // compile time never masquerades as queueing latency.  Closes the
-    // input topic when done.
-    let engine_ready = Arc::new(std::sync::atomic::AtomicU32::new(0));
-    let fleet_handle = {
-        let broker2 = broker.clone();
-        let in_topic2 = in_topic.clone();
-        let clk2 = clk.clone();
-        let tp = throughput.clone();
-        let lat = latency.clone();
-        let stop2 = stop.clone();
-        let gen_cfg = GeneratorConfig::from_config(cfg);
-        let workload = cfg.workload.clone();
-        let duration = cfg.bench.duration_micros + cfg.bench.warmup_micros;
-        let ready = engine_ready.clone();
-        let parallelism = cfg.engine.parallelism;
-        std::thread::Builder::new()
-            .name("fleet-main".into())
-            .spawn(move || {
-                let wait_start = std::time::Instant::now();
-                while ready.load(Ordering::SeqCst) < parallelism
-                    && wait_start.elapsed().as_secs() < 60
-                    && !stop2.load(Ordering::Relaxed)
-                {
-                    std::thread::sleep(std::time::Duration::from_millis(2));
-                }
-                let fleet = Fleet::new(gen_cfg, clk2, tp, lat);
-                let report = fleet.run(&broker2, &in_topic2, duration, &stop2, |share| {
-                    Pattern::from_config(&workload, share)
-                });
-                in_topic2.close();
-                report
-            })
-            .expect("spawn fleet")
-    };
+    let h = WallHarness::start(cfg);
 
     // Engine runs on this thread; exits when the input closes and drains.
-    let engine_report = engine.run(
-        &broker,
+    let engine_report = h.engine.run(
+        &h.broker,
         "ingest",
-        &out_topic,
-        &stop,
-        cfg.bench.duration_micros + cfg.bench.warmup_micros + 30_000_000,
+        &h.out_topic,
+        &h.stop,
+        WallHarness::engine_deadline(cfg),
         runtime_factory,
-        Some(engine_ready),
+        Some(h.engine_ready.clone()),
     )?;
-    let fleet_report = fleet_handle.join().map_err(|_| "fleet panicked")?;
 
-    // Shut down sampler, broker, drainer (in that order).
-    sampler_stop.store(true, Ordering::SeqCst);
-    let (jmx, sysmon, cum_proc, cum_e2e) = sampler.join().map_err(|_| "sampler panicked")?;
-    broker.shutdown();
-    let drained = drainer.join().map_err(|_| "drainer panicked")?;
-
-    // Whole-run latency summaries: cumulative copies for the drained
-    // points, live recorder for the rest.
-    let latency_summaries: Vec<(MeasurementPoint, HistogramSummary)> = MeasurementPoint::ALL
-        .iter()
-        .map(|&p| {
-            let mut h = latency.merged(p);
-            match p {
-                MeasurementPoint::ProcOut => h.merge(&cum_proc),
-                MeasurementPoint::EndToEnd => h.merge(&cum_e2e),
-                _ => {}
-            }
-            (p, h.summary())
-        })
-        .collect();
-
-    let (gc_count, gc_time) = jmx.aggregate_young();
+    let store = h.store.clone();
+    let t = h.finish()?;
     let summary = RunSummary {
         name: cfg.bench.name.clone(),
         pipeline: cfg.engine.pipeline_label(),
         framework: cfg.engine.framework.name(),
         parallelism: cfg.engine.parallelism,
-        generated: fleet_report.events,
+        generated: t.fleet.events,
         processed: engine_report.events_in,
-        emitted: drained,
-        elapsed_micros: fleet_report.elapsed_micros,
-        offered_rate: fleet_report.rate_events,
+        emitted: t.drained,
+        elapsed_micros: t.fleet.elapsed_micros,
+        offered_rate: t.fleet.rate_events,
         processed_rate: engine_report.rate_events,
-        offered_bytes_rate: fleet_report.rate_bytes,
-        latency: latency_summaries,
-        gc_young_count: gc_count,
-        gc_young_time_micros: gc_time,
-        energy_joules: sysmon.joules_total(),
+        offered_bytes_rate: t.fleet.rate_bytes,
+        latency: t.latency,
+        gc_young_count: t.gc_young_count,
+        gc_young_time_micros: t.gc_young_time_micros,
+        energy_joules: t.energy_joules,
         parse_failures: engine_report.parse_failures,
         batches: engine_report.batches,
         operators: engine_report.operators.clone(),
+        recovery: None,
+    };
+    Ok((summary, store))
+}
+
+/// Run one experiment in wall mode under the configured fault plan
+/// (`fault.kill_after`): checkpointing is armed, the engine incarnation
+/// is killed mid-run, and a second incarnation restarts from the newest
+/// valid checkpoint — or cold when none survives or `fault.restore` is
+/// off.  The generator fleet keeps offering load across the outage, so
+/// the backlog that accumulates while the engine is down is replayed and
+/// drained by the restarted incarnation.
+///
+/// The summary merges both incarnations: `processed` counts distinct
+/// records (replays subtracted), and the `recovery` block reports
+/// recovery time (kill → every restarted task ready), replay volume and
+/// checkpoint cost.  `emitted` stays the raw egestion count, which can
+/// exceed a fault-free run's — records processed between the last
+/// durable snapshot and the kill are emitted twice (at-least-once
+/// egestion; exactly-once applies to state, not to the output topic).
+pub fn run_recovery(
+    cfg: &BenchConfig,
+    runtime_factory: Option<RuntimeFactory>,
+) -> Result<(RunSummary, Arc<MetricStore>), String> {
+    if !cfg.fault.enabled() {
+        return run_wall(cfg, runtime_factory);
+    }
+    let h = WallHarness::start(cfg);
+    let clk = h.clk.clone();
+    let parallelism = cfg.engine.parallelism;
+    let factory = Arc::new(StepFactory::new(cfg, runtime_factory));
+    let deadline = WallHarness::engine_deadline(cfg);
+    let ckpt_dir = cfg.checkpoint_dir();
+    let retain = cfg.checkpoint.retain;
+
+    // Phase 1: checkpointing armed, kill watchdog ticking.  The watchdog
+    // arms itself only once every task is ready to consume (so a slow
+    // pipeline compile cannot eat the fault window), then flips the crash
+    // switch `fault.kill_after` later and records when it fired.
+    let epoch_origin = clk.now_micros();
+    let coord1 = cfg.checkpoint.enabled().then(|| {
+        Arc::new(CheckpointCoordinator::new(
+            CheckpointStore::new(ckpt_dir.as_str(), retain),
+            parallelism as usize,
+            cfg.checkpoint.interval_micros,
+            epoch_origin,
+        ))
+    });
+    let kill = Arc::new(AtomicBool::new(false));
+    let killed_at = Arc::new(AtomicU64::new(0));
+    let phase1_done = Arc::new(AtomicBool::new(false));
+    let watchdog = {
+        let clk = clk.clone();
+        let kill = kill.clone();
+        let killed_at = killed_at.clone();
+        let done = phase1_done.clone();
+        let ready = h.engine_ready.clone();
+        let kill_after = cfg.fault.kill_after_micros;
+        std::thread::Builder::new()
+            .name("fault-watchdog".into())
+            .spawn(move || {
+                let mut armed_at = None;
+                loop {
+                    if done.load(Ordering::SeqCst) {
+                        return; // the run ended before the fault fired
+                    }
+                    let now = clk.now_micros();
+                    if armed_at.is_none() && ready.load(Ordering::SeqCst) >= parallelism {
+                        armed_at = Some(now);
+                    }
+                    if armed_at.is_some_and(|t0| now >= t0 + kill_after) {
+                        killed_at.store(now, Ordering::SeqCst);
+                        kill.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(500));
+                }
+            })
+            .expect("spawn fault watchdog")
+    };
+    let r1 = h.engine.run_with_hooks(
+        &h.broker,
+        "ingest",
+        &h.out_topic,
+        &h.stop,
+        deadline,
+        factory.clone(),
+        Some(h.engine_ready.clone()),
+        RunHooks {
+            checkpoint: coord1.clone(),
+            kill: Some(kill.clone()),
+            restore_from: None,
+        },
+    )?;
+    phase1_done.store(true, Ordering::SeqCst);
+    watchdog.join().map_err(|_| "fault watchdog panicked")?;
+
+    // Between incarnations: find the newest valid checkpoint.  Corrupt
+    // or truncated files are skipped (counted), and a missing checkpoint
+    // degrades to a cold start — the fresh consumer group then replays
+    // from the earliest retained offsets.
+    let scan = CheckpointStore::new(ckpt_dir.as_str(), retain).latest();
+    let corrupt_skipped = scan.skipped.len() as u64;
+    let restored = if cfg.fault.restore { scan.checkpoint } else { None };
+    let cold_start = restored.is_none();
+    let restored_epoch = restored.as_ref().map_or(0, |c| c.epoch);
+    // Replay volume: everything phase 1 ingested beyond the restore
+    // point gets re-read by the restarted incarnation.  On a cold start
+    // the restore point is the pruned prefix of the log (offsets below
+    // the low watermark are gone and cannot be replayed).
+    let durable_in = match &restored {
+        Some(c) => c.events_in(),
+        None => (0..h.in_topic.partition_count())
+            .map(|p| h.in_topic.partition(p).low_watermark())
+            .sum(),
+    };
+    let replayed = r1.events_in.saturating_sub(durable_in);
+
+    // Phase 2: restart with restore hooks.  The coordinator keeps phase
+    // 1's epoch origin so the restarted incarnation's checkpoint files
+    // continue the epoch numbering — never colliding with (or sorting
+    // older than) the ones already on disk.
+    let coord2 = coord1.as_ref().map(|_| {
+        Arc::new(CheckpointCoordinator::new(
+            CheckpointStore::new(ckpt_dir.as_str(), retain),
+            parallelism as usize,
+            cfg.checkpoint.interval_micros,
+            epoch_origin,
+        ))
+    });
+    let ready2 = Arc::new(AtomicU32::new(0));
+    let ready2_at = Arc::new(AtomicU64::new(0));
+    let monitor = {
+        let clk = clk.clone();
+        let ready2 = ready2.clone();
+        let ready2_at = ready2_at.clone();
+        let stop = h.stop.clone();
+        std::thread::Builder::new()
+            .name("recovery-monitor".into())
+            .spawn(move || {
+                let t0 = std::time::Instant::now();
+                while ready2.load(Ordering::SeqCst) < parallelism
+                    && t0.elapsed().as_secs() < 60
+                    && !stop.load(Ordering::Relaxed)
+                {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                ready2_at.store(clk.now_micros(), Ordering::SeqCst);
+            })
+            .expect("spawn recovery monitor")
+    };
+    let r2 = h.engine.run_with_hooks(
+        &h.broker,
+        "ingest",
+        &h.out_topic,
+        &h.stop,
+        deadline,
+        factory,
+        Some(ready2.clone()),
+        RunHooks {
+            checkpoint: coord2.clone(),
+            kill: None,
+            restore_from: restored.map(Arc::new),
+        },
+    )?;
+    monitor.join().map_err(|_| "recovery monitor panicked")?;
+    let killed_at = killed_at.load(Ordering::SeqCst);
+    let recovery_time_micros = if killed_at == 0 {
+        0 // the run ended before the fault fired; nothing was recovered
+    } else {
+        ready2_at.load(Ordering::SeqCst).saturating_sub(killed_at)
+    };
+
+    let cs1 = coord1.as_ref().map(|c| c.stats()).unwrap_or_default();
+    let cs2 = coord2.as_ref().map(|c| c.stats()).unwrap_or_default();
+    let recovery = RecoveryStats {
+        recovery_time_micros,
+        replayed_records: replayed,
+        restored_epoch,
+        cold_start,
+        corrupt_skipped,
+        checkpoints: cs1.committed + cs2.committed,
+        checkpoint_bytes: cs1.bytes + cs2.bytes,
+        checkpoint_write_micros: cs1.write_micros + cs2.write_micros,
+    };
+
+    let store = h.store.clone();
+    let t = h.finish()?;
+    // Distinct records processed: both incarnations' intake minus the
+    // replayed overlap.  Killed tasks lose their in-memory operator
+    // counters, so the per-operator breakdown is the restarted
+    // incarnation's (complete from the restore point onward).
+    let processed = (r1.events_in + r2.events_in).saturating_sub(replayed);
+    let elapsed = t.fleet.elapsed_micros.max(1);
+    let summary = RunSummary {
+        name: cfg.bench.name.clone(),
+        pipeline: cfg.engine.pipeline_label(),
+        framework: cfg.engine.framework.name(),
+        parallelism: cfg.engine.parallelism,
+        generated: t.fleet.events,
+        processed,
+        emitted: t.drained,
+        elapsed_micros: t.fleet.elapsed_micros,
+        offered_rate: t.fleet.rate_events,
+        processed_rate: processed as f64 * 1e6 / elapsed as f64,
+        offered_bytes_rate: t.fleet.rate_bytes,
+        latency: t.latency,
+        gc_young_count: t.gc_young_count,
+        gc_young_time_micros: t.gc_young_time_micros,
+        energy_joules: t.energy_joules,
+        parse_failures: r1.parse_failures + r2.parse_failures,
+        batches: r1.batches + r2.batches,
+        operators: r2.operators.clone(),
+        recovery: Some(recovery),
     };
     Ok((summary, store))
 }
@@ -379,6 +707,49 @@ mod tests {
         let ops = ops.get("operators").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(ops.len(), 2);
         assert_eq!(ops[0].get("op").and_then(|v| v.as_str()), Some("cpu_transform"));
+    }
+
+    #[test]
+    fn recovery_run_replays_and_conserves_distinct_records() {
+        let mut cfg = quick_cfg();
+        cfg.bench.name = "coord-recovery".into();
+        cfg.bench.duration_micros = 1_500_000;
+        cfg.checkpoint.interval_micros = 150_000;
+        cfg.checkpoint.dir = std::env::temp_dir()
+            .join(format!("sprobench-coord-recovery-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        cfg.fault.kill_after_micros = 500_000;
+        cfg.fault.kill_task = 1;
+        std::fs::remove_dir_all(&cfg.checkpoint.dir).ok();
+        let (summary, _) = run_recovery(&cfg, None).unwrap();
+        std::fs::remove_dir_all(&cfg.checkpoint.dir).ok();
+        let rec = summary.recovery.expect("fault run must report recovery");
+        assert!(rec.recovery_time_micros > 0, "kill→ready must take time");
+        assert!(!rec.cold_start, "checkpoints were enabled: {rec:?}");
+        assert!(rec.checkpoints > 0, "no checkpoint committed before kill");
+        assert!(rec.checkpoint_bytes > 0);
+        assert!(rec.replayed_records > 0, "kill mid-epoch must force replay");
+        assert_eq!(rec.corrupt_skipped, 0);
+        // Exactly-once accounting: replays are subtracted, so distinct
+        // processed records equal the offered load.
+        assert_eq!(summary.processed, summary.generated, "{rec:?}");
+        // At-least-once egestion: nothing the engine emitted is lost.
+        assert!(summary.emitted >= summary.processed);
+        let j = summary.to_json();
+        let rj = j.get("recovery").expect("recovery block in results.json");
+        assert!(rj.get("recovery_time_us").and_then(|v| v.as_i64()).unwrap() > 0);
+        assert_eq!(rj.get("cold_start").and_then(|v| v.as_bool()), Some(false));
+        let violations = validate_results(&j);
+        assert!(violations.is_empty(), "{violations:?}");
+    }
+
+    #[test]
+    fn recovery_without_fault_plan_is_a_plain_wall_run() {
+        let mut cfg = quick_cfg();
+        cfg.bench.duration_micros = 400_000;
+        let (summary, _) = run_recovery(&cfg, None).unwrap();
+        assert!(summary.recovery.is_none(), "no fault → no recovery block");
     }
 
     #[test]

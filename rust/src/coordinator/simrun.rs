@@ -37,6 +37,13 @@ pub struct SimModel {
     /// (route hash + channel handshake + drain), charged once per
     /// boundary when `engine.exchange: hash` stages the chain.
     pub exchange_per_event_micros: f64,
+    /// Per-task pause to snapshot operator state and submit one aligned
+    /// checkpoint epoch, µs.  With `checkpoint.interval` set, capacity
+    /// derates by the pause's duty cycle (`1 - pause/interval`).
+    pub checkpoint_pause_micros: f64,
+    /// Job teardown + respawn + checkpoint read on a kill-and-restore,
+    /// µs (the replay time is added on top from the modeled backlog).
+    pub restart_micros: f64,
     /// JVM allocation per processed event, bytes.
     pub alloc_per_event: f64,
     /// Young-generation size per task, bytes.
@@ -66,6 +73,8 @@ impl Default for SimModel {
             base_latency_micros: 900.0,
             per_task_dispatch_micros: 110.0,
             exchange_per_event_micros: 0.18,
+            checkpoint_pause_micros: 450.0,
+            restart_micros: 250_000.0,
             alloc_per_event: 220.0,
             young_bytes: 64.0 * (1 << 20) as f64,
             young_pause_micros: 2_300.0,
@@ -150,7 +159,15 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
     // Effective engine capacity scales sub-linearly at high parallelism:
     // coordination cost shaves (the Fig. 7 plateau).
     let scaling_eff = 1.0 / (1.0 + 0.04 * (par - 1.0));
-    let engine_cap = par * model.task_rate_for(cfg) * scaling_eff;
+    // Aligned checkpoints steal a snapshot pause from every task once per
+    // epoch; capacity derates by the pause's duty cycle (bounded so a
+    // pathological interval cannot zero the engine out).
+    let ckpt_eff = if cfg.checkpoint.enabled() {
+        1.0 - (model.checkpoint_pause_micros / cfg.checkpoint.interval_micros as f64).min(0.5)
+    } else {
+        1.0
+    };
+    let engine_cap = par * model.task_rate_for(cfg) * scaling_eff * ckpt_eff;
 
     let processed_rate = offered.min(broker_cap).min(engine_cap);
     let rho_engine = (processed_rate / engine_cap).min(0.999);
@@ -209,6 +226,42 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
             _ => processed,
         },
     };
+
+    // Fault plan: model the kill-and-restore analytically.  The kill
+    // lands mid-epoch, so on average half an interval of intake is
+    // replayed; recovery is the restart pause plus working that backlog
+    // off at full capacity.  (`processed` stays the distinct-record
+    // count, matching wall-mode recovery accounting.)
+    let recovery = cfg.fault.enabled().then(|| {
+        let warm = cfg.checkpoint.enabled() && cfg.fault.restore;
+        let interval = cfg.checkpoint.interval_micros;
+        let replayed = if cfg.checkpoint.enabled() {
+            (processed_rate * interval as f64 / 2e6) as u64
+        } else {
+            // Eager per-batch commits: only the in-flight batches replay.
+            (par * cfg.engine.batch_size as f64) as u64
+        };
+        let replay_micros = replayed as f64 / engine_cap.max(1.0) * 1e6;
+        let epochs = if interval > 0 {
+            (cfg.fault.kill_after_micros / interval).max(1)
+        } else {
+            0
+        };
+        // Snapshot payload ~ a few hundred bytes of offsets/counters per
+        // task plus window pane state for keyed pipelines.
+        let bytes_per = 220 * cfg.engine.parallelism as u64
+            + 24 * cfg.workload.sensors.min(1024) as u64;
+        super::RecoveryStats {
+            recovery_time_micros: (model.restart_micros + replay_micros) as u64,
+            replayed_records: replayed,
+            restored_epoch: if warm { epochs } else { 0 },
+            cold_start: !warm,
+            corrupt_skipped: 0,
+            checkpoints: epochs,
+            checkpoint_bytes: epochs * bytes_per,
+            checkpoint_write_micros: epochs * model.checkpoint_pause_micros as u64,
+        }
+    });
 
     // GC model forward run.
     let alloc_rate = processed_rate * model.alloc_per_event;
@@ -293,6 +346,7 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
         // The analytic model carries no per-operator counters.
         operators: Vec::new(),
         batches: processed / cfg.engine.batch_size.max(1) as u64,
+        recovery,
     };
     (summary, store)
 }
@@ -484,6 +538,56 @@ mod tests {
             run_sim(&c, &m).0.processed_rate
         };
         assert_eq!(flat(ExchangeMode::Hash), flat(ExchangeMode::None));
+    }
+
+    #[test]
+    fn checkpointing_is_priced_as_a_capacity_derate() {
+        let m = SimModel::default();
+        // Saturate the engine so the derate shows up in processed_rate.
+        let base = cfg(50_000_000, 8);
+        let mut ckpt = cfg(50_000_000, 8);
+        ckpt.checkpoint.interval_micros = 10_000; // 4.5% duty cycle
+        let (s0, _) = run_sim(&base, &m);
+        let (s1, _) = run_sim(&ckpt, &m);
+        assert!(
+            s1.processed_rate < s0.processed_rate,
+            "snapshot pauses must cost capacity: {} !< {}",
+            s1.processed_rate,
+            s0.processed_rate
+        );
+        // A pause every 10ms shaves percent, not halves.
+        assert!(s1.processed_rate > s0.processed_rate * 0.90);
+        // Fault-free checkpointed runs carry no recovery block.
+        assert!(s1.recovery.is_none());
+    }
+
+    #[test]
+    fn fault_plan_yields_a_consistent_recovery_block() {
+        let m = SimModel::default();
+        let mut c = cfg(1_000_000, 8);
+        c.checkpoint.interval_micros = 500_000;
+        c.fault.kill_after_micros = 2_000_000;
+        let (s, _) = run_sim(&c, &m);
+        let rec = s.recovery.expect("fault plan must produce recovery");
+        assert!(!rec.cold_start);
+        assert!(rec.restored_epoch >= 1);
+        assert!(rec.checkpoints >= 1);
+        assert!(rec.replayed_records > 0, "mid-epoch kill replays");
+        assert!(
+            rec.recovery_time_micros > m.restart_micros as u64,
+            "recovery = restart + replay"
+        );
+        let v = validate_results(&s.to_json());
+        assert!(v.is_empty(), "{v:?}");
+        // restore off → cold start, still self-consistent.
+        let mut cold = c.clone();
+        cold.fault.restore = false;
+        let (sc, _) = run_sim(&cold, &m);
+        let rc = sc.recovery.unwrap();
+        assert!(rc.cold_start);
+        assert_eq!(rc.restored_epoch, 0);
+        let v = validate_results(&sc.to_json());
+        assert!(v.is_empty(), "{v:?}");
     }
 
     #[test]

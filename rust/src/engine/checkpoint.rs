@@ -1,0 +1,640 @@
+//! Aligned checkpointing: versioned, CRC-validated snapshot files plus
+//! the coordinator that assembles per-task state parts into one atomic
+//! checkpoint per epoch.
+//!
+//! The fault-recovery dimension Karimov et al. treat as first-class
+//! ("Benchmarking Distributed Stream Data Processing Systems") needs
+//! state that survives a kill: consumer-group offsets, window panes,
+//! watermark positions, exchange frontiers.  The protocol here is the
+//! aligned/epoch-based family (Chandy–Lamport as used by Flink), adapted
+//! to this engine's structure:
+//!
+//! * **Epochs** — `checkpoint.interval` divides the run into numbered
+//!   epochs; every task snapshots its operator state and read offsets
+//!   the first time it crosses an epoch boundary, at a batch boundary
+//!   (never mid-batch), so a task part always describes a prefix of its
+//!   input stream.
+//! * **Alignment** — a checkpoint *commits* only when all `parallelism`
+//!   task parts for the epoch have arrived; staged (exchange-connected)
+//!   pipelines snapshot at drained-fabric quiesce points, where the
+//!   boundary frontiers fully describe the in-flight state (see
+//!   `LockstepExchange::snapshot`).
+//! * **Atomicity** — the file is written to a `.tmp` sibling and
+//!   renamed into place; a kill mid-write can never leave a partial
+//!   file observable as "latest".
+//! * **Validation** — every file carries a magic string, a format
+//!   version and a CRC32 over the serialized body; truncated or
+//!   bit-flipped files are rejected with a readable error and skipped
+//!   by the latest-checkpoint scan (degrading to an older epoch, or to
+//!   a cold start).
+//! * **Exactly-once offsets** — tasks commit consumer offsets to the
+//!   broker group only for epochs whose checkpoint file has committed,
+//!   so log pruning (min committed across groups) always retains every
+//!   record a restore could need to replay.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::{parse, Json};
+
+/// File-format magic; the first field of every checkpoint document.
+pub const CHECKPOINT_MAGIC: &str = "sprobench-checkpoint";
+/// Current checkpoint format version.  Bumped on layout changes; loads
+/// of other versions fail with a readable error instead of guessing.
+pub const CHECKPOINT_VERSION: i64 = 1;
+
+// --- CRC32 (IEEE 802.3, the zlib polynomial) ---------------------------------
+
+/// CRC32 over `data` (IEEE polynomial, bitwise — checkpoint bodies are
+/// small enough that a table buys nothing worth the 1 KiB).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// --- checkpoint store --------------------------------------------------------
+
+/// One task's contribution to a checkpoint epoch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskPart {
+    /// Next read offset per owned partition: `(partition, offset)`.
+    pub offsets: Vec<(u32, u64)>,
+    /// Events this task had ingested when the snapshot was taken — the
+    /// baseline for computing replayed records after a kill.
+    pub events_in: u64,
+    /// Serialized operator state (`Chain::snapshot_ops` /
+    /// `PipelineStep::snapshot`).
+    pub state: Json,
+}
+
+impl TaskPart {
+    fn to_json(&self) -> Json {
+        let mut offs = Vec::with_capacity(self.offsets.len());
+        for &(p, o) in &self.offsets {
+            offs.push(Json::Arr(vec![Json::Int(p as i64), Json::Int(o as i64)]));
+        }
+        let mut j = Json::obj();
+        j.set("offsets", Json::Arr(offs))
+            .set("events_in", Json::Int(self.events_in as i64))
+            .set("state", self.state.clone());
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<TaskPart, String> {
+        let offs = j
+            .get("offsets")
+            .and_then(|v| v.as_arr())
+            .ok_or("task part: missing `offsets` array")?;
+        let mut offsets = Vec::with_capacity(offs.len());
+        for o in offs {
+            let pair = o.as_arr().ok_or("task part: offset entry is not a pair")?;
+            match (pair.first().and_then(|v| v.as_i64()), pair.get(1).and_then(|v| v.as_i64())) {
+                (Some(p), Some(off)) if p >= 0 && off >= 0 => {
+                    offsets.push((p as u32, off as u64));
+                }
+                _ => return Err("task part: offset pair is not two non-negative ints".into()),
+            }
+        }
+        let events_in = j
+            .get("events_in")
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0)
+            .max(0) as u64;
+        let state = j.get("state").cloned().unwrap_or(Json::Null);
+        Ok(TaskPart {
+            offsets,
+            events_in,
+            state,
+        })
+    }
+}
+
+/// A fully-loaded, validated checkpoint.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub epoch: u64,
+    /// One part per task, indexed by task id.
+    pub tasks: Vec<TaskPart>,
+}
+
+impl Checkpoint {
+    /// Total events the checkpointed state covers (sum over tasks).
+    pub fn events_in(&self) -> u64 {
+        self.tasks.iter().map(|t| t.events_in).sum()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("epoch", Json::Int(self.epoch as i64)).set(
+            "tasks",
+            Json::Arr(self.tasks.iter().map(|t| t.to_json()).collect()),
+        );
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<Checkpoint, String> {
+        let epoch = j
+            .get("epoch")
+            .and_then(|v| v.as_i64())
+            .ok_or("checkpoint body: missing `epoch`")?;
+        if epoch < 0 {
+            return Err(format!("checkpoint body: negative epoch {epoch}"));
+        }
+        let tasks = j
+            .get("tasks")
+            .and_then(|v| v.as_arr())
+            .ok_or("checkpoint body: missing `tasks` array")?
+            .iter()
+            .map(TaskPart::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Checkpoint {
+            epoch: epoch as u64,
+            tasks,
+        })
+    }
+}
+
+/// Outcome of a latest-checkpoint scan: the newest valid checkpoint (if
+/// any) plus how many newer-or-equal candidates had to be skipped as
+/// corrupt — the degradation counter surfaced in results.json.
+#[derive(Debug, Default)]
+pub struct LatestScan {
+    pub checkpoint: Option<Checkpoint>,
+    /// Files that looked like checkpoints but failed validation, newest
+    /// first: `(file name, readable error)`.
+    pub skipped: Vec<(String, String)>,
+}
+
+/// Versioned checkpoint files in one directory: `ckpt-<epoch>.json`,
+/// written atomically (temp + rename), CRC-validated on load.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    /// Keep at most this many committed checkpoints (older epochs are
+    /// pruned after a successful write); 0 means keep everything.
+    retain: usize,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl Into<PathBuf>, retain: usize) -> CheckpointStore {
+        CheckpointStore {
+            dir: dir.into(),
+            retain,
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_name(epoch: u64) -> String {
+        format!("ckpt-{epoch:08}.json")
+    }
+
+    /// Parse `ckpt-<epoch>.json` back to its epoch.
+    fn parse_epoch(name: &str) -> Option<u64> {
+        name.strip_prefix("ckpt-")?
+            .strip_suffix(".json")?
+            .parse::<u64>()
+            .ok()
+    }
+
+    /// Serialize `ckpt` into the wire document: magic + version + CRC32
+    /// over the exact body bytes embedded after them.
+    fn encode(ckpt: &Checkpoint) -> String {
+        let body = ckpt.to_json().to_string();
+        let crc = crc32(body.as_bytes());
+        format!(
+            "{{\"magic\":\"{CHECKPOINT_MAGIC}\",\"version\":{CHECKPOINT_VERSION},\
+             \"crc32\":{crc},\"body\":{body}}}"
+        )
+    }
+
+    /// Validate and decode one checkpoint document.
+    pub fn decode(text: &str) -> Result<Checkpoint, String> {
+        let doc = parse(text).map_err(|e| format!("checkpoint is not valid JSON: {e}"))?;
+        match doc.get("magic").and_then(|v| v.as_str()) {
+            Some(m) if m == CHECKPOINT_MAGIC => {}
+            Some(m) => return Err(format!("not a checkpoint file (magic '{m}')")),
+            None => return Err("not a checkpoint file (no magic field)".into()),
+        }
+        match doc.get("version").and_then(|v| v.as_i64()) {
+            Some(v) if v == CHECKPOINT_VERSION => {}
+            Some(v) => {
+                return Err(format!(
+                    "unsupported checkpoint version {v} (this build reads version \
+                     {CHECKPOINT_VERSION})"
+                ))
+            }
+            None => return Err("checkpoint has no version field".into()),
+        }
+        let stored = doc
+            .get("crc32")
+            .and_then(|v| v.as_i64())
+            .ok_or("checkpoint has no crc32 field")? as u32;
+        let body = doc.get("body").ok_or("checkpoint has no body")?;
+        let actual = crc32(body.to_string().as_bytes());
+        if actual != stored {
+            return Err(format!(
+                "checkpoint CRC mismatch: stored {stored:#010x}, computed {actual:#010x} — \
+                 the file is corrupt"
+            ));
+        }
+        Checkpoint::from_json(body)
+    }
+
+    /// Write one checkpoint atomically; returns its size in bytes.
+    /// The document goes to `<name>.tmp` first and is renamed into place
+    /// only when fully flushed, so a kill mid-write leaves at most a
+    /// `.tmp` orphan the latest-scan never considers.
+    pub fn write(&self, ckpt: &Checkpoint) -> Result<u64, String> {
+        std::fs::create_dir_all(&self.dir)
+            .map_err(|e| format!("checkpoint dir {:?}: {e}", self.dir))?;
+        let text = Self::encode(ckpt);
+        let final_path = self.dir.join(Self::file_name(ckpt.epoch));
+        let tmp_path = self.dir.join(format!("{}.tmp", Self::file_name(ckpt.epoch)));
+        std::fs::write(&tmp_path, &text).map_err(|e| format!("write {tmp_path:?}: {e}"))?;
+        std::fs::rename(&tmp_path, &final_path)
+            .map_err(|e| format!("commit {final_path:?}: {e}"))?;
+        self.prune(ckpt.epoch);
+        Ok(text.len() as u64)
+    }
+
+    /// Drop committed checkpoints older than the retention window.
+    fn prune(&self, newest_epoch: u64) {
+        if self.retain == 0 {
+            return;
+        }
+        let keep_from = newest_epoch.saturating_sub(self.retain as u64 - 1);
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if let Some(epoch) = Self::parse_epoch(&name) {
+                    if epoch < keep_from {
+                        let _ = std::fs::remove_file(entry.path());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Load one epoch's checkpoint.
+    pub fn load(&self, epoch: u64) -> Result<Checkpoint, String> {
+        let path = self.dir.join(Self::file_name(epoch));
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("read {path:?}: {e}"))?;
+        Self::decode(&text).map_err(|e| format!("{path:?}: {e}"))
+    }
+
+    /// Find the newest valid checkpoint: candidates are tried newest
+    /// first; corrupt or truncated files are skipped (and reported), so
+    /// restore degrades to an older epoch — or to a cold start when no
+    /// valid file remains.  `.tmp` orphans from an interrupted write are
+    /// never candidates.
+    pub fn latest(&self) -> LatestScan {
+        let mut epochs: Vec<u64> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if let Some(epoch) = Self::parse_epoch(&name) {
+                    epochs.push(epoch);
+                }
+            }
+        }
+        epochs.sort_unstable_by(|a, b| b.cmp(a));
+        let mut scan = LatestScan::default();
+        for epoch in epochs {
+            match self.load(epoch) {
+                Ok(ckpt) => {
+                    scan.checkpoint = Some(ckpt);
+                    break;
+                }
+                Err(e) => scan.skipped.push((Self::file_name(epoch), e)),
+            }
+        }
+        scan
+    }
+}
+
+// --- epoch coordinator -------------------------------------------------------
+
+/// Aggregate counters for a run's checkpoint activity.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CheckpointStats {
+    /// Committed checkpoint files.
+    pub committed: u64,
+    /// Bytes of the committed files.
+    pub bytes: u64,
+    /// Wall time spent assembling + writing committed files (µs).
+    pub write_micros: u64,
+}
+
+struct CoordinatorInner {
+    /// Parts collected for not-yet-committed epochs.
+    pending: BTreeMap<u64, Vec<Option<TaskPart>>>,
+    stats: CheckpointStats,
+    /// First write/assembly error; fails the run at join.
+    error: Option<String>,
+}
+
+/// Collects per-task state parts and commits one checkpoint file per
+/// epoch once every task has contributed — the alignment barrier of the
+/// protocol, minus the blocking: tasks submit and move on, and commit
+/// their broker offsets only after observing `committed_epoch` advance.
+pub struct CheckpointCoordinator {
+    store: CheckpointStore,
+    parallelism: usize,
+    interval_micros: u64,
+    start_micros: u64,
+    committed_epoch: AtomicU64,
+    inner: Mutex<CoordinatorInner>,
+}
+
+impl CheckpointCoordinator {
+    pub fn new(
+        store: CheckpointStore,
+        parallelism: usize,
+        interval_micros: u64,
+        start_micros: u64,
+    ) -> CheckpointCoordinator {
+        assert!(interval_micros > 0, "checkpoint interval must be > 0");
+        assert!(parallelism > 0, "checkpoint coordinator needs >= 1 task");
+        CheckpointCoordinator {
+            store,
+            parallelism,
+            interval_micros,
+            start_micros,
+            committed_epoch: AtomicU64::new(0),
+            inner: Mutex::new(CoordinatorInner {
+                pending: BTreeMap::new(),
+                stats: CheckpointStats::default(),
+                error: None,
+            }),
+        }
+    }
+
+    pub fn interval_micros(&self) -> u64 {
+        self.interval_micros
+    }
+
+    pub fn store(&self) -> &CheckpointStore {
+        &self.store
+    }
+
+    /// The epoch `now` falls into (epoch 0 is the pre-first-interval
+    /// stretch, never checkpointed; epoch N covers
+    /// `[start + N*interval, ...)`).
+    pub fn epoch_at(&self, now_micros: u64) -> u64 {
+        now_micros.saturating_sub(self.start_micros) / self.interval_micros
+    }
+
+    /// Highest epoch whose checkpoint file has committed (0 = none).
+    pub fn committed_epoch(&self) -> u64 {
+        self.committed_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Submit task `task_id`'s part for `epoch`.  The epoch commits —
+    /// file written, `committed_epoch` bumped — when the last part
+    /// arrives; the committing call returns `Some(bytes written)` so the
+    /// task that closed the epoch can account the file size.  Duplicate
+    /// submissions for the same (epoch, task) are rejected: they indicate
+    /// an epoch-tracking bug in the caller.
+    pub fn submit(
+        &self,
+        epoch: u64,
+        task_id: usize,
+        part: TaskPart,
+    ) -> Result<Option<u64>, String> {
+        if task_id >= self.parallelism {
+            return Err(format!(
+                "checkpoint: task {task_id} out of range (parallelism {})",
+                self.parallelism
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let mut inner = self.inner.lock().expect("checkpoint coordinator poisoned");
+        let par = self.parallelism;
+        let parts = inner
+            .pending
+            .entry(epoch)
+            .or_insert_with(|| vec![None; par]);
+        if parts[task_id].is_some() {
+            return Err(format!(
+                "checkpoint: duplicate part from task {task_id} for epoch {epoch}"
+            ));
+        }
+        parts[task_id] = Some(part);
+        if !parts.iter().all(|p| p.is_some()) {
+            return Ok(None);
+        }
+        // Last part in: assemble and commit.
+        let parts = inner.pending.remove(&epoch).expect("entry exists");
+        let ckpt = Checkpoint {
+            epoch,
+            tasks: parts.into_iter().map(|p| p.expect("all present")).collect(),
+        };
+        match self.store.write(&ckpt) {
+            Ok(bytes) => {
+                inner.stats.committed += 1;
+                inner.stats.bytes += bytes;
+                inner.stats.write_micros += t0.elapsed().as_micros() as u64;
+                // Stale pending epochs below the committed one can never
+                // complete usefully; drop them so memory stays bounded.
+                inner.pending.retain(|&e, _| e > epoch);
+                drop(inner);
+                self.committed_epoch.fetch_max(epoch, Ordering::SeqCst);
+                Ok(Some(bytes))
+            }
+            Err(e) => {
+                inner.error = Some(e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CheckpointStats {
+        self.inner.lock().expect("checkpoint coordinator poisoned").stats
+    }
+
+    /// First write error, if any (the run should fail loudly).
+    pub fn error(&self) -> Option<String> {
+        self.inner.lock().expect("checkpoint coordinator poisoned").error.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "sprobench-ckpt-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn part(off: u64, events: u64) -> TaskPart {
+        let mut state = Json::obj();
+        state.set("x", Json::Int(off as i64));
+        TaskPart {
+            offsets: vec![(0, off), (2, off + 1)],
+            events_in: events,
+            state,
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE CRC32 reference values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn write_load_roundtrip() {
+        let store = CheckpointStore::new(tmp_dir("roundtrip"), 0);
+        let ckpt = Checkpoint {
+            epoch: 3,
+            tasks: vec![part(100, 1000), part(250, 900)],
+        };
+        let bytes = store.write(&ckpt).unwrap();
+        assert!(bytes > 0);
+        let loaded = store.load(3).unwrap();
+        assert_eq!(loaded.epoch, 3);
+        assert_eq!(loaded.tasks.len(), 2);
+        assert_eq!(loaded.tasks[0].offsets, vec![(0, 100), (2, 101)]);
+        assert_eq!(loaded.tasks[1].events_in, 900);
+        assert_eq!(loaded.events_in(), 1900);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn bit_flip_is_rejected_readably() {
+        let store = CheckpointStore::new(tmp_dir("bitflip"), 0);
+        let ckpt = Checkpoint {
+            epoch: 1,
+            tasks: vec![part(5, 50)],
+        };
+        store.write(&ckpt).unwrap();
+        let path = store.dir().join("ckpt-00000001.json");
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a bit inside the body (past the header fields).
+        let i = bytes.len() - 10;
+        bytes[i] ^= 0x08;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = store.load(1).unwrap_err();
+        assert!(
+            err.contains("CRC mismatch") || err.contains("not valid JSON"),
+            "unreadable error: {err}"
+        );
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn truncation_is_rejected_readably() {
+        let store = CheckpointStore::new(tmp_dir("trunc"), 0);
+        let ckpt = Checkpoint {
+            epoch: 2,
+            tasks: vec![part(7, 70)],
+        };
+        store.write(&ckpt).unwrap();
+        let path = store.dir().join("ckpt-00000002.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let err = store.load(2).unwrap_err();
+        assert!(err.contains("not valid JSON"), "unreadable error: {err}");
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn latest_skips_corrupt_and_ignores_tmp_orphans() {
+        let store = CheckpointStore::new(tmp_dir("latest"), 0);
+        store
+            .write(&Checkpoint { epoch: 1, tasks: vec![part(10, 100)] })
+            .unwrap();
+        store
+            .write(&Checkpoint { epoch: 2, tasks: vec![part(20, 200)] })
+            .unwrap();
+        // Corrupt the newest committed file...
+        let p2 = store.dir().join("ckpt-00000002.json");
+        std::fs::write(&p2, "garbage").unwrap();
+        // ...and leave a partial-write orphan that must never be "latest".
+        std::fs::write(store.dir().join("ckpt-00000009.json.tmp"), "half a checkp").unwrap();
+        let scan = store.latest();
+        let ckpt = scan.checkpoint.expect("epoch 1 is still valid");
+        assert_eq!(ckpt.epoch, 1, "scan must fall back past the corrupt epoch 2");
+        assert_eq!(scan.skipped.len(), 1);
+        assert!(scan.skipped[0].0.contains("00000002"));
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn latest_on_empty_or_missing_dir_is_cold_start() {
+        let dir = tmp_dir("cold");
+        let store = CheckpointStore::new(&dir, 0);
+        assert!(store.latest().checkpoint.is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+        let gone = CheckpointStore::new(dir.join("never-created"), 0);
+        let scan = gone.latest();
+        assert!(scan.checkpoint.is_none());
+        assert!(scan.skipped.is_empty());
+    }
+
+    #[test]
+    fn retention_prunes_old_epochs() {
+        let store = CheckpointStore::new(tmp_dir("retain"), 2);
+        for epoch in 1..=5 {
+            store
+                .write(&Checkpoint { epoch, tasks: vec![part(epoch, epoch * 10)] })
+                .unwrap();
+        }
+        assert!(store.load(5).is_ok());
+        assert!(store.load(4).is_ok());
+        assert!(store.load(3).is_err(), "epoch 3 must be pruned at retain=2");
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn wrong_version_and_magic_are_readable() {
+        let good = CheckpointStore::encode(&Checkpoint { epoch: 1, tasks: vec![] });
+        let wrong_ver = good.replace("\"version\":1", "\"version\":99");
+        let err = CheckpointStore::decode(&wrong_ver).unwrap_err();
+        assert!(err.contains("version 99"), "{err}");
+        let wrong_magic = good.replace(CHECKPOINT_MAGIC, "some-other-format");
+        let err = CheckpointStore::decode(&wrong_magic).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn coordinator_commits_when_all_parts_arrive() {
+        let dir = tmp_dir("coord");
+        let coord = CheckpointCoordinator::new(CheckpointStore::new(&dir, 0), 2, 1_000_000, 0);
+        assert_eq!(coord.epoch_at(500_000), 0);
+        assert_eq!(coord.epoch_at(2_500_000), 2);
+        assert_eq!(coord.submit(1, 0, part(10, 100)).unwrap(), None);
+        assert_eq!(coord.committed_epoch(), 0, "half the parts is no checkpoint");
+        let bytes = coord.submit(1, 1, part(12, 120)).unwrap();
+        assert!(bytes.is_some_and(|b| b > 0), "closing part reports file size");
+        assert_eq!(coord.committed_epoch(), 1);
+        let stats = coord.stats();
+        assert_eq!(stats.committed, 1);
+        assert!(stats.bytes > 0);
+        let scan = coord.store().latest();
+        assert_eq!(scan.checkpoint.unwrap().epoch, 1);
+        // Duplicate part is a caller bug, not a silent overwrite.
+        coord.submit(2, 0, part(20, 200)).unwrap();
+        assert!(coord.submit(2, 0, part(21, 210)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -3,6 +3,7 @@
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
+use super::checkpoint::{Checkpoint, CheckpointCoordinator};
 use super::personality::Personality;
 use super::task::{TaskHarness, TaskReport};
 use crate::broker::{Broker, Topic};
@@ -27,6 +28,18 @@ pub struct EngineReport {
     /// Per-operator stats merged across tasks by operator name, in chain
     /// order of first appearance.
     pub operators: Vec<(String, crate::pipelines::StepStats)>,
+}
+
+/// Recovery hooks threaded through an engine run; all default to off.
+/// `checkpoint` arms periodic aligned snapshots (and defers broker offset
+/// commits to checkpoint commits), `kill` is the crash switch a fault
+/// plan flips mid-run, `restore_from` re-arms every task's state and
+/// offsets from a loaded checkpoint before consuming.
+#[derive(Default)]
+pub struct RunHooks {
+    pub checkpoint: Option<Arc<CheckpointCoordinator>>,
+    pub kill: Option<Arc<AtomicBool>>,
+    pub restore_from: Option<Arc<Checkpoint>>,
 }
 
 /// The stream engine: `parallelism` task slots over one consumer group.
@@ -107,6 +120,32 @@ impl Engine {
         factory: Arc<StepFactory>,
         ready: Option<Arc<std::sync::atomic::AtomicU32>>,
     ) -> Result<EngineReport, String> {
+        self.run_with_hooks(
+            broker,
+            in_topic_name,
+            out_topic,
+            stop,
+            duration_micros,
+            factory,
+            ready,
+            RunHooks::default(),
+        )
+    }
+
+    /// Full-control entry point: [`Engine::run_with_factory`] plus the
+    /// recovery hooks ([`RunHooks`]) the kill-and-restore driver uses.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with_hooks(
+        &self,
+        broker: &Arc<Broker>,
+        in_topic_name: &str,
+        out_topic: &Arc<Topic>,
+        stop: &Arc<AtomicBool>,
+        duration_micros: u64,
+        factory: Arc<StepFactory>,
+        ready: Option<Arc<std::sync::atomic::AtomicU32>>,
+        hooks: RunHooks,
+    ) -> Result<EngineReport, String> {
         let parallelism = self.config.engine.parallelism;
         let personality = Personality::for_framework(
             self.config.engine.framework,
@@ -128,6 +167,9 @@ impl Engine {
             ))
         });
 
+        let kill = hooks
+            .kill
+            .unwrap_or_else(|| Arc::new(AtomicBool::new(false)));
         let handles: Vec<_> = (0..parallelism)
             .map(|id| {
                 let harness = TaskHarness {
@@ -152,6 +194,9 @@ impl Engine {
                         start + self.config.bench.warmup_micros
                     },
                     ready: ready.clone(),
+                    checkpoint: hooks.checkpoint.clone(),
+                    kill: kill.clone(),
+                    restore_from: hooks.restore_from.clone(),
                 };
                 std::thread::Builder::new()
                     .name(format!("engine-task-{id}"))
@@ -181,6 +226,19 @@ impl Engine {
         }
         report.elapsed_micros = self.clock.now_micros().saturating_sub(start).max(1);
         report.rate_events = report.events_in as f64 * 1e6 / report.elapsed_micros as f64;
+        // A killed incarnation's consumer group is dead: its frozen
+        // committed offsets must not pin the broker log while the
+        // restarted engine (a fresh group) works through the backlog.
+        if kill.load(std::sync::atomic::Ordering::SeqCst) {
+            group.leave();
+        }
+        // A checkpoint write failure must fail the run loudly, not
+        // silently degrade exactly-once to at-most-once.
+        if let Some(coord) = &hooks.checkpoint {
+            if let Some(e) = coord.error() {
+                return Err(format!("checkpointing failed: {e}"));
+            }
+        }
         Ok(report)
     }
 }

@@ -137,6 +137,18 @@ impl Boundary {
         self.done.iter().all(|d| d.load(Ordering::SeqCst))
     }
 
+    /// The published frontier of every upstream instance, in instance
+    /// order — the checkpoint coordinator snapshots these so a restored
+    /// fabric resumes from the aligned frontiers instead of zero.
+    /// (`publish_frontier` is monotone, so re-publishing a snapshot is
+    /// always safe.)
+    pub fn frontiers(&self) -> Vec<u64> {
+        self.frontiers
+            .iter()
+            .map(|f| f.load(Ordering::SeqCst))
+            .collect()
+    }
+
     /// Total rows routed through this boundary (all upstreams).
     pub fn records(&self) -> u64 {
         self.records.load(Ordering::Relaxed)
@@ -276,6 +288,11 @@ mod tests {
         assert_eq!(b.safe_frontier(), 1_000);
         b.publish_frontier(0, 4_000);
         assert_eq!(b.safe_frontier(), 3_000);
+        assert_eq!(
+            b.frontiers(),
+            vec![4_000, 5_000, 3_000, 9_000],
+            "per-upstream snapshot view"
+        );
         // Finished upstreams stop constraining.
         b.finish_upstream(2);
         assert_eq!(b.safe_frontier(), 4_000);

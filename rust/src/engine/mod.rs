@@ -21,11 +21,14 @@
 //! * [`watermark`] — bounded-disorder watermark tracking.
 //! * [`exchange`] — keyed inter-task exchange (shuffle) fabric: stage
 //!   boundaries with hash-routed row channels and min-merged frontiers.
+//! * [`checkpoint`] — aligned checkpoints: CRC-validated snapshot files
+//!   and the epoch coordinator behind kill-and-restore recovery.
 //! * [`personality`] — the framework execution disciplines.
 //! * [`task`] — one task slot's poll→process→produce→commit loop.
 //! * [`core`] — engine lifecycle: spawn tasks, join, aggregate stats.
 
 pub mod batch;
+pub mod checkpoint;
 pub mod core;
 pub mod exchange;
 pub mod personality;
@@ -34,7 +37,8 @@ pub mod watermark;
 pub mod window;
 
 pub use batch::EventBatch;
-pub use core::{Engine, EngineReport};
+pub use checkpoint::{Checkpoint, CheckpointCoordinator, CheckpointStats, CheckpointStore, TaskPart};
+pub use core::{Engine, EngineReport, RunHooks};
 pub use exchange::{Boundary, ExchangeFabric, ExchangePacket};
 pub use personality::Personality;
 pub use watermark::WatermarkTracker;

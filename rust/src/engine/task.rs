@@ -24,6 +24,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use super::batch::EventBatch;
+use super::checkpoint::{Checkpoint, CheckpointCoordinator, TaskPart};
 use super::personality::Personality;
 use crate::broker::{Broker, ConsumerGroup, Record, RecordBatch, Topic};
 use crate::jvm::JvmHeap;
@@ -68,6 +69,19 @@ pub struct TaskHarness {
     /// done); the coordinator holds the generator fleet until every task
     /// signalled so compile time never pollutes measured latency.
     pub ready: std::sync::Arc<std::sync::atomic::AtomicU32>,
+    /// Aligned-checkpoint coordinator; `None` when checkpointing is off.
+    /// When set, broker offset commits are deferred until the covering
+    /// epoch's checkpoint file has durably committed (exactly-once state).
+    pub checkpoint: Option<Arc<CheckpointCoordinator>>,
+    /// Crash switch — distinct from `stop`, which is a graceful shutdown
+    /// that flushes windows and commits offsets.  When `kill` flips, the
+    /// task abandons buffered batches, open windows, and uncommitted
+    /// offsets exactly where they stand, modeling a process kill.
+    pub kill: Arc<AtomicBool>,
+    /// Restore source: this task re-arms its operator state from
+    /// `tasks[id]` and seeks its partitions back to the recorded offsets
+    /// before consuming, replaying everything after the snapshot.
+    pub restore_from: Option<Arc<Checkpoint>>,
 }
 
 /// Per-task result.
@@ -99,6 +113,38 @@ struct TaskBuffers {
     out: Vec<Record>,
 }
 
+/// Per-task checkpoint bookkeeping: deferred offsets and epoch tracking.
+struct CkptState {
+    coord: Arc<CheckpointCoordinator>,
+    /// Last epoch this task snapshotted (0 = none yet; epoch 0 is the
+    /// pre-first-interval stretch and is never checkpointed).
+    last_epoch: u64,
+    /// Latest processed next-offset per owned partition.  These are NOT
+    /// committed to the broker group as they accrue — they ride in the
+    /// next snapshot and commit only once its file is durable, so the
+    /// log always retains every record a restore could replay.
+    offsets: Vec<(u32, u64)>,
+    /// Offsets awaiting their epoch's durable commit: `(epoch, offsets)`.
+    queued: Vec<(u64, Vec<(u32, u64)>)>,
+    /// Snapshots this task contributed.
+    snapshots: u64,
+    /// Bytes of checkpoint files whose commit this task's submit closed.
+    bytes: u64,
+    /// Time spent snapshotting (and, for the closing task, writing), µs.
+    micros: u64,
+}
+
+impl CkptState {
+    /// Fold a processed batch's `(partition, next_offset)` into the
+    /// deferred positions (latest per partition).
+    fn absorb(&mut self, partition: u32, next_offset: u64) {
+        match self.offsets.iter_mut().find(|(p, _)| *p == partition) {
+            Some((_, off)) => *off = (*off).max(next_offset),
+            None => self.offsets.push((partition, next_offset)),
+        }
+    }
+}
+
 impl TaskHarness {
     pub fn run(self) -> Result<TaskReport, String> {
         let mut step = match &self.exchange {
@@ -107,6 +153,22 @@ impl TaskHarness {
                 .create_staged(self.id, fabric, self.clock.now_micros())?,
             None => self.factory.create(self.clock.now_micros())?,
         };
+        if let Some(ckpt) = &self.restore_from {
+            let part = ckpt.tasks.get(self.id as usize).ok_or_else(|| {
+                format!(
+                    "restore: checkpoint epoch {} has {} task parts, no part for task {} — \
+                     it was taken at a different parallelism",
+                    ckpt.epoch,
+                    ckpt.tasks.len(),
+                    self.id
+                )
+            })?;
+            step.restore(&part.state)
+                .map_err(|e| format!("restore task {}: {e}", self.id))?;
+            for &(p, off) in &part.offsets {
+                self.group.seek(p, off);
+            }
+        }
         self.ready.fetch_add(1, Ordering::SeqCst);
         let res = self.drive(&mut *step);
         if res.is_err() {
@@ -132,9 +194,34 @@ impl TaskHarness {
             out: Vec::new(),
         };
         let mut batch_started = self.clock.now_micros();
+        let mut ckpt = self.checkpoint.as_ref().map(|coord| CkptState {
+            coord: coord.clone(),
+            last_epoch: 0,
+            // A restored task re-arms its deferred positions at the
+            // checkpoint's offsets so even a data-free run re-commits them
+            // on its graceful finish.
+            offsets: self
+                .restore_from
+                .as_ref()
+                .and_then(|c| c.tasks.get(self.id as usize))
+                .map(|p| p.offsets.clone())
+                .unwrap_or_default(),
+            queued: Vec::new(),
+            snapshots: 0,
+            bytes: 0,
+            micros: 0,
+        });
 
         let interval = self.personality.batch_interval_micros;
         loop {
+            if self.kill.load(Ordering::Relaxed) {
+                // Crash, not a stop: no finish flush, no offset commit —
+                // buffered batches, open windows, and deferred offsets are
+                // lost exactly where they stand.  Exchange peers are
+                // released so the fleet's join returns.
+                step.abort();
+                return Ok(report);
+            }
             let now = self.clock.now_micros();
             let stop_now = self.stop.load(Ordering::Relaxed) || now >= self.deadline_micros;
             let mut closed = false;
@@ -174,6 +261,17 @@ impl TaskHarness {
                             if !bufs.out.is_empty() {
                                 self.emit(&mut bufs.out, &mut report)?;
                             }
+                            // Idle tasks still contribute epoch snapshots;
+                            // without this a quiet partition would stall
+                            // the alignment barrier for the whole fleet.
+                            if let Some(cs) = ckpt.as_mut() {
+                                self.maybe_checkpoint(
+                                    &mut *step,
+                                    cs,
+                                    self.clock.now_micros(),
+                                    report.events_in,
+                                )?;
+                            }
                             self.clock.sleep_micros(200);
                             continue;
                         }
@@ -188,7 +286,12 @@ impl TaskHarness {
             let must_flush = closed || stop_now;
 
             if !bufs.pending.is_empty() && (must_flush || size_reached || interval_elapsed) {
-                self.process_pending(&mut *step, needs_parse, &mut bufs, &mut report)?;
+                self.process_pending(&mut *step, needs_parse, &mut bufs, &mut report, ckpt.as_mut())?;
+                // Snapshots happen at batch boundaries only, so a task
+                // part always describes a prefix of its input stream.
+                if let Some(cs) = ckpt.as_mut() {
+                    self.maybe_checkpoint(&mut *step, cs, self.clock.now_micros(), report.events_in)?;
+                }
                 batch_started = self.clock.now_micros();
             }
 
@@ -200,9 +303,61 @@ impl TaskHarness {
                 }
                 report.step = step.stats();
                 report.op_stats = step.operator_stats();
+                if let Some(cs) = &ckpt {
+                    // Graceful stop: the stream is over, so the final read
+                    // positions commit directly (they supersede anything
+                    // still queued — offsets only grow).
+                    for &(p, off) in &cs.offsets {
+                        self.group.commit(p, off);
+                    }
+                    report.step.checkpoints = cs.snapshots;
+                    report.step.checkpoint_bytes = cs.bytes;
+                    report.step.checkpoint_time_micros = cs.micros;
+                }
                 return Ok(report);
             }
         }
+    }
+
+    /// Snapshot when the epoch advanced, then commit any deferred offsets
+    /// whose covering epoch (or a later one — later checkpoints strictly
+    /// cover earlier offsets) has a durable file.
+    fn maybe_checkpoint(
+        &self,
+        step: &mut dyn crate::pipelines::PipelineStep,
+        cs: &mut CkptState,
+        now: u64,
+        events_in: u64,
+    ) -> Result<(), String> {
+        let epoch = cs.coord.epoch_at(now);
+        if epoch > cs.last_epoch {
+            let t0 = std::time::Instant::now();
+            let state = step.snapshot()?;
+            let part = TaskPart {
+                offsets: cs.offsets.clone(),
+                events_in,
+                state,
+            };
+            let written = cs.coord.submit(epoch, self.id as usize, part)?;
+            cs.queued.push((epoch, cs.offsets.clone()));
+            cs.last_epoch = epoch;
+            cs.snapshots += 1;
+            cs.bytes += written.unwrap_or(0);
+            cs.micros += t0.elapsed().as_micros() as u64;
+        }
+        let committed = cs.coord.committed_epoch();
+        let mut i = 0;
+        while i < cs.queued.len() {
+            if cs.queued[i].0 <= committed {
+                let (_, offs) = cs.queued.remove(i);
+                for (p, off) in offs {
+                    self.group.commit(p, off);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
     }
 
     fn process_pending(
@@ -211,6 +366,7 @@ impl TaskHarness {
         needs_parse: bool,
         bufs: &mut TaskBuffers,
         report: &mut TaskReport,
+        ckpt: Option<&mut CkptState>,
     ) -> Result<(), String> {
         let shard = self.id as usize;
         let n = bufs.pending_records as u64;
@@ -282,9 +438,21 @@ impl TaskHarness {
         // Commit the offsets covering the processed records.  Under eager
         // commit (Flink/KStreams) this fires per processed poll-batch;
         // under micro-batching (Spark) it fires once per micro-batch —
-        // the cadence difference the personalities model.
-        for (p, off) in bufs.commits.drain(..) {
-            self.group.commit(p, off);
+        // the cadence difference the personalities model.  With
+        // checkpointing on, offsets are deferred instead: they ride in
+        // the next snapshot and reach the broker group only once its file
+        // is durable, so the log retains everything a restore replays.
+        match ckpt {
+            Some(cs) => {
+                for (p, off) in bufs.commits.drain(..) {
+                    cs.absorb(p, off);
+                }
+            }
+            None => {
+                for (p, off) in bufs.commits.drain(..) {
+                    self.group.commit(p, off);
+                }
+            }
         }
         Ok(())
     }

@@ -332,6 +332,31 @@ impl SlidingWindow {
         let per_key = if self.agg.uses_sum_cnt() { 8 } else { 16 };
         ((self.panes.len() + 1) * self.k * per_key) as u64
     }
+
+    /// Export the mutable pane state for a checkpoint: the closed panes
+    /// (oldest first) and the open pane.  Window/slide/agg are
+    /// configuration and are re-derived on restore.
+    pub fn export_state(&self) -> (Vec<Pane>, Pane) {
+        (self.panes.iter().cloned().collect(), self.current.clone())
+    }
+
+    /// Restore state captured by [`SlidingWindow::export_state`].  Pane
+    /// key widths must match this window's `k` — a mismatch means the
+    /// checkpoint was taken under a different configuration.
+    pub fn import_state(&mut self, closed: Vec<Pane>, current: Pane) -> Result<(), String> {
+        for p in closed.iter().chain(std::iter::once(&current)) {
+            if p.sum.len() != self.k || p.cnt.len() != self.k {
+                return Err(format!(
+                    "window restore: pane has {} keys, this window expects {}",
+                    p.sum.len(),
+                    self.k
+                ));
+            }
+        }
+        self.panes = closed.into();
+        self.current = current;
+        Ok(())
+    }
 }
 
 /// Merge a run of panes into one window aggregate: deterministic key
@@ -592,6 +617,48 @@ impl EventTimeWindow {
             self.prune();
         }
         out
+    }
+
+    /// Export the mutable state for a checkpoint: retained panes, the
+    /// next window end to finalize, the observed watermark and the
+    /// late/dropped counters.  Configuration (k, window, slide, agg,
+    /// lateness, policy) is re-derived on restore.
+    pub fn export_state(&self) -> (Vec<Pane>, u64, u64, u64, u64) {
+        (
+            self.panes.values().cloned().collect(),
+            self.next_end,
+            self.watermark,
+            self.late_events,
+            self.dropped_events,
+        )
+    }
+
+    /// Restore state captured by [`EventTimeWindow::export_state`].
+    pub fn import_state(
+        &mut self,
+        panes: Vec<Pane>,
+        next_end: u64,
+        watermark: u64,
+        late_events: u64,
+        dropped_events: u64,
+    ) -> Result<(), String> {
+        let mut map = BTreeMap::new();
+        for p in panes {
+            if p.sum.len() != self.k || p.cnt.len() != self.k {
+                return Err(format!(
+                    "event-time window restore: pane has {} keys, this window expects {}",
+                    p.sum.len(),
+                    self.k
+                ));
+            }
+            map.insert(p.start_micros, p);
+        }
+        self.panes = map;
+        self.next_end = next_end;
+        self.watermark = watermark;
+        self.late_events = late_events;
+        self.dropped_events = dropped_events;
+        Ok(())
     }
 }
 
@@ -886,6 +953,43 @@ mod tests {
         assert_eq!(e[0].end_micros, 2_000_000);
         assert_eq!(e[0].aggregates, vec![(2, 4.0, 1)]);
         assert!(w.flush().is_empty(), "second flush has nothing new");
+    }
+
+    #[test]
+    fn sliding_export_import_resumes_identically() {
+        let mut a = w();
+        a.accumulate_native(&[1, 2, 1], &[10.0, 20.0, 5.0]);
+        a.advance(2_000_000);
+        a.accumulate_native(&[3], &[7.0]);
+        let (closed, current) = a.export_state();
+        let mut b = w();
+        b.import_state(closed, current).unwrap();
+        a.accumulate_native(&[1], &[2.0]);
+        b.accumulate_native(&[1], &[2.0]);
+        assert_eq!(a.advance(4_000_000), b.advance(4_000_000));
+        assert_eq!(a.flush(), b.flush());
+        // Key-width mismatch is a readable error, not corruption.
+        let (closed, current) = a.export_state();
+        let mut narrow = SlidingWindow::new(4, 10_000_000, 2_000_000, 0);
+        assert!(narrow.import_state(closed, current).is_err());
+    }
+
+    #[test]
+    fn event_time_export_import_resumes_identically() {
+        let mut a = etw(LatePolicy::MergeIfOpen);
+        a.accumulate(&[1, 2], &[10.0, 7.0], &[1_900_000, 2_100_000]);
+        a.advance(2_500_000);
+        // Snapshot taken with an open pane and a live watermark.
+        let (panes, next_end, wm, late, dropped) = a.export_state();
+        let mut b = etw(LatePolicy::MergeIfOpen);
+        b.import_state(panes, next_end, wm, late, dropped).unwrap();
+        assert_eq!(b.emitted_through(), a.emitted_through());
+        a.accumulate(&[1], &[20.0], &[3_000_000]);
+        b.accumulate(&[1], &[20.0], &[3_000_000]);
+        assert_eq!(a.advance(6_000_000), b.advance(6_000_000));
+        assert_eq!(a.flush(), b.flush());
+        assert_eq!(a.late_events(), b.late_events());
+        assert_eq!(a.dropped_events(), b.dropped_events());
     }
 
     #[test]

@@ -218,6 +218,7 @@ mod tests {
                 parse_failures: 0,
                 batches: 1,
                 operators: Vec::new(),
+                recovery: None,
             };
             Ok((summary, Arc::new(MetricStore::new())))
         }

@@ -221,6 +221,7 @@ mod tests {
             parse_failures: 0,
             batches: 1,
             operators: Vec::new(),
+            recovery: None,
         }
     }
 

@@ -71,6 +71,13 @@ pub struct StepStats {
     /// Maximum observed exchange queue residency (send → drain), µs.
     /// Merged with `max`, not summed.
     pub exchange_wait_micros: u64,
+    /// Aligned checkpoints this task contributed a snapshot to; zero when
+    /// checkpointing is disabled.
+    pub checkpoints: u64,
+    /// Serialized bytes written into committed checkpoint files.
+    pub checkpoint_bytes: u64,
+    /// Time spent snapshotting state and writing checkpoint files, µs.
+    pub checkpoint_time_micros: u64,
 }
 
 impl StepStats {
@@ -90,6 +97,9 @@ impl StepStats {
         self.exchange_records += other.exchange_records;
         self.exchange_bytes += other.exchange_bytes;
         self.exchange_wait_micros = self.exchange_wait_micros.max(other.exchange_wait_micros);
+        self.checkpoints += other.checkpoints;
+        self.checkpoint_bytes += other.checkpoint_bytes;
+        self.checkpoint_time_micros += other.checkpoint_time_micros;
     }
 
     /// JSON object for results/report documents.
@@ -113,6 +123,12 @@ impl StepStats {
             "exchange_wait_us",
             Json::Int(self.exchange_wait_micros as i64),
         );
+        j.set("checkpoints", Json::Int(self.checkpoints as i64));
+        j.set("checkpoint_bytes", Json::Int(self.checkpoint_bytes as i64));
+        j.set(
+            "checkpoint_time_us",
+            Json::Int(self.checkpoint_time_micros as i64),
+        );
         j
     }
 
@@ -133,6 +149,9 @@ impl StepStats {
             exchange_records: int("exchange_records"),
             exchange_bytes: int("exchange_bytes"),
             exchange_wait_micros: int("exchange_wait_us"),
+            checkpoints: int("checkpoints"),
+            checkpoint_bytes: int("checkpoint_bytes"),
+            checkpoint_time_micros: int("checkpoint_time_us"),
         }
     }
 }
@@ -188,6 +207,26 @@ pub trait PipelineStep {
     /// entry, [`Chain`] one per operator in chain order.
     fn operator_stats(&self) -> Vec<(String, StepStats)> {
         vec![(self.name().to_string(), self.stats())]
+    }
+
+    /// Serialize the step's operator state for an aligned checkpoint.
+    /// [`Chain`] and [`StagedChain`] support this; steps that don't (the
+    /// monolithic reference pipelines, custom steps) return a readable
+    /// error, which config validation surfaces before any run starts.
+    fn snapshot(&self) -> Result<Json, String> {
+        Err(format!(
+            "pipeline step '{}' does not support checkpointing",
+            self.name()
+        ))
+    }
+
+    /// Restore state captured by [`PipelineStep::snapshot`] into a freshly
+    /// built step of the same configuration.
+    fn restore(&mut self, _state: &Json) -> Result<(), String> {
+        Err(format!(
+            "pipeline step '{}' does not support checkpointing",
+            self.name()
+        ))
     }
 }
 
@@ -408,6 +447,9 @@ mod tests {
             exchange_records: 40,
             exchange_bytes: 960,
             exchange_wait_micros: 70,
+            checkpoints: 2,
+            checkpoint_bytes: 4_096,
+            checkpoint_time_micros: 350,
         };
         let b = StepStats {
             events_in: 5,
@@ -422,6 +464,9 @@ mod tests {
             exchange_records: 10,
             exchange_bytes: 240,
             exchange_wait_micros: 30,
+            checkpoints: 1,
+            checkpoint_bytes: 1_024,
+            checkpoint_time_micros: 150,
         };
         a.merge(&b);
         assert_eq!(a.events_in, 15);
@@ -434,6 +479,9 @@ mod tests {
         assert_eq!(a.exchange_records, 50);
         assert_eq!(a.exchange_bytes, 1_200);
         assert_eq!(a.exchange_wait_micros, 70, "queue wait merges with max");
+        assert_eq!(a.checkpoints, 3);
+        assert_eq!(a.checkpoint_bytes, 5_120);
+        assert_eq!(a.checkpoint_time_micros, 500);
         assert_eq!(StepStats::from_json(&a.to_json()), a);
         // Missing fields read as zero (older documents).
         assert_eq!(StepStats::from_json(&Json::obj()), StepStats::default());

@@ -22,9 +22,10 @@ use std::rc::Rc;
 use super::{PipelineStep, StepStats, HLO_KEYS};
 use crate::broker::Record;
 use crate::config::{BenchConfig, CmpOp, OpSpec, PipelineSpec};
-use crate::engine::window::{AggKind, LatePolicy, WindowTime};
+use crate::engine::window::{AggKind, LatePolicy, Pane, WindowTime};
 use crate::engine::{EventBatch, EventTimeWindow, SlidingWindow, WatermarkTracker, WindowEmit};
 use crate::runtime::{Input, Runtime, RuntimeFactory};
+use crate::util::json::Json;
 use crate::wgen::{EventFormat, SensorEvent};
 
 /// The working set flowing between chained operators: one row per event
@@ -175,7 +176,89 @@ pub trait Operator {
         None
     }
 
+    /// Serialize this operator's mutable state for an aligned checkpoint.
+    /// Stateless operators (and operators whose only state is per-batch
+    /// scratch) return `Json::Null` — there is nothing to restore.
+    /// Counters in [`StepStats`] are deliberately excluded: a restored run
+    /// starts its counters at zero and the recovery driver reconciles the
+    /// totals against the checkpoint's recorded intake.
+    fn snapshot(&self) -> Json {
+        Json::Null
+    }
+
+    /// Restore state captured by [`Operator::snapshot`] on a freshly
+    /// compiled operator of the same spec.  Must reject (with a readable
+    /// error, never a panic) state whose shape does not match.
+    fn restore(&mut self, _state: &Json) -> Result<(), String> {
+        Ok(())
+    }
+
     fn stats(&self) -> StepStats;
+}
+
+// --- checkpoint state encoding -----------------------------------------------
+//
+// f32 state is encoded as raw bit patterns (`Json::Int` of `to_bits`), not
+// decimal numbers: the JSON writer renders non-finite floats as `null`, and
+// extrema panes legitimately hold ±inf sentinels.  Bit patterns also make
+// the snapshot → restore round trip exactly lossless, which the
+// byte-identical equivalence tests depend on.
+
+fn f32s_to_json(vals: &[f32]) -> Json {
+    Json::Arr(vals.iter().map(|v| Json::Int(v.to_bits() as i64)).collect())
+}
+
+fn f32s_from_json(j: &Json, what: &str) -> Result<Vec<f32>, String> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| format!("checkpoint state: '{what}' is not an array"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_i64()
+                .map(|bits| f32::from_bits(bits as u32))
+                .ok_or_else(|| format!("checkpoint state: '{what}' holds a non-integer bit pattern"))
+        })
+        .collect()
+}
+
+fn state_u64(j: &Json, key: &str, what: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(|v| v.as_i64())
+        .map(|v| v as u64)
+        .ok_or_else(|| format!("checkpoint state: '{what}' is missing integer field '{key}'"))
+}
+
+fn pane_to_json(p: &Pane) -> Json {
+    let mut o = Json::obj();
+    o.set("start", Json::Int(p.start_micros as i64));
+    o.set("sum", f32s_to_json(&p.sum));
+    o.set("cnt", f32s_to_json(&p.cnt));
+    o.set("min", f32s_to_json(&p.min));
+    o.set("max", f32s_to_json(&p.max));
+    o
+}
+
+fn pane_from_json(j: &Json) -> Result<Pane, String> {
+    let missing = |k: &str| format!("checkpoint state: pane is missing field '{k}'");
+    Ok(Pane {
+        start_micros: state_u64(j, "start", "pane")?,
+        sum: f32s_from_json(j.get("sum").ok_or_else(|| missing("sum"))?, "pane.sum")?,
+        cnt: f32s_from_json(j.get("cnt").ok_or_else(|| missing("cnt"))?, "pane.cnt")?,
+        min: f32s_from_json(j.get("min").ok_or_else(|| missing("min"))?, "pane.min")?,
+        max: f32s_from_json(j.get("max").ok_or_else(|| missing("max"))?, "pane.max")?,
+    })
+}
+
+fn panes_to_json(panes: &[Pane]) -> Json {
+    Json::Arr(panes.iter().map(pane_to_json).collect())
+}
+
+fn panes_from_json(j: &Json, what: &str) -> Result<Vec<Pane>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("checkpoint state: '{what}' is not an array"))?
+        .iter()
+        .map(pane_from_json)
+        .collect()
 }
 
 /// Compute backend handle for HLO-capable operators; the `Rc` lets every
@@ -351,6 +434,12 @@ impl Operator for KeyByOp {
         }
         self.stats.events_out += rows.len() as u64;
         Ok(())
+    }
+
+    // Pure per-row arithmetic: no cross-batch state, so the default Null
+    // snapshot / no-op restore is this operator's checkpoint contract.
+    fn snapshot(&self) -> Json {
+        Json::Null
     }
 
     fn stats(&self) -> StepStats {
@@ -603,6 +692,29 @@ impl Operator for WindowAggregateOp {
         Some(self.window.current_pane().start_micros)
     }
 
+    fn snapshot(&self) -> Json {
+        let (closed, current) = self.window.export_state();
+        let mut o = Json::obj();
+        o.set("closed", panes_to_json(&closed));
+        o.set("current", pane_to_json(&current));
+        o
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<(), String> {
+        let closed = panes_from_json(
+            state
+                .get("closed")
+                .ok_or("checkpoint state: window is missing 'closed'")?,
+            "window.closed",
+        )?;
+        let current = pane_from_json(
+            state
+                .get("current")
+                .ok_or("checkpoint state: window is missing 'current'")?,
+        )?;
+        self.window.import_state(closed, current)
+    }
+
     fn stats(&self) -> StepStats {
         self.stats
     }
@@ -731,6 +843,52 @@ impl Operator for EventTimeWindowOp {
         Some(self.window.emitted_through())
     }
 
+    fn snapshot(&self) -> Json {
+        let (panes, next_end, watermark, late, dropped) = self.window.export_state();
+        let (max_ts, wm, seen) = self.tracker.export_state();
+        let mut o = Json::obj();
+        o.set("panes", panes_to_json(&panes));
+        o.set("next_end", Json::Int(next_end as i64));
+        o.set("watermark", Json::Int(watermark as i64));
+        o.set("late_events", Json::Int(late as i64));
+        o.set("dropped_events", Json::Int(dropped as i64));
+        o.set("tracker_max_ts", Json::Int(max_ts as i64));
+        o.set("tracker_watermark", Json::Int(wm as i64));
+        o.set("tracker_seen", Json::Bool(seen));
+        o.set("external_frontier", Json::Int(self.external_frontier as i64));
+        o
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<(), String> {
+        let panes = panes_from_json(
+            state
+                .get("panes")
+                .ok_or("checkpoint state: event-time window is missing 'panes'")?,
+            "event_time.panes",
+        )?;
+        let what = "event_time";
+        self.window.import_state(
+            panes,
+            state_u64(state, "next_end", what)?,
+            state_u64(state, "watermark", what)?,
+            state_u64(state, "late_events", what)?,
+            state_u64(state, "dropped_events", what)?,
+        )?;
+        let seen = state
+            .get("tracker_seen")
+            .and_then(|v| v.as_bool())
+            .ok_or("checkpoint state: event_time is missing bool field 'tracker_seen'")?;
+        self.tracker.import_state(
+            state_u64(state, "tracker_max_ts", what)?,
+            state_u64(state, "tracker_watermark", what)?,
+            seen,
+        );
+        self.external_frontier = state_u64(state, "external_frontier", what)?;
+        // The stats mirror of the window's cumulative late/dropped truth
+        // resynchronizes on the next ingest; nothing else to restore.
+        Ok(())
+    }
+
     fn stats(&self) -> StepStats {
         self.stats
     }
@@ -805,6 +963,12 @@ impl Operator for TopKOp {
         rows.select(&self.kept);
         self.stats.events_out += rows.len() as u64;
         Ok(())
+    }
+
+    // `idx`/`kept` are per-apply scratch, rebuilt from each batch: the
+    // selection holds no cross-batch state, so Null is the full snapshot.
+    fn snapshot(&self) -> Json {
+        Json::Null
     }
 
     fn stats(&self) -> StepStats {
@@ -1173,6 +1337,56 @@ impl Chain {
         }
         f
     }
+
+    /// Serialize every operator's state, tagged with the operator name so
+    /// [`Chain::restore_ops`] can verify the checkpoint was taken from a
+    /// chain of the same shape.
+    pub fn snapshot_ops(&self) -> Json {
+        Json::Arr(
+            self.ops
+                .iter()
+                .map(|op| {
+                    let mut o = Json::obj();
+                    o.set("op", Json::Str(op.name().to_string()));
+                    o.set("state", op.snapshot());
+                    o
+                })
+                .collect(),
+        )
+    }
+
+    /// Restore state captured by [`Chain::snapshot_ops`] into a freshly
+    /// compiled chain.  Rejects (readable error, never a panic) a
+    /// checkpoint whose operator sequence does not match this chain.
+    pub fn restore_ops(&mut self, state: &Json) -> Result<(), String> {
+        let arr = state
+            .as_arr()
+            .ok_or("checkpoint state: chain state is not an array")?;
+        if arr.len() != self.ops.len() {
+            return Err(format!(
+                "checkpoint state holds {} operators but the pipeline has {} — \
+                 the checkpoint was taken from a different pipeline spec",
+                arr.len(),
+                self.ops.len()
+            ));
+        }
+        for (op, entry) in self.ops.iter_mut().zip(arr) {
+            let name = entry
+                .get("op")
+                .and_then(|v| v.as_str())
+                .ok_or("checkpoint state: operator entry is missing 'op'")?;
+            if name != op.name() {
+                return Err(format!(
+                    "checkpoint operator '{name}' does not match pipeline operator \
+                     '{}' — the checkpoint was taken from a different pipeline spec",
+                    op.name()
+                ));
+            }
+            op.restore(entry.get("state").unwrap_or(&Json::Null))
+                .map_err(|e| format!("restoring operator '{name}': {e}"))?;
+        }
+        Ok(())
+    }
 }
 
 impl PipelineStep for Chain {
@@ -1236,6 +1450,14 @@ impl PipelineStep for Chain {
             .iter()
             .map(|o| (o.name().to_string(), o.stats()))
             .collect()
+    }
+
+    fn snapshot(&self) -> Result<Json, String> {
+        Ok(self.snapshot_ops())
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<(), String> {
+        self.restore_ops(state)
     }
 }
 
@@ -1551,6 +1773,89 @@ mod tests {
             Box::new(MapOp::new(1.0, 0.0)),
         ];
         assert!(Chain::from_ops("bad", ops).is_err());
+    }
+
+    fn window_emit_chain() -> Chain {
+        let ops: Vec<Box<dyn Operator>> = vec![
+            Box::new(WindowAggregateOp::new(
+                OpCompute::Native,
+                AggKind::Mean,
+                8,
+                2_000_000,
+                1_000_000,
+                0,
+            )),
+            Box::new(EmitAggregatesOp::new(AggKind::Mean)),
+        ];
+        Chain::from_ops("chain[ckpt]", ops).unwrap()
+    }
+
+    #[test]
+    fn chain_snapshot_restore_resumes_byte_identically() {
+        let mut live = window_emit_chain();
+        let batch = EventBatch {
+            ids: vec![1, 1, 3],
+            temps: vec![10.0, 20.0, 5.0],
+            gen_ts: vec![100, 200, 300],
+            append_ts: vec![100, 200, 300],
+            payload_bytes: 81,
+        };
+        let mut out = Vec::new();
+        live.process(300, &[], &batch, &mut out).unwrap();
+        assert!(out.is_empty(), "open pane: nothing emitted yet");
+
+        // Checkpoint mid-pane, restore into a freshly compiled chain.
+        let state = PipelineStep::snapshot(&live).unwrap();
+        let mut restored = window_emit_chain();
+        PipelineStep::restore(&mut restored, &state).unwrap();
+
+        // Both continue over the same input; egestion must match byte for
+        // byte (the crash/restore equivalence contract in miniature).
+        let tail = EventBatch {
+            ids: vec![1, 3],
+            temps: vec![30.0, 15.0],
+            gen_ts: vec![400, 500],
+            append_ts: vec![400, 500],
+            payload_bytes: 54,
+        };
+        let mut out_live = Vec::new();
+        let mut out_restored = Vec::new();
+        live.process(1_000_000, &[], &tail, &mut out_live).unwrap();
+        restored
+            .process(1_000_000, &[], &tail, &mut out_restored)
+            .unwrap();
+        live.finish(2_000_000, &mut out_live).unwrap();
+        restored.finish(2_000_000, &mut out_restored).unwrap();
+        assert!(!out_live.is_empty(), "the flushed pane must emit");
+        assert_eq!(out_live.len(), out_restored.len());
+        for (a, b) in out_live.iter().zip(&out_restored) {
+            assert_eq!(a.payload(), b.payload());
+        }
+    }
+
+    #[test]
+    fn chain_restore_rejects_mismatched_shape_readably() {
+        let live = window_emit_chain();
+        let state = live.snapshot_ops();
+        // A chain with a different operator sequence must refuse the state.
+        let mut other = Chain::from_ops(
+            "chain[other]",
+            vec![Box::new(MapOp::new(1.0, 0.0)) as Box<dyn Operator>],
+        )
+        .unwrap();
+        let err = other.restore_ops(&state).unwrap_err();
+        assert!(err.contains("different pipeline spec"), "{err}");
+        // Same length, different op: name check catches it.
+        let mut two = Chain::from_ops(
+            "chain[two]",
+            vec![
+                Box::new(MapOp::new(1.0, 0.0)) as Box<dyn Operator>,
+                Box::new(EmitEventsOp::new(27)) as Box<dyn Operator>,
+            ],
+        )
+        .unwrap();
+        let err = two.restore_ops(&state).unwrap_err();
+        assert!(err.contains("does not match pipeline operator"), "{err}");
     }
 
     #[test]

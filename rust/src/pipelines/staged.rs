@@ -37,6 +37,7 @@ use crate::engine::exchange::{ExchangeFabric, ExchangePacket, ROW_WIRE_BYTES};
 use crate::engine::EventBatch;
 use crate::pipelines::RowBatch;
 use crate::runtime::RuntimeFactory;
+use crate::util::json::Json;
 
 /// Per-channel queue depth (packets, not rows): one packet is one routed
 /// slice per (call, destination), so a few thousand absorbs long stalls
@@ -532,6 +533,125 @@ impl StagedChain {
     pub fn routed_records(&self) -> u64 {
         self.boundary_stats.iter().map(|s| s.exchange_records).sum()
     }
+
+    /// Serialize this task's staged state for an aligned checkpoint:
+    /// source frontier, each hosted stage's operator chain, and the
+    /// completeness gates' pending rows.  Requires a quiesced task — no
+    /// stashed packets and no rows parked in the stage working sets —
+    /// which the aligned protocol guarantees at epoch boundaries (the
+    /// lockstep driver additionally verifies the fabric channels are
+    /// drained).
+    pub fn snapshot_state(&self) -> Result<Json, String> {
+        let mut stages = Vec::with_capacity(self.stages.len());
+        for (s, slot) in self.stages.iter().enumerate() {
+            if !slot.stash.is_empty() {
+                return Err(format!(
+                    "task {}: stage {s} holds {} stashed exchange packets — \
+                     an aligned snapshot requires a quiesced fabric",
+                    self.task_id,
+                    slot.stash.len()
+                ));
+            }
+            let mut o = Json::obj();
+            o.set(
+                "chain",
+                match &slot.chain {
+                    Some(c) => c.snapshot_ops(),
+                    None => Json::Null,
+                },
+            );
+            o.set(
+                "gate",
+                Json::Arr(
+                    slot.gate
+                        .pending
+                        .iter()
+                        .map(|&(ts, key, bits, count)| {
+                            Json::Arr(vec![
+                                Json::Int(ts as i64),
+                                Json::Int(key as i64),
+                                Json::Int(bits as i64),
+                                Json::Int(count as i64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+            stages.push(o);
+        }
+        let mut j = Json::obj();
+        j.set("src_frontier", Json::Int(self.src_frontier as i64));
+        j.set("stages", Json::Arr(stages));
+        Ok(j)
+    }
+
+    /// Restore state captured by [`StagedChain::snapshot_state`] into a
+    /// freshly compiled task of the same spec and parallelism.  Frontiers
+    /// are not restored here — the driver re-publishes the fabric's
+    /// snapshot (monotone, so always safe) and the continued rounds keep
+    /// them moving.
+    pub fn restore_state(&mut self, state: &Json) -> Result<(), String> {
+        let src = state
+            .get("src_frontier")
+            .and_then(|v| v.as_i64())
+            .ok_or("checkpoint state: staged task is missing 'src_frontier'")?
+            as u64;
+        let stages = state
+            .get("stages")
+            .and_then(|v| v.as_arr())
+            .ok_or("checkpoint state: staged task is missing 'stages'")?;
+        if stages.len() != self.stages.len() {
+            return Err(format!(
+                "checkpoint holds {} stages but the pipeline has {} — \
+                 the checkpoint was taken from a different pipeline spec",
+                stages.len(),
+                self.stages.len()
+            ));
+        }
+        for (s, (slot, st)) in self.stages.iter_mut().zip(stages).enumerate() {
+            let chain_state = st.get("chain").unwrap_or(&Json::Null);
+            match (&mut slot.chain, chain_state) {
+                (Some(_), Json::Null) => {
+                    return Err(format!(
+                        "checkpoint stage {s} was not hosted on task {} but is now — \
+                         the checkpoint was taken at a different parallelism",
+                        self.task_id
+                    ));
+                }
+                (Some(c), cs) => c
+                    .restore_ops(cs)
+                    .map_err(|e| format!("task {} stage {s}: {e}", self.task_id))?,
+                (None, Json::Null) => {}
+                (None, _) => {
+                    return Err(format!(
+                        "checkpoint stage {s} was hosted on task {} but is not now — \
+                         the checkpoint was taken at a different parallelism",
+                        self.task_id
+                    ));
+                }
+            }
+            slot.gate.pending.clear();
+            let gate = st
+                .get("gate")
+                .and_then(|v| v.as_arr())
+                .ok_or("checkpoint state: staged stage is missing 'gate'")?;
+            for row in gate {
+                let t = row
+                    .as_arr()
+                    .filter(|a| a.len() == 4)
+                    .ok_or("checkpoint state: gate row is not a 4-tuple")?;
+                let int = |i: usize| {
+                    t[i].as_i64()
+                        .ok_or("checkpoint state: gate row holds a non-integer")
+                };
+                slot.gate
+                    .pending
+                    .push((int(0)? as u64, int(1)? as u32, int(2)? as u32, int(3)? as u64));
+            }
+        }
+        self.src_frontier = src;
+        Ok(())
+    }
 }
 
 impl PipelineStep for StagedChain {
@@ -630,6 +750,14 @@ impl PipelineStep for StagedChain {
             .filter_map(|slot| slot.chain.as_ref().map(|c| c.stats().events_out))
             .sum();
         s
+    }
+
+    fn snapshot(&self) -> Result<Json, String> {
+        self.snapshot_state()
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<(), String> {
+        self.restore_state(state)
     }
 
     /// Full staged op list — identical names on every task (stats are
@@ -746,6 +874,86 @@ impl LockstepExchange {
         }
     }
 
+    /// Aligned snapshot of the whole staged pipeline.  Valid only at a
+    /// quiesce point — every boundary channel drained, no stashed packets
+    /// — which lockstep rounds reach after each `process_round` +
+    /// `idle_round` pair; refuses (readable error) otherwise.  Captures
+    /// every task's operator/gate state plus the fabric's per-upstream
+    /// frontiers, so a restored pipeline resumes exactly where the
+    /// snapshot was taken.
+    pub fn snapshot(&self) -> Result<Json, String> {
+        for b in 0..self.fabric.boundary_count() {
+            let bd = self.fabric.boundary(b);
+            for d in 0..bd.downstreams() {
+                if !bd.is_drained(d) {
+                    return Err(format!(
+                        "boundary {b} still holds packets for instance {d} — \
+                         an aligned snapshot requires a quiesced fabric \
+                         (run an idle round first)"
+                    ));
+                }
+            }
+        }
+        let tasks = self
+            .tasks
+            .iter()
+            .map(|t| t.snapshot_state())
+            .collect::<Result<Vec<_>, _>>()?;
+        let frontiers = (0..self.fabric.boundary_count())
+            .map(|b| {
+                Json::Arr(
+                    self.fabric
+                        .boundary(b)
+                        .frontiers()
+                        .into_iter()
+                        .map(|f| Json::Int(f as i64))
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("tasks", Json::Arr(tasks));
+        j.set("frontiers", Json::Arr(frontiers));
+        Ok(j)
+    }
+
+    /// Restore a [`LockstepExchange::snapshot`] into a freshly compiled
+    /// pipeline of the same spec and parallelism: per-task state, then the
+    /// fabric frontiers (re-published, which is monotone and safe).
+    pub fn restore(&mut self, state: &Json) -> Result<(), String> {
+        let tasks = state
+            .get("tasks")
+            .and_then(|v| v.as_arr())
+            .ok_or("checkpoint state: staged snapshot is missing 'tasks'")?;
+        if tasks.len() != self.tasks.len() {
+            return Err(format!(
+                "checkpoint holds {} tasks but the pipeline runs {} — \
+                 restore requires the checkpoint's parallelism",
+                tasks.len(),
+                self.tasks.len()
+            ));
+        }
+        for (task, st) in self.tasks.iter_mut().zip(tasks) {
+            task.restore_state(st)?;
+        }
+        let frontiers = state
+            .get("frontiers")
+            .and_then(|v| v.as_arr())
+            .ok_or("checkpoint state: staged snapshot is missing 'frontiers'")?;
+        for (b, per_up) in frontiers.iter().enumerate().take(self.fabric.boundary_count()) {
+            let arr = per_up
+                .as_arr()
+                .ok_or("checkpoint state: boundary frontiers are not an array")?;
+            for (u, f) in arr.iter().enumerate() {
+                let f = f
+                    .as_i64()
+                    .ok_or("checkpoint state: frontier is not an integer")?;
+                self.fabric.boundary(b).publish_frontier(u as u32, f as u64);
+            }
+        }
+        Ok(())
+    }
+
     /// Per-operator stats merged positionally across the task instances
     /// (the same shape the engine reports).
     pub fn operator_stats(&self) -> Vec<(String, StepStats)> {
@@ -837,6 +1045,98 @@ mod tests {
             "split keyed state: {merged:?}"
         );
         assert!(merged[0].contains("\"n\":2"), "{merged:?}");
+    }
+
+    #[test]
+    fn snapshot_requires_a_quiesced_fabric() {
+        let mut lx = LockstepExchange::compile(&keyed_cfg(2)).unwrap().unwrap();
+        let mut out = Vec::new();
+        // Key 0 hashes to instance 0, and task 0 pumps *before* task 1
+        // sends in a round — so task 1's packet is still queued when the
+        // round ends.
+        lx.process_round(
+            100_000,
+            &[EventBatch::default(), batch(&[0], &[1.0], 100_000)],
+            &mut out,
+        )
+        .unwrap();
+        let err = lx.snapshot().unwrap_err();
+        assert!(err.contains("quiesced"), "{err}");
+        // One idle round drains the queued packet; the snapshot succeeds.
+        lx.idle_round(100_000, &mut out).unwrap();
+        assert!(lx.snapshot().is_ok());
+    }
+
+    #[test]
+    fn lockstep_snapshot_restore_resumes_byte_identically() {
+        let rounds: Vec<(u64, Vec<EventBatch>)> = (0..8)
+            .map(|r| {
+                let ts = 100_000 + r * 200_000;
+                (
+                    ts + 10_000,
+                    vec![
+                        batch(&[3, 19, 7], &[1.0 + r as f32, 2.0, 3.5], ts),
+                        batch(&[35, 4, 11], &[4.0, 5.0 + r as f32, 6.5], ts + 50_000),
+                    ],
+                )
+            })
+            .collect();
+        let finish_at = 3_000_000u64;
+        let canon = |out: &[Record]| {
+            let mut v: Vec<String> = out
+                .iter()
+                .map(|r| String::from_utf8(r.payload().to_vec()).unwrap())
+                .collect();
+            v.sort();
+            v
+        };
+
+        // Reference: the unkilled run.
+        let mut full = LockstepExchange::compile(&keyed_cfg(2)).unwrap().unwrap();
+        let mut full_out = Vec::new();
+        for (now, batches) in &rounds {
+            full.process_round(*now, batches, &mut full_out).unwrap();
+        }
+        full.finish(finish_at, &mut full_out).unwrap();
+
+        // Killed run: snapshot after round 3 (mid-window), throw the
+        // pipeline away, restore into a fresh compile, replay the rest.
+        let mut first = LockstepExchange::compile(&keyed_cfg(2)).unwrap().unwrap();
+        let mut killed_out = Vec::new();
+        for (now, batches) in &rounds[..4] {
+            first.process_round(*now, batches, &mut killed_out).unwrap();
+        }
+        let quiesce_now = rounds[3].0;
+        first.idle_round(quiesce_now, &mut killed_out).unwrap();
+        let snap = first.snapshot().unwrap();
+        drop(first); // the crash
+
+        let mut resumed = LockstepExchange::compile(&keyed_cfg(2)).unwrap().unwrap();
+        resumed.restore(&snap).unwrap();
+        for (now, batches) in &rounds[4..] {
+            resumed
+                .process_round(*now, batches, &mut killed_out)
+                .unwrap();
+        }
+        resumed.finish(finish_at, &mut killed_out).unwrap();
+
+        assert!(!full_out.is_empty());
+        assert_eq!(
+            canon(&full_out),
+            canon(&killed_out),
+            "kill+restore must not change any emitted aggregate"
+        );
+    }
+
+    #[test]
+    fn restore_rejects_parallelism_mismatch_readably() {
+        let mut lx = LockstepExchange::compile(&keyed_cfg(2)).unwrap().unwrap();
+        let mut out = Vec::new();
+        lx.idle_round(50_000, &mut out).unwrap();
+        let snap = lx.snapshot().unwrap();
+        let mut wider = LockstepExchange::compile(&keyed_cfg(4)).unwrap().unwrap();
+        let err = wider.restore(&snap).unwrap_err();
+        assert!(err.contains("parallelism"), "{err}");
     }
 
     #[test]

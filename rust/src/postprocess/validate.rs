@@ -107,6 +107,56 @@ pub fn validate_results(results: &Json) -> Vec<Violation> {
             });
         }
     }
+    // Kill-and-restore runs carry a `recovery` block; its accounting must
+    // be internally consistent with the event counters.
+    if let Some(rec) = results.get("recovery") {
+        let replayed = get_f(results, &["recovery", "replayed_records"]).unwrap_or(-1.0);
+        let rt = get_f(results, &["recovery", "recovery_time_us"]).unwrap_or(-1.0);
+        let ckpts = get_f(results, &["recovery", "checkpoints"]).unwrap_or(-1.0);
+        if replayed < 0.0 || rt < 0.0 || ckpts < 0.0 {
+            v.push(Violation {
+                check: "recovery-counters-present",
+                detail: "missing recovery.{replayed_records,recovery_time_us,checkpoints}".into(),
+            });
+        }
+        if replayed > generated {
+            v.push(Violation {
+                check: "recovery-replay-bound",
+                detail: format!("replayed {replayed} > generated {generated}"),
+            });
+        }
+        match rec.get("cold_start").and_then(|c| c.as_bool()) {
+            None => v.push(Violation {
+                check: "recovery-cold-start-present",
+                detail: "recovery.cold_start missing or not a bool".into(),
+            }),
+            Some(false) => {
+                // A warm restore names the checkpoint it came from and
+                // implies at least one checkpoint was ever committed.
+                let epoch = get_f(results, &["recovery", "restored_epoch"]).unwrap_or(0.0);
+                if epoch < 1.0 {
+                    v.push(Violation {
+                        check: "recovery-restore-epoch",
+                        detail: format!("warm restore but restored_epoch {epoch}"),
+                    });
+                }
+                if ckpts < 1.0 {
+                    v.push(Violation {
+                        check: "recovery-checkpointed",
+                        detail: format!("warm restore but checkpoints {ckpts}"),
+                    });
+                }
+            }
+            Some(true) => {}
+        }
+        // A fault that forced replay cannot have recovered in zero time.
+        if replayed > 0.0 && rt == 0.0 {
+            v.push(Violation {
+                check: "recovery-time-nonzero",
+                detail: format!("replayed {replayed} records in 0 µs"),
+            });
+        }
+    }
     v
 }
 
@@ -170,6 +220,66 @@ mod tests {
         let j = parse(r#"{"pipeline": "cpu"}"#).unwrap();
         let v = validate_results(&j);
         assert_eq!(v[0].check, "counters-present");
+    }
+
+    fn good_recovery() -> Json {
+        let mut j = good();
+        let rec = parse(
+            r#"{
+            "recovery_time_us": 1500, "replayed_records": 120,
+            "restored_epoch": 3, "cold_start": false,
+            "corrupt_skipped": 0, "checkpoints": 4,
+            "checkpoint_bytes": 2048, "checkpoint_write_us": 90
+        }"#,
+        )
+        .unwrap();
+        j.set("recovery", rec);
+        j
+    }
+
+    #[test]
+    fn recovery_block_validates_when_consistent() {
+        assert!(validate_results(&good_recovery()).is_empty());
+    }
+
+    #[test]
+    fn detects_replay_exceeding_generated() {
+        let mut j = good_recovery();
+        crate::config::overlay(&mut j, "recovery.replayed_records", Json::Int(5000));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "recovery-replay-bound"), "{v:?}");
+    }
+
+    #[test]
+    fn detects_warm_restore_without_checkpoint_evidence() {
+        let mut j = good_recovery();
+        crate::config::overlay(&mut j, "recovery.restored_epoch", Json::Int(0));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "recovery-restore-epoch"), "{v:?}");
+        let mut j = good_recovery();
+        crate::config::overlay(&mut j, "recovery.checkpoints", Json::Int(0));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "recovery-checkpointed"), "{v:?}");
+    }
+
+    #[test]
+    fn detects_instant_recovery_with_replay() {
+        let mut j = good_recovery();
+        crate::config::overlay(&mut j, "recovery.recovery_time_us", Json::Int(0));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "recovery-time-nonzero"), "{v:?}");
+    }
+
+    #[test]
+    fn fault_free_run_needs_no_recovery_block() {
+        // `good()` has no recovery block and must stay clean (covered by
+        // clean_run_validates) — and a cold start with zero replay is
+        // also legitimate (nothing survived, nothing re-read).
+        let mut j = good_recovery();
+        crate::config::overlay(&mut j, "recovery.cold_start", Json::Bool(true));
+        crate::config::overlay(&mut j, "recovery.restored_epoch", Json::Int(0));
+        crate::config::overlay(&mut j, "recovery.checkpoints", Json::Int(0));
+        assert!(validate_results(&j).is_empty());
     }
 
     #[test]

@@ -1,0 +1,438 @@
+//! Crash/restore equivalence suite: an aligned checkpoint taken
+//! mid-stream, a kill that throws away everything after it, and a
+//! restore into a freshly built pipeline must together produce **byte
+//! identical final aggregates** to an unkilled run — across several
+//! checkpoint positions, during an open event-time pane, and across a
+//! keyed exchange at parallelism 2 and 4 (the `shuffle_equivalence`
+//! methodology: canonical multiset equality over sorted
+//! `(window end, key, payload)` triples).
+//!
+//! The state round-trips through real [`CheckpointStore`] files — magic,
+//! version, CRC32, temp-then-rename — not through in-memory Json, so the
+//! suite also proves the on-disk format carries everything a restore
+//! needs.  One wall-mode test drives the threaded engine's full
+//! kill-and-restore path and checks `recovery` lands in results.json.
+//!
+//! Values are multiples of 0.25 in a small range, so pane sums are exact
+//! in f32 and aggregation is order-independent: equality tests the
+//! snapshot/restore and routing logic, not float-summation luck.
+
+use sprobench::broker::Record;
+use sprobench::config::{BenchConfig, OpSpec, PipelineSpec};
+use sprobench::coordinator::run_recovery;
+use sprobench::engine::{
+    AggKind, Checkpoint, CheckpointStore, EventBatch, LatePolicy, TaskPart, WindowTime,
+};
+use sprobench::pipelines::{LockstepExchange, StepFactory};
+use sprobench::postprocess::validate_results;
+use sprobench::util::json::Json;
+
+/// One synthetic event: (sensor id, value, generation timestamp).
+type Ev = (u32, f32, u64);
+
+/// Canonicalized egestion output: sorted `(window end, key, payload)`.
+type Canon = Vec<(u64, u32, Vec<u8>)>;
+
+fn canonical(out: &[Record]) -> Canon {
+    let mut v: Vec<_> = out
+        .iter()
+        .map(|r| (r.gen_ts_micros, r.key, r.payload().to_vec()))
+        .collect();
+    v.sort();
+    v
+}
+
+/// Multiset containment: every entry of `sub` appears in `sup` at least
+/// as many times (both canonical, i.e. sorted).
+fn multiset_contains(sup: &Canon, sub: &Canon) -> bool {
+    let mut i = 0;
+    for s in sub {
+        while i < sup.len() && &sup[i] < s {
+            i += 1;
+        }
+        if i >= sup.len() || &sup[i] != s {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+fn batch_of(events: &[Ev]) -> EventBatch {
+    EventBatch {
+        ids: events.iter().map(|e| e.0).collect(),
+        temps: events.iter().map(|e| e.1).collect(),
+        gen_ts: events.iter().map(|e| e.2).collect(),
+        append_ts: events.iter().map(|e| e.2).collect(),
+        payload_bytes: events.len() as u64 * 27,
+    }
+}
+
+fn shard(events: &[Ev], par: usize) -> Vec<Vec<Ev>> {
+    let mut shards = vec![Vec::new(); par];
+    for (i, ev) in events.iter().enumerate() {
+        shards[i % par].push(*ev);
+    }
+    shards
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sprobench-ckptrec-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Round-trip one snapshot through an on-disk checkpoint file and hand
+/// back the restored state plus the epoch it claims.
+fn through_store(tag: &str, epoch: u64, events_in: u64, state: Json) -> (u64, Json) {
+    let dir = ckpt_dir(tag);
+    let store = CheckpointStore::new(&dir, 3);
+    store
+        .write(&Checkpoint {
+            epoch,
+            tasks: vec![TaskPart {
+                offsets: vec![(0, events_in)],
+                events_in,
+                state,
+            }],
+        })
+        .expect("checkpoint write");
+    let scan = store.latest();
+    assert!(scan.skipped.is_empty(), "clean dir must scan clean: {:?}", scan.skipped);
+    let ckpt = scan.checkpoint.expect("just-written checkpoint is latest");
+    let _ = std::fs::remove_dir_all(&dir);
+    (ckpt.epoch, ckpt.tasks[0].state.clone())
+}
+
+// --- flat chain --------------------------------------------------------------
+
+/// Deterministic batches for the flat-chain tests: 12 feeds of 250
+/// events, one per 100ms, with event timestamps spread over the first
+/// 75ms of each feed interval (so event-time panes straddle feeds).
+fn flat_batches() -> Vec<Vec<Ev>> {
+    (0..12u64)
+        .map(|b| {
+            (0..250u64)
+                .map(|i| {
+                    let n = b * 250 + i;
+                    (
+                        ((n * 7) % 64) as u32,
+                        ((n % 40) as f32) * 0.25,
+                        100_000 + b * 100_000 + i * 300,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn flat_now(b: usize) -> u64 {
+    200_000 + b as u64 * 100_000
+}
+
+/// Run the flat windowed chain over `batches`, optionally killing after
+/// a snapshot at batch index `kill_at` and restoring from an on-disk
+/// checkpoint file.  Returns the canonical output an observer that
+/// deduplicates the kill-window sees: pre-snapshot emissions + the
+/// restored run's.
+fn run_flat(
+    spec: &PipelineSpec,
+    batches: &[Vec<Ev>],
+    kill_at: Option<usize>,
+    tag: &str,
+) -> Canon {
+    let mut cfg = BenchConfig::default();
+    cfg.engine.use_hlo = false;
+    cfg.engine.parallelism = 1;
+    cfg.workload.sensors = 64;
+    cfg.engine.pipeline_spec = Some(spec.clone());
+    let factory = StepFactory::new(&cfg, None);
+    let end = flat_now(batches.len()) + 2_500_000;
+
+    let mut step = factory.create(0).expect("compile flat chain");
+    let mut out = Vec::new();
+    let Some(k) = kill_at else {
+        for (b, evs) in batches.iter().enumerate() {
+            step.process(flat_now(b), &[], &batch_of(evs), &mut out).unwrap();
+        }
+        step.finish(end, &mut out).unwrap();
+        return canonical(&out);
+    };
+
+    // Doomed incarnation: feed to the snapshot point, checkpoint, then
+    // keep working a little — everything after the snapshot dies with it.
+    for (b, evs) in batches.iter().enumerate().take(k) {
+        step.process(flat_now(b), &[], &batch_of(evs), &mut out).unwrap();
+    }
+    let snap = step.snapshot().expect("flat chain snapshots");
+    let n_snap = out.len();
+    let fed: u64 = batches.iter().take(k).map(|b| b.len() as u64).sum();
+    for (b, evs) in batches.iter().enumerate().skip(k).take(2) {
+        step.process(flat_now(b), &[], &batch_of(evs), &mut out).unwrap();
+    }
+    drop(step); // the kill: no finish, no flush
+
+    let (epoch, state) = through_store(tag, k as u64, fed, snap);
+    assert_eq!(epoch, k as u64);
+    let mut restored = factory.create(0).expect("recompile flat chain");
+    restored.restore(&state).expect("restore flat chain");
+    let mut out2 = Vec::new();
+    for (b, evs) in batches.iter().enumerate().skip(k) {
+        restored.process(flat_now(b), &[], &batch_of(evs), &mut out2).unwrap();
+    }
+    restored.finish(end, &mut out2).unwrap();
+
+    // At-least-once: whatever the doomed incarnation emitted after the
+    // snapshot is re-emitted (as duplicates) by the restored run.
+    assert!(
+        multiset_contains(&canonical(&out2), &canonical(&out[n_snap..])),
+        "{tag}: post-snapshot emissions lost by the restore"
+    );
+    let mut merged: Vec<Record> = out[..n_snap].to_vec();
+    merged.extend(out2);
+    canonical(&merged)
+}
+
+#[test]
+fn flat_chain_restore_equivalence_at_several_checkpoint_positions() {
+    let spec = PipelineSpec {
+        ops: vec![
+            OpSpec::window(AggKind::Sum, 1_000_000, 500_000),
+            OpSpec::EmitAggregates,
+        ],
+    };
+    let batches = flat_batches();
+    let baseline = run_flat(&spec, &batches, None, "flat-base");
+    assert!(!baseline.is_empty(), "windows must emit");
+    // Early, mid-run, and late checkpoints; every kill+restore converges
+    // to the same final aggregates.
+    for k in [2usize, 5, 9] {
+        let got = run_flat(&spec, &batches, Some(k), &format!("flat-k{k}"));
+        assert_eq!(
+            got, baseline,
+            "kill after batch {k} must be byte-identical to the unkilled run"
+        );
+    }
+}
+
+#[test]
+fn event_time_flat_chain_restores_during_an_open_pane_under_disorder() {
+    // Event-time panes stay open across the snapshot point (1s windows,
+    // 100ms feeds), and the stream is block-reversed (`disorder`-style
+    // bounded displacement): the snapshot must carry the open pane
+    // contents AND the watermark tracker, or replayed rows double-count
+    // and pane boundaries shift.
+    let spec = PipelineSpec {
+        ops: vec![
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 1_000_000,
+                slide_micros: 500_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: 2_000_000,
+                late_policy: LatePolicy::MergeIfOpen,
+                watermark_micros: 500_000,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    };
+    // Block-reverse each feed (≤ 31 × 300µs = 9.3ms displacement, far
+    // inside the allowed lateness): the same events, out of order.
+    let ordered = flat_batches();
+    let mut disordered = ordered.clone();
+    for b in &mut disordered {
+        for block in b.chunks_mut(32) {
+            block.reverse();
+        }
+    }
+    let baseline = run_flat(&spec, &ordered, None, "evt-base");
+    assert!(!baseline.is_empty());
+    for k in [3usize, 7] {
+        let got = run_flat(&spec, &disordered, Some(k), &format!("evt-k{k}"));
+        assert_eq!(
+            got, baseline,
+            "disordered event-time kill after batch {k} must match the \
+             ordered unkilled run"
+        );
+    }
+}
+
+// --- keyed exchange ----------------------------------------------------------
+
+fn keyed_spec() -> PipelineSpec {
+    PipelineSpec {
+        ops: vec![
+            OpSpec::KeyBy {
+                modulo: 16,
+                parallelism: 0,
+            },
+            OpSpec::Window {
+                agg: AggKind::Mean,
+                window_micros: 1_000_000,
+                slide_micros: 500_000,
+                time: WindowTime::Event,
+                allowed_lateness_micros: 2_000_000,
+                late_policy: LatePolicy::MergeIfOpen,
+                watermark_micros: 500_000,
+            },
+            OpSpec::EmitAggregates,
+        ],
+    }
+}
+
+/// A disordered keyed event-time stream: 4 000 events over 8 s,
+/// block-reversed in chunks of 32 (≤ 62ms displacement).
+fn keyed_stream() -> Vec<Ev> {
+    let mut evs: Vec<Ev> = (0..4_000u64)
+        .map(|i| (((i * 7) % 64) as u32, ((i % 40) as f32) * 0.25, 100_000 + i * 2_000))
+        .collect();
+    for block in evs.chunks_mut(32) {
+        block.reverse();
+    }
+    evs
+}
+
+/// Drive the staged keyed chain on the lockstep harness in 20 feed
+/// rounds, optionally snapshotting after round `kill_at` (through a real
+/// checkpoint file), killing, and restoring into a recompiled pipeline.
+fn run_keyed(par: u32, kill_at: Option<usize>, tag: &str) -> Canon {
+    let mut cfg = BenchConfig::default();
+    cfg.engine.use_hlo = false;
+    cfg.engine.parallelism = par;
+    cfg.workload.sensors = 64;
+    cfg.engine.pipeline_spec = Some(keyed_spec());
+    let stream = keyed_stream();
+    let chunks: Vec<&[Ev]> = stream.chunks(200).collect();
+    let now_of = |chunk: &[Ev]| chunk.iter().map(|e| e.2).max().unwrap() + 10_000;
+    let end = stream.iter().map(|e| e.2).max().unwrap() + 4_000_000;
+
+    let mut lx = LockstepExchange::compile(&cfg).unwrap().expect("keyed spec stages");
+    let p = lx.parallelism() as usize;
+    let mut out = Vec::new();
+    let feed = |lx: &mut LockstepExchange, chunk: &[Ev], out: &mut Vec<Record>| {
+        let batches: Vec<EventBatch> = shard(chunk, p).iter().map(|s| batch_of(s)).collect();
+        lx.process_round(now_of(chunk), &batches, out).unwrap();
+    };
+
+    let Some(k) = kill_at else {
+        for (i, chunk) in chunks.iter().enumerate() {
+            feed(&mut lx, chunk, &mut out);
+            if i + 1 == 8 {
+                // Mirror the killed runs' quiesce rounds so the round
+                // schedule is identical in both schedules.
+                for _ in 0..4 {
+                    lx.idle_round(now_of(chunk), &mut out).unwrap();
+                }
+            }
+        }
+        for _ in 0..4 {
+            lx.idle_round(end, &mut out).unwrap();
+        }
+        lx.finish(end, &mut out).unwrap();
+        return canonical(&out);
+    };
+
+    for chunk in chunks.iter().take(k) {
+        feed(&mut lx, chunk, &mut out);
+    }
+    // Aligned snapshot needs a quiesced fabric: idle rounds drain it.
+    let quiesce_now = now_of(chunks[k - 1]);
+    for _ in 0..4 {
+        lx.idle_round(quiesce_now, &mut out).unwrap();
+    }
+    let snap = lx.snapshot().expect("quiesced staged pipeline snapshots");
+    let n_snap = out.len();
+    let fed = (k * 200) as u64;
+    for chunk in chunks.iter().skip(k).take(2) {
+        feed(&mut lx, chunk, &mut out);
+    }
+    drop(lx); // the kill, mid-open-pane and mid-exchange
+
+    let (_, state) = through_store(tag, k as u64, fed, snap);
+    let mut lx2 = LockstepExchange::compile(&cfg).unwrap().expect("recompile");
+    lx2.restore(&state).expect("restore staged pipeline");
+    let mut out2 = Vec::new();
+    for chunk in chunks.iter().skip(k) {
+        feed(&mut lx2, chunk, &mut out2);
+    }
+    for _ in 0..4 {
+        lx2.idle_round(end, &mut out2).unwrap();
+    }
+    lx2.finish(end, &mut out2).unwrap();
+    assert!(
+        multiset_contains(&canonical(&out2), &canonical(&out[n_snap..])),
+        "{tag}: post-snapshot emissions lost by the restore"
+    );
+    let mut merged: Vec<Record> = out[..n_snap].to_vec();
+    merged.extend(out2);
+    canonical(&merged)
+}
+
+#[test]
+fn keyed_exchange_restore_equivalence_at_parallelism_2_and_4() {
+    // The unkilled parallelism-1 run is the ground truth; kills at
+    // parallelism 2 and 4 cross the keyed exchange (routing state, gate
+    // frontiers, per-instance panes) and must still converge to it.
+    let baseline = run_keyed(1, None, "keyed-base");
+    assert!(!baseline.is_empty(), "keyed windows must emit");
+    for par in [2u32, 4] {
+        let unkilled = run_keyed(par, None, &format!("keyed-p{par}-clean"));
+        assert_eq!(
+            unkilled, baseline,
+            "par {par}: unkilled run must already be parallelism-invariant"
+        );
+        let killed = run_keyed(par, Some(8), &format!("keyed-p{par}-kill"));
+        assert_eq!(
+            killed, baseline,
+            "par {par}: kill+restore across the exchange must be byte-identical"
+        );
+    }
+}
+
+// --- wall-mode end to end ----------------------------------------------------
+
+#[test]
+fn wall_mode_kill_and_restore_reports_recovery_in_results_json() {
+    // The real threaded engine: checkpoints every 150ms, a watchdog kills
+    // the fleet 500ms in, the driver restores from the latest checkpoint
+    // file and replays.  Exactly-once accounting must hold end to end and
+    // results.json must carry a consistent, validated recovery block.
+    let mut cfg = BenchConfig::default();
+    cfg.bench.name = "ckpt-e2e".into();
+    cfg.bench.duration_micros = 1_500_000;
+    cfg.bench.warmup_micros = 0;
+    cfg.workload.rate = 60_000;
+    cfg.workload.sensors = 128;
+    cfg.engine.parallelism = 2;
+    cfg.engine.use_hlo = false;
+    cfg.engine.batch_size = 256;
+    cfg.metrics.sample_interval_micros = 100_000;
+    cfg.checkpoint.interval_micros = 150_000;
+    cfg.checkpoint.dir = ckpt_dir("wall-e2e").to_string_lossy().into_owned();
+    cfg.fault.kill_task = 1;
+    cfg.fault.kill_after_micros = 500_000;
+    cfg.validate().expect("kill-and-restore config must validate");
+
+    let (summary, _store) = run_recovery(&cfg, None).unwrap();
+    let _ = std::fs::remove_dir_all(&cfg.checkpoint.dir);
+
+    let rec = summary.recovery.expect("fault run must report recovery");
+    assert!(rec.recovery_time_micros > 0, "kill→ready must take time");
+    assert!(rec.replayed_records > 0, "kill mid-epoch must force replay");
+    assert!(!rec.cold_start, "a committed checkpoint must be restored");
+    assert!(rec.checkpoints > 0 && rec.checkpoint_bytes > 0);
+    assert_eq!(summary.processed, summary.generated, "exactly-once accounting");
+    assert!(summary.emitted >= summary.processed, "at-least-once egestion");
+
+    let j = summary.to_json();
+    let f = |k: &str| j.path(&["recovery", k]).and_then(|v| v.as_i64()).expect(k);
+    assert!(f("recovery_time_us") > 0);
+    assert!(f("replayed_records") > 0);
+    assert!(f("checkpoints") > 0);
+    assert_eq!(
+        j.path(&["recovery", "cold_start"]).and_then(|v| v.as_bool()),
+        Some(false)
+    );
+    let violations = validate_results(&j);
+    assert!(violations.is_empty(), "{violations:?}");
+}

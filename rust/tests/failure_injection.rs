@@ -6,8 +6,10 @@ use std::sync::Arc;
 
 use sprobench::broker::{Broker, BrokerConfig, Record};
 use sprobench::config::{BenchConfig, PipelineKind};
+use sprobench::coordinator::run_recovery;
 use sprobench::engine::Engine;
 use sprobench::metrics::{LatencyRecorder, ThroughputRecorder};
+use sprobench::postprocess::validate_results;
 use sprobench::wgen::{EventFormat, SensorEvent};
 
 fn cfg(pipeline: PipelineKind) -> BenchConfig {
@@ -211,4 +213,86 @@ fn window_state_survives_bursty_starvation() {
     let emits: u64 = report.tasks.iter().map(|t| t.step.window_emits).sum();
     assert!(emits >= 3, "bursty stream produced only {emits} window emits");
     assert!(emitted > 0);
+}
+
+/// Base config for the kill-and-restore degradation tests.
+fn recovery_cfg(name: &str) -> BenchConfig {
+    let mut c = cfg(PipelineKind::CpuIntensive);
+    c.bench.name = name.into();
+    c.bench.duration_micros = 1_500_000;
+    c.workload.rate = 50_000;
+    c.workload.sensors = 128;
+    c.engine.batch_size = 256;
+    c.metrics.sample_interval_micros = 100_000;
+    c.checkpoint.dir = std::env::temp_dir()
+        .join(format!("sprobench-fail-{name}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    c.fault.kill_task = 1;
+    c.fault.kill_after_micros = 500_000;
+    c
+}
+
+#[test]
+fn restore_from_missing_checkpoint_degrades_to_cold_start() {
+    // Checkpointing is on but the interval is longer than the whole run:
+    // the kill fires before any checkpoint commits, so the restore scan
+    // finds nothing and must degrade to a clean cold start — counted in
+    // results.json, with conservation still holding.
+    let mut c = recovery_cfg("coldstart");
+    c.checkpoint.interval_micros = 30_000_000; // never reached
+    c.validate().unwrap();
+    let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+    let (summary, _) = run_recovery(&c, None).unwrap();
+    let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+
+    let rec = summary.recovery.expect("fault run reports recovery");
+    assert!(rec.cold_start, "no committed checkpoint must mean cold start");
+    assert_eq!(rec.restored_epoch, 0);
+    assert_eq!(rec.checkpoints, 0, "no epoch boundary was ever crossed");
+    assert!(rec.replayed_records > 0, "cold start re-reads the whole log");
+    assert!(rec.recovery_time_micros > 0);
+    // Replays are subtracted: distinct processed records stay conserved.
+    assert_eq!(summary.processed, summary.generated, "{rec:?}");
+    let violations = validate_results(&summary.to_json());
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+#[test]
+fn corrupt_latest_checkpoint_falls_back_and_tmp_orphans_are_ignored() {
+    // The newest-looking checkpoint file is garbage (a torn disk write)
+    // and a `.tmp` orphan simulates a kill mid-checkpoint-write.  The
+    // restore must skip the corrupt file (counted), never consider the
+    // orphan — temp-then-rename keeps partial files un-observable as
+    // "latest" — and warm-restore from the newest valid epoch.
+    let mut c = recovery_cfg("corrupt");
+    c.checkpoint.interval_micros = 150_000;
+    c.validate().unwrap();
+    let dir = std::path::PathBuf::from(&c.checkpoint.dir);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // Epoch numbers derive from run time, so 99999999 always sorts newest.
+    std::fs::write(dir.join("ckpt-99999999.json"), b"garbage, not a checkpoint").unwrap();
+    std::fs::write(dir.join("ckpt-99999998.json.tmp"), b"half a checkp").unwrap();
+
+    let (summary, _) = run_recovery(&c, None).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let rec = summary.recovery.expect("fault run reports recovery");
+    assert_eq!(
+        rec.corrupt_skipped, 1,
+        "exactly the corrupt file is skipped; the .tmp orphan is never a \
+         candidate: {rec:?}"
+    );
+    assert!(!rec.cold_start, "a valid older epoch must be restored");
+    assert!(rec.restored_epoch >= 1);
+    assert!(rec.replayed_records > 0);
+    assert_eq!(summary.processed, summary.generated, "{rec:?}");
+    let j = summary.to_json();
+    assert!(
+        j.path(&["recovery", "corrupt_skipped"]).and_then(|v| v.as_i64()) == Some(1),
+        "degradation must be counted in results.json"
+    );
+    let violations = validate_results(&j);
+    assert!(violations.is_empty(), "{violations:?}");
 }

@@ -2,9 +2,15 @@
 //! state) using the in-tree mini property-test framework.
 
 use sprobench::broker::{Broker, BrokerConfig, Record, Topic};
-use sprobench::engine::SlidingWindow;
+use sprobench::config::{BenchConfig, OpSpec, PipelineSpec};
+use sprobench::engine::{
+    AggKind, Checkpoint, CheckpointStore, EventBatch, LatePolicy, SlidingWindow, TaskPart,
+    WatermarkTracker, WindowTime,
+};
+use sprobench::pipelines::{LockstepExchange, StepFactory};
 use sprobench::util::clock;
 use sprobench::util::histogram::Histogram;
+use sprobench::util::json::Json;
 use sprobench::util::proptest::{check, Config};
 use sprobench::wgen::{EventFormat, SensorEvent};
 
@@ -157,6 +163,231 @@ fn prop_histogram_merge_commutes() {
         }
         Ok(())
     });
+}
+
+/// Random event batch over `keys` sensors with exact-in-f32 values.
+fn gen_batch(g: &mut sprobench::util::proptest::Gen, n: usize, keys: u64, t0: u64) -> EventBatch {
+    let mut ids = Vec::with_capacity(n);
+    let mut temps = Vec::with_capacity(n);
+    let mut ts = Vec::with_capacity(n);
+    for _ in 0..n {
+        ids.push(g.u64(0..keys) as u32);
+        temps.push((g.u64(0..120) as f32) * 0.25);
+        ts.push(t0 + g.u64(0..400_000));
+    }
+    EventBatch {
+        payload_bytes: n as u64 * 27,
+        ids,
+        temps,
+        gen_ts: ts.clone(),
+        append_ts: ts,
+    }
+}
+
+#[test]
+fn prop_window_chain_snapshot_restore_identity() {
+    // snapshot → restore → snapshot is the identity on serialized state,
+    // and the restored chain behaves identically on any suffix — for
+    // processing-time and event-time windows under arbitrary sequences.
+    check(Config::default().cases(30), "chain-snapshot-roundtrip", |g| {
+        let event_time = g.bool();
+        let agg = match g.u64(0..3) {
+            0 => AggKind::Mean,
+            1 => AggKind::Sum,
+            _ => AggKind::Max,
+        };
+        let window = OpSpec::Window {
+            agg,
+            window_micros: 1_000_000,
+            slide_micros: 500_000,
+            time: if event_time { WindowTime::Event } else { WindowTime::Processing },
+            allowed_lateness_micros: 1_000_000,
+            late_policy: LatePolicy::MergeIfOpen,
+            watermark_micros: 400_000,
+        };
+        let mut cfg = BenchConfig::default();
+        cfg.engine.use_hlo = false;
+        cfg.engine.parallelism = 1;
+        cfg.workload.sensors = 32;
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![window, OpSpec::EmitAggregates],
+        });
+        let factory = StepFactory::new(&cfg, None);
+
+        let mut step = factory.create(0).map_err(|e| e.to_string())?;
+        let mut sink = Vec::new();
+        let rounds = g.usize(1..6);
+        for r in 0..rounds as u64 {
+            let b = gen_batch(g, g.usize(1..200), 32, 100_000 + r * 300_000);
+            step.process(200_000 + r * 300_000, &[], &b, &mut sink)
+                .map_err(|e| e.to_string())?;
+        }
+        let snap = step.snapshot().map_err(|e| e.to_string())?;
+
+        let mut restored = factory.create(0).map_err(|e| e.to_string())?;
+        restored.restore(&snap).map_err(|e| e.to_string())?;
+        let again = restored.snapshot().map_err(|e| e.to_string())?;
+        if again != snap {
+            return Err(format!("state drifted through restore:\n{snap:?}\nvs\n{again:?}"));
+        }
+
+        // Identical suffix into the original and the restored twin.
+        let t1 = 200_000 + rounds as u64 * 300_000;
+        let suffix = gen_batch(g, g.usize(1..200), 32, t1);
+        let end = t1 + 3_000_000;
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        step.process(t1, &[], &suffix, &mut a).map_err(|e| e.to_string())?;
+        step.finish(end, &mut a).map_err(|e| e.to_string())?;
+        restored.process(t1, &[], &suffix, &mut b).map_err(|e| e.to_string())?;
+        restored.finish(end, &mut b).map_err(|e| e.to_string())?;
+        let canon = |v: &[Record]| {
+            let mut c: Vec<_> = v
+                .iter()
+                .map(|r| (r.gen_ts_micros, r.key, r.payload().to_vec()))
+                .collect();
+            c.sort();
+            c
+        };
+        if canon(&a) != canon(&b) {
+            return Err(format!(
+                "restored chain diverged on the suffix: {} vs {} records",
+                a.len(),
+                b.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_keyed_topk_snapshot_restore_identity() {
+    // The staged keyby→window→topk pipeline (top-k selection state, gate
+    // frontiers, per-instance panes) round-trips through snapshot/restore
+    // at a quiesce point under arbitrary event sequences.
+    check(Config::default().cases(10), "topk-snapshot-roundtrip", |g| {
+        let mut cfg = BenchConfig::default();
+        cfg.engine.use_hlo = false;
+        cfg.engine.parallelism = 1 + g.u64(0..2) as u32;
+        cfg.workload.sensors = 32;
+        cfg.engine.pipeline_spec = Some(PipelineSpec {
+            ops: vec![
+                OpSpec::KeyBy {
+                    modulo: 8,
+                    parallelism: 0,
+                },
+                OpSpec::window(AggKind::Sum, 1_000_000, 500_000),
+                OpSpec::TopK {
+                    k: 3,
+                    parallelism: 0,
+                },
+                OpSpec::EmitAggregates,
+            ],
+        });
+        let mut lx = LockstepExchange::compile(&cfg)
+            .map_err(|e| e.to_string())?
+            .ok_or("keyed spec must stage")?;
+        let par = lx.parallelism() as usize;
+        let mut sink = Vec::new();
+        for r in 0..g.u64(1..4) {
+            let b = gen_batch(g, g.usize(par..160), 32, 100_000 + r * 300_000);
+            let now = 200_000 + r * 300_000;
+            lx.process_round(now, &[b], &mut sink).map_err(|e| e.to_string())?;
+            // Idle rounds quiesce the fabric (window emissions crossing
+            // the topk boundary need an extra drain pass).
+            for _ in 0..3 {
+                lx.idle_round(now, &mut sink).map_err(|e| e.to_string())?;
+            }
+        }
+        let snap = lx.snapshot().map_err(|e| e.to_string())?;
+        let mut lx2 = LockstepExchange::compile(&cfg)
+            .map_err(|e| e.to_string())?
+            .ok_or("recompile must stage")?;
+        lx2.restore(&snap).map_err(|e| e.to_string())?;
+        let again = lx2.snapshot().map_err(|e| e.to_string())?;
+        if again != snap {
+            return Err("staged state drifted through restore".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_watermark_snapshot_restore_identity() {
+    check(Config::default().cases(120), "watermark-snapshot-roundtrip", |g| {
+        let bound = g.u64(0..2_000_000);
+        let mut a = WatermarkTracker::new(bound);
+        for _ in 0..g.usize(0..120) {
+            a.observe(g.u64(0..1 << 40));
+            if g.bool() {
+                a.advance();
+            }
+        }
+        let (max_ts, watermark, seen) = a.export_state();
+        let mut b = WatermarkTracker::new(bound);
+        b.import_state(max_ts, watermark, seen);
+        if b.export_state() != a.export_state() {
+            return Err("import is not the inverse of export".into());
+        }
+        // Identical suffix observations keep the twins in lockstep.
+        for _ in 0..g.usize(1..40) {
+            let t = g.u64(0..1 << 40);
+            a.observe(t);
+            b.observe(t);
+            if a.advance() != b.advance() {
+                return Err("watermarks diverged after restore".into());
+            }
+        }
+        if a.watermark() != b.watermark() || a.max_ts() != b.max_ts() {
+            return Err(format!(
+                "final state diverged: {:?} vs {:?}",
+                a.export_state(),
+                b.export_state()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupt_checkpoint_files_rejected_readably() {
+    // Any truncation or single-bit flip of a checkpoint file must fail
+    // the load with a readable error — never a panic, never a silently
+    // wrong restore.
+    let dir = std::env::temp_dir().join(format!("sprobench-prop-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = CheckpointStore::new(&dir, 0);
+    check(Config::default().cases(150), "checkpoint-corruption", |g| {
+        let tasks = (0..g.usize(1..4))
+            .map(|t| {
+                let mut state = Json::obj();
+                state.set("pane", Json::Int(g.u64(0..1 << 50) as i64));
+                TaskPart {
+                    offsets: vec![(t as u32, g.u64(0..1 << 50))],
+                    events_in: g.u64(0..1 << 50),
+                    state,
+                }
+            })
+            .collect();
+        let ckpt = Checkpoint { epoch: 1, tasks };
+        store.write(&ckpt).map_err(|e| e.to_string())?;
+        let path = store.dir().join("ckpt-00000001.json");
+        let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        if g.bool() {
+            // Truncate to a proper prefix (possibly empty).
+            bytes.truncate(g.usize(0..bytes.len()));
+        } else {
+            // Flip one bit anywhere in the document.
+            let i = g.usize(0..bytes.len());
+            bytes[i] ^= 1 << g.u64(0..8);
+        }
+        std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+        match store.load(1) {
+            Ok(_) => Err("corrupt checkpoint loaded successfully".into()),
+            Err(e) if e.is_empty() => Err("empty error message".into()),
+            Err(_) => Ok(()),
+        }
+    });
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
