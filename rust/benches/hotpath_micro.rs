@@ -306,6 +306,7 @@ fn e2e_checkpointed(
                         tasks: vec![TaskPart {
                             offsets: vec![(0, seen)],
                             events_in: seen,
+                            parse_failures: 0,
                             state,
                         }],
                     })
@@ -577,6 +578,7 @@ fn main() {
                 tasks: vec![TaskPart {
                     offsets: vec![(0, (mid * 512) as u64)],
                     events_in: (mid * 512) as u64,
+                    parse_failures: 0,
                     state,
                 }],
             })

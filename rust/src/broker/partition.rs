@@ -15,6 +15,7 @@
 //! mid-batch likewise retains a sliced tail.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use super::batch::RecordBatch;
@@ -53,6 +54,10 @@ pub struct Partition {
     space: Condvar,
     data: Condvar,
     capacity: usize,
+    /// Fault-injection switch (`fault.schedule: stall_partition`): while
+    /// set, fetches serve no data — consumers see an empty poll and retry,
+    /// producers keep appending until capacity backpressures them.
+    stalled: AtomicBool,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -72,7 +77,22 @@ impl Partition {
             space: Condvar::new(),
             data: Condvar::new(),
             capacity: capacity.max(1),
+            stalled: AtomicBool::new(false),
         }
+    }
+
+    /// Freeze or release fetches (fault injection).  A stalled partition
+    /// behaves like a broker node that stopped answering fetch requests:
+    /// appended data is retained but not served until the stall clears.
+    pub fn set_stalled(&self, stalled: bool) {
+        self.stalled.store(stalled, Ordering::Release);
+        if !stalled {
+            self.data.notify_all();
+        }
+    }
+
+    pub fn is_stalled(&self) -> bool {
+        self.stalled.load(Ordering::Acquire)
     }
 
     /// Append a whole batch under one lock acquisition: stamps the batch's
@@ -147,6 +167,15 @@ impl Partition {
         }
         let mut log = self.log.lock().expect("partition log");
         loop {
+            // A stalled (fault-injected) partition serves nothing until
+            // released; close still wins so teardown drains are never stuck.
+            if self.stalled.load(Ordering::Acquire) && !log.closed {
+                if !blocking {
+                    return Ok(offset);
+                }
+                log = self.data.wait(log).expect("partition log");
+                continue;
+            }
             if offset < log.hwm {
                 // Fetching below the low watermark silently clamps forward.
                 let start = offset.max(log.base_offset);
@@ -424,6 +453,52 @@ mod tests {
         let mut buf = Vec::new();
         p.fetch(0, 10, &mut buf, false).unwrap();
         assert!(buf.iter().all(|r| r.append_ts_micros == 500));
+    }
+
+    #[test]
+    fn stalled_partition_serves_nothing_until_released() {
+        let p = Partition::new(64);
+        for i in 0..4 {
+            p.append(rec(i as u32, i), i).unwrap();
+        }
+        p.set_stalled(true);
+        assert!(p.is_stalled());
+        let mut buf = Vec::new();
+        // Non-blocking fetch looks like an empty poll, not an error.
+        assert_eq!(p.fetch(0, 10, &mut buf, false).unwrap(), 0);
+        assert!(buf.is_empty());
+        // Producers keep appending while stalled.
+        p.append(rec(9, 9), 9).unwrap();
+        // A blocking fetch parks until the stall is released.
+        let p2 = Arc::new(Partition::new(64));
+        p2.append(rec(0, 0), 0).unwrap();
+        p2.set_stalled(true);
+        let pf = p2.clone();
+        let fetcher = std::thread::spawn(move || {
+            let mut b = Vec::new();
+            pf.fetch(0, 10, &mut b, true).map(|next| (next, b.len()))
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!fetcher.is_finished(), "fetcher should wait out the stall");
+        p2.set_stalled(false);
+        assert_eq!(fetcher.join().unwrap().unwrap(), (1, 1));
+        // Release on the first partition serves the retained backlog.
+        p.set_stalled(false);
+        assert_eq!(p.fetch(0, 10, &mut buf, false).unwrap(), 5);
+        assert_eq!(buf.len(), 5);
+    }
+
+    #[test]
+    fn close_wins_over_stall_for_drains() {
+        let p = Partition::new(64);
+        p.append(rec(0, 0), 0).unwrap();
+        p.set_stalled(true);
+        p.close();
+        let mut buf = Vec::new();
+        // Teardown drains still see the data even if a stall was pending.
+        assert_eq!(p.fetch(0, 10, &mut buf, true).unwrap(), 1);
+        assert_eq!(buf.len(), 1);
+        assert_eq!(p.fetch(1, 10, &mut buf, true), Err(PartitionClosed));
     }
 
     #[test]

@@ -319,6 +319,52 @@ fn print_summary(s: &crate::coordinator::RunSummary) {
             ),
         ]);
     }
+    if let Some(res) = &s.resilience {
+        rows.push(vec![
+            "faults inj/det/healed".into(),
+            format!("{} / {} / {}", res.injected, res.detected, res.healed),
+        ]);
+        rows.push(vec![
+            "supervisor".into(),
+            format!(
+                "{} restart(s) ({} cold), detect {}, mttr {}, down {}",
+                res.restart_count,
+                res.cold_starts,
+                fmt_micros(res.detect_micros),
+                fmt_micros(res.mttr_micros),
+                fmt_micros(res.downtime_micros)
+            ),
+        ]);
+        if res.poison_records > 0 {
+            rows.push(vec![
+                "quarantine".into(),
+                format!(
+                    "{} poison record(s), {} dead-letter sample(s)",
+                    res.poison_records,
+                    res.dead_letters.len()
+                ),
+            ]);
+        }
+    }
+    for f in &s.faults {
+        rows.push(vec![
+            format!("fault {}", f.spec.kind.name()),
+            format!(
+                "{} @{}: detect {}, mttr {}{}",
+                f.spec.kind.target(),
+                fmt_micros(f.spec.at_micros),
+                fmt_micros(f.detect_micros()),
+                fmt_micros(f.mttr_micros()),
+                if f.injected_at.is_none() {
+                    " (never injected)"
+                } else if f.healed_at.is_none() {
+                    " (UNHEALED)"
+                } else {
+                    ""
+                }
+            ),
+        ]);
+    }
     println!("{}", ascii_table(&["metric", "value"], &rows));
     if !s.operators.is_empty() {
         println!("per-operator stats (merged across tasks):");

@@ -13,8 +13,8 @@ pub mod yaml;
 
 pub use schema::{
     parse_pipeline_spec, pipeline_grammar, BenchConfig, CheckpointSection, CmpOp, ConfigError,
-    DisorderSection, ExchangeMode, ExecMode, FaultSection, Framework, OpSpec, Pattern,
-    PipelineKind, PipelineSpec, StageSpec,
+    DisorderSection, ExchangeMode, ExecMode, FaultKind, FaultSection, FaultSpec, Framework,
+    OpSpec, Pattern, PipelineKind, PipelineSpec, StageSpec,
 };
 
 use crate::util::json::Json;

@@ -561,30 +561,138 @@ impl CheckpointSection {
     }
 }
 
-/// Fault-injection plan (the `fault:` section): kill one engine task
-/// mid-run — an abort, not a graceful stop: no window flush, no offset
-/// commit — then restart the fleet, restoring from the latest committed
-/// checkpoint when `restore` is on.  Drives the kill-and-restore recovery
-/// path measured by `recovery_time_us` / `replayed_records` in
-/// results.json.
+/// One fault from the declarative schedule (the `fault.schedule:` list).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Abort engine task `task` — no window flush, no offset commit — and
+    /// with it the whole incarnation (a process-death model: every task
+    /// slot dies and the supervisor restarts the fleet).
+    KillTask { task: u32 },
+    /// Stall task `task` for `duration` without killing it: the task
+    /// stops polling and stops publishing heartbeats, so only the
+    /// watchdog's heartbeat deadline can notice.
+    HangTask { task: u32 },
+    /// Freeze one ingest partition for `duration`: fetches see no data,
+    /// producers back-pressure against the buffered log.
+    StallPartition { partition: u32 },
+    /// Generators emit malformed/truncated payloads for `fraction` of the
+    /// stream while the fault is active (`duration` 0 = the whole run).
+    PoisonRecords { fraction: f64 },
+}
+
+impl FaultKind {
+    /// Schedule-key name, as written in YAML and in results.json.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::KillTask { .. } => "kill_task",
+            FaultKind::HangTask { .. } => "hang_task",
+            FaultKind::StallPartition { .. } => "stall_partition",
+            FaultKind::PoisonRecords { .. } => "poison_records",
+        }
+    }
+
+    /// Human-readable injection target ("task 1", "partition 2", …).
+    pub fn target(&self) -> String {
+        match self {
+            FaultKind::KillTask { task } | FaultKind::HangTask { task } => format!("task {task}"),
+            FaultKind::StallPartition { partition } => format!("partition {partition}"),
+            FaultKind::PoisonRecords { fraction } => format!("fraction {fraction}"),
+        }
+    }
+}
+
+/// One timed entry in the fault schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Offset from "all tasks ready" at which the fault fires, µs.
+    pub at_micros: u64,
+    /// How long the fault holds (hang/stall/poison); 0 for instantaneous
+    /// faults (kill) and "whole run" for poison.
+    pub duration_micros: u64,
+    /// Per-fault RNG seed (poison sampling); 0 inherits `benchmark.seed`.
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Whether healing this fault requires a supervised engine restart
+    /// (kill and hang do; stall and poison degrade in place).
+    pub fn needs_restart(&self) -> bool {
+        matches!(
+            self.kind,
+            FaultKind::KillTask { .. } | FaultKind::HangTask { .. }
+        )
+    }
+}
+
+/// Fault-injection plan (the `fault:` section): a declarative schedule of
+/// timed faults injected by the in-run supervisor, which detects dead and
+/// hung tasks by heartbeat deadline and heals them by warm restore from
+/// the latest committed checkpoint (bounded retries, exponential
+/// backoff), degrading to a counted cold start when checkpoints are
+/// unusable.  Drives the `faults[]` + `resilience` blocks in
+/// results.json.  The legacy single-kill form (`kill_task`/`kill_after`)
+/// still parses and becomes a one-entry schedule.
 #[derive(Clone, Debug)]
 pub struct FaultSection {
-    /// Engine task id to kill; must be < `engine.parallelism`.
+    /// Legacy form: engine task id to kill; must be < `engine.parallelism`.
     pub kill_task: u32,
-    /// Run offset at which the kill fires, µs from engine start;
-    /// 0 disables the fault plan.
+    /// Legacy form: run offset at which the kill fires, µs from engine
+    /// start; 0 disables it (the `schedule:` list is the general form).
     pub kill_after_micros: u64,
+    /// The declarative fault schedule (see [`FaultSpec`]).
+    pub schedule: Vec<FaultSpec>,
     /// Restore operator state and offsets from the latest committed
-    /// checkpoint after the kill.  A missing or wholly corrupt checkpoint
-    /// directory degrades to a cold start at runtime (counted in
-    /// results.json); `restore: false` forces the cold start.
+    /// checkpoint after a kill/hang heal.  A missing or wholly corrupt
+    /// checkpoint directory degrades to a cold start at runtime (counted
+    /// in results.json); `restore: false` forces the cold start.
     pub restore: bool,
+    /// Watchdog deadline: a task whose last heartbeat is older than this
+    /// is declared hung and the incarnation is torn down for a restart.
+    pub heartbeat_timeout_micros: u64,
+    /// Supervisor retry budget: give up (error out) after this many
+    /// restarts in one run.
+    pub max_restarts: u32,
+    /// Initial supervisor backoff before a restart; doubles per restart.
+    pub backoff_micros: u64,
 }
 
 impl FaultSection {
-    /// Whether a kill is planned for this run.
+    /// Whether any fault is planned for this run.
     pub fn enabled(&self) -> bool {
-        self.kill_after_micros > 0
+        self.kill_after_micros > 0 || !self.schedule.is_empty()
+    }
+
+    /// The full schedule with the legacy single-kill form merged in,
+    /// sorted by injection time.
+    pub fn plan(&self) -> Vec<FaultSpec> {
+        let mut plan = Vec::new();
+        if self.kill_after_micros > 0 {
+            plan.push(FaultSpec {
+                kind: FaultKind::KillTask {
+                    task: self.kill_task,
+                },
+                at_micros: self.kill_after_micros,
+                duration_micros: 0,
+                seed: 0,
+            });
+        }
+        plan.extend(self.schedule.iter().cloned());
+        plan.sort_by_key(|f| f.at_micros);
+        plan
+    }
+
+    /// The poison windows of the plan (the generator applies these).
+    pub fn poison_plan(&self) -> Vec<FaultSpec> {
+        self.plan()
+            .into_iter()
+            .filter(|f| matches!(f.kind, FaultKind::PoisonRecords { .. }))
+            .collect()
+    }
+
+    /// Whether the plan contains a fault healed by a supervised restart.
+    pub fn has_restart_faults(&self) -> bool {
+        self.plan().iter().any(|f| f.needs_restart())
     }
 }
 
@@ -629,6 +737,13 @@ pub struct ExperimentSection {
     /// events arrived behind the watermark (late + dropped, summed across
     /// event-time operators); 0 disables the check.
     pub max_late_fraction: f64,
+    /// A run is unsustainable when the supervisor restarted the engine
+    /// more than this many times; 0 disables the check (a strict
+    /// no-restart SLO is `min_availability: 1.0`).
+    pub max_restarts: u32,
+    /// Availability floor: a run is unsustainable when
+    /// `1 - downtime/elapsed` falls below this; 0 disables the check.
+    pub min_availability: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -724,7 +839,11 @@ impl Default for BenchConfig {
             fault: FaultSection {
                 kill_task: 0,
                 kill_after_micros: 0,
+                schedule: Vec::new(),
                 restore: true,
+                heartbeat_timeout_micros: 250_000,
+                max_restarts: 3,
+                backoff_micros: 50_000,
             },
             experiment: ExperimentSection {
                 start_rate: 0,
@@ -737,6 +856,8 @@ impl Default for BenchConfig {
                 iteration_duration_micros: 0,
                 warmup_discard_micros: 0,
                 max_late_fraction: 0.0,
+                max_restarts: 0,
+                min_availability: 0.0,
             },
             slurm: SlurmSection {
                 enabled: false,
@@ -828,6 +949,124 @@ fn get_bool(j: &Json, key: &str, default: bool) -> Result<bool, ConfigError> {
 
 fn section(j: &Json, key: &str) -> Json {
     j.get(key).cloned().unwrap_or_else(Json::obj)
+}
+
+// --- fault schedules ---------------------------------------------------------
+
+/// The fault-schedule grammar, appended to every schedule parse error.
+pub fn fault_grammar() -> &'static str {
+    "fault.schedule accepts a list of timed faults:
+  schedule:
+    - kill_task: 1        # abort task 1 (whole incarnation dies)
+      at: 500ms           # offset from all-tasks-ready
+    - hang_task: 0        # stall task 0: no polling, no heartbeats
+      at: 900ms
+      duration: 300ms     # how long the stall holds (required)
+    - stall_partition: 2  # freeze ingest partition 2
+      at: 1s
+      duration: 200ms     # required
+    - poison_records: 0.05  # 5% of generated payloads malformed
+      at: 0s              # optional window start
+      duration: 0         # 0 = the whole run
+      seed: 7             # optional; 0 inherits benchmark.seed
+(see docs/ARCHITECTURE.md §Fault injection & supervision)"
+}
+
+/// Parse one `fault.schedule` entry: a mapping with exactly one fault key
+/// (`kill_task`/`hang_task`/`stall_partition`/`poison_records`) plus
+/// optional `at`/`duration`/`seed` siblings.
+fn parse_fault(i: usize, entry: &Json) -> Result<FaultSpec, ConfigError> {
+    let at_entry = |what: &str| format!("fault.schedule[{i}]: {what}");
+    let Json::Obj(_) = entry else {
+        return err(format!(
+            "{}\n{}",
+            at_entry(&format!("expected a fault mapping, got {entry:?}")),
+            fault_grammar()
+        ));
+    };
+    let kinds = [
+        "kill_task",
+        "hang_task",
+        "stall_partition",
+        "poison_records",
+    ];
+    let mut found: Vec<&str> = kinds
+        .iter()
+        .copied()
+        .filter(|k| !matches!(entry.get(k), None | Some(Json::Null)))
+        .collect();
+    // YAML's flattened single-key form (`- kill_task: 1` with siblings)
+    // can parse the kind key's value as Null; accept it as "present" when
+    // no valued kind key exists.
+    if found.is_empty() {
+        found = kinds
+            .iter()
+            .copied()
+            .filter(|k| entry.get(k).is_some())
+            .collect();
+    }
+    let kind_key = match found.as_slice() {
+        [one] => *one,
+        [] => {
+            return err(format!(
+                "{}\n{}",
+                at_entry(&format!(
+                    "no fault kind in {entry:?} — write one of kill_task, hang_task, \
+                     stall_partition or poison_records per list item"
+                )),
+                fault_grammar()
+            ))
+        }
+        many => {
+            return err(format!(
+                "{}\n{}",
+                at_entry(&format!(
+                    "one fault per list item, found {}",
+                    many.join(" + ")
+                )),
+                fault_grammar()
+            ))
+        }
+    };
+    let kind = match kind_key {
+        "kill_task" => FaultKind::KillTask {
+            task: get_u32(entry, "kill_task", 0)?,
+        },
+        "hang_task" => FaultKind::HangTask {
+            task: get_u32(entry, "hang_task", 0)?,
+        },
+        "stall_partition" => FaultKind::StallPartition {
+            partition: get_u32(entry, "stall_partition", 0)?,
+        },
+        "poison_records" => {
+            let fraction = get_f64(entry, "poison_records", f64::NAN)?;
+            if !(fraction > 0.0 && fraction <= 1.0) {
+                return err(at_entry(&format!(
+                    "poison_records fraction must be in (0, 1] (got {fraction})"
+                )));
+            }
+            FaultKind::PoisonRecords { fraction }
+        }
+        _ => unreachable!("kind_key comes from the kinds table"),
+    };
+    let spec = FaultSpec {
+        kind,
+        at_micros: get_duration(entry, "at", 0)?,
+        duration_micros: get_duration(entry, "duration", 0)?,
+        seed: get_u64(entry, "seed", 0)?,
+    };
+    if spec.duration_micros == 0
+        && matches!(
+            spec.kind,
+            FaultKind::HangTask { .. } | FaultKind::StallPartition { .. }
+        )
+    {
+        return err(at_entry(&format!(
+            "{} needs `duration:` > 0 (how long the stall holds)",
+            spec.kind.name()
+        )));
+    }
+    Ok(spec)
 }
 
 // --- operator-chain pipeline specs ------------------------------------------
@@ -1228,10 +1467,32 @@ impl BenchConfig {
         };
 
         let f = section(root, "fault");
+        let schedule = match f.get("schedule") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(Json::Arr(entries)) => entries
+                .iter()
+                .enumerate()
+                .map(|(i, entry)| parse_fault(i, entry))
+                .collect::<Result<Vec<_>, _>>()?,
+            Some(other) => {
+                return err(format!(
+                    "fault.schedule: expected a list of faults, got {other:?}\n{}",
+                    fault_grammar()
+                ))
+            }
+        };
         let fault = FaultSection {
             kill_task: get_u32(&f, "kill_task", d.fault.kill_task)?,
             kill_after_micros: get_duration(&f, "kill_after", d.fault.kill_after_micros)?,
+            schedule,
             restore: get_bool(&f, "restore", d.fault.restore)?,
+            heartbeat_timeout_micros: get_duration(
+                &f,
+                "heartbeat_timeout",
+                d.fault.heartbeat_timeout_micros,
+            )?,
+            max_restarts: get_u32(&f, "max_restarts", d.fault.max_restarts)?,
+            backoff_micros: get_duration(&f, "backoff", d.fault.backoff_micros)?,
         };
 
         let x = section(root, "experiment");
@@ -1258,6 +1519,8 @@ impl BenchConfig {
                 d.experiment.warmup_discard_micros,
             )?,
             max_late_fraction: get_f64(&x, "max_late_fraction", d.experiment.max_late_fraction)?,
+            max_restarts: get_u32(&x, "max_restarts", d.experiment.max_restarts)?,
+            min_availability: get_f64(&x, "min_availability", d.experiment.min_availability)?,
         };
 
         let s = section(root, "slurm");
@@ -1425,20 +1688,52 @@ impl BenchConfig {
             );
         }
         if self.fault.enabled() {
-            if self.fault.kill_task >= self.engine.parallelism {
-                return err(format!(
-                    "fault.kill_task {} is out of range: engine.parallelism is {} \
-                     (task ids are 0-based)",
-                    self.fault.kill_task, self.engine.parallelism
-                ));
+            for fault in self.fault.plan() {
+                match fault.kind {
+                    FaultKind::KillTask { task } | FaultKind::HangTask { task } => {
+                        if task >= self.engine.parallelism {
+                            return err(format!(
+                                "fault.{} {} is out of range: engine.parallelism is {} \
+                                 (task ids are 0-based)",
+                                fault.kind.name(),
+                                task,
+                                self.engine.parallelism
+                            ));
+                        }
+                    }
+                    FaultKind::StallPartition { partition } => {
+                        if partition >= self.broker.partitions {
+                            return err(format!(
+                                "fault.stall_partition {} is out of range: broker.partitions \
+                                 is {} (partition ids are 0-based)",
+                                partition, self.broker.partitions
+                            ));
+                        }
+                    }
+                    FaultKind::PoisonRecords { .. } => {}
+                }
             }
-            if self.fault.restore && !self.checkpoint.enabled() {
-                return err(
-                    "fault.restore needs `checkpoint.interval:` > 0 — with checkpointing \
-                     disabled there is nothing to restore from; enable checkpointing or set \
-                     `fault.restore: false` for a cold restart",
-                );
+            if self.fault.has_restart_faults() {
+                if self.fault.restore && !self.checkpoint.enabled() {
+                    return err(
+                        "fault.restore needs `checkpoint.interval:` > 0 — with checkpointing \
+                         disabled there is nothing to restore from; enable checkpointing or set \
+                         `fault.restore: false` for a cold restart",
+                    );
+                }
+                if self.fault.heartbeat_timeout_micros == 0 {
+                    return err(
+                        "fault.heartbeat_timeout must be > 0: the watchdog needs a deadline \
+                         to declare a task hung",
+                    );
+                }
             }
+        }
+        let avail = self.experiment.min_availability;
+        if !(0.0..=1.0).contains(&avail) || !avail.is_finite() {
+            return err(format!(
+                "experiment.min_availability must be in [0, 1] (0 disables; got {avail})"
+            ));
         }
         let needed =
             (self.workload.rate + self.generators.instance_capacity - 1) / self.generators.instance_capacity;
@@ -2262,6 +2557,100 @@ fault:
         // ...but an explicit cold restart is fine.
         let y = "fault:\n  kill_after: 1s\n  restore: false\n";
         BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn fault_schedule_parses_all_kinds_with_units() {
+        let y = "
+checkpoint:
+  interval: 200ms
+fault:
+  heartbeat_timeout: 150ms
+  max_restarts: 5
+  backoff: 25ms
+  schedule:
+    - kill_task: 1
+      at: 500ms
+    - hang_task: 0
+      at: 900ms
+      duration: 300ms
+    - stall_partition: 2
+      at: 1s
+      duration: 200ms
+    - poison_records: 0.05
+      seed: 7
+";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert!(cfg.fault.enabled());
+        assert_eq!(cfg.fault.heartbeat_timeout_micros, 150_000);
+        assert_eq!(cfg.fault.max_restarts, 5);
+        assert_eq!(cfg.fault.backoff_micros, 25_000);
+        let plan = cfg.fault.plan();
+        assert_eq!(plan.len(), 4);
+        // Sorted by injection time: poison (at 0) first.
+        assert_eq!(plan[0].kind, FaultKind::PoisonRecords { fraction: 0.05 });
+        assert_eq!(plan[0].seed, 7);
+        assert_eq!(plan[1].kind, FaultKind::KillTask { task: 1 });
+        assert_eq!(plan[1].at_micros, 500_000);
+        assert_eq!(plan[2].kind, FaultKind::HangTask { task: 0 });
+        assert_eq!(plan[2].duration_micros, 300_000);
+        assert_eq!(plan[3].kind, FaultKind::StallPartition { partition: 2 });
+        assert!(cfg.fault.has_restart_faults());
+        assert_eq!(cfg.fault.poison_plan().len(), 1);
+        // The legacy pair merges into the plan as one more kill.
+        let mut cfg = cfg;
+        cfg.fault.kill_task = 0;
+        cfg.fault.kill_after_micros = 100_000;
+        assert_eq!(cfg.fault.plan().len(), 5);
+        assert_eq!(cfg.fault.plan()[0].kind, FaultKind::PoisonRecords { fraction: 0.05 });
+        assert_eq!(cfg.fault.plan()[1].kind, FaultKind::KillTask { task: 0 });
+    }
+
+    #[test]
+    fn fault_schedule_bounds_are_validated() {
+        for (y, needle) in [
+            (
+                "engine:\n  parallelism: 2\ncheckpoint:\n  interval: 1s\nfault:\n  schedule:\n    - hang_task: 2\n      at: 1s\n      duration: 100ms\n",
+                "hang_task 2 is out of range",
+            ),
+            (
+                "broker:\n  partitions: 4\nfault:\n  schedule:\n    - stall_partition: 4\n      at: 1s\n      duration: 100ms\n",
+                "stall_partition 4 is out of range",
+            ),
+            (
+                "fault:\n  schedule:\n    - poison_records: 1.5\n",
+                "poison_records fraction",
+            ),
+            (
+                "fault:\n  schedule:\n    - hang_task: 0\n      at: 1s\n",
+                "duration",
+            ),
+            (
+                "checkpoint:\n  interval: 1s\nfault:\n  schedule:\n    - kill_task: 0\n      at: 1s\n  heartbeat_timeout: 0\n",
+                "heartbeat_timeout",
+            ),
+            (
+                "fault:\n  schedule:\n    - kill_task: 0\n      at: 1s\n",
+                "checkpoint.interval",
+            ),
+            (
+                "fault:\n  schedule:\n    - flood_disk: 1\n",
+                "no fault kind",
+            ),
+            ("experiment:\n  min_availability: 1.5\n", "min_availability"),
+        ] {
+            let e = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap_err();
+            assert!(e.0.contains(needle), "expected '{needle}' in: {e}");
+        }
+        // A pure-degradation schedule (stall + poison) needs no checkpoint.
+        let y = "fault:\n  schedule:\n    - stall_partition: 0\n      at: 1s\n      duration: 100ms\n    - poison_records: 0.1\n";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert!(!cfg.fault.has_restart_faults());
+        // experiment SLO knobs parse.
+        let y = "experiment:\n  max_restarts: 2\n  min_availability: 0.99\n";
+        let cfg = BenchConfig::from_json(&yaml::parse(y).unwrap()).unwrap();
+        assert_eq!(cfg.experiment.max_restarts, 2);
+        assert_eq!(cfg.experiment.min_availability, 0.99);
     }
 
     #[test]

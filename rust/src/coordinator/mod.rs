@@ -13,12 +13,16 @@
 
 pub mod simrun;
 
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::broker::{Broker, BrokerConfig, Topic};
-use crate::config::BenchConfig;
-use crate::engine::{CheckpointCoordinator, CheckpointStore, Engine, RunHooks};
+use crate::config::{BenchConfig, FaultKind, FaultSpec};
+use crate::engine::supervisor::{backoff_micros, DEAD_LETTER_SAMPLE_CAP};
+use crate::engine::{
+    Checkpoint, CheckpointCoordinator, CheckpointStore, Engine, FaultOutcome, ResilienceStats,
+    RunHooks, TaskMonitor,
+};
 use crate::jvm::JmxSampler;
 use crate::metrics::{LatencyRecorder, MeasurementPoint, MetricStore, ThroughputRecorder};
 use crate::pipelines::StepFactory;
@@ -81,6 +85,14 @@ pub struct RunSummary {
     pub operators: Vec<(String, crate::pipelines::StepStats)>,
     /// Kill-and-restore measurements; `None` for fault-free runs.
     pub recovery: Option<RecoveryStats>,
+    /// Malformed records quarantined on the parse path and excluded from
+    /// `processed` (supervised runs; 0 elsewhere).
+    pub quarantined: u64,
+    /// Per-fault injection/detection/heal timelines (the `faults[]` list
+    /// of results.json); empty for fault-free runs.
+    pub faults: Vec<FaultOutcome>,
+    /// Recovery SLO rollup of a supervised run; `None` otherwise.
+    pub resilience: Option<ResilienceStats>,
 }
 
 impl RunSummary {
@@ -99,6 +111,7 @@ impl RunSummary {
         events.set("generated", Json::Int(self.generated as i64));
         events.set("processed", Json::Int(self.processed as i64));
         events.set("emitted", Json::Int(self.emitted as i64));
+        events.set("quarantined", Json::Int(self.quarantined as i64));
         j.set("events", events);
         let mut tp = Json::obj();
         tp.set("offered", Json::Num(self.offered_rate));
@@ -144,6 +157,15 @@ impl RunSummary {
             rec.set("checkpoint_bytes", Json::Int(r.checkpoint_bytes as i64));
             rec.set("checkpoint_write_us", Json::Int(r.checkpoint_write_micros as i64));
             j.set("recovery", rec);
+        }
+        if !self.faults.is_empty() {
+            j.set(
+                "faults",
+                Json::Arr(self.faults.iter().map(|f| f.to_json()).collect()),
+            );
+        }
+        if let Some(r) = &self.resilience {
+            j.set("resilience", r.to_json());
         }
         // Per-operator breakdown, chain order preserved (array, not map).
         let ops: Vec<Json> = self
@@ -443,25 +465,185 @@ pub fn run_wall(
         batches: engine_report.batches,
         operators: engine_report.operators.clone(),
         recovery: None,
+        quarantined: 0,
+        faults: Vec::new(),
+        resilience: None,
     };
     Ok((summary, store))
 }
 
-/// Run one experiment in wall mode under the configured fault plan
-/// (`fault.kill_after`): checkpointing is armed, the engine incarnation
-/// is killed mid-run, and a second incarnation restarts from the newest
-/// valid checkpoint — or cold when none survives or `fault.restore` is
-/// off.  The generator fleet keeps offering load across the outage, so
-/// the backlog that accumulates while the engine is down is replayed and
-/// drained by the restarted incarnation.
+/// Chaos-schedule state shared across every engine incarnation of one
+/// supervised run: the injection cursor and per-fault timelines survive
+/// restarts, so a single `fault.schedule` spans the whole run.
+struct ChaosState {
+    /// Clock µs of "all tasks ready" in the first incarnation — the
+    /// schedule's t=0 (`FaultSpec::at_micros` offsets from here).  0
+    /// until armed.
+    origin_micros: AtomicU64,
+    /// Index of the next plan entry to inject.
+    cursor: AtomicUsize,
+    outcomes: Mutex<Vec<FaultOutcome>>,
+    /// Active partition stalls: `(plan index, partition, release-at µs)`.
+    stalls: Mutex<Vec<(usize, u32, u64)>>,
+}
+
+/// Per-incarnation chaos watchdog: arms the schedule at all-ready,
+/// injects due faults, releases timed partition stalls, and declares
+/// tasks whose heartbeat went stale hung (tearing the incarnation down
+/// via the kill switch).  Exits when `done` is flagged, releasing any
+/// stall still held — a transient broker fault never outlives its
+/// watchdog.
+#[allow(clippy::too_many_arguments)]
+fn spawn_chaos_watchdog(
+    clk: ClockRef,
+    state: Arc<ChaosState>,
+    plan: Arc<Vec<FaultSpec>>,
+    in_topic: Arc<Topic>,
+    monitor: Arc<TaskMonitor>,
+    kill: Arc<AtomicBool>,
+    ready: Arc<AtomicU32>,
+    parallelism: u32,
+    heartbeat_timeout: u64,
+    done: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("chaos-watchdog".into())
+        .spawn(move || loop {
+            let now = clk.now_micros();
+            let finished = done.load(Ordering::SeqCst);
+            if state.origin_micros.load(Ordering::SeqCst) == 0
+                && ready.load(Ordering::SeqCst) >= parallelism
+            {
+                let _ = state
+                    .origin_micros
+                    .compare_exchange(0, now, Ordering::SeqCst, Ordering::SeqCst);
+            }
+            // Release stalls whose hold elapsed — and all of them when the
+            // incarnation ends (during a teardown the engine is down
+            // anyway, so clearing broker faults is part of the restart).
+            {
+                let mut stalls = state.stalls.lock().expect("chaos stalls");
+                stalls.retain(|&(idx, p, until)| {
+                    if finished || now >= until {
+                        in_topic.partition(p).set_stalled(false);
+                        let mut o = state.outcomes.lock().expect("chaos outcomes");
+                        if o[idx].healed_at.is_none() {
+                            o[idx].healed_at = Some(now);
+                        }
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            if finished {
+                return;
+            }
+            let origin = state.origin_micros.load(Ordering::SeqCst);
+            if origin == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(500));
+                continue;
+            }
+            let t = now.saturating_sub(origin);
+            // Inject every due fault.  While a teardown is in flight the
+            // cursor stays put: the next incarnation's watchdog picks the
+            // remaining entries up.
+            while !kill.load(Ordering::SeqCst) {
+                let idx = state.cursor.load(Ordering::SeqCst);
+                if idx >= plan.len() || plan[idx].at_micros > t {
+                    break;
+                }
+                let f = plan[idx].clone();
+                let mut new_stall = None;
+                {
+                    let mut o = state.outcomes.lock().expect("chaos outcomes");
+                    o[idx].injected_at = Some(now);
+                    match f.kind {
+                        FaultKind::KillTask { .. } => {
+                            // Whole-incarnation crash (process-death
+                            // model); detection is the supervisor
+                            // observing the engine die.
+                            kill.store(true, Ordering::SeqCst);
+                        }
+                        FaultKind::HangTask { task } => {
+                            // The task stops polling AND heartbeating;
+                            // only the heartbeat deadline can notice.
+                            monitor.inject_hang(task, now + f.duration_micros);
+                        }
+                        FaultKind::StallPartition { partition } => {
+                            // Supervisor-tracked degradation: injected and
+                            // observed in the same breath.
+                            o[idx].detected_at = Some(now);
+                            in_topic.partition(partition).set_stalled(true);
+                            new_stall = Some((idx, partition, now + f.duration_micros));
+                        }
+                        FaultKind::PoisonRecords { .. } => {
+                            // The generator corrupts payloads on its own
+                            // seeded clock; the timeline entry only tracks
+                            // the window.
+                        }
+                    }
+                }
+                if let Some(s) = new_stall {
+                    state.stalls.lock().expect("chaos stalls").push(s);
+                }
+                state.cursor.store(idx + 1, Ordering::SeqCst);
+            }
+            // Close finite poison windows.
+            {
+                let mut o = state.outcomes.lock().expect("chaos outcomes");
+                for oc in o.iter_mut() {
+                    if matches!(oc.spec.kind, FaultKind::PoisonRecords { .. })
+                        && oc.spec.duration_micros > 0
+                        && oc.healed_at.is_none()
+                        && oc.injected_at.is_some_and(|i| now >= i + oc.spec.duration_micros)
+                    {
+                        oc.healed_at = Some(now);
+                    }
+                }
+            }
+            // Heartbeat deadline: a live task that stopped beating is
+            // hung — tear the incarnation down for a supervised restart.
+            if !kill.load(Ordering::SeqCst) {
+                if let Some(task) = monitor.stale_task(now, heartbeat_timeout) {
+                    let mut o = state.outcomes.lock().expect("chaos outcomes");
+                    if let Some(oc) = o.iter_mut().find(|oc| {
+                        oc.injected_at.is_some()
+                            && oc.detected_at.is_none()
+                            && matches!(oc.spec.kind, FaultKind::HangTask { task: h } if h == task)
+                    }) {
+                        oc.detected_at = Some(now);
+                    }
+                    kill.store(true, Ordering::SeqCst);
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        })
+        .expect("spawn chaos watchdog")
+}
+
+/// Run one experiment in wall mode under the configured fault plan: the
+/// declarative `fault.schedule` (plus the legacy `kill_after` single-kill
+/// form) is injected by a chaos watchdog while a supervisor loop keeps
+/// the engine alive.  Dead incarnations are detected by observing the
+/// engine die, hung ones by heartbeat deadline; either way the
+/// incarnation is torn down and restarted from the newest valid
+/// checkpoint with exponential backoff, bounded by `fault.max_restarts`.
+/// A missing or wholly corrupt checkpoint degrades to a counted cold
+/// start.  The generator fleet keeps offering load across every outage,
+/// so the backlog that accumulates while the engine is down is replayed
+/// and drained by the healed incarnation — no external orchestration.
 ///
-/// The summary merges both incarnations: `processed` counts distinct
-/// records (replays subtracted), and the `recovery` block reports
-/// recovery time (kill → every restarted task ready), replay volume and
-/// checkpoint cost.  `emitted` stays the raw egestion count, which can
-/// exceed a fault-free run's — records processed between the last
-/// durable snapshot and the kill are emitted twice (at-least-once
-/// egestion; exactly-once applies to state, not to the output topic).
+/// The summary merges all incarnations: `processed` counts distinct
+/// parseable records (replays and quarantined poison subtracted), the
+/// `recovery` block keeps its kill-and-restore semantics (recovery time
+/// = first restart fault's injection → all-ready, replay volume,
+/// checkpoint cost), and the `faults[]` / `resilience` blocks report the
+/// per-fault timelines and the SLO rollup.  `emitted` stays the raw
+/// egestion count, which can exceed a fault-free run's — records
+/// processed between the last durable snapshot and a crash are emitted
+/// twice (at-least-once egestion; exactly-once applies to state, not to
+/// the output topic).
 pub fn run_recovery(
     cfg: &BenchConfig,
     runtime_factory: Option<RuntimeFactory>,
@@ -469,6 +651,7 @@ pub fn run_recovery(
     if !cfg.fault.enabled() {
         return run_wall(cfg, runtime_factory);
     }
+    let plan = Arc::new(cfg.fault.plan());
     let h = WallHarness::start(cfg);
     let clk = h.clk.clone();
     let parallelism = cfg.engine.parallelism;
@@ -476,165 +659,280 @@ pub fn run_recovery(
     let deadline = WallHarness::engine_deadline(cfg);
     let ckpt_dir = cfg.checkpoint_dir();
     let retain = cfg.checkpoint.retain;
-
-    // Phase 1: checkpointing armed, kill watchdog ticking.  The watchdog
-    // arms itself only once every task is ready to consume (so a slow
-    // pipeline compile cannot eat the fault window), then flips the crash
-    // switch `fault.kill_after` later and records when it fired.
+    // One epoch origin for the whole run: every incarnation's coordinator
+    // continues the checkpoint numbering, never colliding with (or
+    // sorting older than) files already on disk.
     let epoch_origin = clk.now_micros();
-    let coord1 = cfg.checkpoint.enabled().then(|| {
-        Arc::new(CheckpointCoordinator::new(
-            CheckpointStore::new(ckpt_dir.as_str(), retain),
-            parallelism as usize,
-            cfg.checkpoint.interval_micros,
-            epoch_origin,
-        ))
+    let state = Arc::new(ChaosState {
+        origin_micros: AtomicU64::new(0),
+        cursor: AtomicUsize::new(0),
+        outcomes: Mutex::new(plan.iter().cloned().map(FaultOutcome::new).collect()),
+        stalls: Mutex::new(Vec::new()),
     });
-    let kill = Arc::new(AtomicBool::new(false));
-    let killed_at = Arc::new(AtomicU64::new(0));
-    let phase1_done = Arc::new(AtomicBool::new(false));
-    let watchdog = {
-        let clk = clk.clone();
-        let kill = kill.clone();
-        let killed_at = killed_at.clone();
-        let done = phase1_done.clone();
-        let ready = h.engine_ready.clone();
-        let kill_after = cfg.fault.kill_after_micros;
-        std::thread::Builder::new()
-            .name("fault-watchdog".into())
-            .spawn(move || {
-                let mut armed_at = None;
-                loop {
-                    if done.load(Ordering::SeqCst) {
-                        return; // the run ended before the fault fired
+
+    let mut restored: Option<Checkpoint> = None;
+    let mut incarnation: u32 = 0;
+    let mut restart_count: u32 = 0;
+    let mut cold_starts: u32 = 0;
+    let mut total_events_in = 0u64;
+    let mut total_replayed = 0u64;
+    let mut parse_failures = 0u64;
+    let mut batches = 0u64;
+    let mut corrupt_skipped = 0u64;
+    // Absolute intake at the current restore point; checkpointed
+    // `events_in` is absolute across incarnations (tasks carry the
+    // restored count forward), so durable/replay math stays exact under
+    // multiple restarts.
+    let mut durable_abs = 0u64;
+    // Same absolute-count trick for quarantined records: replayed poison
+    // is re-quarantined by the restored incarnation, so the overlap is
+    // subtracted to keep the distinct poison count exact.
+    let mut durable_parse = 0u64;
+    let mut replayed_parse = 0u64;
+    let mut first_restore: Option<(u64, bool)> = None;
+    let mut ckpt_committed = 0u64;
+    let mut ckpt_bytes = 0u64;
+    let mut ckpt_write = 0u64;
+    let mut dead_letters: Vec<String> = Vec::new();
+    let mut operators: Vec<(String, crate::pipelines::StepStats)> = Vec::new();
+
+    loop {
+        let monitor = Arc::new(TaskMonitor::new(parallelism));
+        let kill = Arc::new(AtomicBool::new(false));
+        let coord = cfg.checkpoint.enabled().then(|| {
+            Arc::new(CheckpointCoordinator::new(
+                CheckpointStore::new(ckpt_dir.as_str(), retain),
+                parallelism as usize,
+                cfg.checkpoint.interval_micros,
+                epoch_origin,
+            ))
+        });
+        let ready = if incarnation == 0 {
+            h.engine_ready.clone() // the fleet gates its load offer on this one
+        } else {
+            Arc::new(AtomicU32::new(0))
+        };
+        let done = Arc::new(AtomicBool::new(false));
+        // Healer: the moment this restarted incarnation reaches
+        // all-ready, every fault detected before it launched is healed.
+        let healer = (incarnation > 0).then(|| {
+            let clk = clk.clone();
+            let ready = ready.clone();
+            let stop = h.stop.clone();
+            let state = state.clone();
+            let done = done.clone();
+            let cutoff = clk.now_micros();
+            std::thread::Builder::new()
+                .name("chaos-healer".into())
+                .spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    while ready.load(Ordering::SeqCst) < parallelism
+                        && t0.elapsed().as_secs() < 60
+                        && !stop.load(Ordering::Relaxed)
+                        && !done.load(Ordering::SeqCst)
+                    {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
                     }
                     let now = clk.now_micros();
-                    if armed_at.is_none() && ready.load(Ordering::SeqCst) >= parallelism {
-                        armed_at = Some(now);
+                    let mut o = state.outcomes.lock().expect("chaos outcomes");
+                    for oc in o.iter_mut() {
+                        if oc.spec.needs_restart()
+                            && oc.healed_at.is_none()
+                            && oc.detected_at.is_some_and(|d| d <= cutoff)
+                        {
+                            oc.healed_at = Some(now);
+                        }
                     }
-                    if armed_at.is_some_and(|t0| now >= t0 + kill_after) {
-                        killed_at.store(now, Ordering::SeqCst);
-                        kill.store(true, Ordering::SeqCst);
-                        return;
-                    }
-                    std::thread::sleep(std::time::Duration::from_micros(500));
+                })
+                .expect("spawn chaos healer")
+        });
+        let watchdog = spawn_chaos_watchdog(
+            clk.clone(),
+            state.clone(),
+            plan.clone(),
+            h.in_topic.clone(),
+            monitor.clone(),
+            kill.clone(),
+            ready.clone(),
+            parallelism,
+            cfg.fault.heartbeat_timeout_micros,
+            done.clone(),
+        );
+        let res = h.engine.run_with_hooks(
+            &h.broker,
+            "ingest",
+            &h.out_topic,
+            &h.stop,
+            deadline,
+            factory.clone(),
+            Some(ready.clone()),
+            RunHooks {
+                checkpoint: coord.clone(),
+                kill: Some(kill.clone()),
+                restore_from: restored.take().map(Arc::new),
+                monitor: Some(monitor.clone()),
+            },
+        );
+        done.store(true, Ordering::SeqCst);
+        watchdog.join().map_err(|_| "chaos watchdog panicked")?;
+        let r = match res {
+            Ok(r) => r,
+            Err(e) => {
+                h.stop.store(true, Ordering::SeqCst);
+                h.broker.shutdown();
+                if let Some(hl) = healer {
+                    let _ = hl.join();
                 }
-            })
-            .expect("spawn fault watchdog")
-    };
-    let r1 = h.engine.run_with_hooks(
-        &h.broker,
-        "ingest",
-        &h.out_topic,
-        &h.stop,
-        deadline,
-        factory.clone(),
-        Some(h.engine_ready.clone()),
-        RunHooks {
-            checkpoint: coord1.clone(),
-            kill: Some(kill.clone()),
-            restore_from: None,
-        },
-    )?;
-    phase1_done.store(true, Ordering::SeqCst);
-    watchdog.join().map_err(|_| "fault watchdog panicked")?;
+                return Err(e);
+            }
+        };
+        if let Some(hl) = healer {
+            hl.join().map_err(|_| "chaos healer panicked")?;
+        }
+        if let Some(c) = &coord {
+            let s = c.stats();
+            ckpt_committed += s.committed;
+            ckpt_bytes += s.bytes;
+            ckpt_write += s.write_micros;
+        }
+        total_events_in += r.events_in;
+        parse_failures += r.parse_failures;
+        batches += r.batches;
+        for dl in &r.dead_letters {
+            if dead_letters.len() >= DEAD_LETTER_SAMPLE_CAP {
+                break;
+            }
+            dead_letters.push(dl.clone());
+        }
+        // Torn-down tasks lose their in-memory operator counters; the
+        // last incarnation's are complete from its restore point onward.
+        operators = r.operators.clone();
+        let abs_highwater = durable_abs + r.events_in;
+        let abs_parse = durable_parse + r.parse_failures;
+        if !kill.load(Ordering::SeqCst) {
+            break; // input drained and the engine exited on its own
+        }
 
-    // Between incarnations: find the newest valid checkpoint.  Corrupt
-    // or truncated files are skipped (counted), and a missing checkpoint
-    // degrades to a cold start — the fresh consumer group then replays
-    // from the earliest retained offsets.
-    let scan = CheckpointStore::new(ckpt_dir.as_str(), retain).latest();
-    let corrupt_skipped = scan.skipped.len() as u64;
-    let restored = if cfg.fault.restore { scan.checkpoint } else { None };
-    let cold_start = restored.is_none();
-    let restored_epoch = restored.as_ref().map_or(0, |c| c.epoch);
-    // Replay volume: everything phase 1 ingested beyond the restore
-    // point gets re-read by the restarted incarnation.  On a cold start
-    // the restore point is the pruned prefix of the log (offsets below
-    // the low watermark are gone and cannot be replayed).
-    let durable_in = match &restored {
-        Some(c) => c.events_in(),
-        None => (0..h.in_topic.partition_count())
-            .map(|p| h.in_topic.partition(p).low_watermark())
-            .sum(),
-    };
-    let replayed = r1.events_in.saturating_sub(durable_in);
-
-    // Phase 2: restart with restore hooks.  The coordinator keeps phase
-    // 1's epoch origin so the restarted incarnation's checkpoint files
-    // continue the epoch numbering — never colliding with (or sorting
-    // older than) the ones already on disk.
-    let coord2 = coord1.as_ref().map(|_| {
-        Arc::new(CheckpointCoordinator::new(
-            CheckpointStore::new(ckpt_dir.as_str(), retain),
-            parallelism as usize,
-            cfg.checkpoint.interval_micros,
-            epoch_origin,
-        ))
-    });
-    let ready2 = Arc::new(AtomicU32::new(0));
-    let ready2_at = Arc::new(AtomicU64::new(0));
-    let monitor = {
-        let clk = clk.clone();
-        let ready2 = ready2.clone();
-        let ready2_at = ready2_at.clone();
-        let stop = h.stop.clone();
-        std::thread::Builder::new()
-            .name("recovery-monitor".into())
-            .spawn(move || {
-                let t0 = std::time::Instant::now();
-                while ready2.load(Ordering::SeqCst) < parallelism
-                    && t0.elapsed().as_secs() < 60
-                    && !stop.load(Ordering::Relaxed)
+        // Teardown: death observed.  Kills are detected here (the
+        // supervisor noticing the engine die); hangs were already stamped
+        // by the watchdog's heartbeat deadline.
+        let now = clk.now_micros();
+        {
+            let mut o = state.outcomes.lock().expect("chaos outcomes");
+            for oc in o.iter_mut() {
+                if oc.spec.needs_restart()
+                    && oc.injected_at.is_some()
+                    && oc.detected_at.is_none()
                 {
-                    std::thread::sleep(std::time::Duration::from_micros(200));
+                    oc.detected_at = Some(now);
                 }
-                ready2_at.store(clk.now_micros(), Ordering::SeqCst);
-            })
-            .expect("spawn recovery monitor")
-    };
-    let r2 = h.engine.run_with_hooks(
-        &h.broker,
-        "ingest",
-        &h.out_topic,
-        &h.stop,
-        deadline,
-        factory,
-        Some(ready2.clone()),
-        RunHooks {
-            checkpoint: coord2.clone(),
-            kill: None,
-            restore_from: restored.map(Arc::new),
-        },
-    )?;
-    monitor.join().map_err(|_| "recovery monitor panicked")?;
-    let killed_at = killed_at.load(Ordering::SeqCst);
-    let recovery_time_micros = if killed_at == 0 {
-        0 // the run ended before the fault fired; nothing was recovered
-    } else {
-        ready2_at.load(Ordering::SeqCst).saturating_sub(killed_at)
-    };
+            }
+        }
+        if restart_count >= cfg.fault.max_restarts {
+            h.stop.store(true, Ordering::SeqCst);
+            h.broker.shutdown();
+            return Err(format!(
+                "supervisor: fault.max_restarts ({}) exhausted — engine still failing",
+                cfg.fault.max_restarts
+            ));
+        }
+        restart_count += 1;
 
-    let cs1 = coord1.as_ref().map(|c| c.stats()).unwrap_or_default();
-    let cs2 = coord2.as_ref().map(|c| c.stats()).unwrap_or_default();
-    let recovery = RecoveryStats {
-        recovery_time_micros,
-        replayed_records: replayed,
-        restored_epoch,
-        cold_start,
-        corrupt_skipped,
-        checkpoints: cs1.committed + cs2.committed,
-        checkpoint_bytes: cs1.bytes + cs2.bytes,
-        checkpoint_write_micros: cs1.write_micros + cs2.write_micros,
-    };
+        // Warm-restore scan: corrupt or truncated files are skipped
+        // (counted); a missing checkpoint — or `restore: false` — goes
+        // cold, and the fresh consumer group replays from the earliest
+        // retained offsets (the pruned prefix below the low watermark is
+        // gone and cannot be replayed).
+        let scan = CheckpointStore::new(ckpt_dir.as_str(), retain).latest();
+        corrupt_skipped += scan.skipped.len() as u64;
+        let next = if cfg.fault.restore { scan.checkpoint } else { None };
+        let next_durable = match &next {
+            Some(c) => c.events_in(),
+            None => (0..h.in_topic.partition_count())
+                .map(|p| h.in_topic.partition(p).low_watermark())
+                .sum(),
+        };
+        if next.is_none() {
+            cold_starts += 1;
+        }
+        if first_restore.is_none() {
+            first_restore = Some((next.as_ref().map_or(0, |c| c.epoch), next.is_none()));
+        }
+        total_replayed += abs_highwater.saturating_sub(next_durable);
+        durable_abs = next_durable;
+        // Cold starts re-read from the partitions' low watermarks, which
+        // for a group that never committed is the log head: every prior
+        // quarantine is about to repeat, so the durable parse baseline
+        // resets with the intake baseline.
+        let next_durable_parse = next.as_ref().map_or(0, |c| c.parse_failures());
+        replayed_parse += abs_parse.saturating_sub(next_durable_parse);
+        durable_parse = next_durable_parse;
+        restored = next;
+        incarnation += 1;
+
+        // Exponential backoff before the restart (doubles per attempt).
+        let pause = backoff_micros(cfg.fault.backoff_micros, restart_count - 1);
+        if pause > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(pause));
+        }
+    }
+
+    // Distinct quarantine: every incarnation's parse failures minus the
+    // re-quarantined replay overlap (exact — checkpoints carry absolute
+    // parse counts alongside absolute intake).
+    let quarantined = parse_failures.saturating_sub(replayed_parse);
+
+    // Final poison bookkeeping: a whole-run window heals when the run
+    // ends, and quarantined records mean the poison was caught on the
+    // parse path — detection is effectively per-record and immediate.
+    {
+        let mut o = state.outcomes.lock().expect("chaos outcomes");
+        let now = clk.now_micros();
+        for oc in o.iter_mut() {
+            if matches!(oc.spec.kind, FaultKind::PoisonRecords { .. }) && oc.injected_at.is_some()
+            {
+                if oc.healed_at.is_none() {
+                    oc.healed_at = Some(now);
+                }
+                if quarantined > 0 && oc.detected_at.is_none() {
+                    oc.detected_at = oc.injected_at;
+                }
+            }
+        }
+    }
+    let outcomes = state.outcomes.lock().expect("chaos outcomes").clone();
+    // Legacy kill-and-restore stats, preserved for schedules containing a
+    // restart fault: recovery time is the first such fault's injection →
+    // back-to-all-ready span.
+    let recovery = plan.iter().any(|f| f.needs_restart()).then(|| {
+        let first = outcomes
+            .iter()
+            .find(|o| o.spec.needs_restart() && o.injected_at.is_some());
+        RecoveryStats {
+            recovery_time_micros: first.map_or(0, |o| o.mttr_micros()),
+            replayed_records: total_replayed,
+            restored_epoch: first_restore.map_or(0, |(e, _)| e),
+            cold_start: first_restore.is_some_and(|(_, c)| c),
+            corrupt_skipped,
+            checkpoints: ckpt_committed,
+            checkpoint_bytes: ckpt_bytes,
+            checkpoint_write_micros: ckpt_write,
+        }
+    });
+    let resilience = ResilienceStats::from_outcomes(
+        &outcomes,
+        restart_count as u64,
+        cold_starts as u64,
+        quarantined,
+        dead_letters,
+    );
 
     let store = h.store.clone();
     let t = h.finish()?;
-    // Distinct records processed: both incarnations' intake minus the
-    // replayed overlap.  Killed tasks lose their in-memory operator
-    // counters, so the per-operator breakdown is the restarted
-    // incarnation's (complete from the restore point onward).
-    let processed = (r1.events_in + r2.events_in).saturating_sub(replayed);
+    // Distinct records processed: every incarnation's intake minus the
+    // replayed overlap, minus the quarantined poison.
+    let distinct = total_events_in.saturating_sub(total_replayed);
+    let processed = distinct.saturating_sub(quarantined);
     let elapsed = t.fleet.elapsed_micros.max(1);
     let summary = RunSummary {
         name: cfg.bench.name.clone(),
@@ -652,10 +950,13 @@ pub fn run_recovery(
         gc_young_count: t.gc_young_count,
         gc_young_time_micros: t.gc_young_time_micros,
         energy_joules: t.energy_joules,
-        parse_failures: r1.parse_failures + r2.parse_failures,
-        batches: r1.batches + r2.batches,
-        operators: r2.operators.clone(),
-        recovery: Some(recovery),
+        parse_failures: quarantined,
+        batches,
+        operators,
+        recovery,
+        quarantined,
+        faults: outcomes,
+        resilience: Some(resilience),
     };
     Ok((summary, store))
 }

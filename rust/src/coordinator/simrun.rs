@@ -13,7 +13,9 @@
 use std::sync::Arc;
 
 use super::RunSummary;
-use crate::config::{BenchConfig, ExchangeMode, OpSpec, PipelineKind, PipelineSpec};
+use crate::config::{BenchConfig, ExchangeMode, FaultKind, OpSpec, PipelineKind, PipelineSpec};
+use crate::engine::supervisor::backoff_micros;
+use crate::engine::{FaultOutcome, ResilienceStats};
 use crate::metrics::{MeasurementPoint, MetricStore};
 use crate::util::histogram::{Histogram, HistogramSummary};
 use crate::util::rng::Pcg32;
@@ -185,6 +187,84 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
 
     let generated = (offered * duration_s) as u64;
     let processed = (processed_rate * duration_s) as u64;
+
+    // Fault schedule: model the supervisor's heal cycle analytically.
+    // Each restart fault (kill/hang) prices detection — a kill is
+    // observed as soon as the fleet dies, a hang only when the heartbeat
+    // deadline passes — plus supervisor backoff, the restart pause, and
+    // working off the checkpoint-replay backlog at full capacity.  The
+    // kill lands mid-epoch, so on average half an interval of intake is
+    // replayed.  Stalls and poison windows degrade in place: a stall
+    // back-pressures (no distinct-record loss), poison quarantines
+    // `fraction` of the offered stream while its window is open.  Faults
+    // scheduled past the run's end are never injected, and restart
+    // faults beyond `fault.max_restarts` stay unhealed — a wall run's
+    // supervisor errors out at that point.
+    let plan = cfg.fault.plan();
+    let interval = cfg.checkpoint.interval_micros;
+    let warm = cfg.checkpoint.enabled() && cfg.fault.restore;
+    let replayed_per_restart = if cfg.checkpoint.enabled() {
+        (processed_rate * interval as f64 / 2e6) as u64
+    } else {
+        // Eager per-batch commits: only the in-flight batches replay.
+        (par * cfg.engine.batch_size as f64) as u64
+    };
+    let replay_micros = replayed_per_restart as f64 / engine_cap.max(1.0) * 1e6;
+    let mut outcomes: Vec<FaultOutcome> = Vec::new();
+    let mut restart_count: u64 = 0;
+    let mut quarantined: u64 = 0;
+    for f in &plan {
+        let mut o = FaultOutcome::new(f.clone());
+        if f.at_micros >= cfg.bench.duration_micros {
+            outcomes.push(o);
+            continue;
+        }
+        o.injected_at = Some(f.at_micros);
+        match f.kind {
+            FaultKind::KillTask { .. } | FaultKind::HangTask { .. } => {
+                let detect = match f.kind {
+                    FaultKind::HangTask { .. } => cfg.fault.heartbeat_timeout_micros,
+                    _ => 1_000,
+                };
+                o.detected_at = Some(f.at_micros + detect);
+                if restart_count < cfg.fault.max_restarts as u64 {
+                    let pause = backoff_micros(cfg.fault.backoff_micros, restart_count as u32);
+                    o.healed_at = Some(
+                        f.at_micros
+                            + detect
+                            + pause
+                            + (model.restart_micros + replay_micros) as u64,
+                    );
+                    restart_count += 1;
+                }
+            }
+            FaultKind::StallPartition { .. } => {
+                // Supervisor-tracked degradation: detection is the
+                // injection itself; the release heals it.
+                o.detected_at = Some(f.at_micros);
+                o.healed_at =
+                    Some((f.at_micros + f.duration_micros).min(cfg.bench.duration_micros));
+            }
+            FaultKind::PoisonRecords { fraction } => {
+                let until = if f.duration_micros == 0 {
+                    cfg.bench.duration_micros
+                } else {
+                    (f.at_micros + f.duration_micros).min(cfg.bench.duration_micros)
+                };
+                let window_s = until.saturating_sub(f.at_micros) as f64 / 1e6;
+                quarantined += (offered * window_s * fraction) as u64;
+                o.detected_at = Some(f.at_micros);
+                o.healed_at = Some(until);
+            }
+        }
+        outcomes.push(o);
+    }
+    let total_replayed = restart_count * replayed_per_restart;
+    let quarantined = quarantined.min(processed);
+    // Quarantined records are counted, not processed: the parse path
+    // rejects them before any operator sees them.
+    let processed = processed - quarantined;
+
     // Keyed pipelines emit window aggregates, not 1:1 events.  For chain
     // specs the emission model follows the chain's shape: keys narrowed by
     // keyby, aggregates capped by topk.  (Filters are load-dependent and
@@ -227,40 +307,42 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
         },
     };
 
-    // Fault plan: model the kill-and-restore analytically.  The kill
-    // lands mid-epoch, so on average half an interval of intake is
-    // replayed; recovery is the restart pause plus working that backlog
-    // off at full capacity.  (`processed` stays the distinct-record
-    // count, matching wall-mode recovery accounting.)
-    let recovery = cfg.fault.enabled().then(|| {
-        let warm = cfg.checkpoint.enabled() && cfg.fault.restore;
-        let interval = cfg.checkpoint.interval_micros;
-        let replayed = if cfg.checkpoint.enabled() {
-            (processed_rate * interval as f64 / 2e6) as u64
-        } else {
-            // Eager per-batch commits: only the in-flight batches replay.
-            (par * cfg.engine.batch_size as f64) as u64
-        };
-        let replay_micros = replayed as f64 / engine_cap.max(1.0) * 1e6;
-        let epochs = if interval > 0 {
-            (cfg.fault.kill_after_micros / interval).max(1)
-        } else {
-            0
-        };
-        // Snapshot payload ~ a few hundred bytes of offsets/counters per
-        // task plus window pane state for keyed pipelines.
-        let bytes_per = 220 * cfg.engine.parallelism as u64
-            + 24 * cfg.workload.sensors.min(1024) as u64;
-        super::RecoveryStats {
-            recovery_time_micros: (model.restart_micros + replay_micros) as u64,
-            replayed_records: replayed,
-            restored_epoch: if warm { epochs } else { 0 },
-            cold_start: !warm,
-            corrupt_skipped: 0,
-            checkpoints: epochs,
-            checkpoint_bytes: epochs * bytes_per,
-            checkpoint_write_micros: epochs * model.checkpoint_pause_micros as u64,
-        }
+    // Legacy `recovery` block: derived from the first injected restart
+    // fault, mirroring wall-mode semantics (`recovery_time` is that
+    // fault's injection→healed span).
+    let recovery = outcomes
+        .iter()
+        .find(|o| o.spec.needs_restart() && o.injected_at.is_some())
+        .map(|first| {
+            let epochs = if interval > 0 {
+                (first.spec.at_micros / interval).max(1)
+            } else {
+                0
+            };
+            // Snapshot payload ~ a few hundred bytes of offsets/counters
+            // per task plus window pane state for keyed pipelines.
+            let bytes_per = 220 * cfg.engine.parallelism as u64
+                + 24 * cfg.workload.sensors.min(1024) as u64;
+            super::RecoveryStats {
+                recovery_time_micros: first.mttr_micros(),
+                replayed_records: total_replayed,
+                restored_epoch: if warm { epochs } else { 0 },
+                cold_start: !warm,
+                corrupt_skipped: 0,
+                checkpoints: epochs,
+                checkpoint_bytes: epochs * bytes_per,
+                checkpoint_write_micros: epochs * model.checkpoint_pause_micros as u64,
+            }
+        });
+    let resilience = (!plan.is_empty()).then(|| {
+        let cold_starts = if warm { 0 } else { restart_count };
+        ResilienceStats::from_outcomes(
+            &outcomes,
+            restart_count,
+            cold_starts,
+            quarantined,
+            Vec::new(),
+        )
     });
 
     // GC model forward run.
@@ -342,11 +424,14 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
         gc_young_count,
         gc_young_time_micros: gc_young_time,
         energy_joules,
-        parse_failures: 0,
+        parse_failures: quarantined,
         // The analytic model carries no per-operator counters.
         operators: Vec::new(),
         batches: processed / cfg.engine.batch_size.max(1) as u64,
         recovery,
+        quarantined,
+        faults: outcomes,
+        resilience,
     };
     (summary, store)
 }
@@ -588,6 +673,65 @@ mod tests {
         assert_eq!(rc.restored_epoch, 0);
         let v = validate_results(&sc.to_json());
         assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn fault_schedule_prices_each_heal_cycle() {
+        use crate::config::FaultSpec;
+        let m = SimModel::default();
+        let mut c = cfg(1_000_000, 8);
+        c.checkpoint.interval_micros = 500_000;
+        c.fault.schedule = vec![
+            FaultSpec {
+                kind: FaultKind::KillTask { task: 0 },
+                at_micros: 2_000_000,
+                duration_micros: 0,
+                seed: 0,
+            },
+            FaultSpec {
+                kind: FaultKind::HangTask { task: 1 },
+                at_micros: 10_000_000,
+                duration_micros: 400_000,
+                seed: 0,
+            },
+            FaultSpec {
+                kind: FaultKind::PoisonRecords { fraction: 0.01 },
+                at_micros: 20_000_000,
+                duration_micros: 5_000_000,
+                seed: 0,
+            },
+        ];
+        let (s, _) = run_sim(&c, &m);
+        let r = s.resilience.clone().expect("schedule must produce resilience");
+        assert_eq!(r.injected, 3);
+        assert_eq!(r.detected, 3);
+        assert_eq!(r.healed, 3);
+        assert_eq!(r.restart_count, 2);
+        assert!(
+            r.downtime_micros > 2 * m.restart_micros as u64,
+            "two heal cycles each pay at least the restart pause"
+        );
+        // The kill is observed at once; the hang waits out the heartbeat
+        // deadline — and the second restart pays a doubled backoff.
+        let kill = &s.faults[0];
+        let hang = &s.faults[1];
+        assert!(hang.detect_micros() >= c.fault.heartbeat_timeout_micros);
+        assert!(kill.detect_micros() < hang.detect_micros());
+        assert!(hang.mttr_micros() > kill.mttr_micros());
+        // Poison quarantines ~1% of five seconds of offered load, and the
+        // distinct-record accounting stays conserved.
+        assert!(s.quarantined > 0);
+        assert_eq!(s.processed + s.quarantined, s.generated);
+        let v = validate_results(&s.to_json());
+        assert!(v.is_empty(), "{v:?}");
+        // A restart budget of 1 leaves the hang unhealed.
+        let mut strict = c.clone();
+        strict.fault.max_restarts = 1;
+        let (ss, _) = run_sim(&strict, &m);
+        let rs = ss.resilience.unwrap();
+        assert_eq!(rs.restart_count, 1);
+        assert_eq!(rs.healed, 2, "kill healed, poison window closed");
+        assert!(ss.faults[1].healed_at.is_none());
     }
 
     #[test]

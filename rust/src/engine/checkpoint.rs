@@ -71,6 +71,12 @@ pub struct TaskPart {
     /// Events this task had ingested when the snapshot was taken — the
     /// baseline for computing replayed records after a kill.
     pub events_in: u64,
+    /// Malformed records this task had quarantined when the snapshot was
+    /// taken — absolute like `events_in`, so the supervisor can subtract
+    /// re-quarantined replays and keep the distinct poison count exact
+    /// across restarts.  Missing in pre-quarantine checkpoint files
+    /// (reads back as 0).
+    pub parse_failures: u64,
     /// Serialized operator state (`Chain::snapshot_ops` /
     /// `PipelineStep::snapshot`).
     pub state: Json,
@@ -85,6 +91,7 @@ impl TaskPart {
         let mut j = Json::obj();
         j.set("offsets", Json::Arr(offs))
             .set("events_in", Json::Int(self.events_in as i64))
+            .set("parse_failures", Json::Int(self.parse_failures as i64))
             .set("state", self.state.clone());
         j
     }
@@ -109,10 +116,16 @@ impl TaskPart {
             .and_then(|v| v.as_i64())
             .unwrap_or(0)
             .max(0) as u64;
+        let parse_failures = j
+            .get("parse_failures")
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0)
+            .max(0) as u64;
         let state = j.get("state").cloned().unwrap_or(Json::Null);
         Ok(TaskPart {
             offsets,
             events_in,
+            parse_failures,
             state,
         })
     }
@@ -130,6 +143,11 @@ impl Checkpoint {
     /// Total events the checkpointed state covers (sum over tasks).
     pub fn events_in(&self) -> u64 {
         self.tasks.iter().map(|t| t.events_in).sum()
+    }
+
+    /// Total quarantined records the checkpointed state covers.
+    pub fn parse_failures(&self) -> u64 {
+        self.tasks.iter().map(|t| t.parse_failures).sum()
     }
 
     fn to_json(&self) -> Json {
@@ -489,6 +507,8 @@ mod tests {
         TaskPart {
             offsets: vec![(0, off), (2, off + 1)],
             events_in: events,
+            // One in eight records of the test streams is poison.
+            parse_failures: events / 8,
             state,
         }
     }
@@ -516,6 +536,7 @@ mod tests {
         assert_eq!(loaded.tasks[0].offsets, vec![(0, 100), (2, 101)]);
         assert_eq!(loaded.tasks[1].events_in, 900);
         assert_eq!(loaded.events_in(), 1900);
+        assert_eq!(loaded.parse_failures(), 1000 / 8 + 900 / 8);
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

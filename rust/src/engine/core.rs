@@ -28,18 +28,23 @@ pub struct EngineReport {
     /// Per-operator stats merged across tasks by operator name, in chain
     /// order of first appearance.
     pub operators: Vec<(String, crate::pipelines::StepStats)>,
+    /// Sample of quarantined payloads, merged across tasks and capped at
+    /// [`super::supervisor::DEAD_LETTER_SAMPLE_CAP`].
+    pub dead_letters: Vec<String>,
 }
 
 /// Recovery hooks threaded through an engine run; all default to off.
 /// `checkpoint` arms periodic aligned snapshots (and defers broker offset
 /// commits to checkpoint commits), `kill` is the crash switch a fault
 /// plan flips mid-run, `restore_from` re-arms every task's state and
-/// offsets from a loaded checkpoint before consuming.
+/// offsets from a loaded checkpoint before consuming, `monitor` collects
+/// per-task heartbeats for the supervising watchdog.
 #[derive(Default)]
 pub struct RunHooks {
     pub checkpoint: Option<Arc<CheckpointCoordinator>>,
     pub kill: Option<Arc<AtomicBool>>,
     pub restore_from: Option<Arc<Checkpoint>>,
+    pub monitor: Option<Arc<super::supervisor::TaskMonitor>>,
 }
 
 /// The stream engine: `parallelism` task slots over one consumer group.
@@ -170,9 +175,9 @@ impl Engine {
         let kill = hooks
             .kill
             .unwrap_or_else(|| Arc::new(AtomicBool::new(false)));
-        let handles: Vec<_> = (0..parallelism)
-            .map(|id| {
-                let harness = TaskHarness {
+        let mut handles = Vec::with_capacity(parallelism as usize);
+        for id in 0..parallelism {
+            let harness = TaskHarness {
                     id,
                     personality,
                     group: group.clone(),
@@ -197,13 +202,26 @@ impl Engine {
                     checkpoint: hooks.checkpoint.clone(),
                     kill: kill.clone(),
                     restore_from: hooks.restore_from.clone(),
+                    monitor: hooks.monitor.clone(),
                 };
-                std::thread::Builder::new()
-                    .name(format!("engine-task-{id}"))
-                    .spawn(move || harness.run())
-                    .expect("spawn engine task")
-            })
-            .collect();
+            match std::thread::Builder::new()
+                .name(format!("engine-task-{id}"))
+                .spawn(move || harness.run())
+            {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // A mid-fleet spawn failure (thread exhaustion under a
+                    // restart storm) must surface as a task failure the
+                    // supervisor can count, not a panic: stop the tasks
+                    // already running and report.
+                    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(format!("spawn engine task {id}: {e}"));
+                }
+            }
+        }
 
         let mut report = EngineReport::default();
         for h in handles {
@@ -221,6 +239,12 @@ impl Engine {
                     Some((n, merged)) if n == name => merged.merge(stats),
                     _ => report.operators.push((name.clone(), *stats)),
                 }
+            }
+            for dl in &task.dead_letters {
+                if report.dead_letters.len() >= super::supervisor::DEAD_LETTER_SAMPLE_CAP {
+                    break;
+                }
+                report.dead_letters.push(dl.clone());
             }
             report.tasks.push(task);
         }

@@ -23,6 +23,8 @@
 //!   boundaries with hash-routed row channels and min-merged frontiers.
 //! * [`checkpoint`] — aligned checkpoints: CRC-validated snapshot files
 //!   and the epoch coordinator behind kill-and-restore recovery.
+//! * [`supervisor`] — heartbeats, watchdog state, and recovery SLO
+//!   accounting for the in-run self-healing driver.
 //! * [`personality`] — the framework execution disciplines.
 //! * [`task`] — one task slot's poll→process→produce→commit loop.
 //! * [`core`] — engine lifecycle: spawn tasks, join, aggregate stats.
@@ -32,6 +34,7 @@ pub mod checkpoint;
 pub mod core;
 pub mod exchange;
 pub mod personality;
+pub mod supervisor;
 pub mod task;
 pub mod watermark;
 pub mod window;
@@ -39,6 +42,7 @@ pub mod window;
 pub use batch::EventBatch;
 pub use checkpoint::{Checkpoint, CheckpointCoordinator, CheckpointStats, CheckpointStore, TaskPart};
 pub use core::{Engine, EngineReport, RunHooks};
+pub use supervisor::{FaultOutcome, ResilienceStats, TaskMonitor};
 pub use exchange::{Boundary, ExchangeFabric, ExchangePacket};
 pub use personality::Personality;
 pub use watermark::WatermarkTracker;

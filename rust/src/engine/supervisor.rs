@@ -1,0 +1,367 @@
+//! In-run supervision: heartbeats, a watchdog, and recovery accounting.
+//!
+//! Every task slot publishes a heartbeat each poll-loop iteration into a
+//! [`TaskMonitor`]; the supervising driver (`coordinator::run_recovery`)
+//! runs a watchdog that injects scheduled faults ([`crate::config::FaultSpec`])
+//! and detects dead or hung tasks by heartbeat deadline, then heals them
+//! by restarting the engine incarnation from the latest committed
+//! checkpoint — bounded retries, exponential backoff, and a counted cold
+//! start when no checkpoint is usable.
+//!
+//! This module holds the shared state and the pure accounting:
+//!
+//! * [`TaskMonitor`] — per-task heartbeat/hang/done state shared between
+//!   task threads and the watchdog;
+//! * [`FaultOutcome`] — one scheduled fault's injection/detection/heal
+//!   timeline and the `detect_us`/`mttr_us` SLO metrics derived from it;
+//! * [`ResilienceStats`] — the aggregate `resilience` block of
+//!   results.json (restarts, downtime, poison quarantine).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::config::FaultSpec;
+use crate::util::json::Json;
+
+/// At most this many quarantined payloads are carried verbatim into the
+/// dead-letter sample of results.json (per run, merged across tasks).
+pub const DEAD_LETTER_SAMPLE_CAP: usize = 8;
+
+/// Heartbeat/hang state shared between the task threads of one engine
+/// incarnation and the supervising watchdog.  All operations are lock-free
+/// loads/stores — the beat sits on the poll loop's hot path.
+pub struct TaskMonitor {
+    /// Last heartbeat per task, clock µs; 0 = no beat yet (still
+    /// compiling / restoring — the watchdog must not count it as stale).
+    beats: Vec<AtomicU64>,
+    /// Injected hang deadline per task, clock µs; a task seeing a future
+    /// deadline stalls (no polls, no beats) until it passes.
+    hang_until: Vec<AtomicU64>,
+    /// Tasks that exited their drive loop (gracefully, killed, or with an
+    /// error).  Done tasks are exempt from staleness checks so a drained
+    /// task is never declared hung.
+    done: Vec<AtomicBool>,
+}
+
+impl TaskMonitor {
+    pub fn new(parallelism: u32) -> Self {
+        Self {
+            beats: (0..parallelism).map(|_| AtomicU64::new(0)).collect(),
+            hang_until: (0..parallelism).map(|_| AtomicU64::new(0)).collect(),
+            done: (0..parallelism).map(|_| AtomicBool::new(false)).collect(),
+        }
+    }
+
+    pub fn parallelism(&self) -> u32 {
+        self.beats.len() as u32
+    }
+
+    /// Publish a heartbeat (called by task `id` every poll iteration).
+    pub fn beat(&self, id: u32, now: u64) {
+        self.beats[id as usize].store(now, Ordering::Relaxed);
+    }
+
+    pub fn last_beat(&self, id: u32) -> u64 {
+        self.beats[id as usize].load(Ordering::Relaxed)
+    }
+
+    /// Inject a hang: task `id` stalls until `until` (clock µs).
+    pub fn inject_hang(&self, id: u32, until: u64) {
+        self.hang_until[id as usize].store(until, Ordering::SeqCst);
+    }
+
+    /// The hang deadline task `id` must respect (0 = none injected).
+    pub fn hang_deadline(&self, id: u32) -> u64 {
+        self.hang_until[id as usize].load(Ordering::Relaxed)
+    }
+
+    /// Mark task `id` as exited (any path out of the drive loop).
+    pub fn mark_done(&self, id: u32) {
+        self.done[id as usize].store(true, Ordering::SeqCst);
+    }
+
+    /// The first live task whose last heartbeat is older than `timeout`
+    /// at `now`.  Tasks that never beat (still compiling) and tasks that
+    /// exited are exempt.
+    pub fn stale_task(&self, now: u64, timeout: u64) -> Option<u32> {
+        for (id, beat) in self.beats.iter().enumerate() {
+            if self.done[id].load(Ordering::SeqCst) {
+                continue;
+            }
+            let last = beat.load(Ordering::Relaxed);
+            if last > 0 && now.saturating_sub(last) > timeout {
+                return Some(id as u32);
+            }
+        }
+        None
+    }
+}
+
+/// Exponential supervisor backoff: `base * 2^restart_index`, saturating
+/// (the shift is capped so a long fault storm cannot overflow).
+pub fn backoff_micros(base: u64, restart_index: u32) -> u64 {
+    base.saturating_mul(1u64 << restart_index.min(16))
+}
+
+/// One scheduled fault's runtime timeline.  Timestamps are clock µs;
+/// `None` means the phase never happened (fault scheduled past the end of
+/// the run, or degradation without detection).
+#[derive(Clone, Debug)]
+pub struct FaultOutcome {
+    pub spec: FaultSpec,
+    pub injected_at: Option<u64>,
+    pub detected_at: Option<u64>,
+    pub healed_at: Option<u64>,
+}
+
+impl FaultOutcome {
+    pub fn new(spec: FaultSpec) -> Self {
+        Self {
+            spec,
+            injected_at: None,
+            detected_at: None,
+            healed_at: None,
+        }
+    }
+
+    /// Injection → detection, µs (0 until both happened).
+    pub fn detect_micros(&self) -> u64 {
+        match (self.injected_at, self.detected_at) {
+            (Some(i), Some(d)) => d.saturating_sub(i),
+            _ => 0,
+        }
+    }
+
+    /// Injection → healed (mean time to repair), µs (0 until healed).
+    pub fn mttr_micros(&self) -> u64 {
+        match (self.injected_at, self.healed_at) {
+            (Some(i), Some(h)) => h.saturating_sub(i),
+            _ => 0,
+        }
+    }
+
+    /// The per-fault entry of the results.json `faults[]` list.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", Json::Str(self.spec.kind.name().to_string()));
+        j.set("target", Json::Str(self.spec.kind.target()));
+        j.set("at_us", Json::Int(self.spec.at_micros as i64));
+        j.set("duration_us", Json::Int(self.spec.duration_micros as i64));
+        j.set("injected", Json::Bool(self.injected_at.is_some()));
+        j.set("detected", Json::Bool(self.detected_at.is_some()));
+        j.set("healed", Json::Bool(self.healed_at.is_some()));
+        j.set("detect_us", Json::Int(self.detect_micros() as i64));
+        j.set("mttr_us", Json::Int(self.mttr_micros() as i64));
+        j
+    }
+}
+
+/// The aggregate `resilience` block of results.json.
+#[derive(Clone, Debug, Default)]
+pub struct ResilienceStats {
+    /// Faults actually injected (scheduled past the run's end never are).
+    pub injected: u64,
+    /// Faults the supervisor noticed (death observed / heartbeat stale /
+    /// stall tracked).
+    pub detected: u64,
+    /// Faults fully healed (engine back to all-ready, or stall released).
+    pub healed: u64,
+    /// Supervised engine restarts performed.
+    pub restart_count: u64,
+    /// Restarts that found no usable checkpoint and went cold.
+    pub cold_starts: u64,
+    /// Total wall time with the engine down across restarts, µs
+    /// (injection → back-to-all-ready, summed over restart faults).
+    pub downtime_micros: u64,
+    /// Mean injection→detection over detected restart faults, µs.
+    pub detect_micros: u64,
+    /// Mean injection→healed over healed restart faults, µs.
+    pub mttr_micros: u64,
+    /// Malformed records quarantined on the parse path.
+    pub poison_records: u64,
+    /// Sample of quarantined payloads (lossy UTF-8, capped at
+    /// [`DEAD_LETTER_SAMPLE_CAP`]).
+    pub dead_letters: Vec<String>,
+}
+
+impl ResilienceStats {
+    /// Fold the per-fault timelines into the aggregate block.
+    pub fn from_outcomes(
+        outcomes: &[FaultOutcome],
+        restart_count: u64,
+        cold_starts: u64,
+        poison_records: u64,
+        dead_letters: Vec<String>,
+    ) -> Self {
+        let injected = outcomes.iter().filter(|o| o.injected_at.is_some()).count() as u64;
+        let detected = outcomes.iter().filter(|o| o.detected_at.is_some()).count() as u64;
+        let healed = outcomes.iter().filter(|o| o.healed_at.is_some()).count() as u64;
+        let restart_outcomes: Vec<&FaultOutcome> =
+            outcomes.iter().filter(|o| o.spec.needs_restart()).collect();
+        let downtime_micros = restart_outcomes.iter().map(|o| o.mttr_micros()).sum();
+        let mean = |vals: Vec<u64>| -> u64 {
+            if vals.is_empty() {
+                0
+            } else {
+                vals.iter().sum::<u64>() / vals.len() as u64
+            }
+        };
+        let detect_micros = mean(
+            restart_outcomes
+                .iter()
+                .filter(|o| o.detected_at.is_some())
+                .map(|o| o.detect_micros())
+                .collect(),
+        );
+        let mttr_micros = mean(
+            restart_outcomes
+                .iter()
+                .filter(|o| o.healed_at.is_some())
+                .map(|o| o.mttr_micros())
+                .collect(),
+        );
+        Self {
+            injected,
+            detected,
+            healed,
+            restart_count,
+            cold_starts,
+            downtime_micros,
+            detect_micros,
+            mttr_micros,
+            poison_records,
+            dead_letters,
+        }
+    }
+
+    /// The `resilience` block of results.json.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("injected", Json::Int(self.injected as i64));
+        j.set("detected", Json::Int(self.detected as i64));
+        j.set("healed", Json::Int(self.healed as i64));
+        j.set("restart_count", Json::Int(self.restart_count as i64));
+        j.set("cold_starts", Json::Int(self.cold_starts as i64));
+        j.set("downtime_us", Json::Int(self.downtime_micros as i64));
+        j.set("detect_us", Json::Int(self.detect_micros as i64));
+        j.set("mttr_us", Json::Int(self.mttr_micros as i64));
+        j.set("poison_records", Json::Int(self.poison_records as i64));
+        j.set(
+            "dead_letter_sample",
+            Json::Arr(
+                self.dead_letters
+                    .iter()
+                    .map(|s| Json::Str(s.clone()))
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FaultKind;
+
+    fn spec(kind: FaultKind, at: u64) -> FaultSpec {
+        FaultSpec {
+            kind,
+            at_micros: at,
+            duration_micros: 0,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn monitor_flags_only_live_stale_tasks() {
+        let m = TaskMonitor::new(3);
+        // No beats yet: nobody is stale (compile/restore grace).
+        assert_eq!(m.stale_task(10_000_000, 100), None);
+        m.beat(0, 1_000_000);
+        m.beat(1, 1_000_000);
+        m.beat(2, 1_000_000);
+        assert_eq!(m.stale_task(1_000_050, 100), None, "within deadline");
+        assert_eq!(m.stale_task(1_000_200, 100), Some(0), "first stale task");
+        m.beat(0, 1_000_200);
+        assert_eq!(m.stale_task(1_000_200, 100), Some(1));
+        // A done task is never hung, even silent.
+        m.mark_done(1);
+        m.mark_done(2);
+        assert_eq!(m.stale_task(2_000_000, 100), None);
+    }
+
+    #[test]
+    fn hang_deadline_roundtrips() {
+        let m = TaskMonitor::new(2);
+        assert_eq!(m.hang_deadline(1), 0);
+        m.inject_hang(1, 5_000_000);
+        assert_eq!(m.hang_deadline(1), 5_000_000);
+        assert_eq!(m.hang_deadline(0), 0, "per-task isolation");
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        assert_eq!(backoff_micros(50_000, 0), 50_000);
+        assert_eq!(backoff_micros(50_000, 1), 100_000);
+        assert_eq!(backoff_micros(50_000, 3), 400_000);
+        // The shift cap keeps pathological restart storms finite.
+        assert!(backoff_micros(u64::MAX, 60) == u64::MAX);
+    }
+
+    #[test]
+    fn outcome_slo_metrics_derive_from_the_timeline() {
+        let mut o = FaultOutcome::new(spec(FaultKind::KillTask { task: 1 }, 500_000));
+        assert_eq!(o.detect_micros(), 0);
+        assert_eq!(o.mttr_micros(), 0);
+        o.injected_at = Some(1_000_000);
+        o.detected_at = Some(1_040_000);
+        o.healed_at = Some(1_250_000);
+        assert_eq!(o.detect_micros(), 40_000);
+        assert_eq!(o.mttr_micros(), 250_000);
+        let j = o.to_json();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("kill_task"));
+        assert_eq!(j.get("detect_us").and_then(|v| v.as_i64()), Some(40_000));
+        assert_eq!(j.get("mttr_us").and_then(|v| v.as_i64()), Some(250_000));
+        assert_eq!(j.get("healed").and_then(|v| v.as_bool()), Some(true));
+    }
+
+    #[test]
+    fn resilience_aggregates_restart_faults_only() {
+        let mut kill = FaultOutcome::new(spec(FaultKind::KillTask { task: 0 }, 0));
+        kill.injected_at = Some(100);
+        kill.detected_at = Some(150);
+        kill.healed_at = Some(300);
+        let mut hang = FaultOutcome::new(spec(FaultKind::HangTask { task: 1 }, 0));
+        hang.injected_at = Some(1_000);
+        hang.detected_at = Some(1_100);
+        hang.healed_at = Some(1_400);
+        // A stall degrades in place: injected+healed but adds no downtime.
+        let mut stall = FaultOutcome::new(spec(FaultKind::StallPartition { partition: 0 }, 0));
+        stall.injected_at = Some(2_000);
+        stall.detected_at = Some(2_000);
+        stall.healed_at = Some(2_500);
+        let r = ResilienceStats::from_outcomes(
+            &[kill, hang, stall],
+            2,
+            1,
+            7,
+            vec!["bad".into()],
+        );
+        assert_eq!(r.injected, 3);
+        assert_eq!(r.detected, 3);
+        assert_eq!(r.healed, 3);
+        assert_eq!(r.restart_count, 2);
+        assert_eq!(r.cold_starts, 1);
+        assert_eq!(r.downtime_micros, 200 + 400, "stall adds no downtime");
+        assert_eq!(r.detect_micros, (50 + 100) / 2);
+        assert_eq!(r.mttr_micros, (200 + 400) / 2);
+        assert_eq!(r.poison_records, 7);
+        let j = r.to_json();
+        assert_eq!(j.get("downtime_us").and_then(|v| v.as_i64()), Some(600));
+        assert_eq!(j.get("restart_count").and_then(|v| v.as_i64()), Some(2));
+        assert_eq!(
+            j.get("dead_letter_sample").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(1)
+        );
+    }
+}

@@ -82,6 +82,10 @@ pub struct TaskHarness {
     /// `tasks[id]` and seeks its partitions back to the recorded offsets
     /// before consuming, replaying everything after the snapshot.
     pub restore_from: Option<Arc<Checkpoint>>,
+    /// Supervision channel: the task publishes a heartbeat here every
+    /// poll iteration and honours injected hang deadlines; the watchdog
+    /// reads staleness off it.  `None` runs unsupervised.
+    pub monitor: Option<Arc<super::supervisor::TaskMonitor>>,
 }
 
 /// Per-task result.
@@ -94,6 +98,9 @@ pub struct TaskReport {
     pub step: StepStats,
     /// Per-operator stats in chain order (one entry for monolithic steps).
     pub op_stats: Vec<(String, StepStats)>,
+    /// Sample of quarantined (unparseable) payloads, lossy UTF-8, capped
+    /// at [`super::supervisor::DEAD_LETTER_SAMPLE_CAP`] per task.
+    pub dead_letters: Vec<String>,
 }
 
 /// Reusable per-task buffers, refilled every processed batch so the steady
@@ -126,6 +133,13 @@ struct CkptState {
     offsets: Vec<(u32, u64)>,
     /// Offsets awaiting their epoch's durable commit: `(epoch, offsets)`.
     queued: Vec<(u64, Vec<(u32, u64)>)>,
+    /// Stream position already covered by the restore source, so
+    /// checkpointed `events_in` counts stay absolute across any number of
+    /// supervised restarts (the task's own report is incarnation-local).
+    base_events: u64,
+    /// Quarantined-record count already covered by the restore source —
+    /// the same absolute-count trick for `parse_failures`.
+    base_parse: u64,
     /// Snapshots this task contributed.
     snapshots: u64,
     /// Bytes of checkpoint files whose commit this task's submit closed.
@@ -171,6 +185,11 @@ impl TaskHarness {
         }
         self.ready.fetch_add(1, Ordering::SeqCst);
         let res = self.drive(&mut *step);
+        // Whatever the exit path — graceful drain, kill, or error — the
+        // watchdog must stop expecting heartbeats from this slot.
+        if let Some(mon) = &self.monitor {
+            mon.mark_done(self.id);
+        }
         if res.is_err() {
             // Release anything sibling tasks are waiting on (exchange
             // boundaries) so their finish drains terminate and the
@@ -207,6 +226,18 @@ impl TaskHarness {
                 .map(|p| p.offsets.clone())
                 .unwrap_or_default(),
             queued: Vec::new(),
+            base_events: self
+                .restore_from
+                .as_ref()
+                .and_then(|c| c.tasks.get(self.id as usize))
+                .map(|p| p.events_in)
+                .unwrap_or(0),
+            base_parse: self
+                .restore_from
+                .as_ref()
+                .and_then(|c| c.tasks.get(self.id as usize))
+                .map(|p| p.parse_failures)
+                .unwrap_or(0),
             snapshots: 0,
             bytes: 0,
             micros: 0,
@@ -214,6 +245,19 @@ impl TaskHarness {
 
         let interval = self.personality.batch_interval_micros;
         loop {
+            if let Some(mon) = &self.monitor {
+                // An injected hang: stop polling AND stop heartbeating
+                // until the deadline passes, so only the watchdog's
+                // heartbeat timeout can notice.  The kill switch still
+                // breaks the stall — it models a SIGKILL, which even a
+                // wedged task obeys.
+                while self.clock.now_micros() < mon.hang_deadline(self.id)
+                    && !self.kill.load(Ordering::Relaxed)
+                {
+                    self.clock.sleep_micros(1_000);
+                }
+                mon.beat(self.id, self.clock.now_micros());
+            }
             if self.kill.load(Ordering::Relaxed) {
                 // Crash, not a stop: no finish flush, no offset commit —
                 // buffered batches, open windows, and deferred offsets are
@@ -270,6 +314,7 @@ impl TaskHarness {
                                     cs,
                                     self.clock.now_micros(),
                                     report.events_in,
+                                    report.parse_failures,
                                 )?;
                             }
                             self.clock.sleep_micros(200);
@@ -290,7 +335,13 @@ impl TaskHarness {
                 // Snapshots happen at batch boundaries only, so a task
                 // part always describes a prefix of its input stream.
                 if let Some(cs) = ckpt.as_mut() {
-                    self.maybe_checkpoint(&mut *step, cs, self.clock.now_micros(), report.events_in)?;
+                    self.maybe_checkpoint(
+                        &mut *step,
+                        cs,
+                        self.clock.now_micros(),
+                        report.events_in,
+                        report.parse_failures,
+                    )?;
                 }
                 batch_started = self.clock.now_micros();
             }
@@ -328,6 +379,7 @@ impl TaskHarness {
         cs: &mut CkptState,
         now: u64,
         events_in: u64,
+        parse_failures: u64,
     ) -> Result<(), String> {
         let epoch = cs.coord.epoch_at(now);
         if epoch > cs.last_epoch {
@@ -335,7 +387,8 @@ impl TaskHarness {
             let state = step.snapshot()?;
             let part = TaskPart {
                 offsets: cs.offsets.clone(),
-                events_in,
+                events_in: cs.base_events + events_in,
+                parse_failures: cs.base_parse + parse_failures,
                 state,
             };
             let written = cs.coord.submit(epoch, self.id as usize, part)?;
@@ -378,7 +431,11 @@ impl TaskHarness {
         bufs.parsed.clear();
         bufs.compat.clear();
         if needs_parse {
-            report.parse_failures += bufs.parsed.extend_from_batches(&bufs.pending) as u64;
+            let quarantined = bufs.parsed.extend_from_batches(&bufs.pending) as u64;
+            if quarantined > 0 {
+                report.parse_failures += quarantined;
+                self.sample_dead_letters(&bufs.pending, report);
+            }
         } else {
             // Per-record compatibility view for steps that forward raw
             // records (pass-through); payload arenas are shared, not
@@ -455,6 +512,30 @@ impl TaskHarness {
             }
         }
         Ok(())
+    }
+
+    /// Quarantine bookkeeping for a poll batch that contained malformed
+    /// payloads: re-scan the raw batches (cold path, failures only) and
+    /// keep up to the dead-letter cap of them verbatim so results.json
+    /// can show *what* was poisoned, not just how many.
+    fn sample_dead_letters(&self, pending: &[RecordBatch], report: &mut TaskReport) {
+        let cap = super::supervisor::DEAD_LETTER_SAMPLE_CAP;
+        if report.dead_letters.len() >= cap {
+            return;
+        }
+        for rb in pending {
+            for i in 0..rb.len() {
+                let payload = rb.payload(i);
+                if crate::wgen::SensorEvent::parse(payload).is_none() {
+                    report
+                        .dead_letters
+                        .push(String::from_utf8_lossy(payload).into_owned());
+                    if report.dead_letters.len() >= cap {
+                        return;
+                    }
+                }
+            }
+        }
     }
 
     /// Produce processed records to the egestion topic.  The buffer is

@@ -219,6 +219,9 @@ mod tests {
                 batches: 1,
                 operators: Vec::new(),
                 recovery: None,
+                quarantined: 0,
+                faults: Vec::new(),
+                resilience: None,
             };
             Ok((summary, Arc::new(MetricStore::new())))
         }

@@ -33,6 +33,12 @@ pub struct SustainPolicy {
     /// watermark (late + dropped, summed across the run's event-time
     /// operators); 0 disables the check.
     pub max_late_fraction: f64,
+    /// Max supervised engine restarts before the run is declared
+    /// unsustainable; 0 disables the check.
+    pub max_restarts: u32,
+    /// Availability floor: `1 - downtime/elapsed` must stay at or above
+    /// this; 0 disables the check.
+    pub min_availability: f64,
 }
 
 impl SustainPolicy {
@@ -50,6 +56,8 @@ impl SustainPolicy {
                 cfg.bench.warmup_micros
             },
             max_late_fraction: x.max_late_fraction,
+            max_restarts: x.max_restarts,
+            min_availability: x.min_availability,
         }
     }
 
@@ -128,6 +136,32 @@ impl SustainPolicy {
                     self.max_late_fraction * 100.0,
                     summary.processed
                 ));
+            }
+        }
+
+        // Resilience SLOs: a run that only "keeps up" by leaning on the
+        // supervisor — repeated heal cycles, long stretches with the
+        // engine down — is not sustaining the load either.
+        if let Some(res) = &summary.resilience {
+            if self.max_restarts > 0 && res.restart_count > self.max_restarts as u64 {
+                reasons.push(format!(
+                    "restart budget: {} supervised restarts > bound {}",
+                    res.restart_count, self.max_restarts
+                ));
+            }
+            if self.min_availability > 0.0 && summary.elapsed_micros > 0 {
+                let avail = 1.0
+                    - (res.downtime_micros.min(summary.elapsed_micros) as f64
+                        / summary.elapsed_micros as f64);
+                if avail < self.min_availability {
+                    reasons.push(format!(
+                        "availability {:.4} < floor {:.4} ({}µs down of {}µs)",
+                        avail,
+                        self.min_availability,
+                        res.downtime_micros,
+                        summary.elapsed_micros
+                    ));
+                }
             }
         }
 
@@ -222,6 +256,9 @@ mod tests {
             batches: 1,
             operators: Vec::new(),
             recovery: None,
+            quarantined: 0,
+            faults: Vec::new(),
+            resilience: None,
         }
     }
 
@@ -232,6 +269,8 @@ mod tests {
             max_latency_growth: 0.0,
             warmup_discard_micros: 0,
             max_late_fraction: 0.0,
+            max_restarts: 0,
+            min_availability: 0.0,
         }
     }
 
@@ -332,6 +371,52 @@ mod tests {
         // Under the bound: sustainable.
         p.max_late_fraction = 0.40;
         assert!(p.evaluate(100_000, &s, None).sustainable);
+    }
+
+    #[test]
+    fn restart_budget_and_availability_apply_only_when_set() {
+        use crate::engine::ResilienceStats;
+        let mut s = summary(100_000, 100_000.0, 99_000.0, 5_000);
+        // Two heal cycles, engine down 40% of the run.
+        s.resilience = Some(ResilienceStats {
+            restart_count: 2,
+            downtime_micros: 800_000,
+            ..ResilienceStats::default()
+        });
+        assert!(
+            policy().evaluate(100_000, &s, None).sustainable,
+            "both checks disabled by default"
+        );
+        let mut p = policy();
+        p.max_restarts = 1;
+        let v = p.evaluate(100_000, &s, None);
+        assert!(!v.sustainable);
+        assert!(
+            v.reasons.iter().any(|r| r.contains("restart budget")),
+            "{:?}",
+            v.reasons
+        );
+        // Two restarts within a budget of two: fine.
+        p.max_restarts = 2;
+        assert!(p.evaluate(100_000, &s, None).sustainable);
+        // Availability: 1 - 0.8/2.0 = 0.6 < 0.95 floor.
+        let mut p = policy();
+        p.min_availability = 0.95;
+        let v = p.evaluate(100_000, &s, None);
+        assert!(!v.sustainable);
+        assert!(
+            v.reasons.iter().any(|r| r.contains("availability")),
+            "{:?}",
+            v.reasons
+        );
+        p.min_availability = 0.5;
+        assert!(p.evaluate(100_000, &s, None).sustainable);
+        // A fault-free run (no resilience block) passes strict SLOs.
+        let clean = summary(100_000, 100_000.0, 99_000.0, 5_000);
+        let mut p = policy();
+        p.max_restarts = 1;
+        p.min_availability = 1.0;
+        assert!(p.evaluate(100_000, &clean, None).sustainable);
     }
 
     #[test]

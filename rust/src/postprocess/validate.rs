@@ -57,6 +57,17 @@ pub fn validate_results(results: &Json) -> Vec<Violation> {
             detail: format!("processed {processed} > generated {generated}"),
         });
     }
+    // Quarantine-aware conservation: `processed` counts only clean
+    // records, so the quarantined ones must still fit under `generated`.
+    let quarantined = get_f(results, &["events", "quarantined"]).unwrap_or(0.0);
+    if quarantined > 0.0 && processed + quarantined > generated {
+        v.push(Violation {
+            check: "conservation",
+            detail: format!(
+                "processed {processed} + quarantined {quarantined} > generated {generated}"
+            ),
+        });
+    }
     // Pass-through and CPU pipelines forward 1:1; processed events that
     // vanished without being emitted indicate loss.
     if (pipeline == "passthrough" || pipeline == "cpu") && emitted < processed {
@@ -155,6 +166,66 @@ pub fn validate_results(results: &Json) -> Vec<Violation> {
                 check: "recovery-time-nonzero",
                 detail: format!("replayed {replayed} records in 0 µs"),
             });
+        }
+    }
+    // Supervised runs carry `resilience` + `faults[]`; the fault
+    // timelines and the aggregate counters must agree with each other
+    // and with the quarantine counter.
+    if let Some(res) = results.get("resilience") {
+        let injected = get_f(results, &["resilience", "injected"]).unwrap_or(-1.0);
+        let detected = get_f(results, &["resilience", "detected"]).unwrap_or(-1.0);
+        let healed = get_f(results, &["resilience", "healed"]).unwrap_or(-1.0);
+        let restarts = get_f(results, &["resilience", "restart_count"]).unwrap_or(-1.0);
+        let cold = get_f(results, &["resilience", "cold_starts"]).unwrap_or(-1.0);
+        if injected < 0.0 || detected < 0.0 || healed < 0.0 || restarts < 0.0 {
+            v.push(Violation {
+                check: "resilience-counters-present",
+                detail: "missing resilience.{injected,detected,healed,restart_count}".into(),
+            });
+        }
+        if detected > injected || healed > injected {
+            v.push(Violation {
+                check: "resilience-causality",
+                detail: format!(
+                    "detected {detected} / healed {healed} exceed injected {injected}"
+                ),
+            });
+        }
+        if cold > restarts {
+            v.push(Violation {
+                check: "resilience-cold-starts",
+                detail: format!("cold_starts {cold} > restart_count {restarts}"),
+            });
+        }
+        let poison = res.get("poison_records").and_then(|p| p.as_f64()).unwrap_or(0.0);
+        if poison != quarantined {
+            v.push(Violation {
+                check: "quarantine-consistent",
+                detail: format!(
+                    "resilience.poison_records {poison} != events.quarantined {quarantined}"
+                ),
+            });
+        }
+    }
+    if let Some(faults) = results.get("faults").and_then(|f| f.as_arr()) {
+        for (i, f) in faults.iter().enumerate() {
+            let injected = f.get("injected").and_then(|b| b.as_bool()).unwrap_or(false);
+            let detected = f.get("detected").and_then(|b| b.as_bool()).unwrap_or(false);
+            let healed = f.get("healed").and_then(|b| b.as_bool()).unwrap_or(false);
+            if (detected || healed) && !injected {
+                v.push(Violation {
+                    check: "fault-causality",
+                    detail: format!("faults[{i}] detected/healed but never injected"),
+                });
+            }
+            let detect = f.get("detect_us").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            let mttr = f.get("mttr_us").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            if detected && healed && mttr < detect {
+                v.push(Violation {
+                    check: "fault-slo-order",
+                    detail: format!("faults[{i}] mttr_us {mttr} < detect_us {detect}"),
+                });
+            }
         }
     }
     v
@@ -280,6 +351,88 @@ mod tests {
         crate::config::overlay(&mut j, "recovery.restored_epoch", Json::Int(0));
         crate::config::overlay(&mut j, "recovery.checkpoints", Json::Int(0));
         assert!(validate_results(&j).is_empty());
+    }
+
+    fn good_resilience() -> Json {
+        let mut j = good();
+        crate::config::overlay(&mut j, "events.quarantined", Json::Int(0));
+        let res = parse(
+            r#"{
+            "injected": 2, "detected": 2, "healed": 2,
+            "restart_count": 2, "cold_starts": 0,
+            "downtime_us": 600000, "detect_us": 1000, "mttr_us": 300000,
+            "poison_records": 0, "dead_letter_sample": []
+        }"#,
+        )
+        .unwrap();
+        j.set("resilience", res);
+        let faults = parse(
+            r#"[
+            {"kind": "kill_task", "target": "task 0", "at_us": 500000,
+             "duration_us": 0, "injected": true, "detected": true,
+             "healed": true, "detect_us": 1000, "mttr_us": 280000},
+            {"kind": "hang_task", "target": "task 1", "at_us": 2000000,
+             "duration_us": 400000, "injected": true, "detected": true,
+             "healed": true, "detect_us": 250000, "mttr_us": 320000}
+        ]"#,
+        )
+        .unwrap();
+        j.set("faults", faults);
+        j
+    }
+
+    #[test]
+    fn supervised_run_blocks_validate_when_consistent() {
+        assert!(validate_results(&good_resilience()).is_empty());
+    }
+
+    #[test]
+    fn detects_quarantine_breaking_conservation() {
+        let mut j = good();
+        // 1000 generated, 1000 processed — quarantined records must have
+        // been subtracted from processed, so 50 more breaks conservation.
+        crate::config::overlay(&mut j, "events.quarantined", Json::Int(50));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "conservation"), "{v:?}");
+        // Subtracted correctly: clean.
+        crate::config::overlay(&mut j, "events.processed", Json::Int(950));
+        crate::config::overlay(&mut j, "events.emitted", Json::Int(950));
+        let mut jr = good_resilience();
+        crate::config::overlay(&mut jr, "events.quarantined", Json::Int(50));
+        crate::config::overlay(&mut jr, "events.processed", Json::Int(950));
+        crate::config::overlay(&mut jr, "events.emitted", Json::Int(950));
+        crate::config::overlay(&mut jr, "resilience.poison_records", Json::Int(50));
+        assert!(validate_results(&jr).is_empty());
+    }
+
+    #[test]
+    fn detects_fault_causality_and_slo_order() {
+        let mut j = good_resilience();
+        crate::config::overlay(&mut j, "resilience.healed", Json::Int(3));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "resilience-causality"), "{v:?}");
+        let mut j = good_resilience();
+        crate::config::overlay(&mut j, "resilience.cold_starts", Json::Int(5));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "resilience-cold-starts"), "{v:?}");
+        let mut j = good_resilience();
+        crate::config::overlay(&mut j, "resilience.poison_records", Json::Int(9));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "quarantine-consistent"), "{v:?}");
+        // A healed fault that was never injected is incoherent.
+        let mut j = good_resilience();
+        let mut fs = j.get("faults").and_then(|f| f.as_arr()).unwrap().to_vec();
+        fs[0].set("injected", Json::Bool(false));
+        j.set("faults", Json::Arr(fs));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "fault-causality"), "{v:?}");
+        // Healing cannot be faster than detecting.
+        let mut j = good_resilience();
+        let mut fs = j.get("faults").and_then(|f| f.as_arr()).unwrap().to_vec();
+        fs[1].set("mttr_us", Json::Int(100));
+        j.set("faults", Json::Arr(fs));
+        let v = validate_results(&j);
+        assert!(v.iter().any(|x| x.check == "fault-slo-order"), "{v:?}");
     }
 
     #[test]

@@ -16,7 +16,7 @@ use super::event::{EventFormat, SensorEvent};
 use super::pattern::{KeyDist, Pattern, PatternState};
 use super::ratelimit::TokenBucket;
 use crate::broker::{Broker, PartitionedBatchBuilder, Topic};
-use crate::config::DisorderSection;
+use crate::config::{DisorderSection, FaultKind, FaultSpec};
 use crate::metrics::{LatencyRecorder, MeasurementPoint, ThroughputRecorder};
 use crate::util::clock::ClockRef;
 use crate::util::rng::Pcg32;
@@ -42,6 +42,10 @@ pub struct GeneratorConfig {
     /// Out-of-order arrival model (`workload.disorder`); identity when
     /// disabled.
     pub disorder: DisorderSection,
+    /// Poison-record fault windows (`fault.schedule: poison_records`):
+    /// while a window is active a seeded fraction of serialized payloads
+    /// is corrupted in place.  Empty when no poison fault is planned.
+    pub poison: Vec<FaultSpec>,
 }
 
 impl GeneratorConfig {
@@ -63,6 +67,7 @@ impl GeneratorConfig {
             seed: cfg.bench.seed,
             produce_batch: 512,
             disorder: cfg.workload.disorder.clone(),
+            poison: cfg.fault.poison_plan(),
         }
     }
 
@@ -168,6 +173,58 @@ impl Fleet {
     }
 }
 
+/// Live poison-fault state for one generator instance: each configured
+/// window corrupts a seeded `fraction` of payloads while
+/// `[at, at + duration)` is active (`duration` 0 = the whole run).
+/// Corrupted payloads keep their serialized length — byte accounting and
+/// event conservation are untouched; only downstream parsing fails, which
+/// the engine quarantines and counts.
+struct PoisonState {
+    windows: Vec<PoisonWindow>,
+}
+
+struct PoisonWindow {
+    from_micros: u64,
+    until_micros: u64,
+    fraction: f64,
+    rng: Pcg32,
+}
+
+impl PoisonState {
+    fn new(plan: &[FaultSpec], master_seed: u64, instance: u32, run_start_micros: u64) -> Self {
+        let windows = plan
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::PoisonRecords { fraction } => {
+                    let seed = if f.seed != 0 { f.seed } else { master_seed };
+                    Some(PoisonWindow {
+                        from_micros: run_start_micros + f.at_micros,
+                        until_micros: if f.duration_micros == 0 {
+                            u64::MAX
+                        } else {
+                            run_start_micros + f.at_micros + f.duration_micros
+                        },
+                        fraction,
+                        // Seeded per instance like the schedule (0xDADA) and
+                        // disorder (0xD150) streams, so poison runs replay
+                        // exactly.
+                        rng: Pcg32::from_master(seed ^ 0xBAD0, instance as u64),
+                    })
+                }
+                _ => None,
+            })
+            .collect();
+        Self { windows }
+    }
+
+    /// Whether the payload assembled at `now` should be corrupted.
+    fn sample(&mut self, now_micros: u64) -> bool {
+        self.windows.iter_mut().any(|w| {
+            now_micros >= w.from_micros && now_micros < w.until_micros && w.rng.f64() < w.fraction
+        })
+    }
+}
+
 struct InstanceWorker {
     id: u32,
     config: GeneratorConfig,
@@ -200,6 +257,14 @@ impl InstanceWorker {
             DisorderState::new(
                 self.config.disorder.clone(),
                 Pcg32::from_master(self.config.seed ^ 0xD150, self.id as u64),
+            )
+        });
+        let mut poison = (!self.config.poison.is_empty()).then(|| {
+            PoisonState::new(
+                &self.config.poison,
+                self.config.seed,
+                self.id,
+                self.clock.now_micros(),
             )
         });
         // Pace at the instance share, never beyond rated capacity.
@@ -255,6 +320,13 @@ impl InstanceWorker {
                     };
                     let n = serializer.serialize(&ev, &mut wire);
                     total_bytes += n as u64;
+                    if let Some(p) = &mut poison {
+                        if p.sample(now) {
+                            // `#` defeats both wire parsers; length (and
+                            // therefore all byte accounting) is preserved.
+                            wire.fill(b'#');
+                        }
+                    }
                     pb.push(
                         self.topic.partition_for_key(ev.sensor_id),
                         ev.sensor_id,
@@ -283,6 +355,11 @@ impl InstanceWorker {
             while let Some(ev) = d.flush_one() {
                 let n = serializer.serialize(&ev, &mut wire);
                 total_bytes += n as u64;
+                if let Some(p) = &mut poison {
+                    if p.sample(now) {
+                        wire.fill(b'#');
+                    }
+                }
                 pb.push(
                     self.topic.partition_for_key(ev.sensor_id),
                     ev.sensor_id,
@@ -355,6 +432,7 @@ mod tests {
             seed: 42,
             produce_batch: 256,
             disorder: DisorderSection::default(),
+            poison: Vec::new(),
         }
     }
 
@@ -488,6 +566,55 @@ mod tests {
         assert!(
             regressions > report.events / 50,
             "disorder must produce out-of-order gen_ts: {regressions} of {consumed}"
+        );
+    }
+
+    #[test]
+    fn poison_windows_corrupt_a_seeded_fraction_without_losing_events() {
+        let clk = clock::wall();
+        let broker = Broker::new(BrokerConfig::default(), clk.clone());
+        let topic = broker.create_topic("in");
+        let group = broker.subscribe("in", "sink", 1);
+        let mut cfg = config(60_000);
+        cfg.poison = vec![FaultSpec {
+            kind: FaultKind::PoisonRecords { fraction: 0.2 },
+            at_micros: 0,
+            duration_micros: 0, // whole run
+            seed: 0,            // inherit the bench seed
+        }];
+        let tp = Arc::new(ThroughputRecorder::new());
+        let lat = Arc::new(LatencyRecorder::new());
+        let fleet = Fleet::new(cfg, clk, tp, lat);
+        let stop = Arc::new(AtomicBool::new(false));
+        let report = fleet.run(&broker, &topic, 500_000, &stop, |r| Pattern::Constant {
+            rate: r,
+        });
+        broker.shutdown();
+        let mut bad = 0u64;
+        let mut consumed = 0u64;
+        loop {
+            match group.poll(0, 4096) {
+                Ok(Some(b)) => {
+                    for rb in &b.batches {
+                        for i in 0..rb.len() {
+                            if SensorEvent::parse(rb.payload(i)).is_none() {
+                                bad += 1;
+                            }
+                            consumed += 1;
+                        }
+                    }
+                    group.commit(b.partition, b.next_offset);
+                }
+                Ok(None) => continue,
+                Err(_) => break,
+            }
+        }
+        // Conservation: poison corrupts payloads, it never drops events.
+        assert_eq!(consumed, report.events);
+        let frac = bad as f64 / consumed.max(1) as f64;
+        assert!(
+            (0.1..0.35).contains(&frac),
+            "poison fraction off target: {bad}/{consumed}"
         );
     }
 

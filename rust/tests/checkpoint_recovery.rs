@@ -93,6 +93,7 @@ fn through_store(tag: &str, epoch: u64, events_in: u64, state: Json) -> (u64, Js
             tasks: vec![TaskPart {
                 offsets: vec![(0, events_in)],
                 events_in,
+                parse_failures: 0,
                 state,
             }],
         })

@@ -5,7 +5,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use sprobench::broker::{Broker, BrokerConfig, Record};
-use sprobench::config::{BenchConfig, PipelineKind};
+use sprobench::config::{BenchConfig, FaultKind, FaultSpec, PipelineKind};
 use sprobench::coordinator::run_recovery;
 use sprobench::engine::Engine;
 use sprobench::metrics::{LatencyRecorder, ThroughputRecorder};
@@ -231,6 +231,49 @@ fn recovery_cfg(name: &str) -> BenchConfig {
     c.fault.kill_task = 1;
     c.fault.kill_after_micros = 500_000;
     c
+}
+
+#[test]
+fn poison_only_schedule_quarantines_and_conserves() {
+    // A poison window and no restart faults: the parse path must
+    // quarantine the corrupted records (with a dead-letter sample),
+    // exclude them from `processed`, and keep exact conservation —
+    // every generated record is processed or quarantined, never both.
+    let mut c = recovery_cfg("poison");
+    c.fault.kill_after_micros = 0; // no kill: quarantine is the only fault
+    c.fault.schedule = vec![FaultSpec {
+        kind: FaultKind::PoisonRecords { fraction: 0.2 },
+        at_micros: 100_000,
+        duration_micros: 0, // rest of the run
+        seed: 7,
+    }];
+    c.checkpoint.interval_micros = 300_000;
+    c.validate().unwrap();
+    let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+    let (summary, _) = run_recovery(&c, None).unwrap();
+    let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+
+    assert!(summary.quarantined > 0, "poison window quarantined nothing");
+    assert_eq!(
+        summary.processed + summary.quarantined,
+        summary.generated,
+        "conservation must hold exactly under quarantine"
+    );
+    assert!(
+        summary.recovery.is_none(),
+        "no restart faults means no recovery block"
+    );
+    let res = summary.resilience.expect("supervised run reports resilience");
+    assert_eq!(res.poison_records, summary.quarantined);
+    assert_eq!(res.restart_count, 0);
+    assert_eq!(res.injected, 1);
+    assert_eq!(res.healed, 1, "whole-run windows heal at run end");
+    assert!(
+        !res.dead_letters.is_empty(),
+        "quarantine must sample dead letters"
+    );
+    let violations = validate_results(&summary.to_json());
+    assert!(violations.is_empty(), "{violations:?}");
 }
 
 #[test]

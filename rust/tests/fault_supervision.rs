@@ -1,0 +1,191 @@
+//! Self-healing supervision under declarative fault schedules: the
+//! supervisor must detect every scheduled fault, restart within its
+//! retry budget, keep the record accounting conserved, and report the
+//! full SLO timeline in results.json — all without external
+//! orchestration.
+
+use sprobench::config::{BenchConfig, FaultKind, FaultSpec, PipelineKind};
+use sprobench::coordinator::run_recovery;
+use sprobench::postprocess::validate_results;
+
+/// Base config for supervised chaos runs: short wall run, checkpoints
+/// committing every 150ms into a per-test temp dir.
+fn chaos_cfg(name: &str) -> BenchConfig {
+    let mut c = BenchConfig::default();
+    c.bench.name = name.into();
+    c.bench.warmup_micros = 0;
+    c.bench.duration_micros = 1_500_000;
+    c.workload.rate = 50_000;
+    c.workload.sensors = 128;
+    c.engine.pipeline = PipelineKind::CpuIntensive;
+    c.engine.parallelism = 2;
+    c.engine.use_hlo = false;
+    c.engine.batch_size = 256;
+    c.metrics.sample_interval_micros = 100_000;
+    c.checkpoint.interval_micros = 150_000;
+    c.checkpoint.dir = std::env::temp_dir()
+        .join(format!("sprobench-chaos-{name}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    c
+}
+
+fn kill(task: u32, at: u64) -> FaultSpec {
+    FaultSpec {
+        kind: FaultKind::KillTask { task },
+        at_micros: at,
+        duration_micros: 0,
+        seed: 0,
+    }
+}
+
+fn run(c: &BenchConfig) -> sprobench::coordinator::RunSummary {
+    c.validate().unwrap();
+    let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+    let out = run_recovery(c, None).unwrap().0;
+    let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+    out
+}
+
+#[test]
+fn multi_kill_schedule_heals_each_kill() {
+    // Two kills in one run: the supervisor must warm-restore twice, and
+    // each fault's timeline must close (injected → detected → healed).
+    let mut c = chaos_cfg("multikill");
+    c.fault.schedule = vec![kill(0, 400_000), kill(1, 900_000)];
+    let summary = run(&c);
+
+    let res = summary.resilience.as_ref().expect("supervised run");
+    assert_eq!(res.injected, 2, "{res:?}");
+    assert_eq!(res.detected, 2, "{res:?}");
+    assert_eq!(res.healed, 2, "both kills must self-heal: {res:?}");
+    assert_eq!(res.restart_count, 2, "{res:?}");
+    assert_eq!(summary.faults.len(), 2);
+    for f in &summary.faults {
+        assert!(f.healed_at.is_some(), "unhealed fault: {f:?}");
+        assert!(f.mttr_micros() > 0, "{f:?}");
+        assert!(
+            f.mttr_micros() >= f.detect_micros(),
+            "heal cannot precede detection: {f:?}"
+        );
+    }
+    // Downtime is the sum of both outage windows.
+    let mttr_sum: u64 = summary.faults.iter().map(|f| f.mttr_micros()).sum();
+    assert_eq!(res.downtime_micros, mttr_sum, "{res:?}");
+    // Replays are subtracted: distinct processed records stay conserved.
+    assert_eq!(summary.processed, summary.generated);
+    let violations = validate_results(&summary.to_json());
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+#[test]
+fn hung_task_detected_by_heartbeat_deadline() {
+    // The hang never kills the task — it just stops polling and
+    // heartbeating — so only the watchdog's deadline can notice.  The
+    // stall outlives the run: without supervision the run would wedge.
+    let mut c = chaos_cfg("hangdetect");
+    c.fault.schedule = vec![FaultSpec {
+        kind: FaultKind::HangTask { task: 1 },
+        at_micros: 400_000,
+        duration_micros: 30_000_000, // longer than the run
+        seed: 0,
+    }];
+    c.fault.heartbeat_timeout_micros = 200_000;
+    let summary = run(&c);
+
+    let res = summary.resilience.as_ref().expect("supervised run");
+    assert_eq!(res.injected, 1, "{res:?}");
+    assert_eq!(res.detected, 1, "watchdog must flag the stale heartbeat: {res:?}");
+    assert_eq!(res.healed, 1, "{res:?}");
+    assert_eq!(res.restart_count, 1, "{res:?}");
+    let f = &summary.faults[0];
+    assert!(f.detect_micros() > 0, "{f:?}");
+    assert!(f.mttr_micros() >= f.detect_micros(), "{f:?}");
+    assert_eq!(summary.processed, summary.generated);
+    let violations = validate_results(&summary.to_json());
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+#[test]
+fn kill_hang_poison_acceptance_run() {
+    // The full acceptance schedule: a kill, a hang, and a poison window
+    // overlapping the first restart.  The run must self-heal twice,
+    // quarantine the malformed records (replayed poison is re-quarantined,
+    // never double-counted), and report the complete SLO rollup.
+    let mut c = chaos_cfg("acceptance");
+    c.fault.schedule = vec![
+        kill(0, 350_000),
+        FaultSpec {
+            kind: FaultKind::HangTask { task: 1 },
+            at_micros: 800_000,
+            duration_micros: 30_000_000,
+            seed: 0,
+        },
+        FaultSpec {
+            kind: FaultKind::PoisonRecords { fraction: 0.05 },
+            at_micros: 0,
+            duration_micros: 600_000,
+            seed: 11,
+        },
+    ];
+    c.fault.heartbeat_timeout_micros = 200_000;
+    let summary = run(&c);
+
+    let res = summary.resilience.as_ref().expect("supervised run");
+    assert_eq!(res.injected, 3, "{res:?}");
+    assert_eq!(res.healed, 3, "every fault must heal in-run: {res:?}");
+    assert_eq!(res.restart_count, 2, "{res:?}");
+    assert!(res.downtime_micros > 0, "{res:?}");
+    assert!(summary.quarantined > 0, "poison window produced no quarantine");
+    assert_eq!(res.poison_records, summary.quarantined);
+    // Conservation with quarantine: every distinct generated record is
+    // either processed or quarantined, exactly once.
+    assert_eq!(
+        summary.processed + summary.quarantined,
+        summary.generated,
+        "{res:?}"
+    );
+
+    // The acceptance criteria live in results.json, so check the document
+    // itself, not just the in-memory summary.
+    let j = summary.to_json();
+    let geti = |path: &[&str]| j.path(path).and_then(|v| v.as_i64()).unwrap();
+    assert_eq!(geti(&["resilience", "restart_count"]), 2);
+    assert!(geti(&["resilience", "downtime_us"]) > 0);
+    assert!(geti(&["resilience", "detect_us"]) > 0);
+    assert!(geti(&["resilience", "mttr_us"]) > 0);
+    assert_eq!(
+        geti(&["events", "processed"]) + geti(&["events", "quarantined"]),
+        geti(&["events", "generated"])
+    );
+    let faults = j.get("faults").and_then(|f| f.as_arr()).expect("faults[]");
+    assert_eq!(faults.len(), 3);
+    for f in faults {
+        assert_eq!(f.get("injected").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(f.get("healed").and_then(|v| v.as_bool()), Some(true));
+        let kind = f.get("kind").and_then(|v| v.as_str()).unwrap();
+        if kind != "poison_records" {
+            assert!(f.get("detect_us").and_then(|v| v.as_i64()).unwrap() > 0, "{kind}");
+            assert!(f.get("mttr_us").and_then(|v| v.as_i64()).unwrap() > 0, "{kind}");
+        }
+    }
+    let violations = validate_results(&j);
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+#[test]
+fn restart_budget_exhaustion_fails_the_run_loudly() {
+    // Three kills against a budget of two: the supervisor must give up
+    // with an error naming the budget, not hang or succeed silently.
+    let mut c = chaos_cfg("budget");
+    c.fault.schedule = vec![kill(0, 250_000), kill(1, 600_000), kill(0, 950_000)];
+    c.fault.max_restarts = 2;
+    c.validate().unwrap();
+    let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+    let err = run_recovery(&c, None).unwrap_err();
+    let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+    assert!(
+        err.contains("restart") || err.contains("budget"),
+        "error must name the exhausted budget: {err}"
+    );
+}

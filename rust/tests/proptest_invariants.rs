@@ -364,6 +364,7 @@ fn prop_corrupt_checkpoint_files_rejected_readably() {
                 TaskPart {
                     offsets: vec![(t as u32, g.u64(0..1 << 50))],
                     events_in: g.u64(0..1 << 50),
+                    parse_failures: 0,
                     state,
                 }
             })
@@ -414,5 +415,152 @@ fn prop_consumer_group_assignment_partitions_exactly() {
             return Err(format!("partitions not covered exactly once: {seen:?}"));
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_fault_schedules_leave_aggregates_untouched() {
+    // Restart and stall faults cost downtime, never records: in sim mode
+    // any schedule without poison must leave the events / throughput /
+    // latency blocks byte-identical to the fault-free run — the fault
+    // model may only ADD the recovery / faults / resilience blocks.
+    use sprobench::config::{FaultKind, FaultSpec};
+    use sprobench::coordinator::simrun::{run_sim, SimModel};
+
+    let model = SimModel::default();
+    check(Config::default().cases(40), "sim-fault-aggregates", |g| {
+        let mut cfg = BenchConfig::default();
+        cfg.bench.name = "chaos-sim".into();
+        cfg.bench.duration_micros = g.u64(2_000_000..30_000_000);
+        cfg.workload.rate = g.u64(10_000..500_000);
+        cfg.engine.parallelism = g.u64(1..8) as u32;
+        cfg.checkpoint.interval_micros = g.u64(100_000..2_000_000);
+        let baseline = run_sim(&cfg, &model).0.to_json();
+
+        let n = g.usize(1..6);
+        let mut chaotic = cfg.clone();
+        for _ in 0..n {
+            let at = g.u64(0..cfg.bench.duration_micros * 2); // may overshoot the run
+            let kind = match g.u64(0..3) {
+                0 => FaultKind::KillTask {
+                    task: g.u64(0..cfg.engine.parallelism as u64) as u32,
+                },
+                1 => FaultKind::HangTask {
+                    task: g.u64(0..cfg.engine.parallelism as u64) as u32,
+                },
+                _ => FaultKind::StallPartition {
+                    partition: g.u64(0..cfg.broker.partitions as u64) as u32,
+                },
+            };
+            chaotic.fault.schedule.push(FaultSpec {
+                kind,
+                at_micros: at,
+                duration_micros: g.u64(0..1_000_000),
+                seed: 0,
+            });
+        }
+        chaotic.validate().map_err(|e| e.to_string())?;
+        let faulted = run_sim(&chaotic, &model).0;
+        if faulted.quarantined != 0 {
+            return Err(format!(
+                "no poison scheduled but quarantined={}",
+                faulted.quarantined
+            ));
+        }
+        let j = faulted.to_json();
+        for block in ["events", "throughput", "latency_us"] {
+            let a = baseline.get(block).map(|v| v.to_string());
+            let b = j.get(block).map(|v| v.to_string());
+            if a != b {
+                return Err(format!("{block} diverged under faults: {a:?} vs {b:?}"));
+            }
+        }
+        if j.get("resilience").is_none() {
+            return Err("fault run missing resilience block".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wall_chaos_schedules_never_deadlock() {
+    // Random wall-mode schedules (kill / hang / stall / poison at random
+    // offsets) must always terminate: either a healed summary with exact
+    // conservation, or a loud budget-exhaustion error — never a hang.
+    use sprobench::config::{FaultKind, FaultSpec};
+    use sprobench::coordinator::run_recovery;
+    use sprobench::postprocess::validate_results;
+
+    check(Config::default().cases(4), "wall-chaos-liveness", |g| {
+        let mut c = BenchConfig::default();
+        c.bench.name = "chaos-wall".into();
+        c.bench.warmup_micros = 0;
+        c.bench.duration_micros = 900_000;
+        c.workload.rate = 30_000;
+        c.workload.sensors = 64;
+        c.engine.parallelism = 2;
+        c.engine.use_hlo = false;
+        c.engine.batch_size = 256;
+        c.checkpoint.interval_micros = 150_000;
+        c.checkpoint.dir = std::env::temp_dir()
+            .join(format!(
+                "sprobench-prop-chaos-{}-{}",
+                std::process::id(),
+                g.u64(0..u64::MAX)
+            ))
+            .to_string_lossy()
+            .into_owned();
+        c.fault.heartbeat_timeout_micros = 150_000;
+        let n = g.usize(1..4);
+        for _ in 0..n {
+            let kind = match g.u64(0..4) {
+                0 => FaultKind::KillTask {
+                    task: g.u64(0..2) as u32,
+                },
+                1 => FaultKind::HangTask {
+                    task: g.u64(0..2) as u32,
+                },
+                2 => FaultKind::StallPartition {
+                    partition: g.u64(0..c.broker.partitions as u64) as u32,
+                },
+                _ => FaultKind::PoisonRecords {
+                    fraction: g.f64(0.01, 0.3),
+                },
+            };
+            c.fault.schedule.push(FaultSpec {
+                kind,
+                at_micros: g.u64(50_000..800_000),
+                duration_micros: g.u64(0..400_000),
+                seed: g.u64(1..1 << 30),
+            });
+        }
+        c.validate().map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+        let t0 = std::time::Instant::now();
+        let result = run_recovery(&c, None);
+        let elapsed = t0.elapsed();
+        let _ = std::fs::remove_dir_all(&c.checkpoint.dir);
+        if elapsed.as_secs() >= 60 {
+            return Err(format!("chaos run wedged for {elapsed:?}"));
+        }
+        match result {
+            Ok((summary, _)) => {
+                if summary.processed + summary.quarantined != summary.generated {
+                    return Err(format!(
+                        "conservation broken: {} + {} != {}",
+                        summary.processed, summary.quarantined, summary.generated
+                    ));
+                }
+                let violations = validate_results(&summary.to_json());
+                if !violations.is_empty() {
+                    return Err(format!("{violations:?}"));
+                }
+                Ok(())
+            }
+            // Budget exhaustion is a legal, loud outcome of a dense
+            // schedule; anything else is a real failure.
+            Err(e) if e.contains("max_restarts") => Ok(()),
+            Err(e) => Err(e),
+        }
     });
 }
