@@ -1,23 +1,140 @@
-//! Cluster-scale simulation: the paper's headline numbers on the Barnard
-//! model in virtual time.
+//! Cluster-scale sweeps: a **real multi-process loopback scaling sweep**
+//! over the TCP transport (driver + broker + engine + generator worker
+//! processes on 127.0.0.1), then the paper's headline numbers on the
+//! calibrated Barnard model in virtual time.
 //!
-//! Reproduces (sim mode, calibrated model — DESIGN.md §1):
-//!   * Table 1's 40 M events/s aggregate generator throughput,
-//!   * the ≈0.5 GB/s single-node generation claim,
-//!   * Fig. 7's paper-scale parallelism grid (0.5–8 M ev/s).
+//! Reproduces:
+//!   * a keyed-shuffle pipeline crossing a real wire at parallelism 2/4,
+//!     with the `transport` wire counters from the merged results.json,
+//!   * Table 1's 40 M events/s aggregate generator throughput (sim),
+//!   * the ≈0.5 GB/s single-node generation claim (sim),
+//!   * Fig. 7's paper-scale parallelism grid (sim, 0.5–8 M ev/s).
 //!
 //! ```bash
 //! cargo run --release --example cluster_scale
 //! ```
+//!
+//! The driver spawns its workers by re-executing this binary with
+//! `worker --role …` arguments (the same protocol `sprobench worker`
+//! speaks), so the whole sweep is self-contained.
 
 use sprobench::bench::scenarios;
-use sprobench::config::PipelineKind;
+use sprobench::config::{expand_experiments, yaml, PipelineKind};
 use sprobench::coordinator::simrun::{run_sim, SimModel};
 use sprobench::metrics::MeasurementPoint;
+use sprobench::net::runner::{run_driver, run_worker};
 use sprobench::postprocess::ascii_table;
+use sprobench::util::json::Json;
 use sprobench::util::units::{fmt_count, fmt_micros, fmt_rate_bytes};
 
+/// One loopback sweep point: engine parallelism × dedicated generator
+/// worker processes (0 = fleet colocated with the broker worker).
+const LOOPBACK_GRID: &[(u32, u32)] = &[(2, 0), (4, 1)];
+
+fn loopback_yaml(parallelism: u32, generators: u32) -> String {
+    format!(
+        "benchmark:
+  name: loopback-p{parallelism}-g{generators}
+  mode: wall
+  duration: 30s
+  warmup: 0s
+workload:
+  rate: 200K
+  events: 100000
+  sensors: 64
+engine:
+  parallelism: {parallelism}
+  use_hlo: false
+  pipeline:
+    ops:
+      - keyby:
+          modulo: 16
+      - window:
+          agg: mean
+          window: 1s
+          slide: 500ms
+          time: event
+          allowed_lateness: 20s
+          late_policy: merge_if_open
+          watermark: 500ms
+      - emit: aggregates
+cluster:
+  transport: tcp
+  generators: {generators}
+"
+    )
+}
+
+/// Re-entry path for the worker processes the driver spawns: this
+/// example binary accepts the same `worker --role … --driver …` argv the
+/// `sprobench` binary does.
+fn worker_main(args: &[String]) -> ! {
+    let get = |k: &str| {
+        args.iter()
+            .position(|a| a == k)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let role = get("--role").expect("worker re-entry: --role missing");
+    let driver = get("--driver").expect("worker re-entry: --driver missing");
+    match run_worker(&role, &driver, get("--bind").as_deref()) {
+        Ok(()) => std::process::exit(0),
+        Err(e) => {
+            eprintln!("worker error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn int(results: &Json, path: &[&str]) -> i64 {
+    results.path(path).and_then(|v| v.as_i64()).unwrap_or(0)
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) == Some("worker") {
+        worker_main(&args);
+    }
+
+    // --- Real multi-process loopback sweep (TCP transport) ---------------
+    let mut rows = Vec::new();
+    for &(parallelism, generators) in LOOPBACK_GRID {
+        let doc = yaml::parse(&loopback_yaml(parallelism, generators)).expect("loopback yaml");
+        let exp = expand_experiments(&doc).expect("expand").remove(0);
+        let results = run_driver(&exp.config, &exp.resolved).expect("distributed run");
+        let generated = int(&results, &["events", "generated"]);
+        let processed = int(&results, &["events", "processed"]);
+        assert_eq!(processed, generated, "conservation across the wire");
+        assert!(
+            int(&results, &["transport", "records"]) >= generated,
+            "every record must cross the wire"
+        );
+        rows.push(vec![
+            parallelism.to_string(),
+            (3 + generators).to_string(), // broker + engine + driver(+gens)
+            fmt_count(processed as f64),
+            format!(
+                "{} ev/s",
+                fmt_count(
+                    results
+                        .path(&["throughput", "processed"])
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0)
+                )
+            ),
+            format!(
+                "{} rec / {:.1} MiB / {} frames",
+                int(&results, &["transport", "records"]),
+                int(&results, &["transport", "bytes"]) as f64 / (1024.0 * 1024.0),
+                int(&results, &["transport", "frames"]),
+            ),
+        ]);
+    }
+    println!(
+        "loopback multi-process sweep (keyed shuffle over TCP, count-bound):\n{}",
+        ascii_table(&["P", "procs", "events", "processed", "wire"], &rows)
+    );
+
     let model = SimModel::default();
 
     // --- Headline: 40M ev/s aggregate across a 16-node allocation --------

@@ -1,7 +1,8 @@
 //! SLURM batch workflow demo: automatic resource calculation, sbatch
-//! script generation, and a simulated schedule of concurrent experiments
-//! with dependencies — the paper's Sec. 3.1 workflow on the Barnard-scale
-//! cluster model.
+//! script generation — including the **multi-node distributed launch**
+//! (one srun step per worker role over the TCP transport) — and a
+//! simulated schedule of concurrent experiments with dependencies: the
+//! paper's Sec. 3.1 workflow on the Barnard-scale cluster model.
 //!
 //! ```bash
 //! cargo run --release --example slurm_batch
@@ -39,6 +40,28 @@ experiments:
     workload.rate: 8M
 ";
 
+/// A multi-node distributed campaign: broker, engine, and two generator
+/// workers are separately scheduled srun steps that dial the driver over
+/// TCP (`spawn_workers: false` — SLURM launches the processes, not the
+/// driver; workers retry the control dial until the driver binds).
+const DISTRIBUTED: &str = "
+benchmark:
+  name: barnard-distributed
+  duration: 10m
+workload:
+  rate: 4M
+slurm:
+  enabled: true
+  nodes: 5
+  cpus_per_task: 26
+cluster:
+  transport: tcp
+  spawn_workers: false
+  driver_bind: 0.0.0.0:7700
+  data_bind: 0.0.0.0:7701
+  generators: 2
+";
+
 fn main() {
     let doc = yaml::parse(CONFIG).expect("config");
     let exps = expand_experiments(&doc).expect("expand");
@@ -63,11 +86,25 @@ fn main() {
         ascii_table(&["experiment", "nodes", "cpus/task", "mem/node", "time limit"], &rows)
     );
 
-    // 2. One generated sbatch script.
+    // 2. One generated single-step sbatch script.
     println!("generated sbatch script for '{}':\n", exps[0].name);
     println!("{}", sbatch_script(&exps[0].config, "campaign.yaml"));
 
-    // 3. Simulated schedule: concurrent submission on Barnard.
+    // 3. The distributed variant: one srun step per worker role.
+    let dist = expand_experiments(&yaml::parse(DISTRIBUTED).expect("distributed config"))
+        .expect("expand distributed")
+        .remove(0);
+    let script = sbatch_script(&dist.config, "distributed.yaml");
+    assert!(script.contains("--role broker"), "broker step missing");
+    assert!(script.contains("--role engine"), "engine step missing");
+    assert_eq!(script.matches("--role generator").count(), 2);
+    println!(
+        "generated multi-node distributed sbatch script for '{}':\n",
+        dist.name
+    );
+    println!("{script}");
+
+    // 4. Simulated schedule: concurrent submission on Barnard.
     let mut sched = Scheduler::new(ClusterSpec::default());
     let wm = WorkflowManager::new("runs");
     let ids = wm.submit_batch(&exps, &mut sched, false, |e| {

@@ -87,6 +87,7 @@ pub fn dispatch(args: &[String]) -> Result<(), String> {
     let flags = Flags::parse(&args[1..]);
     match cmd {
         "run" => cmd_run(&flags),
+        "worker" => cmd_worker(&flags),
         "max-capacity" => cmd_max_capacity(&flags),
         "sbatch" => cmd_sbatch(&flags),
         "report" => cmd_report(&flags),
@@ -109,6 +110,7 @@ fn usage() -> &'static str {
 
 USAGE:
   sprobench run          --config <file> [--experiment <name>] [--out <dir>] [--pipeline-spec <file>]
+  sprobench worker       --role <broker|generator|engine> --driver <host:port> [--bind <host:port>]
   sprobench max-capacity --config <file> [--experiment <name>] [--out <dir>] [--pipeline-spec <file>]
   sprobench sbatch       --config <file> [--simulate] [--chain]
   sprobench report       --run <dir>
@@ -121,6 +123,14 @@ The config file is the single master control point (YAML); its
 escalates the offered load until the sustainability predicate fails
 (see the `experiment:` config section) and writes report.json +
 report.md with the maximum sustainable throughput.
+
+With `cluster.transport: tcp` in the config, `run` becomes the driver
+of a multi-process run: it launches (or, on SLURM, is joined by) one
+broker, one engine, and `cluster.generators` generator worker
+processes, merges their result fragments into results.json, and adds a
+`transport` block with the wire-level counters.  `worker` is the role
+main those processes execute; it is normally started by the driver or
+by the generated sbatch script, not by hand.
 
 Pipelines are operator chains: configure `engine.pipeline` with a kind
 (passthrough | cpu | mem | fused) or a declarative `ops:` spec
@@ -213,6 +223,18 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
             exp.config.engine.pipeline_label(),
             exp.config.engine.parallelism
         ));
+        if exp.config.cluster.transport == config::TransportMode::Tcp {
+            dir.step("distributed run: driver + broker/engine/generator workers over tcp");
+            let results = crate::net::runner::run_driver(&exp.config, &exp.resolved)?;
+            let violations = validate_results(&results);
+            if !violations.is_empty() {
+                dir.step(&format!("VALIDATION FAILED: {violations:?}"));
+                return Err(format!("{}: validation failed: {violations:?}", exp.name));
+            }
+            dir.step("validation passed");
+            print_distributed_summary(&results);
+            return Ok(results);
+        }
         let (summary, store) = run_once(&exp.config, &rtf)?;
         dir.step("exporting metrics");
         std::fs::write(dir.metrics_dir().join("series.json"), store.to_json().to_pretty())
@@ -229,6 +251,70 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     })?;
     println!("\n{} run(s) complete; results under {}", outcomes.len(), out_dir.display());
     Ok(())
+}
+
+/// Role main for one distributed worker process (started by the driver
+/// or by the generated sbatch script).
+fn cmd_worker(flags: &Flags) -> Result<(), String> {
+    let role = flags
+        .get("role")
+        .ok_or("--role <broker|generator|engine> is required")?;
+    let driver = flags.get("driver").ok_or("--driver <host:port> is required")?;
+    crate::net::runner::run_worker(role, driver, flags.get("bind"))
+}
+
+/// Condensed table for a merged distributed-run document (there is no
+/// in-process `RunSummary` to print — the driver only sees fragments).
+fn print_distributed_summary(results: &Json) {
+    let gi = |path: &[&str]| {
+        results
+            .path(path)
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0)
+    };
+    let gf = |path: &[&str]| {
+        results
+            .path(path)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    let rows = vec![
+        vec![
+            "events gen/proc/emit".into(),
+            format!(
+                "{} / {} / {}",
+                gi(&["events", "generated"]),
+                gi(&["events", "processed"]),
+                gi(&["events", "emitted"])
+            ),
+        ],
+        vec![
+            "offered throughput".into(),
+            format!("{} ev/s", fmt_count(gf(&["throughput", "offered"]))),
+        ],
+        vec![
+            "processed throughput".into(),
+            format!("{} ev/s", fmt_count(gf(&["throughput", "processed"]))),
+        ],
+        vec![
+            "e2e latency".into(),
+            format!(
+                "p50 {} p99 {}",
+                fmt_micros(gf(&["latency_us", "end_to_end", "p50"]) as u64),
+                fmt_micros(gf(&["latency_us", "end_to_end", "p99"]) as u64)
+            ),
+        ],
+        vec![
+            "transport".into(),
+            format!(
+                "{} records, {} frames, {:.1} MiB",
+                gi(&["transport", "records"]),
+                gi(&["transport", "frames"]),
+                gi(&["transport", "bytes"]) as f64 / (1024.0 * 1024.0)
+            ),
+        ],
+    ];
+    println!("{}", ascii_table(&["metric", "value"], &rows));
 }
 
 /// Escalate each configured experiment to its maximum sustainable

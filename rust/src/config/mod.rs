@@ -12,9 +12,9 @@ pub mod schema;
 pub mod yaml;
 
 pub use schema::{
-    parse_pipeline_spec, pipeline_grammar, BenchConfig, CheckpointSection, CmpOp, ConfigError,
-    DisorderSection, ExchangeMode, ExecMode, FaultKind, FaultSection, FaultSpec, Framework,
-    OpSpec, Pattern, PipelineKind, PipelineSpec, StageSpec,
+    parse_pipeline_spec, pipeline_grammar, BenchConfig, CheckpointSection, ClusterSection, CmpOp,
+    ConfigError, DisorderSection, ExchangeMode, ExecMode, FaultKind, FaultSection, FaultSpec,
+    Framework, OpSpec, Pattern, PipelineKind, PipelineSpec, StageSpec, TransportMode,
 };
 
 use crate::util::json::Json;

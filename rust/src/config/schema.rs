@@ -445,6 +445,14 @@ pub struct WorkloadSection {
     pub pattern: Pattern,
     /// Total offered load, events/second, across all generator instances.
     pub rate: u64,
+    /// Deterministic count-bound generation: exactly this many events per
+    /// run (split across instances), with synthetic generation timestamps
+    /// spaced at the configured rate and temperatures quantized to 0.25 °C
+    /// so downstream f32 aggregation is order-independent.  Two runs of
+    /// the same config produce the byte-identical stream — the basis of
+    /// the distributed-vs-local equivalence check.  0 = duration-bound
+    /// wall-clock generation (the normal benchmark mode).
+    pub events: u64,
     /// Serialized event size; paper minimum is 27 bytes.
     pub event_bytes: usize,
     /// Number of distinct sensor ids (keyed-state width K).
@@ -529,6 +537,11 @@ impl EngineSection {
 pub struct MetricsSection {
     pub sample_interval_micros: u64,
     pub out_dir: String,
+    /// When non-empty, the egest drainer dumps every final output record
+    /// to this file as sorted canonical `gen_ts,key,payload-hex` lines —
+    /// the byte-comparable "final aggregates" artifact the equivalence
+    /// suites diff across execution modes.  Empty disables the dump.
+    pub egest_dump: String,
 }
 
 /// Aligned-checkpointing controls (the `checkpoint:` section).
@@ -578,6 +591,11 @@ pub enum FaultKind {
     /// Generators emit malformed/truncated payloads for `fraction` of the
     /// stream while the fault is active (`duration` 0 = the whole run).
     PoisonRecords { fraction: f64 },
+    /// A distributed-run peer (worker process) vanished mid-run: its
+    /// transport link died or its heartbeat went stale.  Not schedulable
+    /// from YAML — the link supervisor reports it as a detected fault
+    /// (results.json `faults[]`) when a TCP peer disconnects.
+    PeerDisconnect { worker: u32 },
 }
 
 impl FaultKind {
@@ -588,6 +606,7 @@ impl FaultKind {
             FaultKind::HangTask { .. } => "hang_task",
             FaultKind::StallPartition { .. } => "stall_partition",
             FaultKind::PoisonRecords { .. } => "poison_records",
+            FaultKind::PeerDisconnect { .. } => "peer_disconnect",
         }
     }
 
@@ -597,6 +616,7 @@ impl FaultKind {
             FaultKind::KillTask { task } | FaultKind::HangTask { task } => format!("task {task}"),
             FaultKind::StallPartition { partition } => format!("partition {partition}"),
             FaultKind::PoisonRecords { fraction } => format!("fraction {fraction}"),
+            FaultKind::PeerDisconnect { worker } => format!("worker {worker}"),
         }
     }
 }
@@ -756,6 +776,61 @@ pub struct SlurmSection {
     pub partition: String,
 }
 
+/// How benchmark data moves between components (the `cluster:` section).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportMode {
+    /// Everything in one process over shared-memory channels (default).
+    Local,
+    /// Broker, generators, and engine run as separate worker processes
+    /// connected over TCP; `sprobench run` becomes the driver.
+    Tcp,
+}
+
+impl TransportMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportMode::Local => "local",
+            TransportMode::Tcp => "tcp",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<TransportMode> {
+        match name {
+            "local" => Some(TransportMode::Local),
+            "tcp" => Some(TransportMode::Tcp),
+            _ => None,
+        }
+    }
+}
+
+/// Distributed-execution controls (the `cluster:` section).
+///
+/// With `transport: tcp`, `sprobench run` acts as the driver: it binds a
+/// control listener, waits for one broker worker, `generators` generator
+/// workers, and one engine worker (spawning them locally as child
+/// `sprobench worker` processes when `spawn_workers` is on — the
+/// single-node loopback layout; under SLURM, `srun` launches them and
+/// `spawn_workers` is off), distributes the resolved config, barriers
+/// the fleet, and merges the per-worker result fragments into
+/// results.json with a `transport` block.
+#[derive(Clone, Debug)]
+pub struct ClusterSection {
+    pub transport: TransportMode,
+    /// Driver control-plane bind address (`host:port`; port 0 = ephemeral).
+    pub driver_bind: String,
+    /// Broker data-plane bind address advertised to the other workers.
+    pub data_bind: String,
+    /// Dedicated generator worker processes.  0 colocates the generator
+    /// fleet with the broker worker (the 3-process loopback layout).
+    pub generators: u32,
+    /// Driver spawns local worker processes itself (loopback runs).
+    pub spawn_workers: bool,
+    /// Worker→driver and data-plane connect deadline, µs.
+    pub connect_timeout_micros: u64,
+    /// Gather/READY-barrier deadline, µs (covers pipeline compilation).
+    pub ready_timeout_micros: u64,
+}
+
 /// The master configuration: one file controls every component.
 #[derive(Clone, Debug)]
 pub struct BenchConfig {
@@ -769,6 +844,7 @@ pub struct BenchConfig {
     pub fault: FaultSection,
     pub experiment: ExperimentSection,
     pub slurm: SlurmSection,
+    pub cluster: ClusterSection,
 }
 
 impl Default for BenchConfig {
@@ -866,6 +942,15 @@ impl Default for BenchConfig {
                 mem_bytes: 200_000_000_000,
                 time_limit_micros: 1_800_000_000,
                 partition: "barnard".into(),
+            },
+            cluster: ClusterSection {
+                transport: TransportMode::Local,
+                driver_bind: "127.0.0.1:0".into(),
+                data_bind: "127.0.0.1:0".into(),
+                generators: 0,
+                spawn_workers: true,
+                connect_timeout_micros: 15_000_000,
+                ready_timeout_micros: 120_000_000,
             },
         }
     }
@@ -1329,6 +1414,7 @@ impl BenchConfig {
                 other => return err(format!("workload.pattern: unknown '{other}'")),
             },
             rate: get_u64(&w, "rate", d.workload.rate)?,
+            events: get_u64(&w, "events", d.workload.events)?,
             event_bytes: get_bytes(&w, "event_bytes", d.workload.event_bytes as u64)? as usize,
             sensors: get_u64(&w, "sensors", d.workload.sensors as u64)? as u32,
             key_skew: get_f64(&w, "key_skew", d.workload.key_skew)?,
@@ -1457,6 +1543,7 @@ impl BenchConfig {
                 d.metrics.sample_interval_micros,
             )?,
             out_dir: get_str(&m, "out_dir", &d.metrics.out_dir),
+            egest_dump: get_str(&m, "egest_dump", &d.metrics.egest_dump),
         };
 
         let c = section(root, "checkpoint");
@@ -1533,6 +1620,32 @@ impl BenchConfig {
             partition: get_str(&s, "partition", &d.slurm.partition),
         };
 
+        let cl = section(root, "cluster");
+        let cluster = ClusterSection {
+            transport: {
+                let name = get_str(&cl, "transport", d.cluster.transport.name());
+                TransportMode::from_name(&name).ok_or_else(|| {
+                    ConfigError(format!(
+                        "cluster.transport: unknown mode '{name}' — expected local or tcp"
+                    ))
+                })?
+            },
+            driver_bind: get_str(&cl, "driver_bind", &d.cluster.driver_bind),
+            data_bind: get_str(&cl, "data_bind", &d.cluster.data_bind),
+            generators: get_u32(&cl, "generators", d.cluster.generators)?,
+            spawn_workers: get_bool(&cl, "spawn_workers", d.cluster.spawn_workers)?,
+            connect_timeout_micros: get_duration(
+                &cl,
+                "connect_timeout",
+                d.cluster.connect_timeout_micros,
+            )?,
+            ready_timeout_micros: get_duration(
+                &cl,
+                "ready_timeout",
+                d.cluster.ready_timeout_micros,
+            )?,
+        };
+
         let cfg = Self {
             bench,
             workload,
@@ -1544,6 +1657,7 @@ impl BenchConfig {
             fault,
             experiment,
             slurm,
+            cluster,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1711,6 +1825,9 @@ impl BenchConfig {
                         }
                     }
                     FaultKind::PoisonRecords { .. } => {}
+                    // Detection-only (emitted by the link supervisor);
+                    // never appears in a parsed schedule.
+                    FaultKind::PeerDisconnect { .. } => {}
                 }
             }
             if self.fault.has_restart_faults() {
@@ -1742,6 +1859,52 @@ impl BenchConfig {
                 "workload.rate {} requires {} generator instances (capacity {}), but generators.max_instances is {}",
                 self.workload.rate, needed, self.generators.instance_capacity, self.generators.max_instances
             ));
+        }
+        if self.cluster.transport == TransportMode::Tcp {
+            if self.bench.mode != ExecMode::Wall {
+                return err("cluster.transport: tcp needs `benchmark.mode: wall` — sim runs are single-process by construction");
+            }
+            if self.fault.enabled() {
+                return err(
+                    "cluster.transport: tcp does not support a fault schedule yet — \
+                     distributed runs detect real peer disconnects instead (remove \
+                     `fault.schedule`/`kill_after`, or use `transport: local`)",
+                );
+            }
+            if self.checkpoint.enabled() {
+                return err(
+                    "cluster.transport: tcp does not support checkpointing yet — \
+                     disable `checkpoint.interval` or use `transport: local`",
+                );
+            }
+            if self.cluster.connect_timeout_micros == 0
+                || self.cluster.connect_timeout_micros > 30_000_000
+            {
+                return err(format!(
+                    "cluster.connect_timeout must be in (0, 30s] so a missing peer fails \
+                     loudly (got {}µs)",
+                    self.cluster.connect_timeout_micros
+                ));
+            }
+            if self.cluster.ready_timeout_micros == 0 {
+                return err("cluster.ready_timeout must be > 0");
+            }
+            // Externally launched workers (SLURM srun steps) dial a
+            // known address, so the driver cannot bind an ephemeral port.
+            let driver_port = self
+                .cluster
+                .driver_bind
+                .rsplit(':')
+                .next()
+                .and_then(|p| p.parse::<u16>().ok())
+                .unwrap_or(0);
+            if !self.cluster.spawn_workers && driver_port == 0 {
+                return err(
+                    "cluster.driver_bind must pin a port (e.g. 0.0.0.0:7700) when \
+                     spawn_workers is off — externally launched workers must know \
+                     where to dial",
+                );
+            }
         }
         Ok(())
     }

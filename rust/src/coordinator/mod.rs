@@ -93,6 +93,9 @@ pub struct RunSummary {
     pub faults: Vec<FaultOutcome>,
     /// Recovery SLO rollup of a supervised run; `None` otherwise.
     pub resilience: Option<ResilienceStats>,
+    /// Wire-level counters of a distributed (`cluster.transport: tcp`)
+    /// run, summed across workers; `None` for in-process runs.
+    pub transport: Option<crate::net::TransportStats>,
 }
 
 impl RunSummary {
@@ -167,6 +170,9 @@ impl RunSummary {
         if let Some(r) = &self.resilience {
             j.set("resilience", r.to_json());
         }
+        if let Some(t) = &self.transport {
+            j.set("transport", t.to_json());
+        }
         // Per-operator breakdown, chain order preserved (array, not map).
         let ops: Vec<Json> = self
             .operators
@@ -179,6 +185,50 @@ impl RunSummary {
             .collect();
         j.set("operators", Json::Arr(ops));
         j
+    }
+}
+
+/// Canonical egest capture: every drained record becomes a
+/// `gen_ts_micros,key,payload-hex` line, sorted before writing, so two
+/// runs of the same deterministic spec can be byte-compared regardless
+/// of partition interleaving or arrival order.  This is the artifact the
+/// distributed equivalence suite diffs between `cluster.transport: tcp`
+/// and in-process runs (`metrics.egest_dump` enables it).
+#[derive(Default)]
+pub struct EgestDump {
+    lines: Vec<String>,
+}
+
+impl EgestDump {
+    pub fn new() -> EgestDump {
+        EgestDump::default()
+    }
+
+    /// Record every entry of a drained batch.
+    pub fn absorb(&mut self, batch: &crate::broker::RecordBatch) {
+        const HEX: &[u8; 16] = b"0123456789abcdef";
+        for i in 0..batch.len() {
+            let e = batch.entry(i);
+            let payload = batch.payload(i);
+            let mut line = String::with_capacity(24 + payload.len() * 2);
+            line.push_str(&format!("{},{},", e.gen_ts_micros, e.key));
+            for &byte in payload {
+                line.push(HEX[(byte >> 4) as usize] as char);
+                line.push(HEX[(byte & 0xf) as usize] as char);
+            }
+            self.lines.push(line);
+        }
+    }
+
+    /// Sort and write the canonical file; loud on I/O failure.
+    pub fn write(mut self, path: &str) -> Result<(), String> {
+        self.lines.sort_unstable();
+        let mut out = String::with_capacity(self.lines.iter().map(|l| l.len() + 1).sum());
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        std::fs::write(path, out).map_err(|e| format!("write egest dump {path}: {e}"))
     }
 }
 
@@ -233,20 +283,34 @@ impl WallHarness {
 
         // Egestion drainer: the downstream consumer of processed results.
         let drain_group = broker.subscribe("egest", "downstream", 1);
+        let dump_path = cfg.metrics.egest_dump.clone();
         let drainer = {
             let g = drain_group;
             std::thread::Builder::new()
                 .name("egest-drain".into())
                 .spawn(move || {
                     let mut n = 0u64;
+                    let mut dump = (!dump_path.is_empty()).then(EgestDump::new);
                     loop {
                         match g.poll(0, 4096) {
                             Ok(Some(b)) => {
                                 n += b.record_count() as u64;
+                                if let Some(d) = dump.as_mut() {
+                                    for rb in &b.batches {
+                                        d.absorb(rb);
+                                    }
+                                }
                                 g.commit(b.partition, b.next_offset);
                             }
                             Ok(None) => std::thread::sleep(std::time::Duration::from_micros(500)),
-                            Err(_) => return n,
+                            Err(_) => {
+                                if let Some(d) = dump.take() {
+                                    if let Err(e) = d.write(&dump_path) {
+                                        eprintln!("[coordinator] {e}");
+                                    }
+                                }
+                                return n;
+                            }
                         }
                     }
                 })
@@ -468,6 +532,7 @@ pub fn run_wall(
         quarantined: 0,
         faults: Vec::new(),
         resilience: None,
+        transport: None,
     };
     Ok((summary, store))
 }
@@ -581,6 +646,11 @@ fn spawn_chaos_watchdog(
                             // The generator corrupts payloads on its own
                             // seeded clock; the timeline entry only tracks
                             // the window.
+                        }
+                        FaultKind::PeerDisconnect { .. } => {
+                            // Detection-only: distributed workers append
+                            // this when a TCP peer dies; it is never
+                            // scheduled, so the injector has nothing to do.
                         }
                     }
                 }
@@ -957,6 +1027,7 @@ pub fn run_recovery(
         quarantined,
         faults: outcomes,
         resilience: Some(resilience),
+        transport: None,
     };
     Ok((summary, store))
 }

@@ -256,6 +256,11 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
                 o.detected_at = Some(f.at_micros);
                 o.healed_at = Some(until);
             }
+            FaultKind::PeerDisconnect { .. } => {
+                // Distributed-run detection only; the analytic model has
+                // no TCP peers to lose.  Record the injection unhealed.
+                o.detected_at = Some(f.at_micros);
+            }
         }
         outcomes.push(o);
     }
@@ -432,6 +437,7 @@ pub fn run_sim(cfg: &BenchConfig, model: &SimModel) -> (RunSummary, Arc<MetricSt
         quarantined,
         faults: outcomes,
         resilience,
+        transport: None,
     };
     (summary, store)
 }

@@ -26,11 +26,11 @@
 //! it through its thread-confined
 //! [`StagedChain`](crate::pipelines::StagedChain).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::config::StageSpec;
+use crate::net::transport::{LocalTransport, Transport, TransportStats};
 use crate::pipelines::RowBatch;
-use crate::util::chan::{self, Receiver, Sender, TrySendError};
 
 /// Serialized row footprint on the exchange wire: key (4) + value (4) +
 /// timestamp (8) + count (8) — what a real shuffle would move per row.
@@ -45,36 +45,34 @@ pub struct ExchangePacket {
 
 /// One stage boundary: `upstreams` sending instances, one channel per
 /// downstream instance, per-upstream frontier/done cells.
+///
+/// The boundary is a thin veneer over a [`Transport`]: in-process runs
+/// get a [`LocalTransport`] (bounded channels + atomics, the original
+/// shared-memory fast path); distributed runs plug in a
+/// [`TcpTransport`](crate::net::transport::TcpTransport) via
+/// [`Boundary::over`] without any caller noticing — the
+/// try_send/drain/frontier semantics are the trait contract.
 pub struct Boundary {
-    txs: Vec<Sender<ExchangePacket>>,
-    rxs: Vec<Receiver<ExchangePacket>>,
-    frontiers: Vec<AtomicU64>,
-    done: Vec<AtomicBool>,
-    records: AtomicU64,
-    bytes: AtomicU64,
+    link: Arc<dyn Transport<ExchangePacket>>,
 }
 
 impl Boundary {
     fn new(upstreams: u32, downstreams: u32, capacity: usize) -> Boundary {
-        let (txs, rxs) = (0..downstreams.max(1))
-            .map(|_| chan::bounded(capacity))
-            .unzip();
-        Boundary {
-            txs,
-            rxs,
-            frontiers: (0..upstreams.max(1)).map(|_| AtomicU64::new(0)).collect(),
-            done: (0..upstreams.max(1)).map(|_| AtomicBool::new(false)).collect(),
-            records: AtomicU64::new(0),
-            bytes: AtomicU64::new(0),
-        }
+        Boundary::over(Arc::new(LocalTransport::new(upstreams, downstreams, capacity)))
+    }
+
+    /// Build a boundary over an arbitrary transport (TCP in distributed
+    /// runs, local otherwise).
+    pub fn over(link: Arc<dyn Transport<ExchangePacket>>) -> Boundary {
+        Boundary { link }
     }
 
     pub fn downstreams(&self) -> u32 {
-        self.txs.len() as u32
+        self.link.downstreams()
     }
 
     pub fn upstreams(&self) -> u32 {
-        self.done.len() as u32
+        self.link.upstreams()
     }
 
     /// Non-blocking route: hands the packet back when the destination
@@ -86,37 +84,29 @@ impl Boundary {
     /// deadlock (see `StagedChain::send_with_relief` for the retry
     /// discipline).
     pub fn try_send(&self, dest: u32, packet: ExchangePacket) -> Result<(), ExchangePacket> {
-        let n = packet.rows.len() as u64;
-        match self.txs[dest as usize].try_send(packet) {
-            Ok(()) => {
-                self.records.fetch_add(n, Ordering::Relaxed);
-                self.bytes.fetch_add(n * ROW_WIRE_BYTES, Ordering::Relaxed);
-                Ok(())
-            }
-            Err(TrySendError::Full(p)) | Err(TrySendError::Closed(p)) => Err(p),
-        }
+        self.link.try_send(dest, packet)
     }
 
     /// Drain pending packets for downstream instance `dest` without
     /// blocking; returns how many packets were moved into `buf`.
     pub fn drain(&self, dest: u32, buf: &mut Vec<ExchangePacket>, max: usize) -> usize {
-        self.rxs[dest as usize].drain_into(buf, max)
+        self.link.drain(dest, buf, max)
     }
 
     /// True when downstream instance `dest` has no queued packets.
     pub fn is_drained(&self, dest: u32) -> bool {
-        self.rxs[dest as usize].is_empty()
+        self.link.is_drained(dest)
     }
 
     /// Publish upstream instance `upstream`'s frontier (monotone max).
     pub fn publish_frontier(&self, upstream: u32, frontier_micros: u64) {
-        self.frontiers[upstream as usize].fetch_max(frontier_micros, Ordering::SeqCst);
+        self.link.publish_frontier(upstream, frontier_micros);
     }
 
     /// Mark upstream instance `upstream` finished; its frontier stops
     /// constraining the safe frontier.
     pub fn finish_upstream(&self, upstream: u32) {
-        self.done[upstream as usize].store(true, Ordering::SeqCst);
+        self.link.finish_upstream(upstream);
     }
 
     /// The min-merged safe frontier: no live upstream will send a row (or
@@ -124,9 +114,9 @@ impl Boundary {
     /// already sent.  `u64::MAX` once every upstream finished.
     pub fn safe_frontier(&self) -> u64 {
         let mut safe = u64::MAX;
-        for (f, d) in self.frontiers.iter().zip(&self.done) {
-            if !d.load(Ordering::SeqCst) {
-                safe = safe.min(f.load(Ordering::SeqCst));
+        for u in 0..self.link.upstreams() {
+            if !self.link.upstream_done(u) {
+                safe = safe.min(self.link.frontier(u));
             }
         }
         safe
@@ -134,7 +124,7 @@ impl Boundary {
 
     /// True once every upstream instance marked itself finished.
     pub fn all_done(&self) -> bool {
-        self.done.iter().all(|d| d.load(Ordering::SeqCst))
+        (0..self.link.upstreams()).all(|u| self.link.upstream_done(u))
     }
 
     /// The published frontier of every upstream instance, in instance
@@ -143,20 +133,24 @@ impl Boundary {
     /// (`publish_frontier` is monotone, so re-publishing a snapshot is
     /// always safe.)
     pub fn frontiers(&self) -> Vec<u64> {
-        self.frontiers
-            .iter()
-            .map(|f| f.load(Ordering::SeqCst))
+        (0..self.link.upstreams())
+            .map(|u| self.link.frontier(u))
             .collect()
     }
 
     /// Total rows routed through this boundary (all upstreams).
     pub fn records(&self) -> u64 {
-        self.records.load(Ordering::Relaxed)
+        self.link.stats().records
     }
 
     /// Total bytes routed through this boundary.
     pub fn bytes(&self) -> u64 {
-        self.bytes.load(Ordering::Relaxed)
+        self.link.stats().bytes
+    }
+
+    /// Wire-level counters of the underlying transport.
+    pub fn transport_stats(&self) -> TransportStats {
+        self.link.stats()
     }
 }
 

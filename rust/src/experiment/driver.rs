@@ -222,6 +222,7 @@ mod tests {
                 quarantined: 0,
                 faults: Vec::new(),
                 resilience: None,
+                transport: None,
             };
             Ok((summary, Arc::new(MetricStore::new())))
         }

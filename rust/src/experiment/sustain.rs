@@ -259,6 +259,7 @@ mod tests {
             quarantined: 0,
             faults: Vec::new(),
             resilience: None,
+            transport: None,
         }
     }
 

@@ -33,6 +33,7 @@ pub mod engine;
 pub mod experiment;
 pub mod jvm;
 pub mod metrics;
+pub mod net;
 pub mod pipelines;
 pub mod postprocess;
 pub mod runtime;

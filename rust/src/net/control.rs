@@ -1,0 +1,472 @@
+//! Driver↔worker control plane for distributed runs.
+//!
+//! One driver process owns the run: workers (broker / generator /
+//! engine) dial its control listener, introduce themselves (HELLO,
+//! carrying the broker's data-plane address), receive their assignment
+//! (ASSIGN: the resolved config plus peer addresses), barrier at READY,
+//! and are released together by START.  After the run each worker ships
+//! a FRAGMENT (its slice of the results document) and the driver merges
+//! the fragments into the standard results.json shape plus the
+//! `transport` block.  Every wait is deadline-bounded: a missing or
+//! crashed worker fails the run loudly instead of hanging it.
+//!
+//! Control payloads are JSON over the same CRC-checked framing as the
+//! data plane ([`super::frame`]); the handshake pins protocol version
+//! and role on both planes.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use super::frame::{kind, read_frame, role, write_frame, Frame};
+use super::transport::{accept_with_timeout, connect_with_retry, TransportStats};
+use crate::util::json::{self, Json};
+
+pub fn role_name(r: u8) -> &'static str {
+    match r {
+        role::DRIVER => "driver",
+        role::BROKER => "broker",
+        role::GENERATOR => "generator",
+        role::ENGINE => "engine",
+        _ => "unknown",
+    }
+}
+
+pub fn role_from_name(name: &str) -> Option<u8> {
+    match name {
+        "driver" => Some(role::DRIVER),
+        "broker" => Some(role::BROKER),
+        "generator" => Some(role::GENERATOR),
+        "engine" => Some(role::ENGINE),
+        _ => None,
+    }
+}
+
+/// Read one control frame within `timeout`, skipping PINGs.  `what`
+/// names the expectation in errors.
+fn read_control(stream: &mut TcpStream, timeout: Duration, what: &str) -> Result<Frame, String> {
+    stream
+        .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+        .map_err(|e| format!("set control timeout: {e}"))?;
+    loop {
+        match read_frame(stream) {
+            Ok(Some(f)) if f.kind == kind::PING => continue,
+            Ok(Some(f)) => return Ok(f),
+            Ok(None) => return Err(format!("peer closed the control link awaiting {what}")),
+            Err(e) => return Err(format!("awaiting {what} (timeout {timeout:?}): {e}")),
+        }
+    }
+}
+
+fn json_payload(f: &Frame) -> Result<Json, String> {
+    let text = std::str::from_utf8(&f.payload)
+        .map_err(|_| "control payload is not UTF-8".to_string())?;
+    json::parse(text).map_err(|e| format!("control payload: {e}"))
+}
+
+/// Raise `err` if the frame is an ERROR report from the peer.
+fn check_error(f: &Frame, from: &str) -> Result<(), String> {
+    if f.kind == kind::ERROR {
+        let msg = json_payload(f)
+            .ok()
+            .and_then(|j| j.get("message").and_then(|m| m.as_str()).map(String::from))
+            .unwrap_or_else(|| "<unreadable error payload>".into());
+        return Err(format!("{from} failed: {msg}"));
+    }
+    Ok(())
+}
+
+/// Driver-side handle to one connected worker.
+pub struct WorkerHandle {
+    pub role: u8,
+    /// The worker's advertised data-plane listener ("" when it has none).
+    pub data_addr: String,
+    stream: TcpStream,
+}
+
+/// The driver's view of the cluster once every expected worker reported.
+pub struct ControlPlane {
+    pub workers: Vec<WorkerHandle>,
+}
+
+impl ControlPlane {
+    /// Bind the control listener; returns it with its resolved address.
+    pub fn listen(bind: &str) -> Result<(TcpListener, String), String> {
+        let listener =
+            TcpListener::bind(bind).map_err(|e| format!("bind control listener {bind}: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("control listener addr: {e}"))?
+            .to_string();
+        Ok((listener, addr))
+    }
+
+    /// Accept + HELLO every expected worker (one role byte per expected
+    /// worker) within the deadline.
+    pub fn gather(
+        listener: &TcpListener,
+        expected: &[u8],
+        timeout_micros: u64,
+    ) -> Result<ControlPlane, String> {
+        let deadline = std::time::Instant::now() + Duration::from_micros(timeout_micros);
+        let mut workers = Vec::new();
+        for _ in 0..expected.len() {
+            let left = deadline
+                .saturating_duration_since(std::time::Instant::now())
+                .as_micros() as u64;
+            let (mut stream, peer_role) = accept_with_timeout(listener, role::DRIVER, left.max(1))?;
+            let hello = read_control(
+                &mut stream,
+                deadline.saturating_duration_since(std::time::Instant::now()),
+                "HELLO",
+            )?;
+            if hello.kind != kind::HELLO {
+                return Err(format!(
+                    "expected HELLO from {}, got frame kind {}",
+                    role_name(peer_role),
+                    hello.kind
+                ));
+            }
+            let j = json_payload(&hello)?;
+            let data_addr = j
+                .get("data_addr")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
+            workers.push(WorkerHandle {
+                role: peer_role,
+                data_addr,
+                stream,
+            });
+        }
+        // Role census: the gathered multiset must match the expectation.
+        for r in [role::BROKER, role::GENERATOR, role::ENGINE] {
+            let want = expected.iter().filter(|&&e| e == r).count();
+            let got = workers.iter().filter(|w| w.role == r).count();
+            if want != got {
+                return Err(format!(
+                    "role mismatch: expected {want} {}(s), got {got}",
+                    role_name(r)
+                ));
+            }
+        }
+        Ok(ControlPlane { workers })
+    }
+
+    /// Send each worker its ASSIGN payload (role, index-within-role).
+    pub fn broadcast_assign(
+        &mut self,
+        payload: impl Fn(u8, usize) -> Json,
+    ) -> Result<(), String> {
+        let mut per_role_index = std::collections::BTreeMap::new();
+        for w in &mut self.workers {
+            let idx = per_role_index.entry(w.role).or_insert(0usize);
+            let body = payload(w.role, *idx).to_string();
+            *idx += 1;
+            write_frame(&mut w.stream, kind::ASSIGN, 0, body.as_bytes())
+                .map_err(|e| format!("send ASSIGN to {}: {e}", role_name(w.role)))?;
+        }
+        Ok(())
+    }
+
+    /// Barrier: wait for READY from every worker, then broadcast START.
+    pub fn barrier(&mut self, timeout_micros: u64) -> Result<(), String> {
+        let timeout = Duration::from_micros(timeout_micros);
+        for w in &mut self.workers {
+            let name = role_name(w.role);
+            let f = read_control(&mut w.stream, timeout, "READY")?;
+            check_error(&f, name)?;
+            if f.kind != kind::READY {
+                return Err(format!("expected READY from {name}, got frame kind {}", f.kind));
+            }
+        }
+        for w in &mut self.workers {
+            write_frame(&mut w.stream, kind::START, 0, b"{}")
+                .map_err(|e| format!("send START to {}: {e}", role_name(w.role)))?;
+        }
+        Ok(())
+    }
+
+    /// Collect one result FRAGMENT per worker (bounded by the run span
+    /// plus slack — a worker that dies mid-run errors here, not never).
+    pub fn collect_fragments(&mut self, timeout_micros: u64) -> Result<Vec<(u8, Json)>, String> {
+        let timeout = Duration::from_micros(timeout_micros);
+        let mut out = Vec::new();
+        for w in &mut self.workers {
+            let name = role_name(w.role);
+            let f = read_control(&mut w.stream, timeout, "FRAGMENT")?;
+            check_error(&f, name)?;
+            if f.kind != kind::FRAGMENT {
+                return Err(format!(
+                    "expected FRAGMENT from {name}, got frame kind {}",
+                    f.kind
+                ));
+            }
+            out.push((w.role, json_payload(&f)?));
+        }
+        Ok(out)
+    }
+}
+
+/// Worker-side control client.
+pub struct WorkerLink {
+    stream: TcpStream,
+}
+
+impl WorkerLink {
+    /// Dial the driver, introduce this worker, and wait for ASSIGN.
+    pub fn connect(
+        driver: &str,
+        my_role: u8,
+        data_addr: Option<&str>,
+        timeout_micros: u64,
+    ) -> Result<(WorkerLink, Json), String> {
+        let (mut stream, peer) = connect_with_retry(driver, my_role, timeout_micros)?;
+        if peer != role::DRIVER {
+            return Err(format!(
+                "control peer at {driver} is a {}, not the driver",
+                role_name(peer)
+            ));
+        }
+        let mut hello = Json::obj();
+        hello.set("role", Json::Str(role_name(my_role).into()));
+        if let Some(addr) = data_addr {
+            hello.set("data_addr", Json::Str(addr.into()));
+        }
+        write_frame(&mut stream, kind::HELLO, 0, hello.to_string().as_bytes())
+            .map_err(|e| format!("send HELLO: {e}"))?;
+        let f = read_control(&mut stream, Duration::from_micros(timeout_micros), "ASSIGN")?;
+        if f.kind != kind::ASSIGN {
+            return Err(format!("expected ASSIGN, got frame kind {}", f.kind));
+        }
+        let assign = json_payload(&f)?;
+        Ok((WorkerLink { stream }, assign))
+    }
+
+    /// Report setup complete; the driver releases the barrier with START.
+    pub fn ready(&mut self) -> Result<(), String> {
+        write_frame(&mut self.stream, kind::READY, 0, b"{}")
+            .map_err(|e| format!("send READY: {e}"))
+    }
+
+    pub fn await_start(&mut self, timeout_micros: u64) -> Result<(), String> {
+        let f = read_control(&mut self.stream, Duration::from_micros(timeout_micros), "START")?;
+        if f.kind != kind::START {
+            return Err(format!("expected START, got frame kind {}", f.kind));
+        }
+        Ok(())
+    }
+
+    pub fn send_fragment(&mut self, fragment: &Json) -> Result<(), String> {
+        write_frame(
+            &mut self.stream,
+            kind::FRAGMENT,
+            0,
+            fragment.to_string().as_bytes(),
+        )
+        .map_err(|e| format!("send FRAGMENT: {e}"))
+    }
+
+    /// Best-effort failure report so the driver errors with a cause
+    /// instead of a bare timeout.
+    pub fn send_error(&mut self, msg: &str) {
+        let mut j = Json::obj();
+        j.set("message", Json::Str(msg.into()));
+        let _ = write_frame(&mut self.stream, kind::ERROR, 0, j.to_string().as_bytes());
+    }
+}
+
+/// Merge per-worker result fragments into one results.json document.
+///
+/// The engine fragment's `summary` (the standard [`RunSummary`]
+/// [`to_json`](crate::coordinator::RunSummary::to_json) shape) is the
+/// base; the broker fragment supplies what only the generator side
+/// knows (generated count, offered rates); the `transport` block sums
+/// every worker's wire counters (send-side byte/record/frame counts are
+/// counted once, at the sending endpoint).
+pub fn merge_results(fragments: &[(u8, Json)]) -> Result<Json, String> {
+    let engine = fragments
+        .iter()
+        .find(|(r, _)| *r == role::ENGINE)
+        .map(|(_, j)| j)
+        .ok_or("no engine fragment collected")?;
+    let mut base = engine
+        .get("summary")
+        .cloned()
+        .ok_or("engine fragment has no summary")?;
+
+    let broker = fragments
+        .iter()
+        .find(|(r, _)| *r == role::BROKER)
+        .map(|(_, j)| j)
+        .ok_or("no broker fragment collected")?;
+    let generated = broker
+        .get("generated")
+        .and_then(|v| v.as_i64())
+        .unwrap_or(0);
+    let mut events = base.get("events").cloned().unwrap_or_else(Json::obj);
+    events.set("generated", Json::Int(generated));
+    base.set("events", events);
+    let mut tp = base.get("throughput").cloned().unwrap_or_else(Json::obj);
+    tp.set(
+        "offered",
+        Json::Num(broker.get("offered").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+    );
+    tp.set(
+        "offered_bytes",
+        Json::Num(
+            broker
+                .get("offered_bytes")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+        ),
+    );
+    base.set("throughput", tp);
+
+    let mut total = TransportStats::default();
+    for (_, frag) in fragments {
+        if let Some(t) = frag.get("transport") {
+            total.merge(&transport_from_json(t));
+        }
+    }
+    base.set("transport", total.to_json());
+    Ok(base)
+}
+
+/// Read a `transport` block back into counters (driver-side merge and
+/// test assertions).
+pub fn transport_from_json(j: &Json) -> TransportStats {
+    let g = |k: &str| j.get(k).and_then(|v| v.as_i64()).unwrap_or(0) as u64;
+    TransportStats {
+        records: g("records"),
+        bytes: g("bytes"),
+        frames: g("frames"),
+        send_wait_micros: g("send_wait_us"),
+        recv_wait_micros: g("recv_wait_us"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roles_roundtrip_by_name() {
+        for r in [role::DRIVER, role::BROKER, role::GENERATOR, role::ENGINE] {
+            assert_eq!(role_from_name(role_name(r)), Some(r));
+        }
+        assert_eq!(role_from_name("coordinator"), None);
+    }
+
+    #[test]
+    fn hello_assign_barrier_fragment_over_loopback() {
+        let (listener, addr) = ControlPlane::listen("127.0.0.1:0").unwrap();
+        let worker = std::thread::spawn(move || {
+            let (mut link, assign) =
+                WorkerLink::connect(&addr, role::ENGINE, None, 5_000_000).unwrap();
+            assert_eq!(assign.get("x").and_then(|v| v.as_i64()), Some(7));
+            link.ready().unwrap();
+            link.await_start(5_000_000).unwrap();
+            let mut frag = Json::obj();
+            frag.set("role", Json::Str("engine".into()));
+            let t = TransportStats {
+                records: 11,
+                bytes: 264,
+                frames: 2,
+                ..Default::default()
+            };
+            frag.set("transport", t.to_json());
+            link.send_fragment(&frag).unwrap();
+        });
+        let mut cp = ControlPlane::gather(&listener, &[role::ENGINE], 5_000_000).unwrap();
+        assert_eq!(cp.workers.len(), 1);
+        assert_eq!(cp.workers[0].role, role::ENGINE);
+        cp.broadcast_assign(|_, _| {
+            let mut j = Json::obj();
+            j.set("x", Json::Int(7));
+            j
+        })
+        .unwrap();
+        cp.barrier(5_000_000).unwrap();
+        let frags = cp.collect_fragments(5_000_000).unwrap();
+        worker.join().unwrap();
+        assert_eq!(frags.len(), 1);
+        let t = transport_from_json(frags[0].1.get("transport").unwrap());
+        assert_eq!(t.records, 11);
+        assert_eq!(t.frames, 2);
+    }
+
+    #[test]
+    fn gather_times_out_when_a_worker_never_arrives() {
+        let (listener, _addr) = ControlPlane::listen("127.0.0.1:0").unwrap();
+        let t0 = std::time::Instant::now();
+        let err = ControlPlane::gather(&listener, &[role::BROKER], 200_000).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(30), "bounded wait");
+        assert!(err.contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn worker_error_report_fails_the_barrier_with_the_cause() {
+        let (listener, addr) = ControlPlane::listen("127.0.0.1:0").unwrap();
+        let worker = std::thread::spawn(move || {
+            let (mut link, _assign) =
+                WorkerLink::connect(&addr, role::BROKER, Some("127.0.0.1:1"), 5_000_000).unwrap();
+            link.send_error("no artifacts dir");
+        });
+        let mut cp = ControlPlane::gather(&listener, &[role::BROKER], 5_000_000).unwrap();
+        assert_eq!(cp.workers[0].data_addr, "127.0.0.1:1");
+        cp.broadcast_assign(|_, _| Json::obj()).unwrap();
+        let err = cp.barrier(5_000_000).unwrap_err();
+        worker.join().unwrap();
+        assert!(err.contains("no artifacts dir"), "{err}");
+    }
+
+    #[test]
+    fn merge_overlays_broker_counts_and_sums_transport() {
+        let mut engine_frag = Json::obj();
+        let mut summary = Json::obj();
+        let mut events = Json::obj();
+        events.set("generated", Json::Int(0));
+        events.set("processed", Json::Int(500));
+        summary.set("events", events);
+        engine_frag.set("summary", summary);
+        let et = TransportStats {
+            recv_wait_micros: 42,
+            ..Default::default()
+        };
+        engine_frag.set("transport", et.to_json());
+
+        let mut broker_frag = Json::obj();
+        broker_frag.set("generated", Json::Int(500));
+        broker_frag.set("offered", Json::Num(1000.0));
+        broker_frag.set("offered_bytes", Json::Num(27_000.0));
+        let bt = TransportStats {
+            records: 500,
+            bytes: 13_500,
+            frames: 9,
+            ..Default::default()
+        };
+        broker_frag.set("transport", bt.to_json());
+
+        let merged = merge_results(&[
+            (role::ENGINE, engine_frag),
+            (role::BROKER, broker_frag),
+        ])
+        .unwrap();
+        assert_eq!(
+            merged.path(&["events", "generated"]).and_then(|v| v.as_i64()),
+            Some(500)
+        );
+        assert_eq!(
+            merged.path(&["events", "processed"]).and_then(|v| v.as_i64()),
+            Some(500)
+        );
+        assert_eq!(
+            merged.path(&["throughput", "offered"]).and_then(|v| v.as_f64()),
+            Some(1000.0)
+        );
+        let t = transport_from_json(merged.get("transport").unwrap());
+        assert_eq!(t.records, 500);
+        assert_eq!(t.recv_wait_micros, 42);
+        assert_eq!(t.frames, 9);
+    }
+}

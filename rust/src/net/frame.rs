@@ -1,0 +1,529 @@
+//! Length-prefixed wire framing for the distributed transport.
+//!
+//! Every TCP connection in the distributed runtime — data plane and
+//! control plane alike — speaks the same framing: a fixed handshake
+//! (magic + protocol version + role byte) followed by a stream of
+//! self-delimiting frames.  A frame is
+//!
+//! ```text
+//! [len: u32 LE] [kind: u8] [channel: u32 LE] [crc: u32 LE] [payload: len bytes]
+//! ```
+//!
+//! where `crc` is the IEEE CRC-32 of the payload (the same
+//! [`crc32`](crate::engine::checkpoint::crc32) the checkpoint files use).
+//! Decoding is total: truncation, oversized lengths, and bit flips all
+//! come back as readable `Err(String)`s — never a panic, never silently
+//! wrong data (`rust/tests/proptest_invariants.rs` holds the line).
+//!
+//! Payload codecs for the two data-plane message shapes live here too:
+//! [`RecordBatch`] (broker→engine feed; the arena is serialized once per
+//! batch) and [`RowBatch`] exchange packets (keyed shuffle rows).
+
+use std::io::{Read, Write};
+
+use crate::broker::{RecordBatch, RecordBatchBuilder};
+use crate::engine::checkpoint::crc32;
+use crate::pipelines::RowBatch;
+
+/// Connection magic: every sprobench socket opens with these four bytes.
+pub const MAGIC: [u8; 4] = *b"SPRB";
+/// Wire protocol version; bumped on any incompatible frame change.
+pub const PROTOCOL_VERSION: u16 = 1;
+/// Upper bound on a single frame payload (corrupt lengths fail loudly
+/// instead of attempting a multi-gigabyte allocation).
+pub const MAX_FRAME_BYTES: u32 = 64 << 20;
+
+/// Frame kinds.  Data-plane kinds carry binary payloads; control-plane
+/// kinds carry UTF-8 JSON.
+pub mod kind {
+    /// A serialized [`super::RecordBatch`] (broker→engine feed).
+    pub const BATCH: u8 = 1;
+    /// A serialized exchange packet ([`super::RowBatch`] + send stamp).
+    pub const ROWS: u8 = 2;
+    /// A monotone frontier publication for upstream `channel`.
+    pub const FRONTIER: u8 = 3;
+    /// Upstream `channel` finished (frontier stops constraining).
+    pub const FINISH: u8 = 4;
+    /// The sender will emit no further data frames on any channel.
+    pub const EOF: u8 = 5;
+    /// Liveness ping (idle links heartbeat so peer death is detectable).
+    pub const PING: u8 = 6;
+    /// Control plane: worker → driver registration (JSON).
+    pub const HELLO: u8 = 7;
+    /// Control plane: driver → worker role assignment + config (JSON).
+    pub const ASSIGN: u8 = 8;
+    /// Control plane: worker → driver "set up, holding at barrier".
+    pub const READY: u8 = 9;
+    /// Control plane: driver → worker start barrier release.
+    pub const START: u8 = 10;
+    /// Control plane: worker → driver RunSummary fragment (JSON).
+    pub const FRAGMENT: u8 = 11;
+    /// Control plane: either side reports a fatal error (UTF-8 text).
+    pub const ERROR: u8 = 12;
+}
+
+/// Worker roles, as carried in the handshake role byte.
+pub mod role {
+    pub const DRIVER: u8 = 0;
+    pub const BROKER: u8 = 1;
+    pub const GENERATOR: u8 = 2;
+    pub const ENGINE: u8 = 3;
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: u8,
+    pub channel: u32,
+    pub payload: Vec<u8>,
+}
+
+const HEADER_BYTES: usize = 4 + 1 + 4 + 4;
+
+/// Serialize one frame into `out` (appends).
+pub fn encode_frame(kind: u8, channel: u32, payload: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&channel.to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Decode one frame from the front of `buf`; returns the frame and how
+/// many bytes it consumed.  Any malformation is a readable error.
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), String> {
+    if buf.len() < HEADER_BYTES {
+        return Err(format!(
+            "truncated frame header: {} of {HEADER_BYTES} bytes",
+            buf.len()
+        ));
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if len > MAX_FRAME_BYTES {
+        return Err(format!(
+            "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap (corrupt stream?)"
+        ));
+    }
+    let kind = buf[4];
+    let channel = u32::from_le_bytes([buf[5], buf[6], buf[7], buf[8]]);
+    let stored_crc = u32::from_le_bytes([buf[9], buf[10], buf[11], buf[12]]);
+    let total = HEADER_BYTES + len as usize;
+    if buf.len() < total {
+        return Err(format!(
+            "truncated frame payload: {} of {} bytes",
+            buf.len() - HEADER_BYTES,
+            len
+        ));
+    }
+    let payload = &buf[HEADER_BYTES..total];
+    let actual = crc32(payload);
+    if actual != stored_crc {
+        return Err(format!(
+            "frame CRC mismatch: stored {stored_crc:#010x}, computed {actual:#010x}"
+        ));
+    }
+    Ok((
+        Frame {
+            kind,
+            channel,
+            payload: payload.to_vec(),
+        },
+        total,
+    ))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: u8,
+    channel: u32,
+    payload: &[u8],
+) -> Result<(), String> {
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    encode_frame(kind, channel, payload, &mut buf);
+    w.write_all(&buf).map_err(|e| format!("frame write: {e}"))
+}
+
+/// Read one frame from a stream.  `Ok(None)` is a clean end of stream
+/// (EOF exactly at a frame boundary); EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, String> {
+    let mut header = [0u8; HEADER_BYTES];
+    let mut got = 0;
+    while got < HEADER_BYTES {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(format!(
+                    "connection closed mid-frame ({got} of {HEADER_BYTES} header bytes)"
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) => return Err(format!("frame header read: {e}")),
+        }
+    }
+    let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    if len > MAX_FRAME_BYTES {
+        return Err(format!(
+            "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap (corrupt stream?)"
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| format!("frame payload read ({len} bytes): {e}"))?;
+    let stored_crc = u32::from_le_bytes([header[9], header[10], header[11], header[12]]);
+    let actual = crc32(&payload);
+    if actual != stored_crc {
+        return Err(format!(
+            "frame CRC mismatch: stored {stored_crc:#010x}, computed {actual:#010x}"
+        ));
+    }
+    Ok(Some(Frame {
+        kind: header[4],
+        channel: u32::from_le_bytes([header[5], header[6], header[7], header[8]]),
+        payload,
+    }))
+}
+
+/// Write the connection handshake: magic, protocol version, role byte.
+pub fn write_handshake(w: &mut impl Write, role_byte: u8) -> Result<(), String> {
+    let mut buf = Vec::with_capacity(7);
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    buf.push(role_byte);
+    w.write_all(&buf).map_err(|e| format!("handshake write: {e}"))
+}
+
+/// Read and verify the peer's handshake; returns its role byte.
+pub fn read_handshake(r: &mut impl Read) -> Result<u8, String> {
+    let mut buf = [0u8; 7];
+    r.read_exact(&mut buf)
+        .map_err(|e| format!("handshake read: {e}"))?;
+    if buf[0..4] != MAGIC {
+        return Err(format!(
+            "bad handshake magic {:02x?} (expected {:02x?} — not a sprobench peer?)",
+            &buf[0..4],
+            MAGIC
+        ));
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != PROTOCOL_VERSION {
+        return Err(format!(
+            "protocol version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
+        ));
+    }
+    Ok(buf[6])
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor (decode side).
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.buf.len() - self.pos < n {
+            return Err(format!(
+                "truncated {what}: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32, String> {
+        let s = self.take(4, what)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn done(&self, what: &str) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "{what}: {} trailing bytes after payload",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Serialize a [`RecordBatch`] (plus its source partition) into a BATCH
+/// frame payload.  The arena is walked once; per-record layout is
+/// `[key u32][gen_ts u64][len u32][payload bytes]`.
+pub fn encode_record_batch(partition: u32, batch: &RecordBatch, out: &mut Vec<u8>) {
+    out.extend_from_slice(&partition.to_le_bytes());
+    out.extend_from_slice(&batch.base_offset.to_le_bytes());
+    out.extend_from_slice(&batch.append_ts_micros.to_le_bytes());
+    out.extend_from_slice(&(batch.len() as u32).to_le_bytes());
+    for i in 0..batch.len() {
+        let e = batch.entry(i);
+        let payload = batch.payload(i);
+        out.extend_from_slice(&e.key.to_le_bytes());
+        out.extend_from_slice(&e.gen_ts_micros.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(payload);
+    }
+}
+
+/// Decode a BATCH frame payload back into `(partition, RecordBatch)`.
+/// The rebuilt batch owns one fresh arena (a single allocation, like the
+/// producer path) and carries the original base offset and append stamp.
+pub fn decode_record_batch(buf: &[u8]) -> Result<(u32, RecordBatch), String> {
+    let mut c = Cursor::new(buf);
+    let partition = c.u32("batch partition")?;
+    let base_offset = c.u64("batch base offset")?;
+    let append_ts = c.u64("batch append ts")?;
+    let count = c.u32("batch record count")?;
+    if count as usize > buf.len() {
+        // Each record needs at least its 16-byte header; a count larger
+        // than the whole payload is corruption, caught before reserving.
+        return Err(format!(
+            "batch record count {count} impossible for a {}-byte payload",
+            buf.len()
+        ));
+    }
+    let mut b = RecordBatchBuilder::with_capacity(count as usize, buf.len());
+    for _ in 0..count {
+        let key = c.u32("record key")?;
+        let gen_ts = c.u64("record gen ts")?;
+        let len = c.u32("record payload length")? as usize;
+        let payload = c.take(len, "record payload")?;
+        b.push(key, payload, gen_ts);
+    }
+    c.done("record batch")?;
+    let mut batch = b.build();
+    batch.base_offset = base_offset;
+    batch.append_ts_micros = append_ts;
+    Ok((partition, batch))
+}
+
+/// Serialize an exchange packet (rows + send stamp) into a ROWS frame
+/// payload: `[sent u64][n u32]` then `n × [key u32][val f32][ts u64][count u64]`
+/// — exactly [`ROW_WIRE_BYTES`](crate::engine::exchange::ROW_WIRE_BYTES)
+/// per row.
+pub fn encode_rows(rows: &RowBatch, sent_micros: u64, out: &mut Vec<u8>) {
+    out.extend_from_slice(&sent_micros.to_le_bytes());
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for i in 0..rows.len() {
+        out.extend_from_slice(&rows.keys[i].to_le_bytes());
+        out.extend_from_slice(&rows.vals[i].to_le_bytes());
+        out.extend_from_slice(&rows.ts[i].to_le_bytes());
+        out.extend_from_slice(&rows.counts[i].to_le_bytes());
+    }
+}
+
+/// Decode a ROWS frame payload back into `(rows, sent_micros)`.
+pub fn decode_rows(buf: &[u8]) -> Result<(RowBatch, u64), String> {
+    let mut c = Cursor::new(buf);
+    let sent = c.u64("rows send stamp")?;
+    let n = c.u32("row count")?;
+    let need = n as u64 * 24;
+    if need > (buf.len() as u64) {
+        return Err(format!(
+            "row count {n} impossible for a {}-byte payload",
+            buf.len()
+        ));
+    }
+    let mut rows = RowBatch::default();
+    for _ in 0..n {
+        let key = c.u32("row key")?;
+        let val = c.f32("row value")?;
+        let ts = c.u64("row timestamp")?;
+        let count = c.u64("row count field")?;
+        rows.push(key, val, ts, count);
+    }
+    c.done("row batch")?;
+    Ok((rows, sent))
+}
+
+/// Serialize a frontier publication (8 bytes).
+pub fn encode_frontier(micros: u64) -> Vec<u8> {
+    micros.to_le_bytes().to_vec()
+}
+
+/// Decode a frontier publication.
+pub fn decode_frontier(buf: &[u8]) -> Result<u64, String> {
+    let mut c = Cursor::new(buf);
+    let v = c.u64("frontier")?;
+    c.done("frontier")?;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_batch() -> RecordBatch {
+        let mut b = RecordBatchBuilder::new();
+        b.push(7, b"hello", 100);
+        b.push(9, b"", 200);
+        b.push(7, &[0xff, 0x00, 0x7f], 300);
+        let mut batch = b.build();
+        batch.base_offset = 4242;
+        batch.append_ts_micros = 999_999;
+        batch
+    }
+
+    #[test]
+    fn frame_roundtrip_preserves_everything() {
+        let mut wire = Vec::new();
+        encode_frame(kind::BATCH, 3, b"payload bytes", &mut wire);
+        encode_frame(kind::FRONTIER, 0, &encode_frontier(12345), &mut wire);
+        let (f1, used) = decode_frame(&wire).unwrap();
+        assert_eq!(f1.kind, kind::BATCH);
+        assert_eq!(f1.channel, 3);
+        assert_eq!(f1.payload, b"payload bytes");
+        let (f2, used2) = decode_frame(&wire[used..]).unwrap();
+        assert_eq!(f2.kind, kind::FRONTIER);
+        assert_eq!(decode_frontier(&f2.payload).unwrap(), 12345);
+        assert_eq!(used + used2, wire.len());
+    }
+
+    #[test]
+    fn stream_roundtrip_and_clean_eof() {
+        let mut wire = Vec::new();
+        encode_frame(kind::PING, 0, &[], &mut wire);
+        encode_frame(kind::ERROR, 1, b"boom", &mut wire);
+        let mut r = &wire[..];
+        let f = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(f.kind, kind::PING);
+        assert!(f.payload.is_empty());
+        let f = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(f.payload, b"boom");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn mid_frame_eof_is_loud() {
+        let mut wire = Vec::new();
+        encode_frame(kind::BATCH, 0, b"0123456789", &mut wire);
+        for cut in 1..wire.len() {
+            let mut r = &wire[..cut];
+            let err = match read_frame(&mut r) {
+                Err(e) => e,
+                Ok(f) => panic!("truncation at {cut} accepted: {f:?}"),
+            };
+            assert!(!err.is_empty());
+        }
+    }
+
+    #[test]
+    fn bit_flips_fail_the_crc() {
+        let mut wire = Vec::new();
+        encode_frame(kind::ROWS, 2, b"some payload worth protecting", &mut wire);
+        // Flip one payload bit: CRC must catch it.
+        let mut bad = wire.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let err = decode_frame(&bad).unwrap_err();
+        assert!(err.contains("CRC"), "{err}");
+        // Flip a stored-CRC bit: same rejection.
+        let mut bad = wire.clone();
+        bad[9] ^= 0x01;
+        assert!(decode_frame(&bad).unwrap_err().contains("CRC"));
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_without_allocating() {
+        let mut wire = Vec::new();
+        encode_frame(kind::BATCH, 0, b"x", &mut wire);
+        wire[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_frame(&wire).unwrap_err();
+        assert!(err.contains("cap"), "{err}");
+        let mut r = &wire[..];
+        assert!(read_frame(&mut r).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_rejections() {
+        let mut wire = Vec::new();
+        write_handshake(&mut wire, role::ENGINE).unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_handshake(&mut r).unwrap(), role::ENGINE);
+
+        let mut bad = wire.clone();
+        bad[0] = b'X';
+        assert!(read_handshake(&mut &bad[..]).unwrap_err().contains("magic"));
+
+        let mut bad = wire.clone();
+        bad[4] = 99;
+        let err = read_handshake(&mut &bad[..]).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn record_batch_roundtrip_is_identity() {
+        let batch = sample_batch();
+        let mut payload = Vec::new();
+        encode_record_batch(5, &batch, &mut payload);
+        let (partition, back) = decode_record_batch(&payload).unwrap();
+        assert_eq!(partition, 5);
+        assert_eq!(back.len(), batch.len());
+        assert_eq!(back.base_offset, 4242);
+        assert_eq!(back.append_ts_micros, 999_999);
+        for i in 0..batch.len() {
+            assert_eq!(back.entry(i).key, batch.entry(i).key);
+            assert_eq!(back.entry(i).gen_ts_micros, batch.entry(i).gen_ts_micros);
+            assert_eq!(back.payload(i), batch.payload(i));
+        }
+    }
+
+    #[test]
+    fn rows_roundtrip_is_identity() {
+        let mut rows = RowBatch::default();
+        rows.push(1, 0.25, 100, 1);
+        rows.push(2, -3.5, 200, 4);
+        rows.push(u32::MAX, f32::MIN_POSITIVE, u64::MAX, u64::MAX);
+        let mut payload = Vec::new();
+        encode_rows(&rows, 777, &mut payload);
+        let (back, sent) = decode_rows(&payload).unwrap();
+        assert_eq!(sent, 777);
+        assert_eq!(back.keys, rows.keys);
+        assert_eq!(back.vals, rows.vals);
+        assert_eq!(back.ts, rows.ts);
+        assert_eq!(back.counts, rows.counts);
+    }
+
+    #[test]
+    fn payload_truncations_are_readable_errors() {
+        let batch = sample_batch();
+        let mut payload = Vec::new();
+        encode_record_batch(1, &batch, &mut payload);
+        for cut in 0..payload.len() {
+            match decode_record_batch(&payload[..cut]) {
+                Err(e) => assert!(!e.is_empty()),
+                Ok(_) => panic!("truncated batch at {cut} decoded"),
+            }
+        }
+        let mut rows = RowBatch::default();
+        rows.push(1, 1.0, 2, 3);
+        let mut payload = Vec::new();
+        encode_rows(&rows, 9, &mut payload);
+        for cut in 0..payload.len() {
+            assert!(decode_rows(&payload[..cut]).is_err());
+        }
+    }
+}

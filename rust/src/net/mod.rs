@@ -1,0 +1,35 @@
+//! Distributed runtime: the transport subsystem that takes broker,
+//! generators, and engine multi-process over TCP.
+//!
+//! Three pieces (ARCHITECTURE.md §Distributed execution):
+//!
+//! * [`frame`] — the wire format: length-prefixed, CRC-checked,
+//!   versioned-handshake frames over `std::net` blocking sockets, plus
+//!   payload codecs for broker [`RecordBatch`](crate::broker::RecordBatch)
+//!   arenas (serialized once per batch) and exchange row batches.
+//! * [`transport`] — the [`Transport`](transport::Transport) trait
+//!   abstracting the two data paths that used to be shared memory (the
+//!   broker→engine poll feed and the exchange
+//!   [`Boundary`](crate::engine::exchange::Boundary)), with
+//!   [`LocalTransport`](transport::LocalTransport) (in-process channels)
+//!   and [`TcpTransport`](transport::TcpTransport) (per-peer
+//!   reader/writer threads) implementations.
+//! * [`control`] — the driver-side control plane: role assignment,
+//!   resolved-config distribution, the start barrier, and per-worker
+//!   `RunSummary` fragment collection merged into results.json with a
+//!   `transport` block.
+//!
+//! [`runner`] hosts the role mains behind `sprobench worker --role ...`
+//! and the driver entry used by `sprobench run` when
+//! `cluster.transport: tcp` is configured.
+
+pub mod control;
+pub mod frame;
+pub mod runner;
+pub mod transport;
+
+pub use control::{ControlPlane, WorkerLink};
+pub use transport::{
+    accept_with_timeout, connect_with_retry, FeedBatch, LocalTransport, TcpOptions, TcpTransport,
+    Transport, TransportStats, Wire,
+};

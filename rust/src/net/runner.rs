@@ -1,0 +1,811 @@
+//! Role mains for distributed runs: the driver entry used by
+//! `sprobench run` when `cluster.transport: tcp` is configured, and the
+//! worker harnesses behind `sprobench worker --role <broker|generator|engine>`.
+//!
+//! Topology (one process per box):
+//!
+//! ```text
+//!             control (HELLO/ASSIGN/READY/START/FRAGMENT)
+//!   driver ◄────────────────────────────────────────────► workers
+//!
+//!   generator ──feed──► broker ──feed──► engine
+//!   (N ≥ 0; 0 =         (owns the        (mirror broker +
+//!    fleet colocated     ingest topic)    unchanged Engine)
+//!    on the broker)
+//! ```
+//!
+//! The broker worker owns the authoritative `ingest` topic.  Generator
+//! workers (or a colocated fleet when `cluster.generators: 0`) fill it;
+//! a feeder ships every committed batch to the engine worker over a
+//! [`TcpTransport<FeedBatch>`](super::transport::TcpTransport).  The
+//! engine worker re-produces the received batches into a local mirror
+//! broker so the unchanged [`Engine`] — tasks, exchange, windows,
+//! egestion drainer — runs exactly as in-process; its slice of the
+//! results document ships back to the driver as a FRAGMENT and
+//! [`merge_results`](super::control::merge_results) assembles
+//! results.json.
+//!
+//! Liveness: every wait is deadline-bounded.  A peer that dies mid-run
+//! surfaces on the engine side as a [`FaultKind::PeerDisconnect`] fault
+//! (link error, or heartbeat staleness via [`TaskMonitor`]) and on the
+//! driver as a control-plane timeout — never a hang.
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::control::{self, merge_results, ControlPlane, WorkerLink};
+use super::frame::role;
+use super::transport::{
+    accept_with_timeout, connect_with_retry, FeedBatch, TcpOptions, TcpTransport, Transport,
+};
+use crate::broker::{Broker, BrokerConfig};
+use crate::config::{BenchConfig, FaultKind, FaultSpec};
+use crate::coordinator::{EgestDump, RunSummary};
+use crate::engine::{Engine, FaultOutcome, TaskMonitor};
+use crate::metrics::{LatencyRecorder, MeasurementPoint, ThroughputRecorder};
+use crate::util::clock::{self, ClockRef};
+use crate::util::json::Json;
+use crate::wgen::{Fleet, GeneratorConfig, Pattern};
+
+/// Control-plane dial deadline used before the worker has seen its
+/// config (the configured `cluster.connect_timeout` arrives in ASSIGN,
+/// over the very link being dialed).  Matches the 30 s cap that
+/// validation enforces on the configured timeout.
+const CONTROL_TIMEOUT_MICROS: u64 = 30_000_000;
+
+/// Post-run slack the driver grants workers beyond the nominal span
+/// before a missing FRAGMENT fails the run: engine drain + teardown.
+const FRAGMENT_SLACK_MICROS: u64 = 120_000_000;
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Drive one distributed run to a merged results.json document.
+///
+/// Binds the control listener, (optionally) spawns the worker processes
+/// locally via `current_exe()`, gathers HELLOs, broadcasts the resolved
+/// config, releases the START barrier, collects result fragments, and
+/// merges them.  Child processes are killed and reaped on any failure.
+pub fn run_driver(cfg: &BenchConfig, resolved: &Json) -> Result<Json, String> {
+    let (listener, addr) = ControlPlane::listen(&cfg.cluster.driver_bind)?;
+    let mut expected = vec![role::BROKER, role::ENGINE];
+    for _ in 0..cfg.cluster.generators {
+        expected.push(role::GENERATOR);
+    }
+    let children = if cfg.cluster.spawn_workers {
+        spawn_local_workers(cfg, &addr)?
+    } else {
+        eprintln!("[driver] control listener at {addr}; waiting for externally launched workers");
+        Vec::new()
+    };
+    let result = drive(cfg, resolved, &listener, &expected);
+    reap(children, result.is_err());
+    result
+}
+
+fn drive(
+    cfg: &BenchConfig,
+    resolved: &Json,
+    listener: &TcpListener,
+    expected: &[u8],
+) -> Result<Json, String> {
+    let mut cp = ControlPlane::gather(listener, expected, cfg.cluster.connect_timeout_micros)?;
+    let broker_data = cp
+        .workers
+        .iter()
+        .find(|w| w.role == role::BROKER)
+        .map(|w| w.data_addr.clone())
+        .unwrap_or_default();
+    if broker_data.is_empty() {
+        return Err("broker worker advertised no data-plane address".into());
+    }
+    let generators = cfg.cluster.generators;
+    cp.broadcast_assign(|_, index| {
+        let mut j = Json::obj();
+        j.set("config", resolved.clone());
+        j.set("broker_data", Json::Str(broker_data.clone()));
+        j.set("generators", Json::Int(generators as i64));
+        j.set("index", Json::Int(index as i64));
+        j
+    })?;
+    cp.barrier(cfg.cluster.ready_timeout_micros)?;
+    let collect_timeout =
+        cfg.bench.duration_micros + cfg.bench.warmup_micros + FRAGMENT_SLACK_MICROS;
+    let fragments = cp.collect_fragments(collect_timeout)?;
+    merge_results(&fragments)
+}
+
+/// Launch the worker fleet as child processes of this binary (loopback
+/// single-node mode; SLURM launches them via srun instead).
+fn spawn_local_workers(cfg: &BenchConfig, driver_addr: &str) -> Result<Vec<Child>, String> {
+    let exe = std::env::current_exe().map_err(|e| format!("locate own binary: {e}"))?;
+    let mut children: Vec<Child> = Vec::new();
+    let mut launch = |role_name: &str, bind: Option<&str>| -> Result<(), String> {
+        let mut c = Command::new(&exe);
+        c.arg("worker")
+            .arg("--role")
+            .arg(role_name)
+            .arg("--driver")
+            .arg(driver_addr)
+            .stdin(Stdio::null());
+        if let Some(b) = bind {
+            c.arg("--bind").arg(b);
+        }
+        match c.spawn() {
+            Ok(child) => {
+                children.push(child);
+                Ok(())
+            }
+            Err(e) => Err(format!("spawn {role_name} worker: {e}")),
+        }
+    };
+    let r = launch("broker", Some(&cfg.cluster.data_bind))
+        .and_then(|_| launch("engine", None))
+        .and_then(|_| (0..cfg.cluster.generators).try_for_each(|_| launch("generator", None)));
+    if let Err(e) = r {
+        reap(children, true);
+        return Err(e);
+    }
+    Ok(children)
+}
+
+fn reap(children: Vec<Child>, kill: bool) {
+    for mut c in children {
+        if kill {
+            let _ = c.kill();
+        }
+        let _ = c.wait();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------------
+
+/// Entry point for `sprobench worker --role <r> --driver <addr>`.
+pub fn run_worker(role_name: &str, driver: &str, bind: Option<&str>) -> Result<(), String> {
+    match control::role_from_name(role_name) {
+        Some(role::BROKER) => run_broker_worker(driver, bind.unwrap_or("127.0.0.1:0")),
+        Some(role::GENERATOR) => run_generator_worker(driver),
+        Some(role::ENGINE) => run_engine_worker(driver),
+        _ => Err(format!(
+            "unknown worker role '{role_name}' (expected broker, generator, or engine)"
+        )),
+    }
+}
+
+/// The fields every worker reads out of its ASSIGN payload.
+struct Assignment {
+    cfg: BenchConfig,
+    broker_data: String,
+    generators: u32,
+    index: u32,
+}
+
+fn parse_assign(assign: &Json) -> Result<Assignment, String> {
+    let doc = assign.get("config").ok_or("ASSIGN carries no config")?;
+    let cfg = BenchConfig::from_json(doc).map_err(|e| format!("assigned config: {e}"))?;
+    let get_u32 = |k: &str| assign.get(k).and_then(|v| v.as_i64()).unwrap_or(0) as u32;
+    Ok(Assignment {
+        cfg,
+        broker_data: assign
+            .get("broker_data")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string(),
+        generators: get_u32("generators"),
+        index: get_u32("index"),
+    })
+}
+
+// --------------------------- broker worker ---------------------------------
+
+fn run_broker_worker(driver: &str, bind: &str) -> Result<(), String> {
+    let listener =
+        TcpListener::bind(bind).map_err(|e| format!("bind data listener {bind}: {e}"))?;
+    let data_addr = listener
+        .local_addr()
+        .map_err(|e| format!("data listener addr: {e}"))?
+        .to_string();
+    let (mut link, assign) =
+        WorkerLink::connect(driver, role::BROKER, Some(&data_addr), CONTROL_TIMEOUT_MICROS)?;
+    match broker_body(&mut link, &assign, &listener) {
+        Ok(fragment) => link.send_fragment(&fragment),
+        Err(e) => {
+            link.send_error(&e);
+            Err(format!("broker worker: {e}"))
+        }
+    }
+}
+
+fn broker_body(
+    link: &mut WorkerLink,
+    assign: &Json,
+    listener: &TcpListener,
+) -> Result<Json, String> {
+    let a = parse_assign(assign)?;
+    let cfg = a.cfg;
+    let clk: ClockRef = clock::wall();
+    let broker = Broker::new(BrokerConfig::from_section(&cfg.broker), clk.clone());
+    let in_topic = broker.create_topic("ingest");
+
+    // Data peers dial in: the engine, plus any external generators.
+    let mut engine_feed: Option<Arc<TcpTransport<FeedBatch>>> = None;
+    let mut gen_feeds: Vec<Arc<TcpTransport<FeedBatch>>> = Vec::new();
+    for _ in 0..(1 + a.generators) {
+        let (stream, peer) =
+            accept_with_timeout(listener, role::BROKER, cfg.cluster.connect_timeout_micros)?;
+        let t = TcpTransport::<FeedBatch>::spawn(stream, 1, 1, TcpOptions::default())?;
+        match peer {
+            role::ENGINE if engine_feed.is_none() => engine_feed = Some(t),
+            role::GENERATOR => gen_feeds.push(t),
+            other => {
+                return Err(format!(
+                    "unexpected data peer: {}",
+                    control::role_name(other)
+                ))
+            }
+        }
+    }
+    let engine_feed = engine_feed.ok_or("engine never dialed the data plane")?;
+
+    // Feeder: committed ingest batches → engine link.  Spawned before
+    // the load starts so topic backpressure propagates to the producers
+    // instead of filling the partitions.
+    let feeder = {
+        let group = broker.subscribe("ingest", "netfeed", 1);
+        let feed = engine_feed.clone();
+        std::thread::Builder::new()
+            .name("net-feeder".into())
+            .spawn(move || -> Result<u64, String> {
+                let mut shipped = 0u64;
+                loop {
+                    match group.poll(0, 4096) {
+                        Ok(Some(pb)) => {
+                            let partition = pb.partition;
+                            let next = pb.next_offset;
+                            for batch in pb.batches {
+                                shipped += batch.len() as u64;
+                                feed.send(0, FeedBatch { partition, batch })?;
+                            }
+                            group.commit(partition, next);
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_micros(500)),
+                        // Every partition closed and drained: end of run.
+                        Err(_) => break,
+                    }
+                }
+                feed.finish_upstream(0);
+                feed.finish_sending();
+                Ok(shipped)
+            })
+            .map_err(|e| format!("spawn net feeder: {e}"))?
+    };
+
+    link.ready()?;
+    link.await_start(cfg.cluster.ready_timeout_micros)?;
+
+    // Fill the ingest topic: colocated fleet, or pumps from the
+    // generator workers.  Either way the topic closes when the offered
+    // load ends, which terminates the feeder.
+    let t0 = clk.now_micros();
+    let (generated, offered, offered_bytes) = if a.generators == 0 {
+        let stop = Arc::new(AtomicBool::new(false));
+        let fleet = Fleet::new(
+            GeneratorConfig::from_config(&cfg),
+            clk.clone(),
+            Arc::new(ThroughputRecorder::new()),
+            Arc::new(LatencyRecorder::new()),
+        );
+        let duration = cfg.bench.duration_micros + cfg.bench.warmup_micros;
+        let workload = cfg.workload.clone();
+        let report = fleet.run(&broker, &in_topic, duration, &stop, |share| {
+            Pattern::from_config(&workload, share)
+        });
+        in_topic.close();
+        (report.events, report.rate_events, report.rate_bytes)
+    } else {
+        let mut pumped = 0u64;
+        let mut pumped_bytes = 0u64;
+        let mut buf: Vec<FeedBatch> = Vec::new();
+        let mut live = gen_feeds.clone();
+        while !live.is_empty() {
+            let mut moved = false;
+            let mut failure: Option<String> = None;
+            live.retain(|g| {
+                while g.drain(0, &mut buf, 256) > 0 {
+                    moved = true;
+                    for fb in buf.drain(..) {
+                        let records = fb.batch.len() as u64;
+                        let bytes = fb.batch.payload_bytes();
+                        if broker
+                            .produce_batches(&in_topic, vec![(fb.partition, fb.batch)])
+                            .is_err()
+                        {
+                            failure =
+                                Some("ingest closed while generators still feeding".into());
+                            return false;
+                        }
+                        pumped += records;
+                        pumped_bytes += bytes;
+                    }
+                }
+                if g.upstream_done(0) && g.is_drained(0) {
+                    return false;
+                }
+                if let Some(e) = g.error() {
+                    failure = Some(format!("generator link: {e}"));
+                    return false;
+                }
+                true
+            });
+            if let Some(e) = failure {
+                return Err(e);
+            }
+            if !moved {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
+        in_topic.close();
+        let elapsed = clk.now_micros().saturating_sub(t0).max(1);
+        (
+            pumped,
+            pumped as f64 * 1e6 / elapsed as f64,
+            pumped_bytes as f64 * 1e6 / elapsed as f64,
+        )
+    };
+
+    let shipped = feeder
+        .join()
+        .map_err(|_| "feeder thread panicked".to_string())??;
+    engine_feed.join();
+    broker.shutdown();
+
+    // Wire counters: this endpoint *sent* the engine feed, so the
+    // engine-link records/bytes are counted here (once); the generator
+    // links contribute only receive-side wait time.
+    let mut transport = engine_feed.stats();
+    for g in &gen_feeds {
+        transport.merge(&g.stats());
+    }
+
+    let mut fragment = Json::obj();
+    fragment.set("role", Json::Str("broker".into()));
+    fragment.set("generated", Json::Int(generated as i64));
+    fragment.set("shipped", Json::Int(shipped as i64));
+    fragment.set("offered", Json::Num(offered));
+    fragment.set("offered_bytes", Json::Num(offered_bytes));
+    fragment.set("transport", transport.to_json());
+    Ok(fragment)
+}
+
+// --------------------------- generator worker ------------------------------
+
+/// This worker's slice of a total split `n` ways (worker 0 absorbs the
+/// division remainder, mirroring the fleet's instance split).
+fn share_of(total: u64, n: u64, index: u64) -> u64 {
+    let base = total / n;
+    if index == 0 {
+        base + (total - base * n)
+    } else {
+        base
+    }
+}
+
+fn run_generator_worker(driver: &str) -> Result<(), String> {
+    let (mut link, assign) =
+        WorkerLink::connect(driver, role::GENERATOR, None, CONTROL_TIMEOUT_MICROS)?;
+    match generator_body(&mut link, &assign) {
+        Ok(fragment) => link.send_fragment(&fragment),
+        Err(e) => {
+            link.send_error(&e);
+            Err(format!("generator worker: {e}"))
+        }
+    }
+}
+
+fn generator_body(link: &mut WorkerLink, assign: &Json) -> Result<Json, String> {
+    let a = parse_assign(assign)?;
+    let mut cfg = a.cfg;
+    // This worker's share of the offered load (and of the count budget
+    // in count-bound mode).
+    let n = a.generators.max(1) as u64;
+    cfg.workload.rate = share_of(cfg.workload.rate, n, a.index as u64).max(1);
+    cfg.workload.events = share_of(cfg.workload.events, n, a.index as u64);
+
+    let clk: ClockRef = clock::wall();
+    // Staging broker: the unchanged fleet produces locally; the pump
+    // below ships committed batches to the broker worker.  Same
+    // partition count ⇒ the staged partition index is the authoritative
+    // ingest partition index.
+    let staging = Broker::new(BrokerConfig::from_section(&cfg.broker), clk.clone());
+    let topic = staging.create_topic("stage");
+    let group = staging.subscribe("stage", "ship", 1);
+
+    let (stream, peer) =
+        connect_with_retry(&a.broker_data, role::GENERATOR, cfg.cluster.connect_timeout_micros)?;
+    if peer != role::BROKER {
+        return Err(format!(
+            "data peer at {} is a {}, not the broker",
+            a.broker_data,
+            control::role_name(peer)
+        ));
+    }
+    let feed = TcpTransport::<FeedBatch>::spawn(stream, 1, 1, TcpOptions::default())?;
+
+    link.ready()?;
+    link.await_start(cfg.cluster.ready_timeout_micros)?;
+
+    let mut gen_cfg = GeneratorConfig::from_config(&cfg);
+    // Workers past the first re-key their seed so parallel workers never
+    // emit duplicate streams; a single external generator keeps the
+    // configured seed and so emits the same stream a colocated fleet
+    // would.
+    if a.index > 0 {
+        gen_cfg.seed ^= 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(a.index as u64);
+    }
+    let duration = cfg.bench.duration_micros + cfg.bench.warmup_micros;
+    let stop = Arc::new(AtomicBool::new(false));
+    let fleet_thread = {
+        let staging = staging.clone();
+        let topic = topic.clone();
+        let clk = clk.clone();
+        let stop = stop.clone();
+        let workload = cfg.workload.clone();
+        std::thread::Builder::new()
+            .name("gen-fleet".into())
+            .spawn(move || {
+                let fleet = Fleet::new(
+                    gen_cfg,
+                    clk,
+                    Arc::new(ThroughputRecorder::new()),
+                    Arc::new(LatencyRecorder::new()),
+                );
+                let report = fleet.run(&staging, &topic, duration, &stop, |share| {
+                    Pattern::from_config(&workload, share)
+                });
+                topic.close();
+                report
+            })
+            .map_err(|e| format!("spawn generator fleet: {e}"))?
+    };
+
+    // Ship every committed staged batch; a dead broker link fails loudly.
+    let mut shipped = 0u64;
+    let ship_result: Result<(), String> = loop {
+        match group.poll(0, 4096) {
+            Ok(Some(pb)) => {
+                let partition = pb.partition;
+                let next = pb.next_offset;
+                let mut err = None;
+                for batch in pb.batches {
+                    shipped += batch.len() as u64;
+                    if let Err(e) = feed.send(0, FeedBatch { partition, batch }) {
+                        err = Some(e);
+                        break;
+                    }
+                }
+                if let Some(e) = err {
+                    break Err(format!("broker link: {e}"));
+                }
+                group.commit(partition, next);
+            }
+            Ok(None) => std::thread::sleep(Duration::from_micros(500)),
+            Err(_) => break Ok(()),
+        }
+    };
+    stop.store(true, Ordering::SeqCst);
+    feed.finish_upstream(0);
+    feed.finish_sending();
+    let report = fleet_thread
+        .join()
+        .map_err(|_| "generator fleet panicked".to_string())?;
+    feed.join();
+    staging.shutdown();
+    ship_result?;
+
+    let mut fragment = Json::obj();
+    fragment.set("role", Json::Str("generator".into()));
+    fragment.set("index", Json::Int(a.index as i64));
+    fragment.set("generated", Json::Int(report.events as i64));
+    fragment.set("shipped", Json::Int(shipped as i64));
+    fragment.set("transport", feed.stats().to_json());
+    Ok(fragment)
+}
+
+// --------------------------- engine worker ---------------------------------
+
+fn run_engine_worker(driver: &str) -> Result<(), String> {
+    let (mut link, assign) =
+        WorkerLink::connect(driver, role::ENGINE, None, CONTROL_TIMEOUT_MICROS)?;
+    match engine_body(&mut link, &assign) {
+        Ok(fragment) => link.send_fragment(&fragment),
+        Err(e) => {
+            link.send_error(&e);
+            Err(format!("engine worker: {e}"))
+        }
+    }
+}
+
+fn engine_body(link: &mut WorkerLink, assign: &Json) -> Result<Json, String> {
+    let a = parse_assign(assign)?;
+    let cfg = a.cfg;
+    let clk: ClockRef = clock::wall();
+    let throughput = Arc::new(ThroughputRecorder::new());
+    let latency = Arc::new(LatencyRecorder::new());
+
+    // Mirror broker: received feed batches are re-produced here so the
+    // unchanged engine + egestion drainer run exactly as in-process.
+    let broker = Broker::new(BrokerConfig::from_section(&cfg.broker), clk.clone());
+    let in_topic = broker.create_topic("ingest");
+    let out_topic = broker.create_topic("egest");
+
+    let drain_group = broker.subscribe("egest", "downstream", 1);
+    let dump_path = cfg.metrics.egest_dump.clone();
+    let drainer = std::thread::Builder::new()
+        .name("egest-drain".into())
+        .spawn(move || {
+            let mut n = 0u64;
+            let mut dump = (!dump_path.is_empty()).then(EgestDump::new);
+            loop {
+                match drain_group.poll(0, 4096) {
+                    Ok(Some(b)) => {
+                        n += b.record_count() as u64;
+                        if let Some(d) = dump.as_mut() {
+                            for rb in &b.batches {
+                                d.absorb(rb);
+                            }
+                        }
+                        drain_group.commit(b.partition, b.next_offset);
+                    }
+                    Ok(None) => std::thread::sleep(Duration::from_micros(500)),
+                    Err(_) => {
+                        if let Some(d) = dump.take() {
+                            if let Err(e) = d.write(&dump_path) {
+                                eprintln!("[engine-worker] {e}");
+                            }
+                        }
+                        return n;
+                    }
+                }
+            }
+        })
+        .map_err(|e| format!("spawn egest drainer: {e}"))?;
+
+    // Data plane: dial the broker worker.  Every received frame (PINGs
+    // included) beats monitor slot 0, so a vanished or frozen broker
+    // goes stale within the watchdog deadline below.
+    let monitor = Arc::new(TaskMonitor::new(1));
+    let (stream, peer) =
+        connect_with_retry(&a.broker_data, role::ENGINE, cfg.cluster.connect_timeout_micros)?;
+    if peer != role::BROKER {
+        return Err(format!(
+            "data peer at {} is a {}, not the broker",
+            a.broker_data,
+            control::role_name(peer)
+        ));
+    }
+    let feed = TcpTransport::<FeedBatch>::spawn(
+        stream,
+        1,
+        1,
+        TcpOptions {
+            monitor: Some((monitor.clone(), 0, clk.clone())),
+            ..TcpOptions::default()
+        },
+    )?;
+
+    // Staleness deadline: must exceed the peer's idle-ping interval
+    // (1 s) or a quiet-but-healthy link would trip it.
+    let stale_after = cfg.fault.heartbeat_timeout_micros.max(5_000_000);
+    let stop = Arc::new(AtomicBool::new(false));
+    let faults: Arc<Mutex<Vec<FaultOutcome>>> = Arc::new(Mutex::new(Vec::new()));
+
+    // Pump: received batches → mirror ingest topic.  Doubles as the
+    // peer supervisor: a dead link or stale heartbeat is recorded as a
+    // detected PeerDisconnect fault and ends the run instead of hanging.
+    let pump = {
+        let feed = feed.clone();
+        let broker = broker.clone();
+        let in_topic = in_topic.clone();
+        let clk = clk.clone();
+        let stop = stop.clone();
+        let faults = faults.clone();
+        let monitor = monitor.clone();
+        let t0 = clk.now_micros();
+        std::thread::Builder::new()
+            .name("net-pump".into())
+            .spawn(move || {
+                let mut buf: Vec<FeedBatch> = Vec::new();
+                loop {
+                    if feed.drain(0, &mut buf, 256) > 0 {
+                        for fb in buf.drain(..) {
+                            if broker
+                                .produce_batches(&in_topic, vec![(fb.partition, fb.batch)])
+                                .is_err()
+                            {
+                                in_topic.close();
+                                return;
+                            }
+                        }
+                        continue;
+                    }
+                    if feed.upstream_done(0) && feed.is_drained(0) {
+                        break;
+                    }
+                    let now = clk.now_micros();
+                    let dead = feed.error();
+                    let stale = monitor.stale_task(now, stale_after).is_some();
+                    if dead.is_some() || stale {
+                        let mut outcome = FaultOutcome::new(FaultSpec {
+                            kind: FaultKind::PeerDisconnect {
+                                worker: role::BROKER as u32,
+                            },
+                            at_micros: now.saturating_sub(t0),
+                            duration_micros: 0,
+                            seed: 0,
+                        });
+                        outcome.injected_at = Some(now);
+                        outcome.detected_at = Some(now);
+                        faults.lock().expect("faults poisoned").push(outcome);
+                        match dead {
+                            Some(e) => eprintln!("[engine-worker] broker link failed: {e}"),
+                            None => eprintln!(
+                                "[engine-worker] broker link stale beyond {stale_after}µs"
+                            ),
+                        }
+                        stop.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                in_topic.close();
+            })
+            .map_err(|e| format!("spawn net pump: {e}"))?
+    };
+
+    // Run the engine on this thread while a scoped control thread holds
+    // the READY barrier until every task compiled, then awaits START.
+    let engine = Engine::new(&cfg, clk.clone(), throughput.clone(), latency.clone());
+    let deadline = cfg.bench.duration_micros + cfg.bench.warmup_micros + 30_000_000;
+    let runtime_factory = cfg
+        .engine
+        .use_hlo
+        .then(crate::runtime::RuntimeFactory::default_dir);
+    let parallelism = cfg.engine.parallelism;
+    let ready_timeout = cfg.cluster.ready_timeout_micros;
+    let ready = Arc::new(AtomicU32::new(0));
+    let run_done = AtomicBool::new(false);
+
+    let report = std::thread::scope(|s| {
+        let ctrl = {
+            let ready = ready.clone();
+            let stop = stop.clone();
+            let run_done = &run_done;
+            let link: &mut WorkerLink = link;
+            s.spawn(move || -> Result<(), String> {
+                let barrier = (|| {
+                    loop {
+                        if ready.load(Ordering::SeqCst) >= parallelism {
+                            break;
+                        }
+                        if run_done.load(Ordering::SeqCst) {
+                            return Err("engine exited before its tasks became ready".into());
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    link.ready()?;
+                    link.await_start(ready_timeout)
+                })();
+                if barrier.is_err() {
+                    // Unblock the engine (and the pump) so the scope exits
+                    // promptly instead of draining out the full deadline.
+                    stop.store(true, Ordering::SeqCst);
+                }
+                barrier
+            })
+        };
+        let run = engine.run(
+            &broker,
+            "ingest",
+            &out_topic,
+            &stop,
+            deadline,
+            runtime_factory,
+            Some(ready.clone()),
+        );
+        run_done.store(true, Ordering::SeqCst);
+        match ctrl.join() {
+            Ok(Ok(())) => run,
+            Ok(Err(e)) => Err(format!("control barrier: {e}")),
+            Err(_) => Err("control thread panicked".to_string()),
+        }
+    })?;
+
+    stop.store(true, Ordering::SeqCst);
+    pump.join().map_err(|_| "net pump panicked".to_string())?;
+    feed.finish_sending();
+    feed.join();
+    broker.shutdown();
+    let emitted = drainer
+        .join()
+        .map_err(|_| "egest drainer panicked".to_string())?;
+
+    let latency_summary: Vec<_> = MeasurementPoint::ALL
+        .iter()
+        .map(|&p| (p, latency.summary(p)))
+        .collect();
+    let transport = feed.stats();
+    let summary = RunSummary {
+        name: cfg.bench.name.clone(),
+        pipeline: cfg.engine.pipeline_label(),
+        framework: cfg.engine.framework.name(),
+        parallelism: cfg.engine.parallelism,
+        // Overlaid from the broker fragment by merge_results.
+        generated: 0,
+        processed: report.events_in,
+        emitted,
+        elapsed_micros: report.elapsed_micros,
+        offered_rate: 0.0,
+        processed_rate: report.rate_events,
+        offered_bytes_rate: 0.0,
+        latency: latency_summary,
+        // No JMX/energy sampler in the distributed worker (yet): the
+        // blocks are emitted as zeros, not fabricated.
+        gc_young_count: 0,
+        gc_young_time_micros: 0,
+        energy_joules: 0.0,
+        parse_failures: report.parse_failures,
+        batches: report.batches,
+        operators: report.operators.clone(),
+        recovery: None,
+        quarantined: 0,
+        faults: faults.lock().expect("faults poisoned").clone(),
+        resilience: None,
+        transport: Some(transport.clone()),
+    };
+
+    let mut fragment = Json::obj();
+    fragment.set("role", Json::Str("engine".into()));
+    fragment.set("summary", summary.to_json());
+    fragment.set("transport", transport.to_json());
+    Ok(fragment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_cover_the_total_exactly() {
+        for total in [0u64, 1, 7, 100, 1_000_003] {
+            for n in 1u64..6 {
+                let sum: u64 = (0..n).map(|i| share_of(total, n, i)).sum();
+                assert_eq!(sum, total, "total {total} over {n}");
+                // Worker 0 absorbs the remainder; everyone else is equal.
+                for i in 2..n {
+                    assert_eq!(share_of(total, n, i), share_of(total, n, 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn assign_parsing_rejects_missing_config() {
+        let j = Json::obj();
+        assert!(parse_assign(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_role_is_rejected() {
+        let e = run_worker("conductor", "127.0.0.1:1", None).unwrap_err();
+        assert!(e.contains("unknown worker role"), "{e}");
+    }
+}

@@ -1,0 +1,896 @@
+//! The [`Transport`] abstraction: one trait over the two data paths that
+//! used to exist only in shared memory.
+//!
+//! A transport is a set of numbered channels toward a consumer (`dest`
+//! in `try_send`/`drain`) plus per-upstream frontier/done lanes — exactly
+//! the semantics of the exchange [`Boundary`](crate::engine::exchange::Boundary)
+//! (which now delegates here) and of the broker→engine poll feed.
+//!
+//! * [`LocalTransport`] wraps [`util::chan`](crate::util::chan) bounded
+//!   channels and atomics: today's in-process fast path, byte-for-byte
+//!   the old `Boundary` behaviour.
+//! * [`TcpTransport`] carries the same semantics over one TCP socket
+//!   with blocking I/O and a per-peer reader/writer thread pair, using
+//!   the length-prefixed CRC-checked framing in [`super::frame`].
+//!   Frontier publications and finish marks travel as control frames and
+//!   land in local atomic mirrors on both ends, so `safe_frontier()`
+//!   reads never block on the network.
+//!
+//! Message payloads are pluggable through [`Wire`]: the exchange moves
+//! [`ExchangePacket`]s (row batches), the feed moves [`FeedBatch`]es
+//! (serialized [`RecordBatch`] arenas — one serialization per batch).
+//!
+//! Liveness: an idle TCP link pings every `ping_interval`; every received
+//! frame beats an optional [`TaskMonitor`] slot, so a vanished peer
+//! surfaces through the supervisor's heartbeat deadline (bounded
+//! detection, no hang) as well as through [`TcpTransport::error`].
+
+use std::io::Write as _;
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::frame::{
+    self, kind, read_frame, read_handshake, write_frame, write_handshake, Frame,
+};
+use crate::broker::RecordBatch;
+use crate::engine::exchange::{ExchangePacket, ROW_WIRE_BYTES};
+use crate::engine::supervisor::TaskMonitor;
+use crate::util::chan::{self, Receiver, RecvTimeout, Sender, TrySendError};
+use crate::util::clock::ClockRef;
+
+/// Wire-wise transport counters, surfaced as the results.json `transport`
+/// block.  `bytes` is what actually moved: framed bytes (header +
+/// payload) on TCP, logical record bytes on the local path.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransportStats {
+    pub records: u64,
+    pub bytes: u64,
+    pub frames: u64,
+    /// Cumulative time senders spent blocked on a full outbound queue.
+    pub send_wait_micros: u64,
+    /// Cumulative time the receive side spent waiting for the next frame.
+    pub recv_wait_micros: u64,
+}
+
+impl TransportStats {
+    pub fn merge(&mut self, other: &TransportStats) {
+        self.records += other.records;
+        self.bytes += other.bytes;
+        self.frames += other.frames;
+        self.send_wait_micros += other.send_wait_micros;
+        self.recv_wait_micros += other.recv_wait_micros;
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut j = crate::util::json::Json::obj();
+        j.set("records", crate::util::json::Json::Int(self.records as i64));
+        j.set("bytes", crate::util::json::Json::Int(self.bytes as i64));
+        j.set("frames", crate::util::json::Json::Int(self.frames as i64));
+        j.set(
+            "send_wait_us",
+            crate::util::json::Json::Int(self.send_wait_micros as i64),
+        );
+        j.set(
+            "recv_wait_us",
+            crate::util::json::Json::Int(self.recv_wait_micros as i64),
+        );
+        j
+    }
+}
+
+/// A message a transport can carry: self-serializing, self-metering.
+pub trait Wire: Sized + Send + 'static {
+    /// The data frame kind this message travels as.
+    fn frame_kind() -> u8;
+    /// Serialize into `out` (appends).
+    fn encode(&self, out: &mut Vec<u8>);
+    /// Total decode; every malformation is a readable error.
+    fn decode(buf: &[u8]) -> Result<Self, String>;
+    /// `(records, logical wire bytes)` this message accounts for.
+    fn meter(&self) -> (u64, u64);
+}
+
+impl Wire for ExchangePacket {
+    fn frame_kind() -> u8 {
+        kind::ROWS
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        frame::encode_rows(&self.rows, self.sent_micros, out);
+    }
+
+    fn decode(buf: &[u8]) -> Result<Self, String> {
+        let (rows, sent_micros) = frame::decode_rows(buf)?;
+        Ok(ExchangePacket { rows, sent_micros })
+    }
+
+    fn meter(&self) -> (u64, u64) {
+        let n = self.rows.len() as u64;
+        (n, n * ROW_WIRE_BYTES)
+    }
+}
+
+/// One broker batch in flight on the feed path: the source partition plus
+/// the batch itself (arena serialized once per batch, never per record).
+pub struct FeedBatch {
+    pub partition: u32,
+    pub batch: RecordBatch,
+}
+
+impl Wire for FeedBatch {
+    fn frame_kind() -> u8 {
+        kind::BATCH
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        frame::encode_record_batch(self.partition, &self.batch, out);
+    }
+
+    fn decode(buf: &[u8]) -> Result<Self, String> {
+        let (partition, batch) = frame::decode_record_batch(buf)?;
+        Ok(FeedBatch { partition, batch })
+    }
+
+    fn meter(&self) -> (u64, u64) {
+        let n = self.batch.len() as u64;
+        // Exact encoded size: 24-byte batch header + 16 bytes/record + payloads.
+        (n, 24 + 16 * n + self.batch.payload_bytes())
+    }
+}
+
+/// The transport contract shared by the exchange boundary and the feed.
+///
+/// Channel/`dest` indexes address downstream consumer instances; `upstream`
+/// indexes address producer instances for frontier bookkeeping.  The
+/// semantics mirror the pre-distributed `Boundary` exactly:
+/// `try_send` is non-blocking and hands the message back on a full (or
+/// closed) channel; `publish_frontier` is a monotone max; a finished
+/// upstream stops constraining the safe frontier.
+pub trait Transport<M: Wire>: Send + Sync {
+    /// Non-blocking send toward consumer `dest`; the message comes back
+    /// on backpressure so the caller can relieve its own queues first.
+    fn try_send(&self, dest: u32, msg: M) -> Result<(), M>;
+    /// Blocking send (feed-pump path, where the sender never consumes).
+    fn send(&self, dest: u32, msg: M) -> Result<(), String>;
+    /// Drain up to `max` pending messages for consumer `dest`.
+    fn drain(&self, dest: u32, buf: &mut Vec<M>, max: usize) -> usize;
+    /// True when consumer `dest` has nothing queued.
+    fn is_drained(&self, dest: u32) -> bool;
+    /// Publish upstream `upstream`'s monotone frontier.
+    fn publish_frontier(&self, upstream: u32, micros: u64);
+    /// Mark upstream `upstream` finished.
+    fn finish_upstream(&self, upstream: u32);
+    /// Last published frontier of upstream `upstream`.
+    fn frontier(&self, upstream: u32) -> u64;
+    /// Whether upstream `upstream` marked itself finished.
+    fn upstream_done(&self, upstream: u32) -> bool;
+    fn upstreams(&self) -> u32;
+    fn downstreams(&self) -> u32;
+    fn stats(&self) -> TransportStats;
+}
+
+// ---------------------------------------------------------------------------
+// Local (in-process) transport
+// ---------------------------------------------------------------------------
+
+/// Shared-memory transport: bounded channels + atomics.  This is the old
+/// exchange `Boundary` data structure behind the trait.
+pub struct LocalTransport<M> {
+    txs: Vec<Sender<M>>,
+    rxs: Vec<Receiver<M>>,
+    frontiers: Vec<AtomicU64>,
+    done: Vec<AtomicBool>,
+    records: AtomicU64,
+    bytes: AtomicU64,
+    frames: AtomicU64,
+    send_wait: AtomicU64,
+}
+
+impl<M: Wire> LocalTransport<M> {
+    pub fn new(upstreams: u32, downstreams: u32, capacity: usize) -> Self {
+        let (txs, rxs) = (0..downstreams.max(1))
+            .map(|_| chan::bounded(capacity))
+            .unzip();
+        Self {
+            txs,
+            rxs,
+            frontiers: (0..upstreams.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            done: (0..upstreams.max(1)).map(|_| AtomicBool::new(false)).collect(),
+            records: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            send_wait: AtomicU64::new(0),
+        }
+    }
+
+    fn count(&self, records: u64, bytes: u64) {
+        self.records.fetch_add(records, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.frames.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl<M: Wire> Transport<M> for LocalTransport<M> {
+    fn try_send(&self, dest: u32, msg: M) -> Result<(), M> {
+        let (r, b) = msg.meter();
+        match self.txs[dest as usize].try_send(msg) {
+            Ok(()) => {
+                self.count(r, b);
+                Ok(())
+            }
+            Err(TrySendError::Full(m)) | Err(TrySendError::Closed(m)) => Err(m),
+        }
+    }
+
+    fn send(&self, dest: u32, msg: M) -> Result<(), String> {
+        let (r, b) = msg.meter();
+        let t0 = Instant::now();
+        self.txs[dest as usize]
+            .send(msg)
+            .map_err(|_| format!("local transport channel {dest} closed"))?;
+        self.send_wait
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        self.count(r, b);
+        Ok(())
+    }
+
+    fn drain(&self, dest: u32, buf: &mut Vec<M>, max: usize) -> usize {
+        self.rxs[dest as usize].drain_into(buf, max)
+    }
+
+    fn is_drained(&self, dest: u32) -> bool {
+        self.rxs[dest as usize].is_empty()
+    }
+
+    fn publish_frontier(&self, upstream: u32, micros: u64) {
+        self.frontiers[upstream as usize].fetch_max(micros, Ordering::SeqCst);
+    }
+
+    fn finish_upstream(&self, upstream: u32) {
+        self.done[upstream as usize].store(true, Ordering::SeqCst);
+    }
+
+    fn frontier(&self, upstream: u32) -> u64 {
+        self.frontiers[upstream as usize].load(Ordering::SeqCst)
+    }
+
+    fn upstream_done(&self, upstream: u32) -> bool {
+        self.done[upstream as usize].load(Ordering::SeqCst)
+    }
+
+    fn upstreams(&self) -> u32 {
+        self.done.len() as u32
+    }
+
+    fn downstreams(&self) -> u32 {
+        self.txs.len() as u32
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            records: self.records.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            send_wait_micros: self.send_wait.load(Ordering::Relaxed),
+            recv_wait_micros: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP transport
+// ---------------------------------------------------------------------------
+
+/// Options for a TCP endpoint.
+#[derive(Clone)]
+pub struct TcpOptions {
+    /// Per-channel inbound queue depth and outbound queue depth.
+    pub capacity: usize,
+    /// Idle-link ping interval (keeps heartbeat monitors fed), µs.
+    pub ping_interval_micros: u64,
+    /// Heartbeat surface: every received frame beats `monitor` slot
+    /// `task` at the clock's now, so a supervising watchdog detects a
+    /// dead peer by staleness within its deadline.
+    pub monitor: Option<(Arc<TaskMonitor>, u32, ClockRef)>,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        Self {
+            capacity: 1024,
+            ping_interval_micros: 1_000_000,
+            monitor: None,
+        }
+    }
+}
+
+enum Out<M> {
+    Data(u32, M),
+    Frontier(u32, u64),
+    Finish(u32),
+    Eof,
+}
+
+struct TcpShared<M> {
+    inbound_tx: Vec<Sender<M>>,
+    frontiers: Vec<AtomicU64>,
+    done: Vec<AtomicBool>,
+    records: AtomicU64,
+    bytes: AtomicU64,
+    frames: AtomicU64,
+    send_wait: AtomicU64,
+    recv_wait: AtomicU64,
+    error: Mutex<Option<String>>,
+    monitor: Option<(Arc<TaskMonitor>, u32, ClockRef)>,
+}
+
+impl<M> TcpShared<M> {
+    fn fail(&self, e: String) {
+        let mut slot = self.error.lock().expect("net error slot poisoned");
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    }
+
+    fn beat(&self) {
+        if let Some((mon, task, clock)) = &self.monitor {
+            mon.beat(*task, clock.now_micros());
+        }
+    }
+}
+
+/// One TCP endpoint of a transport link (full duplex: this end both
+/// sends toward `downstreams` consumer channels on the peer and receives
+/// its own `downstreams` channels — shapes are symmetric per direction
+/// of use; unused directions are simply never exercised).
+pub struct TcpTransport<M: Wire> {
+    shared: Arc<TcpShared<M>>,
+    inbound_rx: Vec<Receiver<M>>,
+    outbound_tx: Sender<Out<M>>,
+    upstream_count: u32,
+    downstream_count: u32,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl<M: Wire> TcpTransport<M> {
+    /// Wrap a handshaken stream: spawns the reader and writer threads
+    /// and returns the endpoint.
+    pub fn spawn(
+        stream: TcpStream,
+        upstreams: u32,
+        downstreams: u32,
+        opts: TcpOptions,
+    ) -> Result<Arc<Self>, String> {
+        stream.set_nodelay(true).ok();
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| format!("clone stream for reader: {e}"))?;
+        let (inbound_tx, inbound_rx): (Vec<_>, Vec<_>) = (0..downstreams.max(1))
+            .map(|_| chan::bounded(opts.capacity))
+            .unzip();
+        let (outbound_tx, outbound_rx) = chan::bounded::<Out<M>>(opts.capacity);
+        let shared = Arc::new(TcpShared {
+            inbound_tx,
+            frontiers: (0..upstreams.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            done: (0..upstreams.max(1)).map(|_| AtomicBool::new(false)).collect(),
+            records: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            send_wait: AtomicU64::new(0),
+            recv_wait: AtomicU64::new(0),
+            error: Mutex::new(None),
+            monitor: opts.monitor.clone(),
+        });
+
+        let reader = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("net-reader".into())
+                .spawn(move || reader_loop::<M>(read_half, &shared))
+                .map_err(|e| format!("spawn net reader: {e}"))?
+        };
+        let writer = {
+            let shared = shared.clone();
+            let ping = opts.ping_interval_micros.max(1_000);
+            std::thread::Builder::new()
+                .name("net-writer".into())
+                .spawn(move || writer_loop::<M>(stream, outbound_rx, &shared, ping))
+                .map_err(|e| format!("spawn net writer: {e}"))?
+        };
+
+        Ok(Arc::new(Self {
+            shared,
+            inbound_rx,
+            outbound_tx,
+            upstream_count: upstreams.max(1),
+            downstream_count: downstreams.max(1),
+            threads: Mutex::new(vec![reader, writer]),
+        }))
+    }
+
+    /// The link's first fatal error (I/O failure, CRC mismatch, peer
+    /// disconnect without EOF), if any.
+    pub fn error(&self) -> Option<String> {
+        self.shared.error.lock().expect("net error slot poisoned").clone()
+    }
+
+    /// Declare this end done sending: an EOF frame is flushed and the
+    /// write half shuts down.  Receiving continues until the peer EOFs.
+    pub fn finish_sending(&self) {
+        let _ = self.outbound_tx.send(Out::Eof);
+        self.outbound_tx.close();
+    }
+
+    /// Join the I/O threads (call after `finish_sending`, once consumers
+    /// drained).  Idempotent.
+    pub fn join(&self) {
+        let handles: Vec<_> = {
+            let mut t = self.threads.lock().expect("net threads poisoned");
+            t.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop<M: Wire>(mut stream: TcpStream, shared: &TcpShared<M>) {
+    let mut clean_eof = false;
+    loop {
+        let t0 = Instant::now();
+        let f: Frame = match read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // peer closed without an EOF frame
+            Err(e) => {
+                shared.fail(format!("transport receive: {e}"));
+                break;
+            }
+        };
+        shared
+            .recv_wait
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        shared.beat();
+        match f.kind {
+            k if k == M::frame_kind() => {
+                let ch = f.channel as usize;
+                if ch >= shared.inbound_tx.len() {
+                    shared.fail(format!(
+                        "data frame for channel {ch} of {} (corrupt header?)",
+                        shared.inbound_tx.len()
+                    ));
+                    break;
+                }
+                match M::decode(&f.payload) {
+                    Ok(msg) => {
+                        // Blocking: a full inbound queue backpressures the
+                        // socket, which backpressures the sender — the TCP
+                        // analogue of a full local channel.
+                        if shared.inbound_tx[ch].send(msg).is_err() {
+                            break; // consumer went away; stop reading
+                        }
+                    }
+                    Err(e) => {
+                        shared.fail(format!("transport decode: {e}"));
+                        break;
+                    }
+                }
+            }
+            kind::FRONTIER => {
+                let up = f.channel as usize;
+                match frame::decode_frontier(&f.payload) {
+                    Ok(v) if up < shared.frontiers.len() => {
+                        shared.frontiers[up].fetch_max(v, Ordering::SeqCst);
+                    }
+                    Ok(_) => {
+                        shared.fail(format!("frontier for unknown upstream {up}"));
+                        break;
+                    }
+                    Err(e) => {
+                        shared.fail(format!("transport decode: {e}"));
+                        break;
+                    }
+                }
+            }
+            kind::FINISH => {
+                let up = f.channel as usize;
+                if up < shared.done.len() {
+                    shared.done[up].store(true, Ordering::SeqCst);
+                } else {
+                    shared.fail(format!("finish for unknown upstream {up}"));
+                    break;
+                }
+            }
+            kind::EOF => {
+                clean_eof = true;
+                break;
+            }
+            kind::PING => {}
+            other => {
+                shared.fail(format!("unexpected frame kind {other} on data link"));
+                break;
+            }
+        }
+    }
+    if !clean_eof && shared.error.lock().expect("net error slot poisoned").is_none() {
+        shared.fail("peer disconnected before EOF".into());
+    }
+    // Unblock consumers: close every inbound channel (they drain what
+    // already arrived, then see Closed).
+    for tx in &shared.inbound_tx {
+        tx.close();
+    }
+    let _ = stream.shutdown(Shutdown::Read);
+}
+
+fn writer_loop<M: Wire>(
+    mut stream: TcpStream,
+    outbound_rx: Receiver<Out<M>>,
+    shared: &TcpShared<M>,
+    ping_interval_micros: u64,
+) {
+    let mut payload = Vec::new();
+    loop {
+        let out = match outbound_rx.recv_timeout(Duration::from_micros(ping_interval_micros)) {
+            RecvTimeout::Item(out) => out,
+            RecvTimeout::TimedOut => {
+                // Idle link: ping so the peer's heartbeat stays fresh.
+                if let Err(e) = write_frame(&mut stream, kind::PING, 0, &[]) {
+                    shared.fail(format!("transport send: {e}"));
+                    break;
+                }
+                shared.frames.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            RecvTimeout::Closed => {
+                let _ = write_frame(&mut stream, kind::EOF, 0, &[]);
+                break;
+            }
+        };
+        let result = match out {
+            Out::Data(ch, msg) => {
+                payload.clear();
+                msg.encode(&mut payload);
+                let (r, _) = msg.meter();
+                let res = write_frame(&mut stream, M::frame_kind(), ch, &payload);
+                if res.is_ok() {
+                    shared.records.fetch_add(r, Ordering::Relaxed);
+                    shared
+                        .bytes
+                        .fetch_add(13 + payload.len() as u64, Ordering::Relaxed);
+                    shared.frames.fetch_add(1, Ordering::Relaxed);
+                }
+                res
+            }
+            Out::Frontier(up, v) => {
+                let res = write_frame(&mut stream, kind::FRONTIER, up, &frame::encode_frontier(v));
+                if res.is_ok() {
+                    shared.frames.fetch_add(1, Ordering::Relaxed);
+                }
+                res
+            }
+            Out::Finish(up) => {
+                let res = write_frame(&mut stream, kind::FINISH, up, &[]);
+                if res.is_ok() {
+                    shared.frames.fetch_add(1, Ordering::Relaxed);
+                }
+                res
+            }
+            Out::Eof => {
+                let _ = write_frame(&mut stream, kind::EOF, 0, &[]);
+                break;
+            }
+        };
+        if let Err(e) = result {
+            shared.fail(format!("transport send: {e}"));
+            break;
+        }
+    }
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+impl<M: Wire> Transport<M> for TcpTransport<M> {
+    fn try_send(&self, dest: u32, msg: M) -> Result<(), M> {
+        match self.outbound_tx.try_send(Out::Data(dest, msg)) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(Out::Data(_, m)))
+            | Err(TrySendError::Closed(Out::Data(_, m))) => Err(m),
+            Err(_) => unreachable!("try_send returns the message it was given"),
+        }
+    }
+
+    fn send(&self, dest: u32, msg: M) -> Result<(), String> {
+        let t0 = Instant::now();
+        self.outbound_tx.send(Out::Data(dest, msg)).map_err(|_| {
+            self.error()
+                .unwrap_or_else(|| "transport outbound queue closed".into())
+        })?;
+        self.shared
+            .send_wait
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn drain(&self, dest: u32, buf: &mut Vec<M>, max: usize) -> usize {
+        self.inbound_rx[dest as usize].drain_into(buf, max)
+    }
+
+    fn is_drained(&self, dest: u32) -> bool {
+        self.inbound_rx[dest as usize].is_empty()
+    }
+
+    fn publish_frontier(&self, upstream: u32, micros: u64) {
+        // Local mirror first (same-process readers see it immediately),
+        // then the wire copy for the peer.
+        self.shared.frontiers[upstream as usize].fetch_max(micros, Ordering::SeqCst);
+        let _ = self.outbound_tx.send(Out::Frontier(upstream, micros));
+    }
+
+    fn finish_upstream(&self, upstream: u32) {
+        self.shared.done[upstream as usize].store(true, Ordering::SeqCst);
+        let _ = self.outbound_tx.send(Out::Finish(upstream));
+    }
+
+    fn frontier(&self, upstream: u32) -> u64 {
+        self.shared.frontiers[upstream as usize].load(Ordering::SeqCst)
+    }
+
+    fn upstream_done(&self, upstream: u32) -> bool {
+        self.shared.done[upstream as usize].load(Ordering::SeqCst)
+    }
+
+    fn upstreams(&self) -> u32 {
+        self.upstream_count
+    }
+
+    fn downstreams(&self) -> u32 {
+        self.downstream_count
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            records: self.shared.records.load(Ordering::Relaxed),
+            bytes: self.shared.bytes.load(Ordering::Relaxed),
+            frames: self.shared.frames.load(Ordering::Relaxed),
+            send_wait_micros: self.shared.send_wait.load(Ordering::Relaxed),
+            recv_wait_micros: self.shared.recv_wait.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection helpers (timeouts are load-bearing: a missing peer must fail
+// loudly, never hang)
+// ---------------------------------------------------------------------------
+
+/// Connect to `addr`, retrying until `timeout_micros` (the peer may not
+/// be listening yet during cluster startup), then handshake.  Returns
+/// the stream and the peer's role byte.
+pub fn connect_with_retry(
+    addr: &str,
+    my_role: u8,
+    timeout_micros: u64,
+) -> Result<(TcpStream, u8), String> {
+    let target = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("resolve {addr}: no addresses"))?;
+    let deadline = Instant::now() + Duration::from_micros(timeout_micros);
+    let mut last_err = String::new();
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err(format!(
+                "connect to {addr} timed out after {:.1}s (last error: {last_err})",
+                timeout_micros as f64 / 1e6
+            ));
+        }
+        match TcpStream::connect_timeout(&target, left.min(Duration::from_secs(2))) {
+            Ok(mut stream) => {
+                write_handshake(&mut stream, my_role)?;
+                let peer = read_handshake(&mut stream)?;
+                return Ok((stream, peer));
+            }
+            Err(e) => {
+                last_err = e.to_string();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Accept one handshaken connection within `timeout_micros`, failing
+/// loudly if no peer arrives.
+pub fn accept_with_timeout(
+    listener: &TcpListener,
+    my_role: u8,
+    timeout_micros: u64,
+) -> Result<(TcpStream, u8), String> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("listener nonblocking: {e}"))?;
+    let deadline = Instant::now() + Duration::from_micros(timeout_micros);
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| format!("stream blocking: {e}"))?;
+                write_handshake(&mut stream, my_role)?;
+                let peer = read_handshake(&mut stream)?;
+                return Ok((stream, peer));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(format!(
+                        "accept on {:?} timed out after {:.1}s: no peer connected",
+                        listener.local_addr().ok(),
+                        timeout_micros as f64 / 1e6
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(format!("accept: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipelines::RowBatch;
+
+    fn packet(n: usize, ts0: u64, sent: u64) -> ExchangePacket {
+        let mut rows = RowBatch::default();
+        for i in 0..n {
+            rows.push(i as u32, 0.5, ts0 + i as u64, 1);
+        }
+        ExchangePacket {
+            rows,
+            sent_micros: sent,
+        }
+    }
+
+    /// A connected TCP endpoint pair over loopback, handshaken.
+    fn tcp_pair(
+        upstreams: u32,
+        downstreams: u32,
+        opts: TcpOptions,
+    ) -> (Arc<TcpTransport<ExchangePacket>>, Arc<TcpTransport<ExchangePacket>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || {
+            connect_with_retry(&addr, frame::role::ENGINE, 5_000_000).unwrap()
+        });
+        let (server_stream, peer) =
+            accept_with_timeout(&listener, frame::role::BROKER, 5_000_000).unwrap();
+        assert_eq!(peer, frame::role::ENGINE);
+        let (client_stream, peer) = client.join().unwrap();
+        assert_eq!(peer, frame::role::BROKER);
+        let a = TcpTransport::spawn(server_stream, upstreams, downstreams, opts.clone()).unwrap();
+        let b = TcpTransport::spawn(client_stream, upstreams, downstreams, opts).unwrap();
+        (a, b)
+    }
+
+    fn drain_all(
+        t: &TcpTransport<ExchangePacket>,
+        dest: u32,
+        want: usize,
+        timeout: Duration,
+    ) -> Vec<ExchangePacket> {
+        let deadline = Instant::now() + timeout;
+        let mut got = Vec::new();
+        while got.len() < want && Instant::now() < deadline {
+            if t.drain(dest, &mut got, 64) == 0 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn local_transport_meters_like_the_old_boundary() {
+        let t = LocalTransport::<ExchangePacket>::new(2, 4, 16);
+        assert!(t.try_send(1, packet(5, 0, 9)).is_ok());
+        assert_eq!(t.stats().records, 5);
+        assert_eq!(t.stats().bytes, 5 * ROW_WIRE_BYTES);
+        assert_eq!(t.stats().frames, 1);
+        let mut buf = Vec::new();
+        assert_eq!(t.drain(1, &mut buf, 8), 1);
+        assert_eq!(buf[0].rows.len(), 5);
+        assert!(t.is_drained(1));
+    }
+
+    #[test]
+    fn tcp_roundtrip_rows_frontiers_and_finish() {
+        let (a, b) = tcp_pair(2, 2, TcpOptions::default());
+        a.send(0, packet(3, 100, 7)).unwrap();
+        a.send(1, packet(2, 200, 8)).unwrap();
+        a.publish_frontier(0, 5_000);
+        a.publish_frontier(1, 9_000);
+        a.finish_upstream(1);
+
+        let got0 = drain_all(&b, 0, 1, Duration::from_secs(5));
+        assert_eq!(got0.len(), 1);
+        assert_eq!(got0[0].rows.len(), 3);
+        assert_eq!(got0[0].sent_micros, 7);
+        assert_eq!(got0[0].rows.ts, vec![100, 101, 102]);
+        let got1 = drain_all(&b, 1, 1, Duration::from_secs(5));
+        assert_eq!(got1[0].rows.len(), 2);
+
+        // Frontier/finish propagate to the peer's atomic mirrors.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while (b.frontier(0) != 5_000 || !b.upstream_done(1)) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(b.frontier(0), 5_000);
+        assert_eq!(b.frontier(1), 9_000);
+        assert!(b.upstream_done(1));
+        assert!(!b.upstream_done(0));
+        // Sender-side mirrors agree without any wire round trip.
+        assert_eq!(a.frontier(0), 5_000);
+        assert!(a.upstream_done(1));
+
+        let stats = a.stats();
+        assert_eq!(stats.records, 5);
+        assert!(stats.bytes > 5 * ROW_WIRE_BYTES, "framed bytes include headers");
+        assert!(stats.frames >= 5, "2 data + 2 frontier + 1 finish");
+
+        a.finish_sending();
+        b.finish_sending();
+        a.join();
+        b.join();
+        assert!(a.error().is_none(), "{:?}", a.error());
+        assert!(b.error().is_none(), "{:?}", b.error());
+    }
+
+    #[test]
+    fn peer_death_surfaces_as_error_not_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || {
+            connect_with_retry(&addr, frame::role::ENGINE, 5_000_000).unwrap()
+        });
+        let (server_stream, _) =
+            accept_with_timeout(&listener, frame::role::BROKER, 5_000_000).unwrap();
+        let (client_stream, _) = client.join().unwrap();
+        let survivor =
+            TcpTransport::<ExchangePacket>::spawn(server_stream, 1, 1, TcpOptions::default())
+                .unwrap();
+        // The peer dies abruptly: no EOF frame, just a closed socket.
+        drop(client_stream);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while survivor.error().is_none() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let err = survivor.error().expect("death must be detected");
+        assert!(
+            err.contains("disconnected") || err.contains("receive"),
+            "unreadable death: {err}"
+        );
+        survivor.finish_sending();
+        survivor.join();
+    }
+
+    #[test]
+    fn missing_peer_fails_connect_and_accept_loudly() {
+        // Nobody listens on this port (bind then drop to reserve-and-free).
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t0 = Instant::now();
+        let err = connect_with_retry(&dead, frame::role::ENGINE, 300_000).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(30), "must bound the wait");
+        assert!(err.contains("timed out"), "{err}");
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let t0 = Instant::now();
+        let err = accept_with_timeout(&listener, frame::role::DRIVER, 200_000).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(30));
+        assert!(err.contains("timed out"), "{err}");
+    }
+}

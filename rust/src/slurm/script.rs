@@ -7,7 +7,7 @@
 //! benchmark processes."  This module is that calculation, plus the script
 //! writer the batch path uses.
 
-use crate::config::BenchConfig;
+use crate::config::{BenchConfig, TransportMode};
 
 /// Resources derived from a benchmark configuration.
 #[derive(Clone, Debug, PartialEq)]
@@ -85,11 +85,53 @@ pub fn sbatch_script(cfg: &BenchConfig, config_path: &str) -> String {
         cfg.generator_instances()
     ));
     s.push('\n');
-    s.push_str(&format!(
-        "srun sprobench run --config {} --experiment {}\n",
-        config_path, cfg.bench.name
-    ));
+    if cfg.cluster.transport == TransportMode::Tcp && !cfg.cluster.spawn_workers {
+        // Multi-node distributed launch: one srun step per role, the
+        // driver on the first allocated node.  Workers retry the control
+        // dial until the driver binds (bounded by connect_timeout), so
+        // launch order does not matter.
+        let driver_port = port_of(&cfg.cluster.driver_bind, 7700);
+        let data_port = port_of(&cfg.cluster.data_bind, 7701);
+        s.push_str("# Distributed launch: driver + one worker process per role over TCP.\n");
+        s.push_str(
+            "DRIVER_HOST=$(scontrol show hostnames \"$SLURM_JOB_NODELIST\" | head -n 1)\n",
+        );
+        s.push_str(&format!("DRIVER_ADDR=${{DRIVER_HOST}}:{driver_port}\n"));
+        s.push_str(&format!(
+            "srun --ntasks=1 --nodes=1 sprobench worker --role broker --driver ${{DRIVER_ADDR}} --bind 0.0.0.0:{data_port} &\n"
+        ));
+        s.push_str(
+            "srun --ntasks=1 --nodes=1 sprobench worker --role engine --driver ${DRIVER_ADDR} &\n",
+        );
+        for _ in 0..cfg.cluster.generators {
+            s.push_str(
+                "srun --ntasks=1 --nodes=1 sprobench worker --role generator --driver ${DRIVER_ADDR} &\n",
+            );
+        }
+        s.push_str(&format!(
+            "srun --ntasks=1 --nodes=1 -w \"$DRIVER_HOST\" sprobench run --config {} --experiment {}\n",
+            config_path, cfg.bench.name
+        ));
+        s.push_str("wait\n");
+    } else {
+        // Single-step launch; with `cluster.transport: tcp` and
+        // `spawn_workers: true` the driver forks its worker processes on
+        // the allocated node itself.
+        s.push_str(&format!(
+            "srun sprobench run --config {} --experiment {}\n",
+            config_path, cfg.bench.name
+        ));
+    }
     s
+}
+
+/// The port a `host:port` bind pins, or `fallback` when unset/0.
+fn port_of(addr: &str, fallback: u16) -> u16 {
+    addr.rsplit(':')
+        .next()
+        .and_then(|p| p.parse::<u16>().ok())
+        .filter(|&p| p != 0)
+        .unwrap_or(fallback)
 }
 
 fn fmt_slurm_time(total_min: u64) -> String {
@@ -134,6 +176,37 @@ mod tests {
         assert!(s.contains("--cpus-per-task=16"));
         assert!(s.contains("export SPROBENCH_PARALLELISM=4"));
         assert!(s.contains("srun sprobench run --config configs/exp.yaml"));
+    }
+
+    #[test]
+    fn tcp_cluster_script_emits_one_srun_step_per_role() {
+        let mut cfg = BenchConfig::default();
+        cfg.bench.name = "dist".into();
+        cfg.cluster.transport = TransportMode::Tcp;
+        cfg.cluster.spawn_workers = false;
+        cfg.cluster.driver_bind = "0.0.0.0:7700".into();
+        cfg.cluster.data_bind = "0.0.0.0:7701".into();
+        cfg.cluster.generators = 2;
+        let s = sbatch_script(&cfg, "configs/dist.yaml");
+        assert!(s.contains("--role broker"), "{s}");
+        assert!(s.contains("--bind 0.0.0.0:7701"), "{s}");
+        assert!(s.contains("--role engine"), "{s}");
+        assert_eq!(s.matches("--role generator").count(), 2, "{s}");
+        assert!(s.contains("DRIVER_ADDR=${DRIVER_HOST}:7700"), "{s}");
+        assert!(s.contains("sprobench run --config configs/dist.yaml --experiment dist"), "{s}");
+        assert!(s.ends_with("wait\n"), "{s}");
+        // Workers spawned by the driver itself: back to the single step.
+        cfg.cluster.spawn_workers = true;
+        let s = sbatch_script(&cfg, "configs/dist.yaml");
+        assert!(!s.contains("--role broker"), "{s}");
+        assert!(s.contains("srun sprobench run"), "{s}");
+    }
+
+    #[test]
+    fn port_extraction_falls_back_on_unpinned_binds() {
+        assert_eq!(port_of("0.0.0.0:7700", 1), 7700);
+        assert_eq!(port_of("127.0.0.1:0", 7700), 7700);
+        assert_eq!(port_of("", 7701), 7701);
     }
 
     #[test]

@@ -46,6 +46,11 @@ pub struct GeneratorConfig {
     /// while a window is active a seeded fraction of serialized payloads
     /// is corrupted in place.  Empty when no poison fault is planned.
     pub poison: Vec<FaultSpec>,
+    /// Count-bound deterministic generation (`workload.events`): when
+    /// non-zero the fleet emits exactly this many events with synthetic
+    /// evenly spaced timestamps and quarter-degree temperatures instead
+    /// of pacing against the wall clock for the run span.  0 = off.
+    pub events: u64,
 }
 
 impl GeneratorConfig {
@@ -68,6 +73,7 @@ impl GeneratorConfig {
             produce_batch: 512,
             disorder: cfg.workload.disorder.clone(),
             poison: cfg.fault.poison_plan(),
+            events: cfg.workload.events,
         }
     }
 
@@ -127,18 +133,22 @@ impl Fleet {
         let n = self.config.instances();
         let share = self.config.total_rate / n as u64;
         let remainder = self.config.total_rate - share * n as u64;
+        let eshare = self.config.events / n as u64;
+        let eremainder = self.config.events - eshare * n as u64;
         let start = self.clock.now_micros();
 
         let handles: Vec<_> = (0..n)
             .map(|i| {
                 // First instance absorbs the division remainder.
                 let my_rate = if i == 0 { share + remainder } else { share };
+                let my_events = if i == 0 { eshare + eremainder } else { eshare };
                 let pattern = pattern_of(my_rate);
                 let worker = InstanceWorker {
                     id: i,
                     config: self.config.clone(),
                     pattern,
                     rate: my_rate,
+                    events: my_events,
                     clock: self.clock.clone(),
                     throughput: self.throughput.clone(),
                     latency: self.latency.clone(),
@@ -230,6 +240,8 @@ struct InstanceWorker {
     config: GeneratorConfig,
     pattern: Pattern,
     rate: u64,
+    /// Exact event budget in count-bound mode (0 = duration-bound).
+    events: u64,
     clock: ClockRef,
     throughput: Arc<ThroughputRecorder>,
     latency: Arc<LatencyRecorder>,
@@ -240,6 +252,9 @@ struct InstanceWorker {
 
 impl InstanceWorker {
     fn run(self, deadline_micros: u64) -> (u64, u64) {
+        if self.events > 0 {
+            return self.run_counted();
+        }
         let mut rng = Pcg32::from_master(self.config.seed, self.id as u64);
         let keys = KeyDist::new(
             self.config.sensors,
@@ -372,6 +387,95 @@ impl InstanceWorker {
         (total_events, total_bytes)
     }
 
+    /// Count-bound deterministic generation (`workload.events > 0`): the
+    /// instance emits exactly its share of the budget — no token bucket,
+    /// no wall-clock deadline — with synthetic generation timestamps
+    /// spaced evenly at the instance rate from a fixed base, and
+    /// temperatures quantized to 0.25 °C multiples.  The serialized
+    /// stream is then a pure function of the seed, and quarter-degree
+    /// addends make window sums exact in f32 (order-independent), so two
+    /// topologies of the same spec — in-process vs. multi-process TCP —
+    /// produce byte-identical final aggregates (the distributed
+    /// equivalence suite's foundation; same methodology as
+    /// `rust/tests/shuffle_equivalence.rs`).
+    fn run_counted(self) -> (u64, u64) {
+        const TS_BASE_MICROS: u64 = 1_700_000_000_000_000;
+        let mut rng = Pcg32::from_master(self.config.seed, self.id as u64);
+        let keys = KeyDist::new(
+            self.config.sensors,
+            self.config.key_skew,
+            self.config.hot_keys,
+            self.config.hot_fraction,
+        );
+        let mut disorder = self.config.disorder.enabled().then(|| {
+            DisorderState::new(
+                self.config.disorder.clone(),
+                Pcg32::from_master(self.config.seed ^ 0xD150, self.id as u64),
+            )
+        });
+        let paced_rate = self.rate.min(self.config.instance_capacity).max(1);
+
+        let mut total_events = 0u64;
+        let mut total_bytes = 0u64;
+        let mut wire = Vec::with_capacity(self.config.event_bytes + 32);
+        let mut serializer =
+            super::event::EventSerializer::new(self.config.format, self.config.event_bytes);
+        let partitions = self.topic.partition_count();
+
+        let mut k = 0u64;
+        while k < self.events && !self.stop.load(Ordering::Relaxed) {
+            let chunk = (self.events - k).min(self.config.produce_batch as u64);
+            let mut pb = PartitionedBatchBuilder::new(partitions);
+            for _ in 0..chunk {
+                let sensor_id = keys.sample(&mut rng);
+                // Integer spacing: deterministic across platforms.
+                let ts = TS_BASE_MICROS + k * 1_000_000 / paced_rate;
+                k += 1;
+                let temp = ((20.0f32 + rng.normal() as f32 * 15.0) * 4.0).round() / 4.0;
+                let ev = SensorEvent {
+                    ts_micros: ts,
+                    sensor_id,
+                    temp_c: temp,
+                };
+                let ev = match &mut disorder {
+                    Some(d) => match d.admit(ev) {
+                        Some(e) => e,
+                        None => continue, // buffered; emitted later
+                    },
+                    None => ev,
+                };
+                let n = serializer.serialize(&ev, &mut wire);
+                total_bytes += n as u64;
+                pb.push(
+                    self.topic.partition_for_key(ev.sensor_id),
+                    ev.sensor_id,
+                    &wire,
+                    ev.ts_micros,
+                );
+            }
+            if !self.append_and_account(pb, self.clock.now_micros(), &mut total_events) {
+                return (total_events, total_bytes); // broker shut down
+            }
+        }
+        // Drain the disorder shuffle window: conservation, exactly like
+        // the duration-bound path.
+        if let Some(d) = &mut disorder {
+            let mut pb = PartitionedBatchBuilder::new(partitions);
+            while let Some(ev) = d.flush_one() {
+                let n = serializer.serialize(&ev, &mut wire);
+                total_bytes += n as u64;
+                pb.push(
+                    self.topic.partition_for_key(ev.sensor_id),
+                    ev.sensor_id,
+                    &wire,
+                    ev.ts_micros,
+                );
+            }
+            self.append_and_account(pb, self.clock.now_micros(), &mut total_events);
+        }
+        (total_events, total_bytes)
+    }
+
     /// Append a finished builder and record the produce-side metrics
     /// (DriverOut/BrokerIn throughput + broker-ingest latency anchored at
     /// `gen_now`, the batch-assembly time).  Note the anchor semantics
@@ -433,6 +537,7 @@ mod tests {
             produce_batch: 256,
             disorder: DisorderSection::default(),
             poison: Vec::new(),
+            events: 0,
         }
     }
 
@@ -616,6 +721,52 @@ mod tests {
             (0.1..0.35).contains(&frac),
             "poison fraction off target: {bad}/{consumed}"
         );
+    }
+
+    #[test]
+    fn count_bound_mode_emits_exactly_the_budget_deterministically() {
+        let run = || {
+            let clk = clock::wall();
+            let broker = Broker::new(BrokerConfig::default(), clk.clone());
+            let topic = broker.create_topic("in");
+            let group = broker.subscribe("in", "sink", 1);
+            let mut cfg = config(1_000_000); // 2 instances
+            cfg.events = 10_000;
+            let tp = Arc::new(ThroughputRecorder::new());
+            let lat = Arc::new(LatencyRecorder::new());
+            let fleet = Fleet::new(cfg, clk, tp, lat);
+            let stop = Arc::new(AtomicBool::new(false));
+            let report =
+                fleet.run(&broker, &topic, 60_000_000, &stop, |r| Pattern::Constant { rate: r });
+            broker.shutdown();
+            let mut lines: Vec<String> = Vec::new();
+            loop {
+                match group.poll(0, 4096) {
+                    Ok(Some(b)) => {
+                        for rb in &b.batches {
+                            for i in 0..rb.len() {
+                                let e = rb.entry(i);
+                                let ev = SensorEvent::parse(rb.payload(i)).unwrap();
+                                // Synthetic stamps, quarter-degree temps.
+                                assert!(e.gen_ts_micros >= 1_700_000_000_000_000);
+                                assert_eq!(ev.temp_c * 4.0, (ev.temp_c * 4.0).round());
+                                lines.push(format!("{},{}", e.gen_ts_micros, e.key));
+                            }
+                        }
+                        group.commit(b.partition, b.next_offset);
+                    }
+                    Ok(None) => continue,
+                    Err(_) => break,
+                }
+            }
+            lines.sort_unstable();
+            (report.events, lines)
+        };
+        let (n1, s1) = run();
+        let (n2, s2) = run();
+        assert_eq!(n1, 10_000, "exact budget, not a wall-clock race");
+        assert_eq!(n1, n2);
+        assert_eq!(s1, s2, "the stream is a pure function of the seed");
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Loopback distributed-equivalence suite: a multi-process TCP run
+//! (`cluster.transport: tcp` — driver + broker + engine, generators
+//! colocated or external) must produce **byte-identical** final
+//! aggregates to the plain in-process run of the same spec.
+//!
+//! Determinism rests on count-bound generation (`workload.events > 0`):
+//! synthetic generation timestamps from a fixed base, quarter-degree f32
+//! temperatures (order-independent window sums), and event-time windows
+//! whose `allowed_lateness` exceeds the whole synthetic span — so no
+//! pane closes before the finish flush and pane membership cannot depend
+//! on arrival timing.  Each run writes its canonical sorted egestion
+//! dump (`metrics.egest_dump`); equality is over those files' bytes.
+//!
+//! The runs go through the real binary (`sprobench run --config …`), so
+//! the TCP case exercises worker spawning, the control plane, framing,
+//! the feeder/pump data path, and results.json merging end to end.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use sprobench::util::json::{self, Json};
+
+fn tmp(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("sprobench-dist-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// Master YAML shared by both topologies: count-bound workload,
+/// keyby → event-time window → emit_aggregates at parallelism 2.
+/// `cluster` selects the topology; `disorder` optionally injects the
+/// out-of-order reorder/backdating model (same seed ⇒ same stream).
+fn config_yaml(name: &str, dump: &Path, cluster: &str, disorder: &str) -> String {
+    format!(
+        "benchmark:
+  name: {name}
+  mode: wall
+  duration: 20s
+  warmup: 0s
+workload:
+  rate: 100K
+  events: 40000
+  sensors: 64
+{disorder}engine:
+  parallelism: 2
+  use_hlo: false
+  batch_size: 256
+  pipeline:
+    ops:
+      - keyby:
+          modulo: 16
+      - window:
+          agg: mean
+          window: 1s
+          slide: 500ms
+          time: event
+          allowed_lateness: 5s
+          late_policy: merge_if_open
+          watermark: 500ms
+      - emit: aggregates
+metrics:
+  egest_dump: {dump}
+{cluster}",
+        dump = dump.display()
+    )
+}
+
+const TCP_CLUSTER: &str = "cluster:
+  transport: tcp
+";
+
+const TCP_CLUSTER_EXTERNAL_GEN: &str = "cluster:
+  transport: tcp
+  generators: 1
+";
+
+const DISORDER: &str = "  disorder:
+    late_fraction: 0.25
+    lateness: 100ms
+    shuffle_window: 64
+";
+
+/// Run `sprobench run --config <cfg> --out <out>` through the real
+/// binary; panics with the child's output on failure.
+fn run_bin(cfg: &Path, out: &Path) {
+    let output = Command::new(env!("CARGO_BIN_EXE_sprobench"))
+        .args(["run", "--config"])
+        .arg(cfg)
+        .arg("--out")
+        .arg(out)
+        .output()
+        .expect("launch sprobench binary");
+    assert!(
+        output.status.success(),
+        "run failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        output.status,
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr),
+    );
+}
+
+/// Parse `results.json` under the single run directory for `name`.
+fn results_json(out: &Path, name: &str) -> Json {
+    let dir = std::fs::read_dir(out)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(name))
+        })
+        .unwrap_or_else(|| panic!("no run dir for {name} under {}", out.display()));
+    let text = std::fs::read_to_string(dir.join("results.json")).unwrap();
+    json::parse(&text).unwrap()
+}
+
+fn int(results: &Json, path: &[&str]) -> i64 {
+    results
+        .path(path)
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("{path:?} missing in {results:?}"))
+}
+
+/// Execute the local and TCP topologies of one spec and return
+/// `(local dump bytes, tcp dump bytes, tcp results.json)`.
+fn run_pair(tag: &str, cluster: &str, disorder: &str) -> (Vec<u8>, Vec<u8>, Json) {
+    let base = tmp(tag);
+    let mut dumps = Vec::new();
+    for (name, cluster_block) in [("eqv-local", ""), ("eqv-tcp", cluster)] {
+        let dump = base.join(format!("{name}.dump"));
+        let cfg = base.join(format!("{name}.yaml"));
+        std::fs::write(&cfg, config_yaml(name, &dump, cluster_block, disorder)).unwrap();
+        run_bin(&cfg, &base.join(format!("{name}-out")));
+        dumps.push(std::fs::read(&dump).unwrap_or_else(|e| {
+            panic!("{name}: egest dump missing at {}: {e}", dump.display())
+        }));
+    }
+    let results = results_json(&base.join("eqv-tcp-out"), "eqv-tcp");
+    let tcp = dumps.pop().unwrap();
+    let local = dumps.pop().unwrap();
+    let _ = std::fs::remove_dir_all(&base);
+    (local, tcp, results)
+}
+
+/// The merged distributed results.json must carry the wire counters and
+/// conserve the count-bound budget exactly.
+fn assert_distributed_results(results: &Json, events: i64) {
+    assert_eq!(int(results, &["events", "generated"]), events, "count-bound budget");
+    assert_eq!(
+        int(results, &["events", "processed"]),
+        int(results, &["events", "generated"]),
+        "engine must drain everything the broker shipped"
+    );
+    assert!(int(results, &["events", "emitted"]) > 0, "aggregates must flow");
+    assert!(int(results, &["transport", "records"]) >= events, "every record crossed the wire");
+    assert!(int(results, &["transport", "frames"]) > 0);
+    assert!(int(results, &["transport", "bytes"]) > 0);
+    assert_eq!(int(results, &["parallelism"]), 2);
+}
+
+#[test]
+fn tcp_loopback_matches_in_process_aggregates_byte_for_byte() {
+    // The canonical 3-process layout: driver + broker (colocated fleet)
+    // + engine over 127.0.0.1.
+    let (local, tcp, results) = run_pair("plain", TCP_CLUSTER, "");
+    assert!(!local.is_empty(), "in-process run must dump aggregates");
+    assert_eq!(
+        local, tcp,
+        "multi-process TCP aggregates must be byte-identical to in-process"
+    );
+    assert_distributed_results(&results, 40_000);
+}
+
+#[test]
+fn disordered_event_time_run_stays_byte_identical_over_tcp() {
+    // Same equivalence under the out-of-order workload model: the
+    // disorder stream is seeded, so both topologies see the same
+    // reordered/backdated events, and the event-time window flushes
+    // every pane at finish regardless of arrival interleaving.
+    let (local, tcp, results) = run_pair("disorder", TCP_CLUSTER, DISORDER);
+    assert!(!local.is_empty());
+    assert_eq!(
+        local, tcp,
+        "disordered event-time aggregates must survive the wire byte for byte"
+    );
+    assert_distributed_results(&results, 40_000);
+}
+
+#[test]
+fn external_generator_worker_reproduces_the_colocated_stream() {
+    // 4-process layout: a dedicated generator worker stages and ships
+    // the stream to the broker instead of a colocated fleet.  A single
+    // external generator keeps the configured seed and full rate/count
+    // share, so it emits the exact stream the in-process fleet does.
+    let (local, tcp, results) = run_pair("extgen", TCP_CLUSTER_EXTERNAL_GEN, "");
+    assert!(!local.is_empty());
+    assert_eq!(
+        local, tcp,
+        "an external generator worker must reproduce the colocated stream"
+    );
+    assert_distributed_results(&results, 40_000);
+}

@@ -189,3 +189,179 @@ fn restart_budget_exhaustion_fails_the_run_loudly() {
         "error must name the exhausted budget: {err}"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Distributed worker death: a vanished or frozen peer must surface as a
+// detected fault within a bounded deadline — never a hang — and the
+// connect/accept paths must fail loudly when a peer never shows up.
+// ---------------------------------------------------------------------------
+
+mod worker_death {
+    use sprobench::broker::RecordBatchBuilder;
+    use sprobench::config::{FaultKind, FaultSpec};
+    use sprobench::engine::{FaultOutcome, TaskMonitor};
+    use sprobench::net::frame::{encode_record_batch, kind, role, write_frame};
+    use sprobench::net::{
+        accept_with_timeout, connect_with_retry, FeedBatch, TcpOptions, TcpTransport, Transport,
+    };
+    use sprobench::util::clock;
+    use std::net::TcpListener;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// Serve one BATCH frame on an accepted connection, then run `after`
+    /// with the raw stream (the "peer process" body).
+    fn one_shot_server(
+        listener: TcpListener,
+        after: impl FnOnce(std::net::TcpStream) + Send + 'static,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let (mut stream, peer) =
+                accept_with_timeout(&listener, role::BROKER, 5_000_000).unwrap();
+            assert_eq!(peer, role::ENGINE);
+            let mut b = RecordBatchBuilder::new();
+            b.push(7, b"payload", 1_000);
+            let mut payload = Vec::new();
+            encode_record_batch(0, &b.build(), &mut payload);
+            write_frame(&mut stream, kind::BATCH, 0, &payload).unwrap();
+            after(stream);
+        })
+    }
+
+    /// Dial `addr` as the engine with a heartbeat monitor attached.
+    fn engine_link(
+        addr: &str,
+        monitor: &Arc<TaskMonitor>,
+    ) -> Arc<TcpTransport<FeedBatch>> {
+        let (stream, peer) = connect_with_retry(addr, role::ENGINE, 5_000_000).unwrap();
+        assert_eq!(peer, role::BROKER);
+        TcpTransport::<FeedBatch>::spawn(
+            stream,
+            1,
+            1,
+            TcpOptions {
+                monitor: Some((monitor.clone(), 0, clock::wall())),
+                ..TcpOptions::default()
+            },
+        )
+        .unwrap()
+    }
+
+    fn recv_one(link: &Arc<TcpTransport<FeedBatch>>) -> FeedBatch {
+        let mut buf = Vec::new();
+        let t0 = Instant::now();
+        while link.drain(0, &mut buf, 16) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "feed batch never arrived");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        buf.remove(0)
+    }
+
+    #[test]
+    fn peer_death_is_detected_as_a_link_error_within_the_deadline() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // The "broker" serves one batch then dies abruptly: the socket
+        // drops with no FINISH and no EOF frame.
+        let server = one_shot_server(listener, |stream| {
+            std::thread::sleep(Duration::from_millis(100));
+            drop(stream);
+        });
+
+        let monitor = Arc::new(TaskMonitor::new(1));
+        let link = engine_link(&addr, &monitor);
+        let got = recv_one(&link);
+        assert_eq!(got.batch.len(), 1);
+        assert!(monitor.last_beat(0) > 0, "received frames must beat the monitor");
+
+        // Bounded detection: the reader surfaces the dead peer as a link
+        // error well within the supervision deadline.
+        let detect_start = Instant::now();
+        let err = loop {
+            if let Some(e) = link.error() {
+                break e;
+            }
+            assert!(
+                detect_start.elapsed() < Duration::from_secs(10),
+                "peer death never detected"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        assert!(err.contains("disconnect"), "unreadable death report: {err}");
+        assert!(!link.upstream_done(0), "abrupt death must not read as clean EOF");
+
+        // The engine worker wraps exactly this signal in a detected,
+        // unhealed PeerDisconnect fault for results.json.
+        let clk = clock::wall();
+        let now = clk.now_micros();
+        let mut outcome = FaultOutcome::new(FaultSpec {
+            kind: FaultKind::PeerDisconnect {
+                worker: role::BROKER as u32,
+            },
+            at_micros: 0,
+            duration_micros: 0,
+            seed: 0,
+        });
+        outcome.injected_at = Some(now);
+        outcome.detected_at = Some(now);
+        assert_eq!(outcome.spec.kind.name(), "peer_disconnect");
+        assert!(outcome.healed_at.is_none());
+        link.finish_sending();
+        link.join();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn frozen_peer_goes_stale_on_the_heartbeat_monitor() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // The "broker" freezes: socket stays open, but nothing — not
+        // even a ping — is sent after the first batch.
+        let (frozen_tx, frozen_rx) = std::sync::mpsc::channel::<()>();
+        let server = one_shot_server(listener, move |stream| {
+            // Hold the socket open until the client observed staleness.
+            let _ = frozen_rx.recv_timeout(Duration::from_secs(10));
+            drop(stream);
+        });
+
+        let monitor = Arc::new(TaskMonitor::new(1));
+        let link = engine_link(&addr, &monitor);
+        recv_one(&link);
+
+        let clk = clock::wall();
+        let t0 = Instant::now();
+        loop {
+            if monitor.stale_task(clk.now_micros(), 300_000).is_some() {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "frozen peer never went stale"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // No link error: the socket is healthy, only the peer is wedged.
+        // Staleness is the only signal — exactly why the engine worker
+        // watches both.
+        frozen_tx.send(()).ok();
+        link.finish_sending();
+        link.join();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn connect_and_accept_fail_loudly_within_their_deadlines() {
+        // No listener: the dial retries, then reports the last error.
+        let t0 = Instant::now();
+        let err = connect_with_retry("127.0.0.1:9", role::ENGINE, 400_000).unwrap_err();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(25), "dial not bounded");
+
+        // No peer: the accept deadline trips instead of blocking forever.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let t1 = Instant::now();
+        let err = accept_with_timeout(&listener, role::DRIVER, 300_000).unwrap_err();
+        assert!(!err.is_empty());
+        assert!(t1.elapsed() < Duration::from_secs(25), "accept not bounded");
+    }
+}
