@@ -1,0 +1,272 @@
+//! Pass `grammar` — config-grammar ⇄ documentation sync.
+//!
+//! Direction A (undocumented knob): every key the spec/YAML parsers
+//! accept — section names fed to `section(…, "k")`, scalar keys fed to
+//! the `get_*` helpers, and op-parameter `.get("k")` lookups in
+//! [`PARSER_FILES`] — must be mentioned, word-bounded, in `README.md`
+//! or `docs/ARCHITECTURE.md`.  A knob nobody can discover is a knob
+//! nobody benchmarks with.
+//!
+//! Direction B (ghost documentation): every mapping key inside a
+//! fenced ```yaml block of those docs must be part of the parser's
+//! vocabulary (any identifier-like string literal in the parser files,
+//! plus [`EXAMPLE_KEYS`] for illustrative user-defined names) —
+//! otherwise the documented example silently does nothing when pasted.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::{Finding, SourceFile, Workspace};
+
+const PASS: &str = "grammar";
+
+/// Files implementing the config surface.
+const PARSER_FILES: &[&str] = &["rust/src/config/schema.rs", "rust/src/config/mod.rs"];
+
+/// Getter call patterns whose first string-literal argument is an
+/// accepted config key.
+const KEY_GETTERS: &[&str] = &[
+    "section(",
+    "get_str(",
+    "get_u64(",
+    "get_u32(",
+    "get_f64(",
+    "get_bool(",
+    "get_bytes(",
+    "get_duration(",
+    ".get(",
+];
+
+/// Names that appear in documented examples as *user-chosen*
+/// identifiers (custom operator names registered via
+/// `OperatorRegistry`, experiment labels) rather than grammar keys.
+const EXAMPLE_KEYS: &[&str] = &["alert_filter", "threshold_c"];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn ident_like(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes().all(|b| is_ident(b) || b == b'.')
+        && !s.as_bytes()[0].is_ascii_digit()
+}
+
+/// Accepted keys: first string literal after each getter call.
+fn accepted_keys(file: &SourceFile) -> Vec<(String, usize)> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let mut keys = Vec::new();
+    for &getter in KEY_GETTERS {
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(getter) {
+            let at = from + pos;
+            from = at + 1;
+            // Word boundary on the left for non-method patterns, so
+            // `subsection(` does not match `section(`.
+            if !getter.starts_with('.') && at > 0 && is_ident(bytes[at - 1]) {
+                continue;
+            }
+            if file.in_test(at) {
+                continue;
+            }
+            // The key is the first string literal before the call's
+            // closing paren at depth 0; in every getter signature the
+            // key precedes any other string argument.
+            let open = at + getter.len() - 1;
+            let mut depth = 0usize;
+            let mut close = open;
+            while close < bytes.len() {
+                match bytes[close] {
+                    b'(' => depth += 1,
+                    b')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                close += 1;
+            }
+            if let Some(lit) = file.scan.string_at_or_after(open) {
+                if lit.offset < close && ident_like(&lit.value) {
+                    keys.push((lit.value.clone(), lit.line));
+                }
+            }
+        }
+    }
+    keys
+}
+
+/// Every identifier-like string literal of a parser file (non-test):
+/// the vocabulary for direction B.  Broader than [`accepted_keys`] on
+/// purpose — op names matched by `match` arms, enum values
+/// (`merge_if_open`, `tcp`), and unit suffixes all live in literals.
+fn vocabulary(file: &SourceFile) -> BTreeSet<String> {
+    file.scan
+        .strings
+        .iter()
+        .filter(|lit| !file.in_test(lit.offset))
+        .filter(|lit| ident_like(&lit.value))
+        .map(|lit| lit.value.clone())
+        .collect()
+}
+
+/// Mapping keys in fenced ```yaml blocks: `key:` or `- key:` lines,
+/// comments stripped.
+fn doc_yaml_keys(text: &str) -> Vec<(String, usize)> {
+    let mut keys = Vec::new();
+    let mut in_yaml = false;
+    for (idx, line) in text.lines().enumerate() {
+        let trimmed = line.trim_start();
+        if let Some(info) = trimmed.strip_prefix("```") {
+            in_yaml = !in_yaml && info.trim() == "yaml";
+            continue;
+        }
+        if !in_yaml {
+            continue;
+        }
+        let no_comment = match line.find('#') {
+            Some(at) => &line[..at],
+            None => line,
+        };
+        let mut item = no_comment.trim_start();
+        while let Some(rest) = item.strip_prefix("- ") {
+            item = rest.trim_start();
+        }
+        let Some((key, _)) = item.split_once(':') else {
+            continue;
+        };
+        let key = key.trim();
+        if ident_like(key) {
+            keys.push((key.to_string(), idx + 1));
+        }
+    }
+    keys
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut accepted: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    let mut vocab: BTreeSet<String> = EXAMPLE_KEYS.iter().map(|s| s.to_string()).collect();
+    for file in &ws.src {
+        if !PARSER_FILES.contains(&file.rel.as_str()) {
+            continue;
+        }
+        for (key, line) in accepted_keys(file) {
+            accepted.entry(key).or_insert((file.rel.clone(), line));
+        }
+        vocab.extend(vocabulary(file));
+    }
+
+    for (key, (file, line)) in &accepted {
+        if !ws.documented(key) {
+            findings.push(Finding::error(
+                PASS,
+                file,
+                *line,
+                format!(
+                    "config key \"{key}\" is accepted by the parser but never \
+                     mentioned in README.md or docs/ARCHITECTURE.md — document \
+                     the knob"
+                ),
+            ));
+        }
+    }
+
+    for (doc, text) in &ws.docs {
+        for (key, line) in doc_yaml_keys(text) {
+            // Dotted override keys (`engine.parallelism: 4`) are valid
+            // when every segment is vocabulary.
+            let ok = vocab.contains(&key)
+                || (key.contains('.') && key.split('.').all(|seg| vocab.contains(seg)));
+            if !ok {
+                findings.push(Finding::error(
+                    PASS,
+                    doc,
+                    line,
+                    format!(
+                        "documented config key \"{key}\" is not part of the \
+                         parser vocabulary ({}) — a pasted example would \
+                         silently ignore it",
+                        PARSER_FILES.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+
+    findings.push(Finding::note(
+        PASS,
+        "rust/src/config",
+        0,
+        format!(
+            "{} accepted key(s), {} vocabulary literal(s)",
+            accepted.len(),
+            vocab.len()
+        ),
+    ));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{find_test_ranges, lexer};
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let scan = lexer::scan(src);
+        let test_ranges = find_test_ranges(&scan.code);
+        SourceFile {
+            rel: rel.to_string(),
+            scan,
+            test_ranges,
+        }
+    }
+
+    #[test]
+    fn getter_keys_extracted() {
+        let f = file(
+            "rust/src/config/schema.rs",
+            "fn parse(root: &Json) { let sec = section(root, \"workload\"); \
+             let r = get_u64(&sec, \"rate\", 1_000); \
+             let p = m.get(\"modulo\").and_then(J::as_i64); }",
+        );
+        let keys: Vec<String> = accepted_keys(&f).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "workload".to_string(),
+                "rate".to_string(),
+                "modulo".to_string()
+            ]
+        );
+    }
+
+    #[test]
+    fn default_string_is_not_the_key() {
+        let f = file(
+            "rust/src/config/schema.rs",
+            "fn parse(sec: &Json) { let s = get_str(sec, \"mode\", \"wall\"); }",
+        );
+        let keys: Vec<String> = accepted_keys(&f).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["mode".to_string()]);
+    }
+
+    #[test]
+    fn yaml_doc_keys() {
+        let text = "```yaml\nbenchmark:\n  name: x  # comment\n  rate: 1M\n\
+                    engine.parallelism: 4\n  - emit: aggregates\n```\nprose key: no\n";
+        let keys: Vec<String> = doc_yaml_keys(text).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "benchmark".to_string(),
+                "name".to_string(),
+                "rate".to_string(),
+                "engine.parallelism".to_string(),
+                "emit".to_string()
+            ]
+        );
+    }
+}

@@ -1,0 +1,350 @@
+//! Comment/string-aware Rust source scanner shared by every analysis
+//! pass.
+//!
+//! [`scan`] produces a *masked* copy of the source: comment bodies and
+//! string/char-literal contents are replaced by spaces while newlines
+//! are preserved, so byte offsets and line numbers in the mask map 1:1
+//! onto the original file.  Alongside the mask it returns the table of
+//! string literals that were masked out.  Passes pattern-match on the
+//! mask (so `// TODO: remove this unwrap()` or `"panic!"` cannot spoof
+//! a finding) and consult the literal table when the *value* of a
+//! string matters (results.json keys, config keys).
+//!
+//! The scanner understands line comments, nested block comments, plain
+//! and raw (`r"…"`, `r#"…"#`) string literals, byte strings, char
+//! literals, and tells `'a'` (char) apart from `'a` (lifetime).  It is
+//! a lexer, not a parser: it never needs to understand expressions,
+//! only where code stops and text begins.
+
+/// One string literal lifted out of the source.
+#[derive(Clone, Debug)]
+pub struct StrLit {
+    /// The literal's content, exactly as written (escapes not
+    /// processed; schema/config keys never contain escapes).
+    pub value: String,
+    /// Byte offset of the opening quote in the original source (and in
+    /// the mask — offsets are identical by construction).
+    pub offset: usize,
+    /// 1-based line of the opening quote.
+    pub line: usize,
+}
+
+/// The result of scanning one source file.
+#[derive(Debug)]
+pub struct Scan {
+    /// The masked source: same length as the input, comments and
+    /// literal contents spaced out, quotes and newlines kept.
+    pub code: String,
+    /// String literals in source order.
+    pub strings: Vec<StrLit>,
+    line_starts: Vec<usize>,
+}
+
+impl Scan {
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// The first string literal whose opening quote sits at or after
+    /// `offset` — used to read the key argument of a call found in the
+    /// mask (e.g. the literal right after `.set(`).
+    pub fn string_at_or_after(&self, offset: usize) -> Option<&StrLit> {
+        let i = match self.strings.binary_search_by(|s| s.offset.cmp(&offset)) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        self.strings.get(i)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Length in bytes of the UTF-8 sequence starting at `b[i]`.
+fn utf8_len(b: &[u8], i: usize) -> usize {
+    let lead = b[i];
+    let len = if lead < 0x80 {
+        1
+    } else if lead >= 0xF0 {
+        4
+    } else if lead >= 0xE0 {
+        3
+    } else {
+        2
+    };
+    len.min(b.len() - i)
+}
+
+/// Scan `src`, producing the mask and the string-literal table.
+pub fn scan(src: &str) -> Scan {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut strings = Vec::new();
+
+    // Space out [from, to) in the mask, preserving newlines (and
+    // carriage returns, so CRLF sources keep their line map).
+    let mask = |out: &mut [u8], from: usize, to: usize| {
+        for slot in out.iter_mut().take(to.min(n)).skip(from) {
+            if *slot != b'\n' && *slot != b'\r' {
+                *slot = b' ';
+            }
+        }
+    };
+
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        // Line comment (also covers `///` and `//!` doc comments).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            mask(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if j + 1 < n && b[j] == b'/' && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if j + 1 < n && b[j] == b'*' && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            mask(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // Raw (and raw byte) string: r"…", r#"…"#, br"…", …  Guard on
+        // the previous byte so an identifier ending in `r`/`br` never
+        // starts one.
+        if (c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r'))
+            && (i == 0 || !is_ident(b[i - 1]))
+        {
+            let after_r = if c == b'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            let mut j = after_r;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                let content_start = j + 1;
+                let mut k = content_start;
+                let end;
+                loop {
+                    if k >= n {
+                        end = n;
+                        break;
+                    }
+                    if b[k] == b'"'
+                        && k + 1 + hashes <= n
+                        && b[k + 1..k + 1 + hashes].iter().all(|&h| h == b'#')
+                    {
+                        end = k;
+                        break;
+                    }
+                    k += 1;
+                }
+                strings.push((content_start - 1, src[content_start..end].to_string()));
+                mask(&mut out, content_start, end);
+                i = (end + 1 + hashes).min(n);
+                continue;
+            }
+            // `r`/`br` not followed by a raw string: plain identifier.
+            i += 1;
+            continue;
+        }
+        // Plain (and byte) string literal.
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"' && (i == 0 || !is_ident(b[i - 1])))
+        {
+            let open = if c == b'b' { i + 1 } else { i };
+            let mut j = open + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let end = j.min(n);
+            strings.push((open, src[open + 1..end].to_string()));
+            mask(&mut out, open + 1, end);
+            i = (end + 1).min(n);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if i + 1 >= n {
+                i += 1;
+                continue;
+            }
+            if b[i + 1] == b'\\' {
+                // Escaped char literal: the byte after the backslash is
+                // the escape body (consumed unconditionally, so `'\\'`
+                // and `'\''` close where they should), then any longer
+                // escape tail (`\u{…}`, `\x41`) runs to the quote.
+                let mut j = i + 2;
+                if j < n {
+                    j += utf8_len(b, j);
+                }
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                mask(&mut out, i + 1, j);
+                i = (j + 1).min(n);
+                continue;
+            }
+            let ch_len = utf8_len(b, i + 1);
+            if i + 1 + ch_len < n && b[i + 1 + ch_len] == b'\'' {
+                // Single-char literal like 'a' or 'é'.
+                mask(&mut out, i + 1, i + 1 + ch_len);
+                i = i + 2 + ch_len;
+            } else {
+                // Lifetime ('a, 'static) — the tick stays, the
+                // identifier after it is ordinary code.
+                i += 1;
+            }
+            continue;
+        }
+        i += 1;
+    }
+
+    let mut line_starts = vec![0usize];
+    for (pos, &byte) in b.iter().enumerate() {
+        if byte == b'\n' {
+            line_starts.push(pos + 1);
+        }
+    }
+
+    let line_of = |offset: usize| match line_starts.binary_search(&offset) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    };
+    let strings = strings
+        .into_iter()
+        .map(|(offset, value)| StrLit {
+            line: line_of(offset),
+            value,
+            offset,
+        })
+        .collect();
+    Scan {
+        code: String::from_utf8_lossy(&out).into_owned(),
+        strings,
+        line_starts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_masked() {
+        let s = scan("let x = 1; // call unwrap() here\nx.unwrap();\n");
+        assert!(!s.code[..s.code.find('\n').unwrap()].contains("unwrap"));
+        assert!(s.code.contains("x.unwrap();"));
+        assert_eq!(s.line_of(s.code.find("x.unwrap").unwrap()), 2);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scan("a /* outer /* inner */ still comment */ b");
+        assert!(s.code.starts_with('a'));
+        assert!(s.code.ends_with('b'));
+        assert!(!s.code.contains("comment"));
+    }
+
+    #[test]
+    fn string_contents_masked_but_recorded() {
+        let s = scan(r#"j.set("panic!", v); x.expect("boom");"#);
+        assert!(!s.code.contains("panic!"));
+        assert!(!s.code.contains("boom"));
+        assert_eq!(s.strings.len(), 2);
+        assert_eq!(s.strings[0].value, "panic!");
+        assert_eq!(s.strings[1].value, "boom");
+        // The mask keeps the quotes and call shape.
+        assert!(s.code.contains(".set("));
+        assert!(s.code.contains(".expect(\""));
+    }
+
+    #[test]
+    fn escaped_quotes_in_strings() {
+        let s = scan(r#"let a = "he said \"hi\""; let b = 2;"#);
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0].value, r#"he said \"hi\""#);
+        assert!(s.code.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn raw_strings() {
+        let s = scan(r##"let a = r#"raw "quoted" panic!"#; let b = r"x"; done();"##);
+        assert_eq!(s.strings.len(), 2);
+        assert_eq!(s.strings[0].value, r#"raw "quoted" panic!"#);
+        assert_eq!(s.strings[1].value, "x");
+        assert!(!s.code.contains("panic!"));
+        assert!(s.code.contains("done();"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let s = scan("fn f<'a>(x: &'a str) { let c = 'y'; let nl = '\\n'; if c == 'z' {} }");
+        assert!(s.code.contains("<'a>"));
+        assert!(s.code.contains("&'a str"));
+        assert!(!s.code.contains('y'));
+        assert!(!s.code.contains('z'));
+        assert!(s.strings.is_empty());
+    }
+
+    #[test]
+    fn escaped_backslash_and_quote_char_literals() {
+        // `'\\'` must close at its own quote, not swallow following
+        // code (this exact shape appears in this file).
+        let s = scan("if b[j] == b'\\\\' { x.unwrap(); } if c == '\\'' { y(); }");
+        assert!(s.code.contains(".unwrap()"));
+        assert!(s.code.contains("y();"));
+    }
+
+    #[test]
+    fn multibyte_char_literal() {
+        let s = scan("let c = 'é'; let l: &'static str = \"ok\";");
+        assert!(s.code.contains("'static"));
+        assert_eq!(s.strings.len(), 1);
+    }
+
+    #[test]
+    fn newlines_preserved_for_line_numbers() {
+        let src = "a\n/* two\nlines */\nb \"s\ntr\" c\n";
+        let s = scan(src);
+        assert_eq!(s.code.len(), src.len());
+        assert_eq!(
+            s.code.matches('\n').count(),
+            src.matches('\n').count(),
+        );
+        assert_eq!(s.line_of(s.code.find('b').unwrap()), 4);
+    }
+
+    #[test]
+    fn string_lookup_after_offset() {
+        let s = scan(r#"m.set("alpha", 1); m.set("beta", 2);"#);
+        let second_set = s.code.rfind(".set(").unwrap();
+        assert_eq!(s.string_at_or_after(second_set).unwrap().value, "beta");
+    }
+}

@@ -1,0 +1,633 @@
+//! Pass `locks` — static lock-order audit.
+//!
+//! Builds an acquisition graph over the concurrency-bearing files
+//! ([`SCOPE`]): nodes are lock classes (`Mutex` fields, named
+//! `<file>.<field>`, plus the `util::chan` internal queue lock as
+//! `chan.queue`), and an edge `A → B` is recorded whenever `B` is
+//! acquired while a guard of `A` is statically held.  Cycles in that
+//! graph are the classic deadlock recipe and fail the run, as does the
+//! sharper local hazard: a *blocking* channel op (`send`/`recv`) under
+//! a held `Mutex` guard — the parked thread keeps the lock, and
+//! whoever must wake it may need that lock (exactly the invariant "no
+//! sender ever parks while holding engine state" the exchange fabric
+//! relies on).
+//!
+//! Guard liveness is approximated lexically: a `let`-bound (or
+//! `match`/`for`-scrutinee) guard is held to the end of its enclosing
+//! block, an un-bound temporary only for its own statement, a chain
+//! that projects a value out of the guard
+//! (`….lock()….is_some()`) binds the value and not the guard, and
+//! `drop(guard)` releases early.  Condvar `wait(guard)` atomically
+//! releases, so it is deliberately not an acquisition.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::{Finding, SourceFile, Workspace};
+
+const PASS: &str = "locks";
+
+/// Files whose lock sites enter the graph.
+const SCOPE: &[&str] = &[
+    "rust/src/util/chan.rs",
+    "rust/src/engine/exchange.rs",
+    "rust/src/engine/supervisor.rs",
+    "rust/src/net/transport.rs",
+    "rust/src/coordinator/mod.rs",
+];
+
+/// Channel ops that can park the calling thread.
+const BLOCKING_OPS: &[&str] = &[".send(", ".recv(", ".recv_timeout("];
+/// Channel ops that take the queue lock but never park.
+const MOMENTARY_OPS: &[&str] = &[".try_send(", ".drain_into(", ".close("];
+
+/// The class every `util::chan` operation acquires.
+const CHAN_CLASS: &str = "chan.queue";
+
+struct Guard {
+    class: String,
+    var: Option<String>,
+    depth: usize,
+}
+
+#[derive(Default)]
+struct Graph {
+    /// edge → first provenance (file, line).
+    edges: BTreeMap<(String, String), (String, usize)>,
+    classes: BTreeSet<String>,
+    sites: usize,
+}
+
+impl Graph {
+    fn add_edge(&mut self, from: &str, to: &str, file: &str, line: usize) {
+        self.edges
+            .entry((from.to_string(), to.to_string()))
+            .or_insert((file.to_string(), line));
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Class key for a file: stem, or the parent directory for `mod.rs`.
+fn file_key(rel: &str) -> String {
+    let mut parts = rel.rsplit('/');
+    let stem = parts
+        .next()
+        .unwrap_or(rel)
+        .trim_end_matches(".rs")
+        .to_string();
+    if stem == "mod" {
+        parts.next().unwrap_or("mod").to_string()
+    } else {
+        stem
+    }
+}
+
+/// Last path segment of the receiver ending just before `dot_at`
+/// (e.g. `self.inner.queue` → `queue`).  Multi-line method chains
+/// (`shared\n.error\n.lock()`) are followed through the whitespace.
+fn receiver_field(code: &str, dot_at: usize) -> String {
+    let bytes = code.as_bytes();
+    let chain = |b: u8| is_ident(b) || b == b'.' || b == b':';
+    let mut start = dot_at;
+    while start > 0 {
+        let b = bytes[start - 1];
+        if chain(b) {
+            start -= 1;
+        } else if (b as char).is_whitespace() {
+            // Step over the whitespace run only if it splices two
+            // pieces of the same chain.
+            let mut k = start - 1;
+            while k > 0 && (bytes[k - 1] as char).is_whitespace() {
+                k -= 1;
+            }
+            if k > 0 && chain(bytes[k - 1]) {
+                start = k;
+            } else {
+                break;
+            }
+        } else {
+            break;
+        }
+    }
+    let path: String = code[start..dot_at]
+        .chars()
+        .filter(|c| !c.is_whitespace())
+        .collect();
+    let path = path.replace("::", ".");
+    path.rsplit('.')
+        .find(|s| !s.is_empty())
+        .unwrap_or("unknown")
+        .to_string()
+}
+
+/// If an adapter that still denotes the guard (`.unwrap()`,
+/// `.expect(…)`, `.unwrap_or_else(…)`) starts at `at`, return the
+/// offset just past it.
+fn adapter_end(code: &str, at: usize) -> Option<usize> {
+    let rest = &code[at..];
+    if rest.starts_with(".unwrap()") {
+        return Some(at + ".unwrap()".len());
+    }
+    for pat in [".expect(", ".unwrap_or_else("] {
+        if rest.starts_with(pat) {
+            let bytes = code.as_bytes();
+            let mut depth = 0usize;
+            let mut k = at + pat.len() - 1;
+            while k < bytes.len() {
+                match bytes[k] {
+                    b'(' => depth += 1,
+                    b')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Some(k + 1);
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            return Some(bytes.len());
+        }
+    }
+    None
+}
+
+/// Does the chain continue past the guard with a *projection*
+/// (`.is_some()`, `.len()`, indexing)?  Then the statement binds the
+/// projected value, the guard itself is a temporary that dies at the
+/// end of the statement — not a held lock.
+fn projects_past_guard(code: &str, mut i: usize) -> bool {
+    let bytes = code.as_bytes();
+    loop {
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        match adapter_end(code, i) {
+            Some(end) => i = end,
+            None => break,
+        }
+    }
+    i < bytes.len() && (bytes[i] == b'.' || bytes[i] == b'[')
+}
+
+/// Text from the start of the current statement to `at` (for binding
+/// detection): everything after the nearest `;`, `{` or `}`.
+fn statement_prefix(code: &str, at: usize) -> &str {
+    let bytes = code.as_bytes();
+    let mut start = at;
+    while start > 0 {
+        match bytes[start - 1] {
+            b';' | b'{' | b'}' => break,
+            _ => start -= 1,
+        }
+    }
+    &code[start..at]
+}
+
+/// If the statement binds its value (`let g = …`, `match …`, `for …`),
+/// return the bound variable name when it is a simple `let` ident.
+fn binding_of(prefix: &str) -> Option<Option<String>> {
+    let has = |kw: &str| {
+        let mut from = 0;
+        while let Some(pos) = prefix[from..].find(kw) {
+            let at = from + pos;
+            let left_ok = at == 0 || !is_ident(prefix.as_bytes()[at - 1]);
+            if left_ok {
+                return Some(at);
+            }
+            from = at + 1;
+        }
+        None
+    };
+    if let Some(at) = has("let ") {
+        let rest = prefix[at + 4..].trim_start();
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+        let name: String = rest
+            .bytes()
+            .take_while(|&b| is_ident(b))
+            .map(|b| b as char)
+            .collect();
+        let var = if name.is_empty() { None } else { Some(name) };
+        return Some(var);
+    }
+    if has("match ").is_some() || has("for ").is_some() || has("while ").is_some() {
+        return Some(None);
+    }
+    None
+}
+
+/// Walk one file, adding acquisition edges and emitting
+/// blocking-op-under-lock findings.
+fn walk(file: &SourceFile, graph: &mut Graph, findings: &mut Vec<Finding>) {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let key = file_key(&file.rel);
+    let mut held: Vec<Guard> = Vec::new();
+    let mut depth: usize = 0;
+    let mut i = 0;
+
+    while i < bytes.len() {
+        // Skip #[cfg(test)] regions wholesale.
+        if let Some(end) = file
+            .test_ranges
+            .iter()
+            .find(|&&(s, e)| i >= s && i < e)
+            .map(|&(_, e)| e)
+        {
+            i = end;
+            continue;
+        }
+        match bytes[i] {
+            b'{' => {
+                depth += 1;
+                i += 1;
+                continue;
+            }
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                held.retain(|g| g.depth <= depth);
+                i += 1;
+                continue;
+            }
+            _ => {}
+        }
+
+        // Early release: drop(guard).
+        if code[i..].starts_with("drop(") && (i == 0 || !is_ident(bytes[i - 1])) {
+            let arg: String = code[i + 5..]
+                .bytes()
+                .take_while(|&b| is_ident(b))
+                .map(|b| b as char)
+                .collect();
+            if let Some(pos) = held
+                .iter()
+                .rposition(|g| g.var.as_deref() == Some(arg.as_str()))
+            {
+                held.remove(pos);
+            }
+            i += 5;
+            continue;
+        }
+
+        // Mutex acquisition.
+        if code[i..].starts_with(".lock()") {
+            let class = format!("{key}.{}", receiver_field(code, i));
+            let line = file.scan.line_of(i);
+            graph.classes.insert(class.clone());
+            graph.sites += 1;
+            for g in &held {
+                graph.add_edge(&g.class, &class, &file.rel, line);
+            }
+            // A temporary (no binding) is released at end of statement
+            // and never pushed; likewise when the chain projects a
+            // value out of the guard (`….lock()….is_some()`).
+            if !projects_past_guard(code, i + ".lock()".len()) {
+                if let Some(var) = binding_of(statement_prefix(code, i)) {
+                    held.push(Guard { class, var, depth });
+                }
+            }
+            i += ".lock()".len();
+            continue;
+        }
+
+        // util::chan operations.
+        let mut matched = false;
+        for &op in BLOCKING_OPS.iter().chain(MOMENTARY_OPS) {
+            if code[i..].starts_with(op) {
+                let line = file.scan.line_of(i);
+                graph.classes.insert(CHAN_CLASS.to_string());
+                graph.sites += 1;
+                for g in &held {
+                    graph.add_edge(&g.class, CHAN_CLASS, &file.rel, line);
+                }
+                if BLOCKING_OPS.contains(&op) && !held.is_empty() {
+                    let holding: Vec<&str> =
+                        held.iter().map(|g| g.class.as_str()).collect();
+                    findings.push(Finding::error(
+                        PASS,
+                        &file.rel,
+                        line,
+                        format!(
+                            "blocking channel op `{}` while holding lock guard(s) \
+                             [{}] — a parked thread keeps the lock and risks \
+                             deadlock with whoever must wake it",
+                            op.trim_start_matches('.').trim_end_matches('('),
+                            holding.join(", ")
+                        ),
+                    ));
+                }
+                i += op.len();
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+
+        i += 1;
+    }
+}
+
+/// Strongly connected components of the acquisition graph (Tarjan).
+/// A deadlock-capable cycle exists iff some SCC has more than one node
+/// (self-edges are reported separately), so SCC detection is exact
+/// where naive cycle enumeration can miss cycles.
+fn sccs(adj: &BTreeMap<String, BTreeSet<String>>) -> Vec<Vec<String>> {
+    struct Tarjan<'a> {
+        adj: &'a BTreeMap<String, BTreeSet<String>>,
+        next_index: usize,
+        index: BTreeMap<String, usize>,
+        low: BTreeMap<String, usize>,
+        stack: Vec<String>,
+        on_stack: BTreeSet<String>,
+        out: Vec<Vec<String>>,
+    }
+    fn strong(t: &mut Tarjan<'_>, v: &str) {
+        t.index.insert(v.to_string(), t.next_index);
+        t.low.insert(v.to_string(), t.next_index);
+        t.next_index += 1;
+        t.stack.push(v.to_string());
+        t.on_stack.insert(v.to_string());
+        let nexts: Vec<String> = t
+            .adj
+            .get(v)
+            .map(|s| s.iter().cloned().collect())
+            .unwrap_or_default();
+        for w in nexts {
+            if !t.index.contains_key(&w) {
+                strong(t, &w);
+                let low_w = t.low.get(&w).copied().unwrap_or(usize::MAX);
+                let low_v = t.low.get(v).copied().unwrap_or(usize::MAX);
+                if low_w < low_v {
+                    t.low.insert(v.to_string(), low_w);
+                }
+            } else if t.on_stack.contains(&w) {
+                let idx_w = t.index.get(&w).copied().unwrap_or(usize::MAX);
+                let low_v = t.low.get(v).copied().unwrap_or(usize::MAX);
+                if idx_w < low_v {
+                    t.low.insert(v.to_string(), idx_w);
+                }
+            }
+        }
+        if t.low.get(v) == t.index.get(v) {
+            let mut comp = Vec::new();
+            while let Some(w) = t.stack.pop() {
+                t.on_stack.remove(&w);
+                let done = w == v;
+                comp.push(w);
+                if done {
+                    break;
+                }
+            }
+            comp.sort();
+            t.out.push(comp);
+        }
+    }
+
+    let mut nodes: BTreeSet<String> = adj.keys().cloned().collect();
+    for targets in adj.values() {
+        nodes.extend(targets.iter().cloned());
+    }
+    let mut t = Tarjan {
+        adj,
+        next_index: 0,
+        index: BTreeMap::new(),
+        low: BTreeMap::new(),
+        stack: Vec::new(),
+        on_stack: BTreeSet::new(),
+        out: Vec::new(),
+    };
+    for n in &nodes {
+        if !t.index.contains_key(n) {
+            strong(&mut t, n);
+        }
+    }
+    t.out.into_iter().filter(|c| c.len() > 1).collect()
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut graph = Graph::default();
+    let mut findings = Vec::new();
+    for file in &ws.src {
+        if SCOPE.contains(&file.rel.as_str()) {
+            walk(file, &mut graph, &mut findings);
+        }
+    }
+
+    let mut adj: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for (from, to) in graph.edges.keys() {
+        adj.entry(from.clone()).or_default().insert(to.clone());
+    }
+
+    for ((from, to), (file, line)) in &graph.edges {
+        if from == to {
+            findings.push(Finding::error(
+                PASS,
+                file,
+                *line,
+                format!(
+                    "re-entrant acquisition: lock class `{from}` acquired while \
+                     already held — std::sync::Mutex self-deadlocks"
+                ),
+            ));
+        }
+    }
+
+    for component in sccs(&adj) {
+        // Every edge internal to the component is part of some cycle:
+        // list them all with provenance.
+        let legs: Vec<String> = graph
+            .edges
+            .iter()
+            .filter(|((from, to), _)| component.contains(from) && component.contains(to))
+            .map(|((from, to), (f, l))| format!("{from} → {to} ({f}:{l})"))
+            .collect();
+        let (file, line) = graph
+            .edges
+            .iter()
+            .find(|((from, to), _)| component.contains(from) && component.contains(to))
+            .map(|(_, (f, l))| (f.clone(), *l))
+            .unwrap_or((String::new(), 0));
+        findings.push(Finding::error(
+            PASS,
+            &file,
+            line,
+            format!(
+                "lock-order cycle among [{}]: {} — two threads taking these locks \
+                 in opposite order deadlock",
+                component.join(", "),
+                legs.join(", ")
+            ),
+        ));
+    }
+
+    for ((from, to), (file, line)) in &graph.edges {
+        findings.push(Finding::note(
+            PASS,
+            file,
+            *line,
+            format!("acquisition edge: {from} → {to}"),
+        ));
+    }
+    findings.push(Finding::note(
+        PASS,
+        "rust/src",
+        0,
+        format!(
+            "{} lock class(es), {} acquisition site(s), {} edge(s) across {} scoped file(s)",
+            graph.classes.len(),
+            graph.sites,
+            graph.edges.len(),
+            SCOPE.len()
+        ),
+    ));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{find_test_ranges, lexer};
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let scan = lexer::scan(src);
+        let test_ranges = find_test_ranges(&scan.code);
+        SourceFile {
+            rel: rel.to_string(),
+            scan,
+            test_ranges,
+        }
+    }
+
+    fn run_on(files: &[(&str, &str)]) -> (Graph, Vec<Finding>) {
+        let mut graph = Graph::default();
+        let mut findings = Vec::new();
+        for (rel, src) in files {
+            walk(&file(rel, src), &mut graph, &mut findings);
+        }
+        (graph, findings)
+    }
+
+    #[test]
+    fn nested_acquisition_makes_an_edge() {
+        let (graph, _) = run_on(&[(
+            "rust/src/util/chan.rs",
+            "fn f(&self) { let g = self.a.lock().expect(\"p\"); \
+             self.b.lock().expect(\"p\").push(1); }",
+        )]);
+        assert!(graph
+            .edges
+            .contains_key(&("chan.a".to_string(), "chan.b".to_string())));
+    }
+
+    #[test]
+    fn temporary_guard_does_not_stay_held() {
+        let (graph, _) = run_on(&[(
+            "rust/src/util/chan.rs",
+            "fn f(&self) { self.a.lock().expect(\"p\").push(1); \
+             self.b.lock().expect(\"p\").push(2); }",
+        )]);
+        assert!(graph.edges.is_empty());
+    }
+
+    #[test]
+    fn drop_releases_guard() {
+        let (graph, _) = run_on(&[(
+            "rust/src/util/chan.rs",
+            "fn f(&self) { let st = self.a.lock().expect(\"p\"); drop(st); \
+             self.b.lock().expect(\"p\").push(1); }",
+        )]);
+        assert!(graph.edges.is_empty());
+    }
+
+    #[test]
+    fn guard_released_at_block_end() {
+        let (graph, _) = run_on(&[(
+            "rust/src/util/chan.rs",
+            "fn f(&self) { { let g = self.a.lock().expect(\"p\"); } \
+             self.b.lock().expect(\"p\").push(1); }",
+        )]);
+        assert!(graph.edges.is_empty());
+    }
+
+    #[test]
+    fn opposite_orders_cycle() {
+        let (graph, _findings) = run_on(&[(
+            "rust/src/net/transport.rs",
+            "fn f(&self) { let g = self.a.lock().expect(\"p\"); \
+             let h = self.b.lock().expect(\"p\"); }\n\
+             fn g(&self) { let g = self.b.lock().expect(\"p\"); \
+             let h = self.a.lock().expect(\"p\"); }",
+        )]);
+        let mut adj: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        for (from, to) in graph.edges.keys() {
+            adj.entry(from.clone()).or_default().insert(to.clone());
+        }
+        let components = sccs(&adj);
+        assert_eq!(components.len(), 1, "{components:?}");
+        assert_eq!(
+            components[0],
+            vec!["transport.a".to_string(), "transport.b".to_string()]
+        );
+    }
+
+    #[test]
+    fn blocking_send_under_lock_flagged() {
+        let (_, findings) = run_on(&[(
+            "rust/src/engine/exchange.rs",
+            "fn f(&self) { let g = self.state.lock().expect(\"p\"); \
+             self.tx.send(1); }",
+        )]);
+        assert!(findings
+            .iter()
+            .any(|f| f.message.contains("blocking channel op")));
+    }
+
+    #[test]
+    fn try_send_under_lock_is_edge_not_error() {
+        let (graph, findings) = run_on(&[(
+            "rust/src/engine/exchange.rs",
+            "fn f(&self) { let g = self.state.lock().expect(\"p\"); \
+             let _ = self.tx.try_send(1); }",
+        )]);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert!(graph
+            .edges
+            .contains_key(&("exchange.state".to_string(), CHAN_CLASS.to_string())));
+    }
+
+    #[test]
+    fn multiline_chain_names_the_class() {
+        let (graph, _) = run_on(&[(
+            "rust/src/net/transport.rs",
+            "fn f(&self) { let g = self.state.lock().expect(\"p\"); \
+             let h = shared\n        .error\n        .lock()\n        \
+             .unwrap_or_else(PoisonError::into_inner); }",
+        )]);
+        assert!(
+            graph.classes.contains("transport.error"),
+            "{:?}",
+            graph.classes
+        );
+        assert!(graph
+            .edges
+            .contains_key(&("transport.state".to_string(), "transport.error".to_string())));
+    }
+
+    #[test]
+    fn projected_value_is_not_a_held_guard() {
+        // `let x = m.lock()….is_some();` binds the bool — the guard is
+        // a temporary, so the later chan op runs lock-free.
+        let (graph, findings) = run_on(&[(
+            "rust/src/net/transport.rs",
+            "fn f(&self) { let failed = self.error.lock()\n        \
+             .unwrap_or_else(PoisonError::into_inner)\n        .is_some(); \
+             self.tx.send(1); }",
+        )]);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert!(graph.edges.is_empty(), "{:?}", graph.edges);
+    }
+}

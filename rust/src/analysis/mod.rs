@@ -1,0 +1,438 @@
+//! `sprobench analyze` — zero-dependency static analysis over the
+//! repository's own sources.
+//!
+//! Eight PRs of structural invariants (test registration, results.json
+//! schema sync, struct-literal exhaustiveness, lock ordering, panic
+//! density) were checked by hand-greps until this subsystem turned
+//! them into machine-checked passes.  Everything here is pure std: the
+//! scanner ([`lexer`]) masks comments and string contents so the
+//! passes can pattern-match source text without false positives, and
+//! each pass reads the tree through one shared [`Workspace`].
+//!
+//! Passes (`sprobench analyze --all`, see `docs/ARCHITECTURE.md`
+//! §Static analysis):
+//!
+//! | name      | invariant |
+//! |-----------|-----------|
+//! | `tests`   | every `rust/tests/*.rs` has a `[[test]]` target in `Cargo.toml` |
+//! | `panics`  | `unwrap()`/`expect()`/`panic!` density in non-test `rust/src/` never grows (ratchet vs [`panics`] baseline) |
+//! | `locks`   | the static `Mutex`/`util::chan` acquisition graph is cycle-free and no blocking channel op runs under a held guard |
+//! | `schema`  | results.json / BENCH_hotpath.json keys ⇄ README + ARCHITECTURE schema docs |
+//! | `structs` | report-bearing structs are constructed field-exhaustively (no `..` functional update) |
+//! | `grammar` | config keys accepted by the YAML/spec parsers ⇄ the documented grammar |
+//!
+//! Findings print human-readably, serialize to `analysis_report.json`,
+//! and any `error`-severity finding makes the run exit nonzero — the
+//! CI `analyze` job is the standing gate.
+
+pub mod grammar;
+pub mod lexer;
+pub mod locks;
+pub mod panics;
+pub mod schema;
+pub mod structs;
+pub mod tests_reg;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Severity of a [`Finding`].  Only `Error` findings fail the run;
+/// `Note` findings are inventory (construction-site enumerations,
+/// per-pass statistics) surfaced in verbose output and the JSON report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Note,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Note => write!(f, "note"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One analysis finding, anchored to `file:line` (line 0 means the
+/// finding is about the file or the tree as a whole).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub severity: Severity,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn error(pass: &'static str, file: &str, line: usize, message: String) -> Finding {
+        Finding {
+            pass,
+            severity: Severity::Error,
+            file: file.to_string(),
+            line,
+            message,
+        }
+    }
+
+    pub fn note(pass: &'static str, file: &str, line: usize, message: String) -> Finding {
+        Finding {
+            pass,
+            severity: Severity::Note,
+            file: file.to_string(),
+            line,
+            message,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("pass", Json::Str(self.pass.to_string()));
+        j.set("severity", Json::Str(self.severity.to_string()));
+        j.set("file", Json::Str(self.file.clone()));
+        j.set("line", Json::Int(self.line as i64));
+        j.set("message", Json::Str(self.message.clone()));
+        j
+    }
+}
+
+/// One scanned source file.
+pub struct SourceFile {
+    /// Path relative to the workspace root, forward slashes.
+    pub rel: String,
+    pub scan: lexer::Scan,
+    /// Byte ranges of `#[cfg(test)]`-gated items (the in-file unit-test
+    /// modules); passes that audit production code skip these.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    /// Is this byte offset inside a `#[cfg(test)]` region?
+    pub fn in_test(&self, offset: usize) -> bool {
+        self.test_ranges
+            .iter()
+            .any(|&(s, e)| offset >= s && offset < e)
+    }
+}
+
+/// The analyzed tree: sources, manifest, tests listing, and docs, each
+/// read once and shared by every pass.
+pub struct Workspace {
+    pub root: PathBuf,
+    /// `rust/src/**/*.rs`, sorted by relative path.
+    pub src: Vec<SourceFile>,
+    /// `rust/benches/*.rs`, sorted.
+    pub benches: Vec<SourceFile>,
+    /// Raw `Cargo.toml` text (empty if absent — fixture trees).
+    pub cargo_toml: String,
+    /// File stems of `rust/tests/*.rs`, sorted.
+    pub test_files: Vec<String>,
+    /// Documentation files checked by the sync passes:
+    /// `(relative path, raw text)`.
+    pub docs: Vec<(String, String)>,
+}
+
+impl Workspace {
+    /// Load a tree rooted at `root`.  Missing directories load as
+    /// empty sets so pass fixtures only need the files their pass
+    /// reads; a missing root is an error.
+    pub fn load(root: &Path) -> Result<Workspace, String> {
+        if !root.is_dir() {
+            return Err(format!("analysis root {} is not a directory", root.display()));
+        }
+        let mut src = Vec::new();
+        collect_sources(root, &root.join("rust").join("src"), &mut src)?;
+        let mut benches = Vec::new();
+        collect_sources(root, &root.join("rust").join("benches"), &mut benches)?;
+        src.sort_by(|a, b| a.rel.cmp(&b.rel));
+        benches.sort_by(|a, b| a.rel.cmp(&b.rel));
+
+        let cargo_toml = fs::read_to_string(root.join("Cargo.toml")).unwrap_or_default();
+
+        let mut test_files = Vec::new();
+        if let Ok(entries) = fs::read_dir(root.join("rust").join("tests")) {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if let Some(stem) = name.strip_suffix(".rs") {
+                    test_files.push(stem.to_string());
+                }
+            }
+        }
+        test_files.sort();
+
+        let mut docs = Vec::new();
+        for rel in ["README.md", "docs/ARCHITECTURE.md"] {
+            if let Ok(text) = fs::read_to_string(root.join(rel)) {
+                docs.push((rel.to_string(), text));
+            }
+        }
+
+        Ok(Workspace {
+            root: root.to_path_buf(),
+            src,
+            benches,
+            cargo_toml,
+            test_files,
+            docs,
+        })
+    }
+
+    /// Does `word` occur with word boundaries anywhere in the loaded
+    /// documentation?  This is the "is it documented" predicate shared
+    /// by the schema and grammar sync passes.
+    pub fn documented(&self, word: &str) -> bool {
+        self.docs.iter().any(|(_, text)| contains_word(text, word))
+    }
+}
+
+/// Word-boundary containment: `needle` occurs in `hay` not flanked by
+/// identifier characters (`_`, alphanumerics) — so `p50` does not
+/// count as documenting `p5`, nor `send_wait_us` as `wait_us`, while a
+/// dotted path like `data_plane.speedup` documents both segments.
+pub fn contains_word(hay: &str, needle: &str) -> bool {
+    if needle.is_empty() {
+        return false;
+    }
+    let hb = hay.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let left_ok = start == 0 || {
+            let c = hb[start - 1];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        let right_ok = end >= hb.len() || {
+            let c = hb[end];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        if left_ok && right_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn collect_sources(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> Result<(), String> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // absent dir: empty set (fixtures)
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_sources(root, &path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            let raw = fs::read_to_string(&path)
+                .map_err(|e| format!("read {}: {e}", path.display()))?;
+            let scan = lexer::scan(&raw);
+            let test_ranges = find_test_ranges(&scan.code);
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile {
+                rel,
+                scan,
+                test_ranges,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Byte ranges of items gated by `#[cfg(test)]` in masked code: from
+/// the attribute to the matching close brace of the item's block.  An
+/// attribute whose item has no block (hits `;` first) contributes no
+/// range.
+pub fn find_test_ranges(code: &str) -> Vec<(usize, usize)> {
+    const ATTR: &str = "#[cfg(test)]";
+    let mut ranges = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(ATTR) {
+        let attr_at = from + pos;
+        let mut i = attr_at + ATTR.len();
+        let bytes = code.as_bytes();
+        // Find the item's opening brace; a `;` first means no block.
+        let mut open = None;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => {
+                    open = Some(i);
+                    break;
+                }
+                b';' => break,
+                _ => i += 1,
+            }
+        }
+        if let Some(open) = open {
+            let mut depth = 0usize;
+            let mut j = open;
+            while j < bytes.len() {
+                match bytes[j] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            ranges.push((attr_at, (j + 1).min(bytes.len())));
+            from = (j + 1).min(code.len()).max(attr_at + 1);
+        } else {
+            from = attr_at + ATTR.len();
+        }
+    }
+    ranges
+}
+
+/// What [`run`] executes and where it writes.
+pub struct AnalyzeOptions {
+    pub root: PathBuf,
+    /// Pass names to run (subset of [`PASS_NAMES`]); empty means all.
+    pub passes: Vec<String>,
+    /// Regenerate the panic-path baseline instead of checking it.
+    pub bless: bool,
+}
+
+/// All pass names, in execution order.
+pub const PASS_NAMES: &[&str] = &["tests", "panics", "locks", "schema", "structs", "grammar"];
+
+/// The outcome of one analysis run.
+pub struct Report {
+    pub passes: Vec<String>,
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn error_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn note_count(&self) -> usize {
+        self.findings.len() - self.error_count()
+    }
+
+    /// The `analysis_report.json` document.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", Json::Str("sprobench.analysis/v1".to_string()));
+        j.set(
+            "passes",
+            Json::Arr(self.passes.iter().map(|p| Json::Str(p.clone())).collect()),
+        );
+        j.set(
+            "findings",
+            Json::Arr(self.findings.iter().map(|f| f.to_json()).collect()),
+        );
+        j.set("errors", Json::Int(self.error_count() as i64));
+        j.set("notes", Json::Int(self.note_count() as i64));
+        j
+    }
+
+    /// Human-readable rendering; notes included only when `verbose`.
+    pub fn render(&self, verbose: bool) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.severity == Severity::Note && !verbose {
+                continue;
+            }
+            let loc = if f.line > 0 {
+                format!("{}:{}", f.file, f.line)
+            } else {
+                f.file.clone()
+            };
+            out.push_str(&format!("{}: [{}] {}: {}\n", f.severity, f.pass, loc, f.message));
+        }
+        out.push_str(&format!(
+            "analyze: {} pass(es), {} error(s), {} note(s)\n",
+            self.passes.len(),
+            self.error_count(),
+            self.note_count()
+        ));
+        out
+    }
+}
+
+/// Run the selected passes over the tree at `opts.root`.
+pub fn run(opts: &AnalyzeOptions) -> Result<Report, String> {
+    let ws = Workspace::load(&opts.root)?;
+    let selected: Vec<String> = if opts.passes.is_empty() {
+        PASS_NAMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        for p in &opts.passes {
+            if !PASS_NAMES.contains(&p.as_str()) {
+                return Err(format!(
+                    "unknown analysis pass '{p}' (known: {})",
+                    PASS_NAMES.join(", ")
+                ));
+            }
+        }
+        opts.passes.clone()
+    };
+
+    let mut findings = Vec::new();
+    for pass in &selected {
+        match pass.as_str() {
+            "tests" => findings.extend(tests_reg::run(&ws)),
+            "panics" => findings.extend(panics::run(&ws, opts.bless)?),
+            "locks" => findings.extend(locks::run(&ws)),
+            "schema" => findings.extend(schema::run(&ws)),
+            "structs" => findings.extend(structs::run(&ws)),
+            "grammar" => findings.extend(grammar::run(&ws)),
+            _ => {}
+        }
+    }
+
+    Ok(Report {
+        passes: selected,
+        findings,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("the `p50` column", "p50"));
+        assert!(!contains_word("send_wait_us only", "wait_us"));
+        assert!(!contains_word("p50", "p5"));
+        assert!(contains_word("a key_skew: 0.3 here", "key_skew"));
+        assert!(contains_word("engine.parallelism", "parallelism"));
+        assert!(contains_word("engine.parallelism", "engine.parallelism"));
+    }
+
+    #[test]
+    fn test_ranges_cover_cfg_test_mod() {
+        let code = lexer::scan(
+            "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() { x.unwrap(); }\n}\nfn c() {}\n",
+        );
+        let ranges = find_test_ranges(&code.code);
+        assert_eq!(ranges.len(), 1);
+        let unwrap_at = code.code.find(".unwrap").unwrap();
+        assert!(ranges[0].0 < unwrap_at && unwrap_at < ranges[0].1);
+        let c_at = code.code.rfind("fn c").unwrap();
+        assert!(c_at >= ranges[0].1);
+    }
+
+    #[test]
+    fn cfg_test_on_use_item_has_no_range() {
+        let code = lexer::scan("#[cfg(test)]\nuse std::fmt;\nfn main() { body(); }\n");
+        assert!(find_test_ranges(&code.code).is_empty());
+    }
+}

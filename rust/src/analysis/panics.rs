@@ -1,0 +1,278 @@
+//! Pass `panics` — panic-path audit with a ratcheting baseline.
+//!
+//! Counts `.unwrap()` / `.expect(` / `panic!` / `unreachable!` /
+//! `todo!` / `unimplemented!` sites in non-test `rust/src/` code
+//! (masked source, so doc comments and strings never count) and
+//! compares per-file counts against the committed baseline
+//! (`rust/src/analysis/baseline.txt`).  New sites fail; counts below
+//! baseline also fail ("stale baseline") so the ratchet can only move
+//! down.  `--bless` rewrites the baseline from the current tree.
+//!
+//! Files under `net/` and `coordinator/`, and `engine/supervisor.rs`,
+//! are flagged as critical path: a panic there takes down a
+//! distributed run or the self-healing supervisor itself, so findings
+//! carry an elevated marker.
+
+use std::collections::BTreeMap;
+use std::fs;
+
+use crate::analysis::{Finding, SourceFile, Workspace};
+
+const PASS: &str = "panics";
+
+/// Baseline location, relative to the workspace root.
+pub const BASELINE_REL: &str = "rust/src/analysis/baseline.txt";
+
+/// Panic-class patterns matched in masked source.  The flag marks
+/// macro patterns that need a left identifier boundary (so a
+/// hypothetical `dont_panic!(` never counts).
+const PATTERNS: &[(&str, bool)] = &[
+    (".unwrap()", false),
+    (".expect(", false),
+    ("panic!(", true),
+    ("unreachable!(", true),
+    ("todo!(", true),
+    ("unimplemented!(", true),
+];
+
+/// Path prefixes (and exact files) where a panic kills a distributed
+/// run: elevated severity in messages.
+const CRITICAL: &[&str] = &[
+    "rust/src/net/",
+    "rust/src/coordinator/",
+    "rust/src/engine/supervisor.rs",
+];
+
+fn is_critical(rel: &str) -> bool {
+    CRITICAL
+        .iter()
+        .any(|c| if c.ends_with('/') { rel.starts_with(c) } else { rel == *c })
+}
+
+/// One panic-class site in non-test code.
+pub struct Site {
+    pub line: usize,
+    pub what: &'static str,
+}
+
+/// All panic-class sites of one file, test regions excluded.
+pub fn sites(file: &SourceFile) -> Vec<Site> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let mut found = Vec::new();
+    for &(pat, needs_boundary) in PATTERNS {
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(pat) {
+            let at = from + pos;
+            from = at + 1;
+            if needs_boundary && at > 0 {
+                let prev = bytes[at - 1];
+                if prev.is_ascii_alphanumeric() || prev == b'_' {
+                    continue;
+                }
+            }
+            if file.in_test(at) {
+                continue;
+            }
+            found.push(Site {
+                line: file.scan.line_of(at),
+                what: pat,
+            });
+        }
+    }
+    found.sort_by_key(|s| s.line);
+    found
+}
+
+/// Parse baseline text: `<count> <path>` per line, `#` comments.
+fn parse_baseline(text: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut map = BTreeMap::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((count, path)) = line.split_once(' ') else {
+            return Err(format!("baseline line {}: expected '<count> <path>'", idx + 1));
+        };
+        let count: usize = count
+            .parse()
+            .map_err(|_| format!("baseline line {}: bad count '{count}'", idx + 1))?;
+        map.insert(path.trim().to_string(), count);
+    }
+    Ok(map)
+}
+
+fn render_baseline(counts: &BTreeMap<String, usize>) -> String {
+    let mut out = String::from(
+        "# sprobench panic-path baseline: per-file count of .unwrap()/.expect(/\n\
+         # panic!/unreachable!/todo!/unimplemented! sites in non-test rust/src code.\n\
+         # The `panics` analysis pass fails on any count above (new panic path) or\n\
+         # below (stale entry) these numbers, so panic density can only shrink.\n\
+         # Regenerate with: sprobench analyze panics --bless\n",
+    );
+    for (path, count) in counts {
+        out.push_str(&format!("{count} {path}\n"));
+    }
+    out
+}
+
+pub fn run(ws: &Workspace, bless: bool) -> Result<Vec<Finding>, String> {
+    let mut actual: BTreeMap<String, Vec<Site>> = BTreeMap::new();
+    for file in &ws.src {
+        let s = sites(file);
+        if !s.is_empty() {
+            actual.insert(file.rel.clone(), s);
+        }
+    }
+    let total_sites: usize = actual.values().map(|v| v.len()).sum();
+
+    let baseline_path = ws.root.join(BASELINE_REL);
+    if bless {
+        let counts: BTreeMap<String, usize> = actual
+            .iter()
+            .map(|(path, s)| (path.clone(), s.len()))
+            .collect();
+        fs::write(&baseline_path, render_baseline(&counts))
+            .map_err(|e| format!("write {}: {e}", baseline_path.display()))?;
+        return Ok(vec![Finding::note(
+            PASS,
+            BASELINE_REL,
+            0,
+            format!(
+                "baseline blessed: {} file(s), {} panic site(s)",
+                counts.len(),
+                total_sites
+            ),
+        )]);
+    }
+
+    let baseline_text = fs::read_to_string(&baseline_path)
+        .map_err(|e| format!("read {} (run `analyze panics --bless` once to create it): {e}", baseline_path.display()))?;
+    let baseline = parse_baseline(&baseline_text)?;
+
+    let mut findings = Vec::new();
+    for (path, file_sites) in &actual {
+        let allowed = baseline.get(path).copied().unwrap_or(0);
+        let n = file_sites.len();
+        let crit = if is_critical(path) {
+            " [critical path: a panic here kills a distributed run]"
+        } else {
+            ""
+        };
+        if n > allowed {
+            let lines: Vec<String> = file_sites
+                .iter()
+                .map(|s| format!("{} ({})", s.line, s.what.trim_end_matches('(')))
+                .collect();
+            findings.push(Finding::error(
+                PASS,
+                path,
+                file_sites[0].line,
+                format!(
+                    "{n} panic site(s), baseline allows {allowed}{crit} — handle the \
+                     error or bless deliberately (`analyze panics --bless`); sites: {}",
+                    lines.join(", ")
+                ),
+            ));
+        } else if n < allowed {
+            findings.push(Finding::error(
+                PASS,
+                path,
+                0,
+                format!(
+                    "baseline is stale: allows {allowed} panic site(s) but only {n} \
+                     remain — re-bless to ratchet the budget down"
+                ),
+            ));
+        }
+    }
+    for (path, &allowed) in &baseline {
+        if allowed > 0 && !actual.contains_key(path) {
+            findings.push(Finding::error(
+                PASS,
+                path,
+                0,
+                format!(
+                    "baseline is stale: allows {allowed} panic site(s) in a file with \
+                     none (removed or cleaned) — re-bless to ratchet the budget down"
+                ),
+            ));
+        }
+    }
+
+    findings.push(Finding::note(
+        PASS,
+        BASELINE_REL,
+        0,
+        format!(
+            "{} panic site(s) across {} file(s), all within baseline",
+            total_sites,
+            actual.len()
+        ),
+    ));
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{find_test_ranges, lexer};
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let scan = lexer::scan(src);
+        let test_ranges = find_test_ranges(&scan.code);
+        SourceFile {
+            rel: rel.to_string(),
+            scan,
+            test_ranges,
+        }
+    }
+
+    #[test]
+    fn counts_non_test_sites_only() {
+        let f = file(
+            "rust/src/x.rs",
+            "fn a() { b().unwrap(); c().expect(\"x\"); panic!(\"y\"); }\n\
+             // commented .unwrap() does not count\n\
+             let s = \".unwrap()\";\n\
+             #[cfg(test)]\nmod tests { fn t() { z().unwrap(); } }\n",
+        );
+        let s = sites(&f);
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|s| s.line == 1));
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_a_panic_site() {
+        let f = file(
+            "rust/src/x.rs",
+            "fn a() { m.lock().unwrap_or_else(|p| p.into_inner()); opt.unwrap_or(0); }",
+        );
+        assert!(sites(&f).is_empty());
+    }
+
+    #[test]
+    fn macro_boundary() {
+        let f = file("rust/src/x.rs", "fn a() { my_panic!(1); panic!(\"x\"); }");
+        let s = sites(&f);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let mut counts = BTreeMap::new();
+        counts.insert("rust/src/a.rs".to_string(), 3);
+        counts.insert("rust/src/b.rs".to_string(), 1);
+        let parsed = parse_baseline(&render_baseline(&counts)).unwrap();
+        assert_eq!(parsed, counts);
+    }
+
+    #[test]
+    fn critical_paths() {
+        assert!(is_critical("rust/src/net/transport.rs"));
+        assert!(is_critical("rust/src/coordinator/mod.rs"));
+        assert!(is_critical("rust/src/engine/supervisor.rs"));
+        assert!(!is_critical("rust/src/engine/task.rs"));
+    }
+}

@@ -1,0 +1,279 @@
+//! Pass `schema` — results/bench schema ⇄ documentation sync.
+//!
+//! Direction 1 (undocumented emission): every string key the
+//! results.json emitters (`fn to_json` bodies in [`RESULT_EMITTERS`])
+//! and the hotpath bench writer put into a document must be mentioned,
+//! word-bounded, somewhere in `README.md` or `docs/ARCHITECTURE.md`.
+//! A new metric that never reaches the docs is how schema drift
+//! starts.
+//!
+//! Direction 2 (ghost documentation): every key inside a fenced
+//! ```json / ```jsonc schema block in those docs must be emitted by
+//! *some* `.set("…")` site in the tree — otherwise the docs describe
+//! fields that no code produces.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::{Finding, SourceFile, Workspace};
+
+const PASS: &str = "schema";
+
+/// Files whose `fn to_json` bodies emit results.json blocks the docs
+/// must describe.
+const RESULT_EMITTERS: &[&str] = &[
+    "rust/src/coordinator/mod.rs",
+    "rust/src/net/transport.rs",
+    "rust/src/engine/supervisor.rs",
+    "rust/src/pipelines/mod.rs",
+];
+
+/// The bench writer: every key it sets lands in BENCH_hotpath.json.
+const BENCH_EMITTER: &str = "rust/benches/hotpath_micro.rs";
+
+fn is_ident_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_')
+        && !s.as_bytes()[0].is_ascii_digit()
+}
+
+/// Literal keys of `.set("…", …)` calls inside `[from, to)` of the
+/// masked code, with the line of each.  Dynamic keys (`set(point
+/// .name(), …)`) are skipped — the mask has no quote right after the
+/// paren there.
+fn set_keys_in(file: &SourceFile, from: usize, to: usize) -> Vec<(String, usize)> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let mut keys = Vec::new();
+    let mut at = from;
+    while let Some(pos) = code[at..to.min(code.len())].find(".set(") {
+        let call = at + pos;
+        at = call + 5;
+        let mut q = call + 5;
+        while q < bytes.len() && (bytes[q] == b' ' || bytes[q] == b'\n') {
+            q += 1;
+        }
+        if q >= bytes.len() || bytes[q] != b'"' {
+            continue; // dynamic key expression
+        }
+        if let Some(lit) = file.scan.string_at_or_after(q) {
+            if lit.offset == q {
+                keys.push((lit.value.clone(), lit.line));
+            }
+        }
+    }
+    keys
+}
+
+/// Byte ranges of `fn to_json` bodies in masked code.
+fn to_json_bodies(file: &SourceFile) -> Vec<(usize, usize)> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let mut bodies = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("fn to_json") {
+        let at = from + pos;
+        from = at + 1;
+        let mut i = at;
+        while i < bytes.len() && bytes[i] != b'{' && bytes[i] != b';' {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'{' {
+            continue;
+        }
+        let open = i;
+        let mut depth = 0usize;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        bodies.push((open, (i + 1).min(bytes.len())));
+    }
+    bodies
+}
+
+/// Keys inside fenced ```json / ```jsonc blocks of a doc, with lines.
+fn doc_schema_keys(text: &str) -> Vec<(String, usize)> {
+    let mut keys = Vec::new();
+    let mut in_schema_block = false;
+    for (idx, line) in text.lines().enumerate() {
+        let trimmed = line.trim_start();
+        if let Some(info) = trimmed.strip_prefix("```") {
+            let info = info.trim();
+            in_schema_block = !in_schema_block && (info == "json" || info == "jsonc");
+            continue;
+        }
+        if !in_schema_block {
+            continue;
+        }
+        // `"key":` occurrences, quote-aware: a colon must directly
+        // follow the closing quote (so string *values* never match).
+        let bytes = line.as_bytes();
+        let mut i = 0;
+        while i < bytes.len() {
+            if bytes[i] == b'"' {
+                let mut j = i + 1;
+                while j < bytes.len() && bytes[j] != b'"' {
+                    j += 1;
+                }
+                if j < bytes.len() {
+                    let key = &line[i + 1..j];
+                    let mut k = j + 1;
+                    while k < bytes.len() && bytes[k] == b' ' {
+                        k += 1;
+                    }
+                    if k < bytes.len() && bytes[k] == b':' && is_ident_key(key) {
+                        keys.push((key.to_string(), idx + 1));
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    keys
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // Direction 1 inputs: curated emitter keys.
+    let mut emitted_documentable: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    for file in &ws.src {
+        if !RESULT_EMITTERS.contains(&file.rel.as_str()) {
+            continue;
+        }
+        for (open, close) in to_json_bodies(file) {
+            for (key, line) in set_keys_in(file, open, close) {
+                emitted_documentable
+                    .entry(key)
+                    .or_insert((file.rel.clone(), line));
+            }
+        }
+    }
+    for file in &ws.benches {
+        if file.rel == BENCH_EMITTER {
+            for (key, line) in set_keys_in(file, 0, file.scan.code.len()) {
+                emitted_documentable
+                    .entry(key)
+                    .or_insert((file.rel.clone(), line));
+            }
+        }
+    }
+
+    // Direction 2 vocabulary: every literal `.set` key anywhere.
+    let mut all_emitted: BTreeSet<String> = BTreeSet::new();
+    for file in ws.src.iter().chain(ws.benches.iter()) {
+        for (key, _) in set_keys_in(file, 0, file.scan.code.len()) {
+            all_emitted.insert(key);
+        }
+    }
+
+    for (key, (file, line)) in &emitted_documentable {
+        if !ws.documented(key) {
+            findings.push(Finding::error(
+                PASS,
+                file,
+                *line,
+                format!(
+                    "results key \"{key}\" is emitted but never mentioned in \
+                     README.md or docs/ARCHITECTURE.md — document it (schema \
+                     drift starts here)"
+                ),
+            ));
+        }
+    }
+
+    for (doc, text) in &ws.docs {
+        for (key, line) in doc_schema_keys(text) {
+            if !all_emitted.contains(&key) {
+                findings.push(Finding::error(
+                    PASS,
+                    doc,
+                    line,
+                    format!(
+                        "documented schema key \"{key}\" is not emitted by any \
+                         `.set(\"…\")` site in the tree — stale docs or a typo"
+                    ),
+                ));
+            }
+        }
+    }
+
+    findings.push(Finding::note(
+        PASS,
+        "rust/src",
+        0,
+        format!(
+            "{} documentable emitter key(s), {} emitted key(s) total, {} doc file(s) checked",
+            emitted_documentable.len(),
+            all_emitted.len(),
+            ws.docs.len()
+        ),
+    ));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{find_test_ranges, lexer};
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let scan = lexer::scan(src);
+        let test_ranges = find_test_ranges(&scan.code);
+        SourceFile {
+            rel: rel.to_string(),
+            scan,
+            test_ranges,
+        }
+    }
+
+    #[test]
+    fn set_keys_extracted_literal_only() {
+        let f = file(
+            "rust/src/coordinator/mod.rs",
+            "impl X { pub fn to_json(&self) -> Json { let mut j = Json::obj(); \
+             j.set(\"alpha\", v); j.set(point.name(), p); j.set(\"beta\", w); j } }",
+        );
+        let bodies = to_json_bodies(&f);
+        assert_eq!(bodies.len(), 1);
+        let keys: Vec<String> = set_keys_in(&f, bodies[0].0, bodies[0].1)
+            .into_iter()
+            .map(|(k, _)| k)
+            .collect();
+        assert_eq!(keys, vec!["alpha".to_string(), "beta".to_string()]);
+    }
+
+    #[test]
+    fn doc_keys_from_fenced_blocks_only() {
+        let text = "prose \"not_a_key\": here\n```jsonc\n{\n  \"real_key\": 1, // c\n  \
+                    \"nested\": { \"inner\": \"a: b\" }\n}\n```\n```yaml\nyaml_key: 1\n```\n";
+        let keys: Vec<String> = doc_schema_keys(text).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "real_key".to_string(),
+                "nested".to_string(),
+                "inner".to_string()
+            ]
+        );
+    }
+
+    #[test]
+    fn ellipsis_placeholders_skipped() {
+        let text = "```json\n{\"op\": \"window\", \"events_in\": …, \"…\": 1}\n```\n";
+        let keys: Vec<String> = doc_schema_keys(text).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["op".to_string(), "events_in".to_string()]);
+    }
+}

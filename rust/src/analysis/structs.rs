@@ -1,0 +1,266 @@
+//! Pass `structs` — struct-literal exhaustiveness for report-bearing
+//! structs.
+//!
+//! Extending [`RunSummary`](crate::coordinator::RunSummary) (or any
+//! struct in [`WATCHED`]) means updating every literal-construction
+//! site — the audit each PR used to do by hand.  This pass enumerates
+//! those sites as notes (the work-list) and *fails* on functional-
+//! update construction (`Struct { field, ..base }`) in non-test code:
+//! a `..` site silently absorbs newly added fields, which is exactly
+//! how a new metric ends up zero in one code path and populated in
+//! another.  (Pattern-position `..` rests, like
+//! `let Struct { x, .. } = v`, are fine — the compiler still forces a
+//! decision when reading fields.)
+
+use crate::analysis::{Finding, SourceFile, Workspace};
+
+const PASS: &str = "structs";
+
+/// Structs whose construction sites carry report/results data.
+pub const WATCHED: &[&str] = &[
+    "RunSummary",
+    "RecoveryStats",
+    "StepStats",
+    "TaskReport",
+    "EngineReport",
+    "TransportStats",
+    "FaultOutcome",
+    "ResilienceStats",
+];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Keywords that make `Name {` a non-literal context.
+const NON_LITERAL_PRECEDING: &[&str] = &[
+    "struct", "enum", "union", "trait", "impl", "mod", "fn", "for",
+];
+
+/// The word immediately before byte `at` (skipping whitespace).
+fn word_before(code: &str, at: usize) -> &str {
+    let bytes = code.as_bytes();
+    let mut end = at;
+    while end > 0 && (bytes[end - 1] as char).is_whitespace() {
+        end -= 1;
+    }
+    let mut start = end;
+    while start > 0 && is_ident(bytes[start - 1]) {
+        start -= 1;
+    }
+    &code[start..end]
+}
+
+/// One `Name { … }` occurrence.
+struct LiteralSite {
+    line: usize,
+    /// `..` followed by a base expression inside the braces.
+    functional_update: bool,
+    in_test: bool,
+}
+
+fn literal_sites(file: &SourceFile, name: &str) -> Vec<LiteralSite> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let mut sites = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(name) {
+        let at = from + pos;
+        from = at + 1;
+        // Word-bounded occurrence of the type name…
+        if at > 0 && is_ident(bytes[at - 1]) {
+            continue;
+        }
+        let end = at + name.len();
+        if end < bytes.len() && is_ident(bytes[end]) {
+            continue;
+        }
+        // …followed by `{` (possibly across whitespace)…
+        let mut i = end;
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'{' {
+            continue;
+        }
+        // …not preceded by an item keyword, and not a return-type
+        // position (`fn f() -> Name {` opens the fn body, not a
+        // literal).
+        if NON_LITERAL_PRECEDING.contains(&word_before(code, at)) {
+            continue;
+        }
+        let mut p = at;
+        while p > 0 && (bytes[p - 1] as char).is_whitespace() {
+            p -= 1;
+        }
+        if p >= 2 && &code[p - 2..p] == "->" {
+            continue;
+        }
+        let open = i;
+        let mut depth = 0usize;
+        let mut functional_update = false;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                b'.' if depth == 1 && i + 1 < bytes.len() && bytes[i + 1] == b'.' => {
+                    // `..` at literal depth, in field position (right
+                    // after `{` or `,` — so a range like `drain(..)`
+                    // inside a field value never matches): a base
+                    // expression after it is functional update; a
+                    // closing brace after it is a pattern rest.
+                    let mut back = i;
+                    while back > open && (bytes[back - 1] as char).is_whitespace() {
+                        back -= 1;
+                    }
+                    let field_position =
+                        back > 0 && (bytes[back - 1] == b'{' || bytes[back - 1] == b',');
+                    let mut k = i + 2;
+                    while k < bytes.len() && (bytes[k] as char).is_whitespace() {
+                        k += 1;
+                    }
+                    if field_position && k < bytes.len() && bytes[k] != b'}' {
+                        functional_update = true;
+                    }
+                    i += 1; // past the second dot next loop step
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        sites.push(LiteralSite {
+            line: file.scan.line_of(open),
+            functional_update,
+            in_test: file.in_test(at),
+        });
+    }
+    sites
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for name in WATCHED {
+        let mut total = 0usize;
+        for file in &ws.src {
+            for site in literal_sites(file, name) {
+                total += 1;
+                if site.functional_update && !site.in_test {
+                    findings.push(Finding::error(
+                        PASS,
+                        &file.rel,
+                        site.line,
+                        format!(
+                            "functional-update (`..`) construction of report-bearing \
+                             `{name}` — a new field would be silently absorbed here; \
+                             list every field explicitly so the compiler flags \
+                             extension sites"
+                        ),
+                    ));
+                } else {
+                    findings.push(Finding::note(
+                        PASS,
+                        &file.rel,
+                        site.line,
+                        format!(
+                            "`{name}` construction site{}",
+                            if site.in_test { " (test code)" } else { "" }
+                        ),
+                    ));
+                }
+            }
+        }
+        findings.push(Finding::note(
+            PASS,
+            "rust/src",
+            0,
+            format!("`{name}`: {total} literal construction site(s)"),
+        ));
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{find_test_ranges, lexer};
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let scan = lexer::scan(src);
+        let test_ranges = find_test_ranges(&scan.code);
+        SourceFile {
+            rel: rel.to_string(),
+            scan,
+            test_ranges,
+        }
+    }
+
+    #[test]
+    fn literal_vs_item_contexts() {
+        let f = file(
+            "rust/src/x.rs",
+            "pub struct RunSummary { pub a: u64 }\n\
+             impl RunSummary { fn f() -> RunSummary { RunSummary { a: 1 } } }\n",
+        );
+        let sites = literal_sites(&f, "RunSummary");
+        assert_eq!(sites.len(), 1);
+        assert!(!sites[0].functional_update);
+    }
+
+    #[test]
+    fn functional_update_detected() {
+        let f = file(
+            "rust/src/x.rs",
+            "fn f(b: StepStats) -> StepStats { StepStats { events_in: 1, ..b } }",
+        );
+        let sites = literal_sites(&f, "StepStats");
+        assert_eq!(sites.len(), 1);
+        assert!(sites[0].functional_update);
+    }
+
+    #[test]
+    fn default_spread_detected() {
+        let f = file(
+            "rust/src/x.rs",
+            "fn f() -> StepStats { StepStats { events_in: 1, ..Default::default() } }",
+        );
+        assert!(literal_sites(&f, "StepStats")[0].functional_update);
+    }
+
+    #[test]
+    fn pattern_rest_is_not_functional_update() {
+        let f = file(
+            "rust/src/x.rs",
+            "fn f(v: RunSummary) { let RunSummary { name, .. } = v; let _ = name; }",
+        );
+        let sites = literal_sites(&f, "RunSummary");
+        assert_eq!(sites.len(), 1);
+        assert!(!sites[0].functional_update);
+    }
+
+    #[test]
+    fn nested_braces_do_not_confuse_depth() {
+        let f = file(
+            "rust/src/x.rs",
+            "fn f() -> TaskReport { TaskReport { stats: StepStats { events_in: 0 }, id: 1 } }",
+        );
+        let outer = literal_sites(&f, "TaskReport");
+        assert_eq!(outer.len(), 1);
+        assert!(!outer[0].functional_update);
+    }
+
+    #[test]
+    fn test_code_spread_is_note_not_error() {
+        let f = file(
+            "rust/src/x.rs",
+            "#[cfg(test)]\nmod tests { fn f(b: StepStats) -> StepStats { \
+             StepStats { events_in: 1, ..b } } }",
+        );
+        let sites = literal_sites(&f, "StepStats");
+        assert!(sites[0].functional_update && sites[0].in_test);
+    }
+}

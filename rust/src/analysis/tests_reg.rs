@@ -1,0 +1,147 @@
+//! Pass `tests` — test-registration audit.
+//!
+//! With an explicit `[lib]`/`[[bin]]` layout (sources under `rust/`,
+//! not `src/`), Cargo's target auto-discovery is off: a file in
+//! `rust/tests/` with no `[[test]]` block in `Cargo.toml` silently
+//! never runs.  This bit PR 3 (`chain_equivalence` landed unregistered)
+//! and was guarded by an ad-hoc shell loop in CI until this pass
+//! replaced it.  Checks both directions: every test file registered,
+//! every registration pointing at a file that exists.
+
+use crate::analysis::{Finding, Workspace};
+
+const PASS: &str = "tests";
+
+/// One `[[test]]` block of the manifest.
+struct TestTarget {
+    name: Option<String>,
+    path: Option<String>,
+    /// 1-based line of the `[[test]]` header.
+    line: usize,
+}
+
+/// Parse the `[[test]]` blocks out of manifest text.  TOML subset:
+/// `#` comments stripped (quote-aware), block ends at the next
+/// `[`-header line.
+fn test_targets(manifest: &str) -> Vec<TestTarget> {
+    let mut targets: Vec<TestTarget> = Vec::new();
+    let mut current: Option<TestTarget> = None;
+    for (idx, raw_line) in manifest.lines().enumerate() {
+        let line = strip_toml_comment(raw_line);
+        let trimmed = line.trim();
+        if trimmed.starts_with('[') {
+            if let Some(t) = current.take() {
+                targets.push(t);
+            }
+            if trimmed == "[[test]]" {
+                current = Some(TestTarget {
+                    name: None,
+                    path: None,
+                    line: idx + 1,
+                });
+            }
+            continue;
+        }
+        if let Some(t) = current.as_mut() {
+            if let Some((key, value)) = trimmed.split_once('=') {
+                let key = key.trim();
+                let value = value.trim().trim_matches('"').to_string();
+                match key {
+                    "name" => t.name = Some(value),
+                    "path" => t.path = Some(value),
+                    _ => {}
+                }
+            }
+        }
+    }
+    if let Some(t) = current.take() {
+        targets.push(t);
+    }
+    targets
+}
+
+/// Drop a `#` comment, ignoring `#` inside a quoted string.
+fn strip_toml_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    if ws.cargo_toml.is_empty() {
+        findings.push(Finding::error(
+            PASS,
+            "Cargo.toml",
+            0,
+            "manifest missing or unreadable — cannot audit test registration".to_string(),
+        ));
+        return findings;
+    }
+    let targets = test_targets(&ws.cargo_toml);
+
+    for stem in &ws.test_files {
+        let registered = targets
+            .iter()
+            .any(|t| t.name.as_deref() == Some(stem.as_str()));
+        if !registered {
+            findings.push(Finding::error(
+                PASS,
+                &format!("rust/tests/{stem}.rs"),
+                0,
+                format!(
+                    "no [[test]] target named \"{stem}\" in Cargo.toml — \
+                     with an explicit target layout this test silently never runs"
+                ),
+            ));
+        }
+    }
+
+    for t in &targets {
+        let Some(name) = &t.name else {
+            findings.push(Finding::error(
+                PASS,
+                "Cargo.toml",
+                t.line,
+                "[[test]] block without a name".to_string(),
+            ));
+            continue;
+        };
+        let Some(path) = &t.path else {
+            findings.push(Finding::error(
+                PASS,
+                "Cargo.toml",
+                t.line,
+                format!("[[test]] \"{name}\" has no path — target auto-discovery is off"),
+            ));
+            continue;
+        };
+        if !ws.root.join(path).is_file() {
+            findings.push(Finding::error(
+                PASS,
+                "Cargo.toml",
+                t.line,
+                format!("[[test]] \"{name}\" points at missing file {path}"),
+            ));
+        }
+    }
+
+    findings.push(Finding::note(
+        PASS,
+        "Cargo.toml",
+        0,
+        format!(
+            "{} test file(s) in rust/tests/, {} [[test]] target(s)",
+            ws.test_files.len(),
+            targets.len()
+        ),
+    ));
+    findings
+}

@@ -10,6 +10,7 @@
 //! sprobench sbatch       --config <file> [--simulate] [--chain]
 //! sprobench report       --run <dir>
 //! sprobench baselines    [--events <n>]
+//! sprobench analyze      [<pass>…|--all] [--root <dir>] [--json <file>] [--verbose] [--bless]
 //! sprobench list         --config <file>
 //! sprobench version | help
 //! ```
@@ -92,6 +93,7 @@ pub fn dispatch(args: &[String]) -> Result<(), String> {
         "sbatch" => cmd_sbatch(&flags),
         "report" => cmd_report(&flags),
         "baselines" => cmd_baselines(&flags),
+        "analyze" => cmd_analyze(&flags),
         "list" => cmd_list(&flags),
         "version" => {
             println!("sprobench {}", env!("CARGO_PKG_VERSION"));
@@ -115,6 +117,7 @@ USAGE:
   sprobench sbatch       --config <file> [--simulate] [--chain]
   sprobench report       --run <dir>
   sprobench baselines    [--events <n>]
+  sprobench analyze      [<pass>…|--all] [--root <dir>] [--json <file>] [--verbose] [--bless]
   sprobench list         --config <file>
   sprobench version | help
 
@@ -135,7 +138,15 @@ by the generated sbatch script, not by hand.
 Pipelines are operator chains: configure `engine.pipeline` with a kind
 (passthrough | cpu | mem | fused) or a declarative `ops:` spec
 (filter/map/keyby/window/topk/emit/custom); `--pipeline-spec <file>`
-overrides every selected experiment with the `ops:` list from <file>."
+overrides every selected experiment with the `ops:` list from <file>.
+
+`analyze` runs the in-repo static-analysis passes (tests, panics,
+locks, schema, structs, grammar) over the source tree at --root
+(default: the working directory): pass names select a subset, no names
+or --all runs everything, --bless regenerates the panic-path baseline,
+and the findings are written to analysis_report.json (--json overrides
+the path).  Exit is nonzero on any error-severity finding — CI runs
+`analyze --all` as a gate."
 }
 
 fn load_experiments(flags: &Flags) -> Result<Vec<Experiment>, String> {
@@ -565,6 +576,80 @@ fn cmd_baselines(flags: &Flags) -> Result<(), String> {
         "{}",
         ascii_table(&["suite", "documented max", "measured here"], &rows)
     );
+    Ok(())
+}
+
+/// Sort one `analyze` word into pass selection vs option flags.  Needed
+/// because `Flags::parse` turns `--bless panics` into a pair, so flag
+/// names can surface as either pair keys or bare words.
+fn classify_analyze_arg(
+    word: &str,
+    passes: &mut Vec<String>,
+    bless: &mut bool,
+    verbose: &mut bool,
+) -> Result<(), String> {
+    match word {
+        "all" => Ok(()), // the default: empty pass selection = all
+        "bless" => {
+            *bless = true;
+            Ok(())
+        }
+        "verbose" => {
+            *verbose = true;
+            Ok(())
+        }
+        p if crate::analysis::PASS_NAMES.contains(&p) => {
+            passes.push(p.to_string());
+            Ok(())
+        }
+        other => Err(format!(
+            "analyze: unknown pass or flag '{other}' (passes: {})",
+            crate::analysis::PASS_NAMES.join(", ")
+        )),
+    }
+}
+
+fn cmd_analyze(flags: &Flags) -> Result<(), String> {
+    let mut passes: Vec<String> = Vec::new();
+    let mut bless = false;
+    let mut verbose = false;
+    let mut root: Option<String> = None;
+    let mut json_out: Option<String> = None;
+
+    for word in &flags.bare {
+        classify_analyze_arg(word, &mut passes, &mut bless, &mut verbose)?;
+    }
+    for (key, value) in &flags.pairs {
+        match key.as_str() {
+            "root" => root = Some(value.clone()),
+            "json" => json_out = Some(value.clone()),
+            "all" | "bless" | "verbose" => {
+                classify_analyze_arg(key, &mut passes, &mut bless, &mut verbose)?;
+                classify_analyze_arg(value, &mut passes, &mut bless, &mut verbose)?;
+            }
+            other => return Err(format!("analyze: unknown flag --{other}")),
+        }
+    }
+
+    let opts = crate::analysis::AnalyzeOptions {
+        root: PathBuf::from(root.as_deref().unwrap_or(".")),
+        passes,
+        bless,
+    };
+    let report = crate::analysis::run(&opts)?;
+    print!("{}", report.render(verbose));
+
+    let out = PathBuf::from(json_out.as_deref().unwrap_or("analysis_report.json"));
+    std::fs::write(&out, report.to_json().to_pretty())
+        .map_err(|e| format!("write {}: {e}", out.display()))?;
+
+    let errors = report.error_count();
+    if errors > 0 {
+        return Err(format!(
+            "analyze: {errors} error finding(s) — see {} for the full report",
+            out.display()
+        ));
+    }
     Ok(())
 }
 

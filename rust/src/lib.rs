@@ -23,6 +23,14 @@
 //! See the repository `README.md` for a quickstart and the module map,
 //! and `docs/ARCHITECTURE.md` for the run lifecycle and layering.
 
+// The tree is unsafe-free by construction (pure std, no FFI on the
+// default path) — lock that in, and make dropped `Result`s a hard
+// error: a swallowed send/IO error in a benchmark harness silently
+// corrupts measurements.
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
+
+pub mod analysis;
 pub mod baselines;
 pub mod bench;
 pub mod broker;

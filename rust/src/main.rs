@@ -1,4 +1,7 @@
 //! SProBench CLI entrypoint.
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
+
 fn main() {
     let code = sprobench::cli::main();
     std::process::exit(code);

@@ -33,7 +33,7 @@
 use std::net::TcpListener;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Duration;
 
 use super::control::{self, merge_results, ControlPlane, WorkerLink};
@@ -651,7 +651,10 @@ fn engine_body(link: &mut WorkerLink, assign: &Json) -> Result<Json, String> {
                         });
                         outcome.injected_at = Some(now);
                         outcome.detected_at = Some(now);
-                        faults.lock().expect("faults poisoned").push(outcome);
+                        faults
+                            .lock()
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .push(outcome);
                         match dead {
                             Some(e) => eprintln!("[engine-worker] broker link failed: {e}"),
                             None => eprintln!(
@@ -767,7 +770,7 @@ fn engine_body(link: &mut WorkerLink, assign: &Json) -> Result<Json, String> {
         operators: report.operators.clone(),
         recovery: None,
         quarantined: 0,
-        faults: faults.lock().expect("faults poisoned").clone(),
+        faults: faults.lock().unwrap_or_else(PoisonError::into_inner).clone(),
         resilience: None,
         transport: Some(transport.clone()),
     };

@@ -28,7 +28,7 @@
 use std::io::Write as _;
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use super::frame::{
@@ -328,7 +328,9 @@ struct TcpShared<M> {
 
 impl<M> TcpShared<M> {
     fn fail(&self, e: String) {
-        let mut slot = self.error.lock().expect("net error slot poisoned");
+        // A panicking I/O thread must not cascade: recover the slot
+        // from poisoning instead of propagating the panic.
+        let mut slot = self.error.lock().unwrap_or_else(PoisonError::into_inner);
         if slot.is_none() {
             *slot = Some(e);
         }
@@ -413,7 +415,11 @@ impl<M: Wire> TcpTransport<M> {
     /// The link's first fatal error (I/O failure, CRC mismatch, peer
     /// disconnect without EOF), if any.
     pub fn error(&self) -> Option<String> {
-        self.shared.error.lock().expect("net error slot poisoned").clone()
+        self.shared
+            .error
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
     }
 
     /// Declare this end done sending: an EOF frame is flushed and the
@@ -427,7 +433,10 @@ impl<M: Wire> TcpTransport<M> {
     /// drained).  Idempotent.
     pub fn join(&self) {
         let handles: Vec<_> = {
-            let mut t = self.threads.lock().expect("net threads poisoned");
+            let mut t = self
+                .threads
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
             t.drain(..).collect()
         };
         for h in handles {
@@ -513,7 +522,12 @@ fn reader_loop<M: Wire>(mut stream: TcpStream, shared: &TcpShared<M>) {
             }
         }
     }
-    if !clean_eof && shared.error.lock().expect("net error slot poisoned").is_none() {
+    let failed_already = shared
+        .error
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .is_some();
+    if !clean_eof && !failed_already {
         shared.fail("peer disconnected before EOF".into());
     }
     // Unblock consumers: close every inbound channel (they drain what

@@ -1,0 +1,428 @@
+//! Integration tests for `sprobench analyze`: each test seeds one
+//! violation into a throwaway fixture tree and asserts the analyzer
+//! reports it, and one test runs the full pass suite over the real
+//! repository tree and requires zero errors — the same gate CI runs.
+//!
+//! Fixture sources are written as string literals; the panics pass
+//! only scans `rust/src/`, so panic patterns quoted here never count
+//! against the real baseline.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use sprobench::analysis::{self, AnalyzeOptions, Finding, Report, Severity};
+
+/// A throwaway mini-repository under the system temp dir.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(name: &str) -> Fixture {
+        let root = std::env::temp_dir().join(format!(
+            "sprobench_analysis_{}_{name}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).expect("create fixture root");
+        Fixture { root }
+    }
+
+    fn write(&self, rel: &str, text: &str) -> &Fixture {
+        let path = self.root.join(rel);
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent).expect("create fixture dir");
+        }
+        fs::write(&path, text).expect("write fixture file");
+        self
+    }
+
+    fn read(&self, rel: &str) -> String {
+        fs::read_to_string(self.root.join(rel)).expect("read fixture file")
+    }
+
+    fn run(&self, passes: &[&str], bless: bool) -> Report {
+        analysis::run(&AnalyzeOptions {
+            root: self.root.clone(),
+            passes: passes.iter().map(|s| s.to_string()).collect(),
+            bless,
+        })
+        .expect("analysis run")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+fn errors(report: &Report) -> Vec<&Finding> {
+    report
+        .findings
+        .iter()
+        .filter(|f| f.severity == Severity::Error)
+        .collect()
+}
+
+/// A baseline file with the header but no entries (budget 0 everywhere).
+const EMPTY_BASELINE: &str = "# sprobench panic-path baseline (fixture)\n";
+
+// ---------------------------------------------------------------- real tree
+
+/// The committed tree must run every pass clean — this is the CI gate,
+/// and it is what makes the seeded-violation tests below meaningful:
+/// the same passes that pass here fail there.
+#[test]
+fn real_tree_runs_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::run(&AnalyzeOptions {
+        root: root.to_path_buf(),
+        passes: Vec::new(), // all
+        bless: false,
+    })
+    .expect("analysis over the real tree");
+    assert_eq!(
+        report.error_count(),
+        0,
+        "real tree has analysis errors:\n{}",
+        report.render(false)
+    );
+    assert_eq!(report.passes.len(), analysis::PASS_NAMES.len());
+}
+
+// -------------------------------------------------------- test registration
+
+#[test]
+fn unregistered_test_file_is_an_error() {
+    let fix = Fixture::new("unregistered");
+    fix.write(
+        "Cargo.toml",
+        "[package]\nname = \"fix\"\n\n[[test]]\nname = \"alpha\"\npath = \"rust/tests/alpha.rs\"\n",
+    )
+    .write("rust/tests/alpha.rs", "#[test]\nfn t() {}\n")
+    .write("rust/tests/beta.rs", "#[test]\nfn t() {}\n");
+    let report = fix.run(&["tests"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(errs[0].message.contains("beta"), "{}", errs[0].message);
+}
+
+#[test]
+fn registration_pointing_at_missing_file_is_an_error() {
+    let fix = Fixture::new("missing_file");
+    fix.write(
+        "Cargo.toml",
+        "[package]\nname = \"fix\"\n\n[[test]]\nname = \"gone\"\npath = \"rust/tests/gone.rs\"\n",
+    );
+    let report = fix.run(&["tests"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(errs[0].message.contains("missing file"), "{}", errs[0].message);
+}
+
+/// Acceptance check from the issue: deleting any `[[test]]` entry from
+/// the real manifest makes the analyzer exit nonzero.  Replayed against
+/// a fixture holding the real manifest text (minus one block) and stub
+/// files for every registered test.
+#[test]
+fn deleting_a_manifest_registration_is_caught() {
+    let real_manifest =
+        fs::read_to_string(Path::new(env!("CARGO_MANIFEST_DIR")).join("Cargo.toml"))
+            .expect("read real Cargo.toml");
+    let needle = "[[test]]\nname = \"shuffle_equivalence\"\npath = \"rust/tests/shuffle_equivalence.rs\"\n";
+    assert!(
+        real_manifest.contains(needle),
+        "expected [[test]] block not found in Cargo.toml"
+    );
+    let broken = real_manifest.replacen(needle, "", 1);
+
+    let fix = Fixture::new("deleted_registration");
+    fix.write("Cargo.toml", &broken);
+    // Stub out every test file the real manifest registers (including
+    // the one whose registration we just deleted).
+    for line in real_manifest.lines() {
+        if let Some(value) = line.trim().strip_prefix("path = \"") {
+            let path = value.trim_end_matches('"');
+            if path.starts_with("rust/tests/") {
+                fix.write(path, "#[test]\nfn t() {}\n");
+            }
+        }
+    }
+    let report = fix.run(&["tests"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("shuffle_equivalence"),
+        "{}",
+        errs[0].message
+    );
+}
+
+// ------------------------------------------------------------- panic ratchet
+
+#[test]
+fn new_panic_site_beyond_baseline_is_an_error() {
+    let fix = Fixture::new("new_panic");
+    fix.write("rust/src/analysis/baseline.txt", EMPTY_BASELINE)
+        .write(
+            "rust/src/lib.rs",
+            "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+        );
+    let report = fix.run(&["panics"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("baseline allows 0"),
+        "{}",
+        errs[0].message
+    );
+}
+
+#[test]
+fn critical_path_panic_is_marked() {
+    let fix = Fixture::new("critical_panic");
+    fix.write("rust/src/analysis/baseline.txt", EMPTY_BASELINE)
+        .write(
+            "rust/src/net/transport.rs",
+            "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+        );
+    let report = fix.run(&["panics"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("critical path"),
+        "{}",
+        errs[0].message
+    );
+}
+
+#[test]
+fn stale_baseline_entries_are_errors() {
+    let fix = Fixture::new("stale_baseline");
+    // Budget above the actual count, plus an entry for a file with no
+    // sites at all: both directions of staleness.
+    fix.write(
+        "rust/src/analysis/baseline.txt",
+        "2 rust/src/lib.rs\n1 rust/src/gone.rs\n",
+    )
+    .write(
+        "rust/src/lib.rs",
+        "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+    );
+    let report = fix.run(&["panics"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 2, "{}", report.render(true));
+    assert!(errs.iter().all(|e| e.message.contains("stale")));
+}
+
+#[test]
+fn bless_rewrites_the_baseline_and_the_tree_is_then_clean() {
+    let fix = Fixture::new("bless");
+    // Start from a stale budget; --bless must overwrite it in place.
+    fix.write("rust/src/analysis/baseline.txt", "4 rust/src/lib.rs\n")
+        .write(
+            "rust/src/lib.rs",
+            "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+        );
+    let blessed = fix.run(&["panics"], true);
+    assert_eq!(errors(&blessed).len(), 0, "{}", blessed.render(true));
+    let baseline = fix.read("rust/src/analysis/baseline.txt");
+    assert!(baseline.contains("1 rust/src/lib.rs"), "{baseline}");
+
+    let recheck = fix.run(&["panics"], false);
+    assert_eq!(errors(&recheck).len(), 0, "{}", recheck.render(true));
+}
+
+#[test]
+fn test_module_panics_do_not_count() {
+    let fix = Fixture::new("test_mod_panic");
+    fix.write("rust/src/analysis/baseline.txt", EMPTY_BASELINE)
+        .write(
+            "rust/src/lib.rs",
+            "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { \
+             Some(1).unwrap(); }\n}\n",
+        );
+    let report = fix.run(&["panics"], false);
+    assert_eq!(errors(&report).len(), 0, "{}", report.render(true));
+}
+
+// ---------------------------------------------------------------- lock order
+
+#[test]
+fn lock_order_cycle_is_an_error() {
+    let fix = Fixture::new("lock_cycle");
+    fix.write(
+        "rust/src/net/transport.rs",
+        "fn a(&self) { let g = self.peers.lock().expect(\"p\"); \
+         let h = self.state.lock().expect(\"p\"); }\n\
+         fn b(&self) { let g = self.state.lock().expect(\"p\"); \
+         let h = self.peers.lock().expect(\"p\"); }\n",
+    );
+    let report = fix.run(&["locks"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("lock-order cycle"),
+        "{}",
+        errs[0].message
+    );
+    assert!(errs[0].message.contains("transport.peers"));
+    assert!(errs[0].message.contains("transport.state"));
+}
+
+#[test]
+fn blocking_send_under_held_guard_is_an_error() {
+    let fix = Fixture::new("send_under_lock");
+    fix.write(
+        "rust/src/engine/exchange.rs",
+        "fn f(&self) { let g = self.state.lock().expect(\"p\"); self.tx.send(1); }\n",
+    );
+    let report = fix.run(&["locks"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("blocking channel op"),
+        "{}",
+        errs[0].message
+    );
+}
+
+#[test]
+fn consistent_lock_order_is_clean() {
+    let fix = Fixture::new("lock_clean");
+    fix.write(
+        "rust/src/net/transport.rs",
+        "fn a(&self) { let g = self.peers.lock().expect(\"p\"); \
+         let h = self.state.lock().expect(\"p\"); }\n\
+         fn b(&self) { let g = self.peers.lock().expect(\"p\"); \
+         let h = self.state.lock().expect(\"p\"); }\n",
+    );
+    let report = fix.run(&["locks"], false);
+    assert_eq!(errors(&report).len(), 0, "{}", report.render(true));
+}
+
+// --------------------------------------------------------------- schema sync
+
+#[test]
+fn undocumented_results_key_is_an_error() {
+    let fix = Fixture::new("undocumented_key");
+    fix.write(
+        "rust/src/coordinator/mod.rs",
+        "impl R { pub fn to_json(&self) -> Json { let mut j = Json::obj(); \
+         j.set(\"mystery_metric\", Json::Int(1)); j } }\n",
+    )
+    .write("README.md", "No schema documentation here.\n");
+    let report = fix.run(&["schema"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("mystery_metric"),
+        "{}",
+        errs[0].message
+    );
+}
+
+#[test]
+fn ghost_documented_key_is_an_error() {
+    let fix = Fixture::new("ghost_key");
+    fix.write(
+        "rust/src/coordinator/mod.rs",
+        "impl R { pub fn to_json(&self) -> Json { let mut j = Json::obj(); \
+         j.set(\"real_field\", Json::Int(1)); j } }\n",
+    )
+    .write(
+        "README.md",
+        "Both keys prose-mentioned: real_field, phantom_field.\n\n\
+         ```json\n{\"real_field\": 1, \"phantom_field\": 2}\n```\n",
+    );
+    let report = fix.run(&["schema"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("phantom_field"),
+        "{}",
+        errs[0].message
+    );
+}
+
+// ------------------------------------------------------ struct exhaustiveness
+
+#[test]
+fn functional_update_of_report_struct_is_an_error() {
+    let fix = Fixture::new("functional_update");
+    fix.write(
+        "rust/src/pipelines/report.rs",
+        "fn grow(b: StepStats) -> StepStats { StepStats { events_in: 1, ..b } }\n",
+    );
+    let report = fix.run(&["structs"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("functional-update"),
+        "{}",
+        errs[0].message
+    );
+}
+
+// -------------------------------------------------------------- config grammar
+
+#[test]
+fn undocumented_config_knob_is_an_error() {
+    let fix = Fixture::new("undocumented_knob");
+    fix.write(
+        "rust/src/config/schema.rs",
+        "fn parse(root: &Json) { let sec = section(root, \"workload\"); \
+         let _ = get_u64(&sec, \"secret_knob\", 1); }\n",
+    )
+    .write("README.md", "The workload section is documented.\n");
+    let report = fix.run(&["grammar"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("secret_knob"),
+        "{}",
+        errs[0].message
+    );
+}
+
+#[test]
+fn documented_key_outside_parser_vocabulary_is_an_error() {
+    let fix = Fixture::new("ghost_knob");
+    fix.write(
+        "rust/src/config/schema.rs",
+        "fn parse(root: &Json) { let _ = section(root, \"workload\"); }\n",
+    )
+    .write(
+        "README.md",
+        "The workload section, and bogus_knob in prose.\n\n\
+         ```yaml\nworkload:\n  bogus_knob: 7\n```\n",
+    );
+    let report = fix.run(&["grammar"], false);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("bogus_knob"),
+        "{}",
+        errs[0].message
+    );
+}
+
+// ------------------------------------------------------------------ reporting
+
+#[test]
+fn report_json_counts_errors_and_notes() {
+    let fix = Fixture::new("report_shape");
+    fix.write("rust/src/analysis/baseline.txt", EMPTY_BASELINE)
+        .write(
+            "rust/src/lib.rs",
+            "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+        );
+    let report = fix.run(&["panics"], false);
+    assert_eq!(report.error_count(), 1);
+    let json = report.to_json().to_pretty();
+    assert!(json.contains("\"sprobench.analysis/v1\""), "{json}");
+    assert!(json.contains("\"errors\": 1"), "{json}");
+    let rendered = report.render(false);
+    assert!(rendered.contains("error: [panics]"), "{rendered}");
+}
