@@ -1,0 +1,637 @@
+//! Pass `channels` — static topology of `util::chan` endpoints.
+//!
+//! Every bounded-channel construction (`chan::bounded(cap)`) splits
+//! into a sender and a receiver whose lifecycles the runtime couples:
+//! a receiver nobody drains turns senders into silent back-pressure
+//! walls, and a blocking drain loop whose senders never `close()`
+//! parks a worker thread forever at shutdown.  This pass rebuilds that
+//! topology statically from the masked source:
+//!
+//! * **construction sites** — word-bounded `bounded(…)` calls
+//!   (turbofish `bounded::<T>(…)` included), with the capacity
+//!   expression captured from the first argument and the `(tx, rx)`
+//!   binding parsed from the surrounding `let` statement;
+//! * **aliases** — each endpoint name is expanded one level: struct
+//!   fields initialized from it (`field: rx` and shorthand) and
+//!   parameters of same-file functions it is passed to;
+//! * **drains** — `.recv(…)` / `.recv_timeout(…)` / `.drain_into(…)`
+//!   / `.try_recv(…)` on any receiver alias (indexing like
+//!   `rxs[i].drain_into(…)` is skipped over);
+//! * **finish paths** — `.close()` on any sender alias.
+//!
+//! Errors: a receiver with used senders but no drain anywhere (a
+//! `_`-prefixed receiver opts out — the explicit "intentionally
+//! undrained" marker), a blocking `.recv()` drain inside a loop with
+//! no `.close()` on the matching senders, a capacity-zero
+//! construction (`bounded` asserts `cap > 0` at runtime — this pass
+//! moves the panic to CI), and any unbounded `mpsc::channel()`
+//! construction outside [`UNBOUNDED_ALLOWLIST`].
+
+use std::collections::BTreeSet;
+
+use crate::analysis::{fn_items, Finding, SourceFile, Workspace};
+
+const PASS: &str = "channels";
+
+/// Receiver-side drain operations.
+const DRAIN_OPS: &[&str] = &[".recv(", ".recv_timeout(", ".drain_into(", ".try_recv("];
+
+/// Files allowed to construct unbounded channels.  Empty today — the
+/// list exists so a future exemption is a reviewed diff, not a silent
+/// skip.
+const UNBOUNDED_ALLOWLIST: &[&str] = &[];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-bounded occurrences of `word` in `code`.
+fn word_occurrences(code: &str, word: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        from = at + word.len();
+        let left = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + word.len();
+        let right = end >= bytes.len() || !is_ident(bytes[end]);
+        if left && right {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// The span of the parenthesized region starting at `open` (which must
+/// be a `(`): offsets of the contents, exclusive of the parens.
+fn paren_span(code: &str, open: usize) -> (usize, usize) {
+    let bytes = code.as_bytes();
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return (open + 1, i);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    (open + 1, bytes.len())
+}
+
+/// Offsets of `{` tokens whose statement prefix names a loop construct
+/// (`loop` / `while` / `for`), each paired with the matching `}` — the
+/// loop-body spans used to classify blocking drains.
+fn loop_spans(code: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'{' {
+            continue;
+        }
+        // Walk back to the statement boundary and look for a loop keyword.
+        let mut s = i;
+        while s > 0 && !matches!(bytes[s - 1], b';' | b'{' | b'}') {
+            s -= 1;
+        }
+        let prefix = &code[s..i];
+        let looped = ["loop", "while", "for"]
+            .iter()
+            .any(|kw| !word_occurrences(prefix, kw).is_empty());
+        if !looped {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut j = i;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        out.push((i, j.min(bytes.len())));
+    }
+    out
+}
+
+/// One `bounded(…)` construction site.
+struct Chan {
+    offset: usize,
+    line: usize,
+    /// Capacity expression text, trimmed.
+    cap: String,
+    /// `(tx, rx)` binding names if the construction is destructured.
+    tx: Option<String>,
+    rx: Option<String>,
+}
+
+/// Parse `let (a, b) = …` out of the statement containing `offset`.
+fn tuple_binding(code: &str, offset: usize) -> (Option<String>, Option<String>) {
+    let bytes = code.as_bytes();
+    let mut s = offset;
+    while s > 0 && !matches!(bytes[s - 1], b';' | b'{' | b'}') {
+        s -= 1;
+    }
+    let prefix = &code[s..offset];
+    let Some(let_at) = word_occurrences(prefix, "let").first().copied() else {
+        return (None, None);
+    };
+    let after = &prefix[let_at + 3..];
+    let Some(open) = after.find('(') else {
+        return (None, None);
+    };
+    let Some(close) = after[open..].find(')') else {
+        return (None, None);
+    };
+    let names: Vec<String> = after[open + 1..open + close]
+        .split(',')
+        .map(|part| {
+            part.trim()
+                .trim_start_matches("mut ")
+                .trim()
+                .split(':')
+                .next()
+                .unwrap_or("")
+                .trim()
+                .to_string()
+        })
+        .collect();
+    if names.len() == 2 && names.iter().all(|n| !n.is_empty() && n.bytes().all(is_ident)) {
+        (Some(names[0].clone()), Some(names[1].clone()))
+    } else {
+        (None, None)
+    }
+}
+
+/// Construction sites of `bounded(…)` in non-test code.
+fn constructions(file: &SourceFile) -> Vec<Chan> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    for at in word_occurrences(code, "bounded") {
+        if file.in_test(at) {
+            continue;
+        }
+        let mut i = at + "bounded".len();
+        // Turbofish: `bounded::<T>(…)`.
+        if code[i..].starts_with("::<") {
+            let mut depth = 0usize;
+            let mut j = i + 2;
+            while j < bytes.len() {
+                match bytes[j] {
+                    b'<' => depth += 1,
+                    b'>' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            i = (j + 1).min(bytes.len());
+        }
+        if i >= bytes.len() || bytes[i] != b'(' {
+            continue; // the `fn bounded<T>(…)` definition or a doc word
+        }
+        let (s, e) = paren_span(code, i);
+        let cap = code[s..e]
+            .split(',')
+            .next()
+            .unwrap_or("")
+            .trim()
+            .to_string();
+        let (tx, rx) = tuple_binding(code, at);
+        out.push(Chan {
+            offset: at,
+            line: file.scan.line_of(at),
+            cap,
+            tx,
+            rx,
+        });
+    }
+    out
+}
+
+/// Expand an endpoint name one aliasing level: struct fields
+/// initialized from it and same-file function parameters it is passed
+/// to.
+fn expand_aliases(file: &SourceFile, name: &str) -> BTreeSet<String> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let mut aliases: BTreeSet<String> = BTreeSet::new();
+    aliases.insert(name.to_string());
+
+    // Field alias: `field: name` in a struct literal.
+    for at in word_occurrences(code, name) {
+        let mut p = at;
+        while p > 0 && (bytes[p - 1] as char).is_whitespace() {
+            p -= 1;
+        }
+        if p == 0 || bytes[p - 1] != b':' || (p >= 2 && bytes[p - 2] == b':') {
+            continue; // not `field: name` (`::` is a path, not an init)
+        }
+        let mut q = p - 1;
+        while q > 0 && (bytes[q - 1] as char).is_whitespace() {
+            q -= 1;
+        }
+        let end = q;
+        while q > 0 && is_ident(bytes[q - 1]) {
+            q -= 1;
+        }
+        if q < end {
+            aliases.insert(code[q..end].to_string());
+        }
+    }
+
+    // Call handoff: `helper(…, name, …)` → the helper's i-th parameter.
+    for item in fn_items(code) {
+        let params: Vec<String> = split_top_level(&item.params)
+            .iter()
+            .map(|p| {
+                p.trim()
+                    .trim_start_matches('&')
+                    .trim_start_matches("mut ")
+                    .trim()
+                    .split(':')
+                    .next()
+                    .unwrap_or("")
+                    .trim()
+                    .to_string()
+            })
+            .collect();
+        for at in word_occurrences(code, &item.name) {
+            let mut i = at + item.name.len();
+            if code[i..].starts_with("::<") {
+                let mut depth = 0usize;
+                let mut j = i + 2;
+                while j < bytes.len() {
+                    match bytes[j] {
+                        b'<' => depth += 1,
+                        b'>' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                i = (j + 1).min(bytes.len());
+            }
+            if i >= bytes.len() || bytes[i] != b'(' {
+                continue;
+            }
+            // Skip the definition itself.
+            let mut p = at;
+            while p > 0 && (bytes[p - 1] as char).is_whitespace() {
+                p -= 1;
+            }
+            if p >= 2 && &code[p - 2..p] == "fn" {
+                continue;
+            }
+            let (s, e) = paren_span(code, i);
+            for (argi, arg) in split_top_level(&code[s..e]).iter().enumerate() {
+                let t = arg
+                    .trim()
+                    .trim_start_matches('&')
+                    .trim_start_matches("mut ")
+                    .trim();
+                if t == name {
+                    if let Some(param) = params.get(argi) {
+                        if !param.is_empty() {
+                            aliases.insert(param.clone());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    aliases
+}
+
+/// Split on commas at bracket depth zero (over `()`, `[]`, `{}`).
+fn split_top_level(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in text.chars() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(c);
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Occurrences of `alias` followed (optionally across an index
+/// expression `[…]`) by one of `ops`: `(op, offset)` pairs.
+fn endpoint_ops<'a>(
+    code: &str,
+    alias: &str,
+    ops: &[&'a str],
+    in_test: impl Fn(usize) -> bool,
+) -> Vec<(&'a str, usize)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    for at in word_occurrences(code, alias) {
+        if in_test(at) {
+            continue;
+        }
+        let mut i = at + alias.len();
+        if i < bytes.len() && bytes[i] == b'[' {
+            let mut depth = 0usize;
+            while i < bytes.len() {
+                match bytes[i] {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            i = (i + 1).min(bytes.len());
+        }
+        for op in ops {
+            if code[i..].starts_with(op) {
+                out.push((*op, at));
+                break;
+            }
+        }
+    }
+    out
+}
+
+fn check_file(file: &SourceFile, findings: &mut Vec<Finding>) -> usize {
+    let code = &file.scan.code;
+
+    // Unbounded std channels are banned wholesale.
+    for at in word_occurrences(code, "channel") {
+        if file.in_test(at) {
+            continue;
+        }
+        let prefixed = at >= 6 && &code[at - 6..at] == "mpsc::";
+        let called = code[at + "channel".len()..].starts_with('(');
+        if prefixed && called && !UNBOUNDED_ALLOWLIST.contains(&file.rel.as_str()) {
+            findings.push(Finding::error(
+                PASS,
+                &file.rel,
+                file.scan.line_of(at),
+                "unbounded mpsc::channel() construction — use util::chan::bounded \
+                 so back-pressure is explicit (allowlist in analysis/channels.rs)"
+                    .to_string(),
+            ));
+        }
+    }
+
+    let chans = constructions(file);
+    let loops = loop_spans(code);
+    // A drain is "in a loop" relative to its construction site: a
+    // channel built inside the same loop iteration as its single
+    // blocking `.recv()` (request/ack pairs) lives and dies per
+    // iteration and needs no close path.
+    let in_loop_beyond = |off: usize, construction: usize| {
+        loops
+            .iter()
+            .any(|&(s, e)| off > s && off < e && !(construction > s && construction < e))
+    };
+
+    for c in &chans {
+        if c.cap == "0" {
+            findings.push(Finding::error(
+                PASS,
+                &file.rel,
+                c.line,
+                "capacity-zero channel construction — util::chan::bounded asserts \
+                 cap > 0 and would panic at runtime"
+                    .to_string(),
+            ));
+        }
+        let (Some(tx), Some(rx)) = (&c.tx, &c.rx) else {
+            findings.push(Finding::note(
+                PASS,
+                &file.rel,
+                c.line,
+                format!(
+                    "channel (cap `{}`) endpoints are not destructured into a \
+                     `(tx, rx)` binding — topology untracked",
+                    c.cap
+                ),
+            ));
+            continue;
+        };
+
+        let tx_aliases = expand_aliases(file, tx);
+        let rx_aliases = expand_aliases(file, rx);
+        let in_test = |off: usize| file.in_test(off);
+
+        let drains: Vec<(&str, usize)> = rx_aliases
+            .iter()
+            .flat_map(|a| endpoint_ops(code, a, DRAIN_OPS, in_test))
+            .collect();
+        let closes: Vec<(&str, usize)> = tx_aliases
+            .iter()
+            .flat_map(|a| endpoint_ops(code, a, &[".close("], in_test))
+            .collect();
+        // Senders count as used once any tx alias appears past the
+        // construction statement (a move into a closure, a `.send(…)`,
+        // a clone — all alias occurrences).
+        let tx_used = tx_aliases.iter().any(|a| {
+            word_occurrences(code, a)
+                .iter()
+                .any(|&at| at > c.offset && !file.in_test(at))
+        });
+
+        if drains.is_empty() && tx_used && !rx.starts_with('_') {
+            findings.push(Finding::error(
+                PASS,
+                &file.rel,
+                c.line,
+                format!(
+                    "channel `({tx}, {rx})` has live senders but no drain: no \
+                     recv/recv_timeout/drain_into/try_recv on `{rx}` or its \
+                     aliases — senders would hit the capacity wall and block \
+                     forever (prefix the receiver with `_` if intentional)"
+                ),
+            ));
+        }
+        let blocking_drain = drains
+            .iter()
+            .find(|(op, off)| *op == ".recv(" && in_loop_beyond(*off, c.offset));
+        if let Some((_, off)) = blocking_drain {
+            if closes.is_empty() {
+                findings.push(Finding::error(
+                    PASS,
+                    &file.rel,
+                    file.scan.line_of(*off),
+                    format!(
+                        "blocking `.recv()` drain loop on `{rx}` with no finish/abort \
+                         path: no `.close()` on `{tx}` or its aliases — the drain \
+                         thread parks forever at shutdown"
+                    ),
+                ));
+            }
+        }
+        findings.push(Finding::note(
+            PASS,
+            &file.rel,
+            c.line,
+            format!(
+                "channel (cap `{}`) tx `{tx}` rx `{rx}`: {} drain site(s), {} \
+                 close site(s)",
+                c.cap,
+                drains.len(),
+                closes.len()
+            ),
+        ));
+    }
+    chans.len()
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut total = 0usize;
+    for file in &ws.src {
+        total += check_file(file, &mut findings);
+    }
+    findings.push(Finding::note(
+        PASS,
+        "rust/src",
+        0,
+        format!("{total} channel construction site(s) mapped"),
+    ));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{find_test_ranges, lexer};
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let scan = lexer::scan(src);
+        let test_ranges = find_test_ranges(&scan.code);
+        SourceFile {
+            rel: rel.to_string(),
+            scan,
+            test_ranges,
+        }
+    }
+
+    fn errors(findings: &[Finding]) -> Vec<&Finding> {
+        findings
+            .iter()
+            .filter(|f| f.severity == crate::analysis::Severity::Error)
+            .collect()
+    }
+
+    #[test]
+    fn drained_and_closed_channel_is_clean() {
+        let f = file(
+            "rust/src/util/pool.rs",
+            "fn pool() { let (tx, rx) = bounded::<Job>(4);\n\
+             loop { match rx.recv_timeout(d) { _ => break } }\n\
+             tx.send(1); tx.close(); }",
+        );
+        let mut findings = Vec::new();
+        check_file(&f, &mut findings);
+        assert!(errors(&findings).is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn orphaned_receiver_is_flagged() {
+        let f = file(
+            "rust/src/engine/exchange.rs",
+            "fn leak() { let (tx, rx) = bounded(8); tx.send(1); }",
+        );
+        let mut findings = Vec::new();
+        check_file(&f, &mut findings);
+        let errs = errors(&findings);
+        assert_eq!(errs.len(), 1, "{findings:?}");
+        assert!(errs[0].message.contains("no drain"), "{}", errs[0].message);
+        assert_eq!(errs[0].line, 1);
+    }
+
+    #[test]
+    fn blocking_loop_without_close_is_flagged() {
+        let f = file(
+            "rust/src/engine/exchange.rs",
+            "fn worker() { let (tx, rx) = bounded(8);\n\
+             tx.send(1);\nloop { let _ = rx.recv(); }\n}",
+        );
+        let mut findings = Vec::new();
+        check_file(&f, &mut findings);
+        let errs = errors(&findings);
+        assert_eq!(errs.len(), 1, "{findings:?}");
+        assert!(errs[0].message.contains("finish/abort"), "{}", errs[0].message);
+    }
+
+    #[test]
+    fn capacity_zero_and_unbounded_are_flagged() {
+        let f = file(
+            "rust/src/broker/core.rs",
+            "fn bad() { let (tx, rx) = bounded(0); let _ = rx.recv(); tx.close();\n\
+             let (a, b) = mpsc::channel(); }",
+        );
+        let mut findings = Vec::new();
+        check_file(&f, &mut findings);
+        let errs = errors(&findings);
+        assert_eq!(errs.len(), 2, "{findings:?}");
+    }
+
+    #[test]
+    fn drain_through_field_alias_and_index_is_seen() {
+        let f = file(
+            "rust/src/net/transport.rs",
+            "struct S { rxs: Vec<Receiver<u8>> }\n\
+             fn build() -> S { let (txs, rxs) = bounded(4); txs.send(1); \
+             txs.close(); S { rxs } }\n\
+             impl S { fn drain(&self) { self.rxs[0].drain_into(buf, 16); } }",
+        );
+        let mut findings = Vec::new();
+        check_file(&f, &mut findings);
+        assert!(errors(&findings).is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn handoff_to_same_file_fn_is_seen() {
+        let f = file(
+            "rust/src/net/transport.rs",
+            "fn spawn() { let (tx, rx) = bounded(4); tx.send(1); tx.close(); \
+             writer_loop::<M>(stream, rx, ping); }\n\
+             fn writer_loop<M>(stream: S, out_rx: Receiver<M>, ping: u64) {\n\
+             loop { match out_rx.recv_timeout(t) { _ => break } } }",
+        );
+        let mut findings = Vec::new();
+        check_file(&f, &mut findings);
+        assert!(errors(&findings).is_empty(), "{findings:?}");
+    }
+}

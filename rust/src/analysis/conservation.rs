@@ -1,0 +1,598 @@
+//! Pass `conservation` — counter provenance from bump to results.json.
+//!
+//! The PR-7 `parse_failures` bug class: a counter field faithfully
+//! incremented on the hot path but dropped on the floor because the
+//! fragment/summary merge never folded it, so results.json reported
+//! zero forever.  This pass closes that hole structurally:
+//!
+//! 1. **vocabulary** — the numeric fields of the [`TRACKED`] report
+//!    structs (StepStats, TransportStats, TaskReport, EngineReport,
+//!    RecoveryStats, ResilienceStats, RunSummary), parsed from their
+//!    defining files;
+//! 2. **bump sites** — `.field += …` and `.field.fetch_add(…)` in
+//!    non-test code under [`BUMP_SCOPE`], excluding `fn merge` bodies
+//!    (a merge *is* the conservation step, not a new source);
+//! 3. **merge reach** — a bumped field must appear in some `fn merge`
+//!    body of a tracked file, or be initialized in a tracked-struct
+//!    literal (aggregation constructors like `EngineReport { events_in:
+//!    tasks.iter().map(…).sum(), … }` and `Self { … }` inside the
+//!    struct's own impl both count);
+//! 4. **key reach** — the field must feed a `.set("…")` key inside a
+//!    `fn to_json` body of the schema pass's curated emitters
+//!    ([`crate::analysis::schema::RESULT_EMITTERS`]), and every derived
+//!    key must round-trip against [`schema::emitter_key_table`] — whose
+//!    docs sync the schema pass already enforces.
+//!
+//! A counter bumped but never merged, or merged but never emitted, is
+//! an error at the bump site with `file:line` provenance.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::{fn_items, schema, Finding, SourceFile, Workspace};
+
+const PASS: &str = "conservation";
+
+/// Counter-bearing report structs and their defining files.
+const TRACKED: &[(&str, &str)] = &[
+    ("StepStats", "rust/src/pipelines/mod.rs"),
+    ("TransportStats", "rust/src/net/transport.rs"),
+    ("TaskReport", "rust/src/engine/task.rs"),
+    ("EngineReport", "rust/src/engine/core.rs"),
+    ("RecoveryStats", "rust/src/coordinator/mod.rs"),
+    ("ResilienceStats", "rust/src/engine/supervisor.rs"),
+    ("RunSummary", "rust/src/coordinator/mod.rs"),
+];
+
+/// Path prefixes whose increments are audited.
+const BUMP_SCOPE: &[&str] = &[
+    "rust/src/engine/",
+    "rust/src/broker/",
+    "rust/src/pipelines/",
+    "rust/src/net/",
+    "rust/src/coordinator/",
+];
+
+/// Field types that count as counters.
+const NUMERIC: &[&str] = &["u64", "u32", "usize", "f64"];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-bounded occurrences of `word`.
+fn word_occurrences(code: &str, word: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        from = at + word.len();
+        let left = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + word.len();
+        let right = end >= bytes.len() || !is_ident(bytes[end]);
+        if left && right {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Does `.field` occur word-bounded (on the right) in `text`?
+fn dotted_field(text: &str, field: &str) -> bool {
+    let bytes = text.as_bytes();
+    let needle = format!(".{field}");
+    let mut from = 0;
+    while let Some(pos) = text[from..].find(&needle) {
+        let at = from + pos;
+        from = at + 1;
+        let end = at + needle.len();
+        if end >= bytes.len() || !is_ident(bytes[end]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Numeric field names of `struct name { … }` in its defining file.
+fn struct_fields(file: &SourceFile, name: &str) -> Vec<String> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let needle = format!("struct {name}");
+    let Some(at) = word_occurrences(code, &needle).first().copied() else {
+        return Vec::new();
+    };
+    let mut i = at + needle.len();
+    while i < bytes.len() && bytes[i] != b'{' && bytes[i] != b';' && bytes[i] != b'(' {
+        i += 1;
+    }
+    if i >= bytes.len() || bytes[i] != b'{' {
+        return Vec::new(); // tuple/unit struct: nothing to track
+    }
+    let open = i;
+    let mut depth = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let body = &code[open + 1..i.min(bytes.len())];
+    let mut fields = Vec::new();
+    for decl in body.split(',') {
+        let Some((lhs, ty)) = decl.split_once(':') else {
+            continue;
+        };
+        let field = lhs.trim().rsplit(char::is_whitespace).next().unwrap_or("");
+        let ty = ty.trim();
+        if !field.is_empty()
+            && field.bytes().all(is_ident)
+            && NUMERIC.contains(&ty)
+        {
+            fields.push(field.to_string());
+        }
+    }
+    fields
+}
+
+/// Byte spans of `impl … Name … { … }` blocks (inherent and trait
+/// impls), where `Self { … }` literals construct `Name`.
+fn impl_spans(code: &str, name: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    for at in word_occurrences(code, "impl") {
+        let mut i = at;
+        while i < bytes.len() && bytes[i] != b'{' && bytes[i] != b';' {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'{' {
+            continue;
+        }
+        if word_occurrences(&code[at..i], name).is_empty() {
+            continue;
+        }
+        let open = i;
+        let mut depth = 0usize;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        out.push((open, (i + 1).min(bytes.len())));
+    }
+    out
+}
+
+/// Field names initialized in struct-literal expressions of `name`
+/// anywhere in `file` (including `Self { … }` inside the struct's own
+/// impl blocks): both `field: value` inits and shorthand `field,`.
+fn literal_inits(file: &SourceFile, name: &str, out: &mut BTreeSet<String>) {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let selfs = impl_spans(code, name);
+
+    let mut starts: Vec<usize> = word_occurrences(code, name);
+    for at in word_occurrences(code, "Self") {
+        if selfs.iter().any(|&(s, e)| at >= s && at < e) {
+            starts.push(at);
+        }
+    }
+    for at in starts {
+        let word_len = if code[at..].starts_with("Self") { 4 } else { name.len() };
+        let mut i = at + word_len;
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'{' {
+            continue;
+        }
+        // Reject declarations and function bodies: a statement prefix
+        // containing `impl`/`struct`/`fn`/… means this `{` opens an
+        // item, not a literal.
+        let mut s = at;
+        while s > 0 && !matches!(bytes[s - 1], b';' | b'{' | b'}') {
+            s -= 1;
+        }
+        let prefix = &code[s..at];
+        if ["impl", "struct", "enum", "trait", "fn", "for", "where"]
+            .iter()
+            .any(|kw| !word_occurrences(prefix, kw).is_empty())
+        {
+            continue;
+        }
+        // Scan the literal body for field keys at brace depth 1,
+        // paren/bracket depth 0 (so `vec![a, b]` elements and call
+        // arguments never read as shorthand inits).
+        let open = i;
+        let mut depth = 0i32;
+        let mut sub = 0i32;
+        let mut j = open;
+        let close;
+        loop {
+            if j >= bytes.len() {
+                close = bytes.len();
+                break;
+            }
+            match bytes[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = j;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let mut k = open + 1;
+        depth = 1;
+        while k < close {
+            match bytes[k] {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                b'(' | b'[' => sub += 1,
+                b')' | b']' => sub -= 1,
+                c if is_ident(c) && depth == 1 && sub == 0 => {
+                    let start = k;
+                    while k < close && is_ident(bytes[k]) {
+                        k += 1;
+                    }
+                    let word = &code[start..k];
+                    // Preceded (past whitespace) by `{` or `,`?
+                    let mut p = start;
+                    while p > open && (bytes[p - 1] as char).is_whitespace() {
+                        p -= 1;
+                    }
+                    let at_field_position = p == open + 1 || matches!(bytes[p - 1], b'{' | b',');
+                    if !at_field_position {
+                        continue;
+                    }
+                    // Followed (past whitespace) by `:` (init), or by
+                    // `,`/`}` (shorthand)?
+                    let mut q = k;
+                    while q < close && (bytes[q] as char).is_whitespace() {
+                        q += 1;
+                    }
+                    let init = q < close && bytes[q] == b':' && !code[q..].starts_with("::");
+                    let shorthand = q >= close || matches!(bytes[q], b',' | b'}');
+                    if init || shorthand {
+                        out.insert(word.to_string());
+                    }
+                    continue;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+    }
+}
+
+/// One audited increment site.
+struct Bump {
+    field: String,
+    file: String,
+    line: usize,
+}
+
+/// `.field += …` and `.field.fetch_add(…)` sites in non-test scope
+/// code, excluding `fn merge` bodies.
+fn bump_sites(file: &SourceFile, vocab: &BTreeSet<String>) -> Vec<Bump> {
+    let code = &file.scan.code;
+    let bytes = code.as_bytes();
+    let merge_spans: Vec<(usize, usize)> = fn_items(code)
+        .into_iter()
+        .filter(|f| f.name == "merge" || f.name == "merge_results")
+        .map(|f| (f.open, f.close))
+        .collect();
+    let in_merge = |off: usize| merge_spans.iter().any(|&(s, e)| off >= s && off < e);
+
+    let mut out = Vec::new();
+    for field in vocab {
+        let needle = format!(".{field}");
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(&needle) {
+            let at = from + pos;
+            from = at + 1;
+            let end = at + needle.len();
+            if end < bytes.len() && is_ident(bytes[end]) {
+                continue;
+            }
+            if file.in_test(at) || in_merge(at) {
+                continue;
+            }
+            let rest = &code[end..];
+            let trimmed = rest.trim_start();
+            let bumped = trimmed.starts_with("+=") || rest.starts_with(".fetch_add(");
+            if bumped {
+                out.push(Bump {
+                    field: field.clone(),
+                    file: file.rel.clone(),
+                    line: file.scan.line_of(at),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Map each vocabulary field to the results.json keys whose `.set`
+/// argument span reads it, inside the curated emitters' `fn to_json`
+/// bodies.  Public: the flow-analysis integration tests round-trip
+/// this table against [`schema::emitter_key_table`].
+pub fn field_key_table(ws: &Workspace) -> BTreeMap<String, BTreeSet<String>> {
+    let vocab = vocabulary(ws);
+    let mut table: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for file in &ws.src {
+        if !schema::RESULT_EMITTERS.contains(&file.rel.as_str()) {
+            continue;
+        }
+        let code = &file.scan.code;
+        let bytes = code.as_bytes();
+        for (open, close) in schema::to_json_bodies(file) {
+            let mut at = open;
+            while let Some(pos) = code[at..close].find(".set(") {
+                let call = at + pos;
+                at = call + 5;
+                // Literal keys only, exactly like the schema pass: the
+                // quote must directly follow the paren (dynamic keys
+                // like `set(point.name(), …)` are skipped).
+                let mut q = call + 5;
+                while q < bytes.len() && (bytes[q] == b' ' || bytes[q] == b'\n') {
+                    q += 1;
+                }
+                if q >= bytes.len() || bytes[q] != b'"' {
+                    continue;
+                }
+                let key = match file.scan.string_at_or_after(q) {
+                    Some(lit) if lit.offset == q => lit.value.clone(),
+                    _ => continue,
+                };
+                // The argument span of this `.set(…)` call.
+                let popen = call + 4;
+                let mut depth = 0usize;
+                let mut j = popen;
+                while j < bytes.len() {
+                    match bytes[j] {
+                        b'(' => depth += 1,
+                        b')' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                let args = &code[popen..j.min(bytes.len())];
+                for (field, _) in vocab.iter() {
+                    if dotted_field(args, field) {
+                        table.entry(field.clone()).or_default().insert(key.clone());
+                    }
+                }
+            }
+        }
+    }
+    table
+}
+
+/// The tracked vocabulary: numeric field name → structs declaring it.
+fn vocabulary(ws: &Workspace) -> BTreeMap<String, Vec<&'static str>> {
+    let mut vocab: BTreeMap<String, Vec<&'static str>> = BTreeMap::new();
+    for (name, rel) in TRACKED {
+        let Some(file) = ws.src.iter().find(|f| f.rel == *rel) else {
+            continue;
+        };
+        for field in struct_fields(file, name) {
+            vocab.entry(field).or_default().push(name);
+        }
+    }
+    vocab
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let vocab = vocabulary(ws);
+    if vocab.is_empty() {
+        findings.push(Finding::note(
+            PASS,
+            "rust/src",
+            0,
+            "no tracked report structs in this tree — conservation checks skipped"
+                .to_string(),
+        ));
+        return findings;
+    }
+    let fields: BTreeSet<String> = vocab.keys().cloned().collect();
+
+    // Where does each field get conserved?  (a) `fn merge` bodies in
+    // tracked files; (b) tracked-struct literal initializations
+    // anywhere in the tree.
+    let tracked_files: BTreeSet<&str> = TRACKED.iter().map(|(_, rel)| *rel).collect();
+    let mut merged: BTreeSet<String> = BTreeSet::new();
+    for file in &ws.src {
+        if tracked_files.contains(file.rel.as_str()) {
+            let code = &file.scan.code;
+            for item in fn_items(code) {
+                if item.name != "merge" && item.name != "merge_results" {
+                    continue;
+                }
+                let body = &code[item.open..item.close];
+                for field in &fields {
+                    if dotted_field(body, field) {
+                        merged.insert(field.clone());
+                    }
+                }
+            }
+        }
+        for (name, _) in TRACKED {
+            literal_inits(file, name, &mut merged);
+        }
+    }
+    merged.retain(|f| fields.contains(f));
+
+    let key_table = field_key_table(ws);
+    let schema_table = schema::emitter_key_table(ws);
+
+    let mut bumps: Vec<Bump> = Vec::new();
+    for file in &ws.src {
+        if BUMP_SCOPE.iter().any(|p| file.rel.starts_with(p)) {
+            bumps.extend(bump_sites(file, &fields));
+        }
+    }
+
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for bump in &bumps {
+        if !seen.insert(bump.field.as_str()) {
+            continue; // one verdict per field, at its first bump site
+        }
+        let structs = vocab
+            .get(&bump.field)
+            .map(|v| v.join("/"))
+            .unwrap_or_default();
+        if !merged.contains(&bump.field) {
+            findings.push(Finding::error(
+                PASS,
+                &bump.file,
+                bump.line,
+                format!(
+                    "counter `{}` ({structs}) is incremented here but never folded \
+                     by a `fn merge` in a tracked file nor initialized in any \
+                     tracked-struct literal — it is silently lost before \
+                     results.json (the `parse_failures` bug class)",
+                    bump.field
+                ),
+            ));
+            continue;
+        }
+        let keys = key_table.get(&bump.field);
+        match keys {
+            None => findings.push(Finding::error(
+                PASS,
+                &bump.file,
+                bump.line,
+                format!(
+                    "counter `{}` ({structs}) is incremented and merged but never \
+                     read by a `.set(\"…\")` emission in the curated results.json \
+                     emitters — the merged value goes nowhere",
+                    bump.field
+                ),
+            )),
+            Some(keys) => {
+                for key in keys {
+                    if !schema_table.contains_key(key) {
+                        findings.push(Finding::error(
+                            PASS,
+                            &bump.file,
+                            bump.line,
+                            format!(
+                                "counter `{}` maps to results key \"{key}\" which the \
+                                 schema pass's emitter key table does not contain — \
+                                 the two passes disagree about the emitters",
+                                bump.field
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    findings.push(Finding::note(
+        PASS,
+        "rust/src",
+        0,
+        format!(
+            "{} counter field(s) across {} tracked struct(s); {} bump site(s) \
+             audited; {} field(s) mapped to {} results key(s)",
+            fields.len(),
+            TRACKED.len(),
+            bumps.len(),
+            key_table.len(),
+            key_table.values().flatten().collect::<BTreeSet<_>>().len()
+        ),
+    ));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{find_test_ranges, lexer};
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let scan = lexer::scan(src);
+        let test_ranges = find_test_ranges(&scan.code);
+        SourceFile {
+            rel: rel.to_string(),
+            scan,
+            test_ranges,
+        }
+    }
+
+    #[test]
+    fn numeric_fields_parsed_from_struct() {
+        let f = file(
+            "rust/src/pipelines/mod.rs",
+            "pub struct StepStats { pub events_in: u64, pub name: String, \
+             pub rate: f64, pub step: StepStats }",
+        );
+        let fields = struct_fields(&f, "StepStats");
+        assert_eq!(fields, vec!["events_in".to_string(), "rate".to_string()]);
+    }
+
+    #[test]
+    fn literal_inits_cover_shorthand_and_self() {
+        let f = file(
+            "rust/src/engine/supervisor.rs",
+            "pub struct ResilienceStats { pub injected: u64, pub healed: u64 }\n\
+             impl ResilienceStats { fn from(healed: u64) -> Self { \
+             Self { injected: 1, healed } } }",
+        );
+        let mut inits = BTreeSet::new();
+        literal_inits(&f, "ResilienceStats", &mut inits);
+        assert!(inits.contains("injected"), "{inits:?}");
+        assert!(inits.contains("healed"), "{inits:?}");
+    }
+
+    #[test]
+    fn struct_declaration_is_not_a_literal() {
+        let f = file(
+            "rust/src/engine/core.rs",
+            "pub struct EngineReport { pub events_in: u64 }",
+        );
+        let mut inits = BTreeSet::new();
+        literal_inits(&f, "EngineReport", &mut inits);
+        assert!(inits.is_empty(), "{inits:?}");
+    }
+
+    #[test]
+    fn bump_sites_skip_merge_bodies_and_tests() {
+        let f = file(
+            "rust/src/engine/task.rs",
+            "impl T { fn tick(&mut self) { self.events_in += 1; }\n\
+             fn merge(&mut self, o: &T) { self.events_in += o.events_in; } }\n\
+             #[cfg(test)] mod tests { fn t() { x.events_in += 9; } }",
+        );
+        let vocab: BTreeSet<String> = ["events_in".to_string()].into();
+        let bumps = bump_sites(&f, &vocab);
+        assert_eq!(bumps.len(), 1, "only the tick() bump counts");
+        assert_eq!(bumps[0].line, 1);
+    }
+}

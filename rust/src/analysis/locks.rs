@@ -19,12 +19,22 @@
 //! (`….lock()….is_some()`) binds the value and not the guard, and
 //! `drop(guard)` releases early.  Condvar `wait(guard)` atomically
 //! releases, so it is deliberately not an acquisition.
+//!
+//! The `locks2` pass ([`run_deep`]) extends the same walk one call
+//! level deep within each file: every function body is summarized
+//! (which lock classes it acquires, which blocking channel ops it
+//! contains), and a call to a same-file helper — bare `helper(…)` or
+//! `self.helper(…)` — made while a guard is held contributes the
+//! callee's acquisitions as edges and its blocking ops as errors at
+//! the call site.  Only findings that need the call-mediated leg are
+//! reported, so `locks` and `locks2` never duplicate each other.
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::analysis::{Finding, SourceFile, Workspace};
+use crate::analysis::{fn_items, Finding, SourceFile, Workspace};
 
 const PASS: &str = "locks";
+const PASS2: &str = "locks2";
 
 /// Files whose lock sites enter the graph.
 const SCOPE: &[&str] = &[
@@ -55,6 +65,51 @@ struct Graph {
     edges: BTreeMap<(String, String), (String, usize)>,
     classes: BTreeSet<String>,
     sites: usize,
+    /// Edges that needed a call-mediated leg (locks2 only).
+    call_edges: BTreeSet<(String, String)>,
+}
+
+/// Per-function summary for the one-level interprocedural extension:
+/// what the body acquires and where it can park.
+#[derive(Default)]
+struct FnSummary {
+    /// Lock classes `.lock()`ed anywhere in the body, with lines.
+    acquires: Vec<(String, usize)>,
+    /// Blocking channel ops anywhere in the body, with lines.
+    blocking: Vec<(&'static str, usize)>,
+}
+
+/// Summaries of every non-test `fn` body in `file`, by name.  Same-name
+/// overloads (trait impls on several types) merge conservatively —
+/// a call resolves to the union of their effects.
+fn summarize(file: &SourceFile) -> BTreeMap<String, FnSummary> {
+    let code = &file.scan.code;
+    let key = file_key(&file.rel);
+    let mut out: BTreeMap<String, FnSummary> = BTreeMap::new();
+    for item in fn_items(code) {
+        if file.in_test(item.open) {
+            continue;
+        }
+        let entry = out.entry(item.name.clone()).or_default();
+        let mut from = item.open;
+        while let Some(pos) = code[from..item.close].find(".lock()") {
+            let at = from + pos;
+            from = at + ".lock()".len();
+            entry.acquires.push((
+                format!("{key}.{}", receiver_field(code, at)),
+                file.scan.line_of(at),
+            ));
+        }
+        for &op in BLOCKING_OPS {
+            let mut from = item.open;
+            while let Some(pos) = code[from..item.close].find(op) {
+                let at = from + pos;
+                from = at + op.len();
+                entry.blocking.push((op, file.scan.line_of(at)));
+            }
+        }
+    }
+    out
 }
 
 impl Graph {
@@ -219,8 +274,16 @@ fn binding_of(prefix: &str) -> Option<Option<String>> {
 }
 
 /// Walk one file, adding acquisition edges and emitting
-/// blocking-op-under-lock findings.
-fn walk(file: &SourceFile, graph: &mut Graph, findings: &mut Vec<Finding>) {
+/// blocking-op-under-lock findings.  With `summaries` (locks2 mode)
+/// the walk additionally resolves same-file helper calls made under a
+/// held guard, and leaves the purely lexical blocking errors to the
+/// plain `locks` pass so the two never double-report.
+fn walk(
+    file: &SourceFile,
+    graph: &mut Graph,
+    findings: &mut Vec<Finding>,
+    summaries: Option<&BTreeMap<String, FnSummary>>,
+) {
     let code = &file.scan.code;
     let bytes = code.as_bytes();
     let key = file_key(&file.rel);
@@ -302,7 +365,7 @@ fn walk(file: &SourceFile, graph: &mut Graph, findings: &mut Vec<Finding>) {
                 for g in &held {
                     graph.add_edge(&g.class, CHAN_CLASS, &file.rel, line);
                 }
-                if BLOCKING_OPS.contains(&op) && !held.is_empty() {
+                if BLOCKING_OPS.contains(&op) && !held.is_empty() && summaries.is_none() {
                     let holding: Vec<&str> =
                         held.iter().map(|g| g.class.as_str()).collect();
                     findings.push(Finding::error(
@@ -325,6 +388,91 @@ fn walk(file: &SourceFile, graph: &mut Graph, findings: &mut Vec<Finding>) {
         }
         if matched {
             continue;
+        }
+
+        // locks2: a same-file helper call under a held guard pulls the
+        // callee's summary into the caller's context.
+        if let Some(summaries) = summaries {
+            if !held.is_empty()
+                && (bytes[i].is_ascii_alphabetic() || bytes[i] == b'_')
+                && (i == 0 || !is_ident(bytes[i - 1]))
+            {
+                let start = i;
+                let mut j = i;
+                while j < bytes.len() && is_ident(bytes[j]) {
+                    j += 1;
+                }
+                let name = &code[start..j];
+                let mut k = j;
+                if code[k..].starts_with("::<") {
+                    let mut depth = 0usize;
+                    let mut m = k + 2;
+                    while m < bytes.len() {
+                        match bytes[m] {
+                            b'<' => depth += 1,
+                            b'>' => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        m += 1;
+                    }
+                    k = (m + 1).min(bytes.len());
+                }
+                if k < bytes.len() && bytes[k] == b'(' {
+                    if let Some(summary) = summaries.get(name) {
+                        // Resolve only unambiguous same-file targets:
+                        // a bare call that is not the definition, or a
+                        // `self.…` method — `other.helper(…)` could be
+                        // any type's method.
+                        let dotted = start > 0 && bytes[start - 1] == b'.';
+                        let resolved = if dotted {
+                            receiver_field(code, start - 1) == "self"
+                        } else {
+                            let mut p = start;
+                            while p > 0 && (bytes[p - 1] as char).is_whitespace() {
+                                p -= 1;
+                            }
+                            !(p >= 2 && &code[p - 2..p] == "fn")
+                        };
+                        if resolved {
+                            let line = file.scan.line_of(start);
+                            for (class, _) in &summary.acquires {
+                                graph.classes.insert(class.clone());
+                                for g in &held {
+                                    graph.add_edge(&g.class, class, &file.rel, line);
+                                    graph
+                                        .call_edges
+                                        .insert((g.class.clone(), class.clone()));
+                                }
+                            }
+                            if let Some((op, op_line)) = summary.blocking.first() {
+                                let holding: Vec<&str> =
+                                    held.iter().map(|g| g.class.as_str()).collect();
+                                findings.push(Finding::error(
+                                    PASS2,
+                                    &file.rel,
+                                    line,
+                                    format!(
+                                        "call to `{name}` reaches blocking channel op \
+                                         `{}` ({}:{op_line}) while holding lock \
+                                         guard(s) [{}] — the guard stays held across \
+                                         the park",
+                                        op.trim_start_matches('.').trim_end_matches('('),
+                                        file.rel,
+                                        holding.join(", ")
+                                    ),
+                                ));
+                            }
+                        }
+                    }
+                    i = j;
+                    continue;
+                }
+            }
         }
 
         i += 1;
@@ -413,7 +561,7 @@ pub fn run(ws: &Workspace) -> Vec<Finding> {
     let mut findings = Vec::new();
     for file in &ws.src {
         if SCOPE.contains(&file.rel.as_str()) {
-            walk(file, &mut graph, &mut findings);
+            walk(file, &mut graph, &mut findings, None);
         }
     }
 
@@ -487,6 +635,98 @@ pub fn run(ws: &Workspace) -> Vec<Finding> {
     findings
 }
 
+/// The `locks2` pass: the lexical walk, one call level deep.  Reports
+/// only hazards that need a call-mediated leg — blocking ops reached
+/// through a helper call under a guard, re-entrant acquisition via a
+/// callee, and lock-order cycles at least one of whose edges crosses a
+/// call — the purely lexical cases are [`run`]'s to report.
+pub fn run_deep(ws: &Workspace) -> Vec<Finding> {
+    let mut graph = Graph::default();
+    let mut findings = Vec::new();
+    let mut fn_count = 0usize;
+    for file in &ws.src {
+        if SCOPE.contains(&file.rel.as_str()) {
+            let summaries = summarize(file);
+            fn_count += summaries.len();
+            walk(file, &mut graph, &mut findings, Some(&summaries));
+        }
+    }
+
+    for ((from, to), (file, line)) in &graph.edges {
+        if from == to && graph.call_edges.contains(&(from.clone(), to.clone())) {
+            findings.push(Finding::error(
+                PASS2,
+                file,
+                *line,
+                format!(
+                    "re-entrant acquisition through a helper call: lock class \
+                     `{from}` acquired by the callee while already held at the \
+                     call site — std::sync::Mutex self-deadlocks"
+                ),
+            ));
+        }
+    }
+
+    let mut adj: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for (from, to) in graph.edges.keys() {
+        adj.entry(from.clone()).or_default().insert(to.clone());
+    }
+    for component in sccs(&adj) {
+        let has_call_leg = graph
+            .call_edges
+            .iter()
+            .any(|(a, b)| component.contains(a) && component.contains(b));
+        if !has_call_leg {
+            continue; // fully lexical cycle: the plain pass reports it
+        }
+        let legs: Vec<String> = graph
+            .edges
+            .iter()
+            .filter(|((from, to), _)| component.contains(from) && component.contains(to))
+            .map(|((from, to), (f, l))| format!("{from} → {to} ({f}:{l})"))
+            .collect();
+        let (file, line) = graph
+            .edges
+            .iter()
+            .find(|((from, to), _)| component.contains(from) && component.contains(to))
+            .map(|(_, (f, l))| (f.clone(), *l))
+            .unwrap_or((String::new(), 0));
+        findings.push(Finding::error(
+            PASS2,
+            &file,
+            line,
+            format!(
+                "interprocedural lock-order cycle among [{}]: {} — at least one \
+                 leg crosses a helper call, invisible to the lexical pass",
+                component.join(", "),
+                legs.join(", ")
+            ),
+        ));
+    }
+
+    for ((from, to), (file, line)) in &graph.edges {
+        if graph.call_edges.contains(&(from.clone(), to.clone())) {
+            findings.push(Finding::note(
+                PASS2,
+                file,
+                *line,
+                format!("call-mediated acquisition edge: {from} → {to}"),
+            ));
+        }
+    }
+    findings.push(Finding::note(
+        PASS2,
+        "rust/src",
+        0,
+        format!(
+            "{fn_count} function summary(ies) resolved one call level deep; {} \
+             call-mediated edge(s)",
+            graph.call_edges.len()
+        ),
+    ));
+    findings
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -506,7 +746,18 @@ mod tests {
         let mut graph = Graph::default();
         let mut findings = Vec::new();
         for (rel, src) in files {
-            walk(&file(rel, src), &mut graph, &mut findings);
+            walk(&file(rel, src), &mut graph, &mut findings, None);
+        }
+        (graph, findings)
+    }
+
+    fn run_deep_on(files: &[(&str, &str)]) -> (Graph, Vec<Finding>) {
+        let mut graph = Graph::default();
+        let mut findings = Vec::new();
+        for (rel, src) in files {
+            let f = file(rel, src);
+            let summaries = summarize(&f);
+            walk(&f, &mut graph, &mut findings, Some(&summaries));
         }
         (graph, findings)
     }
@@ -615,6 +866,42 @@ mod tests {
         assert!(graph
             .edges
             .contains_key(&("transport.state".to_string(), "transport.error".to_string())));
+    }
+
+    #[test]
+    fn blocking_op_across_helper_call_flagged_by_deep_walk() {
+        let src = "impl S { fn outer(&self) { let g = self.state.lock().expect(\"p\"); \
+                   self.flush(); }\n\
+                   fn flush(&self) { self.tx.send(1); } }";
+        let (_, shallow) = run_on(&[("rust/src/engine/exchange.rs", src)]);
+        assert!(shallow.is_empty(), "lexical pass is blind here: {shallow:?}");
+        let (_, deep) = run_deep_on(&[("rust/src/engine/exchange.rs", src)]);
+        assert_eq!(deep.len(), 1, "{deep:?}");
+        assert!(deep[0].message.contains("call to `flush`"), "{}", deep[0].message);
+        assert!(deep[0].message.contains("exchange.state"), "{}", deep[0].message);
+    }
+
+    #[test]
+    fn reentrant_acquisition_via_callee_makes_call_edge() {
+        let src = "impl S { fn outer(&self) { let g = self.state.lock().expect(\"p\"); \
+                   refresh(x); }\n }\n\
+                   fn refresh(x: u8) { let h = GLOBAL.state.lock().expect(\"p\"); }";
+        let (graph, _) = run_deep_on(&[("rust/src/engine/supervisor.rs", src)]);
+        assert!(graph.call_edges.contains(&(
+            "supervisor.state".to_string(),
+            "supervisor.state".to_string()
+        )));
+    }
+
+    #[test]
+    fn unresolved_receiver_is_not_a_call_edge() {
+        // `other.flush(…)` could be any type's method — never resolved.
+        let src = "impl S { fn outer(&self, other: &T) { \
+                   let g = self.state.lock().expect(\"p\"); other.flush(); }\n\
+                   fn flush(&self) { self.tx.send(1); } }";
+        let (graph, deep) = run_deep_on(&[("rust/src/engine/exchange.rs", src)]);
+        assert!(deep.is_empty(), "{deep:?}");
+        assert!(graph.call_edges.is_empty());
     }
 
     #[test]

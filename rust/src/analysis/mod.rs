@@ -17,18 +17,27 @@
 //! | `tests`   | every `rust/tests/*.rs` has a `[[test]]` target in `Cargo.toml` |
 //! | `panics`  | `unwrap()`/`expect()`/`panic!` density in non-test `rust/src/` never grows (ratchet vs [`panics`] baseline) |
 //! | `locks`   | the static `Mutex`/`util::chan` acquisition graph is cycle-free and no blocking channel op runs under a held guard |
+//! | `locks2`  | the lock pass, interprocedural one level deep: guards held across calls into same-file helpers that acquire or block |
 //! | `schema`  | results.json / BENCH_hotpath.json keys ⇄ README + ARCHITECTURE schema docs |
 //! | `structs` | report-bearing structs are constructed field-exhaustively (no `..` functional update) |
 //! | `grammar` | config keys accepted by the YAML/spec parsers ⇄ the documented grammar |
+//! | `protocol` | driver/worker control-plane sends and receives conform to one declared state machine (HELLO → ASSIGN → READY → START → FRAGMENT, ERROR/EOF edges), and call order matches the flow |
+//! | `channels` | static channel topology: every constructed endpoint has a drain, every blocking drain loop a finish/abort path, no capacity-zero or unbounded constructions |
+//! | `conservation` | every counter field bumped in the data/control plane reaches a merge site and a results.json key |
 //!
-//! Findings print human-readably, serialize to `analysis_report.json`,
-//! and any `error`-severity finding makes the run exit nonzero — the
-//! CI `analyze` job is the standing gate.
+//! Findings print human-readably, serialize to `analysis_report.json`
+//! (and SARIF 2.1.0 via `--sarif`), and any `error`-severity finding
+//! makes the run exit nonzero — the CI `analyze` job is the standing
+//! gate.  `--changed-since <rev>` demotes errors in files untouched
+//! since `rev` to `[pre-existing]` notes for PR annotation.
 
+pub mod channels;
+pub mod conservation;
 pub mod grammar;
 pub mod lexer;
 pub mod locks;
 pub mod panics;
+pub mod protocol;
 pub mod schema;
 pub mod structs;
 pub mod tests_reg;
@@ -296,6 +305,116 @@ pub fn find_test_ranges(code: &str) -> Vec<(usize, usize)> {
     ranges
 }
 
+/// One `fn` item in masked code: its name, parameter-list text, and
+/// the byte span of its body (offset of `{` to just past the matching
+/// `}`).  Trait-method declarations without a body are skipped; nested
+/// items are included.  The generic section between name and parameter
+/// list is skipped angle-aware so `Fn(...)` bounds never masquerade as
+/// the parameter list.  Shared by the flow-sensitive passes
+/// ([`protocol`], [`channels`], [`conservation`], `locks2`).
+pub struct FnItem {
+    pub name: String,
+    pub params: String,
+    pub open: usize,
+    pub close: usize,
+}
+
+/// Every `fn` item with a body in masked code, in source order.
+pub fn fn_items(code: &str) -> Vec<FnItem> {
+    let bytes = code.as_bytes();
+    let ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("fn ") {
+        let at = from + pos;
+        from = at + 3;
+        if at > 0 && ident(bytes[at - 1]) {
+            continue; // an identifier that merely ends in `fn`
+        }
+        let mut i = at + 3;
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        let name_start = i;
+        while i < bytes.len() && ident(bytes[i]) {
+            i += 1;
+        }
+        if i == name_start {
+            continue; // `fn(...)` pointer type
+        }
+        let name = code[name_start..i].to_string();
+        // Skip generics angle-aware; stop at the parameter list.
+        let mut angle = 0usize;
+        let mut popen = None;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'<' => angle += 1,
+                b'>' => angle = angle.saturating_sub(1),
+                b'(' if angle == 0 => {
+                    popen = Some(i);
+                    break;
+                }
+                b'{' | b';' => break,
+                _ => {}
+            }
+            i += 1;
+        }
+        let Some(popen) = popen else { continue };
+        let mut depth = 0usize;
+        let mut j = popen;
+        while j < bytes.len() {
+            match bytes[j] {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let params = code[popen + 1..j.min(bytes.len())].to_string();
+        // Body: the first `{` after the signature; `;` first = no body.
+        let mut k = (j + 1).min(bytes.len());
+        let mut bopen = None;
+        while k < bytes.len() {
+            match bytes[k] {
+                b'{' => {
+                    bopen = Some(k);
+                    break;
+                }
+                b';' => break,
+                _ => k += 1,
+            }
+        }
+        let Some(bopen) = bopen else { continue };
+        let mut depth = 0usize;
+        let mut m = bopen;
+        while m < bytes.len() {
+            match bytes[m] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            m += 1;
+        }
+        out.push(FnItem {
+            name,
+            params,
+            open: bopen,
+            close: (m + 1).min(bytes.len()),
+        });
+    }
+    out
+}
+
 /// What [`run`] executes and where it writes.
 pub struct AnalyzeOptions {
     pub root: PathBuf,
@@ -303,15 +422,31 @@ pub struct AnalyzeOptions {
     pub passes: Vec<String>,
     /// Regenerate the panic-path baseline instead of checking it.
     pub bless: bool,
+    /// Diff-aware mode: demote errors in files unchanged since this
+    /// git revision to `[pre-existing]` notes.
+    pub changed_since: Option<String>,
 }
 
 /// All pass names, in execution order.
-pub const PASS_NAMES: &[&str] = &["tests", "panics", "locks", "schema", "structs", "grammar"];
+pub const PASS_NAMES: &[&str] = &[
+    "tests",
+    "panics",
+    "locks",
+    "locks2",
+    "schema",
+    "structs",
+    "grammar",
+    "protocol",
+    "channels",
+    "conservation",
+];
 
 /// The outcome of one analysis run.
 pub struct Report {
     pub passes: Vec<String>,
     pub findings: Vec<Finding>,
+    /// The revision `--changed-since` compared against, if any.
+    pub changed_since: Option<String>,
 }
 
 impl Report {
@@ -340,6 +475,79 @@ impl Report {
         );
         j.set("errors", Json::Int(self.error_count() as i64));
         j.set("notes", Json::Int(self.note_count() as i64));
+        if let Some(rev) = &self.changed_since {
+            j.set("changed_since", Json::Str(rev.clone()));
+        }
+        j
+    }
+
+    /// SARIF 2.1.0 rendering (one run, one rule per pass) for GitHub
+    /// code scanning.  Errors map to SARIF `error`, inventory notes to
+    /// `note`; line 0 (whole-file/tree findings) clamps to 1 as the
+    /// format requires a positive region.
+    pub fn to_sarif(&self) -> Json {
+        let mut rules = Vec::new();
+        for pass in &self.passes {
+            let mut rule = Json::obj();
+            rule.set("id", Json::Str(pass.clone()));
+            let mut name = Json::obj();
+            name.set("text", Json::Str(format!("sprobench analyze pass `{pass}`")));
+            rule.set("shortDescription", name);
+            rules.push(rule);
+        }
+        let mut driver = Json::obj();
+        driver.set("name", Json::Str("sprobench-analyze".to_string()));
+        driver.set(
+            "informationUri",
+            Json::Str("https://github.com/sprobench/sprobench".to_string()),
+        );
+        driver.set("rules", Json::Arr(rules));
+        let mut tool = Json::obj();
+        tool.set("driver", driver);
+
+        let mut results = Vec::new();
+        for f in &self.findings {
+            let mut message = Json::obj();
+            message.set("text", Json::Str(f.message.clone()));
+            let mut artifact = Json::obj();
+            artifact.set("uri", Json::Str(f.file.clone()));
+            let mut region = Json::obj();
+            region.set("startLine", Json::Int(f.line.max(1) as i64));
+            let mut physical = Json::obj();
+            physical.set("artifactLocation", artifact);
+            physical.set("region", region);
+            let mut location = Json::obj();
+            location.set("physicalLocation", physical);
+            let mut result = Json::obj();
+            result.set("ruleId", Json::Str(f.pass.to_string()));
+            result.set(
+                "level",
+                Json::Str(
+                    match f.severity {
+                        Severity::Error => "error",
+                        Severity::Note => "note",
+                    }
+                    .to_string(),
+                ),
+            );
+            result.set("message", message);
+            result.set("locations", Json::Arr(vec![location]));
+            results.push(result);
+        }
+
+        let mut run = Json::obj();
+        run.set("tool", tool);
+        run.set("results", Json::Arr(results));
+        let mut j = Json::obj();
+        j.set(
+            "$schema",
+            Json::Str(
+                "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json"
+                    .to_string(),
+            ),
+        );
+        j.set("version", Json::Str("2.1.0".to_string()));
+        j.set("runs", Json::Arr(vec![run]));
         j
     }
 
@@ -390,17 +598,86 @@ pub fn run(opts: &AnalyzeOptions) -> Result<Report, String> {
             "tests" => findings.extend(tests_reg::run(&ws)),
             "panics" => findings.extend(panics::run(&ws, opts.bless)?),
             "locks" => findings.extend(locks::run(&ws)),
+            "locks2" => findings.extend(locks::run_deep(&ws)),
             "schema" => findings.extend(schema::run(&ws)),
             "structs" => findings.extend(structs::run(&ws)),
             "grammar" => findings.extend(grammar::run(&ws)),
+            "protocol" => findings.extend(protocol::run(&ws)),
+            "channels" => findings.extend(channels::run(&ws)),
+            "conservation" => findings.extend(conservation::run(&ws)),
             _ => {}
         }
     }
 
-    Ok(Report {
+    let mut report = Report {
         passes: selected,
         findings,
-    })
+        changed_since: None,
+    };
+    if let Some(rev) = &opts.changed_since {
+        let changed = git_changed_files(&opts.root, rev)?;
+        apply_changed_filter(&mut report, &changed, rev);
+    }
+    Ok(report)
+}
+
+/// Paths changed since `rev`, as reported by `git diff --name-only`
+/// (workspace-relative, forward slashes — the same shape as
+/// [`Finding::file`]).  A git failure (no repo, unknown rev) is a hard
+/// error: silently treating everything as unchanged would demote every
+/// finding.
+pub fn git_changed_files(root: &Path, rev: &str) -> Result<std::collections::BTreeSet<String>, String> {
+    let out = std::process::Command::new("git")
+        .arg("-C")
+        .arg(root)
+        .arg("diff")
+        .arg("--name-only")
+        .arg(rev)
+        .output()
+        .map_err(|e| format!("--changed-since: failed to run git: {e}"))?;
+    if !out.status.success() {
+        return Err(format!(
+            "--changed-since: git diff --name-only {rev} failed: {}",
+            String::from_utf8_lossy(&out.stderr).trim()
+        ));
+    }
+    Ok(String::from_utf8_lossy(&out.stdout)
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(str::to_string)
+        .collect())
+}
+
+/// Demote error findings anchored in files *not* in `changed` to
+/// `[pre-existing]` notes, leaving errors in touched files fatal.
+/// Tree-level findings (empty file) stay fatal — they cannot be blamed
+/// on an untouched file.  Public so the filter is unit-testable
+/// without a git checkout.
+pub fn apply_changed_filter(
+    report: &mut Report,
+    changed: &std::collections::BTreeSet<String>,
+    rev: &str,
+) {
+    let mut demoted = 0usize;
+    for f in &mut report.findings {
+        if f.severity == Severity::Error && !f.file.is_empty() && !changed.contains(&f.file) {
+            f.severity = Severity::Note;
+            f.message = format!("[pre-existing vs {rev}] {}", f.message);
+            demoted += 1;
+        }
+    }
+    report.changed_since = Some(rev.to_string());
+    report.findings.push(Finding::note(
+        "analyze",
+        "",
+        0,
+        format!(
+            "--changed-since {rev}: {} changed file(s), {demoted} pre-existing \
+             finding(s) demoted to notes",
+            changed.len()
+        ),
+    ));
 }
 
 #[cfg(test)]
@@ -434,5 +711,36 @@ mod tests {
     fn cfg_test_on_use_item_has_no_range() {
         let code = lexer::scan("#[cfg(test)]\nuse std::fmt;\nfn main() { body(); }\n");
         assert!(find_test_ranges(&code.code).is_empty());
+    }
+
+    #[test]
+    fn fn_items_parses_bodies_and_skips_declarations() {
+        let src = "trait T { fn decl(&self) -> u8; }\n\
+                   fn plain(a: u8, b: &str) -> u8 { helper(a) }\n\
+                   fn generic<F: FnOnce() -> u8>(f: F) { f(); { nested(); } }\n";
+        let items = fn_items(&lexer::scan(src).code);
+        let names: Vec<&str> = items.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, ["plain", "generic"]);
+        assert_eq!(items[0].params, "a: u8, b: &str");
+        assert!(src[items[1].open..items[1].close].contains("nested"));
+        assert_eq!(items[1].params, "f: F");
+    }
+
+    #[test]
+    fn changed_filter_demotes_untouched_files_only() {
+        let mut report = Report {
+            passes: vec!["locks".to_string()],
+            findings: vec![
+                Finding::error("locks", "rust/src/a.rs", 3, "touched".to_string()),
+                Finding::error("locks", "rust/src/b.rs", 4, "untouched".to_string()),
+                Finding::error("panics", "", 0, "tree-level".to_string()),
+            ],
+            changed_since: None,
+        };
+        let changed = std::collections::BTreeSet::from(["rust/src/a.rs".to_string()]);
+        apply_changed_filter(&mut report, &changed, "origin/main");
+        assert_eq!(report.error_count(), 2, "touched + tree-level stay fatal");
+        assert!(report.findings[1].message.starts_with("[pre-existing vs origin/main]"));
+        assert_eq!(report.changed_since.as_deref(), Some("origin/main"));
     }
 }

@@ -1,0 +1,620 @@
+//! Pass `protocol` — control-plane state-machine conformance.
+//!
+//! The driver↔worker control protocol of distributed runs lives in
+//! `net/control.rs` (frame sends/receives) and `net/runner.rs` (the
+//! call sequences that drive them).  This pass declares that protocol
+//! *once*, as an explicit state machine ([`MACHINE`]): HELLO → ASSIGN
+//! → READY → START → FRAGMENT along the happy path, worker→driver
+//! ERROR escapes, and the implicit EOF edge (peer closed the link).
+//! It then extracts both implementations from the masked source and
+//! checks them against the declaration:
+//!
+//! * every *send* site (`write_frame(…, kind::X, …)`) and every
+//!   *receive/check* site (`f.kind != kind::X`, `== kind::X`) is
+//!   attributed to the driver side (`impl ControlPlane`), the worker
+//!   side (`impl WorkerLink`), or a side-neutral helper;
+//! * a declared edge with no send site on its sender side, or no
+//!   receive site on its receiver side — a frame kind handled on only
+//!   one side — is an error with `file:line` provenance, as is a send
+//!   or check of a kind the machine does not declare;
+//! * the declared machine itself must be well-formed: every state
+//!   reachable from INIT, every state able to reach a terminal;
+//! * peer close (EOF) must be handled while awaiting a frame
+//!   (`Ok(None)` arm), so a dead worker fails the run instead of
+//!   hanging it.
+//!
+//! A second, flow-sensitive check walks every function body in the
+//! scoped files and verifies the *order* of control-plane calls:
+//! driver-side gather → broadcast_assign → barrier →
+//! collect_fragments → merge_results, worker-side connect → ready →
+//! await_start → send_fragment.  An out-of-order call (e.g.
+//! `await_start` before `ready`, which would deadlock the barrier) is
+//! an error at the call site.
+//!
+//! PING is a keepalive outside the machine and is ignored everywhere.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::{fn_items, Finding, SourceFile, Workspace};
+
+const PASS: &str = "protocol";
+
+/// The control-plane implementation the conformance checks read.
+const CONTROL_FILE: &str = "rust/src/net/control.rs";
+/// Files whose function bodies are checked for protocol call order.
+const FLOW_FILES: &[&str] = &["rust/src/net/control.rs", "rust/src/net/runner.rs"];
+
+/// Which endpoint a send/receive site belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Side {
+    Driver,
+    Worker,
+    /// Free helpers outside both impl blocks (`read_control`,
+    /// `check_error`) — they serve whichever side calls them, so a
+    /// neutral site satisfies either side's obligation.
+    Neutral,
+}
+
+impl Side {
+    fn name(self) -> &'static str {
+        match self {
+            Side::Driver => "driver",
+            Side::Worker => "worker",
+            Side::Neutral => "shared helper",
+        }
+    }
+
+    fn satisfies(self, want: Side) -> bool {
+        self == want || self == Side::Neutral
+    }
+
+    fn other(self) -> Side {
+        match self {
+            Side::Driver => Side::Worker,
+            Side::Worker => Side::Driver,
+            Side::Neutral => Side::Neutral,
+        }
+    }
+}
+
+/// One declared transition of the control-plane state machine.
+struct EdgeDecl {
+    from: &'static str,
+    to: &'static str,
+    kind: &'static str,
+    sender: Side,
+}
+
+/// The declared machine.  The diagram in `docs/ARCHITECTURE.md`
+/// §Static analysis renders exactly this table — edit both together.
+const MACHINE: &[EdgeDecl] = &[
+    EdgeDecl { from: "INIT", to: "CONNECTED", kind: "HELLO", sender: Side::Worker },
+    EdgeDecl { from: "CONNECTED", to: "ASSIGNED", kind: "ASSIGN", sender: Side::Driver },
+    EdgeDecl { from: "ASSIGNED", to: "READY", kind: "READY", sender: Side::Worker },
+    EdgeDecl { from: "READY", to: "RUNNING", kind: "START", sender: Side::Driver },
+    EdgeDecl { from: "RUNNING", to: "DONE", kind: "FRAGMENT", sender: Side::Worker },
+    // A worker may report failure instead of READY or FRAGMENT.
+    EdgeDecl { from: "ASSIGNED", to: "FAILED", kind: "ERROR", sender: Side::Worker },
+    EdgeDecl { from: "RUNNING", to: "FAILED", kind: "ERROR", sender: Side::Worker },
+];
+
+const INITIAL: &str = "INIT";
+const TERMINALS: &[&str] = &["DONE", "FAILED"];
+
+/// Driver-side calls in protocol order (index = position in the flow).
+const DRIVER_FLOW: &[&str] = &[
+    "ControlPlane::gather(",
+    ".broadcast_assign(",
+    ".barrier(",
+    ".collect_fragments(",
+    "merge_results(",
+];
+
+/// Worker-side calls in protocol order.
+const WORKER_FLOW: &[&str] = &[
+    "WorkerLink::connect(",
+    ".ready(",
+    ".await_start(",
+    ".send_fragment(",
+];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// One extracted send or receive site.
+struct Site {
+    kind: String,
+    side: Side,
+    line: usize,
+}
+
+/// The span of `impl <header> { … }`, if present.
+fn impl_span(code: &str, header: &str) -> Option<(usize, usize)> {
+    let at = code.find(header)?;
+    let bytes = code.as_bytes();
+    let mut i = at;
+    while i < bytes.len() && bytes[i] != b'{' {
+        i += 1;
+    }
+    let open = i;
+    let mut depth = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open, i + 1));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    Some((open, bytes.len()))
+}
+
+/// All `kind::NAME` tokens in masked code: `(offset, NAME)`.
+fn kind_tokens(code: &str) -> Vec<(usize, String)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("kind::") {
+        let at = from + pos;
+        from = at + 6;
+        // Word boundary on the left (a path separator `:` is fine — a
+        // fully qualified `frame::kind::X` still names the module).
+        if at > 0 && is_ident(bytes[at - 1]) {
+            continue;
+        }
+        let start = at + 6;
+        let mut i = start;
+        while i < bytes.len() && is_ident(bytes[i]) {
+            i += 1;
+        }
+        if i > start {
+            out.push((at, code[start..i].to_string()));
+        }
+    }
+    out
+}
+
+/// Argument-list spans of every `write_frame(…)` call.
+fn write_frame_spans(code: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("write_frame") {
+        let at = from + pos;
+        from = at + "write_frame".len();
+        if at > 0 && is_ident(bytes[at - 1]) {
+            continue;
+        }
+        let mut i = at + "write_frame".len();
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b'(' {
+            continue; // the import or a doc reference, not a call
+        }
+        let open = i;
+        let mut depth = 0usize;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'(' => depth += 1,
+                b')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        out.push((open, i.min(bytes.len())));
+    }
+    out
+}
+
+/// Extract every send and receive site from the control-plane file.
+fn extract_sites(file: &SourceFile) -> (Vec<Site>, Vec<Site>) {
+    let code = &file.scan.code;
+    let driver = impl_span(code, "impl ControlPlane");
+    let worker = impl_span(code, "impl WorkerLink");
+    let side_of = |offset: usize| -> Side {
+        if driver.map(|(s, e)| offset >= s && offset < e).unwrap_or(false) {
+            Side::Driver
+        } else if worker.map(|(s, e)| offset >= s && offset < e).unwrap_or(false) {
+            Side::Worker
+        } else {
+            Side::Neutral
+        }
+    };
+
+    let send_spans = write_frame_spans(code);
+    let in_send = |offset: usize| send_spans.iter().any(|&(s, e)| offset >= s && offset < e);
+
+    let mut sends = Vec::new();
+    let mut recvs = Vec::new();
+    for (offset, kind) in kind_tokens(code) {
+        if file.in_test(offset) || kind == "PING" {
+            continue;
+        }
+        let site = Site {
+            kind,
+            side: side_of(offset),
+            line: file.scan.line_of(offset),
+        };
+        if in_send(offset) {
+            sends.push(site);
+        } else {
+            recvs.push(site);
+        }
+    }
+    (sends, recvs)
+}
+
+/// Well-formedness of the declared machine itself: every state must be
+/// reachable from [`INITIAL`], and every state must reach a terminal.
+/// Static data, but the check keeps future edits honest.
+fn machine_self_check(findings: &mut Vec<Finding>) {
+    let mut states: BTreeSet<&str> = BTreeSet::new();
+    let mut fwd: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    let mut rev: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for e in MACHINE {
+        states.insert(e.from);
+        states.insert(e.to);
+        fwd.entry(e.from).or_default().push(e.to);
+        rev.entry(e.to).or_default().push(e.from);
+    }
+    let closure = |adj: &BTreeMap<&str, Vec<&str>>, seeds: &[&str]| -> BTreeSet<String> {
+        let mut seen: BTreeSet<String> = seeds.iter().map(|s| s.to_string()).collect();
+        let mut queue: Vec<&str> = seeds.to_vec();
+        while let Some(s) = queue.pop() {
+            for &n in adj.get(s).map(|v| v.as_slice()).unwrap_or(&[]) {
+                if seen.insert(n.to_string()) {
+                    queue.push(n);
+                }
+            }
+        }
+        seen
+    };
+    let reachable = closure(&fwd, &[INITIAL]);
+    let reaches_end = closure(&rev, TERMINALS);
+    for s in &states {
+        if !reachable.contains(*s) {
+            findings.push(Finding::error(
+                PASS,
+                CONTROL_FILE,
+                0,
+                format!("declared protocol state {s} is unreachable from {INITIAL}"),
+            ));
+        }
+        if !reaches_end.contains(*s) {
+            findings.push(Finding::error(
+                PASS,
+                CONTROL_FILE,
+                0,
+                format!(
+                    "declared protocol state {s} cannot reach a terminal state \
+                     ({}) — a run entering it would never finish",
+                    TERMINALS.join("/")
+                ),
+            ));
+        }
+    }
+}
+
+/// Check extracted sites against the declared machine.
+fn conformance(file: &SourceFile, sends: &[Site], recvs: &[Site], findings: &mut Vec<Finding>) {
+    let declared: BTreeSet<&str> = MACHINE.iter().map(|e| e.kind).collect();
+
+    for kind in &declared {
+        let sender = MACHINE
+            .iter()
+            .find(|e| e.kind == *kind)
+            .map(|e| e.sender)
+            .unwrap_or(Side::Neutral);
+        let receiver = sender.other();
+        let send_hits: Vec<&Site> = sends
+            .iter()
+            .filter(|s| s.kind == *kind && s.side.satisfies(sender))
+            .collect();
+        let recv_hits: Vec<&Site> = recvs
+            .iter()
+            .filter(|s| s.kind == *kind && s.side.satisfies(receiver))
+            .collect();
+
+        if send_hits.is_empty() {
+            let line = recvs
+                .iter()
+                .find(|s| s.kind == *kind)
+                .map(|s| s.line)
+                .unwrap_or(0);
+            findings.push(Finding::error(
+                PASS,
+                &file.rel,
+                line,
+                format!(
+                    "declared control frame {kind} ({} → {}) has no send site \
+                     (`write_frame(…, kind::{kind}, …)`) on the {} side",
+                    sender.name(),
+                    receiver.name(),
+                    sender.name()
+                ),
+            ));
+        }
+        if recv_hits.is_empty() {
+            let line = sends
+                .iter()
+                .find(|s| s.kind == *kind)
+                .map(|s| s.line)
+                .unwrap_or(0);
+            findings.push(Finding::error(
+                PASS,
+                &file.rel,
+                line,
+                format!(
+                    "{kind} is sent by the {} side but never received/checked \
+                     on the {} side — a frame kind handled on only one side \
+                     deadlocks or drops the handshake",
+                    sender.name(),
+                    receiver.name()
+                ),
+            ));
+        }
+        // A send from the declared *receiver* side inverts the protocol.
+        for s in sends.iter().filter(|s| s.kind == *kind && s.side == receiver) {
+            findings.push(Finding::error(
+                PASS,
+                &file.rel,
+                s.line,
+                format!(
+                    "{kind} is sent from the {} side here, but the declared \
+                     machine names the {} as its sender",
+                    receiver.name(),
+                    sender.name()
+                ),
+            ));
+        }
+    }
+
+    for s in sends.iter().filter(|s| !declared.contains(s.kind.as_str())) {
+        findings.push(Finding::error(
+            PASS,
+            &file.rel,
+            s.line,
+            format!(
+                "control send of frame kind {} which the declared state \
+                 machine does not know — declare the transition or drop the send",
+                s.kind
+            ),
+        ));
+    }
+    for r in recvs.iter().filter(|s| !declared.contains(s.kind.as_str())) {
+        findings.push(Finding::error(
+            PASS,
+            &file.rel,
+            r.line,
+            format!(
+                "control receive/check of frame kind {} which the declared \
+                 state machine does not know",
+                r.kind
+            ),
+        ));
+    }
+
+    // The EOF edge: peer close must be handled while awaiting a frame
+    // (the `Ok(None)` arm of the read loop), otherwise a dead worker
+    // hangs the driver instead of failing the run.
+    let code = &file.scan.code;
+    let mut eof_handled = false;
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("Ok(None)") {
+        let at = from + pos;
+        from = at + 1;
+        if !file.in_test(at) {
+            eof_handled = true;
+            break;
+        }
+    }
+    if !eof_handled {
+        findings.push(Finding::error(
+            PASS,
+            &file.rel,
+            0,
+            "peer close (EOF) is never handled while awaiting a control frame \
+             (no `Ok(None)` arm) — a crashed worker would hang the driver"
+                .to_string(),
+        ));
+    }
+}
+
+/// Pattern occurrences of `pat` inside `code[span]`, left-bounded for
+/// patterns that start with an identifier (dot-patterns bound themselves).
+fn flow_hits(code: &str, span: (usize, usize), pat: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = span.0;
+    while let Some(pos) = code[from..span.1.min(code.len())].find(pat) {
+        let at = from + pos;
+        from = at + pat.len();
+        if !pat.starts_with('.') && at > 0 && is_ident(bytes[at - 1]) {
+            continue;
+        }
+        out.push(at);
+    }
+    out
+}
+
+/// Flow-order check: within each function body, calls of one flow
+/// family must appear in protocol order.
+fn flow_check(ws: &Workspace, findings: &mut Vec<Finding>) -> usize {
+    let mut checked = 0usize;
+    for rel in FLOW_FILES {
+        let Some(file) = ws.src.iter().find(|f| f.rel == *rel) else {
+            continue;
+        };
+        let code = &file.scan.code;
+        for item in fn_items(code) {
+            if file.in_test(item.open) {
+                continue;
+            }
+            for flow in [DRIVER_FLOW, WORKER_FLOW] {
+                let mut hits: Vec<(usize, usize)> = Vec::new(); // (offset, index)
+                for (idx, pat) in flow.iter().enumerate() {
+                    for off in flow_hits(code, (item.open, item.close), pat) {
+                        hits.push((off, idx));
+                    }
+                }
+                if hits.is_empty() {
+                    continue;
+                }
+                checked += 1;
+                hits.sort();
+                for pair in hits.windows(2) {
+                    let (prev, cur) = (pair[0], pair[1]);
+                    if cur.1 < prev.1 {
+                        findings.push(Finding::error(
+                            PASS,
+                            &file.rel,
+                            file.scan.line_of(cur.0),
+                            format!(
+                                "control-plane call `{}` appears after `{}` in fn \
+                                 `{}`, inverting the protocol order ({})",
+                                flow[cur.1].trim_matches(|c| c == '.' || c == '('),
+                                flow[prev.1].trim_matches(|c| c == '.' || c == '('),
+                                item.name,
+                                flow.iter()
+                                    .map(|p| p.trim_matches(|c| c == '.' || c == '('))
+                                    .collect::<Vec<_>>()
+                                    .join(" → ")
+                            ),
+                        ));
+                        break; // one report per fn per family
+                    }
+                }
+            }
+        }
+    }
+    checked
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    machine_self_check(&mut findings);
+
+    let control = ws.src.iter().find(|f| f.rel == CONTROL_FILE);
+    match control {
+        Some(file) => {
+            let (sends, recvs) = extract_sites(file);
+            conformance(file, &sends, &recvs, &mut findings);
+            findings.push(Finding::note(
+                PASS,
+                &file.rel,
+                0,
+                format!(
+                    "{} send site(s), {} receive site(s) checked against {} \
+                     declared transition(s)",
+                    sends.len(),
+                    recvs.len(),
+                    MACHINE.len()
+                ),
+            ));
+        }
+        None => {
+            findings.push(Finding::note(
+                PASS,
+                CONTROL_FILE,
+                0,
+                "no control-plane source in this tree — conformance checks skipped"
+                    .to_string(),
+            ));
+        }
+    }
+
+    let flows = flow_check(ws, &mut findings);
+    findings.push(Finding::note(
+        PASS,
+        "rust/src/net",
+        0,
+        format!("{flows} function flow sequence(s) order-checked"),
+    ));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{find_test_ranges, lexer};
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let scan = lexer::scan(src);
+        let test_ranges = find_test_ranges(&scan.code);
+        SourceFile {
+            rel: rel.to_string(),
+            scan,
+            test_ranges,
+        }
+    }
+
+    #[test]
+    fn machine_is_well_formed() {
+        let mut findings = Vec::new();
+        machine_self_check(&mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn kind_tokens_and_send_spans() {
+        let f = file(
+            "rust/src/net/control.rs",
+            "fn a(s: &mut S) { write_frame(s, kind::HELLO, 0, b\"\").unwrap(); \
+             if f.kind != kind::ASSIGN { return; } }",
+        );
+        let toks = kind_tokens(&f.scan.code);
+        assert_eq!(toks.len(), 2);
+        let spans = write_frame_spans(&f.scan.code);
+        assert_eq!(spans.len(), 1);
+        let (sends, recvs) = extract_sites(&f);
+        assert_eq!(sends.len(), 1);
+        assert_eq!(sends[0].kind, "HELLO");
+        assert_eq!(recvs.len(), 1);
+        assert_eq!(recvs[0].kind, "ASSIGN");
+    }
+
+    #[test]
+    fn sides_attributed_by_impl_block() {
+        let f = file(
+            "rust/src/net/control.rs",
+            "impl ControlPlane { fn g(&mut self) { if f.kind != kind::HELLO {} } }\n\
+             impl WorkerLink { fn c(&mut self) { write_frame(s, kind::HELLO, 0, b\"\"); } }\n\
+             fn free(f: &Frame) { if f.kind == kind::ERROR {} }",
+        );
+        let (sends, recvs) = extract_sites(&f);
+        assert_eq!(sends[0].side, Side::Worker);
+        assert_eq!(recvs[0].side, Side::Driver);
+        assert_eq!(recvs[1].side, Side::Neutral);
+    }
+
+    #[test]
+    fn out_of_order_flow_is_flagged() {
+        let src = "fn worker_main(link: &mut WorkerLink) { \
+                   link.await_start(1); link.ready(); }";
+        let f = file("rust/src/net/runner.rs", src);
+        let ws = Workspace {
+            root: std::path::PathBuf::from("."),
+            src: vec![f],
+            benches: Vec::new(),
+            cargo_toml: String::new(),
+            test_files: Vec::new(),
+            docs: Vec::new(),
+        };
+        let mut findings = Vec::new();
+        flow_check(&ws, &mut findings);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("ready"), "{}", findings[0].message);
+    }
+}

@@ -19,8 +19,9 @@ use crate::analysis::{Finding, SourceFile, Workspace};
 const PASS: &str = "schema";
 
 /// Files whose `fn to_json` bodies emit results.json blocks the docs
-/// must describe.
-const RESULT_EMITTERS: &[&str] = &[
+/// must describe.  Public: the conservation pass walks the same
+/// emitters to map counter fields to their output keys.
+pub const RESULT_EMITTERS: &[&str] = &[
     "rust/src/coordinator/mod.rs",
     "rust/src/net/transport.rs",
     "rust/src/engine/supervisor.rs",
@@ -41,7 +42,7 @@ fn is_ident_key(s: &str) -> bool {
 /// masked code, with the line of each.  Dynamic keys (`set(point
 /// .name(), …)`) are skipped — the mask has no quote right after the
 /// paren there.
-fn set_keys_in(file: &SourceFile, from: usize, to: usize) -> Vec<(String, usize)> {
+pub fn set_keys_in(file: &SourceFile, from: usize, to: usize) -> Vec<(String, usize)> {
     let code = &file.scan.code;
     let bytes = code.as_bytes();
     let mut keys = Vec::new();
@@ -66,7 +67,7 @@ fn set_keys_in(file: &SourceFile, from: usize, to: usize) -> Vec<(String, usize)
 }
 
 /// Byte ranges of `fn to_json` bodies in masked code.
-fn to_json_bodies(file: &SourceFile) -> Vec<(usize, usize)> {
+pub fn to_json_bodies(file: &SourceFile) -> Vec<(usize, usize)> {
     let code = &file.scan.code;
     let bytes = code.as_bytes();
     let mut bodies = Vec::new();
@@ -144,32 +145,38 @@ fn doc_schema_keys(text: &str) -> Vec<(String, usize)> {
     keys
 }
 
-pub fn run(ws: &Workspace) -> Vec<Finding> {
-    let mut findings = Vec::new();
-
-    // Direction 1 inputs: curated emitter keys.
-    let mut emitted_documentable: BTreeMap<String, (String, usize)> = BTreeMap::new();
+/// The curated emitter key table: every literal `.set("…")` key inside
+/// a `fn to_json` body of [`RESULT_EMITTERS`] (plus the bench writer),
+/// mapped to its first emission site.  Direction 1 of this pass checks
+/// the table against the docs; the conservation pass round-trips its
+/// counter→key mapping against it.
+pub fn emitter_key_table(ws: &Workspace) -> BTreeMap<String, (String, usize)> {
+    let mut table: BTreeMap<String, (String, usize)> = BTreeMap::new();
     for file in &ws.src {
         if !RESULT_EMITTERS.contains(&file.rel.as_str()) {
             continue;
         }
         for (open, close) in to_json_bodies(file) {
             for (key, line) in set_keys_in(file, open, close) {
-                emitted_documentable
-                    .entry(key)
-                    .or_insert((file.rel.clone(), line));
+                table.entry(key).or_insert((file.rel.clone(), line));
             }
         }
     }
     for file in &ws.benches {
         if file.rel == BENCH_EMITTER {
             for (key, line) in set_keys_in(file, 0, file.scan.code.len()) {
-                emitted_documentable
-                    .entry(key)
-                    .or_insert((file.rel.clone(), line));
+                table.entry(key).or_insert((file.rel.clone(), line));
             }
         }
     }
+    table
+}
+
+pub fn run(ws: &Workspace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // Direction 1 inputs: curated emitter keys.
+    let emitted_documentable = emitter_key_table(ws);
 
     // Direction 2 vocabulary: every literal `.set` key anywhere.
     let mut all_emitted: BTreeSet<String> = BTreeSet::new();

@@ -117,7 +117,7 @@ USAGE:
   sprobench sbatch       --config <file> [--simulate] [--chain]
   sprobench report       --run <dir>
   sprobench baselines    [--events <n>]
-  sprobench analyze      [<pass>…|--all] [--root <dir>] [--json <file>] [--verbose] [--bless]
+  sprobench analyze      [<pass>…|--all] [--root <dir>] [--json <file>] [--sarif <file>] [--changed-since <rev>] [--verbose] [--bless]
   sprobench list         --config <file>
   sprobench version | help
 
@@ -141,12 +141,16 @@ Pipelines are operator chains: configure `engine.pipeline` with a kind
 overrides every selected experiment with the `ops:` list from <file>.
 
 `analyze` runs the in-repo static-analysis passes (tests, panics,
-locks, schema, structs, grammar) over the source tree at --root
-(default: the working directory): pass names select a subset, no names
-or --all runs everything, --bless regenerates the panic-path baseline,
-and the findings are written to analysis_report.json (--json overrides
-the path).  Exit is nonzero on any error-severity finding — CI runs
-`analyze --all` as a gate."
+locks, locks2, schema, structs, grammar, protocol, channels,
+conservation) over the source tree at --root (default: the working
+directory): pass names select a subset, no names or --all runs
+everything, --bless regenerates the panic-path baseline, and the
+findings are written to analysis_report.json (--json overrides the
+path).  --sarif <file> additionally emits SARIF 2.1.0 for code-scanning
+upload; --changed-since <rev> demotes errors in files untouched since
+the git revision to [pre-existing] notes, so CI can annotate a PR with
+only the findings it introduced.  Exit is nonzero on any error-severity
+finding — CI runs `analyze --all` as a gate."
 }
 
 fn load_experiments(flags: &Flags) -> Result<Vec<Experiment>, String> {
@@ -615,6 +619,8 @@ fn cmd_analyze(flags: &Flags) -> Result<(), String> {
     let mut verbose = false;
     let mut root: Option<String> = None;
     let mut json_out: Option<String> = None;
+    let mut sarif_out: Option<String> = None;
+    let mut changed_since: Option<String> = None;
 
     for word in &flags.bare {
         classify_analyze_arg(word, &mut passes, &mut bless, &mut verbose)?;
@@ -623,6 +629,8 @@ fn cmd_analyze(flags: &Flags) -> Result<(), String> {
         match key.as_str() {
             "root" => root = Some(value.clone()),
             "json" => json_out = Some(value.clone()),
+            "sarif" => sarif_out = Some(value.clone()),
+            "changed-since" => changed_since = Some(value.clone()),
             "all" | "bless" | "verbose" => {
                 classify_analyze_arg(key, &mut passes, &mut bless, &mut verbose)?;
                 classify_analyze_arg(value, &mut passes, &mut bless, &mut verbose)?;
@@ -635,6 +643,7 @@ fn cmd_analyze(flags: &Flags) -> Result<(), String> {
         root: PathBuf::from(root.as_deref().unwrap_or(".")),
         passes,
         bless,
+        changed_since,
     };
     let report = crate::analysis::run(&opts)?;
     print!("{}", report.render(verbose));
@@ -642,6 +651,10 @@ fn cmd_analyze(flags: &Flags) -> Result<(), String> {
     let out = PathBuf::from(json_out.as_deref().unwrap_or("analysis_report.json"));
     std::fs::write(&out, report.to_json().to_pretty())
         .map_err(|e| format!("write {}: {e}", out.display()))?;
+    if let Some(sarif) = &sarif_out {
+        std::fs::write(sarif, report.to_sarif().to_pretty())
+            .map_err(|e| format!("write {sarif}: {e}"))?;
+    }
 
     let errors = report.error_count();
     if errors > 0 {

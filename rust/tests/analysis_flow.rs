@@ -1,0 +1,379 @@
+//! Integration tests for the flow-sensitive analyzer passes
+//! (`protocol`, `channels`, `conservation`, `locks2`) plus the SARIF
+//! emitter and `--changed-since` plumbing: each fixture seeds one
+//! violation into a throwaway mini-repository and asserts the pass
+//! reports it with `file:line` provenance, and the round-trip test
+//! checks the conservation pass's counter→key table against the schema
+//! pass's emitter key table over the real tree.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use sprobench::analysis::{
+    self, conservation, schema, AnalyzeOptions, Finding, Report, Severity, Workspace,
+};
+
+/// A throwaway mini-repository under the system temp dir.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(name: &str) -> Fixture {
+        let root = std::env::temp_dir().join(format!(
+            "sprobench_flow_{}_{name}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).expect("create fixture root");
+        Fixture { root }
+    }
+
+    fn write(&self, rel: &str, text: &str) -> &Fixture {
+        let path = self.root.join(rel);
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent).expect("create fixture dir");
+        }
+        fs::write(&path, text).expect("write fixture file");
+        self
+    }
+
+    fn run(&self, passes: &[&str]) -> Report {
+        analysis::run(&AnalyzeOptions {
+            root: self.root.clone(),
+            passes: passes.iter().map(|s| s.to_string()).collect(),
+            bless: false,
+            changed_since: None,
+        })
+        .expect("analysis run")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+fn errors(report: &Report) -> Vec<&Finding> {
+    report
+        .findings
+        .iter()
+        .filter(|f| f.severity == Severity::Error)
+        .collect()
+}
+
+// ------------------------------------------------------------------ protocol
+
+/// A complete control plane *except* the driver never checks READY:
+/// the worker's barrier reply would be dropped on the floor and the
+/// run would hang at the barrier.
+#[test]
+fn protocol_missing_ready_receive_is_flagged() {
+    let fix = Fixture::new("missing_ready");
+    fix.write(
+        "rust/src/net/control.rs",
+        "impl ControlPlane {\n\
+         fn gather(&mut self) { if f.kind != kind::HELLO { return; } }\n\
+         fn broadcast_assign(&mut self) { write_frame(s, kind::ASSIGN, 0, b\"\"); }\n\
+         fn barrier(&mut self) { }\n\
+         fn start_all(&mut self) { write_frame(s, kind::START, 0, b\"\"); }\n\
+         fn collect_fragments(&mut self) { if f.kind == kind::FRAGMENT {} \
+         if f.kind == kind::ERROR {} }\n\
+         }\n\
+         impl WorkerLink {\n\
+         fn connect(&mut self) { write_frame(s, kind::HELLO, 0, b\"\"); \
+         if f.kind != kind::ASSIGN { return; } }\n\
+         fn ready(&mut self) { write_frame(s, kind::READY, 0, b\"\"); }\n\
+         fn await_start(&mut self) { if f.kind != kind::START { return; } }\n\
+         fn send_fragment(&mut self) { write_frame(s, kind::FRAGMENT, 0, b\"\"); }\n\
+         fn fail(&mut self) { write_frame(s, kind::ERROR, 0, b\"\"); }\n\
+         }\n\
+         fn read_control(s: &mut S) -> R { match next(s) { Ok(None) => fail(), x => x } }\n",
+    );
+    let report = fix.run(&["protocol"]);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(errs[0].message.contains("READY"), "{}", errs[0].message);
+    assert!(
+        errs[0].message.contains("only one side"),
+        "{}",
+        errs[0].message
+    );
+    assert_eq!(errs[0].file, "rust/src/net/control.rs");
+    assert!(errs[0].line > 0, "provenance should point at the send site");
+}
+
+/// `await_start` before `ready` inverts the worker flow: the driver's
+/// barrier would wait on a READY that never comes.
+#[test]
+fn protocol_out_of_order_worker_flow_is_flagged() {
+    let fix = Fixture::new("flow_order");
+    fix.write(
+        "rust/src/net/runner.rs",
+        "fn worker_main(link: &mut WorkerLink) {\n\
+         let spec = link.await_start(1);\n\
+         link.ready();\n\
+         link.send_fragment(frag);\n\
+         }\n",
+    );
+    let report = fix.run(&["protocol"]);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(errs[0].message.contains("ready"), "{}", errs[0].message);
+    assert!(
+        errs[0].message.contains("inverting the protocol order"),
+        "{}",
+        errs[0].message
+    );
+    assert_eq!(errs[0].line, 3, "error anchors at the out-of-order call");
+}
+
+// ------------------------------------------------------------------ channels
+
+#[test]
+fn channels_orphaned_receiver_is_flagged() {
+    let fix = Fixture::new("orphan_rx");
+    fix.write(
+        "rust/src/engine/exchange.rs",
+        "fn leak() {\n\
+         let (tx, rx) = bounded::<Event>(64);\n\
+         tx.send(ev);\n\
+         }\n",
+    );
+    let report = fix.run(&["channels"]);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(errs[0].message.contains("no drain"), "{}", errs[0].message);
+    assert_eq!(errs[0].file, "rust/src/engine/exchange.rs");
+    assert_eq!(errs[0].line, 2);
+}
+
+#[test]
+fn channels_capacity_zero_and_unbounded_are_flagged() {
+    let fix = Fixture::new("cap_zero");
+    fix.write(
+        "rust/src/broker/core.rs",
+        "fn bad() {\n\
+         let (tx, rx) = bounded(0);\n\
+         let _ = rx.try_recv(); tx.close();\n\
+         let (a, b) = mpsc::channel();\n\
+         }\n",
+    );
+    let report = fix.run(&["channels"]);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 2, "{}", report.render(true));
+    assert!(
+        errs.iter().any(|e| e.message.contains("capacity-zero")),
+        "{}",
+        report.render(true)
+    );
+    assert!(
+        errs.iter().any(|e| e.message.contains("mpsc::channel()")),
+        "{}",
+        report.render(true)
+    );
+}
+
+// -------------------------------------------------------------- conservation
+
+/// The PR-7 `parse_failures` bug class, reproduced: a counter bumped
+/// on the hot path that no merge ever folds.
+#[test]
+fn conservation_unmerged_counter_is_flagged() {
+    let fix = Fixture::new("unmerged_counter");
+    fix.write(
+        "rust/src/pipelines/mod.rs",
+        "pub struct StepStats { pub parse_failures: u64 }\n\
+         impl StepStats {\n\
+         fn note_failure(&mut self) { self.parse_failures += 1; }\n\
+         }\n",
+    );
+    let report = fix.run(&["conservation"]);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("parse_failures"),
+        "{}",
+        errs[0].message
+    );
+    assert!(
+        errs[0].message.contains("silently lost"),
+        "{}",
+        errs[0].message
+    );
+    assert_eq!(errs[0].file, "rust/src/pipelines/mod.rs");
+    assert_eq!(errs[0].line, 3, "provenance anchors at the bump site");
+}
+
+/// Merged but never emitted: the fold happens, then the value goes
+/// nowhere — results.json never sees it.
+#[test]
+fn conservation_merged_but_unemitted_counter_is_flagged() {
+    let fix = Fixture::new("unemitted_counter");
+    fix.write(
+        "rust/src/pipelines/mod.rs",
+        "pub struct StepStats { pub dropped: u64 }\n\
+         impl StepStats {\n\
+         fn tick(&mut self) { self.dropped += 1; }\n\
+         fn merge(&mut self, o: &StepStats) { self.dropped += o.dropped; }\n\
+         }\n",
+    );
+    let report = fix.run(&["conservation"]);
+    let errs = errors(&report);
+    assert_eq!(errs.len(), 1, "{}", report.render(true));
+    assert!(
+        errs[0].message.contains("goes nowhere"),
+        "{}",
+        errs[0].message
+    );
+}
+
+/// A counter that is bumped, merged, and emitted is clean end to end.
+#[test]
+fn conservation_full_provenance_chain_is_clean() {
+    let fix = Fixture::new("conserved_counter");
+    fix.write(
+        "rust/src/pipelines/mod.rs",
+        "pub struct StepStats { pub events_in: u64 }\n\
+         impl StepStats {\n\
+         fn tick(&mut self) { self.events_in += 1; }\n\
+         fn merge(&mut self, o: &StepStats) { self.events_in += o.events_in; }\n\
+         pub fn to_json(&self) -> Json { let mut j = Json::obj(); \
+         j.set(\"events_in\", Json::Int(self.events_in as i64)); j }\n\
+         }\n",
+    )
+    .write("README.md", "The `events_in` counter is documented here.\n");
+    let report = fix.run(&["conservation"]);
+    assert_eq!(errors(&report).len(), 0, "{}", report.render(true));
+}
+
+// ------------------------------------------------------------------- locks2
+
+/// A guard held across a same-module helper call that blocks on a
+/// channel: invisible to the lexical `locks` pass, caught by the
+/// one-level interprocedural walk.
+#[test]
+fn locks2_guard_across_helper_call_is_flagged() {
+    let src = "impl Exchange {\n\
+               fn outer(&self) { let g = self.state.lock().expect(\"p\"); \
+               self.flush(); }\n\
+               fn flush(&self) { self.tx.send(1); }\n\
+               }\n";
+    let fix = Fixture::new("deep_lock");
+    fix.write("rust/src/engine/exchange.rs", src);
+
+    let shallow = fix.run(&["locks"]);
+    assert_eq!(
+        errors(&shallow).len(),
+        0,
+        "the lexical pass must be blind here: {}",
+        shallow.render(true)
+    );
+
+    let deep = fix.run(&["locks2"]);
+    let errs = errors(&deep);
+    assert_eq!(errs.len(), 1, "{}", deep.render(true));
+    assert!(
+        errs[0].message.contains("call to `flush`"),
+        "{}",
+        errs[0].message
+    );
+    assert!(
+        errs[0].message.contains("blocking channel op"),
+        "{}",
+        errs[0].message
+    );
+}
+
+// -------------------------------------------------------------------- SARIF
+
+#[test]
+fn sarif_output_carries_rules_results_and_positive_lines() {
+    let fix = Fixture::new("sarif_shape");
+    fix.write(
+        "rust/src/engine/exchange.rs",
+        "fn leak() { let (tx, rx) = bounded(8); tx.send(1); }\n",
+    );
+    let report = fix.run(&["channels"]);
+    assert!(report.error_count() > 0, "fixture must seed an error");
+    let sarif = report.to_sarif().to_pretty();
+    assert!(sarif.contains("\"2.1.0\""), "SARIF version missing:\n{sarif}");
+    assert!(sarif.contains("sprobench-analyze"), "{sarif}");
+    assert!(sarif.contains("\"ruleId\""), "{sarif}");
+    assert!(sarif.contains("\"channels\""), "{sarif}");
+    assert!(sarif.contains("\"error\""), "{sarif}");
+    assert!(sarif.contains("\"startLine\""), "{sarif}");
+    // Tree-level findings (line 0) must clamp to SARIF's 1-based lines.
+    assert!(!sarif.contains("\"startLine\": 0"), "{sarif}");
+}
+
+// ------------------------------------------------------------- changed-since
+
+/// `--changed-since` against a root that is not a git repository is a
+/// hard error, never a silent "everything is pre-existing" demotion.
+#[test]
+fn changed_since_outside_git_is_a_hard_error() {
+    let fix = Fixture::new("no_git");
+    fix.write("rust/src/lib.rs", "pub fn f() {}\n");
+    let result = analysis::run(&AnalyzeOptions {
+        root: fix.root.clone(),
+        passes: vec!["channels".to_string()],
+        bless: false,
+        changed_since: Some("HEAD".to_string()),
+    });
+    match result {
+        Ok(_) => panic!("git diff must fail outside a repository"),
+        Err(err) => assert!(err.contains("git"), "{err}"),
+    }
+}
+
+/// Over the real tree (a git repository), diff-aware mode threads the
+/// rev into the report and stays clean: demotion can only ever lower
+/// severity.
+#[test]
+fn changed_since_over_real_tree_records_rev_and_stays_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::run(&AnalyzeOptions {
+        root: root.to_path_buf(),
+        passes: Vec::new(), // all
+        bless: false,
+        changed_since: Some("HEAD".to_string()),
+    })
+    .expect("diff-aware analysis over the real tree");
+    assert_eq!(report.changed_since.as_deref(), Some("HEAD"));
+    assert_eq!(
+        report.error_count(),
+        0,
+        "diff-aware run found errors:\n{}",
+        report.render(false)
+    );
+    let json = report.to_json().to_pretty();
+    assert!(json.contains("changed_since"), "{json}");
+}
+
+// --------------------------------------------------- key-table round-trip
+
+/// Acceptance criterion: every results key the conservation pass maps
+/// a counter to must exist in the schema pass's emitter key table —
+/// the two passes must agree about what the emitters produce.
+#[test]
+fn conservation_key_table_round_trips_against_schema() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let ws = Workspace::load(root).expect("load real tree");
+    let field_keys = conservation::field_key_table(&ws);
+    let schema_keys = schema::emitter_key_table(&ws);
+    assert!(
+        !field_keys.is_empty(),
+        "the real tree must map at least one counter to a results key"
+    );
+    for (field, keys) in &field_keys {
+        for key in keys {
+            assert!(
+                schema_keys.contains_key(key),
+                "counter `{field}` maps to key \"{key}\" which the schema pass \
+                 does not know — emitter tables drifted apart"
+            );
+        }
+    }
+}

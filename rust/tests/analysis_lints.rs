@@ -46,6 +46,7 @@ impl Fixture {
             root: self.root.clone(),
             passes: passes.iter().map(|s| s.to_string()).collect(),
             bless,
+            changed_since: None,
         })
         .expect("analysis run")
     }
@@ -80,6 +81,7 @@ fn real_tree_runs_clean() {
         root: root.to_path_buf(),
         passes: Vec::new(), // all
         bless: false,
+        changed_since: None,
     })
     .expect("analysis over the real tree");
     assert_eq!(
@@ -425,4 +427,108 @@ fn report_json_counts_errors_and_notes() {
     assert!(json.contains("\"errors\": 1"), "{json}");
     let rendered = report.render(false);
     assert!(rendered.contains("error: [panics]"), "{rendered}");
+}
+
+// ------------------------------------------------------------- lexer masking
+
+/// Deterministic LCG so the property tests reproduce bit-for-bit.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn pick(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Random-but-reproducible token soup: plain strings with escapes, raw
+/// strings with 1–2 hashes (embedded quotes inside), raw byte strings,
+/// nested block comments, line comments, char literals, lifetimes.
+fn gen_source(seed: u64, tokens: usize) -> String {
+    let mut rng = Lcg(seed);
+    let mut out = String::from("fn main() {\n");
+    for t in 0..tokens {
+        match rng.pick(8) {
+            0 => out.push_str(&format!("let v{t} = {};\n", rng.pick(100))),
+            1 => out.push_str(&format!("call(\"lit{}\\\"esc\\\\n\");\n", rng.pick(10))),
+            2 => {
+                let h = "#".repeat(1 + rng.pick(2));
+                out.push_str(&format!(
+                    "raw(r{h}\"raw {} \"q\" body\"{h});\n",
+                    rng.pick(10)
+                ));
+            }
+            3 => out.push_str(&format!("/* c{} /* nested */ tail */ x();\n", rng.pick(10))),
+            4 => out.push_str(&format!("// line comment {}\n", rng.pick(10))),
+            5 => out.push_str("let c = '\\n'; let l: &'static str = \"s\";\n"),
+            6 => out.push_str(&format!("br#\"bytes {}\"#.len();\n", rng.pick(10))),
+            _ => out.push_str(&format!("b\"bs{}\";\n", rng.pick(10))),
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// The invariant every pass relies on: the mask is the same length as
+/// the source, every newline stays put, every masked byte is a space,
+/// and every recorded string literal anchors its offset at the opening
+/// quote with a correct line number.
+#[test]
+fn lexer_mask_preserves_offsets_and_lines_property() {
+    use sprobench::analysis::lexer;
+    for seed in 1..=25u64 {
+        let src = gen_source(seed, 40);
+        let scan = lexer::scan(&src);
+        assert_eq!(scan.code.len(), src.len(), "seed {seed}: length changed");
+        for (i, (a, b)) in src.bytes().zip(scan.code.bytes()).enumerate() {
+            if a == b'\n' || a == b'\r' {
+                assert_eq!(b, a, "seed {seed}: newline moved at byte {i}");
+            }
+            assert!(
+                b == a || b == b' ',
+                "seed {seed}: byte {i} was rewritten to something other than a space"
+            );
+        }
+        for lit in &scan.strings {
+            assert_eq!(
+                src.as_bytes()[lit.offset],
+                b'"',
+                "seed {seed}: string offset {} is not an opening quote",
+                lit.offset
+            );
+            let naive = src[..lit.offset].bytes().filter(|&b| b == b'\n').count() + 1;
+            assert_eq!(lit.line, naive, "seed {seed}: string line drifted");
+            assert_eq!(scan.line_of(lit.offset), naive, "seed {seed}: line_of drifted");
+        }
+    }
+}
+
+/// Sentinel contents of raw strings, nested comments, and escaped
+/// strings must never leak into the masked view, while surrounding
+/// code keeps its exact offsets.
+#[test]
+fn lexer_raw_strings_and_nested_comments_mask_cleanly() {
+    use sprobench::analysis::lexer;
+    let src = "let a = r#\"SENTINEL_RAW \"inner\" \"#; \
+               /* outer /* SENTINEL_NESTED */ tail */\n\
+               let b = \"esc\\\"SENTINEL_ESC\";\n\
+               let c = a.len();\n";
+    let scan = lexer::scan(src);
+    assert_eq!(scan.code.len(), src.len());
+    for needle in ["SENTINEL_RAW", "SENTINEL_NESTED", "SENTINEL_ESC", "inner"] {
+        assert!(!scan.code.contains(needle), "{needle} leaked into the mask");
+    }
+    assert!(scan.code.contains("let c = a.len();"));
+    assert_eq!(scan.strings.len(), 2);
+    assert_eq!(scan.strings[0].value, "SENTINEL_RAW \"inner\" ");
+    assert!(scan.strings[1].value.contains("SENTINEL_ESC"));
+    assert_eq!(src.find(".len()"), scan.code.find(".len()"));
+    assert_eq!(scan.line_of(src.find("let c").unwrap()), 3);
 }
